@@ -1,0 +1,151 @@
+//! Ablations beyond the paper's figures (DESIGN.md §7):
+//!
+//! * atomics baseline vs local buffers vs colorful (the §3 claim that
+//!   atomic primitives are too costly),
+//! * nnz-balanced vs naive row partitioning (the §3.1 claim),
+//! * coloring order and the §5 stride-capped future-work idea,
+//! * BCSR blocking baseline vs CSRC (the §1.1 related-work contrast),
+//! * parallel engine overhead as a function of matrix size.
+
+use csrc_spmv::graph::{greedy_coloring, stride_capped_coloring, ConflictGraph, Ordering};
+use csrc_spmv::harness::smoke_suite;
+use csrc_spmv::parallel::{build_engine, AccumMethod, ColorfulEngine, EngineKind};
+use csrc_spmv::partition;
+use csrc_spmv::sparse::{Bcsr, Coo, Csrc};
+use csrc_spmv::util::bench::Bench;
+use csrc_spmv::util::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("ablations");
+
+    // --- atomic vs buffered vs colorful (one medium matrix) -------------
+    let e = smoke_suite().into_iter().find(|e| e.name == "poisson3Da").unwrap();
+    let a = Arc::new(e.build_csrc());
+    let n = a.n;
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+    let mut y = vec![0.0; n];
+    for kind in [
+        EngineKind::Sequential,
+        EngineKind::LocalBuffers(AccumMethod::Effective),
+        EngineKind::Colorful,
+        EngineKind::Atomic,
+    ] {
+        let mut engine = build_engine(kind, a.clone(), 2);
+        b.run(&format!("engine/{}", kind.label()), || engine.spmv(&x, &mut y));
+    }
+
+    // --- partitioning: nnz-balanced vs rowwise ---------------------------
+    let part_nnz = partition::nnz_balanced(&a, 4);
+    let part_rows = partition::rowwise_even(a.n, 4);
+    let work = |part: &partition::RowPartition| -> f64 {
+        let works: Vec<f64> = (0..4)
+            .map(|t| part.block(t).map(|i| 1.0 + 2.0 * a.row_range(i).len() as f64).sum())
+            .collect();
+        let max = works.iter().cloned().fold(0.0, f64::max);
+        let avg = works.iter().sum::<f64>() / 4.0;
+        max / avg // imbalance factor (1.0 = perfect)
+    };
+    b.record("partition/nnz-balanced-imbalance", work(&part_nnz), "max/avg");
+    b.record("partition/rowwise-imbalance", work(&part_rows), "max/avg");
+
+    // --- coloring orders + stride cap ------------------------------------
+    let g = ConflictGraph::build(&a);
+    let natural = greedy_coloring(&g, Ordering::Natural);
+    let ldf = greedy_coloring(&g, Ordering::LargestDegreeFirst);
+    b.record("coloring/natural-colors", natural.num_colors() as f64, "colors");
+    b.record("coloring/ldf-colors", ldf.num_colors() as f64, "colors");
+    for cap in [64usize, 1024, usize::MAX / 2] {
+        let capped = stride_capped_coloring(&g, cap);
+        b.record(
+            &format!("coloring/stride-cap-{cap}"),
+            capped.num_colors() as f64,
+            "colors",
+        );
+        let mut engine = ColorfulEngine::with_coloring(a.clone(), 2, capped);
+        use csrc_spmv::parallel::ParallelSpmv;
+        b.run(&format!("colorful/stride-cap-{cap}"), || engine.spmv(&x, &mut y));
+    }
+
+    // --- BCSR blocking baseline ------------------------------------------
+    let csr = a.to_csr();
+    for (r, c) in [(1, 1), (2, 2), (4, 4)] {
+        let blocked = Bcsr::from_csr(&csr, r, c);
+        b.record(
+            &format!("bcsr/{r}x{c}-fill"),
+            blocked.fill_ratio(csr.nnz()),
+            "fill ratio",
+        );
+        b.run(&format!("bcsr/{r}x{c}-spmv"), || blocked.spmv(&x, &mut y));
+    }
+    b.run("csr/spmv", || csr.spmv(&x, &mut y));
+
+    // --- RCM reordering (paper §1/§4.2: band structure matters) ----------
+    {
+        use csrc_spmv::graph::{permute, reverse_cuthill_mckee};
+        let mut rng = Rng::new(21);
+        let band = Csrc::from_coo(&Coo::banded(4000, 3, true, &mut rng)).unwrap();
+        let shuffled = permute(&band, &rng.permutation(4000));
+        b.record("rcm/shuffled-hbw", shuffled.half_bandwidth() as f64, "rows");
+        let t_rcm = b.run("rcm/compute-ordering", || {
+            std::hint::black_box(reverse_cuthill_mckee(&shuffled));
+        });
+        let _ = t_rcm;
+        let restored = permute(&shuffled, &reverse_cuthill_mckee(&shuffled));
+        b.record("rcm/restored-hbw", restored.half_bandwidth() as f64, "rows");
+        // Color counts before/after: bandwidth drives the colorful method.
+        let g_before = ConflictGraph::build(&shuffled);
+        let g_after = ConflictGraph::build(&restored);
+        b.record(
+            "rcm/colors-before",
+            greedy_coloring(&g_before, Ordering::Natural).num_colors() as f64,
+            "colors",
+        );
+        b.record(
+            "rcm/colors-after",
+            greedy_coloring(&g_after, Ordering::Natural).num_colors() as f64,
+            "colors",
+        );
+        // SpMV throughput before/after reordering.
+        let xs: Vec<f64> = (0..4000).map(|i| i as f64 * 1e-3).collect();
+        let mut ys = vec![0.0; 4000];
+        b.run("rcm/spmv-shuffled", || shuffled.spmv_into_zeroed(&xs, &mut ys));
+        b.run("rcm/spmv-restored", || restored.spmv_into_zeroed(&xs, &mut ys));
+    }
+
+    // --- distributed subdomain layer (paper §2.1/§5) ----------------------
+    {
+        use csrc_spmv::coordinator::DistributedMatrix;
+        use csrc_spmv::sparse::Csr;
+        let g = Csr::from_coo(&csrc_spmv::gen::poisson_3d_hex(16, 0.0, 23));
+        let xs: Vec<f64> = (0..g.nrows).map(|i| (i as f64 * 0.1).sin()).collect();
+        let mut ys = vec![0.0; g.nrows];
+        b.run("distributed/global-spmv", || g.spmv(&xs, &mut ys));
+        for nsub in [2usize, 4, 8] {
+            let dm = DistributedMatrix::from_global(&g, nsub);
+            b.record(
+                &format!("distributed/halo-volume-{nsub}sub"),
+                dm.halo_volume() as f64,
+                "doubles",
+            );
+            b.run(&format!("distributed/spmv-{nsub}sub"), || dm.spmv(&xs, &mut ys));
+        }
+    }
+
+    // --- engine overhead vs size ------------------------------------------
+    for nn in [512usize, 4096, 32768] {
+        let mut rng = Rng::new(7);
+        let small = Arc::new(
+            Csrc::from_coo(&Coo::random_structurally_symmetric(nn, 4, false, &mut rng)).unwrap(),
+        );
+        let xs: Vec<f64> = (0..nn).map(|i| i as f64 * 1e-4).collect();
+        let mut ys = vec![0.0; nn];
+        let mut seq = build_engine(EngineKind::Sequential, small.clone(), 1);
+        let t_seq = b.run(&format!("overhead/n{nn}-seq"), || seq.spmv(&xs, &mut ys));
+        let mut par = build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), small, 2);
+        let t_par = b.run(&format!("overhead/n{nn}-effective-2t"), || par.spmv(&xs, &mut ys));
+        b.record(&format!("overhead/n{nn}-ratio"), t_par / t_seq, "par/seq (1 core)");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,37 @@
+//! Bench: Fig. 4 — simulated % L2 / TLB misses for CSRC vs CSR on the
+//! Wolfdale cache model, plus the wall time of the simulation itself
+//! (the simulator is part of the hot path of `csrc figures`).
+
+use csrc_spmv::harness::{figures, smoke_suite};
+use csrc_spmv::simulator::{sim_csr_sequential, sim_csrc_sequential, MachineConfig, MachineSim};
+use csrc_spmv::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig4_cache");
+    for e in smoke_suite() {
+        let m = e.build_csrc();
+        let csr = m.to_csr();
+        // Simulation wall time (one product each).
+        b.run(&format!("{}/sim-csrc", e.name), || {
+            let mut sim = MachineSim::new(MachineConfig::wolfdale());
+            let r = sim_csrc_sequential(&mut sim, &m);
+            std::hint::black_box(r.cycles);
+        });
+        b.run(&format!("{}/sim-csr", e.name), || {
+            let mut sim = MachineSim::new(MachineConfig::wolfdale());
+            let r = sim_csr_sequential(&mut sim, &csr);
+            std::hint::black_box(r.cycles);
+        });
+        // The figure's numbers.
+        let mut sim = MachineSim::new(MachineConfig::wolfdale());
+        let rc = sim_csrc_sequential(&mut sim, &m);
+        let mut sim = MachineSim::new(MachineConfig::wolfdale());
+        let rr = sim_csr_sequential(&mut sim, &csr);
+        b.record(&format!("{}/csrc-l2-miss", e.name), rc.misses.outer_miss_pct(), "%");
+        b.record(&format!("{}/csr-l2-miss", e.name), rr.misses.outer_miss_pct(), "%");
+        b.record(&format!("{}/csrc-tlb-miss", e.name), rc.misses.tlb_miss_pct(), "%");
+        b.record(&format!("{}/csr-tlb-miss", e.name), rr.misses.tlb_miss_pct(), "%");
+    }
+    let _ = figures::products_for(1);
+    b.finish();
+}

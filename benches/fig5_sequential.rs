@@ -1,0 +1,33 @@
+//! Bench: Fig. 5 — sequential Mflop/s of CSR vs CSRC (plus the symmetric
+//! CSRC kernel) on the smoke suite. The paper's relation to hold: CSRC ≥
+//! CSR on most matrices (lower load:flop ratio, §4.1).
+
+use csrc_spmv::harness::smoke_suite;
+use csrc_spmv::metrics::mflops;
+use csrc_spmv::sparse::Csr;
+use csrc_spmv::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig5_sequential");
+    for e in smoke_suite() {
+        let m = e.build_csrc();
+        let csr = m.to_csr();
+        let n = m.n;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+        let mut y = vec![0.0; n];
+        let csrc_t = b.run(&format!("{}/csrc", e.name), || m.spmv_into_zeroed(&x, &mut y));
+        b.record(&format!("{}/csrc", e.name), mflops(m.flops(), csrc_t), "Mflop/s");
+        if m.numeric_symmetric {
+            let sym_t = b.run(&format!("{}/csrc-sym", e.name), || {
+                y.fill(0.0);
+                m.spmv_sym(&x, &mut y);
+            });
+            b.record(&format!("{}/csrc-sym", e.name), mflops(m.flops(), sym_t), "Mflop/s");
+        }
+        let csr_t = b.run(&format!("{}/csr", e.name), || csr.spmv(&x, &mut y));
+        b.record(&format!("{}/csr", e.name), mflops(csr.flops(), csr_t), "Mflop/s");
+        b.record(&format!("{}/csrc-vs-csr", e.name), csr_t / csrc_t, "x speedup");
+        let _ = Csr::from_coo; // keep the import honest
+    }
+    b.finish();
+}

@@ -1,0 +1,43 @@
+//! Bench: Fig. 6 — colorful vs the best local-buffers method. Real
+//! wallclock per engine (honestly ~flat on this 1-core box) plus the
+//! simulated Wolfdale/Bloomfield speedups that reproduce the figure.
+
+use csrc_spmv::graph::{greedy_coloring, ConflictGraph, Ordering};
+use csrc_spmv::harness::smoke_suite;
+use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::simulator::{sim_colorful, sim_csrc_sequential, sim_local_buffers, MachineConfig, MachineSim};
+use csrc_spmv::util::bench::Bench;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("fig6_colorful_vs_lb");
+    for e in smoke_suite() {
+        let a = Arc::new(e.build_csrc());
+        let n = a.n;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut y = vec![0.0; n];
+        // Real engines, 2 threads.
+        let mut colorful = build_engine(EngineKind::Colorful, a.clone(), 2);
+        b.run(&format!("{}/colorful-2t-wallclock", e.name), || colorful.spmv(&x, &mut y));
+        let mut eff = build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 2);
+        b.run(&format!("{}/effective-2t-wallclock", e.name), || eff.spmv(&x, &mut y));
+        // Simulated figure numbers.
+        let wolf = MachineConfig::wolfdale();
+        let mut sim = MachineSim::new(wolf.clone());
+        let base = sim_csrc_sequential(&mut sim, &a).cycles;
+        let g = ConflictGraph::build(&a);
+        let colors = greedy_coloring(&g, Ordering::Natural);
+        let mut sim = MachineSim::new(wolf.clone());
+        let col = base / sim_colorful(&mut sim, &a, 2, &colors).cycles;
+        let best_lb = AccumMethod::all()
+            .iter()
+            .map(|&meth| {
+                let mut sim = MachineSim::new(wolf.clone());
+                base / sim_local_buffers(&mut sim, &a, 2, meth).cycles
+            })
+            .fold(0.0, f64::max);
+        b.record(&format!("{}/sim-colorful-wolf2", e.name), col, "x");
+        b.record(&format!("{}/sim-best-lb-wolf2", e.name), best_lb, "x");
+    }
+    b.finish();
+}

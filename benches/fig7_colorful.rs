@@ -1,0 +1,38 @@
+//! Bench: Fig. 7 — colorful speedups on both machine models, plus the
+//! cost of the one-time coloring preprocessing (conflict graph build +
+//! greedy coloring), which the paper amortizes over 1000 products.
+
+use csrc_spmv::graph::{greedy_coloring, ConflictGraph, Ordering};
+use csrc_spmv::harness::smoke_suite;
+use csrc_spmv::simulator::{sim_colorful, sim_csrc_sequential, MachineConfig, MachineSim};
+use csrc_spmv::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig7_colorful");
+    for e in smoke_suite() {
+        let m = e.build_csrc();
+        // Preprocessing cost.
+        b.run(&format!("{}/conflict-graph", e.name), || {
+            std::hint::black_box(ConflictGraph::build(&m));
+        });
+        let g = ConflictGraph::build(&m);
+        b.run(&format!("{}/greedy-coloring", e.name), || {
+            std::hint::black_box(greedy_coloring(&g, Ordering::Natural));
+        });
+        let colors = greedy_coloring(&g, Ordering::Natural);
+        b.record(&format!("{}/colors", e.name), colors.num_colors() as f64, "colors");
+        // Figure numbers.
+        for (cfg, p) in [
+            (MachineConfig::wolfdale(), 2usize),
+            (MachineConfig::bloomfield(), 2),
+            (MachineConfig::bloomfield(), 4),
+        ] {
+            let mut sim = MachineSim::new(cfg.clone());
+            let base = sim_csrc_sequential(&mut sim, &m).cycles;
+            let mut sim = MachineSim::new(cfg.clone());
+            let sp = base / sim_colorful(&mut sim, &m, p, &colors).cycles;
+            b.record(&format!("{}/{}-{}t", e.name, cfg.name, p), sp, "x speedup");
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,45 @@
+//! Bench: Figs. 8 & 9 — local-buffers speedups for all four
+//! init/accumulation methods on both machine models, plus real wallclock
+//! per method (engine overhead is visible even on one core).
+
+use csrc_spmv::harness::smoke_suite;
+use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::simulator::{sim_csrc_sequential, sim_local_buffers, MachineConfig, MachineSim};
+use csrc_spmv::util::bench::Bench;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("fig8_fig9_local_buffers");
+    for e in smoke_suite() {
+        let a = Arc::new(e.build_csrc());
+        let n = a.n;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).cos()).collect();
+        let mut y = vec![0.0; n];
+        for meth in AccumMethod::all() {
+            let mut engine = build_engine(EngineKind::LocalBuffers(meth), a.clone(), 2);
+            b.run(&format!("{}/{}-2t-wallclock", e.name, meth.label()), || {
+                engine.spmv(&x, &mut y)
+            });
+        }
+        // Simulated figure numbers: Fig. 8 = wolfdale 2t, Fig. 9 = bloomfield 2/4t.
+        for (cfg, threads) in [
+            (MachineConfig::wolfdale(), vec![2usize]),
+            (MachineConfig::bloomfield(), vec![2, 4]),
+        ] {
+            let mut sim = MachineSim::new(cfg.clone());
+            let base = sim_csrc_sequential(&mut sim, &a).cycles;
+            for p in threads {
+                for meth in AccumMethod::all() {
+                    let mut sim = MachineSim::new(cfg.clone());
+                    let sp = base / sim_local_buffers(&mut sim, &a, p, meth).cycles;
+                    b.record(
+                        &format!("{}/{}-{}-{}t", e.name, cfg.name, meth.label(), p),
+                        sp,
+                        "x speedup",
+                    );
+                }
+            }
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,32 @@
+//! Bench: Table 1 — dataset construction + CSRC compression throughput
+//! (assembly and from_coo are the offline path of every experiment).
+
+use csrc_spmv::harness::smoke_suite;
+use csrc_spmv::sparse::{Csr, Csrc};
+use csrc_spmv::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("table1_dataset");
+    for e in smoke_suite() {
+        b.run(&format!("{}/generate", e.name), || {
+            std::hint::black_box(e.build_coo());
+        });
+        let coo = e.build_coo();
+        if coo.nrows == coo.ncols {
+            let csr = Csr::from_coo(&coo);
+            b.run(&format!("{}/csrc-from-csr", e.name), || {
+                std::hint::black_box(Csrc::from_csr(&csr).unwrap());
+            });
+            let m = Csrc::from_csr(&csr).unwrap();
+            b.record(&format!("{}/n", e.name), m.n as f64, "rows");
+            b.record(&format!("{}/nnz", e.name), m.nnz() as f64, "nnz");
+            b.record(&format!("{}/ws", e.name), (m.working_set_bytes() / 1024) as f64, "KB");
+            b.record(
+                &format!("{}/index-bytes-vs-csr", e.name),
+                (m.ia.len() * 4 + m.ja.len() * 4) as f64 / ((csr.ia.len() + csr.ja.len()) * 4) as f64,
+                "ratio",
+            );
+        }
+    }
+    b.finish();
+}

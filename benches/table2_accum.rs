@@ -1,0 +1,36 @@
+//! Bench: Table 2 — the init+accumulation overhead of each local-buffers
+//! method. Real measurement: `LocalBuffersEngine::last_overhead_ns` (max
+//! across threads, like the paper's "maximum running time among all
+//! threads"), averaged over products; simulated: the Table 2 harness.
+
+use csrc_spmv::harness::smoke_suite;
+use csrc_spmv::parallel::{AccumMethod, LocalBuffersEngine, ParallelSpmv};
+use csrc_spmv::util::bench::Bench;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("table2_accum");
+    for e in smoke_suite() {
+        let a = Arc::new(e.build_csrc());
+        let n = a.n;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.02).sin()).collect();
+        let mut y = vec![0.0; n];
+        for meth in AccumMethod::all() {
+            for p in [2usize, 4] {
+                let mut engine = LocalBuffersEngine::new(a.clone(), p, meth);
+                let mut total_ns = 0u64;
+                let reps = 20;
+                for _ in 0..reps {
+                    engine.spmv(&x, &mut y);
+                    total_ns += engine.last_overhead_ns;
+                }
+                b.record(
+                    &format!("{}/{}-{}t-max-thread-overhead", e.name, meth.label(), p),
+                    total_ns as f64 / reps as f64 / 1e3,
+                    "us/product",
+                );
+            }
+        }
+    }
+    b.finish();
+}

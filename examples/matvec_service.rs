@@ -1,0 +1,87 @@
+//! Serving-style driver: the coordinator accepts a stream of matvec
+//! requests against registered matrices, batches per matrix, routes small
+//! matrices to the sequential sweep and large ones to the parallel
+//! engine, and reports throughput + latency percentiles.
+//!
+//! Run: `cargo run --release --example matvec_service [-- requests]`
+
+use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
+use csrc_spmv::gen;
+use csrc_spmv::sparse::Csrc;
+use csrc_spmv::util::{Rng, Timer};
+use std::sync::Arc;
+
+fn main() {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+
+    let mut cfg = ServiceConfig::default();
+    cfg.workers = 2;
+    cfg.route.min_parallel_n = 20_000; // small -> sequential, large -> parallel
+    cfg.route.threads = 2;
+    let svc = MatvecService::start(cfg);
+
+    // Register a model zoo: small 2-D, medium 3-D, large 3-D.
+    let small = Arc::new(Csrc::from_coo(&gen::poisson_2d_quad(40, 0.2, 1)).unwrap());
+    let medium = Arc::new(Csrc::from_coo(&gen::poisson_3d_hex(20, 0.3, 2)).unwrap());
+    let large = Arc::new(Csrc::from_coo(&gen::poisson_3d_hex(32, 0.0, 3)).unwrap());
+    println!(
+        "registered: small n={}, medium n={}, large n={}",
+        small.n, medium.n, large.n
+    );
+    let matrices = [("small", small), ("medium", medium), ("large", large)];
+    for (k, m) in &matrices {
+        svc.register(k, m.clone());
+    }
+
+    // Fire a mixed request stream (closed-loop batches of 32 in flight).
+    let mut rng = Rng::new(5);
+    let t = Timer::start();
+    let mut pending = Vec::new();
+    let mut done = 0usize;
+    let mut checked = 0usize;
+    for i in 0..requests {
+        let (key, m) = &matrices[i % 3];
+        let x: Vec<f64> = (0..m.n).map(|_| rng.normal()).collect();
+        pending.push(((*key, m.clone(), x.clone()), svc.submit(key, x)));
+        if pending.len() >= 32 {
+            for ((_k, m, x), rx) in pending.drain(..) {
+                let y = rx.recv().expect("service alive").expect("product ok");
+                done += 1;
+                // Spot-check 1 in 8 responses against the sequential sweep.
+                if done % 8 == 0 {
+                    let mut want = vec![0.0; m.n];
+                    m.spmv_into_zeroed(&x, &mut want);
+                    let ok = y
+                        .iter()
+                        .zip(&want)
+                        .all(|(a, b)| (a - b).abs() < 1e-9 * (1.0 + b.abs()));
+                    assert!(ok, "response mismatch");
+                    checked += 1;
+                }
+            }
+        }
+    }
+    for ((_k, _m, _x), rx) in pending.drain(..) {
+        rx.recv().expect("service alive").expect("product ok");
+        done += 1;
+    }
+    let dt = t.elapsed_s();
+    let s = svc.stats();
+    println!(
+        "served {done}/{requests} requests in {dt:.3}s -> {:.0} req/s ({checked} spot-checked)",
+        done as f64 / dt
+    );
+    println!(
+        "batches formed: {} (avg batch {:.2}); latency mean {:.0}us p50 {:.0}us p99 {:.0}us",
+        s.batches,
+        s.completed as f64 / s.batches.max(1) as f64,
+        s.mean_latency_us,
+        s.p99_latency_us / 2.0, // bucket upper bound -> midpoint-ish
+        s.p99_latency_us
+    );
+    svc.shutdown();
+    println!("matvec_service OK");
+}

@@ -1,0 +1,101 @@
+//! Regenerate every paper table/figure in one run (the quick suite) and
+//! print the paper-shape checks: does CSRC beat CSR sequentially, is
+//! `effective` the most stable local-buffers method, does colorful win
+//! only on the smallest-bandwidth matrices?
+//!
+//! Run: `cargo run --release --example paper_figures [-- smoke|quick|full]`
+
+use csrc_spmv::harness::{self, figures, Report};
+use csrc_spmv::simulator::MachineConfig;
+use csrc_spmv::util::stats;
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "smoke".into());
+    let suite = match which.as_str() {
+        "full" => harness::full_suite(),
+        "quick" => harness::quick_suite(),
+        _ => harness::smoke_suite(),
+    };
+    println!("suite: {} ({} matrices)\n", which, suite.len());
+    let report = Report::new(Some(std::path::Path::new("results"))).unwrap();
+
+    // Table 1 (the suite itself).
+    report
+        .table("table1", "Table 1 — dataset", &["matrix", "sym", "n", "nnz", "nnz/n", "ws (KB)"],
+               &figures::table1(&suite))
+        .unwrap();
+
+    // Fig. 4 — cache behaviour.
+    let fig4 = figures::fig4(&suite);
+    report
+        .table("fig4", "Fig. 4 — % L2 / TLB misses (Wolfdale model)",
+               &["matrix", "csrc L2%", "csr L2%", "csrc TLB%", "csr TLB%"], &fig4)
+        .unwrap();
+    let avg = |rows: &Vec<Vec<String>>, c: usize| {
+        stats::mean(&rows.iter().map(|r| r[c].parse::<f64>().unwrap()).collect::<Vec<_>>())
+    };
+    println!(
+        "[check] avg L2 miss%: csrc {:.2} vs csr {:.2} (paper: csrc not worse)\n",
+        avg(&fig4, 1),
+        avg(&fig4, 2)
+    );
+
+    // Fig. 5 — sequential Mflop/s.
+    let fig5 = figures::fig5(&suite);
+    report
+        .table("fig5", "Fig. 5 — sequential Mflop/s",
+               &["matrix", "csrc Mflop/s", "csr Mflop/s", "speedup"], &fig5)
+        .unwrap();
+    let ratios: Vec<f64> = fig5.iter().map(|r| r[3].parse().unwrap()).collect();
+    println!(
+        "[check] CSRC vs CSR sequential: geomean time ratio {:.3} (>1 means CSRC faster; paper: CSRC wins)\n",
+        stats::geomean(&ratios)
+    );
+
+    // Figs. 6/7 — colorful.
+    let fig6 = figures::fig6(&suite);
+    report
+        .table("fig6", "Fig. 6 — colorful vs best local-buffers",
+               &["matrix", "col wolf2", "lb wolf2", "col bloom4", "lb bloom4", "winner"], &fig6)
+        .unwrap();
+    let colorful_wins: Vec<&str> =
+        fig6.iter().filter(|r| r[5] == "colorful").map(|r| r[0].as_str()).collect();
+    println!("[check] colorful wins on: {colorful_wins:?} (paper: only smallest-bandwidth matrices)\n");
+    report
+        .table("fig7", "Fig. 7 — colorful speedups",
+               &["matrix", "colors", "wolf 2t", "bloom 2t", "bloom 4t"], &figures::fig7(&suite))
+        .unwrap();
+
+    // Figs. 8/9 — local buffers.
+    for (name, cfg) in [("fig8", MachineConfig::wolfdale()), ("fig9", MachineConfig::bloomfield())] {
+        let headers = figures::fig89_headers(&cfg);
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let rows = figures::fig89(&suite, &cfg);
+        report.table(name, &format!("{name} — local-buffers speedups ({})", cfg.name), &h, &rows).unwrap();
+        if name == "fig9" {
+            // Stability check: how often is `effective` the best method at 2t?
+            let mut eff_best = 0usize;
+            for r in &rows {
+                let vals: Vec<f64> = (1..5).map(|c| r[c].parse().unwrap()).collect();
+                let best = vals.iter().cloned().fold(f64::MIN, f64::max);
+                if (vals[2] - best).abs() < 1e-9 {
+                    eff_best += 1;
+                }
+            }
+            println!(
+                "\n[check] `effective` best on {}/{} matrices at 2 threads (paper: ~78-93%)\n",
+                eff_best,
+                rows.len()
+            );
+        }
+    }
+
+    // Table 2 — accumulation overheads.
+    let headers = figures::table2_headers();
+    let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    report
+        .table("table2", "Table 2 — init+accumulation overhead (ms)", &h, &figures::table2(&suite))
+        .unwrap();
+
+    println!("paper_figures OK — results under results/");
+}

@@ -1,0 +1,124 @@
+"""AOT bridge: lower every L2 graph to HLO text for the rust runtime.
+
+HLO *text* is the interchange format, never ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per model variant plus ``manifest.json``
+describing parameter shapes, so the rust runtime can size its literals
+without re-deriving conventions.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, fn, n, w, batch) — one compiled executable per variant, like a
+# serving engine shipping one engine per (model, shape) configuration.
+VARIANTS = [
+    ("spmv_n256_w8", model.spmv, 256, 8, None),
+    ("spmv_n1024_w16", model.spmv, 1024, 16, None),
+    ("spmv_t_n256_w8", model.spmv_t, 256, 8, None),
+    ("spmv_batch8_n256_w8", model.spmv_batch, 256, 8, 8),
+    ("cg_step_n256_w8", None, 256, 8, None),     # special-cased below
+    ("power_step_n256_w8", None, 256, 8, None),  # special-cased below
+    ("dense_spmv_n256", None, 256, 0, None),     # special-cased below
+    ("grad_quadform_n256_w8", None, 256, 8, None),  # special-cased below
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name, fn, n, w, batch):
+    f32 = jax.numpy.float32
+    if name.startswith("dense_spmv"):
+        a = jax.ShapeDtypeStruct((n, n), f32)
+        x = jax.ShapeDtypeStruct((n,), f32)
+        lowered = jax.jit(model.dense_spmv).lower(a, x)
+        params = [("a", [n, n], "f32"), ("x", [n], "f32")]
+        outputs = [("y", [n], "f32")]
+        return lowered, params, outputs
+    ad, al, au, ja, x = model.make_example_args(n, w, batch)
+    mat_params = [
+        ("ad", [n], "f32"),
+        ("al", [n, w], "f32"),
+        ("au", [n, w], "f32"),
+        ("ja", [n, w], "i32"),
+    ]
+    if name.startswith("cg_step"):
+        vec = jax.ShapeDtypeStruct((n,), f32)
+        scal = jax.ShapeDtypeStruct((), f32)
+        lowered = jax.jit(model.cg_step).lower(ad, al, au, ja, vec, vec, vec, scal)
+        params = mat_params + [
+            ("x", [n], "f32"), ("r", [n], "f32"), ("p", [n], "f32"), ("rs", [], "f32"),
+        ]
+        outputs = [("x", [n], "f32"), ("r", [n], "f32"), ("p", [n], "f32"), ("rs", [], "f32")]
+        return lowered, params, outputs
+    if name.startswith("power_step"):
+        vec = jax.ShapeDtypeStruct((n,), f32)
+        lowered = jax.jit(model.power_step).lower(ad, al, au, ja, vec)
+        params = mat_params + [("v", [n], "f32")]
+        outputs = [("v", [n], "f32"), ("rayleigh", [], "f32")]
+        return lowered, params, outputs
+    if name.startswith("grad_quadform"):
+        vec = jax.ShapeDtypeStruct((n,), f32)
+        lowered = jax.jit(model.quadratic_form_grad).lower(ad, al, au, ja, vec)
+        params = mat_params + [("x", [n], "f32")]
+        outputs = [("g", [n], "f32")]
+        return lowered, params, outputs
+    lowered = jax.jit(fn).lower(ad, al, au, ja, x)
+    xshape = [batch, n] if batch else [n]
+    params = mat_params + [("x", xshape, "f32")]
+    outputs = [("y", xshape, "f32")]
+    return lowered, params, outputs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "return_tuple": True, "entries": []}
+    for name, fn, n, w, batch in VARIANTS:
+        lowered, params, outputs = lower_variant(name, fn, n, w, batch)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "n": n,
+                "w": w,
+                "batch": batch,
+                "params": [{"name": p, "shape": s, "dtype": d} for p, s, d in params],
+                "outputs": [{"name": p, "shape": s, "dtype": d} for p, s, d in outputs],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

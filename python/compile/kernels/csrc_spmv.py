@@ -1,0 +1,135 @@
+"""L1 — Pallas kernel: structurally-symmetric SpMV in the CSRC-ELL layout.
+
+The paper's CSRC format stores, for a structurally symmetric n x n matrix A
+with nnz non-zeros, the diagonal ``ad(n)``, the strict lower triangle
+row-wise in ``al(k)`` and the matching upper-triangle transposes in
+``au(k)``, sharing one index structure ``ja(k)``, k = (nnz - n) / 2.  One
+sweep computes both ``y_i += a_ij x_j`` and ``y_j += a_ji x_i``.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): rows are padded to a fixed
+width ``w`` (ELL layout) so every array is a dense tile streamable
+HBM->VMEM with a BlockSpec:
+
+    ad : f32[n]        diagonal
+    al : f32[n, w]     lower values, zero-padded
+    au : f32[n, w]     upper-transpose values, zero-padded
+    ja : i32[n, w]     column indices; padding slots hold the row's own
+                       index (their al/au are 0, so they contribute nothing)
+
+The *scatter* of upper contributions — the very race the paper fights on
+multi-core — is reformulated as a one-hot matmul so it runs on the MXU:
+each row-block produces a private length-n partial vector (the TPU analogue
+of the paper's local-buffers strategy, with "all-in-one" accumulation
+folded into the systolic reduction), accumulated across grid steps into the
+output block that every step maps to.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU efficiency is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 64
+
+
+def _csrc_spmv_kernel(ad_ref, al_ref, au_ref, ja_ref, x_ref, y_ref, *, bn, w, n):
+    """One grid step: rows [i*bn, (i+1)*bn) of the CSRC-ELL matrix."""
+    i = pl.program_id(0)
+
+    # The output BlockSpec maps every grid step to the full vector, so we
+    # zero it exactly once and accumulate partial vectors afterwards.
+    @pl.when(i == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    ad = ad_ref[...]  # (bn,)
+    al = al_ref[...]  # (bn, w)
+    au = au_ref[...]  # (bn, w)
+    ja = ja_ref[...]  # (bn, w) int32
+    x = x_ref[...]    # (n,)
+
+    xi = jax.lax.dynamic_slice(x, (i * bn,), (bn,))
+
+    # Row-local part: y_i += ad_i * x_i + sum_k al[i,k] * x[ja[i,k]].
+    gathered = x[ja]                                     # (bn, w) VMEM gather
+    row_vals = ad * xi + jnp.sum(al * gathered, axis=1)  # (bn,)
+
+    # Upper scatter y[ja[i,k]] += au[i,k] * x_i as a one-hot matmul:
+    # c[1, bn*w] @ onehot[bn*w, n] -> partial[n] on the MXU. Padding slots
+    # point at the row itself with au == 0, contributing nothing.
+    c = (au * xi[:, None]).reshape(1, bn * w)
+    onehot = (ja.reshape(bn * w, 1) == jnp.arange(n, dtype=ja.dtype)[None, :])
+    partial = jnp.dot(
+        c, onehot.astype(c.dtype), preferred_element_type=jnp.float32
+    )[0].astype(y_ref.dtype)
+
+    y = y_ref[...] + partial
+    block = jax.lax.dynamic_slice(y, (i * bn,), (bn,)) + row_vals
+    y_ref[...] = jax.lax.dynamic_update_slice(y, block, (i * bn,))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def csrc_spmv(ad, al, au, ja, x, *, block_n: int = DEFAULT_BLOCK_N):
+    """y = A @ x for a CSRC-ELL structurally symmetric matrix.
+
+    All of ``ad, x`` are ``f32[n]``; ``al, au`` are ``f32[n, w]``; ``ja`` is
+    ``i32[n, w]``. ``n`` must be divisible by ``block_n`` (pad the matrix,
+    not the kernel).
+    """
+    n, w = al.shape
+    if n % block_n:
+        raise ValueError(f"n={n} not divisible by block_n={block_n}")
+    bn = block_n
+    grid = (n // bn,)
+    kernel = functools.partial(_csrc_spmv_kernel, bn=bn, w=w, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),        # ad
+            pl.BlockSpec((bn, w), lambda i: (i, 0)),    # al
+            pl.BlockSpec((bn, w), lambda i: (i, 0)),    # au
+            pl.BlockSpec((bn, w), lambda i: (i, 0)),    # ja
+            pl.BlockSpec((n,), lambda i: (0,)),         # x (resident)
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),   # y (accumulated)
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(ad, al, au, ja, x)
+
+
+def csrc_spmv_t(ad, al, au, ja, x, *, block_n: int = DEFAULT_BLOCK_N):
+    """y = A.T @ x — the paper's §5 point: swap ``al`` and ``au``, done."""
+    return csrc_spmv(ad, au, al, ja, x, block_n=block_n)
+
+
+def vmem_bytes(n: int, w: int, bn: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf).
+
+    ad block + al/au/ja blocks + resident x + resident y + the one-hot tile
+    (bn*w, n) that feeds the MXU.
+    """
+    block = bn * dtype_bytes + 3 * bn * w * dtype_bytes
+    resident = 2 * n * dtype_bytes
+    onehot = bn * w * n * dtype_bytes
+    return block + resident + onehot
+
+
+def mxu_utilization(n: int, w: int) -> float:
+    """Fraction of one-hot matmul MACs that are useful (non-padding).
+
+    The scatter matmul performs (n*w) * n MACs but only nnz_strict = n*w_eff
+    are useful; with a one-hot operand exactly one MAC per (row, slot) lands
+    on a non-zero. Utilization = useful MACs / issued MACs = 1/n per slot,
+    i.e. the scatter is bandwidth-bound, not MXU-bound — recorded honestly
+    in EXPERIMENTS.md §Perf along with the blocked-column refinement that
+    raises it to 1/(n/bn).
+    """
+    return 1.0 / float(n)

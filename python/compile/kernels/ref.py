@@ -1,0 +1,85 @@
+"""Pure-jnp / numpy oracles for the CSRC-ELL SpMV kernel.
+
+Everything here is the *correctness ground truth*: no Pallas, no clever
+layouts. ``ref_spmv_ell`` is the direct semantic statement of CSRC
+(diagonal + lower gather + upper scatter); ``dense_from_ell`` reconstructs
+the dense matrix so kernels can additionally be checked against a plain
+matmul.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def ref_spmv_ell(ad, al, au, ja, x):
+    """y = A @ x, straight from the CSRC definition (jnp, no Pallas)."""
+    n, w = al.shape
+    lower = jnp.sum(al * x[ja], axis=1)
+    contrib = (au * x[:, None]).reshape(-1)
+    upper = jnp.zeros(n, dtype=x.dtype).at[ja.reshape(-1)].add(contrib)
+    return ad * x + lower + upper
+
+
+def ref_spmv_t_ell(ad, al, au, ja, x):
+    """y = A.T @ x: swap the roles of al and au."""
+    return ref_spmv_ell(ad, au, al, ja, x)
+
+
+def dense_from_ell(ad, al, au, ja):
+    """Reconstruct the dense matrix A from its CSRC-ELL arrays (numpy)."""
+    ad, al, au, ja = map(np.asarray, (ad, al, au, ja))
+    n, w = al.shape
+    a = np.zeros((n, n), dtype=al.dtype)
+    a[np.arange(n), np.arange(n)] = ad
+    for i in range(n):
+        for k in range(w):
+            j = int(ja[i, k])
+            a[i, j] += al[i, k]  # lower entry a_ij
+            a[j, i] += au[i, k]  # its structural mirror a_ji
+    return a
+
+
+def random_csrc_ell(
+    n: int,
+    w: int,
+    seed: int = 0,
+    dtype=np.float32,
+    numeric_symmetric: bool = False,
+    density: float = 1.0,
+):
+    """Seeded random structurally-symmetric matrix in CSRC-ELL form.
+
+    Each row i holds up to ``w`` strict-lower entries with column indices
+    drawn without replacement from [0, i). Padding slots carry ja == i and
+    al == au == 0, matching the kernel's convention. ``density`` < 1 leaves
+    a random fraction of slots padded, exercising ragged rows.
+    """
+    rng = np.random.default_rng(seed)
+    ad = rng.standard_normal(n).astype(dtype) + np.asarray(4.0, dtype)  # well-conditioned
+    al = np.zeros((n, w), dtype=dtype)
+    au = np.zeros((n, w), dtype=dtype)
+    ja = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, w))
+    for i in range(1, n):
+        avail = min(i, w)
+        k = int(rng.binomial(avail, density)) if density < 1.0 else avail
+        if k == 0:
+            continue
+        cols = rng.choice(i, size=k, replace=False).astype(np.int32)
+        ja[i, :k] = np.sort(cols)
+        al[i, :k] = rng.standard_normal(k).astype(dtype)
+        au[i, :k] = al[i, :k] if numeric_symmetric else rng.standard_normal(k).astype(dtype)
+    return ad, al, au, ja
+
+
+def ref_cg_step(ad, al, au, ja, x, r, p, rs):
+    """One (unpreconditioned) CG iteration on the CSRC matrix — oracle for
+    the L2 ``cg_step`` graph."""
+    ap = ref_spmv_ell(ad, al, au, ja, p)
+    alpha = rs / jnp.dot(p, ap)
+    x = x + alpha * p
+    r = r - alpha * ap
+    rs_new = jnp.dot(r, r)
+    p = r + (rs_new / rs) * p
+    return x, r, p, rs_new

@@ -1,0 +1,121 @@
+"""L2 — the jax compute graphs the rust coordinator executes via PJRT.
+
+Each public function here is a pure jax function over fixed shapes that
+calls the L1 Pallas kernel (``kernels.csrc_spmv``). ``aot.py`` lowers each
+one to HLO *text* and drops it in ``artifacts/`` together with a manifest;
+the rust ``runtime/`` module loads, compiles and executes them. Python is
+never on the request path.
+
+Shapes are static per artifact (one compiled executable per model variant,
+exactly like a serving engine shipping one engine per configuration).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.csrc_spmv import csrc_spmv, DEFAULT_BLOCK_N
+
+
+def spmv(ad, al, au, ja, x, *, block_n: int = DEFAULT_BLOCK_N):
+    """y = A @ x via the Pallas CSRC-ELL kernel."""
+    return csrc_spmv(ad, al, au, ja, x, block_n=block_n)
+
+
+def spmv_t(ad, al, au, ja, x, *, block_n: int = DEFAULT_BLOCK_N):
+    """y = A.T @ x — swap al/au (the CSRC free-transpose property)."""
+    return csrc_spmv(ad, au, al, ja, x, block_n=block_n)
+
+
+def spmv_batch(ad, al, au, ja, xs, *, block_n: int = DEFAULT_BLOCK_N):
+    """Y[b] = A @ X[b] for a batch of source vectors (coordinator batching).
+
+    Lowered with ``lax.map`` so the batch loop stays a single compiled
+    while-loop in HLO rather than b unrolled kernel bodies.
+    """
+    return jax.lax.map(
+        lambda x: csrc_spmv(ad, al, au, ja, x, block_n=block_n), xs
+    )
+
+
+def cg_step(ad, al, au, ja, x, r, p, rs, *, block_n: int = DEFAULT_BLOCK_N):
+    """One unpreconditioned conjugate-gradient iteration.
+
+    State is (x, r, p, rs) with rs = <r, r>. The single SpMV per iteration
+    is the Pallas kernel — this is the downstream workload the paper's §4
+    benchmark models (1000 products ~ PCG/GMRES solve).
+    """
+    ap = csrc_spmv(ad, al, au, ja, p, block_n=block_n)
+    denom = jnp.dot(p, ap)
+    alpha = rs / denom
+    x = x + alpha * p
+    r = r - alpha * ap
+    rs_new = jnp.dot(r, r)
+    beta = rs_new / rs
+    p = r + beta * p
+    return x, r, p, rs_new
+
+
+def power_step(ad, al, au, ja, v, *, block_n: int = DEFAULT_BLOCK_N):
+    """One normalized power iteration: returns (v', rayleigh)."""
+    av = csrc_spmv(ad, al, au, ja, v, block_n=block_n)
+    norm = jnp.sqrt(jnp.dot(av, av))
+    v_new = av / norm
+    rayleigh = jnp.dot(v, av)
+    return v_new, rayleigh
+
+
+@jax.custom_vjp
+def spmv_grad(ad, al, au, ja, x):
+    """Differentiable y = A @ x (w.r.t. x).
+
+    The custom VJP is the paper's §5 point made executable: the cotangent
+    pull-back is Aᵀ·ȳ, which CSRC computes by *swapping al and au* — no
+    transpose materialization, same kernel, same cost.
+    """
+    return csrc_spmv(ad, al, au, ja, x)
+
+
+def _spmv_fwd(ad, al, au, ja, x):
+    return csrc_spmv(ad, al, au, ja, x), (ad, al, au, ja)
+
+
+def _spmv_bwd(res, ybar):
+    ad, al, au, ja = res
+    # Aᵀ ȳ via the al/au swap; matrix arrays get no cotangent (treated as
+    # constants of the compiled artifact).
+    xbar = csrc_spmv(ad, au, al, ja, ybar)
+    return (None, None, None, None, xbar)
+
+
+spmv_grad.defvjp(_spmv_fwd, _spmv_bwd)
+
+
+def quadratic_form_grad(ad, al, au, ja, x):
+    """∇ₓ ½ xᵀAx = ½(A + Aᵀ)x — exercises the custom VJP under jax.grad;
+    lowered as an artifact so rust can run gradient steps."""
+    return jax.grad(lambda v: 0.5 * jnp.dot(v, spmv_grad(ad, al, au, ja, v)))(x)
+
+
+def dense_spmv(a, x):
+    """Dense y = A @ x baseline (pure XLA matmul, no kernel) — used by the
+    harness to sanity-check the runtime and as the dense_1000 analogue."""
+    return jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+def make_example_args(n: int, w: int, batch: int | None = None):
+    """ShapeDtypeStructs for lowering a given (n, w) variant."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    ad = jax.ShapeDtypeStruct((n,), f32)
+    al = jax.ShapeDtypeStruct((n, w), f32)
+    au = jax.ShapeDtypeStruct((n, w), f32)
+    ja = jax.ShapeDtypeStruct((n, w), i32)
+    if batch is None:
+        x = jax.ShapeDtypeStruct((n,), f32)
+    else:
+        x = jax.ShapeDtypeStruct((batch, n), f32)
+    return ad, al, au, ja, x

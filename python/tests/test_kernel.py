@@ -1,0 +1,195 @@
+"""L1 correctness: Pallas CSRC-ELL kernel vs the pure-jnp oracle.
+
+hypothesis sweeps (n, w, seed, density, dtype); every case asserts
+allclose against ref.py AND against a dense reconstruction + matmul.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.csrc_spmv import (
+    csrc_spmv,
+    csrc_spmv_t,
+    vmem_bytes,
+    mxu_utilization,
+)
+from compile.kernels.ref import (
+    ref_spmv_ell,
+    ref_spmv_t_ell,
+    dense_from_ell,
+    random_csrc_ell,
+)
+
+
+def _x(n, seed, dtype=np.float32):
+    return np.random.default_rng(seed + 1000).standard_normal(n).astype(dtype)
+
+
+# ---------------------------------------------------------------- unit tests
+
+def test_identity_matrix():
+    """Diagonal-only matrix: y == ad * x."""
+    n, w = 64, 4
+    ad = np.arange(1, n + 1, dtype=np.float32)
+    al = np.zeros((n, w), np.float32)
+    au = np.zeros((n, w), np.float32)
+    ja = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, w))
+    x = _x(n, 0)
+    y = csrc_spmv(ad, al, au, ja, x)
+    np.testing.assert_allclose(np.asarray(y), ad * x, rtol=1e-6)
+
+
+def test_single_offdiag_pair():
+    """One lower entry a_{5,2}=3 with upper mirror a_{2,5}=7."""
+    n, w = 64, 2
+    ad = np.ones(n, np.float32)
+    al = np.zeros((n, w), np.float32)
+    au = np.zeros((n, w), np.float32)
+    ja = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, w))
+    al[5, 0], au[5, 0], ja[5, 0] = 3.0, 7.0, 2
+    x = _x(n, 1)
+    y = np.asarray(csrc_spmv(ad, al, au, ja, x))
+    expect = x.copy()
+    expect[5] += 3.0 * x[2]
+    expect[2] += 7.0 * x[5]
+    np.testing.assert_allclose(y, expect, rtol=1e-6)
+
+
+def test_matches_dense_reconstruction():
+    n, w = 128, 8
+    ad, al, au, ja = random_csrc_ell(n, w, seed=7)
+    x = _x(n, 7)
+    a = dense_from_ell(ad, al, au, ja)
+    y = np.asarray(csrc_spmv(ad, al, au, ja, x))
+    np.testing.assert_allclose(y, a @ x, rtol=2e-5, atol=2e-5)
+
+
+def test_transpose_swaps_al_au():
+    n, w = 128, 8
+    ad, al, au, ja = random_csrc_ell(n, w, seed=11)
+    x = _x(n, 11)
+    a = dense_from_ell(ad, al, au, ja)
+    yt = np.asarray(csrc_spmv_t(ad, al, au, ja, x))
+    np.testing.assert_allclose(yt, a.T @ x, rtol=2e-5, atol=2e-5)
+
+
+def test_numeric_symmetric_transpose_is_identity():
+    """Numerically symmetric matrix: A x == A.T x exactly (same arrays)."""
+    n, w = 64, 4
+    ad, al, au, ja = random_csrc_ell(n, w, seed=3, numeric_symmetric=True)
+    x = _x(n, 3)
+    y = np.asarray(csrc_spmv(ad, al, au, ja, x))
+    yt = np.asarray(csrc_spmv_t(ad, al, au, ja, x))
+    np.testing.assert_allclose(y, yt, rtol=1e-6)
+
+
+def test_block_n_invariance():
+    """The grid block size must not change the result."""
+    n, w = 128, 8
+    ad, al, au, ja = random_csrc_ell(n, w, seed=5)
+    x = _x(n, 5)
+    y32 = np.asarray(csrc_spmv(ad, al, au, ja, x, block_n=32))
+    y64 = np.asarray(csrc_spmv(ad, al, au, ja, x, block_n=64))
+    y128 = np.asarray(csrc_spmv(ad, al, au, ja, x, block_n=128))
+    # Accumulation order differs across block sizes: f32 round-off only.
+    np.testing.assert_allclose(y32, y64, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(y64, y128, rtol=1e-5, atol=1e-6)
+
+
+def test_rejects_indivisible_block():
+    n, w = 96, 4
+    ad, al, au, ja = random_csrc_ell(n, w, seed=2)
+    with pytest.raises(ValueError, match="not divisible"):
+        csrc_spmv(ad, al, au, ja, _x(n, 2), block_n=64)
+
+
+def test_zero_vector():
+    n, w = 64, 4
+    ad, al, au, ja = random_csrc_ell(n, w, seed=9)
+    y = np.asarray(csrc_spmv(ad, al, au, ja, np.zeros(n, np.float32)))
+    np.testing.assert_allclose(y, np.zeros(n), atol=0)
+
+
+def test_linearity():
+    """A(ax + by) == a*Ax + b*Ay — catches any stateful accumulation bug."""
+    n, w = 64, 4
+    ad, al, au, ja = random_csrc_ell(n, w, seed=13)
+    x1, x2 = _x(n, 13), _x(n, 14)
+    lhs = np.asarray(csrc_spmv(ad, al, au, ja, (2.0 * x1 + 3.0 * x2).astype(np.float32)))
+    rhs = 2.0 * np.asarray(csrc_spmv(ad, al, au, ja, x1)) + 3.0 * np.asarray(
+        csrc_spmv(ad, al, au, ja, x2)
+    )
+    np.testing.assert_allclose(lhs, rhs, rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------- hypothesis sweeps
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    w=st.integers(1, 12),
+    seed=st.integers(0, 2**16),
+    density=st.floats(0.0, 1.0),
+)
+def test_kernel_vs_ref_sweep(n_blocks, w, seed, density):
+    n = 32 * n_blocks
+    ad, al, au, ja = random_csrc_ell(n, w, seed=seed, density=density)
+    x = _x(n, seed)
+    got = np.asarray(csrc_spmv(ad, al, au, ja, x, block_n=32))
+    want = np.asarray(ref_spmv_ell(ad, al, au, jnp.asarray(ja), x))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_transpose_vs_ref_sweep(seed):
+    n, w = 64, 6
+    ad, al, au, ja = random_csrc_ell(n, w, seed=seed)
+    x = _x(n, seed)
+    got = np.asarray(csrc_spmv_t(ad, al, au, ja, x, block_n=32))
+    want = np.asarray(ref_spmv_t_ell(ad, al, au, jnp.asarray(ja), x))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------------- perf-model helpers
+
+def test_vmem_estimate_monotone_in_block():
+    assert vmem_bytes(1024, 16, 64) < vmem_bytes(1024, 16, 128)
+
+
+def test_mxu_utilization_bounds():
+    u = mxu_utilization(1024, 16)
+    assert 0.0 < u <= 1.0
+
+
+# ----------------------------------------------------------- dtype coverage
+
+def test_bfloat16_kernel_matches_ref_loosely():
+    """TPU-native dtype: bf16 inputs, f32 accumulation inside the kernel
+    (preferred_element_type), tolerance scaled to bf16's 8-bit mantissa."""
+    import jax.numpy as jnp
+
+    n, w = 64, 4
+    ad, al, au, ja = random_csrc_ell(n, w, seed=17)
+    x = _x(n, 17)
+    to_bf16 = lambda a: jnp.asarray(a, dtype=jnp.bfloat16)
+    got = np.asarray(
+        csrc_spmv(to_bf16(ad), to_bf16(al), to_bf16(au), ja, to_bf16(x), block_n=32),
+        dtype=np.float32,
+    )
+    want = np.asarray(ref_spmv_ell(ad, al, au, jnp.asarray(ja), x))
+    # bf16 has ~2-3 decimal digits; compare with a wide but bounded tol.
+    np.testing.assert_allclose(got, want, rtol=0.06, atol=0.1)
+
+
+def test_wide_rows_and_single_block():
+    """w close to n and a single grid step (n == block_n) both work."""
+    n, w = 32, 24
+    ad, al, au, ja = random_csrc_ell(n, w, seed=19)
+    x = _x(n, 19)
+    got = np.asarray(csrc_spmv(ad, al, au, ja, x, block_n=32))
+    want = np.asarray(ref_spmv_ell(ad, al, au, jnp.asarray(ja), x))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)

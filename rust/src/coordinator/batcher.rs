@@ -1,0 +1,120 @@
+//! Request batching: group queued requests by matrix so a worker runs
+//! them back-to-back against a warm engine (and, on the XLA backend, as
+//! one batched artifact call). Pure logic — fully unit-testable without
+//! threads.
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// Max queue-dwell before a partial batch is released.
+    pub max_wait: std::time::Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch: matrix key + indices into the pending queue.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub matrix: String,
+    pub requests: Vec<usize>,
+}
+
+/// Greedy batching preserving arrival order per matrix: walk the queue,
+/// open a batch per matrix, close at `max_batch`. Order across batches
+/// follows first member arrival (FIFO fairness).
+pub fn form_batches(queue: &[String], policy: &BatchPolicy) -> Vec<Batch> {
+    let mut batches: Vec<Batch> = Vec::new();
+    // matrix -> index of currently open batch
+    let mut open: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
+    for (idx, m) in queue.iter().enumerate() {
+        match open.get(m.as_str()) {
+            Some(&b) if batches[b].requests.len() < policy.max_batch => {
+                batches[b].requests.push(idx);
+            }
+            _ => {
+                batches.push(Batch { matrix: m.clone(), requests: vec![idx] });
+                open.insert(m.as_str(), batches.len() - 1);
+            }
+        }
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn groups_by_matrix_preserving_order() {
+        let batches = form_batches(&q(&["a", "b", "a", "a", "b"]), &BatchPolicy::default());
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].matrix, "a");
+        assert_eq!(batches[0].requests, vec![0, 2, 3]);
+        assert_eq!(batches[1].requests, vec![1, 4]);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let policy = BatchPolicy { max_batch: 2, ..Default::default() };
+        let batches = form_batches(&q(&["a", "a", "a", "a", "a"]), &policy);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].requests, vec![0, 1]);
+        assert_eq!(batches[1].requests, vec![2, 3]);
+        assert_eq!(batches[2].requests, vec![4]);
+    }
+
+    #[test]
+    fn empty_queue_no_batches() {
+        assert!(form_batches(&[], &BatchPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn every_request_in_exactly_one_batch() {
+        let queue = q(&["x", "y", "x", "z", "z", "x", "y", "x", "x"]);
+        let policy = BatchPolicy { max_batch: 3, ..Default::default() };
+        let batches = form_batches(&queue, &policy);
+        let mut seen = vec![false; queue.len()];
+        for b in &batches {
+            for &r in &b.requests {
+                assert!(!seen[r], "request {r} in two batches");
+                seen[r] = true;
+                assert_eq!(queue[r], b.matrix);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn property_batching_invariants() {
+        crate::util::propcheck::check(20, |rng| {
+            let names = ["a", "b", "c", "d"];
+            let queue: Vec<String> =
+                (0..rng.below(40)).map(|_| names[rng.below(4)].to_string()).collect();
+            let policy = BatchPolicy { max_batch: 1 + rng.below(6), ..Default::default() };
+            let batches = form_batches(&queue, &policy);
+            let total: usize = batches.iter().map(|b| b.requests.len()).sum();
+            if total != queue.len() {
+                return Err(format!("{total} batched != {} queued", queue.len()));
+            }
+            for b in &batches {
+                if b.requests.len() > policy.max_batch {
+                    return Err("batch over max".into());
+                }
+                if !b.requests.windows(2).all(|w| w[0] < w[1]) {
+                    return Err("batch not in arrival order".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

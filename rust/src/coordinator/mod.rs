@@ -1,0 +1,23 @@
+//! L3 coordinator: a matvec *service*.
+//!
+//! The paper's algorithms end up inside long-running solver services (its
+//! §5: "now part of a distributed-memory implementation of the finite
+//! element method"). This module packages the engines behind a
+//! production-shaped front: a registry of matrices, an async request
+//! queue, a batcher that groups requests per matrix, a router that picks
+//! a backend per request (sequential / parallel engine / the XLA
+//! artifact runtime), worker threads, and service metrics.
+//!
+//! Everything is std-only (threads + mpsc): tokio is not in the offline
+//! vendor tree, and the request path must never touch python.
+
+pub mod batcher;
+pub mod router;
+pub mod service;
+
+pub use batcher::{form_batches, Batch, BatchPolicy};
+pub use router::{Backend, RoutePolicy, Router};
+pub use service::{MatvecService, ServiceConfig, ServiceStats};
+
+pub mod distributed;
+pub use distributed::{distributed_cg, DistributedMatrix, Subdomain};

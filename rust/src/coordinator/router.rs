@@ -1,0 +1,114 @@
+//! Backend routing: which execution engine serves a given matrix.
+//!
+//! Routing is a pure policy over matrix properties (size, working set,
+//! whether an ELL/XLA artifact shape fits) — mirroring the paper's own
+//! findings: small matrices don't amortize parallel overhead (§4.2's
+//! one-thread shortcut), large ones want the parallel engines; the XLA
+//! backend serves the fixed shapes the AOT artifacts were lowered for.
+
+use crate::parallel::{AccumMethod, EngineKind};
+use crate::sparse::Csrc;
+
+/// Execution backend for one request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    NativeSequential,
+    NativeParallel { kind: EngineKind, threads: usize },
+    /// AOT-compiled artifact (by manifest name).
+    Xla { artifact: String },
+}
+
+/// Routing policy knobs.
+#[derive(Clone, Debug)]
+pub struct RoutePolicy {
+    /// Below this row count the sequential sweep wins (fork-join cost).
+    pub min_parallel_n: usize,
+    pub parallel_kind: EngineKind,
+    pub threads: usize,
+    /// Prefer the XLA backend when an artifact shape fits.
+    pub prefer_xla: bool,
+    /// Artifact shapes available: (name, n_pad, w).
+    pub xla_shapes: Vec<(String, usize, usize)>,
+}
+
+impl Default for RoutePolicy {
+    fn default() -> Self {
+        RoutePolicy {
+            min_parallel_n: 4096,
+            parallel_kind: EngineKind::LocalBuffers(AccumMethod::Effective),
+            threads: 4,
+            prefer_xla: false,
+            xla_shapes: Vec::new(),
+        }
+    }
+}
+
+pub struct Router {
+    pub policy: RoutePolicy,
+}
+
+impl Router {
+    pub fn new(policy: RoutePolicy) -> Router {
+        Router { policy }
+    }
+
+    /// Choose the backend for a matrix.
+    pub fn route(&self, a: &Csrc) -> Backend {
+        if self.policy.prefer_xla {
+            if let Some((name, _, _)) = self
+                .policy
+                .xla_shapes
+                .iter()
+                .find(|(_, n_pad, w)| a.n <= *n_pad && a.max_row_width() <= *w)
+            {
+                return Backend::Xla { artifact: name.clone() };
+            }
+        }
+        if a.n < self.policy.min_parallel_n {
+            Backend::NativeSequential
+        } else {
+            Backend::NativeParallel { kind: self.policy.parallel_kind, threads: self.policy.threads }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::Rng;
+
+    fn mat(n: usize) -> Csrc {
+        let mut rng = Rng::new(70);
+        Csrc::from_coo(&Coo::random_structurally_symmetric(n, 3, false, &mut rng)).unwrap()
+    }
+
+    #[test]
+    fn small_matrices_run_sequential() {
+        let r = Router::new(RoutePolicy::default());
+        assert_eq!(r.route(&mat(100)), Backend::NativeSequential);
+    }
+
+    #[test]
+    fn large_matrices_run_parallel() {
+        let r = Router::new(RoutePolicy { min_parallel_n: 50, ..Default::default() });
+        match r.route(&mat(100)) {
+            Backend::NativeParallel { threads, .. } => assert_eq!(threads, 4),
+            other => panic!("expected parallel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn xla_routes_only_fitting_shapes() {
+        let policy = RoutePolicy {
+            prefer_xla: true,
+            xla_shapes: vec![("spmv_n256_w8".into(), 256, 8)],
+            ..Default::default()
+        };
+        let r = Router::new(policy);
+        // n=100 with npr<=3 fits 256x8.
+        assert_eq!(r.route(&mat(100)), Backend::Xla { artifact: "spmv_n256_w8".into() });
+        // n=500 does not fit the 256-row artifact.
+        assert_eq!(r.route(&mat(500)), Backend::NativeSequential);
+    }
+}

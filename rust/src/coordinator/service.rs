@@ -1,0 +1,386 @@
+//! The matvec service: registry + request queue + batcher + workers.
+//!
+//! Flow: `submit()` enqueues (matrix-key, x, reply-channel) → the
+//! dispatcher thread drains the queue, forms per-matrix batches
+//! ([`super::batcher`]), and hands each batch to a worker → the worker
+//! resolves the backend via the [`super::router`] policy, runs the
+//! products on its cached engine, and replies through each request's
+//! channel. Metrics (counts + latency histogram) are sampled on the
+//! worker side.
+
+use super::batcher::{form_batches, BatchPolicy};
+use super::router::{Backend, RoutePolicy, Router};
+use crate::metrics::LatencyHistogram;
+use crate::parallel::{build_engine, ParallelSpmv};
+use crate::sparse::Csrc;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub batch: BatchPolicy,
+    pub route: RoutePolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 2, batch: BatchPolicy::default(), route: RoutePolicy::default() }
+    }
+}
+
+struct Request {
+    matrix: String,
+    x: Vec<f64>,
+    enqueued: Instant,
+    reply: Sender<Result<Vec<f64>, String>>,
+}
+
+struct WorkerBatch {
+    matrix: String,
+    requests: Vec<Request>,
+}
+
+/// Shared mutable service state.
+#[derive(Default)]
+struct Stats {
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    batches: u64,
+    latency: Option<LatencyHistogram>,
+}
+
+/// Observable service counters.
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: f64,
+}
+
+pub struct MatvecService {
+    registry: Arc<Mutex<HashMap<String, Arc<Csrc>>>>,
+    queue_tx: Option<Sender<Request>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    stats: Arc<Mutex<Stats>>,
+}
+
+impl MatvecService {
+    pub fn start(cfg: ServiceConfig) -> MatvecService {
+        let registry: Arc<Mutex<HashMap<String, Arc<Csrc>>>> = Arc::new(Mutex::new(HashMap::new()));
+        let stats = Arc::new(Mutex::new(Stats { latency: Some(LatencyHistogram::new()), ..Default::default() }));
+        let (queue_tx, queue_rx) = channel::<Request>();
+
+        // Worker channels.
+        let mut worker_txs: Vec<Sender<WorkerBatch>> = Vec::new();
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let (tx, rx) = channel::<WorkerBatch>();
+            worker_txs.push(tx);
+            let registry = registry.clone();
+            let stats = stats.clone();
+            let route = cfg.route.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("matvec-worker-{wid}"))
+                    .spawn(move || worker_loop(rx, registry, route, stats))
+                    .expect("spawn worker"),
+            );
+        }
+
+        // Dispatcher: drain queue -> batches -> round-robin workers.
+        let batch_policy = cfg.batch;
+        let stats_d = stats.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("matvec-dispatcher".into())
+            .spawn(move || dispatcher_loop(queue_rx, worker_txs, batch_policy, stats_d))
+            .expect("spawn dispatcher");
+
+        MatvecService {
+            registry,
+            queue_tx: Some(queue_tx),
+            dispatcher: Some(dispatcher),
+            workers,
+            stats,
+        }
+    }
+
+    /// Register (or replace) a matrix under a key.
+    pub fn register(&self, key: &str, a: Arc<Csrc>) {
+        self.registry.lock().unwrap().insert(key.to_string(), a);
+    }
+
+    /// Submit y = A·x; returns the reply channel.
+    pub fn submit(&self, key: &str, x: Vec<f64>) -> Receiver<Result<Vec<f64>, String>> {
+        let (tx, rx) = channel();
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.submitted += 1;
+        }
+        let req = Request { matrix: key.to_string(), x, enqueued: Instant::now(), reply: tx };
+        // If the service is shutting down the reply channel will just
+        // return a disconnect error to the caller.
+        if let Some(q) = &self.queue_tx {
+            let _ = q.send(req);
+        }
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, key: &str, x: Vec<f64>) -> Result<Vec<f64>, String> {
+        self.submit(key, x)
+            .recv()
+            .map_err(|_| "service shut down before reply".to_string())?
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let s = self.stats.lock().unwrap();
+        let lat = s.latency.as_ref().unwrap();
+        ServiceStats {
+            submitted: s.submitted,
+            completed: s.completed,
+            failed: s.failed,
+            batches: s.batches,
+            mean_latency_us: lat.mean_us(),
+            p99_latency_us: lat.quantile_us(0.99),
+        }
+    }
+
+    /// Graceful shutdown: drain, stop threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.queue_tx.take(); // closes the queue; dispatcher drains & exits
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for MatvecService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn dispatcher_loop(
+    queue: Receiver<Request>,
+    worker_txs: Vec<Sender<WorkerBatch>>,
+    policy: BatchPolicy,
+    stats: Arc<Mutex<Stats>>,
+) {
+    let mut next_worker = 0usize;
+    loop {
+        // Block for the first request; then greedily drain within the
+        // batching window.
+        let first = match queue.recv() {
+            Ok(r) => r,
+            Err(_) => return, // queue closed: done (workers closed by drop of txs)
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + policy.max_wait;
+        while pending.len() < policy.max_batch * worker_txs.len() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match queue.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+        // Form per-matrix batches and ship them.
+        let keys: Vec<String> = pending.iter().map(|r| r.matrix.clone()).collect();
+        let batches = form_batches(&keys, &policy);
+        {
+            let mut s = stats.lock().unwrap();
+            s.batches += batches.len() as u64;
+        }
+        // Move requests out of `pending` into their batches (descending
+        // index take keeps indices valid).
+        let mut slots: Vec<Option<Request>> = pending.into_iter().map(Some).collect();
+        for b in batches {
+            let reqs: Vec<Request> =
+                b.requests.iter().map(|&i| slots[i].take().expect("batch index")).collect();
+            let wb = WorkerBatch { matrix: b.matrix, requests: reqs };
+            let _ = worker_txs[next_worker % worker_txs.len()].send(wb);
+            next_worker += 1;
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<WorkerBatch>,
+    registry: Arc<Mutex<HashMap<String, Arc<Csrc>>>>,
+    route: RoutePolicy,
+    stats: Arc<Mutex<Stats>>,
+) {
+    let router = Router::new(route);
+    // Engine cache per (matrix, backend) — engines are not Sync, each
+    // worker owns its own.
+    let mut engines: HashMap<String, Box<dyn ParallelSpmv>> = HashMap::new();
+    while let Ok(batch) = rx.recv() {
+        let a = registry.lock().unwrap().get(&batch.matrix).cloned();
+        let Some(a) = a else {
+            let mut s = stats.lock().unwrap();
+            for r in batch.requests {
+                s.failed += 1;
+                let _ = r.reply.send(Err(format!("unknown matrix {:?}", batch.matrix)));
+            }
+            continue;
+        };
+        let backend = router.route(&a);
+        for req in batch.requests {
+            if req.x.len() != a.n {
+                let mut s = stats.lock().unwrap();
+                s.failed += 1;
+                let _ = req
+                    .reply
+                    .send(Err(format!("x length {} != n {}", req.x.len(), a.n)));
+                continue;
+            }
+            let mut y = vec![0.0; a.n];
+            match &backend {
+                Backend::NativeSequential => a.spmv_into_zeroed(&req.x, &mut y),
+                Backend::NativeParallel { kind, threads } => {
+                    let engine = engines.entry(format!("{}/{}", batch.matrix, kind.label()))
+                        .or_insert_with(|| build_engine(*kind, a.clone(), *threads));
+                    engine.spmv(&req.x, &mut y);
+                }
+                Backend::Xla { artifact } => {
+                    // The XLA path is exercised via examples/ and the CLI
+                    // (XlaRuntime is heavyweight); in-service we fall back
+                    // to sequential to keep the worker self-contained.
+                    let _ = artifact;
+                    a.spmv_into_zeroed(&req.x, &mut y);
+                }
+            }
+            let mut s = stats.lock().unwrap();
+            s.completed += 1;
+            s.latency.as_mut().unwrap().record(req.enqueued.elapsed().as_secs_f64());
+            let _ = req.reply.send(Ok(std::mem::take(&mut y)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::Rng;
+
+    fn mat(n: usize, seed: u64) -> Arc<Csrc> {
+        let mut rng = Rng::new(seed);
+        Arc::new(Csrc::from_coo(&Coo::random_structurally_symmetric(n, 3, false, &mut rng)).unwrap())
+    }
+
+    #[test]
+    fn serves_correct_products() {
+        let svc = MatvecService::start(ServiceConfig::default());
+        let a = mat(80, 80);
+        svc.register("a", a.clone());
+        let x: Vec<f64> = (0..80).map(|i| i as f64 * 0.01).collect();
+        let y = svc.call("a", x.clone()).unwrap();
+        let mut want = vec![0.0; 80];
+        a.spmv_into_zeroed(&x, &mut want);
+        crate::util::propcheck::assert_close(&y, &want, 1e-12, 1e-12).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.completed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_matrix_fails_cleanly() {
+        let svc = MatvecService::start(ServiceConfig::default());
+        let err = svc.call("ghost", vec![1.0; 4]).unwrap_err();
+        assert!(err.contains("unknown matrix"), "{err}");
+        assert_eq!(svc.stats().failed, 1);
+    }
+
+    #[test]
+    fn wrong_length_fails_cleanly() {
+        let svc = MatvecService::start(ServiceConfig::default());
+        svc.register("a", mat(50, 81));
+        let err = svc.call("a", vec![1.0; 3]).unwrap_err();
+        assert!(err.contains("length"), "{err}");
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_served() {
+        let svc = MatvecService::start(ServiceConfig::default());
+        let a = mat(60, 82);
+        let b = mat(40, 83);
+        svc.register("a", a.clone());
+        svc.register("b", b.clone());
+        let mut rxs = Vec::new();
+        for i in 0..40 {
+            let key = if i % 3 == 0 { "b" } else { "a" };
+            let n = if key == "a" { 60 } else { 40 };
+            let x: Vec<f64> = (0..n).map(|j| (i * j) as f64 * 1e-3).collect();
+            rxs.push((key, x.clone(), svc.submit(key, x)));
+        }
+        for (key, x, rx) in rxs {
+            let y = rx.recv().unwrap().unwrap();
+            let m = if key == "a" { &a } else { &b };
+            let mut want = vec![0.0; m.n];
+            m.spmv_into_zeroed(&x, &mut want);
+            crate::util::propcheck::assert_close(&y, &want, 1e-12, 1e-12).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 40);
+        assert!(s.batches >= 2, "should have formed multiple batches");
+        assert!(s.mean_latency_us > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn parallel_backend_used_for_large_matrices() {
+        let mut cfg = ServiceConfig::default();
+        cfg.route.min_parallel_n = 32; // force the parallel path
+        cfg.route.threads = 2;
+        let svc = MatvecService::start(cfg);
+        let a = mat(200, 84);
+        svc.register("big", a.clone());
+        let x = vec![1.0; 200];
+        let y = svc.call("big", x.clone()).unwrap();
+        let mut want = vec![0.0; 200];
+        a.spmv_into_zeroed(&x, &mut want);
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn property_service_matches_sequential() {
+        crate::util::propcheck::check(5, |rng| {
+            let n = 20 + rng.below(80);
+            let a = {
+                let coo = Coo::random_structurally_symmetric(n, 2, false, rng);
+                Arc::new(Csrc::from_coo(&coo).map_err(|e| e.to_string())?)
+            };
+            let svc = MatvecService::start(ServiceConfig::default());
+            svc.register("m", a.clone());
+            for _ in 0..3 {
+                let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let y = svc.call("m", x.clone())?;
+                let mut want = vec![0.0; n];
+                a.spmv_into_zeroed(&x, &mut want);
+                crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11)?;
+            }
+            svc.shutdown();
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! Subdomain-by-subdomain domain decomposition (the paper's `_n32` /
+//! `_o32` dataset entries, §2.1 and ref [27]).
+//!
+//! The global mesh's rows are split into contiguous slabs (structured
+//! meshes make slabs geometric). For each subdomain:
+//!
+//! * **non-overlapping** — the local matrix is the square restriction of
+//!   the global matrix to the slab's rows *and* columns: structurally
+//!   symmetric, stored as plain CSRC,
+//! * **overlapping** — the local matrix keeps every column its rows touch;
+//!   ghost (overlap) columns are renumbered after the internal ones,
+//!   giving the n×m (m > n) rectangle whose square part is structurally
+//!   symmetric — exactly what [`crate::sparse::CsrcRect`] stores.
+
+use crate::sparse::{Coo, Csr};
+
+/// Rows of subdomain `s` out of `nsub` (contiguous slab split).
+pub fn slab(n: usize, nsub: usize, s: usize) -> std::ops::Range<usize> {
+    (s * n / nsub)..((s + 1) * n / nsub)
+}
+
+/// Non-overlapping local matrix: square restriction to the slab.
+pub fn nonoverlapping_local(global: &Csr, nsub: usize, s: usize) -> Coo {
+    let rows = slab(global.nrows, nsub, s);
+    let nl = rows.len();
+    let mut coo = Coo::new(nl, nl);
+    for i in rows.clone() {
+        for k in global.row_range(i) {
+            let j = global.ja[k] as usize;
+            if rows.contains(&j) {
+                coo.push(i - rows.start, j - rows.start, global.a[k]);
+            }
+        }
+    }
+    coo.compact();
+    coo
+}
+
+/// Overlapping local matrix: slab rows with ghost columns appended, as an
+/// n×m COO (internal columns first, ghosts renumbered to n..m in first-
+/// appearance order).
+pub fn overlapping_local(global: &Csr, nsub: usize, s: usize) -> Coo {
+    let rows = slab(global.nrows, nsub, s);
+    let nl = rows.len();
+    let mut ghost_id = std::collections::HashMap::new();
+    let mut next_ghost = 0usize;
+    let mut entries = Vec::new();
+    for i in rows.clone() {
+        for k in global.row_range(i) {
+            let j = global.ja[k] as usize;
+            let jl = if rows.contains(&j) {
+                j - rows.start
+            } else {
+                let g = *ghost_id.entry(j).or_insert_with(|| {
+                    let g = next_ghost;
+                    next_ghost += 1;
+                    g
+                });
+                nl + g
+            };
+            entries.push((i - rows.start, jl, global.a[k]));
+        }
+    }
+    let m = nl + next_ghost;
+    let mut coo = Coo::with_capacity(nl, m, entries.len());
+    for (i, j, v) in entries {
+        coo.push(i, j, v);
+    }
+    coo.compact();
+    coo
+}
+
+/// Verify a decomposition reproduces the global product: scatter each
+/// subdomain's local y back and compare (used by tests and the harness's
+/// sanity pass). Overlapping locals consume the global x restricted to
+/// their column map; this helper recomputes that map.
+pub fn verify_overlapping_spmv(global: &Csr, nsub: usize, x: &[f64]) -> Vec<f64> {
+    use crate::sparse::CsrcRect;
+    let mut y = vec![0.0; global.nrows];
+    for s in 0..nsub {
+        let rows = slab(global.nrows, nsub, s);
+        let local = overlapping_local(global, nsub, s);
+        let rect = CsrcRect::from_coo(&local).expect("overlap local must be CSRC-compatible");
+        // Rebuild the ghost map in the same first-appearance order.
+        let mut ghost_cols = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for i in rows.clone() {
+            for k in global.row_range(i) {
+                let j = global.ja[k] as usize;
+                if !rows.contains(&j) && seen.insert(j) {
+                    ghost_cols.push(j);
+                }
+            }
+        }
+        let mut xl = Vec::with_capacity(local.ncols);
+        xl.extend(rows.clone().map(|i| x[i]));
+        xl.extend(ghost_cols.iter().map(|&j| x[j]));
+        let mut yl = vec![0.0; rows.len()];
+        rect.spmv(&xl, &mut yl);
+        for (off, i) in rows.enumerate() {
+            y[i] = yl[off];
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::fem::poisson_2d_quad;
+    use crate::sparse::{Csr, Csrc};
+    use crate::util::propcheck;
+
+    fn global() -> Csr {
+        Csr::from_coo(&poisson_2d_quad(12, 0.2, 7))
+    }
+
+    #[test]
+    fn slabs_partition_rows() {
+        let n = 169;
+        let mut covered = 0;
+        for s in 0..8 {
+            covered += slab(n, 8, s).len();
+        }
+        assert_eq!(covered, n);
+    }
+
+    #[test]
+    fn nonoverlapping_locals_are_csrc_compatible() {
+        let g = global();
+        for s in 0..4 {
+            let local = nonoverlapping_local(&g, 4, s);
+            assert!(local.is_structurally_symmetric(), "subdomain {s}");
+            let m = Csrc::from_coo(&local).unwrap();
+            assert_eq!(m.n, slab(g.nrows, 4, s).len());
+        }
+    }
+
+    #[test]
+    fn overlapping_locals_are_rectangular() {
+        let g = global();
+        for s in 0..4 {
+            let local = overlapping_local(&g, 4, s);
+            let nl = slab(g.nrows, 4, s).len();
+            assert_eq!(local.nrows, nl);
+            // Interior subdomains must have ghosts.
+            if s == 1 || s == 2 {
+                assert!(local.ncols > nl, "subdomain {s} should have ghosts");
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_product_reproduces_global() {
+        let g = global();
+        let x: Vec<f64> = (0..g.nrows).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut want = vec![0.0; g.nrows];
+        g.spmv(&x, &mut want);
+        let got = verify_overlapping_spmv(&g, 4, &x);
+        propcheck::assert_close(&got, &want, 1e-10, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn decomposition_scales_with_subdomain_count() {
+        let g = global();
+        for nsub in [2, 4, 8] {
+            let got = verify_overlapping_spmv(&g, nsub, &vec![1.0; g.nrows]);
+            let mut want = vec![0.0; g.nrows];
+            g.spmv(&vec![1.0; g.nrows], &mut want);
+            propcheck::assert_close(&got, &want, 1e-10, 1e-10).unwrap();
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Structured finite-element meshes.
+//!
+//! Minimal but real: nodes with coordinates and element connectivity,
+//! enough for the assembly in [`super::fem`] to produce the global-matrix
+//! patterns the paper's dataset exhibits (narrow band, nnz/row 2–130).
+
+/// A generic mesh: nodes + homogeneous elements of `nodes_per_elem` nodes.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    /// Node coordinates, `dim` values per node, row-major.
+    pub coords: Vec<f64>,
+    pub dim: usize,
+    /// Element connectivity, `nodes_per_elem` node ids per element.
+    pub elems: Vec<u32>,
+    pub nodes_per_elem: usize,
+}
+
+impl Mesh {
+    pub fn num_nodes(&self) -> usize {
+        self.coords.len() / self.dim
+    }
+
+    pub fn num_elems(&self) -> usize {
+        self.elems.len() / self.nodes_per_elem
+    }
+
+    pub fn elem(&self, e: usize) -> &[u32] {
+        &self.elems[e * self.nodes_per_elem..(e + 1) * self.nodes_per_elem]
+    }
+
+    pub fn node_coord(&self, v: usize) -> &[f64] {
+        &self.coords[v * self.dim..(v + 1) * self.dim]
+    }
+
+    /// Structural sanity for generated meshes.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.num_nodes();
+        if self.coords.len() % self.dim != 0 {
+            return Err("coords not a multiple of dim".into());
+        }
+        if self.elems.len() % self.nodes_per_elem != 0 {
+            return Err("elems not a multiple of nodes_per_elem".into());
+        }
+        for (k, &v) in self.elems.iter().enumerate() {
+            if v as usize >= n {
+                return Err(format!("elem slot {k} references node {v} >= {n}"));
+            }
+        }
+        for e in 0..self.num_elems() {
+            let el = self.elem(e);
+            let mut s = el.to_vec();
+            s.sort_unstable();
+            s.dedup();
+            if s.len() != el.len() {
+                return Err(format!("element {e} has repeated nodes: {el:?}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// 2-D structured grid on [0,1]²: (nx+1)×(ny+1) nodes.
+pub struct Mesh2d;
+
+impl Mesh2d {
+    /// Quadrilateral elements (4 nodes each).
+    pub fn quads(nx: usize, ny: usize) -> Mesh {
+        let (mx, my) = (nx + 1, ny + 1);
+        let mut coords = Vec::with_capacity(mx * my * 2);
+        for j in 0..my {
+            for i in 0..mx {
+                coords.push(i as f64 / nx as f64);
+                coords.push(j as f64 / ny as f64);
+            }
+        }
+        let id = |i: usize, j: usize| (j * mx + i) as u32;
+        let mut elems = Vec::with_capacity(nx * ny * 4);
+        for j in 0..ny {
+            for i in 0..nx {
+                elems.extend_from_slice(&[id(i, j), id(i + 1, j), id(i + 1, j + 1), id(i, j + 1)]);
+            }
+        }
+        Mesh { coords, dim: 2, elems, nodes_per_elem: 4 }
+    }
+
+    /// Triangles: each grid cell split along its diagonal (2 per cell).
+    pub fn triangles(nx: usize, ny: usize) -> Mesh {
+        let quad = Mesh2d::quads(nx, ny);
+        let mut elems = Vec::with_capacity(nx * ny * 6);
+        for e in 0..quad.num_elems() {
+            let q = quad.elem(e);
+            elems.extend_from_slice(&[q[0], q[1], q[2]]);
+            elems.extend_from_slice(&[q[0], q[2], q[3]]);
+        }
+        Mesh { coords: quad.coords, dim: 2, elems, nodes_per_elem: 3 }
+    }
+}
+
+/// 3-D structured hexahedral grid on [0,1]³.
+pub struct Mesh3d;
+
+impl Mesh3d {
+    pub fn hexes(nx: usize, ny: usize, nz: usize) -> Mesh {
+        let (mx, my, mz) = (nx + 1, ny + 1, nz + 1);
+        let mut coords = Vec::with_capacity(mx * my * mz * 3);
+        for k in 0..mz {
+            for j in 0..my {
+                for i in 0..mx {
+                    coords.push(i as f64 / nx as f64);
+                    coords.push(j as f64 / ny as f64);
+                    coords.push(k as f64 / nz as f64);
+                }
+            }
+        }
+        let id = |i: usize, j: usize, k: usize| (k * my * mx + j * mx + i) as u32;
+        let mut elems = Vec::with_capacity(nx * ny * nz * 8);
+        for k in 0..nz {
+            for j in 0..ny {
+                for i in 0..nx {
+                    elems.extend_from_slice(&[
+                        id(i, j, k),
+                        id(i + 1, j, k),
+                        id(i + 1, j + 1, k),
+                        id(i, j + 1, k),
+                        id(i, j, k + 1),
+                        id(i + 1, j, k + 1),
+                        id(i + 1, j + 1, k + 1),
+                        id(i, j + 1, k + 1),
+                    ]);
+                }
+            }
+        }
+        Mesh { coords, dim: 3, elems, nodes_per_elem: 8 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quad_mesh_counts() {
+        let m = Mesh2d::quads(3, 2);
+        assert_eq!(m.num_nodes(), 4 * 3);
+        assert_eq!(m.num_elems(), 6);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn tri_mesh_counts() {
+        let m = Mesh2d::triangles(3, 3);
+        assert_eq!(m.num_nodes(), 16);
+        assert_eq!(m.num_elems(), 18);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn hex_mesh_counts() {
+        let m = Mesh3d::hexes(2, 3, 4);
+        assert_eq!(m.num_nodes(), 3 * 4 * 5);
+        assert_eq!(m.num_elems(), 24);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn coords_in_unit_box() {
+        let m = Mesh3d::hexes(2, 2, 2);
+        assert!(m.coords.iter().all(|&c| (0.0..=1.0).contains(&c)));
+    }
+}

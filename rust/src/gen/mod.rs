@@ -1,0 +1,20 @@
+//! Workload generators — the substrate replacing the paper's matrix
+//! sources (Table 1: 50 UF-collection matrices, 9 in-house FEM matrices,
+//! one dense). See DESIGN.md §2 for the substitution argument.
+//!
+//! * [`mesh`] — structured 2-D (tri/quad) and 3-D (hex) meshes,
+//! * [`fem`] — global matrix assembly (Poisson stiffness and
+//!   convection-perturbed variants; 2-D/3-D elasticity with 2/3 dof per
+//!   node), producing exactly the structurally symmetric patterns the
+//!   paper targets,
+//! * [`decomp`] — subdomain-by-subdomain splitting: non-overlapping
+//!   (square local matrices, the `_n32` entries) and overlapping
+//!   (rectangular n×m locals, the `_o32` entries, §2.1).
+
+pub mod decomp;
+pub mod fem;
+pub mod mesh;
+
+pub use decomp::{nonoverlapping_local, overlapping_local};
+pub use fem::{elasticity_2d, poisson_2d_quad, poisson_2d_tri, poisson_3d_hex};
+pub use mesh::{Mesh, Mesh2d, Mesh3d};

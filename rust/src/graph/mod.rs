@@ -1,0 +1,10 @@
+//! Conflict graphs and coloring for the *colorful* parallelization (§3.2).
+
+pub mod coloring;
+pub mod conflict;
+
+pub use coloring::{greedy_coloring, stride_capped_coloring, ColorClasses, Ordering};
+pub use conflict::ConflictGraph;
+
+pub mod reorder;
+pub use reorder::{permute, reverse_cuthill_mckee};

@@ -1,0 +1,148 @@
+//! Bandwidth-reducing reordering — reverse Cuthill–McKee.
+//!
+//! The paper's §1 lists reordering among the classical sequential SpMV
+//! optimizations, and its §4.2 discussion ties performance to the band
+//! structure ("the running time is influenced by the working set size and
+//! the band structure"; cage15/F1 suffer from "the absence of a band
+//! structure"). RCM is the standard remedy: it also *shrinks the
+//! effective ranges* of the local-buffers method and the color count of
+//! the colorful method — measured in the `ablations` bench.
+
+use crate::sparse::{Coo, Csrc};
+
+/// Reverse Cuthill–McKee ordering of the symmetric pattern of `a`.
+/// Returns `perm` with `perm[new] = old`.
+pub fn reverse_cuthill_mckee(a: &Csrc) -> Vec<usize> {
+    let n = a.n;
+    // Build symmetric adjacency (both triangles).
+    let g = super::ConflictGraph::build(a);
+    let mut order = Vec::with_capacity(n);
+    let mut visited = vec![false; n];
+    let mut frontier = std::collections::VecDeque::new();
+    // Process every connected component; seed each from a minimum-degree
+    // peripheral-ish vertex.
+    loop {
+        let seed = match (0..n).filter(|&v| !visited[v]).min_by_key(|&v| g.direct_neighbors(v).len())
+        {
+            Some(s) => s,
+            None => break,
+        };
+        visited[seed] = true;
+        frontier.push_back(seed);
+        while let Some(v) = frontier.pop_front() {
+            order.push(v);
+            let mut nbrs: Vec<usize> = g
+                .direct_neighbors(v)
+                .iter()
+                .map(|&u| u as usize)
+                .filter(|&u| !visited[u])
+                .collect();
+            nbrs.sort_by_key(|&u| g.direct_neighbors(u).len());
+            for u in nbrs {
+                visited[u] = true;
+                frontier.push_back(u);
+            }
+        }
+    }
+    order.reverse(); // the "reverse" in RCM
+    order
+}
+
+/// Apply a permutation (`perm[new] = old`) symmetrically: B = P A Pᵀ.
+pub fn permute(a: &Csrc, perm: &[usize]) -> Csrc {
+    let n = a.n;
+    assert_eq!(perm.len(), n);
+    let mut inv = vec![0usize; n];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old] = new;
+    }
+    let csr = a.to_csr();
+    let mut coo = Coo::with_capacity(n, n, a.nnz());
+    for i in 0..n {
+        for k in csr.row_range(i) {
+            coo.push(inv[i], inv[csr.ja[k] as usize], csr.a[k]);
+        }
+    }
+    coo.compact();
+    Csrc::from_coo(&coo).expect("permutation preserves structural symmetry")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::LinOp;
+    use crate::util::{propcheck, Rng};
+
+    fn random(n: usize, npr: usize, seed: u64) -> Csrc {
+        let mut rng = Rng::new(seed);
+        Csrc::from_coo(&Coo::random_structurally_symmetric(n, npr, false, &mut rng)).unwrap()
+    }
+
+    #[test]
+    fn rcm_is_a_permutation() {
+        let a = random(80, 4, 1);
+        let p = reverse_cuthill_mckee(&a);
+        let mut s = p.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..80).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rcm_reduces_bandwidth_of_shuffled_band_matrix() {
+        // Start from a band matrix, shuffle it, RCM should mostly recover
+        // a small bandwidth.
+        let mut rng = Rng::new(2);
+        let band = Csrc::from_coo(&Coo::banded(200, 2, true, &mut rng)).unwrap();
+        let shuffle = rng.permutation(200);
+        let shuffled = permute(&band, &shuffle);
+        assert!(shuffled.half_bandwidth() > 20, "shuffle should destroy the band");
+        let rcm = reverse_cuthill_mckee(&shuffled);
+        let restored = permute(&shuffled, &rcm);
+        assert!(
+            restored.half_bandwidth() < shuffled.half_bandwidth() / 2,
+            "RCM {} vs shuffled {}",
+            restored.half_bandwidth(),
+            shuffled.half_bandwidth()
+        );
+    }
+
+    #[test]
+    fn permute_preserves_spectrum_action() {
+        // (P A Pᵀ)(P x) == P (A x).
+        let a = random(50, 3, 3);
+        let mut rng = Rng::new(4);
+        let perm = rng.permutation(50);
+        let b = permute(&a, &perm);
+        let x: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let mut ax = vec![0.0; 50];
+        a.apply(&x, &mut ax);
+        let mut inv = vec![0usize; 50];
+        for (new, &old) in perm.iter().enumerate() {
+            inv[old] = new;
+        }
+        let px: Vec<f64> = (0..50).map(|new| x[perm[new]]).collect();
+        let mut bpx = vec![0.0; 50];
+        b.apply(&px, &mut bpx);
+        for new in 0..50 {
+            assert!((bpx[new] - ax[perm[new]]).abs() < 1e-11, "row {new}");
+        }
+        let _ = inv;
+    }
+
+    #[test]
+    fn property_rcm_never_increases_bandwidth_much() {
+        propcheck::check(8, |rng| {
+            let n = 20 + rng.below(80);
+            let coo = Coo::banded(n, 1 + rng.below(3), false, rng);
+            let a = Csrc::from_coo(&coo).map_err(|e| e.to_string())?;
+            let p = reverse_cuthill_mckee(&a);
+            let b = permute(&a, &p);
+            // RCM on an already-banded matrix must stay within a small
+            // constant of the original bandwidth.
+            if b.half_bandwidth() > 4 * a.half_bandwidth().max(2) {
+                return Err(format!("{} -> {}", a.half_bandwidth(), b.half_bandwidth()));
+            }
+            Ok(())
+        });
+    }
+}

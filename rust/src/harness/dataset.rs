@@ -1,0 +1,246 @@
+//! The 60-matrix evaluation suite (Table 1 substitute).
+//!
+//! Table 1's matrices come from the UF collection plus the authors'
+//! in-house FEM models. We regenerate the same *spectrum* — n from ~1 K to
+//! ~1 M, nnz/row from 2 to 1000, working sets from well-in-cache to far
+//! out-of-cache, symmetric and structurally-symmetric-only, banded and
+//! irregular, plus the `_o32`/`_n32` domain-decomposition variants — from
+//! seeded generators. Real `.mtx` files can be dropped in via
+//! `sparse::mmio` and the CLI.
+//!
+//! Sizes are scaled (DESIGN.md §2): the largest paper matrices (cage15,
+//! audikw_1, cube2m) exceed this container's time budget at full size, so
+//! they appear at reduced n with the same structure class. ws classes
+//! relative to the simulated caches (6 MB / 8 MB) are preserved: the suite
+//! spans ~0.2 MB to ~80 MB.
+
+use crate::gen;
+use crate::sparse::{Coo, Csr, Csrc};
+use crate::util::Rng;
+
+/// How a dataset entry is produced.
+#[derive(Clone, Debug)]
+pub enum MatrixKind {
+    Dense { n: usize },
+    Banded { n: usize, hbw: usize, sym: bool },
+    RandomSym { n: usize, nnz_per_row: usize, sym: bool },
+    Poisson2dTri { nx: usize, convection: f64 },
+    Poisson2dQuad { nx: usize, convection: f64 },
+    Poisson3dHex { nx: usize, convection: f64 },
+    Elasticity2d { nx: usize },
+    /// Overlapping DD local (rectangular) of a Poisson3d global — only its
+    /// square part enters the square-matrix experiments.
+    OverlapLocal { nx: usize, nsub: usize, s: usize },
+    /// Non-overlapping DD local (square).
+    NonoverlapLocal { nx: usize, nsub: usize, s: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetEntry {
+    pub name: &'static str,
+    pub kind: MatrixKind,
+    /// Numerically symmetric (Table 1 "Sym." column).
+    pub sym: bool,
+    pub seed: u64,
+}
+
+impl DatasetEntry {
+    /// Materialize the COO (deterministic per seed).
+    pub fn build_coo(&self) -> Coo {
+        let mut rng = Rng::new(self.seed);
+        match self.kind {
+            MatrixKind::Dense { n } => Coo::dense_random(n, &mut rng),
+            MatrixKind::Banded { n, hbw, sym } => Coo::banded(n, hbw, sym, &mut rng),
+            MatrixKind::RandomSym { n, nnz_per_row, sym } => {
+                Coo::random_structurally_symmetric(n, nnz_per_row, sym, &mut rng)
+            }
+            MatrixKind::Poisson2dTri { nx, convection } => {
+                gen::poisson_2d_tri(nx, convection, self.seed)
+            }
+            MatrixKind::Poisson2dQuad { nx, convection } => {
+                gen::poisson_2d_quad(nx, convection, self.seed)
+            }
+            MatrixKind::Poisson3dHex { nx, convection } => {
+                gen::poisson_3d_hex(nx, convection, self.seed)
+            }
+            MatrixKind::Elasticity2d { nx } => gen::elasticity_2d(nx, self.seed),
+            MatrixKind::OverlapLocal { nx, nsub, s } => {
+                let g = Csr::from_coo(&gen::poisson_3d_hex(nx, 0.4, self.seed));
+                gen::overlapping_local(&g, nsub, s)
+            }
+            MatrixKind::NonoverlapLocal { nx, nsub, s } => {
+                let g = Csr::from_coo(&gen::poisson_3d_hex(nx, 0.0, self.seed));
+                gen::nonoverlapping_local(&g, nsub, s)
+            }
+        }
+    }
+
+    /// Materialize as CSRC (square part for the overlap rectangles).
+    pub fn build_csrc(&self) -> Csrc {
+        let coo = self.build_coo();
+        if coo.nrows == coo.ncols {
+            Csrc::from_coo(&coo).expect("dataset entries must be structurally symmetric")
+        } else {
+            crate::sparse::CsrcRect::from_coo(&coo)
+                .expect("overlap locals must have CSRC square parts")
+                .square
+        }
+    }
+}
+
+/// The full 60-entry suite mirroring Table 1's spectrum.
+pub fn full_suite() -> Vec<DatasetEntry> {
+    use MatrixKind::*;
+    let mut v = Vec::new();
+    let mut seed = 1000u64;
+    let mut push = |name: &'static str, kind: MatrixKind, sym: bool, v: &mut Vec<DatasetEntry>| {
+        seed += 1;
+        v.push(DatasetEntry { name, kind, sym, seed });
+    };
+    // --- small, in-cache (the paper's thermal .. k3plates region).
+    push("thermal", Poisson2dQuad { nx: 58, convection: 0.3 }, false, &mut v);
+    push("ex37", Poisson2dQuad { nx: 59, convection: 0.4 }, false, &mut v);
+    push("flowmeter5", RandomSym { n: 9669, nnz_per_row: 3, sym: false }, false, &mut v);
+    push("piston", RandomSym { n: 2025, nnz_per_row: 24, sym: false }, false, &mut v);
+    push("SiNa", RandomSym { n: 5743, nnz_per_row: 8, sym: true }, true, &mut v);
+    push("benzene", RandomSym { n: 8219, nnz_per_row: 7, sym: true }, true, &mut v);
+    push("cage10", RandomSym { n: 11397, nnz_per_row: 6, sym: false }, false, &mut v);
+    push("spmsrtls", Banded { n: 29995, hbw: 2, sym: true }, true, &mut v);
+    push("torsion1", Banded { n: 40000, hbw: 1, sym: true }, true, &mut v);
+    push("minsurfo", Banded { n: 40806, hbw: 1, sym: true }, true, &mut v);
+    push("wang4", Poisson3dHex { nx: 29, convection: 0.5 }, false, &mut v);
+    push("chem_master1", Banded { n: 40401, hbw: 2, sym: false }, false, &mut v);
+    push("dixmaanl", Banded { n: 60000, hbw: 1, sym: true }, true, &mut v);
+    push("chipcool1", Poisson2dTri { nx: 140, convection: 0.4 }, false, &mut v);
+    push("t3dl", RandomSym { n: 20360, nnz_per_row: 6, sym: true }, true, &mut v);
+    push("poisson3Da", Poisson3dHex { nx: 23, convection: 0.3 }, false, &mut v);
+    push("k3plates", RandomSym { n: 11107, nnz_per_row: 17, sym: false }, false, &mut v);
+    push("gridgena", Poisson2dQuad { nx: 220, convection: 0.0 }, true, &mut v);
+    push("cbuckle", RandomSym { n: 13681, nnz_per_row: 12, sym: true }, true, &mut v);
+    push("bcircuit", Banded { n: 68902, hbw: 2, sym: false }, false, &mut v);
+    // --- the in-house FEM groups with DD variants (§4: angical, tracer,
+    //     cube2m; "_o32"/"_n32" = overlapping / non-overlapping locals).
+    push("angical_n32", NonoverlapLocal { nx: 40, nsub: 3, s: 1 }, true, &mut v);
+    push("angical_o32", OverlapLocal { nx: 40, nsub: 3, s: 1 }, false, &mut v);
+    push("tracer_n32", NonoverlapLocal { nx: 46, nsub: 3, s: 1 }, true, &mut v);
+    push("tracer_o32", OverlapLocal { nx: 46, nsub: 3, s: 1 }, false, &mut v);
+    push("crystk02", RandomSym { n: 13965, nnz_per_row: 17, sym: true }, true, &mut v);
+    push("olafu", RandomSym { n: 16146, nnz_per_row: 15, sym: true }, true, &mut v);
+    push("gyro", RandomSym { n: 17361, nnz_per_row: 14, sym: true }, true, &mut v);
+    push("dawson5", RandomSym { n: 51537, nnz_per_row: 5, sym: true }, true, &mut v);
+    push("ASIC_100ks", RandomSym { n: 99190, nnz_per_row: 2, sym: false }, false, &mut v);
+    push("bcsstk35", RandomSym { n: 30237, nnz_per_row: 12, sym: true }, true, &mut v);
+    // --- medium, near the cache boundary.
+    push("dense_1000", Dense { n: 768 }, false, &mut v);
+    push("sparsine", RandomSym { n: 50000, nnz_per_row: 7, sym: true }, true, &mut v);
+    push("crystk03", RandomSym { n: 24696, nnz_per_row: 17, sym: true }, true, &mut v);
+    push("ex11", RandomSym { n: 16614, nnz_per_row: 33, sym: false }, false, &mut v);
+    push("2cubes_sphere", Poisson3dHex { nx: 46, convection: 0.0 }, true, &mut v);
+    push("xenon1", RandomSym { n: 48600, nnz_per_row: 12, sym: false }, false, &mut v);
+    push("raefsky3", RandomSym { n: 21200, nnz_per_row: 35, sym: false }, false, &mut v);
+    push("cube2m_o32", OverlapLocal { nx: 57, nsub: 3, s: 1 }, false, &mut v);
+    push("nasasrb", RandomSym { n: 54870, nnz_per_row: 12, sym: true }, true, &mut v);
+    push("cube2m_n32", NonoverlapLocal { nx: 57, nsub: 3, s: 1 }, false, &mut v);
+    push("venkat01", RandomSym { n: 62424, nnz_per_row: 13, sym: false }, false, &mut v);
+    push("filter3D", RandomSym { n: 106437, nnz_per_row: 6, sym: true }, true, &mut v);
+    push("appu", RandomSym { n: 14000, nnz_per_row: 66, sym: false }, false, &mut v);
+    push("poisson3Db", Poisson3dHex { nx: 44, convection: 0.3 }, false, &mut v);
+    push("thermomech_dK", RandomSym { n: 204316, nnz_per_row: 6, sym: false }, false, &mut v);
+    push("Ga3As3H12", RandomSym { n: 61349, nnz_per_row: 24, sym: true }, true, &mut v);
+    push("xenon2", RandomSym { n: 157464, nnz_per_row: 12, sym: false }, false, &mut v);
+    push("tmt_sym", Banded { n: 320000, hbw: 1, sym: true }, true, &mut v);
+    push("CO", RandomSym { n: 221119, nnz_per_row: 8, sym: true }, true, &mut v);
+    push("tmt_unsym", Banded { n: 400000, hbw: 2, sym: false }, false, &mut v);
+    // --- large, out-of-cache (scaled from the paper's giants).
+    push("crankseg_1", RandomSym { n: 52804, nnz_per_row: 50, sym: true }, true, &mut v);
+    push("SiO2", RandomSym { n: 155331, nnz_per_row: 18, sym: true }, true, &mut v);
+    push("bmw3_2", RandomSym { n: 227362, nnz_per_row: 12, sym: true }, true, &mut v);
+    push("af_0_k101", Poisson3dHex { nx: 63, convection: 0.0 }, true, &mut v);
+    push("angical", Poisson3dHex { nx: 60, convection: 0.0 }, true, &mut v);
+    push("F1", RandomSym { n: 343791, nnz_per_row: 19, sym: true }, true, &mut v);
+    push("tracer", Poisson2dTri { nx: 700, convection: 0.0 }, true, &mut v);
+    push("audikw_1", Elasticity2d { nx: 280 }, true, &mut v);
+    push("cube2m", Poisson3dHex { nx: 70, convection: 0.4 }, false, &mut v);
+    push("cage15", RandomSym { n: 515485, nnz_per_row: 9, sym: false }, false, &mut v);
+    v
+}
+
+/// A curated subset that spans the ws spectrum quickly (default for the
+/// figure harness and the benches; `--full` runs all 60).
+pub fn quick_suite() -> Vec<DatasetEntry> {
+    let pick = [
+        "thermal", "piston", "torsion1", "minsurfo", "dixmaanl", "cage10",
+        "angical_n32", "angical_o32", "dense_1000", "poisson3Da",
+        "2cubes_sphere", "raefsky3", "venkat01", "appu", "tmt_sym",
+        "crankseg_1", "SiO2", "cage15",
+    ];
+    full_suite().into_iter().filter(|e| pick.contains(&e.name)).collect()
+}
+
+/// A tiny subset for CI-speed smoke runs.
+pub fn smoke_suite() -> Vec<DatasetEntry> {
+    let pick = ["thermal", "torsion1", "dense_1000", "poisson3Da", "angical_o32"];
+    full_suite().into_iter().filter(|e| pick.contains(&e.name)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_60_unique_entries() {
+        let s = full_suite();
+        assert_eq!(s.len(), 60);
+        let mut names: Vec<&str> = s.iter().map(|e| e.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 60, "duplicate names");
+    }
+
+    #[test]
+    fn quick_suite_is_nonempty_subset() {
+        let q = quick_suite();
+        assert!(q.len() >= 12);
+        assert!(q.len() < 60);
+    }
+
+    #[test]
+    fn small_entries_build_as_csrc() {
+        for e in smoke_suite() {
+            let m = e.build_csrc();
+            assert!(m.n > 0, "{}", e.name);
+            if e.sym {
+                assert!(m.numeric_symmetric, "{} should be numerically symmetric", e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_entry_is_rectangular() {
+        let e = full_suite().into_iter().find(|e| e.name == "angical_o32").unwrap();
+        let coo = e.build_coo();
+        assert!(coo.ncols > coo.nrows, "{}x{}", coo.nrows, coo.ncols);
+    }
+
+    #[test]
+    fn deterministic_rebuild() {
+        let e = full_suite().into_iter().find(|e| e.name == "piston").unwrap();
+        let a = e.build_coo();
+        let b = e.build_coo();
+        assert_eq!(a.vals, b.vals);
+    }
+
+    #[test]
+    fn ws_spectrum_spans_cache_sizes() {
+        // At least one entry well under 6MB and one well over 8MB.
+        let mut under = false;
+        let mut over = false;
+        for e in quick_suite() {
+            let m = e.build_csrc();
+            let ws = m.working_set_bytes();
+            under |= ws < 2 << 20;
+            over |= ws > 16 << 20;
+        }
+        assert!(under && over, "suite does not span the cache boundary");
+    }
+}

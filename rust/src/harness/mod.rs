@@ -1,0 +1,11 @@
+//! Experiment harness: the 60-matrix dataset (Table 1 substitute) and one
+//! regeneration routine per paper table/figure. The CLI (`csrc figures`)
+//! and the criterion-style benches call into this module; results land in
+//! `results/*.{md,csv}` and are summarized in EXPERIMENTS.md.
+
+pub mod dataset;
+pub mod figures;
+pub mod report;
+
+pub use dataset::{full_suite, quick_suite, smoke_suite, DatasetEntry, MatrixKind};
+pub use report::Report;

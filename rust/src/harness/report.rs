@@ -1,0 +1,89 @@
+//! Report writer: every figure/table harness emits a markdown table (for
+//! EXPERIMENTS.md) and a CSV (for plotting) under `results/`.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub struct Report {
+    dir: Option<PathBuf>,
+    pub echo: bool,
+}
+
+impl Report {
+    /// Write files under `dir` (created if needed); `None` = stdout only.
+    pub fn new(dir: Option<&Path>) -> std::io::Result<Report> {
+        if let Some(d) = dir {
+            std::fs::create_dir_all(d)?;
+        }
+        Ok(Report { dir: dir.map(|d| d.to_path_buf()), echo: true })
+    }
+
+    pub fn table(
+        &self,
+        name: &str,
+        title: &str,
+        headers: &[&str],
+        rows: &[Vec<String>],
+    ) -> std::io::Result<()> {
+        let md = render_markdown(title, headers, rows);
+        if self.echo {
+            println!("{md}");
+        }
+        if let Some(dir) = &self.dir {
+            std::fs::write(dir.join(format!("{name}.md")), &md)?;
+            let mut csv = std::fs::File::create(dir.join(format!("{name}.csv")))?;
+            writeln!(csv, "{}", headers.join(","))?;
+            for row in rows {
+                writeln!(csv, "{}", row.join(","))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+pub fn render_markdown(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = format!("## {title}\n\n");
+    s.push_str(&format!("| {} |\n", headers.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(headers.len())));
+    for row in rows {
+        s.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    s
+}
+
+/// Format helpers shared by the figure harnesses.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let md = render_markdown("T", &["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("## T"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("csrc_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = Report::new(Some(&dir)).unwrap();
+        r.table("t1", "Title", &["x"], &[vec!["7".into()]]).unwrap();
+        assert!(dir.join("t1.md").exists());
+        let csv = std::fs::read_to_string(dir.join("t1.csv")).unwrap();
+        assert_eq!(csv, "x\n7\n");
+    }
+}

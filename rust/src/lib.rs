@@ -1,0 +1,46 @@
+//! # csrc-spmv
+//!
+//! Production-quality reproduction of *“Parallel structurally-symmetric
+//! sparse matrix-vector products on multi-core processors”* (Batista,
+//! Ainsworth Jr., Ribeiro, 2010) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the CSRC storage format, the two parallel
+//!   SpMV strategies (local buffers ×4 accumulation schemes, colorful),
+//!   every substrate the evaluation needs (FEM generators, a multi-core
+//!   machine simulator, iterative solvers, a matvec service coordinator)
+//!   and the harness that regenerates each of the paper's tables/figures.
+//! * **L2/L1 (python/, build-time only)** — the JAX model graphs and the
+//!   Pallas CSRC-ELL kernel, AOT-lowered to HLO text artifacts executed
+//!   from [`runtime`] via PJRT. Python is never on the request path.
+//!
+//! Quick start (`no_run` only because doctest binaries don't get the
+//! xla_extension rpath; `cargo run --example quickstart` runs the same):
+//!
+//! ```no_run
+//! use csrc_spmv::sparse::{Coo, Csrc};
+//! use csrc_spmv::util::Rng;
+//!
+//! let mut rng = Rng::new(1);
+//! let coo = Coo::random_structurally_symmetric(100, 4, false, &mut rng);
+//! let a = Csrc::from_coo(&coo).unwrap();
+//! let x = vec![1.0; 100];
+//! let mut y = vec![0.0; 100];
+//! a.spmv_into_zeroed(&x, &mut y);   // sequential, Fig. 2(a)
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod gen;
+pub mod graph;
+pub mod harness;
+pub mod metrics;
+pub mod parallel;
+pub mod partition;
+pub mod runtime;
+pub mod simulator;
+pub mod solver;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,374 @@
+//! `csrc` — the command-line front end.
+//!
+//! Subcommands:
+//!
+//! * `info    --matrix <name|file.mtx>`              — format statistics
+//! * `gen     --kind poisson3d --nx 40 --out a.mtx`  — generate a matrix
+//! * `spmv    --matrix <..> --engine effective --threads 4 --products 100`
+//! * `solve   --matrix <..> --solver cg|gmres|bicg`
+//! * `serve   --requests 64`                         — coordinator demo
+//! * `xla     --artifacts artifacts`                 — run the AOT path
+//! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|all>`
+//!            `[--suite quick|full|smoke] [--out results]`
+
+use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
+use csrc_spmv::gen;
+use csrc_spmv::harness::{self, figures, Report};
+use csrc_spmv::metrics;
+use csrc_spmv::parallel::{build_engine, EngineKind};
+use csrc_spmv::runtime::XlaRuntime;
+use csrc_spmv::simulator::MachineConfig;
+use csrc_spmv::solver;
+use csrc_spmv::sparse::{mmio, Coo, Csrc, LinOp};
+use csrc_spmv::util::cli::Args;
+use csrc_spmv::util::Rng;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage_and_exit();
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "gen" => cmd_gen(&args),
+        "spmv" => cmd_spmv(&args),
+        "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
+        "xla" => cmd_xla(&args),
+        "figures" => cmd_figures(&args),
+        "help" | "--help" | "-h" => {
+            usage_and_exit();
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand {other:?} (try `csrc help`)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage_and_exit() -> ! {
+    eprintln!(
+        "csrc — parallel structurally-symmetric SpMV (CSRC), Batista et al. 2010 reproduction\n\
+         \n\
+         usage: csrc <info|gen|spmv|solve|serve|xla|figures> [options]\n\
+         \n\
+         csrc info    --matrix <dataset-name|file.mtx>\n\
+         csrc gen     --kind <poisson2d|poisson3d|elasticity|band|random|dense> --nx N --out a.mtx\n\
+         csrc spmv    --matrix <..> --engine <seq|all-in-one|per-buffer|effective|interval|colorful|atomic>\n\
+                      --threads P --products K\n\
+         csrc solve   --matrix <..> --solver <cg|gmres|bicg> [--tol 1e-10]\n\
+         csrc serve   [--requests N] [--workers W]\n\
+         csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|all>\n\
+                      [--suite smoke|quick|full] [--out results]"
+    );
+    std::process::exit(2);
+}
+
+/// Resolve `--matrix`: a dataset entry name or an .mtx path.
+fn load_matrix(args: &Args) -> anyhow::Result<(String, Csrc)> {
+    let spec = args
+        .opt("matrix")
+        .ok_or_else(|| anyhow::anyhow!("--matrix <dataset-name|file.mtx> required"))?;
+    if spec.ends_with(".mtx") {
+        let coo = mmio::read_matrix_market(Path::new(spec))?;
+        let m = Csrc::from_coo(&coo).map_err(|e| anyhow::anyhow!("{e}"))?;
+        return Ok((spec.to_string(), m));
+    }
+    let entry = harness::full_suite()
+        .into_iter()
+        .find(|e| e.name == spec)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset matrix {spec:?} (see `csrc figures table1`)"))?;
+    Ok((spec.to_string(), entry.build_csrc()))
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let (name, m) = load_matrix(args)?;
+    println!("matrix        : {name}");
+    println!("n             : {}", m.n);
+    println!("nnz           : {}", m.nnz());
+    println!("nnz/n         : {:.1}", m.nnz() as f64 / m.n as f64);
+    println!("k (pairs)     : {}", m.k());
+    println!("numeric sym   : {}", m.numeric_symmetric);
+    println!("half-bandwidth: {}", m.half_bandwidth());
+    println!("max row width : {}", m.max_row_width());
+    println!("working set   : {} KB", m.working_set_bytes() / 1024);
+    println!("flops/product : {}", m.flops());
+    println!(
+        "loads/product : {}  (load:flop {:.3})",
+        m.loads(),
+        m.loads() as f64 / m.flops() as f64
+    );
+    let g = csrc_spmv::graph::ConflictGraph::build(&m);
+    println!("conflicts     : {} direct, {} indirect", g.direct_edges(), g.indirect_edges());
+    let colors = csrc_spmv::graph::greedy_coloring(&g, csrc_spmv::graph::Ordering::Natural);
+    println!("colors        : {}", colors.num_colors());
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let kind = args.opt_or("kind", "poisson2d");
+    let nx = args.usize_or("nx", 40);
+    let n = args.usize_or("n", 10000);
+    let seed = args.usize_or("seed", 1) as u64;
+    let conv = args.f64_or("convection", 0.0);
+    let out = args.opt_or("out", "matrix.mtx");
+    let coo = match kind {
+        "poisson2d" => gen::poisson_2d_quad(nx, conv, seed),
+        "poisson2d-tri" => gen::poisson_2d_tri(nx, conv, seed),
+        "poisson3d" => gen::poisson_3d_hex(nx, conv, seed),
+        "elasticity" => gen::elasticity_2d(nx, seed),
+        "band" => {
+            let mut rng = Rng::new(seed);
+            Coo::banded(n, args.usize_or("hbw", 2), !args.has_flag("nonsym"), &mut rng)
+        }
+        "random" => {
+            let mut rng = Rng::new(seed);
+            Coo::random_structurally_symmetric(
+                n,
+                args.usize_or("nnz-per-row", 5),
+                !args.has_flag("nonsym"),
+                &mut rng,
+            )
+        }
+        "dense" => {
+            let mut rng = Rng::new(seed);
+            Coo::dense_random(n.min(2048), &mut rng)
+        }
+        other => anyhow::bail!("unknown kind {other:?}"),
+    };
+    mmio::write_matrix_market(Path::new(out), &coo, &format!("csrc gen --kind {kind}"))?;
+    println!("wrote {out}: {}x{}, {} nnz", coo.nrows, coo.ncols, coo.nnz());
+    Ok(())
+}
+
+fn cmd_spmv(args: &Args) -> anyhow::Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let kind = EngineKind::parse(args.opt_or("engine", "effective"))
+        .ok_or_else(|| anyhow::anyhow!("bad --engine"))?;
+    let threads = args.usize_or("threads", 2);
+    let products = args.usize_or("products", figures::products_for(m.nnz()));
+    let n = m.n;
+    let a = Arc::new(m);
+    let mut engine = build_engine(kind, a.clone(), threads);
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+    let mut y = vec![0.0; n];
+    let per = metrics::median_of_runs(3, products, || engine.spmv(&x, &mut y));
+    println!(
+        "{name}: engine={} threads={threads} products={products} -> {:.3} ms/product, {:.1} Mflop/s",
+        engine.name(),
+        per * 1e3,
+        metrics::mflops(a.flops(), per)
+    );
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let tol = args.f64_or("tol", 1e-10);
+    let which = args.opt_or("solver", "cg");
+    let n = m.n;
+    let mut rng = Rng::new(7);
+    let xstar: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut b = vec![0.0; n];
+    m.apply(&xstar, &mut b);
+    let t = std::time::Instant::now();
+    let (its, res, ok) = match which {
+        "cg" => {
+            let r = solver::cg(&m, &b, None, tol, 10 * n);
+            (r.iterations, r.residual, r.converged)
+        }
+        "gmres" => {
+            let r = solver::gmres(&m, &b, 50, tol, 200);
+            (r.iterations, r.residual, r.converged)
+        }
+        "bicg" => {
+            let r = solver::bicg(&m, &b, tol, 10 * n);
+            (r.iterations, r.residual, r.converged)
+        }
+        other => anyhow::bail!("unknown solver {other:?}"),
+    };
+    println!(
+        "{name}: {which} {} in {} iterations, residual {res:.3e}, {:.2}s",
+        if ok { "converged" } else { "did NOT converge" },
+        its,
+        t.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let requests = args.usize_or("requests", 64);
+    let cfg = ServiceConfig { workers: args.usize_or("workers", 2), ..Default::default() };
+    let svc = MatvecService::start(cfg);
+    // Register a few dataset matrices once, remembering their sizes.
+    let names = ["thermal", "torsion1", "poisson3Da"];
+    let mut sizes = std::collections::HashMap::new();
+    for name in names {
+        let e = harness::full_suite().into_iter().find(|e| e.name == name).unwrap();
+        let m = Arc::new(e.build_csrc());
+        sizes.insert(name, m.n);
+        svc.register(name, m);
+    }
+    let mut rng = Rng::new(11);
+    let mut handles = Vec::new();
+    let t = std::time::Instant::now();
+    for i in 0..requests {
+        let key = names[i % names.len()];
+        let n = sizes[key];
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        handles.push(svc.submit(key, x));
+    }
+    let mut ok = 0;
+    for h in handles {
+        if h.recv().map(|r| r.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    let s = svc.stats();
+    println!(
+        "served {ok}/{requests} in {:.3}s ({:.0} req/s); batches={} mean_latency={:.0}us p99={:.0}us",
+        dt,
+        requests as f64 / dt,
+        s.batches,
+        s.mean_latency_us,
+        s.p99_latency_us
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_xla(args: &Args) -> anyhow::Result<()> {
+    let dir = args.opt_or("artifacts", "artifacts");
+    let name = args.opt_or("name", "spmv_n256_w8");
+    let mut rt = XlaRuntime::open(Path::new(dir))?;
+    println!("platform: {}", rt.platform());
+    let entry = rt
+        .manifest
+        .find(name)
+        .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not found"))?
+        .clone();
+    println!("artifact {} (n={}, w={})", entry.name, entry.n, entry.w);
+    // Build a matching matrix, run both paths, cross-check.
+    let mut rng = Rng::new(3);
+    let coo =
+        Coo::random_structurally_symmetric(entry.n * 3 / 4, 4.min(entry.w), false, &mut rng);
+    let m = Csrc::from_coo(&coo).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let ell = m
+        .to_ell(entry.n, entry.w)
+        .ok_or_else(|| anyhow::anyhow!("matrix does not fit artifact shape"))?;
+    let x64: Vec<f64> = (0..entry.n).map(|i| if i < m.n { rng.normal() } else { 0.0 }).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let t = std::time::Instant::now();
+    let got = rt.spmv(name, &ell, &x32)?;
+    let xla_time = t.elapsed().as_secs_f64();
+    let mut want = vec![0.0; m.n];
+    m.spmv_into_zeroed(&x64[..m.n], &mut want);
+    let max_err = (0..m.n)
+        .map(|i| (got[i] as f64 - want[i]).abs() / (1.0 + want[i].abs()))
+        .fold(0.0, f64::max);
+    println!("xla spmv: {:.3} ms (incl. first-call compile), max rel err vs native = {max_err:.2e}", xla_time * 1e3);
+    anyhow::ensure!(max_err < 1e-3, "XLA/native mismatch");
+    println!("cross-check OK");
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let suite = match args.opt_or("suite", "quick") {
+        "smoke" => harness::smoke_suite(),
+        "full" => harness::full_suite(),
+        _ => harness::quick_suite(),
+    };
+    let out = args.opt_or("out", "results");
+    let report = Report::new(Some(Path::new(out)))?;
+    let run_all = what == "all";
+    if run_all || what == "table1" {
+        // Table 1 always lists the complete 60-entry dataset.
+        report.table(
+            "table1",
+            "Table 1 — dataset",
+            &["matrix", "sym", "n", "nnz", "nnz/n", "ws (KB)"],
+            &figures::table1(&harness::full_suite()),
+        )?;
+    }
+    if run_all || what == "fig4" {
+        report.table(
+            "fig4",
+            "Fig. 4 — % L2 / TLB misses, CSRC vs CSR (Wolfdale model)",
+            &["matrix", "csrc L2 miss%", "csr L2 miss%", "csrc TLB miss%", "csr TLB miss%"],
+            &figures::fig4(&suite),
+        )?;
+    }
+    if run_all || what == "fig5" {
+        report.table(
+            "fig5",
+            "Fig. 5 — sequential Mflop/s, CSRC vs CSR (measured on this host)",
+            &["matrix", "csrc Mflop/s", "csr Mflop/s", "csrc/csr time ratio"],
+            &figures::fig5(&suite),
+        )?;
+    }
+    if run_all || what == "fig6" {
+        report.table(
+            "fig6",
+            "Fig. 6 — colorful vs best local-buffers (simulated speedups)",
+            &[
+                "matrix",
+                "colorful wolf(2t)",
+                "best-lb wolf(2t)",
+                "colorful bloom(4t)",
+                "best-lb bloom(4t)",
+                "winner",
+            ],
+            &figures::fig6(&suite),
+        )?;
+    }
+    if run_all || what == "fig7" {
+        report.table(
+            "fig7",
+            "Fig. 7 — colorful speedups",
+            &["matrix", "colors", "wolfdale 2t", "bloomfield 2t", "bloomfield 4t"],
+            &figures::fig7(&suite),
+        )?;
+    }
+    if run_all || what == "fig8" {
+        let cfg = MachineConfig::wolfdale();
+        let headers = figures::fig89_headers(&cfg);
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "fig8",
+            "Fig. 8 — local-buffers speedups (Wolfdale model)",
+            &h,
+            &figures::fig89(&suite, &cfg),
+        )?;
+    }
+    if run_all || what == "fig9" {
+        let cfg = MachineConfig::bloomfield();
+        let headers = figures::fig89_headers(&cfg);
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "fig9",
+            "Fig. 9 — local-buffers speedups (Bloomfield model)",
+            &h,
+            &figures::fig89(&suite, &cfg),
+        )?;
+    }
+    if run_all || what == "table2" {
+        let headers = figures::table2_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "table2",
+            "Table 2 — avg max per-thread init+accumulation overhead",
+            &h,
+            &figures::table2(&suite),
+        )?;
+    }
+    println!("wrote results under {out}/");
+    Ok(())
+}

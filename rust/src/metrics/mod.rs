@@ -1,0 +1,122 @@
+//! Measurement helpers: Mflop/s accounting (§4.1 flop formulas), the
+//! paper's median-of-three protocol, and a tiny latency histogram used by
+//! the coordinator.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Mflop/s given a flop count and elapsed seconds.
+pub fn mflops(flops: usize, seconds: f64) -> f64 {
+    flops as f64 / seconds.max(1e-12) / 1e6
+}
+
+/// The paper's protocol: run `products` SpMVs per measurement, repeat
+/// `runs` times, report the median (§4: 1000 products, median of 3).
+pub fn median_of_runs<F: FnMut()>(runs: usize, products: usize, mut one_product: F) -> f64 {
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t = Instant::now();
+        for _ in 0..products {
+            one_product();
+        }
+        samples.push(t.elapsed().as_secs_f64() / products as f64);
+    }
+    stats::median(&samples)
+}
+
+/// Fixed-bucket latency histogram (power-of-two microsecond buckets).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// counts[i] = latencies in [2^i, 2^{i+1}) microseconds.
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; 32], total: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let us = seconds * 1e6;
+        let bucket = (us.max(1.0).log2() as usize).min(self.counts.len() - 1);
+        self.counts[bucket] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Upper bound of the bucket containing quantile q (approximate).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let want = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= want {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        self.max_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mflops_basic() {
+        assert_eq!(mflops(2_000_000, 1.0), 2.0);
+        assert!(mflops(1, 0.0).is_finite());
+    }
+
+    #[test]
+    fn median_of_runs_measures() {
+        let mut calls = 0usize;
+        let per = median_of_runs(3, 10, || {
+            calls += 1;
+            std::hint::black_box(calls);
+        });
+        assert_eq!(calls, 30);
+        assert!(per >= 0.0 && per < 0.1);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-6);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert!(h.max_us() >= 999.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Atomics baseline (§3 intro): the paper notes that atomic primitives /
+//! locks cost too much relative to the fine-grained y accesses. We keep a
+//! CAS-loop f64 atomic-add engine as the ablation that quantifies that
+//! claim (bench `ablations`).
+
+use super::pool::ThreadPool;
+use super::ParallelSpmv;
+use crate::partition::{self, RowPartition};
+use crate::sparse::Csrc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub struct AtomicEngine {
+    a: Arc<Csrc>,
+    pool: ThreadPool,
+    part: RowPartition,
+    /// f64 bits behind AtomicU64 — lives across calls to avoid realloc.
+    bits: Vec<AtomicU64>,
+}
+
+#[inline]
+fn atomic_add(slot: &AtomicU64, v: f64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + v).to_bits();
+        match slot.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+impl AtomicEngine {
+    pub fn new(a: Arc<Csrc>, p: usize) -> Self {
+        let part = partition::nnz_balanced(&a, p);
+        let bits = (0..a.n).map(|_| AtomicU64::new(0)).collect();
+        AtomicEngine { a, pool: ThreadPool::new(p), part, bits }
+    }
+}
+
+impl ParallelSpmv for AtomicEngine {
+    fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
+        let n = self.a.n;
+        let p = self.pool.nthreads();
+        if p == 1 {
+            self.a.spmv_into_zeroed(x, y);
+            return;
+        }
+        let a = &self.a;
+        let part = &self.part;
+        let bits = &self.bits;
+        let barrier = self.pool.barrier();
+        self.pool.run(move |t| {
+            let (lo, hi) = (t * n / p, (t + 1) * n / p);
+            for slot in &bits[lo..hi] {
+                slot.store(0, Ordering::Relaxed);
+            }
+            barrier.wait();
+            let block = part.block(t);
+            for i in block {
+                let xi = x[i];
+                let mut acc = a.ad[i] * xi;
+                for k in a.row_range(i) {
+                    let j = a.ja[k] as usize;
+                    acc += a.al[k] * x[j];
+                    atomic_add(&bits[j], a.au[k] * xi);
+                }
+                atomic_add(&bits[i], acc);
+            }
+        });
+        for (dst, slot) in y.iter_mut().zip(&self.bits) {
+            *dst = f64::from_bits(slot.load(Ordering::Relaxed));
+        }
+    }
+
+    fn name(&self) -> String {
+        "atomic".into()
+    }
+
+    fn nthreads(&self) -> usize {
+        self.pool.nthreads()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::{propcheck, Rng};
+
+    #[test]
+    fn atomic_add_accumulates_exactly() {
+        let slot = AtomicU64::new(0);
+        for _ in 0..100 {
+            atomic_add(&slot, 0.5);
+        }
+        assert_eq!(f64::from_bits(slot.load(Ordering::Relaxed)), 50.0);
+    }
+
+    #[test]
+    fn matches_sequential() {
+        propcheck::check(6, |rng| {
+            let n = 20 + rng.below(80);
+            let coo = Coo::random_structurally_symmetric(n, 1 + rng.below(5), false, rng);
+            let a = Arc::new(Csrc::from_coo(&coo).map_err(|e| e.to_string())?);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = vec![0.0; n];
+            a.spmv_into_zeroed(&x, &mut want);
+            let mut e = AtomicEngine::new(a, 2 + rng.below(3));
+            let mut y = vec![0.0; n];
+            e.spmv(&x, &mut y);
+            // Atomic adds reorder; f64 addition is not associative.
+            propcheck::assert_close(&y, &want, 1e-9, 1e-9)
+        });
+    }
+}

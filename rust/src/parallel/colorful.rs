@@ -1,0 +1,219 @@
+//! Colorful strategy (§3.2): rows are grouped into conflict-free color
+//! classes (no direct or indirect conflicts inside a class), so inside a
+//! class every thread may write y directly — no buffers, no atomics.
+//! Classes run one after another with a team barrier in between; rows of
+//! a class are split nnz-balanced among threads.
+
+use super::pool::ThreadPool;
+use super::share::SyncSlice;
+use super::ParallelSpmv;
+use crate::graph::{greedy_coloring, ColorClasses, ConflictGraph, Ordering as ColorOrdering};
+use crate::sparse::Csrc;
+use std::sync::Arc;
+
+pub struct ColorfulEngine {
+    a: Arc<Csrc>,
+    pool: ThreadPool,
+    colors: ColorClasses,
+    /// Per color, per thread: the slice [lo, hi) of the class row list the
+    /// thread processes (nnz-balanced inside the class).
+    shares: Vec<Vec<(usize, usize)>>,
+}
+
+impl ColorfulEngine {
+    pub fn new(a: Arc<Csrc>, p: usize) -> Self {
+        let g = ConflictGraph::build(&a);
+        let colors = greedy_coloring(&g, ColorOrdering::Natural);
+        Self::with_coloring(a, p, colors)
+    }
+
+    /// Build with a caller-provided coloring (used by the stride-capped
+    /// ablation and by tests).
+    pub fn with_coloring(a: Arc<Csrc>, p: usize, colors: ColorClasses) -> Self {
+        let shares = colors
+            .classes
+            .iter()
+            .map(|class| split_class_by_nnz(&a, class, p))
+            .collect();
+        ColorfulEngine { a, pool: ThreadPool::new(p), colors, shares }
+    }
+
+    pub fn num_colors(&self) -> usize {
+        self.colors.num_colors()
+    }
+
+    pub fn coloring(&self) -> &ColorClasses {
+        &self.colors
+    }
+}
+
+/// Split a class's row list into p contiguous chunks balanced by the
+/// per-row CSRC work (1 + 2·row_len).
+fn split_class_by_nnz(a: &Csrc, class: &[u32], p: usize) -> Vec<(usize, usize)> {
+    let work: Vec<usize> = class.iter().map(|&i| 1 + 2 * a.row_range(i as usize).len()).collect();
+    let total: usize = work.iter().sum();
+    let mut out = Vec::with_capacity(p);
+    let mut pos = 0usize;
+    let mut consumed = 0usize;
+    for t in 0..p {
+        let start = pos;
+        if t + 1 == p {
+            pos = class.len();
+        } else {
+            let target = (total - consumed) as f64 / (p - t) as f64;
+            let mut blk = 0usize;
+            while pos < class.len() {
+                let w = work[pos];
+                if blk > 0 && (blk + w) as f64 - target > target - blk as f64 {
+                    break;
+                }
+                blk += w;
+                pos += 1;
+            }
+            consumed += blk;
+        }
+        out.push((start, pos));
+    }
+    out
+}
+
+impl ParallelSpmv for ColorfulEngine {
+    fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
+        let n = self.a.n;
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(y.len(), n);
+        let p = self.pool.nthreads();
+        if p == 1 {
+            self.a.spmv_into_zeroed(x, y);
+            return;
+        }
+        let a = &self.a;
+        let colors = &self.colors;
+        let shares = &self.shares;
+        let barrier = self.pool.barrier();
+        let yv = SyncSlice::new(y);
+
+        self.pool.run(move |t| {
+            // Phase 0: zero y cooperatively (disjoint chunks).
+            let (lo, hi) = (t * n / p, (t + 1) * n / p);
+            // SAFETY: disjoint per-thread chunks.
+            unsafe { yv.slice_mut(lo..hi).fill(0.0) };
+            barrier.wait();
+            // One color at a time; rows inside a color are conflict-free,
+            // so direct writes to y are safe. Barrier between colors.
+            for (class, share) in colors.classes.iter().zip(shares) {
+                let (s, e) = share[t];
+                for &row in &class[s..e] {
+                    let i = row as usize;
+                    let xi = x[i];
+                    let mut acc = a.ad[i] * xi;
+                    for k in a.row_range(i) {
+                        let j = a.ja[k] as usize;
+                        acc += a.al[k] * x[j];
+                        // SAFETY: j is a direct neighbour of i; no other
+                        // row in this class conflicts with i, so no other
+                        // thread touches y[j] in this phase.
+                        unsafe {
+                            let cur = *yv.slice_mut(j..j + 1).as_ptr();
+                            yv.write(j, cur + a.au[k] * xi);
+                        }
+                    }
+                    unsafe {
+                        let cur = *yv.slice_mut(i..i + 1).as_ptr();
+                        yv.write(i, cur + acc);
+                    }
+                }
+                barrier.wait();
+            }
+        });
+    }
+
+    fn name(&self) -> String {
+        format!("colorful({} colors)", self.num_colors())
+    }
+
+    fn nthreads(&self) -> usize {
+        self.pool.nthreads()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stride_capped_coloring;
+    use crate::sparse::Coo;
+    use crate::util::{propcheck, Rng};
+
+    fn mat(n: usize, npr: usize, seed: u64) -> Arc<Csrc> {
+        let mut rng = Rng::new(seed);
+        Arc::new(
+            Csrc::from_coo(&Coo::random_structurally_symmetric(n, npr, false, &mut rng)).unwrap(),
+        )
+    }
+
+    #[test]
+    fn matches_sequential_various_threads() {
+        let a = mat(130, 4, 60);
+        let x: Vec<f64> = (0..130).map(|i| (i as f64 * 0.1).cos()).collect();
+        let mut want = vec![0.0; 130];
+        a.spmv_into_zeroed(&x, &mut want);
+        for p in [2, 3, 4, 5] {
+            let mut e = ColorfulEngine::new(a.clone(), p);
+            let mut y = vec![f64::NAN; 130];
+            e.spmv(&x, &mut y);
+            propcheck::assert_close(&y, &want, 1e-11, 1e-11)
+                .unwrap_or_else(|err| panic!("p={p}: {err}"));
+        }
+    }
+
+    #[test]
+    fn banded_matrix_few_colors() {
+        let mut rng = Rng::new(61);
+        let a = Arc::new(Csrc::from_coo(&Coo::banded(100, 1, true, &mut rng)).unwrap());
+        let e = ColorfulEngine::new(a, 2);
+        assert!(e.num_colors() <= 3);
+    }
+
+    #[test]
+    fn stride_capped_coloring_also_correct() {
+        let a = mat(90, 3, 62);
+        let g = ConflictGraph::build(&a);
+        let colors = stride_capped_coloring(&g, 8);
+        let x: Vec<f64> = (0..90).map(|i| i as f64).collect();
+        let mut want = vec![0.0; 90];
+        a.spmv_into_zeroed(&x, &mut want);
+        let mut e = ColorfulEngine::with_coloring(a, 3, colors);
+        let mut y = vec![0.0; 90];
+        e.spmv(&x, &mut y);
+        propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+    }
+
+    #[test]
+    fn class_shares_cover_class() {
+        let a = mat(70, 3, 63);
+        let e = ColorfulEngine::new(a, 4);
+        for (class, share) in e.colors.classes.iter().zip(&e.shares) {
+            assert_eq!(share[0].0, 0);
+            assert_eq!(share.last().unwrap().1, class.len());
+            for w in share.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap in class share");
+            }
+        }
+    }
+
+    #[test]
+    fn property_colorful_vs_sequential() {
+        propcheck::check(8, |rng| {
+            let n = 10 + rng.below(100);
+            let coo = Coo::random_structurally_symmetric(n, 1 + rng.below(5), false, rng);
+            let a = Arc::new(Csrc::from_coo(&coo).map_err(|e| e.to_string())?);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = vec![0.0; n];
+            a.spmv_into_zeroed(&x, &mut want);
+            let mut e = ColorfulEngine::new(a, 1 + rng.below(5));
+            let mut y = vec![0.0; n];
+            e.spmv(&x, &mut y);
+            propcheck::assert_close(&y, &want, 1e-11, 1e-11)
+        });
+    }
+}

@@ -1,0 +1,350 @@
+//! Local-buffers strategy (§3.1): each thread scatters into a private
+//! buffer; buffers are merged into y in an accumulation step. The four
+//! init/accumulation schemes of the paper:
+//!
+//! | method     | init                                | accumulation                                   | span (paper) |
+//! |------------|-------------------------------------|------------------------------------------------|--------------|
+//! | all-in-one | whole team's buffers, in parallel   | y rows split evenly; sum all p buffers         | Θ(p + log n) |
+//! | per-buffer | buffer-by-buffer, parallel within   | buffer-by-buffer, parallel within              | Θ(p log n)   |
+//! | effective  | own buffer over own effective range | own *owned rows*, buffers covering them        | Θ(p log(n/p))|
+//! | interval   | intervals of intersected eff ranges | intervals, assigned load-balanced              | Θ(p log(n/p))|
+//!
+//! Partitioning is nnz-guided (§3.1 last paragraph). With one thread the
+//! engine bypasses buffers entirely (the paper's runtime check).
+
+use super::pool::ThreadPool;
+use super::share::{SharedBuffers, SyncSlice};
+use super::ParallelSpmv;
+use crate::partition::{self, Interval, RowPartition};
+use crate::sparse::Csrc;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccumMethod {
+    AllInOne,
+    PerBuffer,
+    Effective,
+    Interval,
+}
+
+impl AccumMethod {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AccumMethod::AllInOne => "all-in-one",
+            AccumMethod::PerBuffer => "per-buffer",
+            AccumMethod::Effective => "effective",
+            AccumMethod::Interval => "interval",
+        }
+    }
+
+    pub fn all() -> [AccumMethod; 4] {
+        [
+            AccumMethod::AllInOne,
+            AccumMethod::PerBuffer,
+            AccumMethod::Effective,
+            AccumMethod::Interval,
+        ]
+    }
+}
+
+pub struct LocalBuffersEngine {
+    a: Arc<Csrc>,
+    pool: ThreadPool,
+    method: AccumMethod,
+    part: RowPartition,
+    /// Effective range per thread (§3.1).
+    eff: Vec<Range<usize>>,
+    /// Interval decomposition + per-thread assignment (interval method).
+    ints: Vec<Interval>,
+    int_assign: Vec<Vec<usize>>,
+    bufs: SharedBuffers,
+    /// Buffers covering each owned block (effective method): for thread
+    /// t's owned rows, which buffers' effective ranges intersect them.
+    covering: Vec<Vec<usize>>,
+    /// Nanoseconds of the slowest thread's init+accumulate work in the
+    /// last call — the Table 2 measurement.
+    pub last_overhead_ns: u64,
+}
+
+impl LocalBuffersEngine {
+    pub fn new(a: Arc<Csrc>, p: usize, method: AccumMethod) -> Self {
+        let part = partition::nnz_balanced(&a, p);
+        let eff: Vec<Range<usize>> =
+            (0..p).map(|t| partition::effective_range(&a, part.block(t))).collect();
+        let ints = partition::intervals(&eff);
+        let int_assign = partition::assign_intervals(&ints, p);
+        let covering = (0..p)
+            .map(|t| {
+                let own = part.block(t);
+                (0..p)
+                    .filter(|&b| eff[b].start < own.end && own.start < eff[b].end)
+                    .collect()
+            })
+            .collect();
+        let bufs = SharedBuffers::new(p, a.n);
+        LocalBuffersEngine {
+            a,
+            pool: ThreadPool::new(p),
+            method,
+            part,
+            eff,
+            ints,
+            int_assign,
+            bufs,
+            covering,
+            last_overhead_ns: 0,
+        }
+    }
+
+    pub fn method(&self) -> AccumMethod {
+        self.method
+    }
+
+    pub fn partition(&self) -> &RowPartition {
+        &self.part
+    }
+
+    pub fn effective_ranges(&self) -> &[Range<usize>] {
+        &self.eff
+    }
+}
+
+impl ParallelSpmv for LocalBuffersEngine {
+    fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
+        let p = self.pool.nthreads();
+        let n = self.a.n;
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(y.len(), n);
+
+        // Single-thread shortcut (§4.2): use the global vector directly.
+        if p == 1 {
+            self.a.spmv_into_zeroed(x, y);
+            self.last_overhead_ns = 0;
+            return;
+        }
+
+        let a = &self.a;
+        let part = &self.part;
+        let eff = &self.eff;
+        let ints = &self.ints;
+        let int_assign = &self.int_assign;
+        let covering = &self.covering;
+        let bufs = &self.bufs;
+        let method = self.method;
+        let barrier = self.pool.barrier();
+        let yv = SyncSlice::new(y);
+        let max_overhead = AtomicU64::new(0);
+        let ov = &max_overhead;
+
+        self.pool.run(move |t| {
+            let mut overhead_ns = 0u64;
+
+            // ---- init step -------------------------------------------
+            let t0 = Instant::now();
+            match method {
+                AccumMethod::AllInOne => {
+                    // The team's p buffers seen as one dense p*n array,
+                    // split evenly among threads.
+                    let total = p * n;
+                    let (lo, hi) = (t * total / p, (t + 1) * total / p);
+                    let mut i = lo;
+                    while i < hi {
+                        let b = i / n;
+                        let off = i % n;
+                        let run = (hi - i).min(n - off);
+                        // SAFETY: [b][off..off+run] touched by this thread
+                        // only — the flat split is disjoint.
+                        unsafe { bufs.get_mut(b)[off..off + run].fill(0.0) };
+                        i += run;
+                    }
+                }
+                AccumMethod::PerBuffer => {
+                    // Buffer-by-buffer, rows split among threads.
+                    for b in 0..p {
+                        let (lo, hi) = (t * n / p, (t + 1) * n / p);
+                        unsafe { bufs.get_mut(b)[lo..hi].fill(0.0) };
+                    }
+                }
+                AccumMethod::Effective => {
+                    // Own buffer, own effective range only.
+                    let r = eff[t].clone();
+                    unsafe { bufs.get_mut(t)[r].fill(0.0) };
+                }
+                AccumMethod::Interval => {
+                    // Assigned intervals, every covering buffer.
+                    for &i in &int_assign[t] {
+                        let int = &ints[i];
+                        for &b in &int.covers {
+                            unsafe { bufs.get_mut(b)[int.range.clone()].fill(0.0) };
+                        }
+                    }
+                }
+            }
+            overhead_ns += t0.elapsed().as_nanos() as u64;
+            barrier.wait();
+
+            // ---- compute step: private buffer, no races ---------------
+            let block = part.block(t);
+            // SAFETY: buffer t is written by thread t only in this phase.
+            let buf = unsafe { bufs.get_mut(t) };
+            a.spmv_rows_into(x, block.start, block.end, buf, 0);
+            barrier.wait();
+
+            // ---- accumulation step ------------------------------------
+            let t1 = Instant::now();
+            match method {
+                AccumMethod::AllInOne => {
+                    // y rows split evenly; each thread sums all p buffers.
+                    let (lo, hi) = (t * n / p, (t + 1) * n / p);
+                    // SAFETY: [lo,hi) disjoint per thread.
+                    let dst = unsafe { yv.slice_mut(lo..hi) };
+                    dst.fill(0.0);
+                    for b in 0..p {
+                        let src = unsafe { bufs.read(b) };
+                        for (d, s) in dst.iter_mut().zip(&src[lo..hi]) {
+                            *d += *s;
+                        }
+                    }
+                }
+                AccumMethod::PerBuffer => {
+                    let (lo, hi) = (t * n / p, (t + 1) * n / p);
+                    let dst = unsafe { yv.slice_mut(lo..hi) };
+                    dst.fill(0.0);
+                    for b in 0..p {
+                        let src = unsafe { bufs.read(b) };
+                        for (d, s) in dst.iter_mut().zip(&src[lo..hi]) {
+                            *d += *s;
+                        }
+                        // The paper's per-buffer scheme synchronizes the
+                        // team between buffers (span Θ(p log n)).
+                        barrier.wait();
+                    }
+                }
+                AccumMethod::Effective => {
+                    // Own block rows; only buffers whose effective range
+                    // covers them contribute.
+                    let own = part.block(t);
+                    let dst = unsafe { yv.slice_mut(own.clone()) };
+                    dst.fill(0.0);
+                    for &b in &covering[t] {
+                        let src = unsafe { bufs.read(b) };
+                        let from = own.start.max(eff[b].start);
+                        let to = own.end.min(eff[b].end);
+                        for i in from..to {
+                            dst[i - own.start] += src[i];
+                        }
+                    }
+                }
+                AccumMethod::Interval => {
+                    for &idx in &int_assign[t] {
+                        let int = &ints[idx];
+                        let dst = unsafe { yv.slice_mut(int.range.clone()) };
+                        dst.fill(0.0);
+                        for &b in &int.covers {
+                            let src = unsafe { bufs.read(b) };
+                            for (d, s) in dst.iter_mut().zip(&src[int.range.clone()]) {
+                                *d += *s;
+                            }
+                        }
+                    }
+                }
+            }
+            overhead_ns += t1.elapsed().as_nanos() as u64;
+            ov.fetch_max(overhead_ns, Ordering::Relaxed);
+        });
+
+        self.last_overhead_ns = max_overhead.load(Ordering::Relaxed);
+    }
+
+    fn name(&self) -> String {
+        format!("local-buffers/{}", self.method.label())
+    }
+
+    fn nthreads(&self) -> usize {
+        self.pool.nthreads()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::{propcheck, Rng};
+
+    fn mat(n: usize, npr: usize, seed: u64) -> Arc<Csrc> {
+        let mut rng = Rng::new(seed);
+        Arc::new(Csrc::from_coo(&Coo::random_structurally_symmetric(n, npr, false, &mut rng)).unwrap())
+    }
+
+    #[test]
+    fn every_method_matches_sequential() {
+        let a = mat(120, 5, 50);
+        let x: Vec<f64> = (0..120).map(|i| (i as f64).sin()).collect();
+        let mut want = vec![0.0; 120];
+        a.spmv_into_zeroed(&x, &mut want);
+        for method in AccumMethod::all() {
+            for p in [2, 3, 4, 6] {
+                let mut e = LocalBuffersEngine::new(a.clone(), p, method);
+                let mut y = vec![f64::NAN; 120];
+                e.spmv(&x, &mut y);
+                propcheck::assert_close(&y, &want, 1e-11, 1e-11)
+                    .unwrap_or_else(|err| panic!("{} p={p}: {err}", method.label()));
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_shortcut_no_overhead() {
+        let a = mat(40, 3, 51);
+        let x = vec![1.0; 40];
+        let mut e = LocalBuffersEngine::new(a.clone(), 1, AccumMethod::AllInOne);
+        let mut y = vec![0.0; 40];
+        e.spmv(&x, &mut y);
+        assert_eq!(e.last_overhead_ns, 0);
+    }
+
+    #[test]
+    fn overhead_is_recorded_for_multithread() {
+        let a = mat(400, 6, 52);
+        let x = vec![1.0; 400];
+        let mut e = LocalBuffersEngine::new(a.clone(), 4, AccumMethod::AllInOne);
+        let mut y = vec![0.0; 400];
+        e.spmv(&x, &mut y);
+        assert!(e.last_overhead_ns > 0);
+    }
+
+    #[test]
+    fn effective_covering_is_complete() {
+        // Whoever covers thread t's rows must include t itself.
+        let a = mat(100, 4, 53);
+        let e = LocalBuffersEngine::new(a, 4, AccumMethod::Effective);
+        for t in 0..4 {
+            assert!(e.covering[t].contains(&t));
+        }
+    }
+
+    #[test]
+    fn works_on_banded_and_dense_patterns() {
+        let mut rng = Rng::new(54);
+        for coo in [
+            Coo::banded(90, 1, true, &mut rng),
+            Coo::banded(90, 8, false, &mut rng),
+            Coo::dense_random(48, &mut rng),
+        ] {
+            let a = Arc::new(Csrc::from_coo(&coo).unwrap());
+            let n = a.n;
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = vec![0.0; n];
+            a.spmv_into_zeroed(&x, &mut want);
+            for method in AccumMethod::all() {
+                let mut e = LocalBuffersEngine::new(a.clone(), 3, method);
+                let mut y = vec![0.0; n];
+                e.spmv(&x, &mut y);
+                propcheck::assert_close(&y, &want, 1e-10, 1e-10).unwrap();
+            }
+        }
+    }
+}

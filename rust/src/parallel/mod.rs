@@ -1,0 +1,188 @@
+//! Parallel CSRC SpMV engines (§3 of the paper).
+//!
+//! The CSRC sweep scatters into `y[ja(k)]` while another thread may own
+//! that row — the race the paper's two strategies avoid:
+//!
+//! * [`local_buffers::LocalBuffersEngine`] — per-thread private buffers
+//!   merged in an accumulation step, with the four init/accumulation
+//!   schemes of §3.1 ([`AccumMethod`]),
+//! * [`colorful::ColorfulEngine`] — conflict-free color classes (§3.2),
+//! * [`atomic::AtomicEngine`] — the atomics baseline the paper dismisses
+//!   as too costly (kept as an ablation),
+//! * [`pool::ThreadPool`] — the persistent fork-join worker pool all
+//!   engines share.
+//!
+//! Every engine implements [`ParallelSpmv`] and is property-tested against
+//! the sequential sweep.
+
+pub mod atomic;
+pub mod colorful;
+pub mod local_buffers;
+pub mod pool;
+
+pub use atomic::AtomicEngine;
+pub use colorful::ColorfulEngine;
+pub use local_buffers::{AccumMethod, LocalBuffersEngine};
+pub use pool::ThreadPool;
+
+use crate::sparse::Csrc;
+
+/// A parallel y = A·x engine over a fixed matrix + thread count.
+pub trait ParallelSpmv {
+    /// Compute y = A x (y fully overwritten).
+    fn spmv(&mut self, x: &[f64], y: &mut [f64]);
+    /// Engine name for reports.
+    fn name(&self) -> String;
+    fn nthreads(&self) -> usize;
+}
+
+/// Which engine to build — the CLI / harness selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Sequential,
+    LocalBuffers(AccumMethod),
+    Colorful,
+    Atomic,
+}
+
+impl EngineKind {
+    pub fn all_local_buffers() -> [EngineKind; 4] {
+        [
+            EngineKind::LocalBuffers(AccumMethod::AllInOne),
+            EngineKind::LocalBuffers(AccumMethod::PerBuffer),
+            EngineKind::LocalBuffers(AccumMethod::Effective),
+            EngineKind::LocalBuffers(AccumMethod::Interval),
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        Some(match s {
+            "seq" | "sequential" => EngineKind::Sequential,
+            "all-in-one" => EngineKind::LocalBuffers(AccumMethod::AllInOne),
+            "per-buffer" => EngineKind::LocalBuffers(AccumMethod::PerBuffer),
+            "effective" => EngineKind::LocalBuffers(AccumMethod::Effective),
+            "interval" => EngineKind::LocalBuffers(AccumMethod::Interval),
+            "colorful" => EngineKind::Colorful,
+            "atomic" => EngineKind::Atomic,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            EngineKind::Sequential => "sequential".into(),
+            EngineKind::LocalBuffers(m) => format!("local-buffers/{}", m.label()),
+            EngineKind::Colorful => "colorful".into(),
+            EngineKind::Atomic => "atomic".into(),
+        }
+    }
+}
+
+/// Sequential engine (the speedup baseline: the paper's speedups are
+/// relative to the *pure sequential* CSRC sweep, not the 1-thread case).
+pub struct SequentialEngine {
+    a: std::sync::Arc<Csrc>,
+}
+
+impl SequentialEngine {
+    pub fn new(a: std::sync::Arc<Csrc>) -> Self {
+        Self { a }
+    }
+}
+
+impl ParallelSpmv for SequentialEngine {
+    fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
+        self.a.spmv_into_zeroed(x, y);
+    }
+    fn name(&self) -> String {
+        "sequential".into()
+    }
+    fn nthreads(&self) -> usize {
+        1
+    }
+}
+
+/// Build any engine from its kind.
+pub fn build_engine(
+    kind: EngineKind,
+    a: std::sync::Arc<Csrc>,
+    nthreads: usize,
+) -> Box<dyn ParallelSpmv> {
+    match kind {
+        EngineKind::Sequential => Box::new(SequentialEngine::new(a)),
+        EngineKind::LocalBuffers(m) => Box::new(LocalBuffersEngine::new(a, nthreads, m)),
+        EngineKind::Colorful => Box::new(ColorfulEngine::new(a, nthreads)),
+        EngineKind::Atomic => Box::new(AtomicEngine::new(a, nthreads)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::{propcheck, Rng};
+    use std::sync::Arc;
+
+    /// Every engine × several thread counts must match the sequential
+    /// sweep — the central correctness property of the whole paper.
+    #[test]
+    fn all_engines_match_sequential() {
+        propcheck::check(8, |rng| {
+            let n = 16 + rng.below(120);
+            let npr = 1 + rng.below(6);
+            let sym = rng.below(2) == 0;
+            let coo = Coo::random_structurally_symmetric(n, npr, sym, rng);
+            let a = Arc::new(crate::sparse::Csrc::from_coo(&coo).map_err(|e| e.to_string())?);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = vec![0.0; n];
+            a.spmv_into_zeroed(&x, &mut want);
+            let kinds = [
+                EngineKind::LocalBuffers(AccumMethod::AllInOne),
+                EngineKind::LocalBuffers(AccumMethod::PerBuffer),
+                EngineKind::LocalBuffers(AccumMethod::Effective),
+                EngineKind::LocalBuffers(AccumMethod::Interval),
+                EngineKind::Colorful,
+                EngineKind::Atomic,
+            ];
+            for kind in kinds {
+                for p in [1, 2, 3, 4] {
+                    let mut engine = build_engine(kind, a.clone(), p);
+                    let mut y = vec![f64::NAN; n]; // must be fully overwritten
+                    engine.spmv(&x, &mut y);
+                    propcheck::assert_close(&y, &want, 1e-11, 1e-11)
+                        .map_err(|e| format!("{} p={p}: {e}", kind.label()))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn engine_parse_labels_roundtrip() {
+        for s in ["seq", "all-in-one", "per-buffer", "effective", "interval", "colorful", "atomic"]
+        {
+            assert!(EngineKind::parse(s).is_some(), "{s}");
+        }
+        assert!(EngineKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn engines_are_reusable() {
+        // Repeated calls must not accumulate stale buffer state.
+        let mut rng = Rng::new(77);
+        let coo = Coo::random_structurally_symmetric(50, 4, false, &mut rng);
+        let a = Arc::new(crate::sparse::Csrc::from_coo(&coo).unwrap());
+        let x: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0; 50];
+        a.spmv_into_zeroed(&x, &mut want);
+        let mut engine =
+            build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 3);
+        for _ in 0..5 {
+            let mut y = vec![0.0; 50];
+            engine.spmv(&x, &mut y);
+            propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+    }
+}
+
+pub mod share;

@@ -1,0 +1,222 @@
+//! Persistent fork-join worker pool.
+//!
+//! The paper's OpenMP `parallel do` amortizes thread spawn cost across a
+//! solver's thousand products; spawning per product would drown the
+//! fine-grained kernel in overhead. This pool keeps `p` workers parked on
+//! a condvar and runs closures of the shape `f(tid)` with a fork-join
+//! barrier, plus an in-region [`Barrier`]-like `sync()` for the engines'
+//! compute→accumulate phase boundary.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Arc<dyn Fn(usize) + Send + Sync>;
+
+struct Shared {
+    job: Mutex<Option<(u64, Job)>>, // (epoch, job)
+    cv: Condvar,
+    done: Mutex<u64>, // count of completed epochs × workers
+    done_cv: Condvar,
+    shutdown: std::sync::atomic::AtomicBool,
+}
+
+/// Fork-join pool with `p` *worker* threads; the caller participates as
+/// thread 0, workers are 1..p (so `ThreadPool::new(1)` spawns nothing and
+/// runs inline, matching the paper's "check the number of threads at
+/// runtime" single-thread shortcut).
+pub struct ThreadPool {
+    p: usize,
+    shared: Arc<Shared>,
+    region_barrier: Arc<Barrier>,
+    epoch: u64,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(p: usize) -> ThreadPool {
+        assert!(p >= 1);
+        let shared = Arc::new(Shared {
+            job: Mutex::new(None),
+            cv: Condvar::new(),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            shutdown: std::sync::atomic::AtomicBool::new(false),
+        });
+        let region_barrier = Arc::new(Barrier::new(p));
+        let handles = (1..p)
+            .map(|tid| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("csrc-worker-{tid}"))
+                    .spawn(move || worker_loop(tid, shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { p, shared, region_barrier, epoch: 0, handles }
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.p
+    }
+
+    /// Barrier usable *inside* a running region (all p threads must call).
+    pub fn barrier(&self) -> Arc<Barrier> {
+        self.region_barrier.clone()
+    }
+
+    /// Run `f(tid)` on all p threads (caller runs tid 0) and join.
+    pub fn run<F>(&mut self, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if self.p == 1 {
+            f(0);
+            return;
+        }
+        self.epoch += 1;
+        // SAFETY-free type erasure: extend the closure's lifetime for the
+        // duration of this call; we block until every worker reports done,
+        // so the borrow cannot escape. (The standard scoped-pool trick.)
+        let job: Arc<dyn Fn(usize) + Send + Sync> = unsafe {
+            std::mem::transmute::<Arc<dyn Fn(usize) + Send + Sync + '_>, Job>(
+                Arc::new(f) as Arc<dyn Fn(usize) + Send + Sync + '_>
+            )
+        };
+        {
+            let mut slot = self.shared.job.lock().unwrap();
+            *slot = Some((self.epoch, job.clone()));
+            self.shared.cv.notify_all();
+        }
+        job(0);
+        drop(job);
+        // Wait until all workers finished this epoch.
+        let mut done = self.shared.done.lock().unwrap();
+        while *done < self.epoch * (self.p as u64 - 1) {
+            done = self.shared.done_cv.wait(done).unwrap();
+        }
+    }
+}
+
+fn worker_loop(tid: usize, shared: Arc<Shared>) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.job.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some((epoch, job)) = slot.as_ref() {
+                    if *epoch > last_epoch {
+                        last_epoch = *epoch;
+                        break job.clone();
+                    }
+                }
+                slot = shared.cv.wait(slot).unwrap();
+            }
+        };
+        job(tid);
+        drop(job);
+        let mut done = shared.done.lock().unwrap();
+        *done += 1;
+        shared.done_cv.notify_all();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A tiny atomic work counter for dynamic scheduling experiments.
+pub struct WorkCounter(AtomicUsize);
+
+impl WorkCounter {
+    pub fn new() -> Self {
+        Self(AtomicUsize::new(0))
+    }
+    pub fn next(&self) -> usize {
+        self.0.fetch_add(1, Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for WorkCounter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_runs_all_tids() {
+        let mut pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(|tid| {
+            hits[tid].fetch_add(1, Ordering::Relaxed);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn pool_reusable_many_epochs() {
+        let mut pool = ThreadPool::new(3);
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(|_tid| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 150);
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let mut pool = ThreadPool::new(1);
+        let mut touched = false;
+        // Can borrow mutably because run with p=1 is inline.
+        pool.run(|tid| {
+            assert_eq!(tid, 0);
+        });
+        touched = true;
+        assert!(touched);
+    }
+
+    #[test]
+    fn in_region_barrier_synchronizes() {
+        let mut pool = ThreadPool::new(4);
+        let barrier = pool.barrier();
+        let phase1 = AtomicUsize::new(0);
+        let ok = AtomicUsize::new(0);
+        pool.run(|_tid| {
+            phase1.fetch_add(1, Ordering::SeqCst);
+            barrier.wait();
+            // After the barrier every thread must observe all phase-1 work.
+            if phase1.load(Ordering::SeqCst) == 4 {
+                ok.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn work_counter_is_dense() {
+        let pool = WorkCounter::new();
+        let mut seen: Vec<usize> = (0..100).map(|_| pool.next()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<_>>());
+    }
+}

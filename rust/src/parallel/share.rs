@@ -1,0 +1,143 @@
+//! Shared-mutability primitives for the engines.
+//!
+//! The engines' phases have *provably disjoint* write sets (own buffer in
+//! the compute phase; owned rows / owned intervals in the accumulation
+//! phase; conflict-free rows inside a color class). Rust cannot see that
+//! through `&[f64]`, so these two wrappers carry the unsafety with the
+//! invariants documented at each use site.
+
+use std::cell::UnsafeCell;
+
+/// A slice multiple threads may write, with caller-guaranteed disjoint
+/// index sets per thread.
+pub struct SyncSlice<'a> {
+    ptr: *mut f64,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [f64]>,
+}
+
+unsafe impl Send for SyncSlice<'_> {}
+unsafe impl Sync for SyncSlice<'_> {}
+
+impl<'a> SyncSlice<'a> {
+    pub fn new(s: &'a mut [f64]) -> Self {
+        Self { ptr: s.as_mut_ptr(), len: s.len(), _marker: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// # Safety
+    /// Caller must guarantee no concurrent access to index `i`.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: f64) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// # Safety
+    /// Caller must guarantee the range is not concurrently accessed.
+    #[inline]
+    pub unsafe fn slice_mut(&self, range: std::ops::Range<usize>) -> &mut [f64] {
+        debug_assert!(range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.len())
+    }
+}
+
+/// One private f64 buffer per thread, readable by all threads after the
+/// compute-phase barrier.
+pub struct SharedBuffers {
+    bufs: Vec<UnsafeCell<Vec<f64>>>,
+}
+
+unsafe impl Send for SharedBuffers {}
+unsafe impl Sync for SharedBuffers {}
+
+impl SharedBuffers {
+    pub fn new(p: usize, len: usize) -> Self {
+        Self { bufs: (0..p).map(|_| UnsafeCell::new(vec![0.0; len])).collect() }
+    }
+
+    pub fn count(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// # Safety
+    /// Only thread `t` may hold this mutably, and no concurrent `read`
+    /// of buffer `t` may exist (enforced by the engines' phase barriers).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, t: usize) -> &mut [f64] {
+        (*self.bufs[t].get()).as_mut_slice()
+    }
+
+    /// # Safety
+    /// No concurrent `get_mut` of buffer `t` may exist.
+    #[inline]
+    pub unsafe fn read(&self, t: usize) -> &[f64] {
+        (*self.bufs[t].get()).as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sync_slice_disjoint_parallel_writes() {
+        let mut v = vec![0.0; 100];
+        let s = SyncSlice::new(&mut v);
+        std::thread::scope(|scope| {
+            let s = &s;
+            for t in 0..4usize {
+                scope.spawn(move || {
+                    for i in (t * 25)..((t + 1) * 25) {
+                        unsafe { s.write(i, t as f64) };
+                    }
+                });
+            }
+        });
+        drop(s);
+        for t in 0..4 {
+            assert!(v[t * 25..(t + 1) * 25].iter().all(|&x| x == t as f64));
+        }
+    }
+
+    #[test]
+    fn shared_buffers_isolated_then_readable() {
+        let bufs = Arc::new(SharedBuffers::new(3, 10));
+        let handles: Vec<_> = (0..3)
+            .map(|t| {
+                let b = bufs.clone();
+                std::thread::spawn(move || {
+                    let mine = unsafe { b.get_mut(t) };
+                    mine.fill(t as f64 + 1.0);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..3 {
+            assert!(unsafe { bufs.read(t) }.iter().all(|&x| x == t as f64 + 1.0));
+        }
+    }
+
+    #[test]
+    fn slice_mut_range_view() {
+        let mut v = vec![1.0; 8];
+        {
+            let s = SyncSlice::new(&mut v);
+            unsafe {
+                s.slice_mut(2..5).fill(9.0);
+            }
+        }
+        assert_eq!(v, vec![1.0, 1.0, 9.0, 9.0, 9.0, 1.0, 1.0, 1.0]);
+    }
+}

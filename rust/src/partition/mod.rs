@@ -1,0 +1,274 @@
+//! Row partitioning for the local-buffers strategy (§3.1).
+//!
+//! The paper found row-count partitioning load-imbalanced and used a
+//! **non-zero guided** split: contiguous row blocks whose nnz (counting
+//! both triangles, since each lower entry costs two updates) deviates
+//! minimally from the average. [`effective_range`] and [`intervals`]
+//! support the *effective* and *interval* accumulation methods.
+
+use crate::sparse::Csrc;
+
+/// Contiguous row blocks: thread t owns rows `starts[t]..starts[t+1]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowPartition {
+    pub starts: Vec<usize>, // len = nthreads + 1; starts[0]=0, last = n
+}
+
+impl RowPartition {
+    pub fn nthreads(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    pub fn block(&self, t: usize) -> std::ops::Range<usize> {
+        self.starts[t]..self.starts[t + 1]
+    }
+
+    /// Sanity: monotone, complete cover of 0..n.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if *self.starts.first().unwrap() != 0 || *self.starts.last().unwrap() != n {
+            return Err(format!("partition does not cover 0..{n}: {:?}", self.starts));
+        }
+        if self.starts.windows(2).any(|w| w[0] > w[1]) {
+            return Err(format!("partition not monotone: {:?}", self.starts));
+        }
+        Ok(())
+    }
+}
+
+/// Even split by *row count* (the naive baseline the paper rejects).
+pub fn rowwise_even(n: usize, p: usize) -> RowPartition {
+    assert!(p > 0);
+    let starts = (0..=p).map(|t| t * n / p).collect();
+    RowPartition { starts }
+}
+
+/// Per-row work estimate for the CSRC sweep: the diagonal multiply plus
+/// two updates per stored lower entry (gather into y_i, scatter to y_j).
+#[inline]
+fn row_work(a: &Csrc, i: usize) -> usize {
+    1 + 2 * a.row_range(i).len()
+}
+
+/// Non-zero guided partition (§3.1): greedy sweep closing each block as
+/// soon as its accumulated work reaches the remaining average, which
+/// minimizes the deviation from the mean for contiguous blocks.
+pub fn nnz_balanced(a: &Csrc, p: usize) -> RowPartition {
+    assert!(p > 0);
+    let n = a.n;
+    let total: usize = (0..n).map(|i| row_work(a, i)).sum();
+    let mut starts = Vec::with_capacity(p + 1);
+    starts.push(0);
+    let mut consumed = 0usize;
+    let mut row = 0usize;
+    for t in 0..p - 1 {
+        // Re-target on the *remaining* work so early rounding errors do
+        // not starve the last thread.
+        let target = (total - consumed) as f64 / (p - t) as f64;
+        let mut block = 0usize;
+        while row < n {
+            let w = row_work(a, row);
+            // Close the block when adding the row would overshoot the
+            // target by more than stopping short undershoots it.
+            if block > 0 && (block + w) as f64 - target > target - block as f64 {
+                break;
+            }
+            block += w;
+            row += 1;
+        }
+        consumed += block;
+        starts.push(row);
+    }
+    starts.push(n); // last thread takes the tail
+    RowPartition { starts }
+}
+
+/// The *effective range* of a thread (§3.1): the set of y rows it
+/// actually touches. For a contiguous block [r0, r1) the writes are the
+/// owned rows plus every scatter target ja(k) < r0 — a prefix extension:
+/// [min_col, r1).
+pub fn effective_range(a: &Csrc, block: std::ops::Range<usize>) -> std::ops::Range<usize> {
+    let mut lo = block.start;
+    for i in block.clone() {
+        for k in a.row_range(i) {
+            lo = lo.min(a.ja[k] as usize);
+        }
+    }
+    lo..block.end
+}
+
+/// Interval decomposition (§3.1 method 4): the union of all effective
+/// ranges cut at every boundary, each interval annotated with the buffers
+/// (threads) covering it. Intervals are disjoint and sorted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Interval {
+    pub range: std::ops::Range<usize>,
+    pub covers: Vec<usize>, // thread ids whose effective range ⊇ range
+}
+
+pub fn intervals(effective: &[std::ops::Range<usize>]) -> Vec<Interval> {
+    let mut cuts: Vec<usize> = effective
+        .iter()
+        .flat_map(|r| [r.start, r.end])
+        .collect();
+    cuts.sort_unstable();
+    cuts.dedup();
+    let mut out = Vec::new();
+    for w in cuts.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        if lo == hi {
+            continue;
+        }
+        let covers: Vec<usize> = effective
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.start <= lo && hi <= r.end)
+            .map(|(t, _)| t)
+            .collect();
+        if !covers.is_empty() {
+            out.push(Interval { range: lo..hi, covers });
+        }
+    }
+    out
+}
+
+/// Assign intervals to threads, balancing Σ len×covers (the accumulation
+/// work) greedily — longest-work interval to the least-loaded thread.
+pub fn assign_intervals(ints: &[Interval], p: usize) -> Vec<Vec<usize>> {
+    let mut order: Vec<usize> = (0..ints.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(ints[i].range.len() * ints[i].covers.len()));
+    let mut load = vec![0usize; p];
+    let mut assign = vec![Vec::new(); p];
+    for i in order {
+        let t = (0..p).min_by_key(|&t| load[t]).unwrap();
+        load[t] += ints[i].range.len() * ints[i].covers.len();
+        assign[t].push(i);
+    }
+    for a in &mut assign {
+        a.sort_unstable();
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+    use crate::util::{propcheck, Rng};
+
+    fn mat(n: usize, npr: usize, seed: u64) -> Csrc {
+        let mut rng = Rng::new(seed);
+        Csrc::from_coo(&Coo::random_structurally_symmetric(n, npr, false, &mut rng)).unwrap()
+    }
+
+    #[test]
+    fn rowwise_covers() {
+        let p = rowwise_even(10, 3);
+        p.validate(10).unwrap();
+        assert_eq!(p.starts, vec![0, 3, 6, 10]);
+    }
+
+    #[test]
+    fn nnz_balanced_covers_and_balances() {
+        let a = mat(200, 6, 40);
+        for p in [1, 2, 4, 7] {
+            let part = nnz_balanced(&a, p);
+            part.validate(a.n).unwrap();
+            let works: Vec<usize> = (0..p)
+                .map(|t| part.block(t).map(|i| 1 + 2 * a.row_range(i).len()).sum())
+                .collect();
+            let total: usize = works.iter().sum();
+            let avg = total as f64 / p as f64;
+            for (t, &w) in works.iter().enumerate() {
+                // Deviation at most one max-row of work.
+                let max_row = (0..a.n).map(|i| 1 + 2 * a.row_range(i).len()).max().unwrap();
+                assert!(
+                    (w as f64 - avg).abs() <= (max_row + 1) as f64,
+                    "thread {t}: work {w} vs avg {avg} (max_row {max_row})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_balanced_more_threads_than_rows() {
+        let a = mat(3, 1, 41);
+        let part = nnz_balanced(&a, 8);
+        part.validate(3).unwrap(); // empty blocks are fine
+    }
+
+    #[test]
+    fn effective_range_contains_block_and_scatters() {
+        let a = mat(60, 4, 42);
+        let part = nnz_balanced(&a, 3);
+        for t in 0..3 {
+            let block = part.block(t);
+            let er = effective_range(&a, block.clone());
+            assert!(er.start <= block.start && er.end == block.end);
+            // Every write target of the block is inside er.
+            for i in block {
+                for k in a.row_range(i) {
+                    let j = a.ja[k] as usize;
+                    assert!(er.contains(&j), "scatter {j} outside {er:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intervals_partition_union_of_ranges() {
+        let eff = vec![0..5, 3..9, 7..9];
+        let ints = intervals(&eff);
+        // Disjoint, sorted, cover exactly union = 0..9.
+        let mut covered = vec![false; 9];
+        for int in &ints {
+            for i in int.range.clone() {
+                assert!(!covered[i], "overlap at {i}");
+                covered[i] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+        // Interval [3,5) must be covered by threads 0 and 1.
+        let mid = ints.iter().find(|i| i.range == (3..5)).unwrap();
+        assert_eq!(mid.covers, vec![0, 1]);
+    }
+
+    #[test]
+    fn assign_intervals_covers_all() {
+        let eff = vec![0..50, 25..100, 90..120];
+        let ints = intervals(&eff);
+        let assign = assign_intervals(&ints, 3);
+        let mut seen = vec![false; ints.len()];
+        for a in &assign {
+            for &i in a {
+                assert!(!seen[i]);
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn property_partition_invariants() {
+        propcheck::check(15, |rng| {
+            let n = 10 + rng.below(150);
+            let a = {
+                let coo = Coo::random_structurally_symmetric(n, 1 + rng.below(6), false, rng);
+                Csrc::from_coo(&coo).map_err(|e| e.to_string())?
+            };
+            let p = 1 + rng.below(8);
+            let part = nnz_balanced(&a, p);
+            part.validate(n)?;
+            let eff: Vec<_> = (0..p).map(|t| effective_range(&a, part.block(t))).collect();
+            let ints = intervals(&eff);
+            // Intervals must cover every row that any effective range covers.
+            for (t, r) in eff.iter().enumerate() {
+                for i in r.clone() {
+                    if !ints.iter().any(|int| int.range.contains(&i) && int.covers.contains(&t)) {
+                        return Err(format!("row {i} of thread {t} uncovered"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes them
+//! on the XLA CPU client. This is the only place the jax-lowered L1/L2
+//! compute runs; python is never on the request path.
+//!
+//! Interchange is HLO *text* (the image's xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos — see /opt/xla-example/README.md).
+
+use crate::sparse::Ell;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One entry of `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub n: usize,
+    pub w: usize,
+    pub batch: Option<usize>,
+    pub params: Vec<(String, Vec<usize>, String)>,
+    pub outputs: Vec<(String, Vec<usize>, String)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?
+        {
+            let shapes = |key: &str| -> Vec<(String, Vec<usize>, String)> {
+                e.get(key)
+                    .and_then(|x| x.as_arr())
+                    .map(|ps| {
+                        ps.iter()
+                            .map(|p| {
+                                (
+                                    p.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                                    p.get("shape")
+                                        .and_then(|x| x.as_arr())
+                                        .map(|s| s.iter().filter_map(|d| d.as_usize()).collect())
+                                        .unwrap_or_default(),
+                                    p.get("dtype").and_then(|x| x.as_str()).unwrap_or("f32").to_string(),
+                                )
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            entries.push(ManifestEntry {
+                name: e.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                file: e.get("file").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                n: e.get("n").and_then(|x| x.as_usize()).unwrap_or(0),
+                w: e.get("w").and_then(|x| x.as_usize()).unwrap_or(0),
+                batch: e.get("batch").and_then(|x| if x.is_null() { None } else { x.as_usize() }),
+                params: shapes("params"),
+                outputs: shapes("outputs"),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// The live runtime: a PJRT CPU client plus lazily compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (compiles nothing yet).
+    pub fn open(dir: &Path) -> anyhow::Result<XlaRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(XlaRuntime { client, dir: dir.to_path_buf(), manifest, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache the named artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with positional literal arguments; returns the
+    /// flattened output tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let exe = self.exes.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        Ok(tuple)
+    }
+
+    /// y = A·x via the Pallas-lowered SpMV artifact for this (n, w) shape.
+    pub fn spmv(&mut self, name: &str, ell: &Ell, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            entry.n == ell.n && entry.w == ell.w,
+            "shape mismatch: artifact {}x{} vs ell {}x{}",
+            entry.n,
+            entry.w,
+            ell.n,
+            ell.w
+        );
+        anyhow::ensure!(x.len() == ell.n, "x length {} != n {}", x.len(), ell.n);
+        let args = vec![
+            xla::Literal::vec1(&ell.ad),
+            xla::Literal::vec1(&ell.al).reshape(&[ell.n as i64, ell.w as i64])?,
+            xla::Literal::vec1(&ell.au).reshape(&[ell.n as i64, ell.w as i64])?,
+            xla::Literal::vec1(&ell.ja).reshape(&[ell.n as i64, ell.w as i64])?,
+            xla::Literal::vec1(x),
+        ];
+        let out = self.execute(name, &args)?;
+        anyhow::ensure!(!out.is_empty(), "empty output tuple");
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Batched SpMV: xs is `batch` rows of length n, row-major.
+    pub fn spmv_batch(
+        &mut self,
+        name: &str,
+        ell: &Ell,
+        xs: &[f32],
+        batch: usize,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(xs.len() == batch * ell.n);
+        let args = vec![
+            xla::Literal::vec1(&ell.ad),
+            xla::Literal::vec1(&ell.al).reshape(&[ell.n as i64, ell.w as i64])?,
+            xla::Literal::vec1(&ell.au).reshape(&[ell.n as i64, ell.w as i64])?,
+            xla::Literal::vec1(&ell.ja).reshape(&[ell.n as i64, ell.w as i64])?,
+            xla::Literal::vec1(xs).reshape(&[batch as i64, ell.n as i64])?,
+        ];
+        let out = self.execute(name, &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_real_shape() {
+        let text = r#"{
+          "format": "hlo-text", "return_tuple": true,
+          "entries": [
+            {"name": "spmv_n256_w8", "file": "spmv_n256_w8.hlo.txt",
+             "n": 256, "w": 8, "batch": null,
+             "params": [{"name": "ad", "shape": [256], "dtype": "f32"},
+                        {"name": "x", "shape": [256], "dtype": "f32"}],
+             "outputs": [{"name": "y", "shape": [256], "dtype": "f32"}]}
+          ]}"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find("spmv_n256_w8").unwrap();
+        assert_eq!(e.n, 256);
+        assert_eq!(e.w, 8);
+        assert_eq!(e.batch, None);
+        assert_eq!(e.params[0].0, "ad");
+        assert_eq!(e.outputs[0].1, vec![256]);
+    }
+
+    #[test]
+    fn manifest_batch_entry() {
+        let text = r#"{"entries": [{"name": "b", "file": "b.hlo.txt",
+            "n": 4, "w": 2, "batch": 8, "params": [], "outputs": []}]}"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.find("b").unwrap().batch, Some(8));
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(r#"{"entries": []}"#).unwrap();
+        assert!(m.find("nope").is_none());
+    }
+}

@@ -1,0 +1,217 @@
+//! Set-associative LRU cache and TLB models.
+//!
+//! Deterministic, trace-driven; counts hits/misses. Used to reproduce the
+//! paper's PAPI measurements (Fig. 4: % L2 and TLB misses) and as the
+//! memory system of the multi-core machine model (Figs. 6–9, Table 2).
+
+/// Geometry of one cache level.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    pub size: usize,
+    pub line: usize,
+    pub assoc: usize,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        (self.size / self.line / self.assoc).max(1)
+    }
+}
+
+/// Set-associative cache with true-LRU replacement, stored as one flat
+/// tag array (`sets × assoc`, MRU-first per set, `u64::MAX` = empty).
+/// Flat storage + rotate keeps the per-access cost allocation-free and
+/// cache-friendly — this is the innermost loop of the whole simulator
+/// (EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug)]
+pub struct Cache {
+    cfg: CacheConfig,
+    set_mask: usize,
+    line_shift: u32,
+    tags: Vec<u64>, // sets * assoc, MRU first within each set
+    pub hits: u64,
+    pub misses: u64,
+}
+
+const EMPTY: u64 = u64::MAX;
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Cache {
+        assert!(cfg.line.is_power_of_two() && cfg.sets().is_power_of_two());
+        Cache {
+            cfg,
+            set_mask: cfg.sets() - 1,
+            line_shift: cfg.line.trailing_zeros(),
+            tags: vec![EMPTY; cfg.sets() * cfg.assoc],
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> CacheConfig {
+        self.cfg
+    }
+
+    /// Access the line containing `addr`; returns true on hit.
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr >> self.line_shift;
+        let set = (line as usize) & self.set_mask;
+        let assoc = self.cfg.assoc;
+        let ways = &mut self.tags[set * assoc..(set + 1) * assoc];
+        // MRU fast path: repeated access to the same line is the common
+        // case in the SpMV streams (unit-stride arrays).
+        if ways[0] == line {
+            self.hits += 1;
+            return true;
+        }
+        if let Some(pos) = ways.iter().position(|&t| t == line) {
+            ways[..=pos].rotate_right(1); // move to MRU, shift the rest
+            ways[0] = line;
+            self.hits += 1;
+            true
+        } else {
+            ways.rotate_right(1); // evict LRU (last slot falls off)
+            ways[0] = line;
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn miss_ratio(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses() as f64
+        }
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// TLB modelled as a 4-way set-associative LRU translation cache (real
+/// DTLBs are set-associative; a fully-associative linear scan over 256+
+/// entries was the simulator's original bottleneck — EXPERIMENTS.md
+/// §Perf).
+#[derive(Clone, Debug)]
+pub struct Tlb {
+    cache: Cache,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Tlb {
+    pub fn new(entries: usize, page: usize) -> Tlb {
+        let assoc = 4.min(entries);
+        Tlb {
+            cache: Cache::new(CacheConfig { size: entries * page, line: page, assoc }),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        if self.cache.access(addr) {
+            self.hits += 1;
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn miss_ratio(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cache {
+        Cache::new(CacheConfig { size: 1024, line: 64, assoc: 2 }) // 8 sets
+    }
+
+    #[test]
+    fn sequential_scan_misses_once_per_line() {
+        let mut c = small();
+        for addr in (0..4096u64).step_by(8) {
+            c.access(addr);
+        }
+        assert_eq!(c.misses, 4096 / 64);
+        assert_eq!(c.accesses(), 512);
+    }
+
+    #[test]
+    fn repeat_access_hits() {
+        let mut c = small();
+        assert!(!c.access(0));
+        assert!(c.access(8)); // same line
+        assert!(c.access(0));
+    }
+
+    #[test]
+    fn lru_eviction_within_set() {
+        let mut c = small();
+        // Three lines mapping to the same set (stride = sets*line = 512).
+        c.access(0);
+        c.access(512);
+        c.access(1024); // evicts line 0 (assoc 2)
+        assert!(!c.access(0), "line 0 should have been evicted");
+        assert!(c.access(1024));
+    }
+
+    #[test]
+    fn working_set_fits_no_capacity_misses() {
+        // 1KB cache, 512B working set: second pass must be all hits.
+        let mut c = small();
+        for _pass in 0..2 {
+            for addr in (0..512u64).step_by(64) {
+                c.access(addr);
+            }
+        }
+        assert_eq!(c.misses, 8);
+        assert_eq!(c.hits, 8);
+    }
+
+    #[test]
+    fn miss_ratio_monotone_in_cache_size() {
+        // Bigger cache, same trace => miss ratio must not increase.
+        let trace: Vec<u64> = (0..20000u64).map(|i| (i * 2654435761) % 65536).collect();
+        let mut small = Cache::new(CacheConfig { size: 2048, line: 64, assoc: 4 });
+        let mut big = Cache::new(CacheConfig { size: 32768, line: 64, assoc: 4 });
+        for &a in &trace {
+            small.access(a);
+            big.access(a);
+        }
+        assert!(big.miss_ratio() <= small.miss_ratio() + 1e-9);
+    }
+
+    #[test]
+    fn tlb_basic() {
+        let mut t = Tlb::new(4, 4096);
+        assert!(!t.access(0));
+        assert!(t.access(100)); // same page
+        for p in 1..5u64 {
+            t.access(p * 4096); // fills and evicts page 0
+        }
+        assert!(!t.access(0));
+    }
+}

@@ -1,0 +1,363 @@
+//! The multi-core machine model — the substitute testbed (DESIGN.md §2).
+//!
+//! Configured as the paper's two platforms:
+//!
+//! * **Wolfdale** (Intel Core 2 Duo E8200): 2 cores, private 32 KB L1d,
+//!   one **shared 6 MB L2**, FSB memory path (strong contention),
+//! * **Bloomfield** (Intel Core i7 940): 4 cores, private 32 KB L1d +
+//!   256 KB L2, **shared 8 MB L3**, on-die memory controller + QuickPath
+//!   (weak contention — the paper's §4.2 "63 % more efficient" finding).
+//!
+//! The model executes the *actual* access streams of the SpMV schedules
+//! (see [`super::exec`]) through per-core L1/TLB, the private/shared
+//! outer levels, and charges latency per hit level plus a bandwidth
+//! contention penalty per concurrently-active memory-bound core.
+
+use super::cache::{Cache, CacheConfig, Tlb};
+
+#[derive(Clone, Debug)]
+pub struct MachineConfig {
+    pub name: &'static str,
+    pub cores: usize,
+    pub l1: CacheConfig,
+    /// Second level; private per core or shared by all.
+    pub l2: CacheConfig,
+    pub l2_private: bool,
+    /// Optional shared last level.
+    pub l3: Option<CacheConfig>,
+    pub tlb_entries: usize,
+    pub page: usize,
+    /// Latencies in cycles.
+    pub lat_l1: u64,
+    pub lat_l2: u64,
+    pub lat_l3: u64,
+    pub lat_mem: u64,
+    pub lat_tlb_miss: u64,
+    /// Cycles per floating-point op (superscalar FMA pipelines < 1).
+    pub flop_cycles: f64,
+    /// Extra memory latency per *other* active core on a memory fetch —
+    /// the bandwidth-contention knob (FSB ≫ QPI).
+    pub mem_contention: u64,
+    /// Fork-join cost per parallel region and per in-region barrier.
+    pub fork_join_cycles: u64,
+    pub barrier_cycles: u64,
+}
+
+impl MachineConfig {
+    /// Intel Core 2 Duo E8200 "Wolfdale", 2.66 GHz.
+    pub fn wolfdale() -> MachineConfig {
+        MachineConfig {
+            name: "wolfdale",
+            cores: 2,
+            l1: CacheConfig { size: 32 << 10, line: 64, assoc: 8 },
+            l2: CacheConfig { size: 6 << 20, line: 64, assoc: 24 }, // 24-way: 4096 sets
+            l2_private: false, // the shared 6MB L2
+            l3: None,
+            tlb_entries: 256,
+            page: 4096,
+            lat_l1: 3,
+            lat_l2: 15,
+            lat_l3: 0,
+            lat_mem: 230,
+            lat_tlb_miss: 30,
+            flop_cycles: 0.5,
+            mem_contention: 120, // FSB: two cores nearly serialize on DRAM
+            fork_join_cycles: 4000,
+            barrier_cycles: 800,
+        }
+    }
+
+    /// Intel Core i7 940 "Bloomfield", 2.93 GHz, HT disabled (§4).
+    pub fn bloomfield() -> MachineConfig {
+        MachineConfig {
+            name: "bloomfield",
+            cores: 4,
+            l1: CacheConfig { size: 32 << 10, line: 64, assoc: 8 },
+            l2: CacheConfig { size: 256 << 10, line: 64, assoc: 8 },
+            l2_private: true,
+            l3: Some(CacheConfig { size: 8 << 20, line: 64, assoc: 16 }),
+            tlb_entries: 512,
+            page: 4096,
+            lat_l1: 4,
+            lat_l2: 11,
+            lat_l3: 40,
+            lat_mem: 200,
+            lat_tlb_miss: 30,
+            flop_cycles: 0.5,
+            mem_contention: 35, // integrated memory controller + QPI
+            fork_join_cycles: 4000,
+            barrier_cycles: 800,
+        }
+    }
+
+    /// Outermost-cache capacity — the ws threshold Table 2 splits on
+    /// (6 MB Wolfdale, 8 MB Bloomfield).
+    pub fn last_level_bytes(&self) -> usize {
+        self.l3.map(|c| c.size).unwrap_or(self.l2.size)
+    }
+}
+
+/// Per-core private state.
+struct Core {
+    l1: Cache,
+    l2: Option<Cache>, // private L2 (bloomfield)
+    tlb: Tlb,
+    cycles: f64,
+    mem_accesses: u64,
+}
+
+/// Trace-driven multi-core simulator.
+pub struct MachineSim {
+    pub cfg: MachineConfig,
+    cores: Vec<Core>,
+    shared: Cache, // shared L2 (wolfdale) or L3 (bloomfield)
+    /// Cores currently considered active (set per phase by the executor);
+    /// memory fetches pay contention for each *other* active core.
+    active_cores: usize,
+}
+
+/// Counters snapshot for Fig. 4-style reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MissStats {
+    /// All data accesses issued (the L1 access count) — the denominator
+    /// for the Fig. 4 percentages, so "0 % misses" is meaningful for
+    /// in-cache runs where the outer level is barely touched.
+    pub total_accesses: u64,
+    pub outer_accesses: u64,
+    pub outer_misses: u64,
+    pub tlb_accesses: u64,
+    pub tlb_misses: u64,
+}
+
+impl MissStats {
+    pub fn outer_miss_pct(&self) -> f64 {
+        if self.total_accesses == 0 {
+            0.0
+        } else {
+            100.0 * self.outer_misses as f64 / self.total_accesses as f64
+        }
+    }
+    pub fn tlb_miss_pct(&self) -> f64 {
+        if self.tlb_accesses == 0 {
+            0.0
+        } else {
+            100.0 * self.tlb_misses as f64 / self.tlb_accesses as f64
+        }
+    }
+}
+
+impl MachineSim {
+    pub fn new(cfg: MachineConfig) -> MachineSim {
+        let cores = (0..cfg.cores)
+            .map(|_| Core {
+                l1: Cache::new(cfg.l1),
+                l2: if cfg.l2_private { Some(Cache::new(cfg.l2)) } else { None },
+                tlb: Tlb::new(cfg.tlb_entries, cfg.page),
+                cycles: 0.0,
+                mem_accesses: 0,
+            })
+            .collect();
+        let shared = Cache::new(if cfg.l2_private {
+            cfg.l3.expect("private L2 requires a shared L3")
+        } else {
+            cfg.l2
+        });
+        MachineSim { cfg, cores, shared, active_cores: 1 }
+    }
+
+    /// Declare how many cores run concurrently in the current phase.
+    pub fn set_active(&mut self, n: usize) {
+        self.active_cores = n.max(1);
+    }
+
+    /// One memory access by `core`; charges cycles by hit level.
+    #[inline]
+    pub fn access(&mut self, core: usize, addr: u64) {
+        let cfg = &self.cfg;
+        let c = &mut self.cores[core];
+        if !c.tlb.access(addr) {
+            c.cycles += cfg.lat_tlb_miss as f64;
+        }
+        if c.l1.access(addr) {
+            c.cycles += cfg.lat_l1 as f64;
+            return;
+        }
+        if let Some(l2) = &mut c.l2 {
+            if l2.access(addr) {
+                c.cycles += cfg.lat_l2 as f64;
+                return;
+            }
+        }
+        // Shared level (L2 on wolfdale, L3 on bloomfield).
+        let shared_lat = if cfg.l2_private { cfg.lat_l3 } else { cfg.lat_l2 };
+        if self.shared.access(addr) {
+            c.cycles += shared_lat as f64;
+            return;
+        }
+        // DRAM: base latency + contention for the other active cores.
+        c.cycles += cfg.lat_mem as f64
+            + cfg.mem_contention as f64 * (self.active_cores.saturating_sub(1)) as f64;
+        c.mem_accesses += 1;
+    }
+
+    /// Charge `n` floating-point operations to `core`.
+    #[inline]
+    pub fn flops(&mut self, core: usize, n: u64) {
+        self.cores[core].cycles += n as f64 * self.cfg.flop_cycles;
+    }
+
+    /// Charge raw cycles (loop control etc.).
+    #[inline]
+    pub fn cycles(&mut self, core: usize, n: u64) {
+        self.cores[core].cycles += n as f64;
+    }
+
+    pub fn core_cycles(&self, core: usize) -> f64 {
+        self.cores[core].cycles
+    }
+
+    pub fn max_cycles(&self) -> f64 {
+        self.cores.iter().map(|c| c.cycles).fold(0.0, f64::max)
+    }
+
+    pub fn total_cycles(&self) -> f64 {
+        self.cores.iter().map(|c| c.cycles).sum()
+    }
+
+    /// Align all cores to the slowest (a barrier) and charge its cost.
+    pub fn barrier(&mut self) {
+        let m = self.max_cycles() + self.cfg.barrier_cycles as f64;
+        for c in &mut self.cores {
+            c.cycles = m;
+        }
+    }
+
+    /// Charge the fork-join entry cost to every core.
+    pub fn fork_join(&mut self) {
+        for c in &mut self.cores {
+            c.cycles += self.cfg.fork_join_cycles as f64;
+        }
+    }
+
+    /// Zero all hit/miss counters but keep cache/TLB contents — used to
+    /// measure the *warm* (steady-state) product, like the paper's
+    /// 1000-product runs (a single cold product overstates miss ratios).
+    pub fn reset_counters(&mut self) {
+        for c in &mut self.cores {
+            c.l1.reset_counters();
+            if let Some(l2) = &mut c.l2 {
+                l2.reset_counters();
+            }
+            c.tlb.hits = 0;
+            c.tlb.misses = 0;
+        }
+        self.shared.reset_counters();
+    }
+
+    /// Zero per-core cycle accounting (keep cache/TLB contents) — with
+    /// `reset_counters`, lets callers measure a *warm* product: run once
+    /// cold, reset, run again (the paper times 1000 warm products).
+    pub fn reset_cycles(&mut self) {
+        for c in &mut self.cores {
+            c.cycles = 0.0;
+            c.mem_accesses = 0;
+        }
+    }
+
+    /// Fig. 4 counters: outer-level (= the level PAPI calls "L2" on both
+    /// machines) and TLB, summed over cores.
+    pub fn miss_stats(&self) -> MissStats {
+        let mut s = MissStats::default();
+        // Outer level: on wolfdale the shared L2; on bloomfield the
+        // private L2s (PAPI L2 counters are per-core L2 there).
+        if self.cfg.l2_private {
+            for c in &self.cores {
+                let l2 = c.l2.as_ref().unwrap();
+                s.outer_accesses += l2.accesses();
+                s.outer_misses += l2.misses;
+            }
+        } else {
+            s.outer_accesses = self.shared.accesses();
+            s.outer_misses = self.shared.misses;
+        }
+        for c in &self.cores {
+            s.total_accesses += c.l1.accesses();
+            s.tlb_accesses += c.tlb.accesses();
+            s.tlb_misses += c.tlb.misses;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_shape() {
+        let w = MachineConfig::wolfdale();
+        assert_eq!(w.cores, 2);
+        assert!(!w.l2_private);
+        assert_eq!(w.last_level_bytes(), 6 << 20);
+        let b = MachineConfig::bloomfield();
+        assert_eq!(b.cores, 4);
+        assert!(b.l2_private);
+        assert_eq!(b.last_level_bytes(), 8 << 20);
+    }
+
+    #[test]
+    fn small_working_set_stays_cached() {
+        let mut sim = MachineSim::new(MachineConfig::wolfdale());
+        // Cold pass over 16KB to warm caches...
+        for a in (0..16384u64).step_by(8) {
+            sim.access(0, a);
+        }
+        let cold = sim.core_cycles(0);
+        // ...then a warm pass must be all L1 hits (lat_l1 per access).
+        for a in (0..16384u64).step_by(8) {
+            sim.access(0, a);
+        }
+        let warm_per_access = (sim.core_cycles(0) - cold) / 2048.0;
+        assert!(warm_per_access <= 4.0, "warm avg {warm_per_access} cycles/access");
+    }
+
+    #[test]
+    fn contention_increases_memory_cost() {
+        let cfg = MachineConfig::wolfdale();
+        let mut alone = MachineSim::new(cfg.clone());
+        alone.set_active(1);
+        let mut contended = MachineSim::new(cfg);
+        contended.set_active(2);
+        // A streaming (all-miss) pattern >> caches.
+        for a in (0..(32u64 << 20)).step_by(64) {
+            alone.access(0, a);
+        }
+        for a in (0..(32u64 << 20)).step_by(64) {
+            contended.access(0, a);
+        }
+        assert!(contended.core_cycles(0) > alone.core_cycles(0) * 1.2);
+    }
+
+    #[test]
+    fn barrier_aligns_cores() {
+        let mut sim = MachineSim::new(MachineConfig::bloomfield());
+        sim.cycles(0, 100);
+        sim.cycles(1, 5000);
+        sim.barrier();
+        for c in 0..4 {
+            assert_eq!(sim.core_cycles(c), 5000.0 + 800.0);
+        }
+    }
+
+    #[test]
+    fn miss_stats_accumulate() {
+        let mut sim = MachineSim::new(MachineConfig::bloomfield());
+        for a in (0..(1u64 << 20)).step_by(64) {
+            sim.access(0, a);
+        }
+        let s = sim.miss_stats();
+        assert!(s.outer_accesses > 0);
+        assert!(s.tlb_accesses > 0);
+        assert!(s.outer_miss_pct() > 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Multi-core machine simulator — the testbed substitute (DESIGN.md §2).
+//!
+//! The paper's evaluation ran on a 2-core Wolfdale and a 4-core
+//! Bloomfield with PAPI counters; this container has one core and no
+//! counters. The simulator executes the *actual* access traces of the
+//! real schedules (same partition/coloring objects as `parallel/`)
+//! through configurable cache/TLB/bandwidth models, producing
+//! deterministic cycle counts, speedups and miss ratios for Figs. 4, 6–9
+//! and Table 2.
+
+pub mod cache;
+pub mod exec;
+pub mod machine;
+
+pub use cache::{Cache, CacheConfig, Tlb};
+pub use exec::{
+    sim_colorful, sim_csr_sequential, sim_csrc_sequential, sim_local_buffers, CsrcLayout,
+    SimResult,
+};
+pub use machine::{MachineConfig, MachineSim, MissStats};

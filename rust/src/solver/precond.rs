@@ -1,0 +1,53 @@
+//! Preconditioners. Jacobi (diagonal) suffices to exercise the
+//! preconditioned paths; CSRC's dense `ad` array makes it free to build.
+
+use crate::sparse::LinOp;
+
+pub trait Preconditioner {
+    /// z = M⁻¹ r.
+    fn apply(&self, r: &[f64], z: &mut [f64]);
+}
+
+/// Diagonal (Jacobi) preconditioner.
+pub struct Jacobi {
+    inv_diag: Vec<f64>,
+}
+
+impl Jacobi {
+    pub fn new(a: &dyn LinOp) -> Jacobi {
+        let d = a.diagonal();
+        Jacobi {
+            inv_diag: d
+                .iter()
+                .map(|&x| if x.abs() > 1e-300 { 1.0 / x } else { 1.0 })
+                .collect(),
+        }
+    }
+}
+
+impl Preconditioner for Jacobi {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        for ((zi, ri), di) in z.iter_mut().zip(r).zip(&self.inv_diag) {
+            *zi = ri * di;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Coo, Csrc};
+
+    #[test]
+    fn jacobi_inverts_diagonal() {
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, 4.0);
+        coo.push(2, 2, 8.0);
+        let a = Csrc::from_coo(&coo).unwrap();
+        let j = Jacobi::new(&a);
+        let mut z = vec![0.0; 3];
+        j.apply(&[2.0, 4.0, 8.0], &mut z);
+        assert_eq!(z, vec![1.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,174 @@
+//! BCSR — block compressed sparse row (r×c dense blocks), the register-
+//! blocking baseline the related-work section (§1.1: Im & Yelick, Buluç
+//! et al., Liu et al.) compares against. Zero-fill inside blocks trades
+//! index overhead for wasted flops.
+
+use super::{Csr, LinOp};
+#[cfg(test)]
+use super::Coo;
+
+#[derive(Clone, Debug)]
+pub struct Bcsr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub r: usize,
+    pub c: usize,
+    /// Block-row pointers (len nrows/r + 1).
+    pub ia: Vec<u32>,
+    /// Block-column indices.
+    pub ja: Vec<u32>,
+    /// Block values, each block r*c row-major, contiguous.
+    pub a: Vec<f64>,
+}
+
+impl Bcsr {
+    /// Build from CSR with r×c blocking (nrows, ncols need not divide
+    /// evenly; edge blocks are zero-padded logically via bounds checks at
+    /// multiply time — we pad the value array, the standard approach).
+    pub fn from_csr(csr: &Csr, r: usize, c: usize) -> Bcsr {
+        assert!(r > 0 && c > 0);
+        let nbr = csr.nrows.div_ceil(r);
+        let mut ia = vec![0u32; nbr + 1];
+        let mut ja: Vec<u32> = Vec::new();
+        let mut a: Vec<f64> = Vec::new();
+        let mut block_of: Vec<i64> = vec![-1; csr.ncols.div_ceil(c)];
+        for br in 0..nbr {
+            let row_start = ja.len();
+            for i in br * r..((br + 1) * r).min(csr.nrows) {
+                for k in csr.row_range(i) {
+                    let bc = csr.ja[k] as usize / c;
+                    let slot = if block_of[bc] >= row_start as i64 {
+                        block_of[bc] as usize
+                    } else {
+                        block_of[bc] = ja.len() as i64;
+                        ja.push(bc as u32);
+                        a.extend(std::iter::repeat(0.0).take(r * c));
+                        ja.len() - 1
+                    };
+                    let (ri, ci) = (i - br * r, csr.ja[k] as usize - bc * c);
+                    a[slot * r * c + ri * c + ci] += csr.a[k];
+                }
+            }
+            ia[br + 1] = ja.len() as u32;
+        }
+        Bcsr { nrows: csr.nrows, ncols: csr.ncols, r, c, ia, ja, a }
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.ja.len()
+    }
+
+    /// Stored values including zero-fill.
+    pub fn stored_values(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        let (r, c) = (self.r, self.c);
+        let nbr = self.nrows.div_ceil(r);
+        for br in 0..nbr {
+            let i0 = br * r;
+            let rows = r.min(self.nrows - i0);
+            let mut acc = [0.0f64; 8]; // r <= 8 supported
+            assert!(r <= 8, "BCSR supports block rows up to 8");
+            for s in acc.iter_mut() {
+                *s = 0.0;
+            }
+            for kb in self.ia[br] as usize..self.ia[br + 1] as usize {
+                let j0 = self.ja[kb] as usize * c;
+                let cols = c.min(self.ncols - j0);
+                let blk = &self.a[kb * r * c..(kb + 1) * r * c];
+                for ri in 0..rows {
+                    let mut t = 0.0;
+                    for ci in 0..cols {
+                        t += blk[ri * c + ci] * x[j0 + ci];
+                    }
+                    acc[ri] += t;
+                }
+            }
+            for (ri, &v) in acc.iter().take(rows).enumerate() {
+                y[i0 + ri] = v;
+            }
+        }
+    }
+
+    /// Fill ratio: stored values / true non-zeros (≥ 1; the blocking cost).
+    pub fn fill_ratio(&self, true_nnz: usize) -> f64 {
+        self.stored_values() as f64 / true_nnz as f64
+    }
+}
+
+impl LinOp for Bcsr {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Rng};
+
+    #[test]
+    fn bcsr_matches_csr_exact_tiling() {
+        let mut rng = Rng::new(10);
+        let coo = Coo::random_structurally_symmetric(32, 4, false, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        for (r, c) in [(1, 1), (2, 2), (4, 4), (2, 4)] {
+            let b = Bcsr::from_csr(&csr, r, c);
+            let x: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+            let (mut y1, mut y2) = (vec![0.0; 32], vec![0.0; 32]);
+            csr.spmv(&x, &mut y1);
+            b.spmv(&x, &mut y2);
+            propcheck::assert_close(&y1, &y2, 1e-12, 1e-12)
+                .unwrap_or_else(|e| panic!("block {r}x{c}: {e}"));
+        }
+    }
+
+    #[test]
+    fn bcsr_handles_ragged_edges() {
+        let mut rng = Rng::new(11);
+        let coo = Coo::random_structurally_symmetric(37, 3, false, &mut rng); // 37 % 2 != 0
+        let csr = Csr::from_coo(&coo);
+        let b = Bcsr::from_csr(&csr, 2, 3);
+        let x: Vec<f64> = (0..37).map(|_| rng.normal()).collect();
+        let (mut y1, mut y2) = (vec![0.0; 37], vec![0.0; 37]);
+        csr.spmv(&x, &mut y1);
+        b.spmv(&x, &mut y2);
+        propcheck::assert_close(&y1, &y2, 1e-12, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn fill_ratio_at_least_one() {
+        let mut rng = Rng::new(12);
+        let coo = Coo::random_structurally_symmetric(24, 2, false, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let b = Bcsr::from_csr(&csr, 2, 2);
+        assert!(b.fill_ratio(csr.nnz()) >= 1.0);
+        let b1 = Bcsr::from_csr(&csr, 1, 1);
+        assert_eq!(b1.fill_ratio(csr.nnz()), 1.0);
+    }
+
+    #[test]
+    fn property_bcsr_vs_csr() {
+        propcheck::check(15, |rng| {
+            let n = 4 + rng.below(40);
+            let coo = Coo::random_structurally_symmetric(n, 3, false, rng);
+            let csr = Csr::from_coo(&coo);
+            let r = 1 + rng.below(4);
+            let c = 1 + rng.below(4);
+            let b = Bcsr::from_csr(&csr, r, c);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let (mut y1, mut y2) = (vec![0.0; n], vec![0.0; n]);
+            csr.spmv(&x, &mut y1);
+            b.spmv(&x, &mut y2);
+            propcheck::assert_close(&y1, &y2, 1e-11, 1e-11)
+        });
+    }
+}

@@ -1,0 +1,267 @@
+//! COO (triplet) format — the assembly staging area.
+//!
+//! Every generator (`gen/`) and the Matrix-Market reader produce a [`Coo`];
+//! conversions to CSR/CSRC sort, deduplicate (summing duplicates, the FEM
+//! assembly convention) and compress.
+
+use crate::util::Rng;
+
+/// Coordinate-format sparse matrix; entries may be unsorted and may contain
+/// duplicates until [`Coo::compact`] is called.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols, "({i},{j}) out of {}x{}", self.nrows, self.ncols);
+        self.rows.push(i as u32);
+        self.cols.push(j as u32);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Sort by (row, col) and sum duplicate coordinates (FEM assembly
+    /// semantics). Zero-valued entries are *kept*: structural non-zeros
+    /// with value 0 are legal and matter for symmetry of the pattern.
+    pub fn compact(&mut self) {
+        let n = self.nnz();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let (rows, cols) = (&self.rows, &self.cols);
+        order.sort_unstable_by_key(|&k| ((rows[k as usize] as u64) << 32) | cols[k as usize] as u64);
+        let mut r = Vec::with_capacity(n);
+        let mut c = Vec::with_capacity(n);
+        let mut v = Vec::with_capacity(n);
+        for &k in &order {
+            let k = k as usize;
+            if let (Some(&lr), Some(&lc)) = (r.last(), c.last()) {
+                if lr == self.rows[k] && lc == self.cols[k] {
+                    *v.last_mut().unwrap() += self.vals[k];
+                    continue;
+                }
+            }
+            r.push(self.rows[k]);
+            c.push(self.cols[k]);
+            v.push(self.vals[k]);
+        }
+        self.rows = r;
+        self.cols = c;
+        self.vals = v;
+    }
+
+    /// Is the *pattern* symmetric? (a_ij != structural-zero implies a_ji
+    /// too; values are irrelevant.) Requires a compacted matrix.
+    pub fn is_structurally_symmetric(&self) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let mut pairs: Vec<u64> = self
+            .rows
+            .iter()
+            .zip(&self.cols)
+            .map(|(&i, &j)| ((i as u64) << 32) | j as u64)
+            .collect();
+        pairs.sort_unstable();
+        self.rows.iter().zip(&self.cols).all(|(&i, &j)| {
+            i == j || pairs.binary_search(&(((j as u64) << 32) | i as u64)).is_ok()
+        })
+    }
+
+    /// Augment the pattern so it becomes structurally symmetric: for every
+    /// (i, j) without a mirror, add an explicit zero at (j, i). Also ensures
+    /// a full diagonal (CSRC stores ad(n) densely). Compacts first.
+    pub fn symmetrize_pattern(&mut self) {
+        assert_eq!(self.nrows, self.ncols, "pattern symmetrization needs a square matrix");
+        self.compact();
+        let mut pairs: Vec<u64> = self
+            .rows
+            .iter()
+            .zip(&self.cols)
+            .map(|(&i, &j)| ((i as u64) << 32) | j as u64)
+            .collect();
+        pairs.sort_unstable();
+        let mut extra_r = Vec::new();
+        let mut extra_c = Vec::new();
+        for (&i, &j) in self.rows.iter().zip(&self.cols) {
+            if i != j && pairs.binary_search(&(((j as u64) << 32) | i as u64)).is_err() {
+                extra_r.push(j);
+                extra_c.push(i);
+            }
+        }
+        let mut have_diag = vec![false; self.nrows];
+        for (&i, &j) in self.rows.iter().zip(&self.cols) {
+            if i == j {
+                have_diag[i as usize] = true;
+            }
+        }
+        for (i, have) in have_diag.iter().enumerate() {
+            if !have {
+                extra_r.push(i as u32);
+                extra_c.push(i as u32);
+            }
+        }
+        self.rows.extend_from_slice(&extra_r);
+        self.cols.extend_from_slice(&extra_c);
+        self.vals.extend(std::iter::repeat(0.0).take(extra_r.len()));
+        self.compact();
+    }
+
+    /// Dense oracle (tests only; O(n^2) memory).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut a = vec![vec![0.0; self.ncols]; self.nrows];
+        for ((&i, &j), &v) in self.rows.iter().zip(&self.cols).zip(&self.vals) {
+            a[i as usize][j as usize] += v;
+        }
+        a
+    }
+
+    /// Seeded random structurally-symmetric matrix with ~`nnz_per_row`
+    /// off-diagonals per row, optionally numerically symmetric. Always has
+    /// a full (dominant) diagonal so solver tests get SPD-ish systems.
+    pub fn random_structurally_symmetric(
+        n: usize,
+        nnz_per_row: usize,
+        numeric_symmetric: bool,
+        rng: &mut Rng,
+    ) -> Coo {
+        let mut coo = Coo::with_capacity(n, n, n * (nnz_per_row + 1));
+        for i in 0..n {
+            coo.push(i, i, 4.0 + rng.normal().abs() + 2.0 * nnz_per_row as f64);
+        }
+        for i in 1..n {
+            let k = nnz_per_row.min(i).min(1 + rng.below(nnz_per_row.max(1)));
+            for j in rng.distinct_below(k, i) {
+                let v = rng.normal();
+                coo.push(i, j, v);
+                coo.push(j, i, if numeric_symmetric { v } else { rng.normal() });
+            }
+        }
+        coo.compact();
+        coo
+    }
+
+    /// Banded structurally-symmetric matrix: half-bandwidth `hbw`, full
+    /// band. The torsion1/minsurfo/dixmaanl analogues (smallest bandwidth
+    /// in Table 1) use hbw 1–2.
+    pub fn banded(n: usize, hbw: usize, numeric_symmetric: bool, rng: &mut Rng) -> Coo {
+        let mut coo = Coo::with_capacity(n, n, n * (2 * hbw + 1));
+        for i in 0..n {
+            coo.push(i, i, 4.0 + 2.0 * hbw as f64 + rng.normal().abs());
+            for j in i.saturating_sub(hbw)..i {
+                let v = rng.normal();
+                coo.push(i, j, v);
+                coo.push(j, i, if numeric_symmetric { v } else { rng.normal() });
+            }
+        }
+        coo.compact();
+        coo
+    }
+
+    /// Fully dense matrix (the paper's `dense_1000`).
+    pub fn dense_random(n: usize, rng: &mut Rng) -> Coo {
+        let mut coo = Coo::with_capacity(n, n, n * n);
+        for i in 0..n {
+            for j in 0..n {
+                let v = if i == j { n as f64 + rng.normal().abs() } else { rng.normal() };
+                coo.push(i, j, v);
+            }
+        }
+        coo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compact_sums_duplicates() {
+        let mut c = Coo::new(3, 3);
+        c.push(1, 2, 1.0);
+        c.push(1, 2, 2.5);
+        c.push(0, 0, 1.0);
+        c.compact();
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.rows, vec![0, 1]);
+        assert_eq!(c.cols, vec![0, 2]);
+        assert_eq!(c.vals, vec![1.0, 3.5]);
+    }
+
+    #[test]
+    fn structural_symmetry_detection() {
+        let mut c = Coo::new(3, 3);
+        c.push(0, 0, 1.0);
+        c.push(1, 1, 1.0);
+        c.push(2, 2, 1.0);
+        c.push(0, 2, 5.0);
+        c.compact();
+        assert!(!c.is_structurally_symmetric());
+        c.push(2, 0, 0.0); // explicit zero still counts structurally
+        c.compact();
+        assert!(c.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn symmetrize_adds_mirrors_and_diagonal() {
+        let mut c = Coo::new(4, 4);
+        c.push(3, 0, 2.0);
+        c.push(1, 2, 1.0);
+        c.symmetrize_pattern();
+        assert!(c.is_structurally_symmetric());
+        // All 4 diagonal entries present.
+        let diag = c.rows.iter().zip(&c.cols).filter(|(i, j)| i == j).count();
+        assert_eq!(diag, 4);
+        // Mirror (0,3) exists with value 0.
+        let idx = c.rows.iter().zip(&c.cols).position(|(&i, &j)| i == 0 && j == 3).unwrap();
+        assert_eq!(c.vals[idx], 0.0);
+    }
+
+    #[test]
+    fn random_structurally_symmetric_is() {
+        let mut rng = Rng::new(1);
+        let c = Coo::random_structurally_symmetric(50, 4, false, &mut rng);
+        assert!(c.is_structurally_symmetric());
+        assert_eq!(c.nrows, 50);
+    }
+
+    #[test]
+    fn banded_has_expected_band() {
+        let mut rng = Rng::new(2);
+        let c = Coo::banded(20, 2, true, &mut rng);
+        assert!(c.is_structurally_symmetric());
+        for (&i, &j) in c.rows.iter().zip(&c.cols) {
+            assert!((i as i64 - j as i64).abs() <= 2);
+        }
+    }
+
+    #[test]
+    fn rectangular_not_symmetric() {
+        let mut c = Coo::new(2, 3);
+        c.push(0, 0, 1.0);
+        c.compact();
+        assert!(!c.is_structurally_symmetric());
+    }
+}

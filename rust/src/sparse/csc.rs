@@ -1,0 +1,140 @@
+//! CSC — compressed sparse column, the transpose view of CSR.
+//!
+//! Needed as the §5 contrast: computing Aᵀx with CSR means either an
+//! expensive scatter sweep or converting to CSC first; CSRC gets the
+//! transpose by swapping two pointers.
+
+use super::{Coo, Csr, LinOp};
+
+#[derive(Clone, Debug)]
+pub struct Csc {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Column pointers (len ncols+1).
+    pub ja: Vec<u32>,
+    /// Row indices (len nnz).
+    pub ia: Vec<u32>,
+    pub a: Vec<f64>,
+}
+
+impl Csc {
+    pub fn from_csr(csr: &Csr) -> Csc {
+        let nnz = csr.nnz();
+        let mut colptr = vec![0u32; csr.ncols + 1];
+        for &j in &csr.ja {
+            colptr[j as usize + 1] += 1;
+        }
+        for j in 0..csr.ncols {
+            colptr[j + 1] += colptr[j];
+        }
+        let mut next = colptr.clone();
+        let mut ia = vec![0u32; nnz];
+        let mut a = vec![0.0; nnz];
+        for i in 0..csr.nrows {
+            for k in csr.row_range(i) {
+                let j = csr.ja[k] as usize;
+                let dst = next[j] as usize;
+                ia[dst] = i as u32;
+                a[dst] = csr.a[k];
+                next[j] += 1;
+            }
+        }
+        Csc { nrows: csr.nrows, ncols: csr.ncols, ja: colptr, ia, a }
+    }
+
+    pub fn from_coo(coo: &Coo) -> Csc {
+        Csc::from_csr(&Csr::from_coo(coo))
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.a.len()
+    }
+
+    /// y = A x via column sweep (scatter).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        debug_assert_eq!(y.len(), self.nrows);
+        y.fill(0.0);
+        for j in 0..self.ncols {
+            let xj = x[j];
+            for k in self.ja[j] as usize..self.ja[j + 1] as usize {
+                y[self.ia[k] as usize] += self.a[k] * xj;
+            }
+        }
+    }
+
+    /// y = Aᵀ x: for CSC this is the gather sweep (cheap).
+    pub fn spmv_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.nrows);
+        debug_assert_eq!(y.len(), self.ncols);
+        for j in 0..self.ncols {
+            let mut t = 0.0;
+            for k in self.ja[j] as usize..self.ja[j + 1] as usize {
+                t += self.a[k] * x[self.ia[k] as usize];
+            }
+            y[j] = t;
+        }
+    }
+}
+
+impl LinOp for Csc {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y)
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv_t(x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn csc_spmv_matches_csr() {
+        let mut rng = Rng::new(5);
+        let coo = Coo::random_structurally_symmetric(30, 4, false, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let csc = Csc::from_csr(&csr);
+        assert_eq!(csc.nnz(), csr.nnz());
+        let x: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let (mut y1, mut y2) = (vec![0.0; 30], vec![0.0; 30]);
+        csr.spmv(&x, &mut y1);
+        csc.spmv(&x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn csc_transpose_matches_csr_transpose() {
+        let mut rng = Rng::new(6);
+        let coo = Coo::random_structurally_symmetric(25, 3, false, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let csc = Csc::from_csr(&csr);
+        let x: Vec<f64> = (0..25).map(|_| rng.normal()).collect();
+        let (mut y1, mut y2) = (vec![0.0; 25], vec![0.0; 25]);
+        csr.spmv_t(&x, &mut y1);
+        csc.spmv_t(&x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let mut coo = Coo::new(2, 4);
+        coo.push(0, 3, 2.0);
+        coo.push(1, 0, 1.0);
+        coo.compact();
+        let csc = Csc::from_coo(&coo);
+        let mut y = vec![0.0; 2];
+        csc.spmv(&[1.0, 0.0, 0.0, 10.0], &mut y);
+        assert_eq!(y, vec![20.0, 1.0]);
+    }
+}

@@ -1,0 +1,237 @@
+//! CSR — compressed sparse row (Saad [28]); the paper's baseline format.
+//!
+//! `ia(n+1)` row pointers, `ja(nnz)` column indices, `a(nnz)` values.
+//! The SpMV here is the classical one whose load:flop ratio is 1.5
+//! (3 nnz loads / 2 nnz flops, §4.1), against which CSRC's ≈1.26 wins.
+
+use super::{Coo, LinOp};
+
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub ia: Vec<u32>,
+    pub ja: Vec<u32>,
+    pub a: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from a compacted COO (sorted, deduplicated).
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let mut ia = vec![0u32; coo.nrows + 1];
+        for &i in &coo.rows {
+            ia[i as usize + 1] += 1;
+        }
+        for i in 0..coo.nrows {
+            ia[i + 1] += ia[i];
+        }
+        Csr {
+            nrows: coo.nrows,
+            ncols: coo.ncols,
+            ia,
+            ja: coo.cols.clone(),
+            a: coo.vals.clone(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.a.len()
+    }
+
+    #[inline]
+    pub fn row_range(&self, i: usize) -> std::ops::Range<usize> {
+        self.ia[i] as usize..self.ia[i + 1] as usize
+    }
+
+    /// Classical CSR SpMV: y = A x.
+    ///
+    /// Same unchecked-indexing treatment as `Csrc::spmv` so the Fig. 5
+    /// comparison is optimizer-fair (the paper compares `-O3` Fortran on
+    /// both sides). Safety: `ia`/`ja` are construction-validated.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        unsafe {
+            for i in 0..self.nrows {
+                let mut t = 0.0;
+                let start = *self.ia.get_unchecked(i) as usize;
+                let end = *self.ia.get_unchecked(i + 1) as usize;
+                for k in start..end {
+                    t += self.a.get_unchecked(k) * x.get_unchecked(*self.ja.get_unchecked(k) as usize);
+                }
+                *y.get_unchecked_mut(i) = t;
+            }
+        }
+    }
+
+    /// yᵀ = Aᵀ x — requires a column-order sweep; expensive for CSR (the
+    /// §5 contrast with CSRC's free transpose).
+    pub fn spmv_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.nrows);
+        debug_assert_eq!(y.len(), self.ncols);
+        y.fill(0.0);
+        for i in 0..self.nrows {
+            let xi = x[i];
+            for k in self.row_range(i) {
+                y[self.ja[k] as usize] += self.a[k] * xi;
+            }
+        }
+    }
+
+    /// Value lookup (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> Option<f64> {
+        let r = self.row_range(i);
+        let row = &self.ja[r.clone()];
+        row.binary_search(&(j as u32)).ok().map(|p| self.a[r.start + p])
+    }
+
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for i in 0..self.nrows {
+            for k in self.row_range(i) {
+                coo.push(i, self.ja[k] as usize, self.a[k]);
+            }
+        }
+        coo
+    }
+
+    /// Is the non-zero *pattern* symmetric?
+    pub fn is_structurally_symmetric(&self) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        (0..self.nrows).all(|i| {
+            self.row_range(i).all(|k| {
+                let j = self.ja[k] as usize;
+                j == i || self.get(j, i).is_some()
+            })
+        })
+    }
+
+    /// Is the matrix numerically symmetric?
+    pub fn is_numerically_symmetric(&self, tol: f64) -> bool {
+        self.is_structurally_symmetric()
+            && (0..self.nrows).all(|i| {
+                self.row_range(i).all(|k| {
+                    let j = self.ja[k] as usize;
+                    j == i || (self.get(j, i).unwrap() - self.a[k]).abs() <= tol
+                })
+            })
+    }
+
+    /// Working-set bytes of one SpMV: all arrays + x + y (Table 1's ws).
+    pub fn working_set_bytes(&self) -> usize {
+        (self.ia.len() + self.ja.len()) * 4
+            + self.a.len() * 8
+            + (self.ncols + self.nrows) * 8
+    }
+
+    /// Flops of one SpMV (multiply+add counted separately): 2·nnz (§4.1).
+    pub fn flops(&self) -> usize {
+        2 * self.nnz()
+    }
+}
+
+impl LinOp for Csr {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y)
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv_t(x, y)
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        (0..self.nrows).map(|i| self.get(i, i).unwrap_or(0.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn example() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        let mut coo = Coo::new(3, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(1, 1, 3.0);
+        coo.push(2, 0, 4.0);
+        coo.push(2, 2, 5.0);
+        coo.compact();
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn spmv_matches_hand_computation() {
+        let a = example();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn spmv_t_matches_dense_transpose() {
+        let a = example();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        a.spmv_t(&x, &mut y);
+        assert_eq!(y, [13.0, 6.0, 17.0]); // Aᵀx
+    }
+
+    #[test]
+    fn get_and_diagonal() {
+        let a = example();
+        assert_eq!(a.get(0, 2), Some(2.0));
+        assert_eq!(a.get(0, 1), None);
+        assert_eq!(a.diagonal(), vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn structural_symmetry() {
+        let a = example();
+        assert!(a.is_structurally_symmetric()); // (0,2)&(2,0) both present
+        assert!(!a.is_numerically_symmetric(1e-12));
+    }
+
+    #[test]
+    fn coo_roundtrip() {
+        let a = example();
+        let back = Csr::from_coo(&{
+            let mut c = a.to_coo();
+            c.compact();
+            c
+        });
+        assert_eq!(a.ia, back.ia);
+        assert_eq!(a.ja, back.ja);
+        assert_eq!(a.a, back.a);
+    }
+
+    #[test]
+    fn random_spmv_vs_dense() {
+        let mut rng = Rng::new(3);
+        let coo = Coo::random_structurally_symmetric(40, 5, false, &mut rng);
+        let a = Csr::from_coo(&coo);
+        let dense = coo.to_dense();
+        let x: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; 40];
+        a.spmv(&x, &mut y);
+        for i in 0..40 {
+            let want: f64 = (0..40).map(|j| dense[i][j] * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-9 * (1.0 + want.abs()), "row {i}");
+        }
+    }
+
+    #[test]
+    fn working_set_grows_with_nnz() {
+        let a = example();
+        assert!(a.working_set_bytes() > 0);
+        assert_eq!(a.flops(), 10);
+    }
+}

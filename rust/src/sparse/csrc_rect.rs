@@ -1,0 +1,171 @@
+//! Rectangular CSRC (§2.1 of the paper).
+//!
+//! In overlapping domain decomposition an n×m local matrix (m > n) splits
+//! as A = A_S + A_R where A_S (n×n) has a structurally symmetric pattern
+//! and A_R (n×k, k = m−n) holds the couplings to the overlap nodes. A_S is
+//! stored in CSRC; A_R in an auxiliary CSR whose column indices live in
+//! [n, m). The SpMV is Fig. 2(b): the CSRC sweep plus a second inner loop
+//! over the rectangular part.
+
+use super::{Coo, Csr, Csrc, CsrcError};
+
+#[derive(Clone, Debug)]
+pub struct CsrcRect {
+    /// Square part (n×n), structurally symmetric.
+    pub square: Csrc,
+    /// Rectangular part as CSR over columns [n, m).
+    pub iar: Vec<u32>,
+    pub jar: Vec<u32>,
+    pub ar: Vec<f64>,
+    /// Total column count m ≥ n.
+    pub m: usize,
+}
+
+impl CsrcRect {
+    /// Split an n×m COO (m ≥ n) into CSRC square part + CSR rectangle.
+    /// Fails if the square part's pattern is not structurally symmetric.
+    pub fn from_coo(coo: &Coo) -> Result<CsrcRect, CsrcError> {
+        let (n, m) = (coo.nrows, coo.ncols);
+        assert!(m >= n, "CsrcRect expects m >= n, got {n}x{m}");
+        let mut sq = Coo::with_capacity(n, n, coo.nnz());
+        let mut rect = Coo::with_capacity(n, m - n, coo.nnz() / 4 + 1);
+        for ((&i, &j), &v) in coo.rows.iter().zip(&coo.cols).zip(&coo.vals) {
+            if (j as usize) < n {
+                sq.push(i as usize, j as usize, v);
+            } else {
+                rect.push(i as usize, j as usize - n, v);
+            }
+        }
+        sq.compact();
+        rect.compact();
+        let square = Csrc::from_coo(&sq)?;
+        let rcsr = Csr::from_coo(&rect);
+        Ok(CsrcRect { square, iar: rcsr.ia, jar: rcsr.ja, ar: rcsr.a, m })
+    }
+
+    pub fn n(&self) -> usize {
+        self.square.n
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.square.nnz() + self.ar.len()
+    }
+
+    /// Fig. 2(b): y (len n) = A x (len m).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        let n = self.n();
+        debug_assert_eq!(x.len(), self.m);
+        debug_assert_eq!(y.len(), n);
+        y.fill(0.0);
+        for i in 0..n {
+            let xi = x[i];
+            let mut t = self.square.ad[i] * xi;
+            for k in self.square.row_range(i) {
+                let j = self.square.ja[k] as usize;
+                t += self.square.al[k] * x[j];
+                y[j] += self.square.au[k] * xi;
+            }
+            for k in self.iar[i] as usize..self.iar[i + 1] as usize {
+                t += self.ar[k] * x[n + self.jar[k] as usize];
+            }
+            y[i] += t;
+        }
+    }
+
+    pub fn working_set_bytes(&self) -> usize {
+        self.square.working_set_bytes()
+            + (self.iar.len() + self.jar.len()) * 4
+            + self.ar.len() * 8
+            + (self.m - self.n()) * 8 // the extra tail of x
+    }
+
+    pub fn flops(&self) -> usize {
+        self.square.flops() + 2 * self.ar.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Rng};
+
+    fn random_rect(n: usize, m: usize, rng: &mut Rng) -> Coo {
+        let mut coo = Coo::new(n, m);
+        // Structurally symmetric square part.
+        let sq = Coo::random_structurally_symmetric(n, 3, false, rng);
+        for ((&i, &j), &v) in sq.rows.iter().zip(&sq.cols).zip(&sq.vals) {
+            coo.push(i as usize, j as usize, v);
+        }
+        // Rectangular couplings (only when there is an overlap region).
+        if m > n {
+            for i in 0..n {
+                for _ in 0..rng.below(3) {
+                    coo.push(i, n + rng.below(m - n), rng.normal());
+                }
+            }
+        }
+        coo.compact();
+        coo
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut rng = Rng::new(8);
+        let coo = random_rect(20, 28, &mut rng);
+        let rect = CsrcRect::from_coo(&coo).unwrap();
+        assert_eq!(rect.n(), 20);
+        assert_eq!(rect.m, 28);
+        let dense = coo.to_dense();
+        let x: Vec<f64> = (0..28).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; 20];
+        rect.spmv(&x, &mut y);
+        for i in 0..20 {
+            let want: f64 = (0..28).map(|j| dense[i][j] * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-10, "row {i}");
+        }
+    }
+
+    #[test]
+    fn square_only_matrix_works() {
+        let mut rng = Rng::new(9);
+        let sq = Coo::random_structurally_symmetric(15, 3, true, &mut rng);
+        let rect = CsrcRect::from_coo(&sq).unwrap();
+        assert_eq!(rect.m, 15);
+        assert_eq!(rect.ar.len(), 0);
+        let x: Vec<f64> = (0..15).map(|_| rng.normal()).collect();
+        let (mut y1, mut y2) = (vec![0.0; 15], vec![0.0; 15]);
+        rect.spmv(&x, &mut y1);
+        rect.square.spmv_into_zeroed(&x, &mut y2);
+        propcheck::assert_close(&y1, &y2, 1e-12, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn rejects_asymmetric_square_part() {
+        let mut coo = Coo::new(3, 5);
+        for i in 0..3 {
+            coo.push(i, i, 1.0);
+        }
+        coo.push(2, 0, 1.0); // unmirrored inside square part
+        coo.push(0, 4, 1.0); // rectangular part — fine
+        coo.compact();
+        assert!(CsrcRect::from_coo(&coo).is_err());
+    }
+
+    #[test]
+    fn property_rect_spmv_vs_dense() {
+        propcheck::check(15, |rng| {
+            let n = 5 + rng.below(20);
+            let m = n + rng.below(10);
+            let coo = random_rect(n, m, rng);
+            let rect = CsrcRect::from_coo(&coo).map_err(|e| e.to_string())?;
+            let dense = coo.to_dense();
+            let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0; n];
+            rect.spmv(&x, &mut y);
+            let want: Vec<f64> = (0..n)
+                .map(|i| (0..m).map(|j| dense[i][j] * x[j]).sum())
+                .collect();
+            propcheck::assert_close(&y, &want, 1e-10, 1e-10)
+        });
+    }
+}

@@ -1,0 +1,86 @@
+//! Dense matrix — the test oracle and the `dense_1000` dataset entry.
+
+use super::{Coo, LinOp};
+
+#[derive(Clone, Debug)]
+pub struct DenseMat {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row-major values.
+    pub a: Vec<f64>,
+}
+
+impl DenseMat {
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, a: vec![0.0; nrows * ncols] }
+    }
+
+    pub fn from_coo(coo: &Coo) -> Self {
+        let mut d = Self::zeros(coo.nrows, coo.ncols);
+        for ((&i, &j), &v) in coo.rows.iter().zip(&coo.cols).zip(&coo.vals) {
+            d.a[i as usize * coo.ncols + j as usize] += v;
+        }
+        d
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.ncols + j]
+    }
+
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.ncols);
+        for i in 0..self.nrows {
+            let row = &self.a[i * self.ncols..(i + 1) * self.ncols];
+            y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+    }
+
+    pub fn spmv_t(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.nrows);
+        y.fill(0.0);
+        for i in 0..self.nrows {
+            let xi = x[i];
+            let row = &self.a[i * self.ncols..(i + 1) * self.ncols];
+            for (yj, &aij) in y.iter_mut().zip(row) {
+                *yj += aij * xi;
+            }
+        }
+    }
+}
+
+impl LinOp for DenseMat {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols);
+        self.nrows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y)
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv_t(x, y)
+    }
+    fn diagonal(&self) -> Vec<f64> {
+        (0..self.nrows.min(self.ncols)).map(|i| self.get(i, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_from_coo_and_spmv() {
+        let mut coo = Coo::new(2, 3);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 2, 2.0);
+        coo.push(1, 1, 3.0);
+        let d = DenseMat::from_coo(&coo);
+        let mut y = vec![0.0; 2];
+        d.spmv(&[1.0, 2.0, 3.0], &mut y);
+        assert_eq!(y, vec![7.0, 6.0]);
+        let mut yt = vec![0.0; 3];
+        d.spmv_t(&[1.0, 1.0], &mut yt);
+        assert_eq!(yt, vec![1.0, 3.0, 2.0]);
+    }
+}

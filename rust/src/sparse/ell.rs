@@ -1,0 +1,127 @@
+//! ELL-padded CSRC — the fixed-shape layout the Pallas kernel (L1) and the
+//! XLA runtime consume. f32/i32 because that is what the AOT artifacts are
+//! lowered with; the rust-native formats stay f64.
+//!
+//! Convention (mirrors `python/compile/kernels/csrc_spmv.py`): padding
+//! slots carry `ja == row index` with zero values, so they contribute
+//! nothing to either the gather or the scatter.
+
+#[derive(Clone, Debug)]
+pub struct Ell {
+    /// Padded dimension (n_pad ≥ logical n).
+    pub n: usize,
+    /// Max lower-entries per row.
+    pub w: usize,
+    pub ad: Vec<f32>,       // n
+    pub al: Vec<f32>,       // n*w, row-major
+    pub au: Vec<f32>,       // n*w
+    pub ja: Vec<i32>,       // n*w
+}
+
+impl Ell {
+    pub fn empty(n: usize, w: usize) -> Ell {
+        Ell {
+            n,
+            w,
+            ad: vec![0.0; n],
+            al: vec![0.0; n * w],
+            au: vec![0.0; n * w],
+            ja: vec![0; n * w],
+        }
+    }
+
+    /// Reference SpMV on the ELL layout (mirrors python ref.py) — used to
+    /// cross-check the XLA runtime path from rust.
+    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut y: Vec<f32> = (0..self.n).map(|i| self.ad[i] * x[i]).collect();
+        for i in 0..self.n {
+            let xi = x[i];
+            for s in 0..self.w {
+                let k = i * self.w + s;
+                let j = self.ja[k] as usize;
+                y[i] += self.al[k] * x[j];
+                y[j] += self.au[k] * xi;
+            }
+        }
+        y
+    }
+
+    /// Validity: padding/index invariants the kernel relies on.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ad.len() != self.n
+            || self.al.len() != self.n * self.w
+            || self.au.len() != self.n * self.w
+            || self.ja.len() != self.n * self.w
+        {
+            return Err("array length mismatch".into());
+        }
+        for i in 0..self.n {
+            for s in 0..self.w {
+                let k = i * self.w + s;
+                let j = self.ja[k];
+                if j < 0 || j as usize >= self.n {
+                    return Err(format!("ja[{i},{s}] = {j} out of range"));
+                }
+                if j as usize > i && (self.al[k] != 0.0 || self.au[k] != 0.0) {
+                    return Err(format!(
+                        "ja[{i},{s}] = {j} is not strictly lower but has a value"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_valid_and_zero() {
+        let e = Ell::empty(8, 3);
+        // Padding must point at the row itself to be valid.
+        let mut e2 = e.clone();
+        for i in 0..8 {
+            for s in 0..3 {
+                e2.ja[i * 3 + s] = i as i32;
+            }
+        }
+        assert!(e2.validate().is_ok());
+        let y = e2.spmv_ref(&vec![1.0; 8]);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn validate_catches_bad_index() {
+        let mut e = Ell::empty(4, 1);
+        e.ja[0] = 9;
+        assert!(e.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_upper_value() {
+        let mut e = Ell::empty(4, 1);
+        for i in 0..4 {
+            e.ja[i] = i as i32;
+        }
+        e.ja[0] = 2; // row 0 pointing above the diagonal...
+        e.al[0] = 1.0; // ...with a value => invalid
+        assert!(e.validate().is_err());
+    }
+
+    #[test]
+    fn spmv_ref_single_pair() {
+        let mut e = Ell::empty(4, 1);
+        for i in 0..4 {
+            e.ja[i] = i as i32;
+            e.ad[i] = 1.0;
+        }
+        e.ja[3] = 1;
+        e.al[3] = 2.0; // a[3][1] = 2
+        e.au[3] = 5.0; // a[1][3] = 5
+        let y = e.spmv_ref(&[1.0, 10.0, 100.0, 1000.0]);
+        assert_eq!(y, vec![1.0, 10.0 + 5000.0, 100.0, 1000.0 + 20.0]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Matrix-Market I/O (coordinate format) — so the real University of
+//! Florida files from Table 1 drop straight into the harness when
+//! available, and so generated suites can be persisted and reloaded.
+//!
+//! Supports `matrix coordinate real|integer|pattern general|symmetric`.
+//! Symmetric files store the lower triangle; reading expands mirrors.
+
+use super::Coo;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum MmioError {
+    Io(std::io::Error),
+    Parse(String),
+}
+
+impl std::fmt::Display for MmioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MmioError::Io(e) => write!(f, "mmio io error: {e}"),
+            MmioError::Parse(m) => write!(f, "mmio parse error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for MmioError {}
+
+impl From<std::io::Error> for MmioError {
+    fn from(e: std::io::Error) -> Self {
+        MmioError::Io(e)
+    }
+}
+
+fn perr(msg: impl Into<String>) -> MmioError {
+    MmioError::Parse(msg.into())
+}
+
+/// Read a Matrix-Market coordinate file into COO (1-based → 0-based).
+pub fn read_matrix_market(path: &Path) -> Result<Coo, MmioError> {
+    let f = std::fs::File::open(path)?;
+    read_from(std::io::BufReader::new(f))
+}
+
+pub fn read_from<R: BufRead>(r: R) -> Result<Coo, MmioError> {
+    let mut lines = r.lines();
+    let header = lines.next().ok_or_else(|| perr("empty file"))??;
+    let toks: Vec<&str> = header.split_whitespace().collect();
+    if toks.len() < 5 || !toks[0].starts_with("%%MatrixMarket") {
+        return Err(perr("missing %%MatrixMarket header"));
+    }
+    if toks[1] != "matrix" || toks[2] != "coordinate" {
+        return Err(perr(format!("unsupported kind: {} {}", toks[1], toks[2])));
+    }
+    let field = toks[3]; // real | integer | pattern
+    let sym = toks[4]; // general | symmetric | skew-symmetric
+    if !matches!(field, "real" | "integer" | "pattern") {
+        return Err(perr(format!("unsupported field: {field}")));
+    }
+    if !matches!(sym, "general" | "symmetric") {
+        return Err(perr(format!("unsupported symmetry: {sym}")));
+    }
+    // Skip comments, read size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(line);
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| perr("missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| perr(format!("bad size token {t}"))))
+        .collect::<Result<_, _>>()?;
+    if dims.len() != 3 {
+        return Err(perr("size line needs: nrows ncols nnz"));
+    }
+    let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
+    let mut coo = Coo::with_capacity(nrows, ncols, nnz * if sym == "symmetric" { 2 } else { 1 });
+    let mut count = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it
+            .next()
+            .ok_or_else(|| perr("short entry line"))?
+            .parse()
+            .map_err(|_| perr("bad row index"))?;
+        let j: usize = it
+            .next()
+            .ok_or_else(|| perr("short entry line"))?
+            .parse()
+            .map_err(|_| perr("bad col index"))?;
+        let v: f64 = if field == "pattern" {
+            1.0
+        } else {
+            it.next().ok_or_else(|| perr("missing value"))?.parse().map_err(|_| perr("bad value"))?
+        };
+        if i == 0 || j == 0 || i > nrows || j > ncols {
+            return Err(perr(format!("index ({i},{j}) out of 1..{nrows}x1..{ncols}")));
+        }
+        coo.push(i - 1, j - 1, v);
+        if sym == "symmetric" && i != j {
+            coo.push(j - 1, i - 1, v);
+        }
+        count += 1;
+    }
+    if count != nnz {
+        return Err(perr(format!("expected {nnz} entries, found {count}")));
+    }
+    coo.compact();
+    Ok(coo)
+}
+
+/// Write COO as `matrix coordinate real general` (0-based → 1-based).
+pub fn write_matrix_market(path: &Path, coo: &Coo, comment: &str) -> Result<(), MmioError> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    for line in comment.lines() {
+        writeln!(w, "% {line}")?;
+    }
+    writeln!(w, "{} {} {}", coo.nrows, coo.ncols, coo.nnz())?;
+    for ((&i, &j), &v) in coo.rows.iter().zip(&coo.cols).zip(&coo.vals) {
+        writeln!(w, "{} {} {:.17e}", i + 1, j + 1, v)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_general() {
+        let mut rng = Rng::new(20);
+        let coo = Coo::random_structurally_symmetric(25, 3, false, &mut rng);
+        let dir = std::env::temp_dir().join("csrc_mmio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.mtx");
+        write_matrix_market(&path, &coo, "test matrix").unwrap();
+        let back = read_matrix_market(&path).unwrap();
+        assert_eq!(back.nrows, coo.nrows);
+        assert_eq!(back.nnz(), coo.nnz());
+        assert_eq!(back.rows, coo.rows);
+        assert_eq!(back.cols, coo.cols);
+        for (a, b) in back.vals.iter().zip(&coo.vals) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn reads_symmetric_with_expansion() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n\
+                    % a comment\n\
+                    3 3 4\n\
+                    1 1 2.0\n2 2 2.0\n3 3 2.0\n3 1 5.0\n";
+        let coo = read_from(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(coo.nnz(), 5); // 3 diag + both mirrors of (3,1)
+        assert!(coo.is_structurally_symmetric());
+    }
+
+    #[test]
+    fn reads_pattern() {
+        let text = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 1\n2 1\n";
+        let coo = read_from(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(coo.vals, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_counts() {
+        assert!(read_from(std::io::Cursor::new("garbage\n")).is_err());
+        let missing = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_from(std::io::Cursor::new(missing)).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_from(std::io::Cursor::new(oob)).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! Sparse matrix storage formats.
+//!
+//! The paper's contribution is the **CSRC** format ([`csrc::Csrc`]) — a CSR
+//! specialization for structurally symmetric matrices that stores only half
+//! of the off-diagonal connectivity (§2 of the paper). The other formats
+//! here are the comparison baselines and substrates the evaluation needs:
+//!
+//! * [`coo::Coo`] — triplet builder every generator assembles into,
+//! * [`csr::Csr`] / [`csc::Csc`] — the classical compressed formats (Fig. 5
+//!   baseline),
+//! * [`bcsr::Bcsr`] — block CSR, the blocking baseline discussed in §1.1,
+//! * [`csrc_rect::CsrcRect`] — the §2.1 rectangular extension used by
+//!   overlapping domain decomposition,
+//! * [`dense`] — dense oracle used by tests,
+//! * [`mmio`] — Matrix-Market I/O so real UF-collection files drop in.
+
+pub mod bcsr;
+pub mod coo;
+pub mod csc;
+pub mod csr;
+pub mod csrc;
+pub mod csrc_rect;
+pub mod dense;
+pub mod ell;
+pub mod mmio;
+
+pub use bcsr::Bcsr;
+pub use coo::Coo;
+pub use csc::Csc;
+pub use csr::Csr;
+pub use csrc::{Csrc, CsrcError};
+pub use csrc_rect::CsrcRect;
+pub use ell::Ell;
+
+/// A square linear operator: the trait the solvers (`solver/`) and the
+/// coordinator consume, implemented by every format and by the parallel
+/// engines.
+pub trait LinOp {
+    fn dim(&self) -> usize;
+    /// y = A x (y is fully overwritten).
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+    /// y = Aᵀ x. Default: unimplemented — CSRC overrides this for free
+    /// (swap al/au, the paper's §5 point), CSR pays for a transpose pass.
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        let _ = (x, y);
+        unimplemented!("transpose product not supported by this operator");
+    }
+    /// Diagonal extraction (for Jacobi preconditioning); default panics.
+    fn diagonal(&self) -> Vec<f64> {
+        unimplemented!("diagonal not supported by this operator");
+    }
+}

@@ -1,0 +1,126 @@
+//! Criterion-style micro-bench harness (criterion is not vendored).
+//!
+//! Usage from a `[[bench]] harness = false` target:
+//!
+//! ```no_run
+//! use csrc_spmv::util::bench::Bench;
+//! let mut b = Bench::new("fig5_sequential");
+//! b.run("csr/poisson2d", || { /* one product */ });
+//! b.finish();
+//! ```
+//!
+//! Reports median / MAD over samples after warmup; honours
+//! `CSRC_BENCH_FAST=1` for CI-speed runs.
+
+use super::stats;
+use std::time::Instant;
+
+pub struct Bench {
+    group: String,
+    rows: Vec<(String, f64, f64, usize)>, // (name, median_s, mad_s, iters)
+    samples: usize,
+    min_iters: usize,
+    target_sample_s: f64,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let fast = std::env::var("CSRC_BENCH_FAST").ok().as_deref() == Some("1");
+        println!("== bench group: {group} ==");
+        Self {
+            group: group.to_string(),
+            rows: Vec::new(),
+            samples: if fast { 3 } else { 7 },
+            min_iters: 1,
+            target_sample_s: if fast { 0.02 } else { 0.15 },
+        }
+    }
+
+    /// Time `f`, choosing an iteration count so one sample lasts
+    /// ~target_sample_s, then record `samples` samples.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        // Calibrate.
+        let mut iters = self.min_iters;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t.elapsed().as_secs_f64();
+            if dt >= self.target_sample_s || iters >= 1 << 24 {
+                break;
+            }
+            let scale = (self.target_sample_s / dt.max(1e-9)).min(64.0);
+            iters = ((iters as f64 * scale).ceil() as usize).max(iters + 1);
+        }
+        // Measure.
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let med = stats::median(&per_iter);
+        let mad = stats::mad(&per_iter);
+        println!(
+            "{:<48} {:>12} / iter   (±{:.1}%, {} iters × {} samples)",
+            name,
+            fmt_time(med),
+            if med > 0.0 { 100.0 * mad / med } else { 0.0 },
+            iters,
+            self.samples
+        );
+        self.rows.push((name.to_string(), med, mad, iters));
+        med
+    }
+
+    /// Record an externally computed scalar (e.g. Mflop/s, speedup) so it
+    /// appears in the bench report alongside timings.
+    pub fn record(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{:<48} {:>12.3} {}", name, value, unit);
+        self.rows.push((format!("{name} [{unit}]"), value, 0.0, 0));
+    }
+
+    pub fn finish(self) {
+        println!("== {} done: {} entries ==\n", self.group, self.rows.len());
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("CSRC_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        let med = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(med > 0.0 && med < 0.1);
+        b.finish();
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

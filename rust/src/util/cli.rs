@@ -1,0 +1,92 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor tree).
+//!
+//! Model: `csrc <subcommand> [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv-style tokens (after the subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.opt(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.opt(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(s(&["pos1", "--k", "v", "--flag", "--x=3", "pos2"]));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert_eq!(a.opt("k"), Some("v"));
+        assert_eq!(a.opt("x"), Some("3"));
+        assert!(a.has_flag("flag"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(s(&["--n", "42", "--rho", "0.5"]));
+        assert_eq!(a.usize_or("n", 0), 42);
+        assert_eq!(a.f64_or("rho", 0.0), 0.5);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(s(&["--verbose"]));
+        assert!(a.has_flag("verbose"));
+        assert!(a.opt("verbose").is_none());
+    }
+}

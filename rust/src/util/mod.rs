@@ -1,0 +1,173 @@
+//! Small std-only infrastructure: seeded RNG, statistics, timers, a JSON
+//! reader for the AOT manifest, a CLI parser, a criterion-style bench
+//! harness and a property-test runner.
+//!
+//! These exist because the build environment is offline: only the `xla`
+//! crate's vendored dep tree is available, so `rand`, `clap`, `serde_json`,
+//! `criterion` and `proptest` are replaced by the minimal in-tree versions
+//! below. Each is deliberately tiny and fully unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod stats;
+
+/// xorshift64* — deterministic, seedable, good enough for workload
+/// generation and property tests (not cryptographic).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point.
+        Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, bound).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0);
+        (self.next_u64() % bound as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// k distinct values from [0, bound), sorted. O(bound) when k ~ bound,
+    /// rejection sampling otherwise.
+    pub fn distinct_below(&mut self, k: usize, bound: usize) -> Vec<usize> {
+        assert!(k <= bound);
+        if k * 3 >= bound {
+            // Partial Fisher-Yates.
+            let mut all: Vec<usize> = (0..bound).collect();
+            for i in 0..k {
+                let j = i + self.below(bound - i);
+                all.swap(i, j);
+            }
+            let mut v = all[..k].to_vec();
+            v.sort_unstable();
+            v
+        } else {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut v = Vec::with_capacity(k);
+            while v.len() < k {
+                let x = self.below(bound);
+                if seen.insert(x) {
+                    v.push(x);
+                }
+            }
+            v.sort_unstable();
+            v
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+/// Monotonic wall-clock timer returning seconds.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Self(std::time::Instant::now())
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn rng_f64_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn distinct_below_properties() {
+        let mut r = Rng::new(3);
+        for k in [0usize, 1, 5, 20] {
+            let v = r.distinct_below(k, 20);
+            assert_eq!(v.len(), k);
+            let mut sorted = v.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates in {v:?}");
+            assert!(v.iter().all(|&x| x < 20));
+            assert!(v.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(5);
+        let p = r.permutation(50);
+        let mut s = p.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Rng::new(11);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+}

@@ -1,0 +1,83 @@
+//! Minimal property-test runner (proptest is not vendored).
+//!
+//! `check(cases, |rng| { ... })` runs the closure over `cases` seeded RNGs
+//! and panics with the *failing seed* so any failure is reproducible with
+//! `check_seed(seed, ...)`. Closures return `Result<(), String>` so the
+//! failure message travels with the seed.
+
+use super::Rng;
+
+/// Run `f` for seeds 0..cases (plus a few adversarial seeds); panic with
+/// the failing seed and message on first failure.
+pub fn check<F>(cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let extra = [u64::MAX, 0xDEADBEEF, 1 << 63];
+    for seed in (0..cases).chain(extra.iter().copied()) {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single seed (for debugging a failure printed by `check`).
+pub fn check_seed<F>(seed: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property failed at seed {seed}: {msg}");
+    }
+}
+
+/// Assert two f64 slices are elementwise close (relative + absolute tol),
+/// returning a property-friendly Result.
+pub fn assert_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * x.abs().max(y.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_seeds() {
+        let mut count = std::sync::atomic::AtomicU64::new(0);
+        check(10, |_rng| {
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        });
+        assert_eq!(*count.get_mut(), 13); // 10 + 3 adversarial
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at seed")]
+    fn failing_property_reports_seed() {
+        check(5, |rng| {
+            if rng.below(3) == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-12], 1e-9, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-9, 0.0).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-9, 0.0).is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! End-to-end integration: FEM assembly → CSRC → parallel engines →
+//! solver → coordinator → figure harness, all composed as a downstream
+//! user would.
+
+use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
+use csrc_spmv::gen;
+use csrc_spmv::harness::{figures, smoke_suite, Report};
+use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::solver::{self, Jacobi, ParallelLinOp};
+use csrc_spmv::sparse::{mmio, Coo, Csrc, CsrcRect, LinOp};
+use csrc_spmv::util::Rng;
+use std::sync::Arc;
+
+#[test]
+fn fem_to_solver_pipeline() {
+    // Assemble, compress, solve with the parallel engine, verify.
+    let coo = gen::poisson_3d_hex(12, 0.0, 3);
+    let a = Arc::new(Csrc::from_coo(&coo).unwrap());
+    let n = a.n;
+    assert_eq!(n, 13 * 13 * 13);
+    let mut rng = Rng::new(1);
+    let xstar: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut b = vec![0.0; n];
+    a.apply(&xstar, &mut b);
+    let mut engine =
+        build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 3);
+    let jac = Jacobi::new(a.as_ref());
+    let op = ParallelLinOp::new(n, engine.as_mut());
+    let r = solver::cg(&op, &b, Some(&jac), 1e-11, 3000);
+    assert!(r.converged, "residual {}", r.residual);
+    for (got, want) in r.x.iter().zip(&xstar) {
+        assert!((got - want).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn overlapping_decomposition_served_by_coordinator() {
+    // Build a global FEM matrix, decompose it, serve the square parts
+    // through the matvec service, scatter-gather back, compare to global.
+    let global_coo = gen::poisson_2d_quad(20, 0.3, 5);
+    let global = csrc_spmv::sparse::Csr::from_coo(&global_coo);
+    let n = global.nrows;
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+    let mut want = vec![0.0; n];
+    global.spmv(&x, &mut want);
+    let got = gen::decomp::verify_overlapping_spmv(&global, 4, &x);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-10);
+    }
+    // Also serve the locals' square parts via the coordinator.
+    let svc = MatvecService::start(ServiceConfig::default());
+    for s in 0..4 {
+        let local = gen::overlapping_local(&global, 4, s);
+        let rect = CsrcRect::from_coo(&local).unwrap();
+        svc.register(&format!("sub{s}"), Arc::new(rect.square));
+    }
+    for s in 0..4 {
+        let rows = gen::decomp::slab(n, 4, s);
+        let xl: Vec<f64> = rows.clone().map(|i| x[i]).collect();
+        let y = svc.call(&format!("sub{s}"), xl).unwrap();
+        assert_eq!(y.len(), rows.len());
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn mmio_roundtrip_preserves_products() {
+    let dir = std::env::temp_dir().join("csrc_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("fem.mtx");
+    let coo = gen::poisson_2d_tri(10, 0.4, 9);
+    mmio::write_matrix_market(&path, &coo, "e2e").unwrap();
+    let back = mmio::read_matrix_market(&path).unwrap();
+    let a1 = Csrc::from_coo(&coo).unwrap();
+    let a2 = Csrc::from_coo(&back).unwrap();
+    let x: Vec<f64> = (0..a1.n).map(|i| i as f64 * 0.01).collect();
+    let (mut y1, mut y2) = (vec![0.0; a1.n], vec![0.0; a1.n]);
+    a1.apply(&x, &mut y1);
+    a2.apply(&x, &mut y2);
+    for (p, q) in y1.iter().zip(&y2) {
+        assert!((p - q).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn figure_harness_writes_reports() {
+    let dir = std::env::temp_dir().join("csrc_e2e_results");
+    let _ = std::fs::remove_dir_all(&dir);
+    let report = Report::new(Some(&dir)).unwrap();
+    // Two cheap figures over the two smallest entries.
+    let entries: Vec<_> = smoke_suite().into_iter().take(2).collect();
+    report
+        .table(
+            "table1",
+            "t1",
+            &["matrix", "sym", "n", "nnz", "nnz/n", "ws"],
+            &figures::table1(&entries),
+        )
+        .unwrap();
+    report
+        .table("fig4", "f4", &["m", "a", "b", "c", "d"], &figures::fig4(&entries))
+        .unwrap();
+    assert!(dir.join("table1.csv").exists());
+    assert!(dir.join("fig4.md").exists());
+    let csv = std::fs::read_to_string(dir.join("table1.csv")).unwrap();
+    assert_eq!(csv.lines().count(), entries.len() + 1);
+}
+
+#[test]
+fn transpose_consistency_across_stack() {
+    // CSRC free transpose == CSR transpose == dense transpose, and BiCG
+    // (which uses both A and Aᵀ) converges on the same operator.
+    let mut rng = Rng::new(33);
+    let coo = Coo::random_structurally_symmetric(60, 4, false, &mut rng);
+    let a = Csrc::from_coo(&coo).unwrap();
+    let csr = a.to_csr();
+    let x: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+    let (mut y1, mut y2) = (vec![0.0; 60], vec![0.0; 60]);
+    a.apply_t(&x, &mut y1);
+    csr.apply_t(&x, &mut y2);
+    for (p, q) in y1.iter().zip(&y2) {
+        assert!((p - q).abs() < 1e-11);
+    }
+    let b: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+    let r = solver::bicg(&a, &b, 1e-9, 2000);
+    assert!(r.converged);
+}
+
+#[test]
+fn coordinator_survives_bad_and_good_interleaved() {
+    // Failure injection: unknown matrices and wrong-length vectors mixed
+    // into a healthy stream must fail their own requests only.
+    use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
+    let svc = MatvecService::start(ServiceConfig::default());
+    let a = {
+        let mut rng = Rng::new(99);
+        Arc::new(Csrc::from_coo(&Coo::random_structurally_symmetric(40, 3, false, &mut rng)).unwrap())
+    };
+    svc.register("ok", a.clone());
+    let mut good = 0;
+    let mut bad = 0;
+    let mut handles = Vec::new();
+    for i in 0..30 {
+        match i % 3 {
+            0 => handles.push(("good", svc.submit("ok", vec![1.0; 40]))),
+            1 => handles.push(("ghost", svc.submit("missing", vec![1.0; 40]))),
+            _ => handles.push(("short", svc.submit("ok", vec![1.0; 7]))),
+        }
+    }
+    for (kind, h) in handles {
+        match h.recv().unwrap() {
+            Ok(y) => {
+                assert_eq!(kind, "good");
+                assert_eq!(y.len(), 40);
+                good += 1;
+            }
+            Err(e) => {
+                assert_ne!(kind, "good", "good request failed: {e}");
+                bad += 1;
+            }
+        }
+    }
+    assert_eq!(good, 10);
+    assert_eq!(bad, 20);
+    let s = svc.stats();
+    assert_eq!(s.completed, 10);
+    assert_eq!(s.failed, 20);
+    svc.shutdown();
+}
+
+#[test]
+fn rcm_improves_effective_ranges() {
+    // Reordering shrinks the local-buffers effective ranges — the
+    // structural reason reordered matrices parallelize better (§4.2).
+    use csrc_spmv::graph::{permute, reverse_cuthill_mckee};
+    use csrc_spmv::partition;
+    let mut rng = Rng::new(44);
+    let band = Csrc::from_coo(&Coo::banded(400, 2, true, &mut rng)).unwrap();
+    let shuffled = permute(&band, &rng.permutation(400));
+    let restored = permute(&shuffled, &reverse_cuthill_mckee(&shuffled));
+    let span = |m: &Csrc| -> usize {
+        let part = partition::nnz_balanced(m, 4);
+        (0..4)
+            .map(|t| {
+                let er = partition::effective_range(m, part.block(t));
+                er.end - er.start
+            })
+            .sum()
+    };
+    assert!(
+        span(&restored) < span(&shuffled) / 2,
+        "RCM should shrink effective ranges: {} vs {}",
+        span(&restored),
+        span(&shuffled)
+    );
+}

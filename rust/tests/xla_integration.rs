@@ -1,0 +1,183 @@
+//! Integration: the rust runtime executes the python-AOT artifacts and
+//! the numbers agree with the native CSRC engines — the proof that all
+//! three layers compose. Requires `make artifacts` (skips cleanly if the
+//! artifact directory is absent, e.g. in a bare checkout).
+
+use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::runtime::XlaRuntime;
+use csrc_spmv::sparse::{Coo, Csrc};
+use csrc_spmv::util::Rng;
+use std::path::Path;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn test_matrix(n: usize, w: usize, seed: u64) -> Csrc {
+    let mut rng = Rng::new(seed);
+    // Keep max row width <= w by using few nnz per row.
+    let coo = Coo::random_structurally_symmetric(n, w.min(4), false, &mut rng);
+    let a = Csrc::from_coo(&coo).unwrap();
+    assert!(a.max_row_width() <= w);
+    a
+}
+
+#[test]
+fn xla_spmv_matches_native_csrc() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(dir).expect("open runtime");
+    assert_eq!(rt.platform(), "cpu");
+    let a = test_matrix(200, 8, 1);
+    let ell = a.to_ell(256, 8).expect("pad to artifact shape");
+    ell.validate().unwrap();
+    let mut rng = Rng::new(2);
+    let x64: Vec<f64> = (0..256).map(|i| if i < 200 { rng.normal() } else { 0.0 }).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+
+    let got = rt.spmv("spmv_n256_w8", &ell, &x32).expect("xla spmv");
+
+    let mut want = vec![0.0f64; 200];
+    a.spmv_into_zeroed(&x64[..200], &mut want);
+    for i in 0..200 {
+        let diff = (got[i] as f64 - want[i]).abs();
+        assert!(diff < 1e-3 * (1.0 + want[i].abs()), "row {i}: {} vs {}", got[i], want[i]);
+    }
+    // Padding rows must stay zero.
+    for i in 200..256 {
+        assert_eq!(got[i], 0.0, "padding row {i} contaminated");
+    }
+}
+
+#[test]
+fn xla_transpose_artifact_swaps_triangles() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(dir).expect("open runtime");
+    let a = test_matrix(180, 8, 3);
+    let ell = a.to_ell(256, 8).unwrap();
+    let mut rng = Rng::new(4);
+    let x64: Vec<f64> = (0..256).map(|i| if i < 180 { rng.normal() } else { 0.0 }).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+
+    let got = rt.spmv("spmv_t_n256_w8", &ell, &x32).expect("xla spmv_t");
+
+    let mut want = vec![0.0f64; 180];
+    want.fill(0.0);
+    a.spmv_t(&x64[..180], &mut want);
+    for i in 0..180 {
+        let diff = (got[i] as f64 - want[i]).abs();
+        assert!(diff < 1e-3 * (1.0 + want[i].abs()), "row {i}");
+    }
+}
+
+#[test]
+fn xla_batched_spmv_matches_loop() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(dir).expect("open runtime");
+    let a = test_matrix(100, 8, 5);
+    let ell = a.to_ell(256, 8).unwrap();
+    let mut rng = Rng::new(6);
+    let batch = 8;
+    let xs: Vec<f32> = (0..batch * 256)
+        .map(|i| if i % 256 < 100 { rng.normal() as f32 } else { 0.0 })
+        .collect();
+    let ys = rt.spmv_batch("spmv_batch8_n256_w8", &ell, &xs, batch).expect("batched");
+    assert_eq!(ys.len(), batch * 256);
+    for b in 0..batch {
+        let one = rt.spmv("spmv_n256_w8", &ell, &xs[b * 256..(b + 1) * 256]).unwrap();
+        for i in 0..256 {
+            assert!(
+                (ys[b * 256 + i] - one[i]).abs() < 1e-4 * (1.0 + one[i].abs()),
+                "batch {b} row {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_cg_step_reduces_residual() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(dir).expect("open runtime");
+    // Numerically symmetric SPD-ish matrix for CG.
+    let mut rng = Rng::new(7);
+    let coo = Coo::random_structurally_symmetric(150, 4, true, &mut rng);
+    let a = Csrc::from_coo(&coo).unwrap();
+    let ell = a.to_ell(256, 8).unwrap();
+    let b32: Vec<f32> = (0..256).map(|i| if i < 150 { 1.0 } else { 0.0 }).collect();
+    let x0 = vec![0.0f32; 256];
+    let rs0: f32 = b32.iter().map(|v| v * v).sum();
+
+    let args = vec![
+        xla::Literal::vec1(&ell.ad),
+        xla::Literal::vec1(&ell.al).reshape(&[256, 8]).unwrap(),
+        xla::Literal::vec1(&ell.au).reshape(&[256, 8]).unwrap(),
+        xla::Literal::vec1(&ell.ja).reshape(&[256, 8]).unwrap(),
+        xla::Literal::vec1(&x0),
+        xla::Literal::vec1(&b32),
+        xla::Literal::vec1(&b32),
+        xla::Literal::scalar(rs0),
+    ];
+    let out = rt.execute("cg_step_n256_w8", &args).expect("cg step");
+    assert_eq!(out.len(), 4);
+    let rs1 = out[3].to_vec::<f32>().unwrap()[0];
+    assert!(rs1.is_finite());
+    assert!(rs1 < rs0, "one CG step should reduce <r,r>: {rs1} vs {rs0}");
+}
+
+#[test]
+fn native_engines_agree_with_ell_reference() {
+    // No artifacts needed: the rust-side ELL reference (same convention as
+    // the kernel) agrees with the parallel engines.
+    let a = Arc::new(test_matrix(150, 8, 8));
+    let ell = a.to_ell(150, 8).unwrap();
+    let mut rng = Rng::new(9);
+    let x64: Vec<f64> = (0..150).map(|_| rng.normal()).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let yref = ell.spmv_ref(&x32);
+    let mut engine = build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 3);
+    let mut y = vec![0.0; 150];
+    engine.spmv(&x64, &mut y);
+    for i in 0..150 {
+        assert!((yref[i] as f64 - y[i]).abs() < 1e-3 * (1.0 + y[i].abs()), "row {i}");
+    }
+}
+
+#[test]
+fn xla_gradient_artifact_is_symmetrized_product() {
+    // grad ½xᵀAx = ½(A+Aᵀ)x — the custom-VJP artifact exercising the
+    // free-transpose path through jax.grad, executed from rust.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(dir).expect("open runtime");
+    let a = test_matrix(120, 8, 21);
+    let ell = a.to_ell(256, 8).unwrap();
+    let mut rng = Rng::new(22);
+    let x64: Vec<f64> = (0..256).map(|i| if i < 120 { rng.normal() } else { 0.0 }).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let args = vec![
+        xla::Literal::vec1(&ell.ad),
+        xla::Literal::vec1(&ell.al).reshape(&[256, 8]).unwrap(),
+        xla::Literal::vec1(&ell.au).reshape(&[256, 8]).unwrap(),
+        xla::Literal::vec1(&ell.ja).reshape(&[256, 8]).unwrap(),
+        xla::Literal::vec1(&x32),
+    ];
+    let out = rt.execute("grad_quadform_n256_w8", &args).expect("grad artifact");
+    let g = out[0].to_vec::<f32>().unwrap();
+    // Native check: ½(Ax + Aᵀx).
+    let (mut ax, mut atx) = (vec![0.0f64; 120], vec![0.0f64; 120]);
+    a.spmv_into_zeroed(&x64[..120], &mut ax);
+    a.spmv_t(&x64[..120], &mut atx);
+    for i in 0..120 {
+        let want = 0.5 * (ax[i] + atx[i]);
+        assert!(
+            (g[i] as f64 - want).abs() < 1e-3 * (1.0 + want.abs()),
+            "row {i}: {} vs {want}",
+            g[i]
+        );
+    }
+}

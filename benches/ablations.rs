@@ -2,16 +2,23 @@
 //!
 //! * atomics baseline vs local buffers vs colorful (the §3 claim that
 //!   atomic primitives are too costly),
+//! * plan reuse: cold plan-build + product vs cached-plan product (the
+//!   analysis/execution split the coordinator exploits),
 //! * nnz-balanced vs naive row partitioning (the §3.1 claim),
 //! * coloring order and the §5 stride-capped future-work idea,
 //! * BCSR blocking baseline vs CSRC (the §1.1 related-work contrast),
 //! * parallel engine overhead as a function of matrix size.
+//!
+//! Results land on stdout *and* in `results/ablations.json`.
 
 use csrc_spmv::graph::{greedy_coloring, stride_capped_coloring, ConflictGraph, Ordering};
 use csrc_spmv::harness::smoke_suite;
-use csrc_spmv::parallel::{build_engine, AccumMethod, ColorfulEngine, EngineKind};
+use csrc_spmv::parallel::{
+    build_engine, build_engine_auto, AccumMethod, ColorfulEngine, EngineKind,
+};
 use csrc_spmv::partition;
-use csrc_spmv::sparse::{Bcsr, Coo, Csrc};
+use csrc_spmv::plan::PlanBuilder;
+use csrc_spmv::sparse::{Bcsr, Coo, Csrc, SpmvKernel};
 use csrc_spmv::util::bench::Bench;
 use csrc_spmv::util::Rng;
 use std::sync::Arc;
@@ -31,12 +38,31 @@ fn main() {
         EngineKind::Colorful,
         EngineKind::Atomic,
     ] {
-        let mut engine = build_engine(kind, a.clone(), 2);
+        let mut engine = build_engine_auto(kind, a.clone(), 2);
         b.run(&format!("engine/{}", kind.label()), || engine.spmv(&x, &mut y));
     }
 
+    // --- plan reuse: cold analysis+product vs cached-plan product --------
+    // Both legs run the same engine (pool construction is identical
+    // either way and must not be attributed to analysis); the cold leg
+    // additionally redoes the plan analysis per product, as an uncached
+    // service would.
+    {
+        let kind = EngineKind::LocalBuffers(AccumMethod::Interval);
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        let plan = Arc::new(PlanBuilder::for_kind(2, kind).build(kernel.as_ref()));
+        let mut engine = build_engine(kind, kernel.clone(), plan.clone());
+        let t_cold = b.run("plan/cold-build+spmv", || {
+            std::hint::black_box(PlanBuilder::for_kind(2, kind).build(kernel.as_ref()));
+            engine.spmv(&x, &mut y);
+        });
+        let t_warm = b.run("plan/cached-spmv", || engine.spmv(&x, &mut y));
+        b.record("plan/build-ms", plan.stats.total_s * 1e3, "ms");
+        b.record("plan/cold-over-warm", t_cold / t_warm, "x");
+    }
+
     // --- partitioning: nnz-balanced vs rowwise ---------------------------
-    let part_nnz = partition::nnz_balanced(&a, 4);
+    let part_nnz = partition::nnz_balanced(a.as_ref(), 4);
     let part_rows = partition::rowwise_even(a.n, 4);
     let work = |part: &partition::RowPartition| -> f64 {
         let works: Vec<f64> = (0..4)
@@ -50,7 +76,7 @@ fn main() {
     b.record("partition/rowwise-imbalance", work(&part_rows), "max/avg");
 
     // --- coloring orders + stride cap ------------------------------------
-    let g = ConflictGraph::build(&a);
+    let g = ConflictGraph::build(a.as_ref());
     let natural = greedy_coloring(&g, Ordering::Natural);
     let ldf = greedy_coloring(&g, Ordering::LargestDegreeFirst);
     b.record("coloring/natural-colors", natural.num_colors() as f64, "colors");
@@ -140,12 +166,12 @@ fn main() {
         );
         let xs: Vec<f64> = (0..nn).map(|i| i as f64 * 1e-4).collect();
         let mut ys = vec![0.0; nn];
-        let mut seq = build_engine(EngineKind::Sequential, small.clone(), 1);
+        let mut seq = build_engine_auto(EngineKind::Sequential, small.clone(), 1);
         let t_seq = b.run(&format!("overhead/n{nn}-seq"), || seq.spmv(&xs, &mut ys));
-        let mut par = build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), small, 2);
+        let mut par = build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), small, 2);
         let t_par = b.run(&format!("overhead/n{nn}-effective-2t"), || par.spmv(&xs, &mut ys));
         b.record(&format!("overhead/n{nn}-ratio"), t_par / t_seq, "par/seq (1 core)");
     }
 
-    b.finish();
+    b.finish_json(std::path::Path::new("results/ablations.json")).expect("write json report");
 }

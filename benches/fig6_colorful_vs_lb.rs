@@ -4,7 +4,7 @@
 
 use csrc_spmv::graph::{greedy_coloring, ConflictGraph, Ordering};
 use csrc_spmv::harness::smoke_suite;
-use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::parallel::{build_engine_auto, AccumMethod, EngineKind};
 use csrc_spmv::simulator::{sim_colorful, sim_csrc_sequential, sim_local_buffers, MachineConfig, MachineSim};
 use csrc_spmv::util::bench::Bench;
 use std::sync::Arc;
@@ -17,15 +17,16 @@ fn main() {
         let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
         let mut y = vec![0.0; n];
         // Real engines, 2 threads.
-        let mut colorful = build_engine(EngineKind::Colorful, a.clone(), 2);
+        let mut colorful = build_engine_auto(EngineKind::Colorful, a.clone(), 2);
         b.run(&format!("{}/colorful-2t-wallclock", e.name), || colorful.spmv(&x, &mut y));
-        let mut eff = build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 2);
+        let mut eff =
+            build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 2);
         b.run(&format!("{}/effective-2t-wallclock", e.name), || eff.spmv(&x, &mut y));
         // Simulated figure numbers.
         let wolf = MachineConfig::wolfdale();
         let mut sim = MachineSim::new(wolf.clone());
         let base = sim_csrc_sequential(&mut sim, &a).cycles;
-        let g = ConflictGraph::build(&a);
+        let g = ConflictGraph::build(a.as_ref());
         let colors = greedy_coloring(&g, Ordering::Natural);
         let mut sim = MachineSim::new(wolf.clone());
         let col = base / sim_colorful(&mut sim, &a, 2, &colors).cycles;

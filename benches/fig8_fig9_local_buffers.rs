@@ -3,7 +3,7 @@
 //! per method (engine overhead is visible even on one core).
 
 use csrc_spmv::harness::smoke_suite;
-use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::parallel::{build_engine_auto, AccumMethod, EngineKind};
 use csrc_spmv::simulator::{sim_csrc_sequential, sim_local_buffers, MachineConfig, MachineSim};
 use csrc_spmv::util::bench::Bench;
 use std::sync::Arc;
@@ -16,7 +16,7 @@ fn main() {
         let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).cos()).collect();
         let mut y = vec![0.0; n];
         for meth in AccumMethod::all() {
-            let mut engine = build_engine(EngineKind::LocalBuffers(meth), a.clone(), 2);
+            let mut engine = build_engine_auto(EngineKind::LocalBuffers(meth), a.clone(), 2);
             b.run(&format!("{}/{}-2t-wallclock", e.name, meth.label()), || {
                 engine.spmv(&x, &mut y)
             });

@@ -11,7 +11,7 @@
 
 use csrc_spmv::gen;
 use csrc_spmv::metrics;
-use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::parallel::{build_engine_auto, AccumMethod, EngineKind};
 use csrc_spmv::solver::{self, Jacobi, ParallelLinOp};
 use csrc_spmv::sparse::{Csrc, LinOp};
 use csrc_spmv::util::{Rng, Timer};
@@ -46,7 +46,7 @@ fn main() {
 
     // --- parallel engine + Jacobi-PCG ------------------------------------
     let mut engine =
-        build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), threads);
+        build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), threads);
     let jac = Jacobi::new(a.as_ref());
     let op = ParallelLinOp::new(n, engine.as_mut());
     let t = Timer::start();

@@ -17,8 +17,7 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(256);
 
-    let mut cfg = ServiceConfig::default();
-    cfg.workers = 2;
+    let mut cfg = ServiceConfig { workers: 2, ..Default::default() };
     cfg.route.min_parallel_n = 20_000; // small -> sequential, large -> parallel
     cfg.route.threads = 2;
     let svc = MatvecService::start(cfg);
@@ -81,6 +80,11 @@ fn main() {
         s.mean_latency_us,
         s.p99_latency_us / 2.0, // bucket upper bound -> midpoint-ish
         s.p99_latency_us
+    );
+    println!(
+        "plans built: {} ({:.2} ms analysis total) — shared across all workers",
+        s.plan_builds,
+        s.plan_build_seconds * 1e3
     );
     svc.shutdown();
     println!("matvec_service OK");

@@ -4,7 +4,8 @@
 //! Run: `cargo run --release --example quickstart`
 
 use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
-use csrc_spmv::sparse::{Coo, Csr, Csrc, LinOp};
+use csrc_spmv::plan::PlanBuilder;
+use csrc_spmv::sparse::{Coo, Csr, Csrc, LinOp, SpmvKernel};
 use csrc_spmv::util::Rng;
 use std::sync::Arc;
 
@@ -32,12 +33,19 @@ fn main() {
     let mut y_seq = vec![0.0; n];
     a.spmv_into_zeroed(&x, &mut y_seq);
 
-    // 4. Parallel product with the paper's best-overall strategy:
+    // 4. Analyze once: one full SpmvPlan (partition, effective ranges,
+    //    intervals, coloring) that every engine below borrows — the
+    //    analysis/execution split the coordinator caches per matrix.
+    let kernel: Arc<dyn SpmvKernel> = a.clone();
+    let plan = Arc::new(PlanBuilder::all(/*threads=*/ 4).build(kernel.as_ref()));
+    println!("plan built in {:.2} ms, shared by all engines", plan.stats.total_s * 1e3);
+
+    // 5. Parallel product with the paper's best-overall strategy:
     //    local buffers + effective accumulation, nnz-balanced partition.
     let mut engine = build_engine(
         EngineKind::LocalBuffers(AccumMethod::Effective),
-        a.clone(),
-        /*threads=*/ 4,
+        kernel.clone(),
+        plan.clone(),
     );
     let mut y_par = vec![0.0; n];
     engine.spmv(&x, &mut y_par);
@@ -49,13 +57,14 @@ fn main() {
     println!("parallel engine `{}` max |Δ| vs sequential = {max_diff:.3e}", engine.name());
     assert!(max_diff < 1e-10);
 
-    // 5. Transpose product for free — swap the roles of al and au (§5).
+    // 6. Transpose product for free — swap the roles of al and au (§5).
     let mut yt = vec![0.0; n];
     a.apply_t(&x, &mut yt);
     println!("Aᵀx computed at the same cost as Ax (no transpose pass)");
 
-    // 6. The colorful alternative (§3.2): conflict-free row classes.
-    let mut colorful = build_engine(EngineKind::Colorful, a.clone(), 4);
+    // 7. The colorful alternative (§3.2): conflict-free row classes —
+    //    same kernel, same shared plan, different executor.
+    let mut colorful = build_engine(EngineKind::Colorful, kernel.clone(), plan.clone());
     let mut y_col = vec![0.0; n];
     colorful.spmv(&x, &mut y_col);
     let max_diff_col = y_seq

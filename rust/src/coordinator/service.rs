@@ -1,4 +1,5 @@
-//! The matvec service: registry + request queue + batcher + workers.
+//! The matvec service: registry + plan cache + request queue + batcher +
+//! workers.
 //!
 //! Flow: `submit()` enqueues (matrix-key, x, reply-channel) → the
 //! dispatcher thread drains the queue, forms per-matrix batches
@@ -7,11 +8,19 @@
 //! products on its cached engine, and replies through each request's
 //! channel. Metrics (counts + latency histogram) are sampled on the
 //! worker side.
+//!
+//! Engines hold execution state (pools, buffers) and stay per-worker,
+//! but the *analysis* they run — the [`crate::plan::SpmvPlan`] — is
+//! shared: one [`PlanCache`] maps matrix-key × thread-count to a single
+//! `Arc<SpmvPlan>` that every worker and engine borrows, so a matrix
+//! registered once is analyzed once, not once per worker × engine. Plan
+//! build count and time are surfaced in [`ServiceStats`].
 
 use super::batcher::{form_batches, BatchPolicy};
 use super::router::{Backend, RoutePolicy, Router};
 use crate::metrics::LatencyHistogram;
 use crate::parallel::{build_engine, ParallelSpmv};
+use crate::plan::{PlanBuilder, PlanCache};
 use crate::sparse::Csrc;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -63,10 +72,22 @@ pub struct ServiceStats {
     pub batches: u64,
     pub mean_latency_us: f64,
     pub p99_latency_us: f64,
+    /// How many scheduling plans were built (cache misses) — with N
+    /// workers all serving one matrix this stays 1, not N.
+    pub plan_builds: u64,
+    /// Total wall-clock seconds spent in plan analysis.
+    pub plan_build_seconds: f64,
 }
 
+/// Registry value: the matrix plus a per-key generation counter.
+/// Worker-side caches (engines, plans) key on `key@generation`, so a
+/// replaced matrix can never be served by state built for its
+/// predecessor — stale engines become unreachable instead of unsound.
+type Registry = HashMap<String, (Arc<Csrc>, u64)>;
+
 pub struct MatvecService {
-    registry: Arc<Mutex<HashMap<String, Arc<Csrc>>>>,
+    registry: Arc<Mutex<Registry>>,
+    plans: Arc<PlanCache>,
     queue_tx: Option<Sender<Request>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -75,7 +96,8 @@ pub struct MatvecService {
 
 impl MatvecService {
     pub fn start(cfg: ServiceConfig) -> MatvecService {
-        let registry: Arc<Mutex<HashMap<String, Arc<Csrc>>>> = Arc::new(Mutex::new(HashMap::new()));
+        let registry: Arc<Mutex<Registry>> = Arc::new(Mutex::new(HashMap::new()));
+        let plans = Arc::new(PlanCache::new());
         let stats = Arc::new(Mutex::new(Stats { latency: Some(LatencyHistogram::new()), ..Default::default() }));
         let (queue_tx, queue_rx) = channel::<Request>();
 
@@ -86,12 +108,13 @@ impl MatvecService {
             let (tx, rx) = channel::<WorkerBatch>();
             worker_txs.push(tx);
             let registry = registry.clone();
+            let plans = plans.clone();
             let stats = stats.clone();
             let route = cfg.route.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("matvec-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, registry, route, stats))
+                    .spawn(move || worker_loop(rx, registry, plans, route, stats))
                     .expect("spawn worker"),
             );
         }
@@ -106,6 +129,7 @@ impl MatvecService {
 
         MatvecService {
             registry,
+            plans,
             queue_tx: Some(queue_tx),
             dispatcher: Some(dispatcher),
             workers,
@@ -113,9 +137,30 @@ impl MatvecService {
         }
     }
 
-    /// Register (or replace) a matrix under a key.
+    /// Register (or replace) a matrix under a key. Replacement bumps the
+    /// key's generation: workers' engine caches and the plan cache are
+    /// keyed by generation, so state built for the old matrix is never
+    /// consulted again. All prior generations' plans are swept here
+    /// (prefix match, so a plan raced in by a worker mid-replace is
+    /// collected by the next replacement at the latest); workers evict a
+    /// key's retired engines the next time they serve that key, so a
+    /// worker holds at most one engine per (previously served key,
+    /// engine kind) — a key abandoned after replacement keeps its last
+    /// engine (and pool threads) parked until the worker exits.
     pub fn register(&self, key: &str, a: Arc<Csrc>) {
-        self.registry.lock().unwrap().insert(key.to_string(), a);
+        // Drop the registry lock before sweeping plans: plan builds hold
+        // the cache lock for their whole (possibly long) analysis, and
+        // every worker batch starts with a registry read — invalidating
+        // under the registry lock would stall all workers behind an
+        // unrelated build.
+        let replaced = {
+            let mut reg = self.registry.lock().unwrap();
+            let generation = reg.get(key).map(|(_, g)| g + 1).unwrap_or(0);
+            reg.insert(key.to_string(), (a, generation)).is_some()
+        };
+        if replaced {
+            self.plans.invalidate_prefix(&format!("{key}@"));
+        }
     }
 
     /// Submit y = A·x; returns the reply channel.
@@ -151,6 +196,8 @@ impl MatvecService {
             batches: s.batches,
             mean_latency_us: lat.mean_us(),
             p99_latency_us: lat.quantile_us(0.99),
+            plan_builds: self.plans.builds(),
+            plan_build_seconds: self.plans.build_seconds(),
         }
     }
 
@@ -224,17 +271,21 @@ fn dispatcher_loop(
 
 fn worker_loop(
     rx: Receiver<WorkerBatch>,
-    registry: Arc<Mutex<HashMap<String, Arc<Csrc>>>>,
+    registry: Arc<Mutex<Registry>>,
+    plans: Arc<PlanCache>,
     route: RoutePolicy,
     stats: Arc<Mutex<Stats>>,
 ) {
     let router = Router::new(route);
-    // Engine cache per (matrix, backend) — engines are not Sync, each
-    // worker owns its own.
-    let mut engines: HashMap<String, Box<dyn ParallelSpmv>> = HashMap::new();
+    // Engine cache per (matrix, generation, backend) — engines hold
+    // execution state (pool, buffers) and are not Sync, so each worker
+    // owns its own; the *plan* inside every engine comes from the shared
+    // service cache. Structural keys so user keys containing '@' cannot
+    // alias generations.
+    let mut engines: HashMap<(String, u64, String), Box<dyn ParallelSpmv>> = HashMap::new();
     while let Ok(batch) = rx.recv() {
-        let a = registry.lock().unwrap().get(&batch.matrix).cloned();
-        let Some(a) = a else {
+        let hit = registry.lock().unwrap().get(&batch.matrix).cloned();
+        let Some((a, generation)) = hit else {
             let mut s = stats.lock().unwrap();
             for r in batch.requests {
                 s.failed += 1;
@@ -242,6 +293,14 @@ fn worker_loop(
             }
             continue;
         };
+        // Generation-qualified key: caches can never mix state across a
+        // register() replacement (the matrix and its engines/plans stay
+        // a consistent snapshot even if the registry changes mid-batch).
+        let cache_key = format!("{}@{generation}", batch.matrix);
+        // Evict engines built for retired generations of this matrix —
+        // each pins a ThreadPool (live OS threads), the old matrix, and
+        // its plan.
+        engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
         let backend = router.route(&a);
         for req in batch.requests {
             if req.x.len() != a.n {
@@ -256,8 +315,16 @@ fn worker_loop(
             match &backend {
                 Backend::NativeSequential => a.spmv_into_zeroed(&req.x, &mut y),
                 Backend::NativeParallel { kind, threads } => {
-                    let engine = engines.entry(format!("{}/{}", batch.matrix, kind.label()))
-                        .or_insert_with(|| build_engine(*kind, a.clone(), *threads));
+                    let engine = engines
+                        .entry((batch.matrix.clone(), generation, kind.label()))
+                        .or_insert_with(|| {
+                            let plan = plans.get_or_build(
+                                &cache_key,
+                                a.as_ref(),
+                                PlanBuilder::for_kind(*threads, *kind),
+                            );
+                            build_engine(*kind, a.clone(), plan)
+                        });
                     engine.spmv(&req.x, &mut y);
                 }
                 Backend::Xla { artifact } => {
@@ -359,6 +426,71 @@ mod tests {
         let mut want = vec![0.0; 200];
         a.spmv_into_zeroed(&x, &mut want);
         crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn plan_built_once_across_workers_and_requests() {
+        // Four workers hammering one matrix over the parallel backend
+        // must share a single cached plan — the registry analyzes a
+        // matrix once, not once per worker × engine.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 4;
+        cfg.route.min_parallel_n = 1; // force the parallel path
+        cfg.route.threads = 2;
+        let svc = MatvecService::start(cfg);
+        let a = mat(120, 85);
+        svc.register("shared", a.clone());
+        let mut want = vec![0.0; 120];
+        let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.01).sin()).collect();
+        a.spmv_into_zeroed(&x, &mut want);
+        let rxs: Vec<_> = (0..32).map(|_| svc.submit("shared", x.clone())).collect();
+        for rx in rxs {
+            let y = rx.recv().unwrap().unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 32);
+        assert_eq!(s.plan_builds, 1, "one matrix must be analyzed exactly once");
+        assert!(s.plan_build_seconds >= 0.0);
+        // A second matrix costs exactly one more analysis.
+        let b = mat(90, 86);
+        svc.register("other", b.clone());
+        let x2 = vec![1.0; 90];
+        let _ = svc.call("other", x2).unwrap();
+        assert_eq!(svc.stats().plan_builds, 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn replacing_a_matrix_retires_its_engines_and_plans() {
+        // After register() overwrites a key — even with a different size
+        // — requests must run against the new matrix, not a worker's
+        // cached engine for the old one.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1; // one worker so the engine cache is definitely warm
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        let svc = MatvecService::start(cfg);
+        let a1 = mat(60, 87);
+        svc.register("m", a1.clone());
+        let x1 = vec![1.0; 60];
+        let y1 = svc.call("m", x1.clone()).unwrap();
+        let mut want1 = vec![0.0; 60];
+        a1.spmv_into_zeroed(&x1, &mut want1);
+        crate::util::propcheck::assert_close(&y1, &want1, 1e-11, 1e-11).unwrap();
+        // Replace with a smaller matrix (the dangerous direction for a
+        // stale engine) and serve again.
+        let a2 = mat(40, 88);
+        svc.register("m", a2.clone());
+        let x2 = vec![1.0; 40];
+        let y2 = svc.call("m", x2.clone()).unwrap();
+        let mut want2 = vec![0.0; 40];
+        a2.spmv_into_zeroed(&x2, &mut want2);
+        crate::util::propcheck::assert_close(&y2, &want2, 1e-11, 1e-11).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.plan_builds, 2, "replacement must build a fresh plan");
         svc.shutdown();
     }
 

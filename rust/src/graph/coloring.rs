@@ -4,6 +4,7 @@
 //! idea — stride-capped colors — as an ablation.
 
 use super::ConflictGraph;
+use crate::sparse::SpmvKernel;
 
 /// Vertex visit order for the greedy sweep.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,6 +26,14 @@ pub struct ColorClasses {
 impl ColorClasses {
     pub fn num_colors(&self) -> usize {
         self.classes.len()
+    }
+
+    /// Per color, per thread: the slice [lo, hi) of the class row list
+    /// each thread processes, split by the kernel's per-row work (the
+    /// nnz-balanced intra-class split the colorful executor consumes).
+    /// Pure analysis — computed once per plan, reused by every product.
+    pub fn class_shares(&self, a: &dyn SpmvKernel, p: usize) -> Vec<Vec<(usize, usize)>> {
+        self.classes.iter().map(|class| split_class_by_work(a, class, p)).collect()
     }
 
     /// Validate: no two rows in a class may conflict (direct or indirect).
@@ -56,6 +65,36 @@ impl ColorClasses {
         }
         Ok(())
     }
+}
+
+/// Split a class's row list into p contiguous chunks balanced by the
+/// kernel's per-row work (for CSRC: 1 + 2·row_len).
+fn split_class_by_work(a: &dyn SpmvKernel, class: &[u32], p: usize) -> Vec<(usize, usize)> {
+    let work: Vec<usize> = class.iter().map(|&i| a.row_work(i as usize)).collect();
+    let total: usize = work.iter().sum();
+    let mut out = Vec::with_capacity(p);
+    let mut pos = 0usize;
+    let mut consumed = 0usize;
+    for t in 0..p {
+        let start = pos;
+        if t + 1 == p {
+            pos = class.len();
+        } else {
+            let target = (total - consumed) as f64 / (p - t) as f64;
+            let mut blk = 0usize;
+            while pos < class.len() {
+                let w = work[pos];
+                if blk > 0 && (blk + w) as f64 - target > target - blk as f64 {
+                    break;
+                }
+                blk += w;
+                pos += 1;
+            }
+            consumed += blk;
+        }
+        out.push((start, pos));
+    }
+    out
 }
 
 fn build_classes(color: Vec<u32>) -> ColorClasses {

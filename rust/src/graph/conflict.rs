@@ -1,19 +1,23 @@
-//! Conflict graph of a CSRC matrix (§3.2, Fig. 3c).
+//! Conflict graph of a row-sweep kernel (§3.2, Fig. 3c).
 //!
 //! Vertices are rows. Two kinds of conflict:
 //!
 //! * **direct** — thread owning row j (j > i) writes y(i) because
-//!   a_ji ≠ 0: the direct edges are exactly the symmetric pattern
-//!   adjacency {i, ja(k)}.
+//!   a_ji ≠ 0: the direct edges are exactly the kernel's scatter pairs
+//!   {i, target} (for CSRC, the symmetric pattern adjacency {i, ja(k)}).
 //! * **indirect** — rows u and v (neither adjacent) both scatter into some
 //!   shared y position: their neighbourhoods in the direct graph
 //!   intersect. Computed with the marker-array two-hop sweep over the
 //!   induced subgraph G'[A], as the paper describes.
 //!
+//! Built from any [`SpmvKernel`] — scatter-free formats (CSR, BCSR)
+//! yield the empty graph, so *every* row shares one color and the
+//! colorful executor degenerates to a plain row split.
+//!
 //! The paper's Fig. 1 example yields 12 direct and 7 indirect conflicts —
 //! reproduced in the tests below.
 
-use crate::sparse::Csrc;
+use crate::sparse::SpmvKernel;
 
 #[derive(Clone, Debug)]
 pub struct ConflictGraph {
@@ -28,17 +32,16 @@ pub struct ConflictGraph {
 }
 
 impl ConflictGraph {
-    /// Build from the CSRC pattern.
-    pub fn build(a: &Csrc) -> ConflictGraph {
-        let n = a.n;
-        // --- direct graph: symmetric closure of the lower pattern.
+    /// Build from a kernel's scatter pattern.
+    pub fn build(a: &dyn SpmvKernel) -> ConflictGraph {
+        let n = a.dim();
+        // --- direct graph: symmetric closure of the scatter pairs.
         let mut deg = vec![0u32; n];
         for i in 0..n {
-            for k in a.row_range(i) {
-                let j = a.ja[k] as usize;
+            a.scatter_targets(i, &mut |j| {
                 deg[i] += 1;
                 deg[j] += 1;
-            }
+            });
         }
         let mut xadj_direct = vec![0u32; n + 1];
         for i in 0..n {
@@ -47,13 +50,12 @@ impl ConflictGraph {
         let mut cursor: Vec<u32> = xadj_direct[..n].to_vec();
         let mut adj_direct = vec![0u32; xadj_direct[n] as usize];
         for i in 0..n {
-            for k in a.row_range(i) {
-                let j = a.ja[k] as usize;
+            a.scatter_targets(i, &mut |j| {
                 adj_direct[cursor[i] as usize] = j as u32;
                 cursor[i] += 1;
                 adj_direct[cursor[j] as usize] = i as u32;
                 cursor[j] += 1;
-            }
+            });
         }
         for i in 0..n {
             adj_direct[xadj_direct[i] as usize..xadj_direct[i + 1] as usize].sort_unstable();
@@ -120,7 +122,7 @@ impl ConflictGraph {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::Coo;
+    use crate::sparse::{Coo, Csrc};
     use crate::util::{propcheck, Rng};
 
     /// The paper's Fig. 1 pattern (9×9, 33 nnz).

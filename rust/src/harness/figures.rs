@@ -13,11 +13,14 @@
 use super::dataset::DatasetEntry;
 use crate::graph::{greedy_coloring, ConflictGraph, Ordering as ColorOrdering};
 use crate::metrics;
-use crate::parallel::AccumMethod;
+use crate::parallel::{build_engine, AccumMethod, EngineKind};
+use crate::plan::PlanBuilder;
 use crate::simulator::{
     sim_colorful, sim_csr_sequential, sim_csrc_sequential, sim_local_buffers, MachineConfig,
     MachineSim,
 };
+use crate::sparse::SpmvKernel;
+use std::sync::Arc;
 
 /// Products per measurement for Fig. 5: the paper uses 1000; we scale by
 /// nnz so the full suite stays within the time budget while keeping ≥ 3.
@@ -288,6 +291,51 @@ pub fn table2(entries: &[DatasetEntry]) -> Vec<Vec<String>> {
     rows
 }
 
+// ------------------------------------------------------- Plan analysis
+
+/// Beyond the paper: the shared-plan architecture made the §3 analysis a
+/// first-class, reusable artifact — this table shows its cost and shape
+/// per matrix (full plan at `p` threads), and cross-checks one product
+/// per engine kind through the `build_engine(kind, kernel, plan)` path.
+pub fn plan_overview(entries: &[DatasetEntry], p: usize) -> Vec<Vec<String>> {
+    entries
+        .iter()
+        .map(|e| {
+            let kernel: Arc<dyn SpmvKernel> = Arc::new(e.build_csrc());
+            let n = kernel.dim();
+            let plan = Arc::new(PlanBuilder::all(p).build(kernel.as_ref()));
+            let eff_span: usize =
+                plan.eff.as_ref().unwrap().iter().map(|r| r.end - r.start).sum();
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+            let mut want = vec![0.0; n];
+            kernel.sweep_full(&x, &mut want);
+            let mut ok = true;
+            for kind in EngineKind::all() {
+                let mut engine = build_engine(kind, kernel.clone(), plan.clone());
+                let mut y = vec![f64::NAN; n];
+                engine.spmv(&x, &mut y);
+                ok &= crate::util::propcheck::assert_close(&y, &want, 1e-9, 1e-9).is_ok();
+            }
+            vec![
+                e.name.to_string(),
+                n.to_string(),
+                plan.colors.as_ref().unwrap().num_colors().to_string(),
+                plan.ints.as_ref().unwrap().len().to_string(),
+                format!("{:.2}", eff_span as f64 / n as f64),
+                format!("{:.3}", plan.stats.total_s * 1e3),
+                if ok { "yes" } else { "NO" }.into(),
+            ]
+        })
+        .collect()
+}
+
+pub fn plan_overview_headers() -> Vec<String> {
+    ["matrix", "n", "colors", "intervals", "eff-span/n", "plan build (ms)", "engines agree"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
 pub fn table2_headers() -> Vec<String> {
     let mut h = vec!["method".to_string()];
     for (machine, threads) in [("wolfdale", vec![2]), ("bloomfield", vec![2, 4])] {
@@ -345,5 +393,14 @@ mod tests {
         let rows = table2(&smoke_suite()[..1]);
         assert_eq!(rows.len(), 4);
         assert_eq!(rows[0].len(), table2_headers().len());
+    }
+
+    #[test]
+    fn plan_overview_checks_engines() {
+        let rows = plan_overview(&smoke_suite()[..2], 3);
+        assert_eq!(rows[0].len(), plan_overview_headers().len());
+        for r in &rows {
+            assert_eq!(r.last().unwrap(), "yes", "{r:?}");
+        }
     }
 }

@@ -8,7 +8,7 @@
 //! * `solve   --matrix <..> --solver cg|gmres|bicg`
 //! * `serve   --requests 64`                         — coordinator demo
 //! * `xla     --artifacts artifacts`                 — run the AOT path
-//! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|all>`
+//! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|all>`
 //!            `[--suite quick|full|smoke] [--out results]`
 
 use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
@@ -16,11 +16,13 @@ use csrc_spmv::gen;
 use csrc_spmv::harness::{self, figures, Report};
 use csrc_spmv::metrics;
 use csrc_spmv::parallel::{build_engine, EngineKind};
+use csrc_spmv::plan::PlanBuilder;
 use csrc_spmv::runtime::XlaRuntime;
 use csrc_spmv::simulator::MachineConfig;
 use csrc_spmv::solver;
-use csrc_spmv::sparse::{mmio, Coo, Csrc, LinOp};
+use csrc_spmv::sparse::{mmio, Coo, Csrc, LinOp, SpmvKernel};
 use csrc_spmv::util::cli::Args;
+use csrc_spmv::util::error::{msg, Result};
 use csrc_spmv::util::Rng;
 use std::path::Path;
 use std::sync::Arc;
@@ -43,7 +45,7 @@ fn main() {
         "help" | "--help" | "-h" => {
             usage_and_exit();
         }
-        other => Err(anyhow::anyhow!("unknown subcommand {other:?} (try `csrc help`)")),
+        other => Err(msg(format!("unknown subcommand {other:?} (try `csrc help`)"))),
     };
     if let Err(e) = result {
         eprintln!("error: {e}");
@@ -64,30 +66,30 @@ fn usage_and_exit() -> ! {
          csrc solve   --matrix <..> --solver <cg|gmres|bicg> [--tol 1e-10]\n\
          csrc serve   [--requests N] [--workers W]\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|all>\n\
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|all>\n\
                       [--suite smoke|quick|full] [--out results]"
     );
     std::process::exit(2);
 }
 
 /// Resolve `--matrix`: a dataset entry name or an .mtx path.
-fn load_matrix(args: &Args) -> anyhow::Result<(String, Csrc)> {
+fn load_matrix(args: &Args) -> Result<(String, Csrc)> {
     let spec = args
         .opt("matrix")
-        .ok_or_else(|| anyhow::anyhow!("--matrix <dataset-name|file.mtx> required"))?;
+        .ok_or_else(|| msg("--matrix <dataset-name|file.mtx> required"))?;
     if spec.ends_with(".mtx") {
         let coo = mmio::read_matrix_market(Path::new(spec))?;
-        let m = Csrc::from_coo(&coo).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let m = Csrc::from_coo(&coo).map_err(msg)?;
         return Ok((spec.to_string(), m));
     }
     let entry = harness::full_suite()
         .into_iter()
         .find(|e| e.name == spec)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset matrix {spec:?} (see `csrc figures table1`)"))?;
+        .ok_or_else(|| msg(format!("unknown dataset matrix {spec:?} (see `csrc figures table1`)")))?;
     Ok((spec.to_string(), entry.build_csrc()))
 }
 
-fn cmd_info(args: &Args) -> anyhow::Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
     println!("matrix        : {name}");
     println!("n             : {}", m.n);
@@ -111,7 +113,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+fn cmd_gen(args: &Args) -> Result<()> {
     let kind = args.opt_or("kind", "poisson2d");
     let nx = args.usize_or("nx", 40);
     let n = args.usize_or("n", 10000);
@@ -140,22 +142,32 @@ fn cmd_gen(args: &Args) -> anyhow::Result<()> {
             let mut rng = Rng::new(seed);
             Coo::dense_random(n.min(2048), &mut rng)
         }
-        other => anyhow::bail!("unknown kind {other:?}"),
+        other => return Err(msg(format!("unknown kind {other:?}"))),
     };
     mmio::write_matrix_market(Path::new(out), &coo, &format!("csrc gen --kind {kind}"))?;
     println!("wrote {out}: {}x{}, {} nnz", coo.nrows, coo.ncols, coo.nnz());
     Ok(())
 }
 
-fn cmd_spmv(args: &Args) -> anyhow::Result<()> {
+fn cmd_spmv(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
     let kind = EngineKind::parse(args.opt_or("engine", "effective"))
-        .ok_or_else(|| anyhow::anyhow!("bad --engine"))?;
+        .ok_or_else(|| msg("bad --engine"))?;
     let threads = args.usize_or("threads", 2);
     let products = args.usize_or("products", figures::products_for(m.nnz()));
     let n = m.n;
     let a = Arc::new(m);
-    let mut engine = build_engine(kind, a.clone(), threads);
+    // Analysis/execution split: build the plan once (reported), then the
+    // executor borrows it — the same path the coordinator caches.
+    let kernel: Arc<dyn SpmvKernel> = a.clone();
+    let plan = Arc::new(PlanBuilder::for_kind(threads, kind).build(kernel.as_ref()));
+    println!(
+        "plan: kernel={} pieces={:?} built in {:.3} ms",
+        plan.kernel_name,
+        plan.pieces,
+        plan.stats.total_s * 1e3
+    );
+    let mut engine = build_engine(kind, kernel, plan);
     let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
     let mut y = vec![0.0; n];
     let per = metrics::median_of_runs(3, products, || engine.spmv(&x, &mut y));
@@ -168,7 +180,7 @@ fn cmd_spmv(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+fn cmd_solve(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
     let tol = args.f64_or("tol", 1e-10);
     let which = args.opt_or("solver", "cg");
@@ -191,7 +203,7 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
             let r = solver::bicg(&m, &b, tol, 10 * n);
             (r.iterations, r.residual, r.converged)
         }
-        other => anyhow::bail!("unknown solver {other:?}"),
+        other => return Err(msg(format!("unknown solver {other:?}"))),
     };
     println!(
         "{name}: {which} {} in {} iterations, residual {res:.3e}, {:.2}s",
@@ -202,7 +214,7 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.usize_or("requests", 64);
     let cfg = ServiceConfig { workers: args.usize_or("workers", 2), ..Default::default() };
     let svc = MatvecService::start(cfg);
@@ -233,36 +245,41 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dt = t.elapsed().as_secs_f64();
     let s = svc.stats();
     println!(
-        "served {ok}/{requests} in {:.3}s ({:.0} req/s); batches={} mean_latency={:.0}us p99={:.0}us",
+        "served {ok}/{requests} in {:.3}s ({:.0} req/s); batches={} mean_latency={:.0}us \
+         p99={:.0}us plan_builds={} ({:.2} ms analysis)",
         dt,
         requests as f64 / dt,
         s.batches,
         s.mean_latency_us,
-        s.p99_latency_us
+        s.p99_latency_us,
+        s.plan_builds,
+        s.plan_build_seconds * 1e3
     );
     svc.shutdown();
     Ok(())
 }
 
-fn cmd_xla(args: &Args) -> anyhow::Result<()> {
+fn cmd_xla(args: &Args) -> Result<()> {
     let dir = args.opt_or("artifacts", "artifacts");
     let name = args.opt_or("name", "spmv_n256_w8");
+    // Without the `xla` cargo feature this returns a clean "rebuild with
+    // --features xla" error instead of failing to link.
     let mut rt = XlaRuntime::open(Path::new(dir))?;
     println!("platform: {}", rt.platform());
     let entry = rt
         .manifest
         .find(name)
-        .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not found"))?
+        .ok_or_else(|| msg(format!("artifact {name:?} not found")))?
         .clone();
     println!("artifact {} (n={}, w={})", entry.name, entry.n, entry.w);
     // Build a matching matrix, run both paths, cross-check.
     let mut rng = Rng::new(3);
     let coo =
         Coo::random_structurally_symmetric(entry.n * 3 / 4, 4.min(entry.w), false, &mut rng);
-    let m = Csrc::from_coo(&coo).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let m = Csrc::from_coo(&coo).map_err(msg)?;
     let ell = m
         .to_ell(entry.n, entry.w)
-        .ok_or_else(|| anyhow::anyhow!("matrix does not fit artifact shape"))?;
+        .ok_or_else(|| msg("matrix does not fit artifact shape"))?;
     let x64: Vec<f64> = (0..entry.n).map(|i| if i < m.n { rng.normal() } else { 0.0 }).collect();
     let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
     let t = std::time::Instant::now();
@@ -273,13 +290,18 @@ fn cmd_xla(args: &Args) -> anyhow::Result<()> {
     let max_err = (0..m.n)
         .map(|i| (got[i] as f64 - want[i]).abs() / (1.0 + want[i].abs()))
         .fold(0.0, f64::max);
-    println!("xla spmv: {:.3} ms (incl. first-call compile), max rel err vs native = {max_err:.2e}", xla_time * 1e3);
-    anyhow::ensure!(max_err < 1e-3, "XLA/native mismatch");
+    println!(
+        "xla spmv: {:.3} ms (incl. first-call compile), max rel err vs native = {max_err:.2e}",
+        xla_time * 1e3
+    );
+    if max_err >= 1e-3 {
+        return Err(msg("XLA/native mismatch"));
+    }
     println!("cross-check OK");
     Ok(())
 }
 
-fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+fn cmd_figures(args: &Args) -> Result<()> {
     let what = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let suite = match args.opt_or("suite", "quick") {
         "smoke" => harness::smoke_suite(),
@@ -367,6 +389,16 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
             "Table 2 — avg max per-thread init+accumulation overhead",
             &h,
             &figures::table2(&suite),
+        )?;
+    }
+    if run_all || what == "plan" {
+        let headers = figures::plan_overview_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "plan",
+            "Plan analysis — shared SpmvPlan cost and shape (4 threads)",
+            &h,
+            &figures::plan_overview(&suite, 4),
         )?;
     }
     println!("wrote results under {out}/");

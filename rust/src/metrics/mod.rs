@@ -10,6 +10,17 @@ pub fn mflops(flops: usize, seconds: f64) -> f64 {
     flops as f64 / seconds.max(1e-12) / 1e6
 }
 
+/// Run `f`, returning its result and the elapsed wall-clock seconds —
+/// used by the plan builder so per-phase analysis cost (partition,
+/// ranges, intervals, coloring) lands in [`crate::plan::PlanStats`] and,
+/// aggregated, in the coordinator's `ServiceStats::plan_build_seconds`.
+#[inline]
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
 /// The paper's protocol: run `products` SpMVs per measurement, repeat
 /// `runs` times, report the median (§4: 1000 products, median of 3).
 pub fn median_of_runs<F: FnMut()>(runs: usize, products: usize, mut one_product: F) -> f64 {
@@ -95,6 +106,13 @@ mod tests {
     fn mflops_basic() {
         assert_eq!(mflops(2_000_000, 1.0), 2.0);
         assert!(mflops(1, 0.0).is_finite());
+    }
+
+    #[test]
+    fn timed_returns_result_and_duration() {
+        let (v, s) = timed(|| 6 * 7);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
     }
 
     #[test]

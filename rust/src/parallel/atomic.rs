@@ -1,19 +1,21 @@
 //! Atomics baseline (§3 intro): the paper notes that atomic primitives /
 //! locks cost too much relative to the fine-grained y accesses. We keep a
 //! CAS-loop f64 atomic-add engine as the ablation that quantifies that
-//! claim (bench `ablations`).
+//! claim (bench `ablations`). Like every executor it borrows its row
+//! partition from the shared [`SpmvPlan`] and sweeps rows through the
+//! [`SpmvKernel`] contribution stream.
 
 use super::pool::ThreadPool;
 use super::ParallelSpmv;
-use crate::partition::{self, RowPartition};
-use crate::sparse::Csrc;
+use crate::plan::{PlanBuilder, SpmvPlan};
+use crate::sparse::SpmvKernel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 pub struct AtomicEngine {
-    a: Arc<Csrc>,
+    kernel: Arc<dyn SpmvKernel>,
+    plan: Arc<SpmvPlan>,
     pool: ThreadPool,
-    part: RowPartition,
     /// f64 bits behind AtomicU64 — lives across calls to avoid realloc.
     bits: Vec<AtomicU64>,
 }
@@ -31,23 +33,34 @@ fn atomic_add(slot: &AtomicU64, v: f64) {
 }
 
 impl AtomicEngine {
-    pub fn new(a: Arc<Csrc>, p: usize) -> Self {
-        let part = partition::nnz_balanced(&a, p);
-        let bits = (0..a.n).map(|_| AtomicU64::new(0)).collect();
-        AtomicEngine { a, pool: ThreadPool::new(p), part, bits }
+    /// Analyze-and-build convenience (single-use plan).
+    pub fn new(kernel: Arc<dyn SpmvKernel>, p: usize) -> Self {
+        let plan = Arc::new(
+            PlanBuilder::for_kind(p, super::EngineKind::Atomic).build(kernel.as_ref()),
+        );
+        Self::with_plan(kernel, plan)
+    }
+
+    /// Build over a shared plan (only the row partition is consumed).
+    pub fn with_plan(kernel: Arc<dyn SpmvKernel>, plan: Arc<SpmvPlan>) -> Self {
+        let n = kernel.dim();
+        assert_eq!(plan.n, n, "plan built for a different matrix");
+        let bits = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let p = plan.nthreads;
+        AtomicEngine { kernel, plan, pool: ThreadPool::new(p), bits }
     }
 }
 
 impl ParallelSpmv for AtomicEngine {
     fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
-        let n = self.a.n;
+        let n = self.plan.n;
         let p = self.pool.nthreads();
         if p == 1 {
-            self.a.spmv_into_zeroed(x, y);
+            self.kernel.sweep_full(x, y);
             return;
         }
-        let a = &self.a;
-        let part = &self.part;
+        let kernel = &*self.kernel;
+        let part = &self.plan.part;
         let bits = &self.bits;
         let barrier = self.pool.barrier();
         self.pool.run(move |t| {
@@ -58,14 +71,7 @@ impl ParallelSpmv for AtomicEngine {
             barrier.wait();
             let block = part.block(t);
             for i in block {
-                let xi = x[i];
-                let mut acc = a.ad[i] * xi;
-                for k in a.row_range(i) {
-                    let j = a.ja[k] as usize;
-                    acc += a.al[k] * x[j];
-                    atomic_add(&bits[j], a.au[k] * xi);
-                }
-                atomic_add(&bits[i], acc);
+                kernel.sweep_row_contribs(x, i, &mut |idx, v| atomic_add(&bits[idx], v));
             }
         });
         for (dst, slot) in y.iter_mut().zip(&self.bits) {
@@ -80,13 +86,17 @@ impl ParallelSpmv for AtomicEngine {
     fn nthreads(&self) -> usize {
         self.pool.nthreads()
     }
+
+    fn plan(&self) -> Option<&Arc<SpmvPlan>> {
+        Some(&self.plan)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::Coo;
-    use crate::util::{propcheck, Rng};
+    use crate::sparse::{Coo, Csrc};
+    use crate::util::propcheck;
 
     #[test]
     fn atomic_add_accumulates_exactly() {

@@ -1,95 +1,77 @@
-//! Colorful strategy (§3.2): rows are grouped into conflict-free color
+//! Colorful executor (§3.2): rows are grouped into conflict-free color
 //! classes (no direct or indirect conflicts inside a class), so inside a
 //! class every thread may write y directly — no buffers, no atomics.
 //! Classes run one after another with a team barrier in between; rows of
 //! a class are split nnz-balanced among threads.
+//!
+//! The coloring and the per-class thread shares are analysis and live in
+//! the borrowed [`SpmvPlan`]; this type holds only the thread pool and
+//! sweeps rows through the [`SpmvKernel`] abstraction, so the same
+//! executor serves CSRC (scattering) and scatter-free formats (which
+//! collapse to a single color).
 
 use super::pool::ThreadPool;
 use super::share::SyncSlice;
 use super::ParallelSpmv;
-use crate::graph::{greedy_coloring, ColorClasses, ConflictGraph, Ordering as ColorOrdering};
-use crate::sparse::Csrc;
+use crate::graph::ColorClasses;
+use crate::plan::{PlanBuilder, SpmvPlan};
+use crate::sparse::SpmvKernel;
 use std::sync::Arc;
 
 pub struct ColorfulEngine {
-    a: Arc<Csrc>,
+    kernel: Arc<dyn SpmvKernel>,
+    plan: Arc<SpmvPlan>,
     pool: ThreadPool,
-    colors: ColorClasses,
-    /// Per color, per thread: the slice [lo, hi) of the class row list the
-    /// thread processes (nnz-balanced inside the class).
-    shares: Vec<Vec<(usize, usize)>>,
 }
 
 impl ColorfulEngine {
-    pub fn new(a: Arc<Csrc>, p: usize) -> Self {
-        let g = ConflictGraph::build(&a);
-        let colors = greedy_coloring(&g, ColorOrdering::Natural);
-        Self::with_coloring(a, p, colors)
+    /// Analyze-and-build convenience (single-use plan). Shared-plan
+    /// callers use [`ColorfulEngine::with_plan`] / [`super::build_engine`].
+    pub fn new(kernel: Arc<dyn SpmvKernel>, p: usize) -> Self {
+        let plan = Arc::new(
+            PlanBuilder::for_kind(p, super::EngineKind::Colorful).build(kernel.as_ref()),
+        );
+        Self::with_plan(kernel, plan)
     }
 
     /// Build with a caller-provided coloring (used by the stride-capped
     /// ablation and by tests).
-    pub fn with_coloring(a: Arc<Csrc>, p: usize, colors: ColorClasses) -> Self {
-        let shares = colors
-            .classes
-            .iter()
-            .map(|class| split_class_by_nnz(&a, class, p))
-            .collect();
-        ColorfulEngine { a, pool: ThreadPool::new(p), colors, shares }
+    pub fn with_coloring(kernel: Arc<dyn SpmvKernel>, p: usize, colors: ColorClasses) -> Self {
+        let plan =
+            Arc::new(PlanBuilder::new(p).build_with_coloring(kernel.as_ref(), colors));
+        Self::with_plan(kernel, plan)
+    }
+
+    /// Build over a shared plan (must carry the coloring piece).
+    pub fn with_plan(kernel: Arc<dyn SpmvKernel>, plan: Arc<SpmvPlan>) -> Self {
+        assert_eq!(plan.n, kernel.dim(), "plan built for a different matrix");
+        assert!(plan.colors.is_some(), "colorful engine needs plan coloring");
+        let p = plan.nthreads;
+        ColorfulEngine { kernel, plan, pool: ThreadPool::new(p) }
     }
 
     pub fn num_colors(&self) -> usize {
-        self.colors.num_colors()
+        self.coloring().num_colors()
     }
 
     pub fn coloring(&self) -> &ColorClasses {
-        &self.colors
+        self.plan.colors.as_ref().unwrap()
     }
-}
-
-/// Split a class's row list into p contiguous chunks balanced by the
-/// per-row CSRC work (1 + 2·row_len).
-fn split_class_by_nnz(a: &Csrc, class: &[u32], p: usize) -> Vec<(usize, usize)> {
-    let work: Vec<usize> = class.iter().map(|&i| 1 + 2 * a.row_range(i as usize).len()).collect();
-    let total: usize = work.iter().sum();
-    let mut out = Vec::with_capacity(p);
-    let mut pos = 0usize;
-    let mut consumed = 0usize;
-    for t in 0..p {
-        let start = pos;
-        if t + 1 == p {
-            pos = class.len();
-        } else {
-            let target = (total - consumed) as f64 / (p - t) as f64;
-            let mut blk = 0usize;
-            while pos < class.len() {
-                let w = work[pos];
-                if blk > 0 && (blk + w) as f64 - target > target - blk as f64 {
-                    break;
-                }
-                blk += w;
-                pos += 1;
-            }
-            consumed += blk;
-        }
-        out.push((start, pos));
-    }
-    out
 }
 
 impl ParallelSpmv for ColorfulEngine {
     fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
-        let n = self.a.n;
+        let n = self.plan.n;
         debug_assert_eq!(x.len(), n);
         debug_assert_eq!(y.len(), n);
         let p = self.pool.nthreads();
         if p == 1 {
-            self.a.spmv_into_zeroed(x, y);
+            self.kernel.sweep_full(x, y);
             return;
         }
-        let a = &self.a;
-        let colors = &self.colors;
-        let shares = &self.shares;
+        let kernel = &*self.kernel;
+        let colors = self.plan.colors.as_ref().unwrap();
+        let shares = self.plan.color_shares.as_ref().unwrap();
         let barrier = self.pool.barrier();
         let yv = SyncSlice::new(y);
 
@@ -99,29 +81,19 @@ impl ParallelSpmv for ColorfulEngine {
             // SAFETY: disjoint per-thread chunks.
             unsafe { yv.slice_mut(lo..hi).fill(0.0) };
             barrier.wait();
-            // One color at a time; rows inside a color are conflict-free,
-            // so direct writes to y are safe. Barrier between colors.
+            // One color at a time; rows inside a class are conflict-free
+            // — by the coloring invariant no other thread's row in this
+            // phase writes any y position row i's sweep writes — so the
+            // kernel may accumulate straight into the shared vector
+            // (through a raw pointer: no `&mut` alias of y is ever
+            // formed). Barrier between colors.
             for (class, share) in colors.classes.iter().zip(shares) {
                 let (s, e) = share[t];
                 for &row in &class[s..e] {
                     let i = row as usize;
-                    let xi = x[i];
-                    let mut acc = a.ad[i] * xi;
-                    for k in a.row_range(i) {
-                        let j = a.ja[k] as usize;
-                        acc += a.al[k] * x[j];
-                        // SAFETY: j is a direct neighbour of i; no other
-                        // row in this class conflicts with i, so no other
-                        // thread touches y[j] in this phase.
-                        unsafe {
-                            let cur = *yv.slice_mut(j..j + 1).as_ptr();
-                            yv.write(j, cur + a.au[k] * xi);
-                        }
-                    }
-                    unsafe {
-                        let cur = *yv.slice_mut(i..i + 1).as_ptr();
-                        yv.write(i, cur + acc);
-                    }
+                    // SAFETY: y has length n and row i's write set is
+                    // disjoint from every other row of this class.
+                    unsafe { kernel.sweep_row_shared(x, i, yv.as_mut_ptr()) };
                 }
                 barrier.wait();
             }
@@ -135,13 +107,17 @@ impl ParallelSpmv for ColorfulEngine {
     fn nthreads(&self) -> usize {
         self.pool.nthreads()
     }
+
+    fn plan(&self) -> Option<&Arc<SpmvPlan>> {
+        Some(&self.plan)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::stride_capped_coloring;
-    use crate::sparse::Coo;
+    use crate::graph::{stride_capped_coloring, ConflictGraph};
+    use crate::sparse::{Coo, Csrc};
     use crate::util::{propcheck, Rng};
 
     fn mat(n: usize, npr: usize, seed: u64) -> Arc<Csrc> {
@@ -177,7 +153,7 @@ mod tests {
     #[test]
     fn stride_capped_coloring_also_correct() {
         let a = mat(90, 3, 62);
-        let g = ConflictGraph::build(&a);
+        let g = ConflictGraph::build(a.as_ref());
         let colors = stride_capped_coloring(&g, 8);
         let x: Vec<f64> = (0..90).map(|i| i as f64).collect();
         let mut want = vec![0.0; 90];
@@ -192,7 +168,9 @@ mod tests {
     fn class_shares_cover_class() {
         let a = mat(70, 3, 63);
         let e = ColorfulEngine::new(a, 4);
-        for (class, share) in e.colors.classes.iter().zip(&e.shares) {
+        let colors = e.coloring();
+        let shares = e.plan.color_shares.as_ref().unwrap();
+        for (class, share) in colors.classes.iter().zip(shares) {
             assert_eq!(share[0].0, 0);
             assert_eq!(share.last().unwrap().1, class.len());
             for w in share.windows(2) {

@@ -1,4 +1,4 @@
-//! Local-buffers strategy (§3.1): each thread scatters into a private
+//! Local-buffers executor (§3.1): each thread scatters into a private
 //! buffer; buffers are merged into y in an accumulation step. The four
 //! init/accumulation schemes of the paper:
 //!
@@ -9,14 +9,17 @@
 //! | effective  | own buffer over own effective range | own *owned rows*, buffers covering them        | Θ(p log(n/p))|
 //! | interval   | intervals of intersected eff ranges | intervals, assigned load-balanced              | Θ(p log(n/p))|
 //!
-//! Partitioning is nnz-guided (§3.1 last paragraph). With one thread the
+//! All analysis (nnz-guided partition, effective ranges, interval
+//! decomposition) lives in the borrowed [`SpmvPlan`]; this type holds
+//! only execution state — the thread pool and the scatter buffers — and
+//! sweeps whatever [`SpmvKernel`] it was built over. With one thread the
 //! engine bypasses buffers entirely (the paper's runtime check).
 
 use super::pool::ThreadPool;
 use super::share::{SharedBuffers, SyncSlice};
 use super::ParallelSpmv;
-use crate::partition::{self, Interval, RowPartition};
-use crate::sparse::Csrc;
+use crate::plan::{PlanBuilder, SpmvPlan};
+use crate::sparse::SpmvKernel;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -51,50 +54,54 @@ impl AccumMethod {
 }
 
 pub struct LocalBuffersEngine {
-    a: Arc<Csrc>,
+    kernel: Arc<dyn SpmvKernel>,
+    plan: Arc<SpmvPlan>,
     pool: ThreadPool,
     method: AccumMethod,
-    part: RowPartition,
-    /// Effective range per thread (§3.1).
-    eff: Vec<Range<usize>>,
-    /// Interval decomposition + per-thread assignment (interval method).
-    ints: Vec<Interval>,
-    int_assign: Vec<Vec<usize>>,
     bufs: SharedBuffers,
-    /// Buffers covering each owned block (effective method): for thread
-    /// t's owned rows, which buffers' effective ranges intersect them.
-    covering: Vec<Vec<usize>>,
     /// Nanoseconds of the slowest thread's init+accumulate work in the
     /// last call — the Table 2 measurement.
     pub last_overhead_ns: u64,
 }
 
 impl LocalBuffersEngine {
-    pub fn new(a: Arc<Csrc>, p: usize, method: AccumMethod) -> Self {
-        let part = partition::nnz_balanced(&a, p);
-        let eff: Vec<Range<usize>> =
-            (0..p).map(|t| partition::effective_range(&a, part.block(t))).collect();
-        let ints = partition::intervals(&eff);
-        let int_assign = partition::assign_intervals(&ints, p);
-        let covering = (0..p)
-            .map(|t| {
-                let own = part.block(t);
-                (0..p)
-                    .filter(|&b| eff[b].start < own.end && own.start < eff[b].end)
-                    .collect()
-            })
-            .collect();
-        let bufs = SharedBuffers::new(p, a.n);
+    /// Analyze-and-build convenience (single-use plan). Shared-plan
+    /// callers use [`LocalBuffersEngine::with_plan`] /
+    /// [`super::build_engine`].
+    pub fn new(kernel: Arc<dyn SpmvKernel>, p: usize, method: AccumMethod) -> Self {
+        let plan = Arc::new(
+            PlanBuilder::for_kind(p, super::EngineKind::LocalBuffers(method))
+                .build(kernel.as_ref()),
+        );
+        Self::with_plan(kernel, plan, method)
+    }
+
+    /// Build over a shared plan. The plan must carry the pieces `method`
+    /// needs (`ranges` for effective, `intervals` for interval).
+    pub fn with_plan(
+        kernel: Arc<dyn SpmvKernel>,
+        plan: Arc<SpmvPlan>,
+        method: AccumMethod,
+    ) -> Self {
+        let n = kernel.dim();
+        assert_eq!(plan.n, n, "plan built for a different matrix");
+        match method {
+            AccumMethod::Effective => {
+                assert!(plan.eff.is_some(), "effective method needs plan ranges")
+            }
+            AccumMethod::Interval => {
+                assert!(plan.ints.is_some(), "interval method needs plan intervals")
+            }
+            _ => {}
+        }
+        let p = plan.nthreads;
+        let bufs = SharedBuffers::new(p, n);
         LocalBuffersEngine {
-            a,
+            kernel,
+            plan,
             pool: ThreadPool::new(p),
             method,
-            part,
-            eff,
-            ints,
-            int_assign,
             bufs,
-            covering,
             last_overhead_ns: 0,
         }
     }
@@ -103,35 +110,32 @@ impl LocalBuffersEngine {
         self.method
     }
 
-    pub fn partition(&self) -> &RowPartition {
-        &self.part
-    }
-
-    pub fn effective_ranges(&self) -> &[Range<usize>] {
-        &self.eff
+    pub fn effective_ranges(&self) -> Option<&[Range<usize>]> {
+        self.plan.eff.as_deref()
     }
 }
 
 impl ParallelSpmv for LocalBuffersEngine {
     fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
         let p = self.pool.nthreads();
-        let n = self.a.n;
+        let n = self.plan.n;
         debug_assert_eq!(x.len(), n);
         debug_assert_eq!(y.len(), n);
 
         // Single-thread shortcut (§4.2): use the global vector directly.
         if p == 1 {
-            self.a.spmv_into_zeroed(x, y);
+            self.kernel.sweep_full(x, y);
             self.last_overhead_ns = 0;
             return;
         }
 
-        let a = &self.a;
-        let part = &self.part;
-        let eff = &self.eff;
-        let ints = &self.ints;
-        let int_assign = &self.int_assign;
-        let covering = &self.covering;
+        let kernel = &*self.kernel;
+        let plan = &*self.plan;
+        let part = &plan.part;
+        let eff: &[Range<usize>] = plan.eff.as_deref().unwrap_or(&[]);
+        let covering: &[Vec<usize>] = plan.covering.as_deref().unwrap_or(&[]);
+        let ints: &[crate::partition::Interval] = plan.ints.as_deref().unwrap_or(&[]);
+        let int_assign: &[Vec<usize>] = plan.int_assign.as_deref().unwrap_or(&[]);
         let bufs = &self.bufs;
         let method = self.method;
         let barrier = self.pool.barrier();
@@ -190,7 +194,7 @@ impl ParallelSpmv for LocalBuffersEngine {
             let block = part.block(t);
             // SAFETY: buffer t is written by thread t only in this phase.
             let buf = unsafe { bufs.get_mut(t) };
-            a.spmv_rows_into(x, block.start, block.end, buf, 0);
+            kernel.sweep_rows_into(x, block.start, block.end, buf, 0);
             barrier.wait();
 
             // ---- accumulation step ------------------------------------
@@ -266,17 +270,23 @@ impl ParallelSpmv for LocalBuffersEngine {
     fn nthreads(&self) -> usize {
         self.pool.nthreads()
     }
+
+    fn plan(&self) -> Option<&Arc<SpmvPlan>> {
+        Some(&self.plan)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::Coo;
+    use crate::sparse::{Coo, Csrc};
     use crate::util::{propcheck, Rng};
 
     fn mat(n: usize, npr: usize, seed: u64) -> Arc<Csrc> {
         let mut rng = Rng::new(seed);
-        Arc::new(Csrc::from_coo(&Coo::random_structurally_symmetric(n, npr, false, &mut rng)).unwrap())
+        Arc::new(
+            Csrc::from_coo(&Coo::random_structurally_symmetric(n, npr, false, &mut rng)).unwrap(),
+        )
     }
 
     #[test]
@@ -293,6 +303,22 @@ mod tests {
                 propcheck::assert_close(&y, &want, 1e-11, 1e-11)
                     .unwrap_or_else(|err| panic!("{} p={p}: {err}", method.label()));
             }
+        }
+    }
+
+    #[test]
+    fn methods_share_one_full_plan() {
+        let a = mat(100, 4, 55);
+        let plan = Arc::new(PlanBuilder::all(4).build(a.as_ref()));
+        let x: Vec<f64> = (0..100).map(|i| (i as f64 * 0.3).cos()).collect();
+        let mut want = vec![0.0; 100];
+        a.spmv_into_zeroed(&x, &mut want);
+        for method in AccumMethod::all() {
+            let mut e = LocalBuffersEngine::with_plan(a.clone(), plan.clone(), method);
+            assert!(Arc::ptr_eq(e.plan().unwrap(), &plan));
+            let mut y = vec![f64::NAN; 100];
+            e.spmv(&x, &mut y);
+            propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
         }
     }
 
@@ -321,8 +347,9 @@ mod tests {
         // Whoever covers thread t's rows must include t itself.
         let a = mat(100, 4, 53);
         let e = LocalBuffersEngine::new(a, 4, AccumMethod::Effective);
+        let covering = e.plan.covering.as_ref().unwrap();
         for t in 0..4 {
-            assert!(e.covering[t].contains(&t));
+            assert!(covering[t].contains(&t));
         }
     }
 

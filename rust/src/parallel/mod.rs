@@ -1,19 +1,30 @@
-//! Parallel CSRC SpMV engines (§3 of the paper).
+//! Parallel SpMV executors (§3 of the paper).
 //!
-//! The CSRC sweep scatters into `y[ja(k)]` while another thread may own
-//! that row — the race the paper's two strategies avoid:
+//! The row sweep of a scatter-producing kernel (CSRC writes `y[ja(k)]`
+//! while another thread may own that row) races unless scheduled; the
+//! paper's two strategies avoid the race with precomputed analysis. This
+//! module holds only the *execution* half of that split: every engine is
+//! a format-generic executor over a [`SpmvKernel`] that borrows a shared,
+//! immutable [`SpmvPlan`] (see [`crate::plan`]) instead of computing its
+//! own analysis in the constructor.
 //!
 //! * [`local_buffers::LocalBuffersEngine`] — per-thread private buffers
 //!   merged in an accumulation step, with the four init/accumulation
-//!   schemes of §3.1 ([`AccumMethod`]),
-//! * [`colorful::ColorfulEngine`] — conflict-free color classes (§3.2),
+//!   schemes of §3.1 ([`AccumMethod`]); consumes the plan's partition,
+//!   effective ranges and interval decomposition,
+//! * [`colorful::ColorfulEngine`] — conflict-free color classes (§3.2);
+//!   consumes the plan's coloring and class shares,
 //! * [`atomic::AtomicEngine`] — the atomics baseline the paper dismisses
-//!   as too costly (kept as an ablation),
+//!   as too costly (kept as an ablation); consumes the partition,
 //! * [`pool::ThreadPool`] — the persistent fork-join worker pool all
 //!   engines share.
 //!
-//! Every engine implements [`ParallelSpmv`] and is property-tested against
-//! the sequential sweep.
+//! Engines are built through [`build_engine`] from `(kind, kernel, plan)`
+//! — the coordinator caches one plan per matrix × thread-count and every
+//! worker / engine borrows it. [`build_engine_auto`] builds a fresh
+//! single-use plan for callers without a cache. Every engine implements
+//! [`ParallelSpmv`] and is property-tested against the sequential sweep
+//! for both the CSRC and CSR kernels.
 
 pub mod atomic;
 pub mod colorful;
@@ -25,15 +36,21 @@ pub use colorful::ColorfulEngine;
 pub use local_buffers::{AccumMethod, LocalBuffersEngine};
 pub use pool::ThreadPool;
 
-use crate::sparse::Csrc;
+use crate::plan::{PlanBuilder, SpmvPlan};
+use crate::sparse::SpmvKernel;
+use std::sync::Arc;
 
-/// A parallel y = A·x engine over a fixed matrix + thread count.
+/// A parallel y = A·x engine over a fixed kernel + plan.
 pub trait ParallelSpmv {
     /// Compute y = A x (y fully overwritten).
     fn spmv(&mut self, x: &[f64], y: &mut [f64]);
     /// Engine name for reports.
     fn name(&self) -> String;
     fn nthreads(&self) -> usize;
+    /// The plan this engine executes (None for the sequential baseline).
+    fn plan(&self) -> Option<&Arc<SpmvPlan>> {
+        None
+    }
 }
 
 /// Which engine to build — the CLI / harness selector.
@@ -55,8 +72,36 @@ impl EngineKind {
         ]
     }
 
+    /// Every selectable kind (the order reports use).
+    pub fn all() -> [EngineKind; 7] {
+        [
+            EngineKind::Sequential,
+            EngineKind::LocalBuffers(AccumMethod::AllInOne),
+            EngineKind::LocalBuffers(AccumMethod::PerBuffer),
+            EngineKind::LocalBuffers(AccumMethod::Effective),
+            EngineKind::LocalBuffers(AccumMethod::Interval),
+            EngineKind::Colorful,
+            EngineKind::Atomic,
+        ]
+    }
+
+    /// Parse a selector. Accepts both the short CLI spellings
+    /// (`effective`) and every string [`EngineKind::label`] emits
+    /// (`local-buffers/effective`), case-insensitively. The
+    /// `local-buffers/` prefix is valid only for the four accumulation
+    /// methods — `local-buffers/colorful` is rejected, not reinterpreted.
     pub fn parse(s: &str) -> Option<EngineKind> {
-        Some(match s {
+        let lower = s.trim().to_ascii_lowercase();
+        if let Some(method) = lower.strip_prefix("local-buffers/") {
+            return Some(EngineKind::LocalBuffers(match method {
+                "all-in-one" => AccumMethod::AllInOne,
+                "per-buffer" => AccumMethod::PerBuffer,
+                "effective" => AccumMethod::Effective,
+                "interval" => AccumMethod::Interval,
+                _ => return None,
+            }));
+        }
+        Some(match lower.as_str() {
             "seq" | "sequential" => EngineKind::Sequential,
             "all-in-one" => EngineKind::LocalBuffers(AccumMethod::AllInOne),
             "per-buffer" => EngineKind::LocalBuffers(AccumMethod::PerBuffer),
@@ -79,20 +124,20 @@ impl EngineKind {
 }
 
 /// Sequential engine (the speedup baseline: the paper's speedups are
-/// relative to the *pure sequential* CSRC sweep, not the 1-thread case).
+/// relative to the *pure sequential* sweep, not the 1-thread case).
 pub struct SequentialEngine {
-    a: std::sync::Arc<Csrc>,
+    kernel: Arc<dyn SpmvKernel>,
 }
 
 impl SequentialEngine {
-    pub fn new(a: std::sync::Arc<Csrc>) -> Self {
-        Self { a }
+    pub fn new(kernel: Arc<dyn SpmvKernel>) -> Self {
+        Self { kernel }
     }
 }
 
 impl ParallelSpmv for SequentialEngine {
     fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
-        self.a.spmv_into_zeroed(x, y);
+        self.kernel.sweep_full(x, y);
     }
     fn name(&self) -> String {
         "sequential".into()
@@ -102,68 +147,156 @@ impl ParallelSpmv for SequentialEngine {
     }
 }
 
-/// Build any engine from its kind.
+/// Build an executor from its kind, the kernel it sweeps, and the shared
+/// plan it borrows — the coordinator path, where one `Arc<SpmvPlan>` per
+/// matrix × thread-count serves every worker and engine.
+///
+/// Panics if the plan lacks a piece the kind needs (build it with
+/// [`PlanBuilder::for_kind`] or [`PlanBuilder::all`]).
 pub fn build_engine(
     kind: EngineKind,
-    a: std::sync::Arc<Csrc>,
+    kernel: Arc<dyn SpmvKernel>,
+    plan: Arc<SpmvPlan>,
+) -> Box<dyn ParallelSpmv> {
+    assert!(
+        plan.pieces.covers(crate::plan::PlanPieces::for_kind(kind)),
+        "plan (pieces {:?}) cannot run {}",
+        plan.pieces,
+        kind.label()
+    );
+    match kind {
+        EngineKind::Sequential => Box::new(SequentialEngine::new(kernel)),
+        EngineKind::LocalBuffers(m) => Box::new(LocalBuffersEngine::with_plan(kernel, plan, m)),
+        EngineKind::Colorful => Box::new(ColorfulEngine::with_plan(kernel, plan)),
+        EngineKind::Atomic => Box::new(AtomicEngine::with_plan(kernel, plan)),
+    }
+}
+
+/// Convenience for plan-less callers (examples, benches, one-shot CLI
+/// runs): analyze the kernel for exactly this kind and build the engine.
+pub fn build_engine_auto(
+    kind: EngineKind,
+    kernel: Arc<dyn SpmvKernel>,
     nthreads: usize,
 ) -> Box<dyn ParallelSpmv> {
-    match kind {
-        EngineKind::Sequential => Box::new(SequentialEngine::new(a)),
-        EngineKind::LocalBuffers(m) => Box::new(LocalBuffersEngine::new(a, nthreads, m)),
-        EngineKind::Colorful => Box::new(ColorfulEngine::new(a, nthreads)),
-        EngineKind::Atomic => Box::new(AtomicEngine::new(a, nthreads)),
-    }
+    let plan = Arc::new(PlanBuilder::for_kind(nthreads, kind).build(kernel.as_ref()));
+    build_engine(kind, kernel, plan)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::Coo;
+    use crate::sparse::{Coo, Csr, Csrc};
     use crate::util::{propcheck, Rng};
     use std::sync::Arc;
 
-    /// Every engine × several thread counts must match the sequential
-    /// sweep — the central correctness property of the whole paper.
+    /// Every engine × kernel format × several thread counts must match
+    /// the sequential sweep — the central correctness property of the
+    /// whole paper, now format-generic: the same executors run the CSRC
+    /// kernel (scattering) and the CSR kernel (scatter-free).
     #[test]
     fn all_engines_match_sequential() {
-        propcheck::check(8, |rng| {
+        propcheck::check(6, |rng| {
             let n = 16 + rng.below(120);
             let npr = 1 + rng.below(6);
             let sym = rng.below(2) == 0;
             let coo = Coo::random_structurally_symmetric(n, npr, sym, rng);
-            let a = Arc::new(crate::sparse::Csrc::from_coo(&coo).map_err(|e| e.to_string())?);
+            let csrc = Csrc::from_coo(&coo).map_err(|e| e.to_string())?;
+            let csr = Csr::from_coo(&coo);
+            let kernels: [Arc<dyn crate::sparse::SpmvKernel>; 2] =
+                [Arc::new(csrc), Arc::new(csr)];
             let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-            let mut want = vec![0.0; n];
-            a.spmv_into_zeroed(&x, &mut want);
-            let kinds = [
-                EngineKind::LocalBuffers(AccumMethod::AllInOne),
-                EngineKind::LocalBuffers(AccumMethod::PerBuffer),
-                EngineKind::LocalBuffers(AccumMethod::Effective),
-                EngineKind::LocalBuffers(AccumMethod::Interval),
-                EngineKind::Colorful,
-                EngineKind::Atomic,
-            ];
-            for kind in kinds {
-                for p in [1, 2, 3, 4] {
-                    let mut engine = build_engine(kind, a.clone(), p);
-                    let mut y = vec![f64::NAN; n]; // must be fully overwritten
-                    engine.spmv(&x, &mut y);
-                    propcheck::assert_close(&y, &want, 1e-11, 1e-11)
-                        .map_err(|e| format!("{} p={p}: {e}", kind.label()))?;
+            for kernel in kernels {
+                let mut want = vec![0.0; n];
+                kernel.sweep_full(&x, &mut want);
+                let kinds = [
+                    EngineKind::LocalBuffers(AccumMethod::AllInOne),
+                    EngineKind::LocalBuffers(AccumMethod::PerBuffer),
+                    EngineKind::LocalBuffers(AccumMethod::Effective),
+                    EngineKind::LocalBuffers(AccumMethod::Interval),
+                    EngineKind::Colorful,
+                    EngineKind::Atomic,
+                ];
+                for kind in kinds {
+                    for p in [1, 2, 3, 4] {
+                        let mut engine = build_engine_auto(kind, kernel.clone(), p);
+                        let mut y = vec![f64::NAN; n]; // must be fully overwritten
+                        engine.spmv(&x, &mut y);
+                        propcheck::assert_close(&y, &want, 1e-11, 1e-11).map_err(|e| {
+                            format!("{} [{}] p={p}: {e}", kind.label(), kernel.kernel_name())
+                        })?;
+                    }
                 }
             }
             Ok(())
         });
     }
 
+    /// One shared full plan drives every engine kind — the coordinator's
+    /// usage pattern.
     #[test]
-    fn engine_parse_labels_roundtrip() {
+    fn engines_share_one_plan() {
+        let mut rng = Rng::new(7);
+        let coo = Coo::random_structurally_symmetric(90, 4, false, &mut rng);
+        let a: Arc<dyn crate::sparse::SpmvKernel> = Arc::new(Csrc::from_coo(&coo).unwrap());
+        let plan = Arc::new(crate::plan::PlanBuilder::all(3).build(a.as_ref()));
+        let x: Vec<f64> = (0..90).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0; 90];
+        a.sweep_full(&x, &mut want);
+        for kind in EngineKind::all() {
+            let mut engine = build_engine(kind, a.clone(), plan.clone());
+            if let Some(p) = engine.plan() {
+                assert!(Arc::ptr_eq(p, &plan), "{} must borrow the shared plan", kind.label());
+            }
+            let mut y = vec![f64::NAN; 90];
+            engine.spmv(&x, &mut y);
+            propcheck::assert_close(&y, &want, 1e-9, 1e-9).unwrap();
+        }
+    }
+
+    #[test]
+    fn bcsr_kernel_runs_through_engines() {
+        let mut rng = Rng::new(8);
+        let coo = Coo::random_structurally_symmetric(64, 3, false, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let bcsr: Arc<dyn crate::sparse::SpmvKernel> =
+            Arc::new(crate::sparse::Bcsr::from_csr(&csr, 2, 2));
+        let x: Vec<f64> = (0..64).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0; 64];
+        bcsr.sweep_full(&x, &mut want);
+        for kind in [
+            EngineKind::LocalBuffers(AccumMethod::Effective),
+            EngineKind::Colorful,
+            EngineKind::Atomic,
+        ] {
+            let mut engine = build_engine_auto(kind, bcsr.clone(), 3);
+            let mut y = vec![f64::NAN; 64];
+            engine.spmv(&x, &mut y);
+            propcheck::assert_close(&y, &want, 1e-10, 1e-10)
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+        }
+    }
+
+    /// Satellite regression: `label()` emits `local-buffers/<method>`,
+    /// which `parse()` must accept (it used to reject it) — round-trip
+    /// every variant, case-insensitively.
+    #[test]
+    fn engine_label_parse_roundtrip() {
+        for kind in EngineKind::all() {
+            let label = kind.label();
+            assert_eq!(EngineKind::parse(&label), Some(kind), "{label}");
+            assert_eq!(EngineKind::parse(&label.to_ascii_uppercase()), Some(kind), "{label}");
+        }
         for s in ["seq", "all-in-one", "per-buffer", "effective", "interval", "colorful", "atomic"]
         {
             assert!(EngineKind::parse(s).is_some(), "{s}");
         }
         assert!(EngineKind::parse("nope").is_none());
+        assert!(EngineKind::parse("local-buffers/nope").is_none());
+        // The prefix must not smuggle other engine families through.
+        assert!(EngineKind::parse("local-buffers/colorful").is_none());
+        assert!(EngineKind::parse("local-buffers/seq").is_none());
+        assert!(EngineKind::parse("local-buffers/atomic").is_none());
     }
 
     #[test]
@@ -171,17 +304,27 @@ mod tests {
         // Repeated calls must not accumulate stale buffer state.
         let mut rng = Rng::new(77);
         let coo = Coo::random_structurally_symmetric(50, 4, false, &mut rng);
-        let a = Arc::new(crate::sparse::Csrc::from_coo(&coo).unwrap());
+        let a: Arc<dyn crate::sparse::SpmvKernel> = Arc::new(Csrc::from_coo(&coo).unwrap());
         let x: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
         let mut want = vec![0.0; 50];
-        a.spmv_into_zeroed(&x, &mut want);
+        a.sweep_full(&x, &mut want);
         let mut engine =
-            build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 3);
+            build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 3);
         for _ in 0..5 {
             let mut y = vec![0.0; 50];
             engine.spmv(&x, &mut y);
             propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot run")]
+    fn partition_only_plan_rejects_colorful() {
+        let mut rng = Rng::new(9);
+        let coo = Coo::random_structurally_symmetric(30, 2, false, &mut rng);
+        let a: Arc<dyn crate::sparse::SpmvKernel> = Arc::new(Csrc::from_coo(&coo).unwrap());
+        let plan = Arc::new(crate::plan::PlanBuilder::new(2).build(a.as_ref()));
+        let _ = build_engine(EngineKind::Colorful, a, plan);
     }
 }
 

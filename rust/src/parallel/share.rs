@@ -40,6 +40,14 @@ impl<'a> SyncSlice<'a> {
         *self.ptr.add(i) = v;
     }
 
+    /// Raw base pointer — for per-element writes that must not form a
+    /// `&mut` over the whole (shared) slice. Same contract as the other
+    /// accessors: disjoint index sets per thread.
+    #[inline]
+    pub fn as_mut_ptr(&self) -> *mut f64 {
+        self.ptr
+    }
+
     /// # Safety
     /// Caller must guarantee the range is not concurrently accessed.
     #[inline]

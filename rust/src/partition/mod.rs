@@ -5,8 +5,13 @@
 //! both triangles, since each lower entry costs two updates) deviates
 //! minimally from the average. [`effective_range`] and [`intervals`]
 //! support the *effective* and *interval* accumulation methods.
+//!
+//! Everything here is pure *analysis* over the [`SpmvKernel`] abstraction
+//! (per-row work, per-row write extents), so one partitioner serves
+//! CSRC, CSR and BCSR alike; [`crate::plan::SpmvPlan`] packages the
+//! results for reuse across engines and workers.
 
-use crate::sparse::Csrc;
+use crate::sparse::SpmvKernel;
 
 /// Contiguous row blocks: thread t owns rows `starts[t]..starts[t+1]`.
 #[derive(Clone, Debug, PartialEq)]
@@ -42,20 +47,14 @@ pub fn rowwise_even(n: usize, p: usize) -> RowPartition {
     RowPartition { starts }
 }
 
-/// Per-row work estimate for the CSRC sweep: the diagonal multiply plus
-/// two updates per stored lower entry (gather into y_i, scatter to y_j).
-#[inline]
-fn row_work(a: &Csrc, i: usize) -> usize {
-    1 + 2 * a.row_range(i).len()
-}
-
 /// Non-zero guided partition (§3.1): greedy sweep closing each block as
 /// soon as its accumulated work reaches the remaining average, which
-/// minimizes the deviation from the mean for contiguous blocks.
-pub fn nnz_balanced(a: &Csrc, p: usize) -> RowPartition {
+/// minimizes the deviation from the mean for contiguous blocks. Work is
+/// the kernel's own per-row estimate (for CSRC: 1 + 2·row_len).
+pub fn nnz_balanced(a: &dyn SpmvKernel, p: usize) -> RowPartition {
     assert!(p > 0);
-    let n = a.n;
-    let total: usize = (0..n).map(|i| row_work(a, i)).sum();
+    let n = a.dim();
+    let total: usize = (0..n).map(|i| a.row_work(i)).sum();
     let mut starts = Vec::with_capacity(p + 1);
     starts.push(0);
     let mut consumed = 0usize;
@@ -66,7 +65,7 @@ pub fn nnz_balanced(a: &Csrc, p: usize) -> RowPartition {
         let target = (total - consumed) as f64 / (p - t) as f64;
         let mut block = 0usize;
         while row < n {
-            let w = row_work(a, row);
+            let w = a.row_work(row);
             // Close the block when adding the row would overshoot the
             // target by more than stopping short undershoots it.
             if block > 0 && (block + w) as f64 - target > target - block as f64 {
@@ -84,14 +83,13 @@ pub fn nnz_balanced(a: &Csrc, p: usize) -> RowPartition {
 
 /// The *effective range* of a thread (§3.1): the set of y rows it
 /// actually touches. For a contiguous block [r0, r1) the writes are the
-/// owned rows plus every scatter target ja(k) < r0 — a prefix extension:
-/// [min_col, r1).
-pub fn effective_range(a: &Csrc, block: std::ops::Range<usize>) -> std::ops::Range<usize> {
+/// owned rows plus every scatter target below r0 — a prefix extension
+/// [min write, r1). Formats without scatters (CSR, BCSR) collapse this
+/// to the owned block itself.
+pub fn effective_range(a: &dyn SpmvKernel, block: std::ops::Range<usize>) -> std::ops::Range<usize> {
     let mut lo = block.start;
     for i in block.clone() {
-        for k in a.row_range(i) {
-            lo = lo.min(a.ja[k] as usize);
-        }
+        lo = lo.min(a.row_write_lo(i));
     }
     lo..block.end
 }
@@ -152,7 +150,7 @@ pub fn assign_intervals(ints: &[Interval], p: usize) -> Vec<Vec<usize>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::Coo;
+    use crate::sparse::{Coo, Csrc};
     use crate::util::{propcheck, Rng};
 
     fn mat(n: usize, npr: usize, seed: u64) -> Csrc {

@@ -1,0 +1,556 @@
+//! Reusable SpMV scheduling plans — the analysis half of the
+//! analysis/execution split.
+//!
+//! The paper's two race-avoidance strategies are pure *analysis* over the
+//! matrix pattern: the §3.1 local-buffers family needs an nnz-guided row
+//! partition, per-thread effective ranges and (for the interval method)
+//! an interval decomposition; the §3.2 colorful strategy needs conflict
+//! coloring and per-class thread shares. None of it depends on the
+//! values, on the buffers, or on which executor runs it — so it is
+//! computed once per matrix × thread-count into an immutable
+//! [`SpmvPlan`], held in an `Arc`, and *borrowed* by every engine
+//! ([`crate::parallel::build_engine`]) instead of being recomputed in
+//! each engine's constructor.
+//!
+//! * [`PlanBuilder`] computes only the pieces a strategy needs
+//!   ([`PlanPieces`]); [`PlanBuilder::for_kind`] picks them per
+//!   [`EngineKind`].
+//! * [`PlanCache`] is the concurrent matrix-key → `Arc<SpmvPlan>` map the
+//!   coordinator threads through its workers, with build count / build
+//!   time counters surfaced in the service stats — a matrix registered
+//!   once is analyzed once, not once per worker × engine.
+//! * [`SpmvPlan::validate`] checks every invariant (partition covers and
+//!   is monotone, effective ranges contain owned blocks, intervals tile
+//!   the union, colors are conflict-free) and is property-tested below.
+
+use crate::graph::{greedy_coloring, ColorClasses, ConflictGraph, Ordering as ColorOrdering};
+use crate::metrics;
+use crate::parallel::{AccumMethod, EngineKind};
+use crate::partition::{self, Interval, RowPartition};
+use crate::sparse::SpmvKernel;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Which analysis pieces a plan carries (the row partition is always
+/// computed — every strategy but colorful consumes it and it is O(n)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanPieces {
+    /// Per-thread effective ranges + owned-block covering sets (§3.1
+    /// *effective* accumulation).
+    pub ranges: bool,
+    /// Interval decomposition + balanced assignment (§3.1 *interval*
+    /// accumulation; implies `ranges`).
+    pub intervals: bool,
+    /// Conflict coloring + per-class thread shares (§3.2 colorful).
+    pub coloring: bool,
+}
+
+impl PlanPieces {
+    pub fn all() -> PlanPieces {
+        PlanPieces { ranges: true, intervals: true, coloring: true }
+    }
+
+    /// The pieces one engine kind needs.
+    pub fn for_kind(kind: EngineKind) -> PlanPieces {
+        match kind {
+            EngineKind::Sequential | EngineKind::Atomic => PlanPieces::default(),
+            EngineKind::LocalBuffers(AccumMethod::AllInOne)
+            | EngineKind::LocalBuffers(AccumMethod::PerBuffer) => PlanPieces::default(),
+            EngineKind::LocalBuffers(AccumMethod::Effective) => {
+                PlanPieces { ranges: true, ..Default::default() }
+            }
+            EngineKind::LocalBuffers(AccumMethod::Interval) => {
+                PlanPieces { ranges: true, intervals: true, ..Default::default() }
+            }
+            EngineKind::Colorful => PlanPieces { coloring: true, ..Default::default() },
+        }
+    }
+
+    pub fn union(self, other: PlanPieces) -> PlanPieces {
+        PlanPieces {
+            ranges: self.ranges || other.ranges || self.intervals || other.intervals,
+            intervals: self.intervals || other.intervals,
+            coloring: self.coloring || other.coloring,
+        }
+    }
+
+    /// Does `self` include everything `other` asks for?
+    pub fn covers(self, other: PlanPieces) -> bool {
+        (self.ranges || !other.ranges)
+            && (self.intervals || !other.intervals)
+            && (self.coloring || !other.coloring)
+    }
+}
+
+/// Wall-clock cost of the analysis phases (seconds) — surfaced through
+/// the service metrics so plan reuse is observable.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanStats {
+    pub partition_s: f64,
+    pub ranges_s: f64,
+    pub intervals_s: f64,
+    pub coloring_s: f64,
+    pub total_s: f64,
+}
+
+/// An immutable, shareable scheduling plan for one matrix × thread-count.
+#[derive(Clone, Debug)]
+pub struct SpmvPlan {
+    pub n: usize,
+    pub nthreads: usize,
+    pub kernel_name: &'static str,
+    pub pieces: PlanPieces,
+    /// nnz-guided contiguous row blocks (thread t owns `part.block(t)`).
+    pub part: RowPartition,
+    /// Per-thread effective range (`pieces.ranges`).
+    pub eff: Option<Vec<Range<usize>>>,
+    /// Buffers covering each thread's owned block (`pieces.ranges`).
+    pub covering: Option<Vec<Vec<usize>>>,
+    /// Interval decomposition + per-thread assignment (`pieces.intervals`).
+    pub ints: Option<Vec<Interval>>,
+    pub int_assign: Option<Vec<Vec<usize>>>,
+    /// Conflict-free color classes + per-class thread shares
+    /// (`pieces.coloring`).
+    pub colors: Option<ColorClasses>,
+    pub color_shares: Option<Vec<Vec<(usize, usize)>>>,
+    pub stats: PlanStats,
+}
+
+impl SpmvPlan {
+    /// Convenience: build the exact plan `kind` needs.
+    pub fn for_engine(kind: EngineKind, kernel: &dyn SpmvKernel, nthreads: usize) -> Arc<SpmvPlan> {
+        Arc::new(PlanBuilder::for_kind(nthreads, kind).build(kernel))
+    }
+
+    /// Check every structural invariant against the kernel the plan was
+    /// built for. Used by the property tests and by debug assertions.
+    pub fn validate(&self, kernel: &dyn SpmvKernel) -> Result<(), String> {
+        let n = kernel.dim();
+        if n != self.n {
+            return Err(format!("plan n {} != kernel n {}", self.n, n));
+        }
+        self.part.validate(n)?;
+        if self.part.nthreads() != self.nthreads {
+            return Err("partition thread count mismatch".into());
+        }
+        let p = self.nthreads;
+        if let Some(eff) = &self.eff {
+            for t in 0..p {
+                let own = self.part.block(t);
+                let er = &eff[t];
+                if er.start > own.start || er.end != own.end {
+                    return Err(format!("eff {er:?} does not extend block {own:?}"));
+                }
+                // Every write of the block must land inside the range.
+                for i in own {
+                    if kernel.row_write_lo(i) < er.start {
+                        return Err(format!("row {i} writes below eff range {er:?}"));
+                    }
+                }
+            }
+            let covering = self.covering.as_ref().ok_or("ranges without covering")?;
+            for t in 0..p {
+                if !self.part.block(t).is_empty() && !covering[t].contains(&t) {
+                    return Err(format!("covering[{t}] misses the owner"));
+                }
+            }
+        }
+        if let Some(ints) = &self.ints {
+            let eff = self.eff.as_ref().ok_or("intervals without ranges")?;
+            // Disjoint, sorted, and exactly tiling the union of ranges.
+            let mut hits = vec![0usize; n];
+            for int in ints {
+                for i in int.range.clone() {
+                    hits[i] += 1;
+                }
+            }
+            for (t, er) in eff.iter().enumerate() {
+                for i in er.clone() {
+                    if hits[i] != 1 {
+                        return Err(format!("row {i} (thread {t}) covered {}×", hits[i]));
+                    }
+                    if !ints
+                        .iter()
+                        .any(|int| int.range.contains(&i) && int.covers.contains(&t))
+                    {
+                        return Err(format!("row {i}: interval misses buffer {t}"));
+                    }
+                }
+            }
+            let assign = self.int_assign.as_ref().ok_or("intervals without assignment")?;
+            let mut seen = vec![false; ints.len()];
+            for owned in assign {
+                for &idx in owned {
+                    if seen[idx] {
+                        return Err(format!("interval {idx} assigned twice"));
+                    }
+                    seen[idx] = true;
+                }
+            }
+            if let Some(idx) = seen.iter().position(|&s| !s) {
+                return Err(format!("interval {idx} unassigned"));
+            }
+        }
+        if let Some(colors) = &self.colors {
+            let g = ConflictGraph::build(kernel);
+            colors.validate(&g)?;
+            let shares = self.color_shares.as_ref().ok_or("colors without shares")?;
+            for (class, share) in colors.classes.iter().zip(shares) {
+                if share.len() != p
+                    || share[0].0 != 0
+                    || share.last().unwrap().1 != class.len()
+                    || share.windows(2).any(|w| w[0].1 != w[1].0)
+                {
+                    return Err(format!("class shares malformed: {share:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builds [`SpmvPlan`]s, computing only the requested pieces.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanBuilder {
+    nthreads: usize,
+    pieces: PlanPieces,
+}
+
+impl PlanBuilder {
+    /// Base plan: the nnz-guided row partition only.
+    pub fn new(nthreads: usize) -> PlanBuilder {
+        assert!(nthreads > 0);
+        PlanBuilder { nthreads, pieces: PlanPieces::default() }
+    }
+
+    /// Everything — what the coordinator caches so any engine can share.
+    pub fn all(nthreads: usize) -> PlanBuilder {
+        PlanBuilder::new(nthreads).with_pieces(PlanPieces::all())
+    }
+
+    /// Exactly the pieces one engine kind needs.
+    pub fn for_kind(nthreads: usize, kind: EngineKind) -> PlanBuilder {
+        PlanBuilder::new(nthreads).with_pieces(PlanPieces::for_kind(kind))
+    }
+
+    pub fn with_pieces(mut self, pieces: PlanPieces) -> PlanBuilder {
+        self.pieces = self.pieces.union(pieces);
+        self
+    }
+
+    pub fn ranges(self) -> PlanBuilder {
+        self.with_pieces(PlanPieces { ranges: true, ..Default::default() })
+    }
+
+    pub fn intervals(self) -> PlanBuilder {
+        self.with_pieces(PlanPieces { intervals: true, ..Default::default() })
+    }
+
+    pub fn coloring(self) -> PlanBuilder {
+        self.with_pieces(PlanPieces { coloring: true, ..Default::default() })
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    pub fn pieces(&self) -> PlanPieces {
+        self.pieces
+    }
+
+    pub fn build(&self, kernel: &dyn SpmvKernel) -> SpmvPlan {
+        let t_all = Instant::now();
+        let p = self.nthreads;
+        let n = kernel.dim();
+        let mut stats = PlanStats::default();
+
+        let (part, dt) = metrics::timed(|| partition::nnz_balanced(kernel, p));
+        stats.partition_s = dt;
+
+        let (mut eff, mut covering) = (None, None);
+        if self.pieces.ranges {
+            let ((ranges, cov), dt) = metrics::timed(|| {
+                let ranges: Vec<Range<usize>> =
+                    (0..p).map(|t| partition::effective_range(kernel, part.block(t))).collect();
+                let cov: Vec<Vec<usize>> = (0..p)
+                    .map(|t| {
+                        let own = part.block(t);
+                        (0..p)
+                            .filter(|&b| ranges[b].start < own.end && own.start < ranges[b].end)
+                            .collect()
+                    })
+                    .collect();
+                (ranges, cov)
+            });
+            stats.ranges_s = dt;
+            eff = Some(ranges);
+            covering = Some(cov);
+        }
+
+        let (mut ints, mut int_assign) = (None, None);
+        if self.pieces.intervals {
+            let ((decomposition, assign), dt) = metrics::timed(|| {
+                let decomposition = partition::intervals(eff.as_ref().unwrap());
+                let assign = partition::assign_intervals(&decomposition, p);
+                (decomposition, assign)
+            });
+            stats.intervals_s = dt;
+            ints = Some(decomposition);
+            int_assign = Some(assign);
+        }
+
+        let (mut colors, mut color_shares) = (None, None);
+        if self.pieces.coloring {
+            let ((classes, shares), dt) = metrics::timed(|| {
+                let g = ConflictGraph::build(kernel);
+                let classes = greedy_coloring(&g, ColorOrdering::Natural);
+                let shares = classes.class_shares(kernel, p);
+                (classes, shares)
+            });
+            stats.coloring_s = dt;
+            colors = Some(classes);
+            color_shares = Some(shares);
+        }
+
+        stats.total_s = t_all.elapsed().as_secs_f64();
+        SpmvPlan {
+            n,
+            nthreads: p,
+            kernel_name: kernel.kernel_name(),
+            pieces: self.pieces,
+            part,
+            eff,
+            covering,
+            ints,
+            int_assign,
+            colors,
+            color_shares,
+            stats,
+        }
+    }
+
+    /// Build with a caller-provided coloring (stride-capped ablations,
+    /// tests) instead of the default greedy one.
+    pub fn build_with_coloring(&self, kernel: &dyn SpmvKernel, colors: ColorClasses) -> SpmvPlan {
+        let without = PlanBuilder {
+            nthreads: self.nthreads,
+            pieces: PlanPieces { coloring: false, ..self.pieces },
+        };
+        let mut plan = without.build(kernel);
+        let t = Instant::now();
+        plan.color_shares = Some(colors.class_shares(kernel, self.nthreads));
+        plan.colors = Some(colors);
+        plan.stats.coloring_s = t.elapsed().as_secs_f64();
+        plan.stats.total_s += plan.stats.coloring_s;
+        plan.pieces.coloring = true;
+        plan
+    }
+}
+
+/// Concurrent plan cache: matrix-key → shared plan, one build per
+/// (matrix, thread-count) no matter how many workers or engines ask.
+///
+/// The map lock is held *across* the build on purpose: a cold key asked
+/// for by many workers at once must still be analyzed exactly once (the
+/// single-build guarantee the service test asserts); plan builds are rare
+/// and bounded, so the coarse critical section is fine.
+#[derive(Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<String, Arc<SpmvPlan>>>,
+    builds: AtomicU64,
+    build_ns: AtomicU64,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Fetch the plan for `key` (a caller-chosen matrix identifier),
+    /// building it on first use. A cached plan missing a newly requested
+    /// piece is rebuilt with the union of pieces and replaced.
+    pub fn get_or_build(
+        &self,
+        key: &str,
+        kernel: &dyn SpmvKernel,
+        builder: PlanBuilder,
+    ) -> Arc<SpmvPlan> {
+        let full_key = format!("{key}#p{}", builder.nthreads());
+        let mut map = self.map.lock().unwrap();
+        let mut want = builder;
+        if let Some(plan) = map.get(&full_key) {
+            if plan.pieces.covers(builder.pieces()) {
+                return plan.clone();
+            }
+            want = want.with_pieces(plan.pieces);
+        }
+        let t = Instant::now();
+        let plan = Arc::new(want.build(kernel));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        self.build_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        map.insert(full_key, plan.clone());
+        plan
+    }
+
+    /// Drop every plan cached for `key` (matrix replaced / unregistered).
+    pub fn invalidate(&self, key: &str) {
+        let prefix = format!("{key}#p");
+        self.map.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
+    }
+
+    /// Drop every plan whose caller key starts with `prefix` — e.g. all
+    /// generations of one matrix at once. Over-matching is safe (it only
+    /// costs a rebuild), so callers may use a coarse prefix.
+    pub fn invalidate_prefix(&self, prefix: &str) {
+        self.map.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// How many plans were ever built (cache misses).
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// Total wall-clock seconds spent building plans.
+    pub fn build_seconds(&self) -> f64 {
+        self.build_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Coo, Csr, Csrc};
+    use crate::util::{propcheck, Rng};
+
+    fn mat(n: usize, npr: usize, seed: u64) -> Csrc {
+        let mut rng = Rng::new(seed);
+        Csrc::from_coo(&Coo::random_structurally_symmetric(n, npr, false, &mut rng)).unwrap()
+    }
+
+    #[test]
+    fn pieces_union_and_covers() {
+        let base = PlanPieces::default();
+        let ranged = PlanPieces { ranges: true, ..Default::default() };
+        let interval = PlanPieces { intervals: true, ..Default::default() };
+        assert!(PlanPieces::all().covers(ranged));
+        assert!(!base.covers(ranged));
+        // intervals imply ranges after union.
+        assert!(base.union(interval).ranges);
+        assert!(ranged.union(base).covers(ranged));
+    }
+
+    #[test]
+    fn for_kind_requests_the_right_pieces() {
+        use crate::parallel::{AccumMethod, EngineKind};
+        assert_eq!(PlanPieces::for_kind(EngineKind::Sequential), PlanPieces::default());
+        assert!(PlanPieces::for_kind(EngineKind::LocalBuffers(AccumMethod::Effective)).ranges);
+        let p = PlanPieces::for_kind(EngineKind::LocalBuffers(AccumMethod::Interval));
+        assert!(p.ranges && p.intervals);
+        assert!(PlanPieces::for_kind(EngineKind::Colorful).coloring);
+    }
+
+    #[test]
+    fn full_plan_validates_on_csrc_and_csr() {
+        let a = mat(150, 4, 1);
+        let csr = a.to_csr();
+        for p in [1usize, 2, 3, 5] {
+            let plan = PlanBuilder::all(p).build(&a);
+            plan.validate(&a).unwrap();
+            assert_eq!(plan.kernel_name, "csrc");
+            let plan = PlanBuilder::all(p).build(&csr);
+            plan.validate(&csr).unwrap();
+            // No scatters: every effective range is exactly the block.
+            for t in 0..p {
+                assert_eq!(plan.eff.as_ref().unwrap()[t], plan.part.block(t));
+            }
+            // No conflicts: a single color.
+            assert_eq!(plan.colors.as_ref().unwrap().num_colors(), 1);
+        }
+    }
+
+    #[test]
+    fn partial_plans_omit_pieces() {
+        let a = mat(80, 3, 2);
+        let base = PlanBuilder::new(3).build(&a);
+        assert!(base.eff.is_none() && base.ints.is_none() && base.colors.is_none());
+        let ranged = PlanBuilder::new(3).ranges().build(&a);
+        assert!(ranged.eff.is_some() && ranged.ints.is_none());
+        let interval = PlanBuilder::new(3).intervals().build(&a);
+        assert!(interval.eff.is_some() && interval.ints.is_some());
+        interval.validate(&a).unwrap();
+    }
+
+    #[test]
+    fn plan_records_build_time() {
+        let a = mat(200, 5, 3);
+        let plan = PlanBuilder::all(4).build(&a);
+        assert!(plan.stats.total_s > 0.0);
+        assert!(plan.stats.total_s >= plan.stats.coloring_s);
+    }
+
+    #[test]
+    fn property_plan_invariants_hold() {
+        propcheck::check(12, |rng| {
+            let n = 10 + rng.below(150);
+            let npr = 1 + rng.below(6);
+            let coo = Coo::random_structurally_symmetric(n, npr, rng.below(2) == 0, rng);
+            let a = Csrc::from_coo(&coo).map_err(|e| e.to_string())?;
+            let p = 1 + rng.below(8);
+            PlanBuilder::all(p).build(&a).validate(&a)?;
+            let csr = Csr::from_coo(&coo);
+            PlanBuilder::all(p).build(&csr).validate(&csr)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cache_builds_once_and_invalidates() {
+        let a = mat(100, 3, 4);
+        let cache = PlanCache::new();
+        let p1 = cache.get_or_build("m", &a, PlanBuilder::for_kind(2, EngineKind::Atomic));
+        let p2 = cache.get_or_build("m", &a, PlanBuilder::for_kind(2, EngineKind::Atomic));
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(cache.builds(), 1);
+        // A new piece forces one upgrade rebuild, which then covers both.
+        let p3 = cache.get_or_build("m", &a, PlanBuilder::for_kind(2, EngineKind::Colorful));
+        assert!(p3.colors.is_some());
+        assert_eq!(cache.builds(), 2);
+        let p4 = cache.get_or_build("m", &a, PlanBuilder::for_kind(2, EngineKind::Atomic));
+        assert!(Arc::ptr_eq(&p3, &p4));
+        // Different thread count = different plan.
+        cache.get_or_build("m", &a, PlanBuilder::for_kind(3, EngineKind::Atomic));
+        assert_eq!(cache.builds(), 3);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.build_seconds() >= 0.0);
+        cache.invalidate("m");
+        assert!(cache.is_empty());
+        // Prefix invalidation sweeps every related key at once.
+        cache.get_or_build("k@0", &a, PlanBuilder::for_kind(2, EngineKind::Atomic));
+        cache.get_or_build("k@1", &a, PlanBuilder::for_kind(2, EngineKind::Atomic));
+        cache.invalidate_prefix("k@");
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn builder_coloring_override_is_used() {
+        use crate::graph::{stride_capped_coloring, ConflictGraph};
+        let a = mat(90, 3, 5);
+        let g = ConflictGraph::build(&a);
+        let capped = stride_capped_coloring(&g, 8);
+        let k = capped.num_colors();
+        let plan = PlanBuilder::new(3).build_with_coloring(&a, capped);
+        assert_eq!(plan.colors.as_ref().unwrap().num_colors(), k);
+        plan.validate(&a).unwrap();
+    }
+}

@@ -5,11 +5,17 @@
 //!
 //! Interchange is HLO *text* (the image's xla_extension 0.5.1 rejects
 //! jax ≥ 0.5 serialized protos — see /opt/xla-example/README.md).
+//!
+//! The PJRT client itself needs the `xla` crate and the `xla_extension`
+//! shared library, which exist only in the image's offline vendor tree —
+//! so everything touching them is gated behind the **`xla` cargo
+//! feature** (off by default; see DESIGN.md §Runtime). Without the
+//! feature, [`Manifest`] parsing still works and [`XlaRuntime::open`]
+//! returns a clean error instead of failing to link.
 
-use crate::sparse::Ell;
+use crate::util::error::{msg, Result};
 use crate::util::json::Json;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 /// One entry of `manifest.json`.
 #[derive(Clone, Debug)]
@@ -29,18 +35,18 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         Self::parse(&text)
     }
 
-    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| msg(format!("manifest: {e}")))?;
         let mut entries = Vec::new();
         for e in j
             .get("entries")
             .and_then(|x| x.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?
+            .ok_or_else(|| msg("manifest missing entries"))?
         {
             let shapes = |key: &str| -> Vec<(String, Vec<usize>, String)> {
                 e.get(key)
@@ -80,19 +86,28 @@ impl Manifest {
 }
 
 /// The live runtime: a PJRT CPU client plus lazily compiled executables.
+/// Real implementation — only with the `xla` feature (needs the vendored
+/// `xla` crate and the xla_extension shared library).
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
-    dir: PathBuf,
+    dir: std::path::PathBuf,
     pub manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    exes: std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Open the artifact directory (compiles nothing yet).
-    pub fn open(dir: &Path) -> anyhow::Result<XlaRuntime> {
+    pub fn open(dir: &Path) -> Result<XlaRuntime> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(XlaRuntime { client, dir: dir.to_path_buf(), manifest, exes: HashMap::new() })
+        Ok(XlaRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            exes: std::collections::HashMap::new(),
+        })
     }
 
     pub fn platform(&self) -> String {
@@ -100,17 +115,17 @@ impl XlaRuntime {
     }
 
     /// Compile (once) and cache the named artifact.
-    pub fn ensure_compiled(&mut self, name: &str) -> anyhow::Result<()> {
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
         if self.exes.contains_key(name) {
             return Ok(());
         }
         let entry = self
             .manifest
             .find(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))?;
+            .ok_or_else(|| msg(format!("artifact {name} not in manifest")))?;
         let path = self.dir.join(&entry.file);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| msg("non-utf8 path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;
@@ -120,7 +135,7 @@ impl XlaRuntime {
 
     /// Execute an artifact with positional literal arguments; returns the
     /// flattened output tuple (aot.py lowers with return_tuple=True).
-    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.ensure_compiled(name)?;
         let exe = self.exes.get(name).unwrap();
         let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
@@ -129,21 +144,21 @@ impl XlaRuntime {
     }
 
     /// y = A·x via the Pallas-lowered SpMV artifact for this (n, w) shape.
-    pub fn spmv(&mut self, name: &str, ell: &Ell, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+    pub fn spmv(&mut self, name: &str, ell: &crate::sparse::Ell, x: &[f32]) -> Result<Vec<f32>> {
         let entry = self
             .manifest
             .find(name)
-            .ok_or_else(|| anyhow::anyhow!("artifact {name} not in manifest"))?
+            .ok_or_else(|| msg(format!("artifact {name} not in manifest")))?
             .clone();
-        anyhow::ensure!(
-            entry.n == ell.n && entry.w == ell.w,
-            "shape mismatch: artifact {}x{} vs ell {}x{}",
-            entry.n,
-            entry.w,
-            ell.n,
-            ell.w
-        );
-        anyhow::ensure!(x.len() == ell.n, "x length {} != n {}", x.len(), ell.n);
+        if entry.n != ell.n || entry.w != ell.w {
+            return Err(msg(format!(
+                "shape mismatch: artifact {}x{} vs ell {}x{}",
+                entry.n, entry.w, ell.n, ell.w
+            )));
+        }
+        if x.len() != ell.n {
+            return Err(msg(format!("x length {} != n {}", x.len(), ell.n)));
+        }
         let args = vec![
             xla::Literal::vec1(&ell.ad),
             xla::Literal::vec1(&ell.al).reshape(&[ell.n as i64, ell.w as i64])?,
@@ -152,7 +167,9 @@ impl XlaRuntime {
             xla::Literal::vec1(x),
         ];
         let out = self.execute(name, &args)?;
-        anyhow::ensure!(!out.is_empty(), "empty output tuple");
+        if out.is_empty() {
+            return Err(msg("empty output tuple"));
+        }
         Ok(out[0].to_vec::<f32>()?)
     }
 
@@ -160,11 +177,13 @@ impl XlaRuntime {
     pub fn spmv_batch(
         &mut self,
         name: &str,
-        ell: &Ell,
+        ell: &crate::sparse::Ell,
         xs: &[f32],
         batch: usize,
-    ) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(xs.len() == batch * ell.n);
+    ) -> Result<Vec<f32>> {
+        if xs.len() != batch * ell.n {
+            return Err(msg("xs length mismatch"));
+        }
         let args = vec![
             xla::Literal::vec1(&ell.ad),
             xla::Literal::vec1(&ell.al).reshape(&[ell.n as i64, ell.w as i64])?,
@@ -174,6 +193,45 @@ impl XlaRuntime {
         ];
         let out = self.execute(name, &args)?;
         Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+/// Feature-off stub: manifest parsing still works, but opening the
+/// runtime reports the missing feature instead of failing to link
+/// against xla_extension. Keeps `csrc xla` and the router compiling on
+/// machines without the runtime.
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    const DISABLED: &'static str =
+        "built without the `xla` feature; on an image providing the xla_extension \
+         runtime, add the vendored `xla` crate to Cargo.toml and rebuild with \
+         `--features xla` (see DESIGN.md §5)";
+
+    pub fn open(_dir: &Path) -> Result<XlaRuntime> {
+        Err(msg(Self::DISABLED))
+    }
+
+    pub fn platform(&self) -> String {
+        "disabled".into()
+    }
+
+    pub fn spmv(&mut self, _name: &str, _ell: &crate::sparse::Ell, _x: &[f32]) -> Result<Vec<f32>> {
+        Err(msg(Self::DISABLED))
+    }
+
+    pub fn spmv_batch(
+        &mut self,
+        _name: &str,
+        _ell: &crate::sparse::Ell,
+        _xs: &[f32],
+        _batch: usize,
+    ) -> Result<Vec<f32>> {
+        Err(msg(Self::DISABLED))
     }
 }
 

@@ -16,8 +16,10 @@ pub use cg::{cg, CgResult};
 pub use gmres::{gmres, GmresResult};
 pub use precond::{Jacobi, Preconditioner};
 
-use crate::parallel::ParallelSpmv;
-use crate::sparse::LinOp;
+use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
+use crate::plan::SpmvPlan;
+use crate::sparse::{LinOp, SpmvKernel};
+use std::sync::Arc;
 
 /// Adapter: any parallel engine is a LinOp (transpose unsupported).
 pub struct ParallelLinOp<'a> {
@@ -32,6 +34,37 @@ impl<'a> ParallelLinOp<'a> {
 }
 
 impl LinOp for ParallelLinOp<'_> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        self.engine.lock().unwrap().spmv(x, y);
+    }
+}
+
+/// Owning adapter: builds an executor from `(kind, kernel, plan)` — the
+/// plan/executor path — and exposes it as a [`LinOp`], so a solver can
+/// run on a coordinator-cached plan without borrowing an engine from the
+/// caller.
+pub struct EngineLinOp {
+    engine: std::sync::Mutex<Box<dyn ParallelSpmv>>,
+    n: usize,
+}
+
+impl EngineLinOp {
+    pub fn new(kind: EngineKind, kernel: Arc<dyn SpmvKernel>, plan: Arc<SpmvPlan>) -> Self {
+        let n = kernel.dim();
+        Self { engine: std::sync::Mutex::new(build_engine(kind, kernel, plan)), n }
+    }
+
+    /// Analyze-and-build convenience (single-use plan).
+    pub fn auto(kind: EngineKind, kernel: Arc<dyn SpmvKernel>, nthreads: usize) -> Self {
+        let plan = SpmvPlan::for_engine(kind, kernel.as_ref(), nthreads);
+        Self::new(kind, kernel, plan)
+    }
+}
+
+impl LinOp for EngineLinOp {
     fn dim(&self) -> usize {
         self.n
     }
@@ -124,16 +157,33 @@ mod tests {
 
     #[test]
     fn parallel_linop_adapts_engine() {
-        use crate::parallel::{build_engine, AccumMethod, EngineKind};
+        use crate::parallel::{build_engine_auto, AccumMethod, EngineKind};
         let mut rng = Rng::new(91);
         let coo = Coo::random_structurally_symmetric(60, 3, true, &mut rng);
         let a = std::sync::Arc::new(Csrc::from_coo(&coo).unwrap());
-        let mut engine = build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 2);
+        let mut engine =
+            build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 2);
         let op = ParallelLinOp::new(60, engine.as_mut());
         let x: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
         let (mut y1, mut y2) = (vec![0.0; 60], vec![0.0; 60]);
         op.apply(&x, &mut y1);
         a.spmv_into_zeroed(&x, &mut y2);
         crate::util::propcheck::assert_close(&y1, &y2, 1e-11, 1e-11).unwrap();
+    }
+
+    #[test]
+    fn engine_linop_runs_cg_on_shared_plan() {
+        use crate::parallel::EngineKind;
+        use crate::plan::PlanBuilder;
+        let mut rng = Rng::new(92);
+        let coo = Coo::random_structurally_symmetric(70, 3, true, &mut rng);
+        let a = std::sync::Arc::new(Csrc::from_coo(&coo).unwrap());
+        let plan = std::sync::Arc::new(PlanBuilder::all(2).build(a.as_ref()));
+        let op = EngineLinOp::new(EngineKind::Colorful, a.clone(), plan);
+        let xstar: Vec<f64> = (0..70).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0; 70];
+        a.spmv_into_zeroed(&xstar, &mut b);
+        let r = cg::cg(&op, &b, None, 1e-10, 2000);
+        assert!(r.converged, "residual {}", r.residual);
     }
 }

@@ -3,7 +3,7 @@
 //! et al., Liu et al.) compares against. Zero-fill inside blocks trades
 //! index overhead for wasted flops.
 
-use super::{Csr, LinOp};
+use super::{Csr, LinOp, SpmvKernel};
 #[cfg(test)]
 use super::Coo;
 
@@ -97,6 +97,69 @@ impl Bcsr {
     /// Fill ratio: stored values / true non-zeros (≥ 1; the blocking cost).
     pub fn fill_ratio(&self, true_nnz: usize) -> f64 {
         self.stored_values() as f64 / true_nnz as f64
+    }
+
+    /// One row's dot product against x (shared by the kernel sweeps).
+    /// Scans the row's block row and picks out scalar row `i`.
+    #[inline]
+    fn row_dot(&self, x: &[f64], i: usize) -> f64 {
+        let (r, c) = (self.r, self.c);
+        let br = i / r;
+        let ri = i - br * r;
+        let mut t = 0.0;
+        for kb in self.ia[br] as usize..self.ia[br + 1] as usize {
+            let j0 = self.ja[kb] as usize * c;
+            let cols = c.min(self.ncols - j0);
+            let blk = &self.a[kb * r * c..(kb + 1) * r * c];
+            for ci in 0..cols {
+                t += blk[ri * c + ci] * x[j0 + ci];
+            }
+        }
+        t
+    }
+}
+
+impl SpmvKernel for Bcsr {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols, "SpmvKernel needs a square BCSR");
+        self.nrows
+    }
+
+    /// Block rows pay for zero-fill too: count stored slots, not true nnz.
+    fn row_work(&self, i: usize) -> usize {
+        let br = i / self.r;
+        1 + (self.ia[br + 1] - self.ia[br]) as usize * self.c
+    }
+
+    fn row_write_lo(&self, i: usize) -> usize {
+        i
+    }
+
+    fn scatter_targets(&self, _i: usize, _visit: &mut dyn FnMut(usize)) {
+        // No scatters: BCSR row sweeps are already race-free.
+    }
+
+    fn sweep_rows_into(&self, x: &[f64], r0: usize, r1: usize, buf: &mut [f64], lo: usize) {
+        assert!(r1 <= self.nrows && x.len() == self.ncols);
+        for i in r0..r1 {
+            buf[i - lo] += self.row_dot(x, i);
+        }
+    }
+
+    unsafe fn sweep_row_shared(&self, x: &[f64], i: usize, y: *mut f64) {
+        *y.add(i) += self.row_dot(x, i);
+    }
+
+    fn sweep_row_contribs(&self, x: &[f64], i: usize, emit: &mut dyn FnMut(usize, f64)) {
+        emit(i, self.row_dot(x, i));
+    }
+
+    fn sweep_full(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y);
+    }
+
+    fn kernel_name(&self) -> &'static str {
+        "bcsr"
     }
 }
 

@@ -4,7 +4,7 @@
 //! The SpMV here is the classical one whose load:flop ratio is 1.5
 //! (3 nnz loads / 2 nnz flops, §4.1), against which CSRC's ≈1.26 wins.
 
-use super::{Coo, LinOp};
+use super::{Coo, LinOp, SpmvKernel};
 
 #[derive(Clone, Debug)]
 pub struct Csr {
@@ -61,6 +61,21 @@ impl Csr {
                 }
                 *y.get_unchecked_mut(i) = t;
             }
+        }
+    }
+
+    /// Row-block sweep accumulating into `buf[i - lo]` — the
+    /// [`SpmvKernel`] building block. CSR scatters nothing, so only the
+    /// owned rows are touched.
+    #[inline]
+    pub fn spmv_rows_into(&self, x: &[f64], r0: usize, r1: usize, buf: &mut [f64], lo: usize) {
+        assert!(r1 <= self.nrows && x.len() == self.ncols);
+        for i in r0..r1 {
+            let mut t = 0.0;
+            for k in self.row_range(i) {
+                t += self.a[k] * x[self.ja[k] as usize];
+            }
+            buf[i - lo] += t;
         }
     }
 
@@ -129,6 +144,53 @@ impl Csr {
     /// Flops of one SpMV (multiply+add counted separately): 2·nnz (§4.1).
     pub fn flops(&self) -> usize {
         2 * self.nnz()
+    }
+}
+
+impl SpmvKernel for Csr {
+    fn dim(&self) -> usize {
+        assert_eq!(self.nrows, self.ncols, "SpmvKernel needs a square CSR");
+        self.nrows
+    }
+
+    fn row_work(&self, i: usize) -> usize {
+        1 + self.row_range(i).len()
+    }
+
+    fn row_write_lo(&self, i: usize) -> usize {
+        i // a CSR row sweep writes y_i only
+    }
+
+    fn scatter_targets(&self, _i: usize, _visit: &mut dyn FnMut(usize)) {
+        // No scatters: CSR row sweeps are already race-free.
+    }
+
+    fn sweep_rows_into(&self, x: &[f64], r0: usize, r1: usize, buf: &mut [f64], lo: usize) {
+        self.spmv_rows_into(x, r0, r1, buf, lo);
+    }
+
+    unsafe fn sweep_row_shared(&self, x: &[f64], i: usize, y: *mut f64) {
+        let mut t = 0.0;
+        for k in self.row_range(i) {
+            t += self.a[k] * x[self.ja[k] as usize];
+        }
+        *y.add(i) += t;
+    }
+
+    fn sweep_row_contribs(&self, x: &[f64], i: usize, emit: &mut dyn FnMut(usize, f64)) {
+        let mut t = 0.0;
+        for k in self.row_range(i) {
+            t += self.a[k] * x[self.ja[k] as usize];
+        }
+        emit(i, t);
+    }
+
+    fn sweep_full(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv(x, y);
+    }
+
+    fn kernel_name(&self) -> &'static str {
+        "csr"
     }
 }
 

@@ -12,7 +12,7 @@
 //! `y_j += a_ji x_i` (Fig. 2a of the paper) — that second scatter is what
 //! the parallel engines in `parallel/` must make thread-safe.
 
-use super::{Coo, Csr, Ell, LinOp};
+use super::{Coo, Csr, Ell, LinOp, SpmvKernel};
 
 #[derive(Clone, Debug)]
 pub struct Csrc {
@@ -330,6 +330,66 @@ impl Csrc {
     /// for CSR — the bandwidth-mitigation argument.
     pub fn loads(&self) -> usize {
         (5 * self.nnz() - self.n) / 2
+    }
+}
+
+impl SpmvKernel for Csrc {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    /// Diagonal multiply plus two updates per stored lower entry (gather
+    /// into y_i, scatter to y_j) — the §3.1 nnz-guided weight.
+    fn row_work(&self, i: usize) -> usize {
+        1 + 2 * self.row_range(i).len()
+    }
+
+    fn row_write_lo(&self, i: usize) -> usize {
+        let mut lo = i;
+        for k in self.row_range(i) {
+            lo = lo.min(self.ja[k] as usize);
+        }
+        lo
+    }
+
+    fn scatter_targets(&self, i: usize, visit: &mut dyn FnMut(usize)) {
+        for k in self.row_range(i) {
+            visit(self.ja[k] as usize);
+        }
+    }
+
+    fn sweep_rows_into(&self, x: &[f64], r0: usize, r1: usize, buf: &mut [f64], lo: usize) {
+        self.spmv_rows_into(x, r0, r1, buf, lo);
+    }
+
+    unsafe fn sweep_row_shared(&self, x: &[f64], i: usize, y: *mut f64) {
+        let xi = x[i];
+        let mut acc = self.ad[i] * xi;
+        for k in self.row_range(i) {
+            let j = self.ja[k] as usize;
+            acc += self.al[k] * x[j];
+            *y.add(j) += self.au[k] * xi;
+        }
+        *y.add(i) += acc;
+    }
+
+    fn sweep_row_contribs(&self, x: &[f64], i: usize, emit: &mut dyn FnMut(usize, f64)) {
+        let xi = x[i];
+        let mut acc = self.ad[i] * xi;
+        for k in self.row_range(i) {
+            let j = self.ja[k] as usize;
+            acc += self.al[k] * x[j];
+            emit(j, self.au[k] * xi);
+        }
+        emit(i, acc);
+    }
+
+    fn sweep_full(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv_into_zeroed(x, y);
+    }
+
+    fn kernel_name(&self) -> &'static str {
+        "csrc"
     }
 }
 

@@ -32,6 +32,73 @@ pub use csrc::{Csrc, CsrcError};
 pub use csrc_rect::CsrcRect;
 pub use ell::Ell;
 
+/// A row-sweep SpMV kernel: the format abstraction the parallel layer
+/// executes against.
+///
+/// A *row sweep* of row `i` accumulates `y_i` and may additionally
+/// scatter updates into other rows (CSRC scatters the mirrored upper
+/// contributions `y_j += a_ji · x_i`, `j < i`; CSR and BCSR scatter
+/// nothing). Everything the race-avoidance analysis in [`crate::plan`]
+/// needs — per-row work for nnz-guided partitioning, write extents for
+/// effective ranges, scatter targets for the conflict graph — is exposed
+/// here, so one `SpmvPlan` and one set of executors serve every format.
+///
+/// Contract for implementors:
+///
+/// * The matrix is square; [`SpmvKernel::dim`] is its order `n`.
+/// * [`SpmvKernel::sweep_rows_into`] *accumulates* (`+=`) into `buf`,
+///   where `buf[j - lo]` holds `y_j`; sweeping all rows over a zeroed
+///   full-length buffer must equal the sequential product.
+/// * [`SpmvKernel::scatter_targets`] visits each off-diagonal scatter
+///   target of row `i` (never `i` itself), each unordered `{i, j}` pair
+///   at most once across the whole sweep — the conflict-graph builder
+///   symmetrizes.
+/// * [`SpmvKernel::row_write_lo`] is a lower bound ≤ every index row
+///   `i`'s sweep writes (used for effective-range analysis); the sweep
+///   never writes above `i`.
+pub trait SpmvKernel: Send + Sync {
+    /// Matrix order n (kernels are square operators).
+    fn dim(&self) -> usize;
+
+    /// Per-row work estimate for nnz-guided partitioning (flop-ish units;
+    /// only ratios matter).
+    fn row_work(&self, i: usize) -> usize;
+
+    /// Lowest index written by row i's sweep (min over {i} ∪ scatter
+    /// targets).
+    fn row_write_lo(&self, i: usize) -> usize;
+
+    /// Visit every off-diagonal scatter target of row i.
+    fn scatter_targets(&self, i: usize, visit: &mut dyn FnMut(usize));
+
+    /// Sweep rows [r0, r1), accumulating into `buf` offset by `lo`
+    /// (`buf[j - lo]` holds y_j; `lo = 0` for a full-length buffer).
+    fn sweep_rows_into(&self, x: &[f64], r0: usize, r1: usize, buf: &mut [f64], lo: usize);
+
+    /// Sweep one row, accumulating into a *shared* full-length y through
+    /// a raw pointer — the colorful executor's per-class primitive
+    /// (threads of one class write disjoint index sets, so no `&mut`
+    /// alias may be formed over the whole vector).
+    ///
+    /// # Safety
+    /// `y` must point at a buffer of at least [`SpmvKernel::dim`]
+    /// elements, and no other thread may concurrently access any index
+    /// row `i`'s sweep writes.
+    unsafe fn sweep_row_shared(&self, x: &[f64], i: usize, y: *mut f64);
+
+    /// Visit every (index, value) contribution of row i's sweep,
+    /// including the `y_i` accumulation itself — the atomics baseline
+    /// feeds these straight into CAS adds.
+    fn sweep_row_contribs(&self, x: &[f64], i: usize, emit: &mut dyn FnMut(usize, f64));
+
+    /// Full sequential product, y fully overwritten (the baseline and
+    /// the single-thread shortcut).
+    fn sweep_full(&self, x: &[f64], y: &mut [f64]);
+
+    /// Format name for reports ("csrc", "csr", "bcsr").
+    fn kernel_name(&self) -> &'static str;
+}
+
 /// A square linear operator: the trait the solvers (`solver/`) and the
 /// coordinator consume, implemented by every format and by the parallel
 /// engines.

@@ -86,6 +86,46 @@ impl Bench {
     pub fn finish(self) {
         println!("== {} done: {} entries ==\n", self.group, self.rows.len());
     }
+
+    /// Like [`Bench::finish`], but also writes the rows as a JSON report
+    /// (`{"group": .., "entries": [{name, median_s, mad_s, iters}, ..]}`)
+    /// so ablation results are machine-readable alongside the stdout log.
+    pub fn finish_json(self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"group\": \"{}\",\n", json_escape(&self.group)));
+        s.push_str("  \"entries\": [\n");
+        for (i, (name, med, mad, iters)) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"median_s\": {:e}, \"mad_s\": {:e}, \"iters\": {}}}{}\n",
+                json_escape(name),
+                med,
+                mad,
+                iters,
+                if i + 1 == self.rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, &s)?;
+        println!("== {} done: {} entries -> {} ==\n", self.group, self.rows.len(), path.display());
+        Ok(())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
 }
 
 fn fmt_time(s: f64) -> String {
@@ -114,6 +154,20 @@ mod tests {
         });
         assert!(med > 0.0 && med < 0.1);
         b.finish();
+    }
+
+    #[test]
+    fn finish_json_writes_parseable_report() {
+        std::env::set_var("CSRC_BENCH_FAST", "1");
+        let mut b = Bench::new("jsontest");
+        b.record("alpha/one", 1.5, "x");
+        b.record("beta \"q\"", 2.0, "colors");
+        let path = std::env::temp_dir().join("csrc_bench_test").join("out.json");
+        b.finish_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("group").and_then(|g| g.as_str()), Some("jsontest"));
+        assert_eq!(j.get("entries").and_then(|e| e.as_arr()).map(|a| a.len()), Some(2));
     }
 
     #[test]

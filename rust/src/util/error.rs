@@ -1,0 +1,33 @@
+//! Minimal error plumbing for the binary and the runtime loader (anyhow
+//! is not vendored — the build is offline and dependency-free).
+//!
+//! `Error` is a boxed `std::error::Error`, so `?` converts any std error
+//! automatically; [`msg`] makes an ad-hoc message error the way
+//! `anyhow::anyhow!` would.
+
+/// Boxed dynamic error (Send + Sync so it crosses service threads).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Result alias used by `main.rs` and the runtime loader.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// An ad-hoc message error: `return Err(msg(format!("bad {x}")))`.
+pub fn msg(m: impl std::fmt::Display) -> Error {
+    m.to_string().into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        Ok(std::fs::read_to_string("/definitely/not/a/path")?)
+    }
+
+    #[test]
+    fn msg_displays_and_io_converts() {
+        let e = msg(format!("bad value {}", 7));
+        assert_eq!(e.to_string(), "bad value 7");
+        assert!(fails_io().is_err());
+    }
+}

@@ -9,6 +9,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod propcheck;
 pub mod stats;

@@ -5,15 +5,16 @@
 use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
 use csrc_spmv::gen;
 use csrc_spmv::harness::{figures, smoke_suite, Report};
-use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::parallel::{build_engine, build_engine_auto, AccumMethod, EngineKind};
+use csrc_spmv::plan::PlanBuilder;
 use csrc_spmv::solver::{self, Jacobi, ParallelLinOp};
-use csrc_spmv::sparse::{mmio, Coo, Csrc, CsrcRect, LinOp};
+use csrc_spmv::sparse::{mmio, Coo, Csrc, CsrcRect, LinOp, SpmvKernel};
 use csrc_spmv::util::Rng;
 use std::sync::Arc;
 
 #[test]
 fn fem_to_solver_pipeline() {
-    // Assemble, compress, solve with the parallel engine, verify.
+    // Assemble, compress, plan, solve with the parallel engine, verify.
     let coo = gen::poisson_3d_hex(12, 0.0, 3);
     let a = Arc::new(Csrc::from_coo(&coo).unwrap());
     let n = a.n;
@@ -22,14 +23,43 @@ fn fem_to_solver_pipeline() {
     let xstar: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let mut b = vec![0.0; n];
     a.apply(&xstar, &mut b);
-    let mut engine =
-        build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 3);
+    // The plan/executor path: analysis once, executor borrows it.
+    let kernel: Arc<dyn SpmvKernel> = a.clone();
+    let plan = Arc::new(
+        PlanBuilder::for_kind(3, EngineKind::LocalBuffers(AccumMethod::Effective))
+            .build(kernel.as_ref()),
+    );
+    plan.validate(kernel.as_ref()).unwrap();
+    let mut engine = build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), kernel, plan);
     let jac = Jacobi::new(a.as_ref());
     let op = ParallelLinOp::new(n, engine.as_mut());
     let r = solver::cg(&op, &b, Some(&jac), 1e-11, 3000);
     assert!(r.converged, "residual {}", r.residual);
     for (got, want) in r.x.iter().zip(&xstar) {
         assert!((got - want).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn native_engines_agree_with_ell_reference() {
+    // The rust-side ELL reference (same convention as the Pallas kernel)
+    // agrees with the parallel engines — no artifacts needed, so this
+    // runs without the `xla` feature.
+    let mut rng = Rng::new(8);
+    let coo = Coo::random_structurally_symmetric(150, 4, false, &mut rng);
+    let a = Arc::new(Csrc::from_coo(&coo).unwrap());
+    let w = a.max_row_width().max(1);
+    let ell = a.to_ell(150, w).unwrap();
+    let mut rng = Rng::new(9);
+    let x64: Vec<f64> = (0..150).map(|_| rng.normal()).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let yref = ell.spmv_ref(&x32);
+    let mut engine =
+        build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 3);
+    let mut y = vec![0.0; 150];
+    engine.spmv(&x64, &mut y);
+    for i in 0..150 {
+        assert!((yref[i] as f64 - y[i]).abs() < 1e-3 * (1.0 + y[i].abs()), "row {i}");
     }
 }
 

@@ -7,7 +7,9 @@
 //! * nnz-balanced vs naive row partitioning (the §3.1 claim),
 //! * coloring order and the §5 stride-capped future-work idea,
 //! * BCSR blocking baseline vs CSRC (the §1.1 related-work contrast),
-//! * parallel engine overhead as a function of matrix size.
+//! * parallel engine overhead as a function of matrix size,
+//! * autotuned engine pick vs the fixed `local-buffers/effective`
+//!   default across the generated suite (the tuner's reason to exist).
 //!
 //! Results land on stdout *and* in `results/ablations.json`.
 
@@ -155,6 +157,49 @@ fn main() {
                 "doubles",
             );
             b.run(&format!("distributed/spmv-{nsub}sub"), || dm.spmv(&xs, &mut ys));
+        }
+    }
+
+    // --- autotuned pick vs the fixed default ------------------------------
+    // The tuner trials every candidate per matrix (cheap budget) and the
+    // bench then re-measures its pick against the router's fixed
+    // `local-buffers/effective` default: the tuned rate must match or
+    // beat the fixed one (it can pick `effective` itself, so "within
+    // noise" is the floor, not a hope).
+    {
+        use csrc_spmv::tuner::{self, TrialBudget};
+        for e in smoke_suite() {
+            let m = Arc::new(e.build_csrc());
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let plan = Arc::new(PlanBuilder::all(2).build(kernel.as_ref()));
+            let d = tuner::tune(&kernel, &plan, &TrialBudget { runs: 1, products: 2 });
+            let nn = m.n;
+            let xs: Vec<f64> = (0..nn).map(|i| (i as f64 * 0.001).sin()).collect();
+            let mut ys = vec![0.0; nn];
+            let mut tuned = build_engine(d.kind, kernel.clone(), plan.clone());
+            let mut fixed = build_engine(
+                EngineKind::LocalBuffers(AccumMethod::Effective),
+                kernel.clone(),
+                plan.clone(),
+            );
+            let t_tuned = b.run(&format!("autotuned/{}-tuned({})", e.name, d.kind.label()), || {
+                tuned.spmv(&xs, &mut ys)
+            });
+            let t_fixed =
+                b.run(&format!("autotuned/{}-fixed(local-buffers-effective)", e.name), || {
+                    fixed.spmv(&xs, &mut ys)
+                });
+            b.record(
+                &format!("autotuned/{}-tuned-mflops", e.name),
+                csrc_spmv::metrics::mflops(m.flops(), t_tuned),
+                "Mflop/s",
+            );
+            b.record(
+                &format!("autotuned/{}-fixed-mflops", e.name),
+                csrc_spmv::metrics::mflops(m.flops(), t_fixed),
+                "Mflop/s",
+            );
+            b.record(&format!("autotuned/{}-speedup", e.name), t_fixed / t_tuned, "x");
         }
     }
 

@@ -47,7 +47,7 @@ fn main() {
     // --- parallel engine + Jacobi-PCG ------------------------------------
     let mut engine =
         build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), threads);
-    let jac = Jacobi::new(a.as_ref());
+    let jac = Jacobi::new(a.as_ref()).expect("CSRC exposes its diagonal");
     let op = ParallelLinOp::new(n, engine.as_mut());
     let t = Timer::start();
     let result = solver::cg(&op, &b, Some(&jac), 1e-10, 5000);
@@ -90,7 +90,7 @@ fn main() {
     assert!(!ac.numeric_symmetric);
     let bc: Vec<f64> = (0..ac.n).map(|_| rng.normal()).collect();
     let t = Timer::start();
-    let r = solver::bicg(&ac, &bc, 1e-8, 4000);
+    let r = solver::bicg(&ac, &bc, 1e-8, 4000).expect("CSRC supports the transpose product");
     println!(
         "BiCG (uses the free CSRC transpose every iteration): {} in {} its, {:.2}s",
         if r.converged { "converged" } else { "no convergence" },

@@ -1,13 +1,17 @@
 //! Serving-style driver: the coordinator accepts a stream of matvec
 //! requests against registered matrices, batches per matrix, routes small
-//! matrices to the sequential sweep and large ones to the parallel
-//! engine, and reports throughput + latency percentiles.
+//! matrices to the sequential sweep and large ones to the *autotuned*
+//! parallel engine (`EngineKind::Auto`: each registered matrix is trialed
+//! once at registration and served by its measured winner), and reports
+//! throughput + latency percentiles.
 //!
 //! Run: `cargo run --release --example matvec_service [-- requests]`
 
 use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
 use csrc_spmv::gen;
+use csrc_spmv::parallel::EngineKind;
 use csrc_spmv::sparse::Csrc;
+use csrc_spmv::tuner::TrialBudget;
 use csrc_spmv::util::{Rng, Timer};
 use std::sync::Arc;
 
@@ -18,8 +22,10 @@ fn main() {
         .unwrap_or(256);
 
     let mut cfg = ServiceConfig { workers: 2, ..Default::default() };
-    cfg.route.min_parallel_n = 20_000; // small -> sequential, large -> parallel
+    cfg.route.min_parallel_n = 20_000; // small -> sequential, large -> tuned
     cfg.route.threads = 2;
+    cfg.route.parallel_kind = EngineKind::Auto; // measured per-matrix pick
+    cfg.tune_budget = TrialBudget { runs: 1, products: 4 };
     let svc = MatvecService::start(cfg);
 
     // Register a model zoo: small 2-D, medium 3-D, large 3-D.
@@ -85,6 +91,15 @@ fn main() {
         "plans built: {} ({:.2} ms analysis total) — shared across all workers",
         s.plan_builds,
         s.plan_build_seconds * 1e3
+    );
+    for (key, label) in &s.auto_choices {
+        println!("autotuned {key} -> {label}");
+    }
+    println!(
+        "tuning: {} measured runs, {:.1} ms total, {} decision-cache hits",
+        s.tunes,
+        s.tune_seconds * 1e3,
+        s.decision_hits
     );
     svc.shutdown();
     println!("matvec_service OK");

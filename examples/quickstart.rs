@@ -59,7 +59,7 @@ fn main() {
 
     // 6. Transpose product for free — swap the roles of al and au (§5).
     let mut yt = vec![0.0; n];
-    a.apply_t(&x, &mut yt);
+    a.apply_t(&x, &mut yt).expect("CSRC supports the transpose product");
     println!("Aᵀx computed at the same cost as Ax (no transpose pass)");
 
     // 7. The colorful alternative (§3.2): conflict-free row classes —

@@ -19,10 +19,12 @@
 use super::batcher::{form_batches, BatchPolicy};
 use super::router::{Backend, RoutePolicy, Router};
 use crate::metrics::LatencyHistogram;
-use crate::parallel::{build_engine, ParallelSpmv};
+use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
 use crate::plan::{PlanBuilder, PlanCache};
-use crate::sparse::Csrc;
+use crate::sparse::{Csrc, SpmvKernel};
+use crate::tuner::{self, DecisionCache, TrialBudget};
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -33,11 +35,29 @@ pub struct ServiceConfig {
     pub workers: usize,
     pub batch: BatchPolicy,
     pub route: RoutePolicy,
+    /// Trial budget used when `route.parallel_kind` is
+    /// [`EngineKind::Auto`]; a zero budget answers from the cost model.
+    pub tune_budget: TrialBudget,
+    /// Persist autotuner decisions here (`None` = in-memory only). A
+    /// restarted service pointed at the same file re-tunes nothing it
+    /// has already measured.
+    pub decision_cache: Option<PathBuf>,
+    /// Max engines one worker keeps cached (LRU by last-served batch).
+    /// Each cached engine pins a thread pool, so abandoned keys must not
+    /// park pools forever.
+    pub engine_cache_capacity: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 2, batch: BatchPolicy::default(), route: RoutePolicy::default() }
+        ServiceConfig {
+            workers: 2,
+            batch: BatchPolicy::default(),
+            route: RoutePolicy::default(),
+            tune_budget: TrialBudget::default(),
+            decision_cache: None,
+            engine_cache_capacity: 32,
+        }
     }
 }
 
@@ -61,6 +81,10 @@ struct Stats {
     failed: u64,
     batches: u64,
     latency: Option<LatencyHistogram>,
+    tunes: u64,
+    tune_seconds: f64,
+    engines_evicted: u64,
+    auto_choices: Vec<(String, String)>,
 }
 
 /// Observable service counters.
@@ -77,6 +101,19 @@ pub struct ServiceStats {
     pub plan_builds: u64,
     /// Total wall-clock seconds spent in plan analysis.
     pub plan_build_seconds: f64,
+    /// Measured tuning runs performed for `EngineKind::Auto`
+    /// registrations (decision-cache hits do not count).
+    pub tunes: u64,
+    /// Wall-clock seconds spent inside those tuning runs.
+    pub tune_seconds: f64,
+    /// Autotuner decisions answered from the (possibly persisted)
+    /// decision cache with zero new trials.
+    pub decision_hits: u64,
+    /// Engines dropped from worker caches by the LRU eviction policy.
+    pub engines_evicted: u64,
+    /// (matrix key, resolved engine label) per Auto registration, in
+    /// registration order.
+    pub auto_choices: Vec<(String, String)>,
 }
 
 /// Registry value: the matrix plus a per-key generation counter.
@@ -92,6 +129,11 @@ pub struct MatvecService {
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     stats: Arc<Mutex<Stats>>,
+    route: RoutePolicy,
+    tune_budget: TrialBudget,
+    decisions: Arc<DecisionCache>,
+    /// `key@generation` → concrete engine resolved for an Auto route.
+    resolved: Arc<Mutex<HashMap<String, EngineKind>>>,
 }
 
 impl MatvecService {
@@ -99,6 +141,12 @@ impl MatvecService {
         let registry: Arc<Mutex<Registry>> = Arc::new(Mutex::new(HashMap::new()));
         let plans = Arc::new(PlanCache::new());
         let stats = Arc::new(Mutex::new(Stats { latency: Some(LatencyHistogram::new()), ..Default::default() }));
+        let decisions = Arc::new(match &cfg.decision_cache {
+            Some(path) => DecisionCache::open(path),
+            None => DecisionCache::in_memory(),
+        });
+        let resolved: Arc<Mutex<HashMap<String, EngineKind>>> =
+            Arc::new(Mutex::new(HashMap::new()));
         let (queue_tx, queue_rx) = channel::<Request>();
 
         // Worker channels.
@@ -111,10 +159,14 @@ impl MatvecService {
             let plans = plans.clone();
             let stats = stats.clone();
             let route = cfg.route.clone();
+            let resolved = resolved.clone();
+            let capacity = cfg.engine_cache_capacity.max(1);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("matvec-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, registry, plans, route, stats))
+                    .spawn(move || {
+                        worker_loop(rx, registry, plans, route, stats, resolved, capacity)
+                    })
                     .expect("spawn worker"),
             );
         }
@@ -134,6 +186,10 @@ impl MatvecService {
             dispatcher: Some(dispatcher),
             workers,
             stats,
+            route: cfg.route,
+            tune_budget: cfg.tune_budget,
+            decisions,
+            resolved,
         }
     }
 
@@ -143,23 +199,54 @@ impl MatvecService {
     /// consulted again. All prior generations' plans are swept here
     /// (prefix match, so a plan raced in by a worker mid-replace is
     /// collected by the next replacement at the latest); workers evict a
-    /// key's retired engines the next time they serve that key, so a
-    /// worker holds at most one engine per (previously served key,
-    /// engine kind) — a key abandoned after replacement keeps its last
-    /// engine (and pool threads) parked until the worker exits.
+    /// key's retired engines the next time they serve that key, and the
+    /// per-worker LRU cap (`ServiceConfig::engine_cache_capacity`)
+    /// bounds how long an abandoned key's last engine can stay parked.
     pub fn register(&self, key: &str, a: Arc<Csrc>) {
         // Drop the registry lock before sweeping plans: plan builds hold
         // the cache lock for their whole (possibly long) analysis, and
         // every worker batch starts with a registry read — invalidating
         // under the registry lock would stall all workers behind an
         // unrelated build.
-        let replaced = {
+        let (generation, replaced) = {
             let mut reg = self.registry.lock().unwrap();
             let generation = reg.get(key).map(|(_, g)| g + 1).unwrap_or(0);
-            reg.insert(key.to_string(), (a, generation)).is_some()
+            let replaced = reg.insert(key.to_string(), (a.clone(), generation)).is_some();
+            (generation, replaced)
         };
         if replaced {
-            self.plans.invalidate_prefix(&format!("{key}@"));
+            let prefix = format!("{key}@");
+            // Plans may over-match (a user key containing '@' aliases the
+            // prefix) — that only costs a rebuild. Resolved Auto entries
+            // are repopulated by register() alone, so they must match
+            // exactly: `key@<generation>` with an all-digit suffix, never
+            // another live key like `key@other@0`.
+            self.plans.invalidate_prefix(&prefix);
+            self.resolved.lock().unwrap().retain(|k, _| !is_generation_of(k, &prefix));
+        }
+        // Auto routing: resolve the concrete engine now, off the request
+        // path. The decision cache is keyed by structure fingerprint ×
+        // threads, so a re-registered matrix — or one registered with a
+        // service restarted onto the same persisted cache — resolves
+        // with zero new trials. (A request racing this resolution falls
+        // back to the cost model inside the worker; it never blocks.)
+        if self.route.parallel_kind == EngineKind::Auto && a.n >= self.route.min_parallel_n {
+            let cache_key = format!("{key}@{generation}");
+            let kernel: Arc<dyn SpmvKernel> = a.clone();
+            let threads = self.route.threads;
+            let plan = self.plans.get_or_build(
+                &cache_key,
+                kernel.as_ref(),
+                PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
+            );
+            let (d, hit) = tuner::resolve(&kernel, &plan, &self.tune_budget, &self.decisions);
+            self.resolved.lock().unwrap().insert(cache_key, d.kind);
+            let mut s = self.stats.lock().unwrap();
+            if !hit {
+                s.tunes += 1;
+                s.tune_seconds += d.tuned_s;
+            }
+            s.auto_choices.push((key.to_string(), d.kind.label()));
         }
     }
 
@@ -198,6 +285,11 @@ impl MatvecService {
             p99_latency_us: lat.quantile_us(0.99),
             plan_builds: self.plans.builds(),
             plan_build_seconds: self.plans.build_seconds(),
+            tunes: s.tunes,
+            tune_seconds: s.tune_seconds,
+            decision_hits: self.decisions.hits(),
+            engines_evicted: s.engines_evicted,
+            auto_choices: s.auto_choices.clone(),
         }
     }
 
@@ -221,6 +313,16 @@ impl Drop for MatvecService {
     fn drop(&mut self) {
         self.shutdown_inner();
     }
+}
+
+/// Does `k` name a generation of exactly the key whose prefix is
+/// `"key@"` — i.e. `key@<digits>`? An all-digit suffix can only be a
+/// generation stamped by `register()`; anything else (e.g. `key@b@0`)
+/// belongs to a *different* user key that happens to contain '@'.
+fn is_generation_of(k: &str, prefix: &str) -> bool {
+    k.starts_with(prefix)
+        && k.len() > prefix.len()
+        && k[prefix.len()..].bytes().all(|b| b.is_ascii_digit())
 }
 
 fn dispatcher_loop(
@@ -275,14 +377,18 @@ fn worker_loop(
     plans: Arc<PlanCache>,
     route: RoutePolicy,
     stats: Arc<Mutex<Stats>>,
+    resolved: Arc<Mutex<HashMap<String, EngineKind>>>,
+    engine_capacity: usize,
 ) {
     let router = Router::new(route);
     // Engine cache per (matrix, generation, backend) — engines hold
     // execution state (pool, buffers) and are not Sync, so each worker
     // owns its own; the *plan* inside every engine comes from the shared
     // service cache. Structural keys so user keys containing '@' cannot
-    // alias generations.
-    let mut engines: HashMap<(String, u64, String), Box<dyn ParallelSpmv>> = HashMap::new();
+    // alias generations. Values carry the last-served batch tick for the
+    // LRU eviction below.
+    let mut engines: HashMap<(String, u64, String), (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
+    let mut serve_tick: u64 = 0;
     while let Ok(batch) = rx.recv() {
         let hit = registry.lock().unwrap().get(&batch.matrix).cloned();
         let Some((a, generation)) = hit else {
@@ -301,7 +407,27 @@ fn worker_loop(
         // each pins a ThreadPool (live OS threads), the old matrix, and
         // its plan.
         engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
-        let backend = router.route(&a);
+        serve_tick += 1;
+        let mut used_key: Option<(String, u64, String)> = None;
+        // Resolve Auto once per batch (it is batch-invariant): through
+        // the registration-time tuning decision, or — for a request
+        // racing that resolution — the cost model (features only, no
+        // trials), rather than blocking or tuning on the request path.
+        let backend = match router.route(&a) {
+            Backend::NativeParallel { kind: EngineKind::Auto, threads } => {
+                let known = resolved.lock().unwrap().get(&cache_key).copied();
+                let kind = known.unwrap_or_else(|| {
+                    let plan = plans.get_or_build(
+                        &cache_key,
+                        a.as_ref(),
+                        PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
+                    );
+                    tuner::cost_model(&tuner::Features::extract(a.as_ref(), &plan))
+                });
+                Backend::NativeParallel { kind, threads }
+            }
+            other => other,
+        };
         for req in batch.requests {
             if req.x.len() != a.n {
                 let mut s = stats.lock().unwrap();
@@ -315,17 +441,18 @@ fn worker_loop(
             match &backend {
                 Backend::NativeSequential => a.spmv_into_zeroed(&req.x, &mut y),
                 Backend::NativeParallel { kind, threads } => {
-                    let engine = engines
-                        .entry((batch.matrix.clone(), generation, kind.label()))
-                        .or_insert_with(|| {
-                            let plan = plans.get_or_build(
-                                &cache_key,
-                                a.as_ref(),
-                                PlanBuilder::for_kind(*threads, *kind),
-                            );
-                            build_engine(*kind, a.clone(), plan)
-                        });
-                    engine.spmv(&req.x, &mut y);
+                    let ekey = (batch.matrix.clone(), generation, kind.label());
+                    let slot = engines.entry(ekey.clone()).or_insert_with(|| {
+                        let plan = plans.get_or_build(
+                            &cache_key,
+                            a.as_ref(),
+                            PlanBuilder::for_kind(*threads, *kind),
+                        );
+                        (build_engine(*kind, a.clone(), plan), 0)
+                    });
+                    slot.1 = serve_tick;
+                    slot.0.spmv(&req.x, &mut y);
+                    used_key = Some(ekey);
                 }
                 Backend::Xla { artifact } => {
                     // The XLA path is exercised via examples/ and the CLI
@@ -339,6 +466,26 @@ fn worker_loop(
             s.completed += 1;
             s.latency.as_mut().unwrap().record(req.enqueued.elapsed().as_secs_f64());
             let _ = req.reply.send(Ok(std::mem::take(&mut y)));
+        }
+        // LRU eviction (ROADMAP item): a worker that has served many
+        // distinct keys must not park one thread pool per key forever.
+        // Evict the least-recently-served engines above capacity, never
+        // the one this batch just used.
+        if engines.len() > engine_capacity {
+            let mut evicted = 0u64;
+            while engines.len() > engine_capacity {
+                let victim = engines
+                    .iter()
+                    .filter(|&(k, _)| used_key.as_ref() != Some(k))
+                    .min_by_key(|&(_, &(_, tick))| tick)
+                    .map(|(k, _)| k.clone());
+                let Some(v) = victim else { break };
+                engines.remove(&v);
+                evicted += 1;
+            }
+            if evicted > 0 {
+                stats.lock().unwrap().engines_evicted += evicted;
+            }
         }
     }
 }
@@ -491,6 +638,97 @@ mod tests {
         let s = svc.stats();
         assert_eq!(s.completed, 2);
         assert_eq!(s.plan_builds, 2, "replacement must build a fresh plan");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn auto_routing_tunes_once_and_persists_decisions() {
+        let dir = std::env::temp_dir().join(format!("csrc_auto_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = ServiceConfig::default();
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1; // force the parallel (Auto) path
+        cfg.route.threads = 2;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(dir.join("decisions.json"));
+        let a = mat(150, 89);
+        let x: Vec<f64> = (0..150).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 150];
+        a.spmv_into_zeroed(&x, &mut want);
+
+        let svc = MatvecService::start(cfg.clone());
+        svc.register("m", a.clone());
+        let y = svc.call("m", x.clone()).unwrap();
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1, "first Auto registration runs measured trials");
+        assert!(s.tune_seconds > 0.0);
+        assert_eq!(s.auto_choices.len(), 1);
+        let (key, label) = &s.auto_choices[0];
+        assert_eq!(key, "m");
+        let resolved = EngineKind::parse(label).expect("resolved label parses");
+        assert_ne!(resolved, EngineKind::Auto, "Auto must resolve to a concrete engine");
+        // Registering the same structure under another key: decision
+        // cache hit, zero new trials.
+        svc.register("m-again", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1, "same structure must not re-tune");
+        assert!(s.decision_hits >= 1);
+        svc.shutdown();
+
+        // A restarted service on the same persisted cache re-tunes
+        // nothing: zero trials, decision read from disk.
+        let svc2 = MatvecService::start(cfg);
+        svc2.register("m", a.clone());
+        let y2 = svc2.call("m", x).unwrap();
+        crate::util::propcheck::assert_close(&y2, &want, 1e-11, 1e-11).unwrap();
+        let s2 = svc2.stats();
+        assert_eq!(s2.tunes, 0, "restart must hit the persisted decision cache");
+        assert!(s2.decision_hits >= 1);
+        assert_eq!(s2.auto_choices[0].1, *label, "persisted decision picks the same engine");
+        svc2.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resolved_sweep_matches_generations_exactly() {
+        // Re-registering "a" must not drop the Auto decision of a
+        // different live key that merely starts with "a@".
+        assert!(is_generation_of("a@0", "a@"));
+        assert!(is_generation_of("a@12", "a@"));
+        assert!(!is_generation_of("a@b@0", "a@"));
+        assert!(!is_generation_of("a@", "a@"));
+        assert!(!is_generation_of("ab@0", "a@"));
+    }
+
+    #[test]
+    fn worker_engine_cache_evicts_lru() {
+        // Capacity-1 worker cache serving two matrices must release the
+        // older engine (and its parked pool) instead of hoarding both.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.engine_cache_capacity = 1;
+        let svc = MatvecService::start(cfg);
+        let a = mat(60, 91);
+        let b = mat(50, 92);
+        svc.register("a", a.clone());
+        svc.register("b", b.clone());
+        for (key, m) in [("a", &a), ("b", &b), ("a", &a)] {
+            let x = vec![1.0; m.n];
+            let y = svc.call(key, x.clone()).unwrap();
+            let mut want = vec![0.0; m.n];
+            m.spmv_into_zeroed(&x, &mut want);
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 3);
+        assert!(
+            s.engines_evicted >= 1,
+            "capacity-1 cache must evict between matrices, evicted {}",
+            s.engines_evicted
+        );
         svc.shutdown();
     }
 

@@ -20,6 +20,7 @@ use crate::simulator::{
     MachineSim,
 };
 use crate::sparse::SpmvKernel;
+use crate::tuner::{self, TrialBudget};
 use std::sync::Arc;
 
 /// Products per measurement for Fig. 5: the paper uses 1000; we scale by
@@ -336,6 +337,54 @@ pub fn plan_overview_headers() -> Vec<String> {
         .collect()
 }
 
+// ------------------------------------------------------------ Tune table
+
+/// Beyond the paper: the §4 observation that no strategy wins everywhere,
+/// made operational — the autotuner trials every candidate per matrix
+/// and this table compares the measured winner against the fixed
+/// `local-buffers/effective` default the router would otherwise pick.
+pub fn tune_table(entries: &[DatasetEntry], p: usize, budget: &TrialBudget) -> Vec<Vec<String>> {
+    entries
+        .iter()
+        .map(|e| {
+            let m = Arc::new(e.build_csrc());
+            let flops = m.flops();
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let plan = Arc::new(PlanBuilder::all(p).build(kernel.as_ref()));
+            let d = tuner::tune(&kernel, &plan, budget);
+            let seconds_of = |k: EngineKind| {
+                d.trials.iter().find(|t| t.kind == k).map(|t| t.seconds_per_product)
+            };
+            let win_s = seconds_of(d.kind);
+            let eff_s = seconds_of(EngineKind::LocalBuffers(AccumMethod::Effective));
+            let mf = |s: Option<f64>| {
+                s.map(|s| format!("{:.1}", metrics::mflops(flops, s)))
+                    .unwrap_or_else(|| "-".into())
+            };
+            let ratio = match (win_s, eff_s) {
+                (Some(w), Some(f)) if w > 0.0 => format!("{:.2}", f / w),
+                _ => "-".into(),
+            };
+            vec![
+                e.name.to_string(),
+                d.features.n.to_string(),
+                d.features.colors.to_string(),
+                d.kind.label(),
+                mf(win_s),
+                mf(eff_s),
+                ratio,
+            ]
+        })
+        .collect()
+}
+
+pub fn tune_headers() -> Vec<String> {
+    ["matrix", "n", "colors", "winner", "winner Mflop/s", "effective Mflop/s", "eff/winner time"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
 pub fn table2_headers() -> Vec<String> {
     let mut h = vec!["method".to_string()];
     for (machine, threads) in [("wolfdale", vec![2]), ("bloomfield", vec![2, 4])] {
@@ -401,6 +450,18 @@ mod tests {
         assert_eq!(rows[0].len(), plan_overview_headers().len());
         for r in &rows {
             assert_eq!(r.last().unwrap(), "yes", "{r:?}");
+        }
+    }
+
+    #[test]
+    fn tune_table_picks_concrete_winners() {
+        let rows = tune_table(&smoke_suite()[..2], 2, &TrialBudget::smoke());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), tune_headers().len());
+        for r in &rows {
+            let kind = EngineKind::parse(&r[3]).expect("winner label parses");
+            assert_ne!(kind, EngineKind::Auto, "{r:?}");
+            assert_ne!(r[4], "-", "measured budget must produce a rate: {r:?}");
         }
     }
 }

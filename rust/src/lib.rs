@@ -11,7 +11,9 @@
 //!   format-generic *executors* ([`parallel`] over [`sparse::SpmvKernel`]),
 //!   every substrate the evaluation needs (FEM generators, a multi-core
 //!   machine simulator, iterative solvers, a matvec service coordinator
-//!   that caches one plan per matrix across its workers) and the harness
+//!   that caches one plan per matrix across its workers), an autotuner
+//!   ([`tuner`]) that resolves `EngineKind::Auto` per matrix through
+//!   measured trials with a persistent decision cache, and the harness
 //!   that regenerates each of the paper's tables/figures.
 //! * **L2/L1 (python/, build-time only)** — the JAX model graphs and the
 //!   Pallas CSRC-ELL kernel, AOT-lowered to HLO text artifacts executed
@@ -60,4 +62,5 @@ pub mod runtime;
 pub mod simulator;
 pub mod solver;
 pub mod sparse;
+pub mod tuner;
 pub mod util;

@@ -21,6 +21,7 @@ use csrc_spmv::runtime::XlaRuntime;
 use csrc_spmv::simulator::MachineConfig;
 use csrc_spmv::solver;
 use csrc_spmv::sparse::{mmio, Coo, Csrc, LinOp, SpmvKernel};
+use csrc_spmv::tuner;
 use csrc_spmv::util::cli::Args;
 use csrc_spmv::util::error::{msg, Result};
 use csrc_spmv::util::Rng;
@@ -38,6 +39,7 @@ fn main() {
         "info" => cmd_info(&args),
         "gen" => cmd_gen(&args),
         "spmv" => cmd_spmv(&args),
+        "tune" => cmd_tune(&args),
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
         "xla" => cmd_xla(&args),
@@ -57,16 +59,18 @@ fn usage_and_exit() -> ! {
     eprintln!(
         "csrc — parallel structurally-symmetric SpMV (CSRC), Batista et al. 2010 reproduction\n\
          \n\
-         usage: csrc <info|gen|spmv|solve|serve|xla|figures> [options]\n\
+         usage: csrc <info|gen|spmv|tune|solve|serve|xla|figures> [options]\n\
          \n\
          csrc info    --matrix <dataset-name|file.mtx>\n\
          csrc gen     --kind <poisson2d|poisson3d|elasticity|band|random|dense> --nx N --out a.mtx\n\
          csrc spmv    --matrix <..> --engine <seq|all-in-one|per-buffer|effective|interval|colorful|atomic>\n\
                       --threads P --products K\n\
+         csrc tune    --matrix <..> [--threads P] [--runs R] [--products K]\n\
+                      [--cache decisions.json]\n\
          csrc solve   --matrix <..> --solver <cg|gmres|bicg> [--tol 1e-10]\n\
-         csrc serve   [--requests N] [--workers W]\n\
+         csrc serve   [--requests N] [--workers W] [--engine auto] [--min-parallel-n N]\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|all>\n\
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|all>\n\
                       [--suite smoke|quick|full] [--out results]"
     );
     std::process::exit(2);
@@ -180,6 +184,56 @@ fn cmd_spmv(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Autotune: trial every candidate engine on a matrix, print the table
+/// and the winner; `--cache` persists the decision so a later `tune` (or
+/// a service pointed at the same file) performs zero new trials.
+fn cmd_tune(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let threads = args.usize_or("threads", 4);
+    let budget = tuner::TrialBudget {
+        runs: args.usize_or("runs", 3),
+        products: args.usize_or("products", figures::products_for(m.nnz()).min(100)),
+    };
+    let flops = m.flops();
+    let a = Arc::new(m);
+    let kernel: Arc<dyn SpmvKernel> = a.clone();
+    let plan = Arc::new(PlanBuilder::all(threads).build(kernel.as_ref()));
+    let cache = match args.opt("cache") {
+        Some(p) => tuner::DecisionCache::open(Path::new(p)),
+        None => tuner::DecisionCache::in_memory(),
+    };
+    let (d, hit) = tuner::resolve(&kernel, &plan, &budget, &cache);
+    println!(
+        "{name}: n={} colors={} intervals={} bandwidth={} scatter-ratio={:.3} balance={:.3}",
+        d.features.n,
+        d.features.colors,
+        d.features.intervals,
+        d.features.bandwidth,
+        d.features.scatter_ratio,
+        d.features.balance
+    );
+    for t in &d.trials {
+        println!(
+            "  {:<28} {:>10.3} ms/product  {:>9.1} Mflop/s",
+            t.kind.label(),
+            t.seconds_per_product * 1e3,
+            metrics::mflops(flops, t.seconds_per_product)
+        );
+    }
+    let win = d.trials.iter().find(|t| t.kind == d.kind);
+    println!(
+        "winner: {} at {threads} threads ({}; tuned in {:.1} ms{})",
+        d.kind.label(),
+        match win {
+            Some(w) => format!("{:.1} Mflop/s", metrics::mflops(flops, w.seconds_per_product)),
+            None => "cost model, no trials".to_string(),
+        },
+        d.tuned_s * 1e3,
+        if hit { "; from decision cache, zero new trials" } else { "" }
+    );
+    Ok(())
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
     let tol = args.f64_or("tol", 1e-10);
@@ -200,7 +254,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
             (r.iterations, r.residual, r.converged)
         }
         "bicg" => {
-            let r = solver::bicg(&m, &b, tol, 10 * n);
+            let r = solver::bicg(&m, &b, tol, 10 * n).map_err(msg)?;
             (r.iterations, r.residual, r.converged)
         }
         other => return Err(msg(format!("unknown solver {other:?}"))),
@@ -216,7 +270,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.usize_or("requests", 64);
-    let cfg = ServiceConfig { workers: args.usize_or("workers", 2), ..Default::default() };
+    let mut cfg = ServiceConfig { workers: args.usize_or("workers", 2), ..Default::default() };
+    // `--engine auto` turns on autotuned routing: each registered matrix
+    // is trialed once and served by its measured winner.
+    if let Some(k) = args.opt("engine") {
+        cfg.route.parallel_kind = EngineKind::parse(k).ok_or_else(|| msg("bad --engine"))?;
+    }
+    cfg.route.min_parallel_n = args.usize_or("min-parallel-n", cfg.route.min_parallel_n);
     let svc = MatvecService::start(cfg);
     // Register a few dataset matrices once, remembering their sizes.
     let names = ["thermal", "torsion1", "poisson3Da"];
@@ -255,6 +315,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.plan_builds,
         s.plan_build_seconds * 1e3
     );
+    if !s.auto_choices.is_empty() {
+        println!(
+            "autotuned {} matrices in {:.1} ms ({} cache hits):",
+            s.tunes,
+            s.tune_seconds * 1e3,
+            s.decision_hits
+        );
+        for (key, label) in &s.auto_choices {
+            println!("  {key} -> {label}");
+        }
+    }
     svc.shutdown();
     Ok(())
 }
@@ -399,6 +470,23 @@ fn cmd_figures(args: &Args) -> Result<()> {
             "Plan analysis — shared SpmvPlan cost and shape (4 threads)",
             &h,
             &figures::plan_overview(&suite, 4),
+        )?;
+    }
+    if run_all || what == "tune" {
+        // Trial budget scales with the suite so `figures tune --suite
+        // smoke` stays CI-cheap while `full` gets stable medians.
+        let budget = match args.opt_or("suite", "quick") {
+            "smoke" => tuner::TrialBudget::smoke(),
+            "full" => tuner::TrialBudget::default(),
+            _ => tuner::TrialBudget { runs: 2, products: 4 },
+        };
+        let headers = figures::tune_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "tune",
+            "Autotuner — measured per-matrix winner vs the fixed default (4 threads)",
+            &h,
+            &figures::tune_table(&suite, args.usize_or("threads", 4), &budget),
         )?;
     }
     println!("wrote results under {out}/");

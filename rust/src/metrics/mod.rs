@@ -23,7 +23,17 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 
 /// The paper's protocol: run `products` SpMVs per measurement, repeat
 /// `runs` times, report the median (§4: 1000 products, median of 3).
-pub fn median_of_runs<F: FnMut()>(runs: usize, products: usize, mut one_product: F) -> f64 {
+pub fn median_of_runs<F: FnMut()>(runs: usize, products: usize, one_product: F) -> f64 {
+    median_and_spread_of_runs(runs, products, one_product).0
+}
+
+/// [`median_of_runs`] plus the MAD across runs — the tuner's trial
+/// protocol records both so that noisy wins stay visible in reports.
+pub fn median_and_spread_of_runs<F: FnMut()>(
+    runs: usize,
+    products: usize,
+    mut one_product: F,
+) -> (f64, f64) {
     let mut samples = Vec::with_capacity(runs);
     for _ in 0..runs {
         let t = Instant::now();
@@ -32,7 +42,7 @@ pub fn median_of_runs<F: FnMut()>(runs: usize, products: usize, mut one_product:
         }
         samples.push(t.elapsed().as_secs_f64() / products as f64);
     }
-    stats::median(&samples)
+    (stats::median(&samples), stats::mad(&samples))
 }
 
 /// Fixed-bucket latency histogram (power-of-two microsecond buckets).
@@ -124,6 +134,14 @@ mod tests {
         });
         assert_eq!(calls, 30);
         assert!(per >= 0.0 && per < 0.1);
+    }
+
+    #[test]
+    fn median_and_spread_reports_both() {
+        let (med, mad) = median_and_spread_of_runs(3, 5, || {
+            std::hint::black_box(1u64);
+        });
+        assert!(med >= 0.0 && mad >= 0.0);
     }
 
     #[test]

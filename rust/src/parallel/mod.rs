@@ -60,6 +60,11 @@ pub enum EngineKind {
     LocalBuffers(AccumMethod),
     Colorful,
     Atomic,
+    /// Measurement-driven selection: resolved per matrix × thread-count
+    /// by the autotuner ([`crate::tuner`]) into one of the concrete
+    /// kinds above. `Auto` is a *routing* selector — it never reaches
+    /// [`build_engine`] unresolved.
+    Auto,
 }
 
 impl EngineKind {
@@ -72,7 +77,8 @@ impl EngineKind {
         ]
     }
 
-    /// Every selectable kind (the order reports use).
+    /// Every *concrete* kind (the order reports use). `Auto` is excluded
+    /// on purpose: it is a selector, not an executor.
     pub fn all() -> [EngineKind; 7] {
         [
             EngineKind::Sequential,
@@ -109,6 +115,7 @@ impl EngineKind {
             "interval" => EngineKind::LocalBuffers(AccumMethod::Interval),
             "colorful" => EngineKind::Colorful,
             "atomic" => EngineKind::Atomic,
+            "auto" => EngineKind::Auto,
             _ => return None,
         })
     }
@@ -119,6 +126,7 @@ impl EngineKind {
             EngineKind::LocalBuffers(m) => format!("local-buffers/{}", m.label()),
             EngineKind::Colorful => "colorful".into(),
             EngineKind::Atomic => "atomic".into(),
+            EngineKind::Auto => "auto".into(),
         }
     }
 }
@@ -159,6 +167,11 @@ pub fn build_engine(
     plan: Arc<SpmvPlan>,
 ) -> Box<dyn ParallelSpmv> {
     assert!(
+        kind != EngineKind::Auto,
+        "EngineKind::Auto is a routing selector: resolve it to a concrete engine \
+         first (crate::tuner::resolve or tuner::cost_model)"
+    );
+    assert!(
         plan.pieces.covers(crate::plan::PlanPieces::for_kind(kind)),
         "plan (pieces {:?}) cannot run {}",
         plan.pieces,
@@ -169,6 +182,7 @@ pub fn build_engine(
         EngineKind::LocalBuffers(m) => Box::new(LocalBuffersEngine::with_plan(kernel, plan, m)),
         EngineKind::Colorful => Box::new(ColorfulEngine::with_plan(kernel, plan)),
         EngineKind::Atomic => Box::new(AtomicEngine::with_plan(kernel, plan)),
+        EngineKind::Auto => unreachable!("rejected above"),
     }
 }
 
@@ -291,6 +305,10 @@ mod tests {
         {
             assert!(EngineKind::parse(s).is_some(), "{s}");
         }
+        // Auto round-trips as a selector but never appears in all().
+        assert_eq!(EngineKind::parse("auto"), Some(EngineKind::Auto));
+        assert_eq!(EngineKind::parse(&EngineKind::Auto.label()), Some(EngineKind::Auto));
+        assert!(!EngineKind::all().contains(&EngineKind::Auto));
         assert!(EngineKind::parse("nope").is_none());
         assert!(EngineKind::parse("local-buffers/nope").is_none());
         // The prefix must not smuggle other engine families through.
@@ -315,6 +333,16 @@ mod tests {
             engine.spmv(&x, &mut y);
             propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "routing selector")]
+    fn auto_kind_rejected_by_build_engine() {
+        let mut rng = Rng::new(10);
+        let coo = Coo::random_structurally_symmetric(30, 2, false, &mut rng);
+        let a: Arc<dyn crate::sparse::SpmvKernel> = Arc::new(Csrc::from_coo(&coo).unwrap());
+        let plan = Arc::new(crate::plan::PlanBuilder::all(2).build(a.as_ref()));
+        let _ = build_engine(EngineKind::Auto, a, plan);
     }
 
     #[test]

@@ -66,6 +66,9 @@ impl PlanPieces {
                 PlanPieces { ranges: true, intervals: true, ..Default::default() }
             }
             EngineKind::Colorful => PlanPieces { coloring: true, ..Default::default() },
+            // Auto is resolved by trialing every candidate engine, so its
+            // plan must carry every piece.
+            EngineKind::Auto => PlanPieces::all(),
         }
     }
 
@@ -458,6 +461,7 @@ mod tests {
         let p = PlanPieces::for_kind(EngineKind::LocalBuffers(AccumMethod::Interval));
         assert!(p.ranges && p.intervals);
         assert!(PlanPieces::for_kind(EngineKind::Colorful).coloring);
+        assert_eq!(PlanPieces::for_kind(EngineKind::Auto), PlanPieces::all());
     }
 
     #[test]

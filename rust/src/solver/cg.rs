@@ -105,7 +105,7 @@ mod tests {
         let a = Csrc::from_coo(&coo).unwrap();
         let b: Vec<f64> = (0..120).map(|_| rng.normal()).collect();
         let plain = cg(&a, &b, None, 1e-10, 2000);
-        let jac = Jacobi::new(&a);
+        let jac = Jacobi::new(&a).expect("CSRC exposes its diagonal");
         let pre = cg(&a, &b, Some(&jac), 1e-10, 2000);
         assert!(pre.converged && plain.converged);
         assert!(

@@ -82,7 +82,9 @@ pub struct BicgResult {
     pub converged: bool,
 }
 
-pub fn bicg(a: &dyn LinOp, b: &[f64], tol: f64, max_iter: usize) -> BicgResult {
+/// Errors with a message (rather than panicking) when the operator does
+/// not support the transpose product BiCG needs each iteration.
+pub fn bicg(a: &dyn LinOp, b: &[f64], tol: f64, max_iter: usize) -> Result<BicgResult, String> {
     let n = a.dim();
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
@@ -95,10 +97,16 @@ pub fn bicg(a: &dyn LinOp, b: &[f64], tol: f64, max_iter: usize) -> BicgResult {
     let mut atpt = vec![0.0; n];
     for it in 0..max_iter {
         if norm(&r) / bnorm < tol {
-            return BicgResult { x, iterations: it, residual: norm(&r) / bnorm, converged: true };
+            return Ok(BicgResult {
+                x,
+                iterations: it,
+                residual: norm(&r) / bnorm,
+                converged: true,
+            });
         }
         a.apply(&p, &mut ap);
-        a.apply_t(&pt, &mut atpt);
+        a.apply_t(&pt, &mut atpt)
+            .map_err(|e| format!("bicg requires a transpose product: {e}"))?;
         let alpha = rho / dot(&pt, &ap);
         axpy(&mut x, alpha, &p);
         axpy(&mut r, -alpha, &ap);
@@ -112,7 +120,7 @@ pub fn bicg(a: &dyn LinOp, b: &[f64], tol: f64, max_iter: usize) -> BicgResult {
         }
     }
     let res = norm(&r) / bnorm;
-    BicgResult { x, iterations: max_iter, residual: res, converged: res < tol }
+    Ok(BicgResult { x, iterations: max_iter, residual: res, converged: res < tol })
 }
 
 // --- tiny BLAS-1 helpers shared by the solvers -------------------------
@@ -148,11 +156,31 @@ mod tests {
         let xstar: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
         let mut b = vec![0.0; 80];
         a.spmv_into_zeroed(&xstar, &mut b);
-        let r = bicg(&a, &b, 1e-10, 500);
+        let r = bicg(&a, &b, 1e-10, 500).unwrap();
         assert!(r.converged, "residual {}", r.residual);
         for (got, want) in r.x.iter().zip(&xstar) {
             assert!((got - want).abs() < 1e-6, "{got} vs {want}");
         }
+    }
+
+    #[test]
+    fn missing_capabilities_probe_without_panicking() {
+        // Engine adapters expose neither Aᵀx nor a diagonal; probing must
+        // return Err/None (the tuner's capability check), and bicg must
+        // surface a clean error instead of aborting.
+        use crate::parallel::{build_engine_auto, AccumMethod, EngineKind};
+        let mut rng = Rng::new(93);
+        let coo = Coo::random_structurally_symmetric(40, 3, false, &mut rng);
+        let a = std::sync::Arc::new(Csrc::from_coo(&coo).unwrap());
+        let mut engine =
+            build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), a.clone(), 2);
+        let op = ParallelLinOp::new(40, engine.as_mut());
+        let ones = vec![1.0; 40];
+        let mut y = vec![0.0; 40];
+        assert!(op.apply_t(&ones, &mut y).is_err());
+        assert!(op.diagonal().is_none());
+        let err = bicg(&op, &ones, 1e-8, 10).unwrap_err();
+        assert!(err.contains("transpose"), "{err}");
     }
 
     #[test]

@@ -14,14 +14,17 @@ pub struct Jacobi {
 }
 
 impl Jacobi {
-    pub fn new(a: &dyn LinOp) -> Jacobi {
-        let d = a.diagonal();
-        Jacobi {
+    /// `None` when the operator exposes no diagonal ([`LinOp::diagonal`]
+    /// is a probe, not a panic) — callers fall back to unpreconditioned
+    /// iterations.
+    pub fn new(a: &dyn LinOp) -> Option<Jacobi> {
+        let d = a.diagonal()?;
+        Some(Jacobi {
             inv_diag: d
                 .iter()
                 .map(|&x| if x.abs() > 1e-300 { 1.0 / x } else { 1.0 })
                 .collect(),
-        }
+        })
     }
 }
 
@@ -45,7 +48,7 @@ mod tests {
         coo.push(1, 1, 4.0);
         coo.push(2, 2, 8.0);
         let a = Csrc::from_coo(&coo).unwrap();
-        let j = Jacobi::new(&a);
+        let j = Jacobi::new(&a).expect("CSRC exposes its diagonal");
         let mut z = vec![0.0; 3];
         j.apply(&[2.0, 4.0, 8.0], &mut z);
         assert_eq!(z, vec![1.0, 1.0, 1.0]);

@@ -85,8 +85,9 @@ impl LinOp for Csc {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.spmv(x, y)
     }
-    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
-        self.spmv_t(x, y)
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<(), String> {
+        self.spmv_t(x, y);
+        Ok(())
     }
 }
 

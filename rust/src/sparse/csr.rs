@@ -202,11 +202,12 @@ impl LinOp for Csr {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.spmv(x, y)
     }
-    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
-        self.spmv_t(x, y)
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<(), String> {
+        self.spmv_t(x, y);
+        Ok(())
     }
-    fn diagonal(&self) -> Vec<f64> {
-        (0..self.nrows).map(|i| self.get(i, i).unwrap_or(0.0)).collect()
+    fn diagonal(&self) -> Option<Vec<f64>> {
+        Some((0..self.nrows).map(|i| self.get(i, i).unwrap_or(0.0)).collect())
     }
 }
 
@@ -252,7 +253,7 @@ mod tests {
         let a = example();
         assert_eq!(a.get(0, 2), Some(2.0));
         assert_eq!(a.get(0, 1), None);
-        assert_eq!(a.diagonal(), vec![1.0, 3.0, 5.0]);
+        assert_eq!(a.diagonal().unwrap(), vec![1.0, 3.0, 5.0]);
     }
 
     #[test]

@@ -400,12 +400,13 @@ impl LinOp for Csrc {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.spmv_into_zeroed(x, y)
     }
-    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<(), String> {
         y.fill(0.0);
-        self.spmv_t(x, y)
+        self.spmv_t(x, y);
+        Ok(())
     }
-    fn diagonal(&self) -> Vec<f64> {
-        self.ad.clone()
+    fn diagonal(&self) -> Option<Vec<f64>> {
+        Some(self.ad.clone())
     }
 }
 
@@ -501,7 +502,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let x: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
         let mut y = vec![0.0; 9];
-        m.apply_t(&x, &mut y);
+        m.apply_t(&x, &mut y).unwrap();
         for j in 0..9 {
             let want: f64 = (0..9).map(|i| dense[i][j] * x[i]).sum();
             assert!((y[j] - want).abs() < 1e-12);

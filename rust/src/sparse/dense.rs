@@ -57,11 +57,12 @@ impl LinOp for DenseMat {
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.spmv(x, y)
     }
-    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
-        self.spmv_t(x, y)
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<(), String> {
+        self.spmv_t(x, y);
+        Ok(())
     }
-    fn diagonal(&self) -> Vec<f64> {
-        (0..self.nrows.min(self.ncols)).map(|i| self.get(i, i)).collect()
+    fn diagonal(&self) -> Option<Vec<f64>> {
+        Some((0..self.nrows.min(self.ncols)).map(|i| self.get(i, i)).collect())
     }
 }
 

@@ -81,6 +81,10 @@ pub fn read_from<R: BufRead>(r: R) -> Result<Coo, MmioError> {
     }
     let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
     let mut coo = Coo::with_capacity(nrows, ncols, nnz * if sym == "symmetric" { 2 } else { 1 });
+    // Duplicate coordinates are rejected, not summed: a coordinate file
+    // listing (i,j) twice — or a symmetric file listing both (i,j) and
+    // (j,i) — is malformed, and silently summing would corrupt values.
+    let mut seen = std::collections::HashSet::with_capacity(nnz * 2);
     let mut count = 0usize;
     for line in lines {
         let line = line?;
@@ -107,8 +111,14 @@ pub fn read_from<R: BufRead>(r: R) -> Result<Coo, MmioError> {
         if i == 0 || j == 0 || i > nrows || j > ncols {
             return Err(perr(format!("index ({i},{j}) out of 1..{nrows}x1..{ncols}")));
         }
+        if !seen.insert((i, j)) {
+            return Err(perr(format!("duplicate entry ({i},{j})")));
+        }
         coo.push(i - 1, j - 1, v);
         if sym == "symmetric" && i != j {
+            if !seen.insert((j, i)) {
+                return Err(perr(format!("duplicate entry ({j},{i}) via symmetric mirror")));
+            }
             coo.push(j - 1, i - 1, v);
         }
         count += 1;
@@ -122,17 +132,76 @@ pub fn read_from<R: BufRead>(r: R) -> Result<Coo, MmioError> {
 
 /// Write COO as `matrix coordinate real general` (0-based → 1-based).
 pub fn write_matrix_market(path: &Path, coo: &Coo, comment: &str) -> Result<(), MmioError> {
+    write_matrix_market_with(path, coo, comment, false)
+}
+
+/// Write COO, optionally under a `symmetric` header storing only the
+/// lower triangle (the matrix must then be numerically symmetric and
+/// duplicate-free — verified before anything is written, so a failed
+/// call produces a parse error rather than a half-written file).
+pub fn write_matrix_market_with(
+    path: &Path,
+    coo: &Coo,
+    comment: &str,
+    symmetric: bool,
+) -> Result<(), MmioError> {
+    // Coordinate files cannot represent duplicate entries (the reader
+    // rejects them), so an uncompacted assembly-style COO is summed the
+    // same way the format converters sum it before anything is written.
+    let compacted;
+    let coo = if has_duplicate_coords(coo) {
+        compacted = {
+            let mut c = coo.clone();
+            c.compact();
+            c
+        };
+        &compacted
+    } else {
+        coo
+    };
+    if symmetric {
+        if coo.nrows != coo.ncols {
+            return Err(perr("symmetric output requires a square matrix"));
+        }
+        let mut map = std::collections::HashMap::with_capacity(coo.nnz());
+        for ((&i, &j), &v) in coo.rows.iter().zip(&coo.cols).zip(&coo.vals) {
+            map.insert((i, j), v);
+        }
+        for (&(i, j), &v) in &map {
+            if i != j && map.get(&(j, i)) != Some(&v) {
+                return Err(perr(format!(
+                    "matrix is not numerically symmetric at ({}, {})",
+                    i + 1,
+                    j + 1
+                )));
+            }
+        }
+    }
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
-    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    let sym_tok = if symmetric { "symmetric" } else { "general" };
+    writeln!(w, "%%MatrixMarket matrix coordinate real {sym_tok}")?;
     for line in comment.lines() {
         writeln!(w, "% {line}")?;
     }
-    writeln!(w, "{} {} {}", coo.nrows, coo.ncols, coo.nnz())?;
-    for ((&i, &j), &v) in coo.rows.iter().zip(&coo.cols).zip(&coo.vals) {
-        writeln!(w, "{} {} {:.17e}", i + 1, j + 1, v)?;
+    if symmetric {
+        let kept: Vec<usize> = (0..coo.nnz()).filter(|&k| coo.rows[k] >= coo.cols[k]).collect();
+        writeln!(w, "{} {} {}", coo.nrows, coo.ncols, kept.len())?;
+        for k in kept {
+            writeln!(w, "{} {} {:.17e}", coo.rows[k] + 1, coo.cols[k] + 1, coo.vals[k])?;
+        }
+    } else {
+        writeln!(w, "{} {} {}", coo.nrows, coo.ncols, coo.nnz())?;
+        for ((&i, &j), &v) in coo.rows.iter().zip(&coo.cols).zip(&coo.vals) {
+            writeln!(w, "{} {} {:.17e}", i + 1, j + 1, v)?;
+        }
     }
     Ok(())
+}
+
+fn has_duplicate_coords(coo: &Coo) -> bool {
+    let mut seen = std::collections::HashSet::with_capacity(coo.nnz());
+    coo.rows.iter().zip(&coo.cols).any(|(&i, &j)| !seen.insert((i, j)))
 }
 
 #[cfg(test)]
@@ -183,5 +252,102 @@ mod tests {
         assert!(read_from(std::io::Cursor::new(missing)).is_err());
         let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
         assert!(read_from(std::io::Cursor::new(oob)).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_entries() {
+        let dup = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n1 1 2.0\n";
+        let err = read_from(std::io::Cursor::new(dup)).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // A symmetric file listing both mirrors of one pair is malformed.
+        let both = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n2 1 1.0\n1 2 1.0\n";
+        let err = read_from(std::io::Cursor::new(both)).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn writer_compacts_assembly_duplicates_for_the_reader() {
+        // FEM-style COO legitimately holds duplicate coordinates until
+        // compact(); the writer must sum them so its own output stays
+        // readable under the duplicate-rejecting reader.
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.0);
+        coo.push(1, 1, 3.0);
+        let dir = std::env::temp_dir().join(format!("csrc_mmio_dup_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dup.mtx");
+        write_matrix_market(&path, &coo, "assembly duplicates").unwrap();
+        let back = read_matrix_market(&path).unwrap();
+        assert_eq!(back.nnz(), 2);
+        let t = triplets(&back);
+        assert_eq!(t[0], (0, 0, 3.0f64.to_bits()));
+        assert_eq!(t[1], (1, 1, 3.0f64.to_bits()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn symmetric_writer_requires_numeric_symmetry() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 2.0); // mirrored pattern, mismatched values
+        let dir = std::env::temp_dir().join(format!("csrc_mmio_sym_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.mtx");
+        let err = write_matrix_market_with(&path, &coo, "t", true).unwrap_err();
+        assert!(err.to_string().contains("not numerically symmetric"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Sorted structural triplets with bit-exact values — `{:.17e}`
+    /// output round-trips f64 exactly, so equality is the right check.
+    fn triplets(c: &Coo) -> Vec<(u32, u32, u64)> {
+        let mut v: Vec<(u32, u32, u64)> = c
+            .rows
+            .iter()
+            .zip(&c.cols)
+            .zip(&c.vals)
+            .map(|((&i, &j), &x)| (i, j, x.to_bits()))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn property_roundtrip_general_and_symmetric_headers() {
+        use crate::util::propcheck;
+        let dir = std::env::temp_dir().join(format!("csrc_mmio_prop_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        propcheck::check(8, |rng| {
+            let n = 5 + rng.below(40);
+            let npr = 1 + rng.below(4);
+            // Numerically symmetric matrices exercise the `symmetric`
+            // header (lower triangle only + mirror expansion on read);
+            // others the `general` header.
+            let sym = rng.below(2) == 0;
+            let coo = Coo::random_structurally_symmetric(n, npr, sym, rng);
+            let path = dir.join(format!("m_{}.mtx", rng.next_u64()));
+            write_matrix_market_with(&path, &coo, "prop roundtrip", sym)
+                .map_err(|e| e.to_string())?;
+            let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+            let want_header = if sym { "symmetric" } else { "general" };
+            if !text.lines().next().unwrap_or("").contains(want_header) {
+                return Err(format!("header must say {want_header}"));
+            }
+            let back = read_matrix_market(&path).map_err(|e| e.to_string())?;
+            if (back.nrows, back.ncols) != (coo.nrows, coo.ncols) {
+                return Err("shape changed".into());
+            }
+            if triplets(&back) != triplets(&coo) {
+                return Err(format!(
+                    "triplets changed across {} roundtrip (nnz {} -> {})",
+                    want_header,
+                    coo.nnz(),
+                    back.nnz()
+                ));
+            }
+            Ok(())
+        });
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -106,14 +106,17 @@ pub trait LinOp {
     fn dim(&self) -> usize;
     /// y = A x (y is fully overwritten).
     fn apply(&self, x: &[f64], y: &mut [f64]);
-    /// y = Aᵀ x. Default: unimplemented — CSRC overrides this for free
-    /// (swap al/au, the paper's §5 point), CSR pays for a transpose pass.
-    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+    /// y = Aᵀ x when the operator supports it. Default: `Err` — callers
+    /// (solvers, the autotuner) probe capabilities by calling, never by
+    /// catching a panic. CSRC overrides this for free (swap al/au, the
+    /// paper's §5 point); CSR pays for a transpose pass.
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<(), String> {
         let _ = (x, y);
-        unimplemented!("transpose product not supported by this operator");
+        Err("transpose product not supported by this operator".into())
     }
-    /// Diagonal extraction (for Jacobi preconditioning); default panics.
-    fn diagonal(&self) -> Vec<f64> {
-        unimplemented!("diagonal not supported by this operator");
+    /// Diagonal extraction (for Jacobi preconditioning); `None` when the
+    /// operator cannot expose one.
+    fn diagonal(&self) -> Option<Vec<f64>> {
+        None
     }
 }

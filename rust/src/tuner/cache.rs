@@ -1,0 +1,297 @@
+//! JSON-backed persistent decision cache.
+//!
+//! Keyed by (structure [`super::fingerprint`] × thread-count): a restarted
+//! service that re-registers a known matrix reads its decision back and
+//! performs **zero** new trials. The file is written through on every
+//! [`DecisionCache::put`]; a missing or corrupt file starts the cache
+//! empty rather than failing — persisted decisions are a performance
+//! artifact, not a source of truth.
+
+use super::{Decision, Features, TrialResult};
+use crate::parallel::EngineKind;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct DecisionCache {
+    path: Option<PathBuf>,
+    map: Mutex<HashMap<(u64, usize), Decision>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl DecisionCache {
+    /// Session-local cache with no backing file.
+    pub fn in_memory() -> DecisionCache {
+        DecisionCache {
+            path: None,
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Open (or create on first `put`) a persistent cache at `path`.
+    pub fn open(path: &Path) -> DecisionCache {
+        let map = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| parse_decisions(&text))
+            .unwrap_or_default();
+        DecisionCache {
+            path: Some(path.to_path_buf()),
+            map: Mutex::new(map),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get(&self, fingerprint: u64, nthreads: usize) -> Option<Decision> {
+        let got = self.peek(fingerprint, nthreads);
+        self.record(got.is_some());
+        got
+    }
+
+    /// Counter-free lookup for [`super::resolve`], which decides the
+    /// hit/miss accounting only after checking whether the entry
+    /// actually satisfies the caller's budget (an unmeasured entry a
+    /// measuring caller discards must not count as a hit).
+    pub(super) fn peek(&self, fingerprint: u64, nthreads: usize) -> Option<Decision> {
+        self.map.lock().unwrap().get(&(fingerprint, nthreads)).cloned()
+    }
+
+    pub(super) fn record(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Insert a decision and (when persistent) write the file through.
+    /// Disk errors are swallowed: the in-memory cache stays authoritative
+    /// for this process either way.
+    pub fn put(&self, d: Decision) {
+        let mut map = self.map.lock().unwrap();
+        map.insert((d.fingerprint, d.nthreads), d);
+        if let Some(path) = &self.path {
+            let _ = write_decisions(path, &map);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn features_to_json(f: &Features) -> Json {
+    obj(vec![
+        ("n", Json::Num(f.n as f64)),
+        ("work_flops", Json::Num(f.work_flops as f64)),
+        ("scatter_pairs", Json::Num(f.scatter_pairs as f64)),
+        ("scatter_ratio", Json::Num(f.scatter_ratio)),
+        ("bandwidth", Json::Num(f.bandwidth as f64)),
+        ("colors", Json::Num(f.colors as f64)),
+        ("intervals", Json::Num(f.intervals as f64)),
+        ("balance", Json::Num(f.balance)),
+        ("feat_nthreads", Json::Num(f.nthreads as f64)),
+    ])
+}
+
+fn trial_to_json(t: &TrialResult) -> Json {
+    obj(vec![
+        ("kind", Json::Str(t.kind.label())),
+        ("seconds_per_product", Json::Num(t.seconds_per_product)),
+        ("mad_s", Json::Num(t.mad_s)),
+        ("mflops", Json::Num(t.mflops)),
+    ])
+}
+
+fn decision_to_json(d: &Decision) -> Json {
+    obj(vec![
+        ("fingerprint", Json::Str(format!("{:016x}", d.fingerprint))),
+        ("nthreads", Json::Num(d.nthreads as f64)),
+        ("kind", Json::Str(d.kind.label())),
+        ("mflops", Json::Num(d.mflops)),
+        ("measured", Json::Bool(d.measured)),
+        ("tuned_s", Json::Num(d.tuned_s)),
+        ("features", features_to_json(&d.features)),
+        ("trials", Json::Arr(d.trials.iter().map(trial_to_json).collect())),
+    ])
+}
+
+fn write_decisions(path: &Path, map: &HashMap<(u64, usize), Decision>) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut entries: Vec<&Decision> = map.values().collect();
+    entries.sort_by_key(|d| (d.fingerprint, d.nthreads));
+    let root = obj(vec![
+        ("version", Json::Num(1.0)),
+        ("decisions", Json::Arr(entries.into_iter().map(decision_to_json).collect())),
+    ]);
+    // Write-to-temp + rename so a crash mid-write cannot truncate the
+    // cache (a half-written file would read back as "corrupt → empty"
+    // and silently re-tune everything on the next start).
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, root.dump())?;
+    std::fs::rename(&tmp, path)
+}
+
+fn parse_features(j: &Json) -> Option<Features> {
+    Some(Features {
+        n: j.get("n")?.as_usize()?,
+        work_flops: j.get("work_flops")?.as_usize()?,
+        scatter_pairs: j.get("scatter_pairs")?.as_usize()?,
+        scatter_ratio: j.get("scatter_ratio")?.as_f64()?,
+        bandwidth: j.get("bandwidth")?.as_usize()?,
+        colors: j.get("colors")?.as_usize()?,
+        intervals: j.get("intervals")?.as_usize()?,
+        balance: j.get("balance")?.as_f64()?,
+        nthreads: j.get("feat_nthreads")?.as_usize()?,
+    })
+}
+
+fn parse_trial(j: &Json) -> Option<TrialResult> {
+    Some(TrialResult {
+        kind: EngineKind::parse(j.get("kind")?.as_str()?)?,
+        seconds_per_product: j.get("seconds_per_product")?.as_f64()?,
+        mad_s: j.get("mad_s")?.as_f64()?,
+        mflops: j.get("mflops")?.as_f64()?,
+    })
+}
+
+fn parse_decisions(text: &str) -> Option<HashMap<(u64, usize), Decision>> {
+    let j = Json::parse(text).ok()?;
+    let mut map = HashMap::new();
+    for d in j.get("decisions")?.as_arr()? {
+        let fingerprint = u64::from_str_radix(d.get("fingerprint")?.as_str()?, 16).ok()?;
+        let nthreads = d.get("nthreads")?.as_usize()?;
+        let trials = d
+            .get("trials")?
+            .as_arr()?
+            .iter()
+            .map(parse_trial)
+            .collect::<Option<Vec<_>>>()?;
+        map.insert(
+            (fingerprint, nthreads),
+            Decision {
+                kind: EngineKind::parse(d.get("kind")?.as_str()?)?,
+                mflops: d.get("mflops")?.as_f64()?,
+                measured: d.get("measured")?.as_bool()?,
+                tuned_s: d.get("tuned_s")?.as_f64()?,
+                fingerprint,
+                nthreads,
+                features: parse_features(d.get("features")?)?,
+                trials,
+            },
+        );
+    }
+    Some(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::AccumMethod;
+
+    fn fake_decision(fp: u64, nthreads: usize) -> Decision {
+        Decision {
+            kind: EngineKind::LocalBuffers(AccumMethod::Effective),
+            mflops: 123.5,
+            measured: true,
+            tuned_s: 0.01,
+            fingerprint: fp,
+            nthreads,
+            features: Features {
+                n: 100,
+                work_flops: 900,
+                scatter_pairs: 200,
+                scatter_ratio: 0.8,
+                bandwidth: 17,
+                colors: 5,
+                intervals: 9,
+                balance: 1.06,
+                nthreads,
+            },
+            trials: vec![TrialResult {
+                kind: EngineKind::Colorful,
+                seconds_per_product: 2.5e-4,
+                mad_s: 1e-6,
+                mflops: 90.0,
+            }],
+        }
+    }
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("csrc_decision_cache_{}_{tag}", std::process::id()))
+            .join("decisions.json")
+    }
+
+    #[test]
+    fn persists_and_reloads_decisions() {
+        let path = temp_path("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let cache = DecisionCache::open(&path);
+        assert!(cache.is_empty());
+        assert!(cache.get(7, 2).is_none());
+        cache.put(fake_decision(7, 2));
+        cache.put(fake_decision(7, 4)); // same matrix, different threads
+        assert_eq!(cache.len(), 2);
+        // A fresh instance reads the same file back.
+        let back = DecisionCache::open(&path);
+        assert_eq!(back.len(), 2);
+        let d = back.get(7, 2).expect("persisted decision");
+        assert_eq!(d.kind, EngineKind::LocalBuffers(AccumMethod::Effective));
+        assert!(d.measured);
+        assert_eq!(d.features.colors, 5);
+        assert_eq!(d.trials.len(), 1);
+        assert_eq!(d.trials[0].kind, EngineKind::Colorful);
+        assert!((d.trials[0].seconds_per_product - 2.5e-4).abs() < 1e-12);
+        assert_eq!(back.hits(), 1);
+        assert_eq!(back.misses(), 0);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn corrupt_file_starts_empty() {
+        let path = temp_path("corrupt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, "{ not json").unwrap();
+        let cache = DecisionCache::open(&path);
+        assert!(cache.is_empty());
+        // And put() repairs the file.
+        cache.put(fake_decision(1, 2));
+        assert_eq!(DecisionCache::open(&path).len(), 1);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn in_memory_counts_hits_and_misses() {
+        let cache = DecisionCache::in_memory();
+        assert!(cache.get(1, 1).is_none());
+        cache.put(fake_decision(1, 1));
+        assert!(cache.get(1, 1).is_some());
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+}

@@ -1,0 +1,161 @@
+//! Structural feature extraction and fingerprinting — the analysis half
+//! of the autotuner.
+//!
+//! A [`Features`] vector captures everything the cost model looks at and
+//! everything a persisted decision records about *why* an engine won: it
+//! depends only on the matrix pattern and the plan, never on the values.
+//! [`fingerprint`] hashes the same structure into the key of the
+//! persistent [`super::DecisionCache`], so a matrix that is re-registered
+//! (or reloaded by a restarted service) maps back to its known decision.
+
+use crate::plan::SpmvPlan;
+use crate::sparse::SpmvKernel;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Structure-only description of one matrix × thread-count.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Features {
+    /// Matrix order.
+    pub n: usize,
+    /// Total row-sweep work in the kernel's flop-ish units (the Mflop/s
+    /// proxy trials are normalized by — only ratios between candidates
+    /// matter).
+    pub work_flops: usize,
+    /// Off-diagonal mirrored pairs the sweep scatters (0 for
+    /// scatter-free kernels such as CSR).
+    pub scatter_pairs: usize,
+    /// Fraction of sweep writes produced by scatters: 2k / (n + 2k).
+    pub scatter_ratio: f64,
+    /// Off-diagonal half-bandwidth of the *write* pattern: max over rows
+    /// of `i - row_write_lo(i)`.
+    pub bandwidth: usize,
+    /// Conflict colors (0 when the plan lacks the coloring piece).
+    pub colors: usize,
+    /// Interval count of the §3.1 decomposition (0 when absent).
+    pub intervals: usize,
+    /// Thread work imbalance over the plan's partition, max/avg (≥ 1 for
+    /// non-degenerate partitions).
+    pub balance: f64,
+    /// Thread count the plan (and therefore `intervals`/`balance`) was
+    /// computed for.
+    pub nthreads: usize,
+}
+
+impl Features {
+    /// Extract features from a kernel and the plan built for it. Cheap:
+    /// one O(nnz) pass plus reads of what the plan already computed.
+    pub fn extract(kernel: &dyn SpmvKernel, plan: &SpmvPlan) -> Features {
+        let n = kernel.dim();
+        let mut work_flops = 0usize;
+        let mut scatter_pairs = 0usize;
+        let mut bandwidth = 0usize;
+        for i in 0..n {
+            work_flops += kernel.row_work(i);
+            bandwidth = bandwidth.max(i - kernel.row_write_lo(i));
+            kernel.scatter_targets(i, &mut |_| scatter_pairs += 1);
+        }
+        let denom = n + 2 * scatter_pairs;
+        let scatter_ratio =
+            if denom == 0 { 0.0 } else { 2.0 * scatter_pairs as f64 / denom as f64 };
+        let p = plan.nthreads;
+        let works: Vec<f64> = (0..p)
+            .map(|t| plan.part.block(t).map(|i| kernel.row_work(i) as f64).sum())
+            .collect();
+        let max = works.iter().cloned().fold(0.0, f64::max);
+        let avg = works.iter().sum::<f64>() / p as f64;
+        Features {
+            n,
+            work_flops,
+            scatter_pairs,
+            scatter_ratio,
+            bandwidth,
+            colors: plan.colors.as_ref().map(|c| c.num_colors()).unwrap_or(0),
+            intervals: plan.ints.as_ref().map(|v| v.len()).unwrap_or(0),
+            balance: if avg > 0.0 { max / avg } else { 1.0 },
+            nthreads: p,
+        }
+    }
+}
+
+fn mix(h: &mut u64, v: u64) {
+    for b in v.to_le_bytes() {
+        *h = (*h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// FNV-1a over the matrix *structure*: format name, order, per-row work,
+/// write extents and scatter targets. Values are excluded on purpose —
+/// the §3 schedules depend only on the pattern, so two matrices with the
+/// same pattern (e.g. successive FEM assemblies on one mesh) share one
+/// tuning decision.
+pub fn fingerprint(kernel: &dyn SpmvKernel) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in kernel.kernel_name().bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    let n = kernel.dim();
+    mix(&mut h, n as u64);
+    for i in 0..n {
+        mix(&mut h, kernel.row_work(i) as u64);
+        mix(&mut h, kernel.row_write_lo(i) as u64);
+        kernel.scatter_targets(i, &mut |j| mix(&mut h, j as u64));
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::PlanBuilder;
+    use crate::sparse::{Coo, Csr, Csrc};
+    use crate::util::Rng;
+
+    fn coo(n: usize, seed: u64) -> Coo {
+        let mut rng = Rng::new(seed);
+        Coo::random_structurally_symmetric(n, 4, false, &mut rng)
+    }
+
+    #[test]
+    fn features_distinguish_scattering_from_scatter_free() {
+        let c = coo(120, 1);
+        let csrc = Csrc::from_coo(&c).unwrap();
+        let csr = Csr::from_coo(&c);
+        let plan_csrc = PlanBuilder::all(3).build(&csrc);
+        let plan_csr = PlanBuilder::all(3).build(&csr);
+        let fc = Features::extract(&csrc, &plan_csrc);
+        let fr = Features::extract(&csr, &plan_csr);
+        assert_eq!(fc.n, 120);
+        assert!(fc.scatter_pairs > 0 && fc.scatter_ratio > 0.0);
+        assert!(fc.bandwidth > 0);
+        assert!(fc.colors > 1, "CSRC sweeps conflict");
+        assert!(fc.intervals >= 1);
+        assert!(fc.balance >= 1.0 - 1e-12);
+        // CSR scatters nothing: one color, zero write bandwidth below i.
+        assert_eq!(fr.scatter_pairs, 0);
+        assert_eq!(fr.scatter_ratio, 0.0);
+        assert_eq!(fr.bandwidth, 0);
+        assert_eq!(fr.colors, 1);
+    }
+
+    #[test]
+    fn fingerprint_is_structural() {
+        let c = coo(80, 2);
+        let a = Csrc::from_coo(&c).unwrap();
+        // Same pattern, different values → same fingerprint.
+        let mut c2 = c.clone();
+        for v in &mut c2.vals {
+            *v *= 3.0;
+        }
+        let b = Csrc::from_coo(&c2).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        // Different pattern → (overwhelmingly) different fingerprint.
+        let other = Csrc::from_coo(&coo(80, 3)).unwrap();
+        assert_ne!(fingerprint(&a), fingerprint(&other));
+        // Same pattern through a different kernel format → different key
+        // (decisions are per-kernel: CSR and CSRC schedules differ).
+        let csr = Csr::from_coo(&c);
+        assert_ne!(fingerprint(&a), fingerprint(&csr));
+    }
+}

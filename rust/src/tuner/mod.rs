@@ -1,0 +1,349 @@
+//! Autotuner — measurement-driven per-matrix engine selection.
+//!
+//! The paper's headline result is that **no single strategy wins
+//! everywhere**: local buffers beat coloring for most matrices, but the
+//! best accumulation method varies with structure (§4). This subsystem
+//! makes that observation operational instead of leaving the choice to
+//! the caller:
+//!
+//! 1. [`Features::extract`] reads the structural signals the decision
+//!    depends on (order, work, scatter ratio, write bandwidth, color and
+//!    interval counts, partition balance) from a [`SpmvKernel`] and its
+//!    full [`SpmvPlan`];
+//! 2. [`tune`] runs short measured trials of every candidate engine —
+//!    the paper's median-of-runs protocol
+//!    ([`crate::metrics::median_and_spread_of_runs`]) under a
+//!    configurable [`TrialBudget`] — and emits a [`Decision`];
+//! 3. a zero budget skips the trials and falls back to [`cost_model`],
+//!    a paper-derived heuristic over the same features;
+//! 4. [`resolve`] fronts the whole thing with a persistent
+//!    [`DecisionCache`] keyed by (structure [`fingerprint`] ×
+//!    thread-count), so a restarted service never re-tunes a known
+//!    matrix.
+//!
+//! [`crate::parallel::EngineKind::Auto`] is the routing-level entry
+//! point: the coordinator resolves it here at registration time and the
+//! workers only ever see concrete engines.
+
+pub mod cache;
+pub mod features;
+
+pub use cache::DecisionCache;
+pub use features::{fingerprint, Features};
+
+use crate::metrics;
+use crate::parallel::{build_engine, AccumMethod, EngineKind};
+use crate::plan::{PlanPieces, SpmvPlan};
+use crate::sparse::SpmvKernel;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// How much measuring a tuning run may do: `runs` timed repetitions of
+/// `products` back-to-back products per candidate engine (the paper's §4
+/// protocol, scaled down). A zero budget means "no trials": the decision
+/// comes from [`cost_model`] alone.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrialBudget {
+    pub runs: usize,
+    pub products: usize,
+}
+
+impl Default for TrialBudget {
+    fn default() -> Self {
+        TrialBudget { runs: 3, products: 8 }
+    }
+}
+
+impl TrialBudget {
+    /// No measuring at all — [`tune`] answers from the cost model.
+    pub fn zero() -> TrialBudget {
+        TrialBudget { runs: 0, products: 0 }
+    }
+
+    /// Cheapest measured budget (CI smoke runs).
+    pub fn smoke() -> TrialBudget {
+        TrialBudget { runs: 1, products: 2 }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.runs == 0 || self.products == 0
+    }
+}
+
+/// One candidate's measurement.
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    pub kind: EngineKind,
+    /// Median seconds per product across the budgeted runs.
+    pub seconds_per_product: f64,
+    /// MAD across runs — how noisy the median is.
+    pub mad_s: f64,
+    /// Rate normalized by the kernel's work units ([`Features::work_flops`]).
+    pub mflops: f64,
+}
+
+/// The tuner's verdict for one matrix × thread-count.
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// The winning concrete engine (never [`EngineKind::Auto`]).
+    pub kind: EngineKind,
+    /// The winner's measured rate (0 when `measured` is false).
+    pub mflops: f64,
+    /// False when the decision came from [`cost_model`] without trials.
+    pub measured: bool,
+    /// Wall-clock seconds the tuning run itself cost.
+    pub tuned_s: f64,
+    /// Structure fingerprint — the cache key, with `nthreads`.
+    pub fingerprint: u64,
+    pub nthreads: usize,
+    pub features: Features,
+    pub trials: Vec<TrialResult>,
+}
+
+/// The candidate set for a thread count: every concrete engine that can
+/// possibly win, including the sequential baseline (small matrices do not
+/// amortize fork-join — the paper's §4.2 one-thread shortcut) and the
+/// atomics baseline the paper dismisses (measurement, not folklore,
+/// decides).
+pub fn candidates(nthreads: usize) -> Vec<EngineKind> {
+    let mut v = vec![EngineKind::Sequential];
+    if nthreads > 1 {
+        v.extend(EngineKind::all_local_buffers());
+        v.push(EngineKind::Colorful);
+        v.push(EngineKind::Atomic);
+    }
+    v
+}
+
+/// Plan pieces the tuner needs at a thread count — the union over
+/// [`candidates`]. Everything at p ≥ 2; only the base partition at
+/// p = 1, where the sole candidate is the sequential sweep and paying
+/// for conflict coloring would be pure waste.
+pub fn required_pieces(nthreads: usize) -> PlanPieces {
+    let mut need = PlanPieces::default();
+    for kind in candidates(nthreads) {
+        need = need.union(PlanPieces::for_kind(kind));
+    }
+    need
+}
+
+/// Paper-derived heuristic over structural features — the zero-budget
+/// fallback, also used by workers racing a registration-time tuning run.
+///
+/// * Small orders don't amortize fork-join: sequential (§4.2).
+/// * A scatter-free kernel (CSR-like) has block-exact effective ranges,
+///   so `local-buffers/effective` degenerates to the ideal row split.
+/// * Almost-conflict-free patterns (≤ 2 colors) suit the colorful
+///   schedule: barely any serialization between classes (§3.2).
+/// * Otherwise local buffers win "for most matrices" (§4.3); a fine
+///   interval decomposition indicates scattered write ranges where the
+///   interval accumulation amortizes best, else effective accumulation.
+pub fn cost_model(f: &Features) -> EngineKind {
+    if f.nthreads <= 1 || f.n < 2048 {
+        return EngineKind::Sequential;
+    }
+    if f.scatter_ratio == 0.0 {
+        return EngineKind::LocalBuffers(AccumMethod::Effective);
+    }
+    if f.colors <= 2 {
+        return EngineKind::Colorful;
+    }
+    if f.intervals > 4 * f.nthreads.max(1) {
+        EngineKind::LocalBuffers(AccumMethod::Interval)
+    } else {
+        EngineKind::LocalBuffers(AccumMethod::Effective)
+    }
+}
+
+/// Run the measured trials and pick a winner. `plan` must carry the
+/// pieces every candidate at its thread count borrows
+/// ([`required_pieces`]; `PlanBuilder::all` always suffices); panics
+/// otherwise (programming error, same contract as [`build_engine`]).
+pub fn tune(kernel: &Arc<dyn SpmvKernel>, plan: &Arc<SpmvPlan>, budget: &TrialBudget) -> Decision {
+    tune_with_fingerprint(kernel, plan, budget, fingerprint(kernel.as_ref()))
+}
+
+/// [`tune`] with a caller-supplied fingerprint, so [`resolve`] — which
+/// already hashed the structure for its cache lookup — does not pay the
+/// O(nnz) pass twice on a miss.
+fn tune_with_fingerprint(
+    kernel: &Arc<dyn SpmvKernel>,
+    plan: &Arc<SpmvPlan>,
+    budget: &TrialBudget,
+    fp: u64,
+) -> Decision {
+    assert!(
+        plan.pieces.covers(required_pieces(plan.nthreads)),
+        "the tuner trials every candidate engine: build the plan with \
+         PlanBuilder::all or tuner::required_pieces"
+    );
+    let t0 = Instant::now();
+    let features = Features::extract(kernel.as_ref(), plan);
+    if budget.is_zero() {
+        let kind = cost_model(&features);
+        return Decision {
+            kind,
+            mflops: 0.0,
+            measured: false,
+            tuned_s: t0.elapsed().as_secs_f64(),
+            fingerprint: fp,
+            nthreads: plan.nthreads,
+            features,
+            trials: Vec::new(),
+        };
+    }
+    let n = kernel.dim();
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+    let mut y = vec![0.0; n];
+    let work = features.work_flops;
+    let mut trials = Vec::new();
+    for kind in candidates(plan.nthreads) {
+        let mut engine = build_engine(kind, kernel.clone(), plan.clone());
+        let (per, mad) = metrics::median_and_spread_of_runs(budget.runs, budget.products, || {
+            engine.spmv(&x, &mut y)
+        });
+        trials.push(TrialResult {
+            kind,
+            seconds_per_product: per,
+            mad_s: mad,
+            mflops: metrics::mflops(work, per),
+        });
+    }
+    let best = trials
+        .iter()
+        .max_by(|a, b| a.mflops.partial_cmp(&b.mflops).expect("rates are finite"))
+        .expect("candidates is never empty");
+    Decision {
+        kind: best.kind,
+        mflops: best.mflops,
+        measured: true,
+        tuned_s: t0.elapsed().as_secs_f64(),
+        fingerprint: fp,
+        nthreads: plan.nthreads,
+        features,
+        trials,
+    }
+}
+
+/// Cache-fronted [`tune`]: returns the decision plus whether it came
+/// from the cache (`true` = zero new trials were run).
+///
+/// A cached *unmeasured* (cost-model) decision does not satisfy a caller
+/// that brought a measuring budget: it is re-tuned and the cache entry
+/// upgraded — otherwise one zero-budget call would freeze the heuristic
+/// pick forever.
+pub fn resolve(
+    kernel: &Arc<dyn SpmvKernel>,
+    plan: &Arc<SpmvPlan>,
+    budget: &TrialBudget,
+    cache: &DecisionCache,
+) -> (Decision, bool) {
+    let fp = fingerprint(kernel.as_ref());
+    if let Some(d) = cache.peek(fp, plan.nthreads) {
+        if d.measured || budget.is_zero() {
+            cache.record(true);
+            return (d, true);
+        }
+    }
+    cache.record(false);
+    let d = tune_with_fingerprint(kernel, plan, budget, fp);
+    cache.put(d.clone());
+    (d, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::PlanBuilder;
+    use crate::sparse::{Coo, Csr, Csrc};
+    use crate::util::Rng;
+
+    fn kernel_and_plan(n: usize, seed: u64, p: usize) -> (Arc<dyn SpmvKernel>, Arc<SpmvPlan>) {
+        let mut rng = Rng::new(seed);
+        let coo = Coo::random_structurally_symmetric(n, 4, false, &mut rng);
+        let kernel: Arc<dyn SpmvKernel> = Arc::new(Csrc::from_coo(&coo).unwrap());
+        let plan = Arc::new(PlanBuilder::all(p).build(kernel.as_ref()));
+        (kernel, plan)
+    }
+
+    #[test]
+    fn tune_picks_a_measured_concrete_winner() {
+        let (kernel, plan) = kernel_and_plan(150, 1, 2);
+        let d = tune(&kernel, &plan, &TrialBudget::smoke());
+        assert!(d.measured);
+        assert_ne!(d.kind, EngineKind::Auto);
+        assert_eq!(d.trials.len(), candidates(2).len());
+        assert!(d.mflops > 0.0);
+        assert!(d.tuned_s > 0.0);
+        // The winner really is the argmax of the trials.
+        let best = d.trials.iter().map(|t| t.mflops).fold(0.0, f64::max);
+        assert_eq!(d.mflops, best);
+        assert_eq!(d.nthreads, 2);
+        assert_eq!(d.fingerprint, fingerprint(kernel.as_ref()));
+    }
+
+    #[test]
+    fn zero_budget_answers_from_cost_model() {
+        let (kernel, plan) = kernel_and_plan(100, 2, 3);
+        let d = tune(&kernel, &plan, &TrialBudget::zero());
+        assert!(!d.measured);
+        assert!(d.trials.is_empty());
+        assert_ne!(d.kind, EngineKind::Auto);
+        // n=100 < the fork-join threshold → sequential.
+        assert_eq!(d.kind, EngineKind::Sequential);
+    }
+
+    #[test]
+    fn cost_model_prefers_effective_for_scatter_free() {
+        let mut rng = Rng::new(3);
+        let coo = Coo::random_structurally_symmetric(5000, 3, false, &mut rng);
+        let csr = Csr::from_coo(&coo);
+        let plan = PlanBuilder::all(4).build(&csr);
+        let f = Features::extract(&csr, &plan);
+        assert_eq!(cost_model(&f), EngineKind::LocalBuffers(AccumMethod::Effective));
+    }
+
+    #[test]
+    fn resolve_runs_once_then_hits_the_cache() {
+        let (kernel, plan) = kernel_and_plan(120, 4, 2);
+        let cache = DecisionCache::in_memory();
+        let (d1, hit1) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        assert!(!hit1);
+        let (d2, hit2) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        assert!(hit2, "second resolve of the same structure must not re-tune");
+        assert_eq!(d1.kind, d2.kind);
+        // A different thread count is a different decision.
+        let plan3 = Arc::new(PlanBuilder::all(3).build(kernel.as_ref()));
+        let (_, hit3) = resolve(&kernel, &plan3, &TrialBudget::smoke(), &cache);
+        assert!(!hit3);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn single_thread_candidates_are_sequential_only() {
+        assert_eq!(candidates(1), vec![EngineKind::Sequential]);
+        assert!(candidates(4).contains(&EngineKind::Colorful));
+        assert!(candidates(4).contains(&EngineKind::Atomic));
+        assert!(!candidates(4).contains(&EngineKind::Auto));
+        // One thread needs no analysis pieces; two need everything.
+        assert_eq!(required_pieces(1), PlanPieces::default());
+        assert_eq!(required_pieces(2), PlanPieces::all());
+    }
+
+    #[test]
+    fn measured_budget_upgrades_a_cached_cost_model_decision() {
+        let (kernel, plan) = kernel_and_plan(130, 5, 2);
+        let cache = DecisionCache::in_memory();
+        let (d0, hit0) = resolve(&kernel, &plan, &TrialBudget::zero(), &cache);
+        assert!(!hit0 && !d0.measured);
+        // Zero-budget callers keep hitting the heuristic entry...
+        let (_, hit1) = resolve(&kernel, &plan, &TrialBudget::zero(), &cache);
+        assert!(hit1);
+        // ...but a measuring budget re-tunes instead of freezing it.
+        let (d2, hit2) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        assert!(!hit2 && d2.measured);
+        // And the upgraded (measured) entry now satisfies everyone.
+        let (d3, hit3) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        assert!(hit3 && d3.measured);
+    }
+}

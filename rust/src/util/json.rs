@@ -1,6 +1,7 @@
-//! Minimal JSON reader — just enough to parse `artifacts/manifest.json`
-//! written by `python/compile/aot.py` (objects, arrays, strings, numbers,
-//! bools, null). No serde in the offline vendor tree.
+//! Minimal JSON reader/writer — enough to parse `artifacts/manifest.json`
+//! written by `python/compile/aot.py` and to persist the autotuner's
+//! decision cache (objects, arrays, strings, numbers, bools, null). No
+//! serde in the offline vendor tree.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -73,9 +74,80 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
+
+    /// Serialize to compact JSON text. Round-trips through
+    /// [`Json::parse`] for everything the model represents, except
+    /// non-finite numbers, which become `null` (JSON has no NaN/Inf).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.dump_into(&mut out);
+        out
+    }
+
+    fn dump_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if !x.is_finite() {
+                    out.push_str("null");
+                } else if *x == x.trunc() && x.abs() < 9e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x:e}"));
+                }
+            }
+            Json::Str(s) => dump_str(s, out),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.dump_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    dump_str(k, out);
+                    out.push(':');
+                    v.dump_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn dump_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -306,5 +378,25 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let text = r#"{"a": [1, -2.5, {"b": "x\ny"}], "c": null, "d": true, "e": 0.125}"#;
+        let j = Json::parse(text).unwrap();
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
+        // Integral numbers stay readable; floats use exponent form.
+        let dumped = Json::Num(42.0).dump();
+        assert_eq!(dumped, "42");
+        assert_eq!(Json::parse(&Json::Num(0.5).dump()).unwrap(), Json::Num(0.5));
+        // Non-finite numbers degrade to null rather than invalid JSON.
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+    }
+
+    #[test]
+    fn as_bool_accessor() {
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Null.as_bool(), None);
     }
 }

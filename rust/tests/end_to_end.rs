@@ -31,7 +31,7 @@ fn fem_to_solver_pipeline() {
     );
     plan.validate(kernel.as_ref()).unwrap();
     let mut engine = build_engine(EngineKind::LocalBuffers(AccumMethod::Effective), kernel, plan);
-    let jac = Jacobi::new(a.as_ref());
+    let jac = Jacobi::new(a.as_ref()).expect("CSRC exposes its diagonal");
     let op = ParallelLinOp::new(n, engine.as_mut());
     let r = solver::cg(&op, &b, Some(&jac), 1e-11, 3000);
     assert!(r.converged, "residual {}", r.residual);
@@ -137,6 +137,43 @@ fn figure_harness_writes_reports() {
 }
 
 #[test]
+fn autotuner_resolves_and_persists_across_instances() {
+    // FEM assembly → full plan → measured tuning → winning engine
+    // executes correctly → decision survives on disk, so a second cache
+    // instance (a "restarted service") resolves with zero new trials.
+    use csrc_spmv::tuner::{self, DecisionCache, TrialBudget};
+    let coo = gen::poisson_2d_quad(20, 0.2, 5);
+    let a = Arc::new(Csrc::from_coo(&coo).unwrap());
+    let n = a.n;
+    let kernel: Arc<dyn SpmvKernel> = a.clone();
+    let plan = Arc::new(PlanBuilder::all(2).build(kernel.as_ref()));
+    let dir = std::env::temp_dir().join(format!("csrc_e2e_tuner_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("decisions.json");
+    let cache = DecisionCache::open(&path);
+    let (d, hit) = tuner::resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+    assert!(!hit && d.measured);
+    assert!(!d.trials.is_empty());
+    // The winning engine really computes A·x.
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+    let mut want = vec![0.0; n];
+    a.spmv_into_zeroed(&x, &mut want);
+    let mut engine = build_engine(d.kind, kernel.clone(), plan.clone());
+    let mut y = vec![f64::NAN; n];
+    engine.spmv(&x, &mut y);
+    for (g, w) in y.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-10 * (1.0 + w.abs()));
+    }
+    // Fresh cache instance on the same file: decision comes from disk.
+    let cache2 = DecisionCache::open(&path);
+    let (d2, hit2) = tuner::resolve(&kernel, &plan, &TrialBudget::zero(), &cache2);
+    assert!(hit2, "persisted decision must be found");
+    assert_eq!(d2.kind, d.kind);
+    assert!(d2.measured, "the persisted decision keeps its measured trials");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn transpose_consistency_across_stack() {
     // CSRC free transpose == CSR transpose == dense transpose, and BiCG
     // (which uses both A and Aᵀ) converges on the same operator.
@@ -146,13 +183,13 @@ fn transpose_consistency_across_stack() {
     let csr = a.to_csr();
     let x: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
     let (mut y1, mut y2) = (vec![0.0; 60], vec![0.0; 60]);
-    a.apply_t(&x, &mut y1);
-    csr.apply_t(&x, &mut y2);
+    a.apply_t(&x, &mut y1).unwrap();
+    csr.apply_t(&x, &mut y2).unwrap();
     for (p, q) in y1.iter().zip(&y2) {
         assert!((p - q).abs() < 1e-11);
     }
     let b: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
-    let r = solver::bicg(&a, &b, 1e-9, 2000);
+    let r = solver::bicg(&a, &b, 1e-9, 2000).unwrap();
     assert!(r.converged);
 }
 

@@ -1,9 +1,13 @@
 //! Serving-style driver: the coordinator accepts a stream of matvec
 //! requests against registered matrices, batches per matrix, routes small
 //! matrices to the sequential sweep and large ones to the *autotuned*
-//! parallel engine (`EngineKind::Auto`: each registered matrix is trialed
-//! once at registration and served by its measured winner), and reports
-//! throughput + latency percentiles.
+//! parallel engine (`EngineKind::Auto` with `sweep_threads`: each
+//! registered matrix is trialed across engines × the thread ladder at
+//! registration and served by its measured winner at the winning thread
+//! count), and reports throughput + latency percentiles. Workers track
+//! each matrix's served rate; if it drifts below half the decision's
+//! recorded rate, a background re-tune upgrades the decision off the
+//! request path.
 //!
 //! Run: `cargo run --release --example matvec_service [-- requests]`
 
@@ -25,6 +29,7 @@ fn main() {
     cfg.route.min_parallel_n = 20_000; // small -> sequential, large -> tuned
     cfg.route.threads = 2;
     cfg.route.parallel_kind = EngineKind::Auto; // measured per-matrix pick
+    cfg.route.sweep_threads = true; // …including the thread count
     cfg.tune_budget = TrialBudget { runs: 1, products: 4 };
     let svc = MatvecService::start(cfg);
 
@@ -92,14 +97,17 @@ fn main() {
         s.plan_builds,
         s.plan_build_seconds * 1e3
     );
-    for (key, label) in &s.auto_choices {
-        println!("autotuned {key} -> {label}");
+    for ((key, label), (_, p)) in s.auto_choices.iter().zip(&s.chosen_threads) {
+        println!("autotuned {key} -> {label} @ {p} threads");
     }
     println!(
-        "tuning: {} measured runs, {:.1} ms total, {} decision-cache hits",
+        "tuning: {} measured runs, {:.1} ms total, {} decision-cache hits, \
+         {} drift events, {} re-tunes",
         s.tunes,
         s.tune_seconds * 1e3,
-        s.decision_hits
+        s.decision_hits,
+        s.drift_events,
+        s.retunes
     );
     svc.shutdown();
     println!("matvec_service OK");

@@ -33,6 +33,7 @@ fn main() {
         .unwrap();
     let avg = |rows: &Vec<Vec<String>>, c: usize| {
         stats::mean(&rows.iter().map(|r| r[c].parse::<f64>().unwrap()).collect::<Vec<_>>())
+            .expect("figure rows are non-empty")
     };
     println!(
         "[check] avg L2 miss%: csrc {:.2} vs csr {:.2} (paper: csrc not worse)\n",
@@ -49,7 +50,7 @@ fn main() {
     let ratios: Vec<f64> = fig5.iter().map(|r| r[3].parse().unwrap()).collect();
     println!(
         "[check] CSRC vs CSR sequential: geomean time ratio {:.3} (>1 means CSRC faster; paper: CSRC wins)\n",
-        stats::geomean(&ratios)
+        stats::geomean(&ratios).expect("figure rows are non-empty")
     );
 
     // Figs. 6/7 — colorful.

@@ -95,6 +95,28 @@ mod tests {
     }
 
     #[test]
+    fn property_batches_fifo_by_first_arrival() {
+        // Batch order follows each batch's first request: the dispatcher
+        // must never starve an early matrix behind a later one.
+        crate::util::propcheck::check(20, |rng| {
+            let names = ["a", "b", "c", "d", "e"];
+            let queue: Vec<String> =
+                (0..rng.below(60)).map(|_| names[rng.below(5)].to_string()).collect();
+            let policy = BatchPolicy { max_batch: 1 + rng.below(5), ..Default::default() };
+            let batches = form_batches(&queue, &policy);
+            for w in batches.windows(2) {
+                if w[0].requests[0] >= w[1].requests[0] {
+                    return Err(format!(
+                        "batch first-arrivals out of FIFO order: {} before {}",
+                        w[0].requests[0], w[1].requests[0]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn property_batching_invariants() {
         crate::util::propcheck::check(20, |rng| {
             let names = ["a", "b", "c", "d"];

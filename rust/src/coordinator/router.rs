@@ -24,7 +24,17 @@ pub struct RoutePolicy {
     /// Below this row count the sequential sweep wins (fork-join cost).
     pub min_parallel_n: usize,
     pub parallel_kind: EngineKind,
+    /// Thread *budget*. With a concrete `parallel_kind` this is the
+    /// thread count engines run at; with [`EngineKind::Auto`] plus
+    /// `sweep_threads` it caps the tuner's ladder and the decision picks
+    /// the actual count per matrix.
     pub threads: usize,
+    /// With `parallel_kind == Auto`: also sweep the thread-count ladder
+    /// (1, 2, 4, … up to `threads`, [`crate::tuner::thread_ladder`]) so
+    /// the decision picks `nthreads` per matrix instead of inheriting
+    /// `threads` blindly — the paper's §4 curves show several matrices
+    /// peak below the core count.
+    pub sweep_threads: bool,
     /// Prefer the XLA backend when an artifact shape fits.
     pub prefer_xla: bool,
     /// Artifact shapes available: (name, n_pad, w).
@@ -37,6 +47,7 @@ impl Default for RoutePolicy {
             min_parallel_n: 4096,
             parallel_kind: EngineKind::LocalBuffers(AccumMethod::Effective),
             threads: 4,
+            sweep_threads: false,
             prefer_xla: false,
             xla_shapes: Vec::new(),
         }

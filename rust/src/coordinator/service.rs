@@ -15,10 +15,16 @@
 //! `Arc<SpmvPlan>` that every worker and engine borrows, so a matrix
 //! registered once is analyzed once, not once per worker × engine. Plan
 //! build count and time are surfaced in [`ServiceStats`].
+//!
+//! Autotuned routing is *self-correcting*: workers fold each batch's
+//! measured rate into a per-key EWMA, and when it drifts below
+//! [`ServiceConfig::drift_fraction`] of the decision's recorded rate the
+//! key is queued to a background re-tuner thread — the decision cache
+//! entry is upgraded off the request path, never on it.
 
 use super::batcher::{form_batches, BatchPolicy};
 use super::router::{Backend, RoutePolicy, Router};
-use crate::metrics::LatencyHistogram;
+use crate::metrics::{self, LatencyHistogram};
 use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
 use crate::plan::{PlanBuilder, PlanCache};
 use crate::sparse::{Csrc, SpmvKernel};
@@ -28,6 +34,9 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Weight of the newest batch in the drift EWMA (higher = jumpier).
+const EWMA_ALPHA: f64 = 0.3;
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -46,6 +55,13 @@ pub struct ServiceConfig {
     /// Each cached engine pins a thread pool, so abandoned keys must not
     /// park pools forever.
     pub engine_cache_capacity: usize,
+    /// Queue a background re-tune when a served matrix's measured rate
+    /// (per-key EWMA over batches) drops below this fraction of its
+    /// decision's recorded rate. `0.0` disables drift detection.
+    pub drift_fraction: f64,
+    /// Batches observed for a key before drift is judged — the EWMA
+    /// needs a few samples before it means anything.
+    pub drift_min_batches: u64,
 }
 
 impl Default for ServiceConfig {
@@ -57,6 +73,8 @@ impl Default for ServiceConfig {
             tune_budget: TrialBudget::default(),
             decision_cache: None,
             engine_cache_capacity: 32,
+            drift_fraction: 0.5,
+            drift_min_batches: 8,
         }
     }
 }
@@ -73,6 +91,53 @@ struct WorkerBatch {
     requests: Vec<Request>,
 }
 
+/// What an Auto registration resolved to — everything a worker needs to
+/// build the engine and to judge rate drift.
+#[derive(Clone, Copy, Debug)]
+struct ResolvedAuto {
+    kind: EngineKind,
+    /// The decision's thread count (the swept pick, not necessarily
+    /// `RoutePolicy::threads`).
+    nthreads: usize,
+    /// The decision's recorded rate (0 when unmeasured).
+    mflops: f64,
+    /// The work units the decision's rate was normalized by
+    /// (`Features::work_flops`). The drift EWMA must use the *same*
+    /// normalization — `Csrc::flops()` counts the symmetric kernel's
+    /// flops differently, which would skew the comparison by up to 2×.
+    work_flops: usize,
+    measured: bool,
+}
+
+impl ResolvedAuto {
+    fn from_decision(d: &tuner::Decision) -> ResolvedAuto {
+        ResolvedAuto {
+            kind: d.kind,
+            nthreads: d.nthreads,
+            mflops: d.mflops,
+            work_flops: d.features.work_flops,
+            measured: d.measured,
+        }
+    }
+}
+
+/// Per-key drift tracking state (keyed by `key@generation`).
+#[derive(Clone, Copy, Debug, Default)]
+struct DriftState {
+    ewma_mflops: f64,
+    batches: u64,
+    /// A re-tune has been queued and not yet completed — don't queue
+    /// another for the same key × generation.
+    retune_pending: bool,
+}
+
+/// A drift-triggered re-tune request, handled off the request path.
+struct RetuneJob {
+    matrix: String,
+    cache_key: String,
+    generation: u64,
+}
+
 /// Shared mutable service state.
 #[derive(Default)]
 struct Stats {
@@ -85,6 +150,9 @@ struct Stats {
     tune_seconds: f64,
     engines_evicted: u64,
     auto_choices: Vec<(String, String)>,
+    chosen_threads: Vec<(String, usize)>,
+    retunes: u64,
+    drift_events: u64,
 }
 
 /// Observable service counters.
@@ -114,6 +182,14 @@ pub struct ServiceStats {
     /// (matrix key, resolved engine label) per Auto registration, in
     /// registration order.
     pub auto_choices: Vec<(String, String)>,
+    /// (matrix key, decision thread count) per Auto registration — with
+    /// `RoutePolicy::sweep_threads` this is the swept pick, which may
+    /// sit below `RoutePolicy::threads`.
+    pub chosen_threads: Vec<(String, usize)>,
+    /// Background re-tunes completed after drift detection.
+    pub retunes: u64,
+    /// Batches whose rate EWMA sat below the drift threshold.
+    pub drift_events: u64,
 }
 
 /// Registry value: the matrix plus a per-key generation counter.
@@ -132,8 +208,12 @@ pub struct MatvecService {
     route: RoutePolicy,
     tune_budget: TrialBudget,
     decisions: Arc<DecisionCache>,
-    /// `key@generation` → concrete engine resolved for an Auto route.
-    resolved: Arc<Mutex<HashMap<String, EngineKind>>>,
+    /// `key@generation` → engine + thread count resolved for an Auto route.
+    resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
+    /// `key@generation` → served-rate EWMA for drift detection.
+    drift: Arc<Mutex<HashMap<String, DriftState>>>,
+    retune_tx: Option<Sender<RetuneJob>>,
+    retuner: Option<std::thread::JoinHandle<()>>,
 }
 
 impl MatvecService {
@@ -145,9 +225,28 @@ impl MatvecService {
             Some(path) => DecisionCache::open(path),
             None => DecisionCache::in_memory(),
         });
-        let resolved: Arc<Mutex<HashMap<String, EngineKind>>> =
+        let resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>> =
             Arc::new(Mutex::new(HashMap::new()));
+        let drift: Arc<Mutex<HashMap<String, DriftState>>> = Arc::new(Mutex::new(HashMap::new()));
         let (queue_tx, queue_rx) = channel::<Request>();
+        let (retune_tx, retune_rx) = channel::<RetuneJob>();
+
+        // Background re-tuner: drains drift-triggered jobs off the
+        // request path, upgrades the decision cache in place.
+        let retuner_ctx = RetunerCtx {
+            registry: registry.clone(),
+            plans: plans.clone(),
+            route: cfg.route.clone(),
+            budget: cfg.tune_budget,
+            decisions: decisions.clone(),
+            resolved: resolved.clone(),
+            drift: drift.clone(),
+            stats: stats.clone(),
+        };
+        let retuner = std::thread::Builder::new()
+            .name("matvec-retuner".into())
+            .spawn(move || retuner_loop(retune_rx, retuner_ctx))
+            .expect("spawn retuner");
 
         // Worker channels.
         let mut worker_txs: Vec<Sender<WorkerBatch>> = Vec::new();
@@ -155,18 +254,22 @@ impl MatvecService {
         for wid in 0..cfg.workers.max(1) {
             let (tx, rx) = channel::<WorkerBatch>();
             worker_txs.push(tx);
-            let registry = registry.clone();
-            let plans = plans.clone();
-            let stats = stats.clone();
-            let route = cfg.route.clone();
-            let resolved = resolved.clone();
-            let capacity = cfg.engine_cache_capacity.max(1);
+            let ctx = WorkerCtx {
+                registry: registry.clone(),
+                plans: plans.clone(),
+                route: cfg.route.clone(),
+                stats: stats.clone(),
+                resolved: resolved.clone(),
+                drift: drift.clone(),
+                retune_tx: retune_tx.clone(),
+                engine_capacity: cfg.engine_cache_capacity.max(1),
+                drift_fraction: cfg.drift_fraction,
+                drift_min_batches: cfg.drift_min_batches,
+            };
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("matvec-worker-{wid}"))
-                    .spawn(move || {
-                        worker_loop(rx, registry, plans, route, stats, resolved, capacity)
-                    })
+                    .spawn(move || worker_loop(rx, ctx))
                     .expect("spawn worker"),
             );
         }
@@ -190,6 +293,9 @@ impl MatvecService {
             tune_budget: cfg.tune_budget,
             decisions,
             resolved,
+            drift,
+            retune_tx: Some(retune_tx),
+            retuner: Some(retuner),
         }
     }
 
@@ -223,30 +329,53 @@ impl MatvecService {
             // another live key like `key@other@0`.
             self.plans.invalidate_prefix(&prefix);
             self.resolved.lock().unwrap().retain(|k, _| !is_generation_of(k, &prefix));
+            self.drift.lock().unwrap().retain(|k, _| !is_generation_of(k, &prefix));
         }
-        // Auto routing: resolve the concrete engine now, off the request
-        // path. The decision cache is keyed by structure fingerprint ×
-        // threads, so a re-registered matrix — or one registered with a
+        // Auto routing: resolve the concrete engine — and, with
+        // `sweep_threads`, the thread count — now, off the request path.
+        // The decision cache is keyed by structure fingerprint × thread
+        // budget, so a re-registered matrix — or one registered with a
         // service restarted onto the same persisted cache — resolves
         // with zero new trials. (A request racing this resolution falls
         // back to the cost model inside the worker; it never blocks.)
         if self.route.parallel_kind == EngineKind::Auto && a.n >= self.route.min_parallel_n {
             let cache_key = format!("{key}@{generation}");
             let kernel: Arc<dyn SpmvKernel> = a.clone();
-            let threads = self.route.threads;
-            let plan = self.plans.get_or_build(
-                &cache_key,
-                kernel.as_ref(),
-                PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
-            );
-            let (d, hit) = tuner::resolve(&kernel, &plan, &self.tune_budget, &self.decisions);
-            self.resolved.lock().unwrap().insert(cache_key, d.kind);
+            let threads = self.route.threads.max(1);
+            let (d, hit) = if self.route.sweep_threads {
+                let ladder = tuner::thread_ladder(threads);
+                let mut plan_for = tuner::cached_plan_provider(&self.plans, &cache_key, &kernel);
+                let r = tuner::resolve_swept(
+                    &kernel,
+                    &ladder,
+                    &self.tune_budget,
+                    &self.decisions,
+                    &mut plan_for,
+                );
+                // Only the winning rung's analysis stays alive.
+                self.plans.invalidate_other_threads(&cache_key, r.0.nthreads);
+                r
+            } else {
+                let plan = self.plans.get_or_build(
+                    &cache_key,
+                    kernel.as_ref(),
+                    PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
+                );
+                tuner::resolve(&kernel, &plan, &self.tune_budget, &self.decisions)
+            };
+            self.resolved
+                .lock()
+                .unwrap()
+                .insert(cache_key.clone(), ResolvedAuto::from_decision(&d));
+            // Fresh drift baseline for the new decision/generation.
+            self.drift.lock().unwrap().insert(cache_key, DriftState::default());
             let mut s = self.stats.lock().unwrap();
             if !hit {
                 s.tunes += 1;
                 s.tune_seconds += d.tuned_s;
             }
             s.auto_choices.push((key.to_string(), d.kind.label()));
+            s.chosen_threads.push((key.to_string(), d.nthreads));
         }
     }
 
@@ -290,6 +419,9 @@ impl MatvecService {
             decision_hits: self.decisions.hits(),
             engines_evicted: s.engines_evicted,
             auto_choices: s.auto_choices.clone(),
+            chosen_threads: s.chosen_threads.clone(),
+            retunes: s.retunes,
+            drift_events: s.drift_events,
         }
     }
 
@@ -305,6 +437,12 @@ impl MatvecService {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // Workers (the other senders) are gone: dropping ours closes the
+        // re-tune queue, and the re-tuner drains what is pending first.
+        self.retune_tx.take();
+        if let Some(r) = self.retuner.take() {
+            let _ = r.join();
         }
     }
 }
@@ -371,28 +509,39 @@ fn dispatcher_loop(
     }
 }
 
-fn worker_loop(
-    rx: Receiver<WorkerBatch>,
+/// Everything one worker thread shares with the service.
+struct WorkerCtx {
     registry: Arc<Mutex<Registry>>,
     plans: Arc<PlanCache>,
     route: RoutePolicy,
     stats: Arc<Mutex<Stats>>,
-    resolved: Arc<Mutex<HashMap<String, EngineKind>>>,
+    resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
+    drift: Arc<Mutex<HashMap<String, DriftState>>>,
+    retune_tx: Sender<RetuneJob>,
     engine_capacity: usize,
-) {
-    let router = Router::new(route);
-    // Engine cache per (matrix, generation, backend) — engines hold
-    // execution state (pool, buffers) and are not Sync, so each worker
-    // owns its own; the *plan* inside every engine comes from the shared
-    // service cache. Structural keys so user keys containing '@' cannot
-    // alias generations. Values carry the last-served batch tick for the
-    // LRU eviction below.
-    let mut engines: HashMap<(String, u64, String), (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
+    drift_fraction: f64,
+    drift_min_batches: u64,
+}
+
+/// Worker engine-cache key: (matrix, generation, engine label, threads).
+/// The thread count is part of the key because a re-tune may move a key
+/// to a different p.
+type EngineKey = (String, u64, String, usize);
+
+fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
+    let router = Router::new(ctx.route.clone());
+    // Engine cache per [`EngineKey`] — engines hold execution state
+    // (pool, buffers) and are not Sync, so each worker owns its own; the
+    // *plan* inside every engine comes from the shared service cache.
+    // Structural keys so user keys containing '@' cannot alias
+    // generations. Values carry the last-served batch tick for the LRU
+    // eviction below.
+    let mut engines: HashMap<EngineKey, (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
     let mut serve_tick: u64 = 0;
     while let Ok(batch) = rx.recv() {
-        let hit = registry.lock().unwrap().get(&batch.matrix).cloned();
+        let hit = ctx.registry.lock().unwrap().get(&batch.matrix).cloned();
         let Some((a, generation)) = hit else {
-            let mut s = stats.lock().unwrap();
+            let mut s = ctx.stats.lock().unwrap();
             for r in batch.requests {
                 s.failed += 1;
                 let _ = r.reply.send(Err(format!("unknown matrix {:?}", batch.matrix)));
@@ -408,29 +557,41 @@ fn worker_loop(
         // its plan.
         engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
         serve_tick += 1;
-        let mut used_key: Option<(String, u64, String)> = None;
+        let mut used_key: Option<EngineKey> = None;
         // Resolve Auto once per batch (it is batch-invariant): through
-        // the registration-time tuning decision, or — for a request
-        // racing that resolution — the cost model (features only, no
-        // trials), rather than blocking or tuning on the request path.
+        // the registration-time decision — which carries the swept
+        // thread count, not `RoutePolicy::threads` blindly — or, for a
+        // request racing that resolution, the cost model (features only,
+        // no trials), rather than blocking or tuning on the request path.
+        let mut auto_decision: Option<ResolvedAuto> = None;
         let backend = match router.route(&a) {
             Backend::NativeParallel { kind: EngineKind::Auto, threads } => {
-                let known = resolved.lock().unwrap().get(&cache_key).copied();
-                let kind = known.unwrap_or_else(|| {
-                    let plan = plans.get_or_build(
-                        &cache_key,
-                        a.as_ref(),
-                        PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
-                    );
-                    tuner::cost_model(&tuner::Features::extract(a.as_ref(), &plan))
-                });
-                Backend::NativeParallel { kind, threads }
+                let known = ctx.resolved.lock().unwrap().get(&cache_key).copied();
+                match known {
+                    Some(r) => {
+                        auto_decision = Some(r);
+                        Backend::NativeParallel { kind: r.kind, threads: r.nthreads }
+                    }
+                    None => {
+                        let plan = ctx.plans.get_or_build(
+                            &cache_key,
+                            a.as_ref(),
+                            PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
+                        );
+                        let kind = tuner::cost_model(&tuner::Features::extract(a.as_ref(), &plan));
+                        Backend::NativeParallel { kind, threads }
+                    }
+                }
             }
             other => other,
         };
+        // Per-batch rate sample for drift detection: seconds spent in
+        // engine products and how many ran.
+        let mut batch_secs = 0.0f64;
+        let mut batch_products = 0usize;
         for req in batch.requests {
             if req.x.len() != a.n {
-                let mut s = stats.lock().unwrap();
+                let mut s = ctx.stats.lock().unwrap();
                 s.failed += 1;
                 let _ = req
                     .reply
@@ -441,9 +602,9 @@ fn worker_loop(
             match &backend {
                 Backend::NativeSequential => a.spmv_into_zeroed(&req.x, &mut y),
                 Backend::NativeParallel { kind, threads } => {
-                    let ekey = (batch.matrix.clone(), generation, kind.label());
+                    let ekey = (batch.matrix.clone(), generation, kind.label(), *threads);
                     let slot = engines.entry(ekey.clone()).or_insert_with(|| {
-                        let plan = plans.get_or_build(
+                        let plan = ctx.plans.get_or_build(
                             &cache_key,
                             a.as_ref(),
                             PlanBuilder::for_kind(*threads, *kind),
@@ -451,7 +612,10 @@ fn worker_loop(
                         (build_engine(*kind, a.clone(), plan), 0)
                     });
                     slot.1 = serve_tick;
+                    let t = Instant::now();
                     slot.0.spmv(&req.x, &mut y);
+                    batch_secs += t.elapsed().as_secs_f64();
+                    batch_products += 1;
                     used_key = Some(ekey);
                 }
                 Backend::Xla { artifact } => {
@@ -462,18 +626,26 @@ fn worker_loop(
                     a.spmv_into_zeroed(&req.x, &mut y);
                 }
             }
-            let mut s = stats.lock().unwrap();
+            let mut s = ctx.stats.lock().unwrap();
             s.completed += 1;
             s.latency.as_mut().unwrap().record(req.enqueued.elapsed().as_secs_f64());
             let _ = req.reply.send(Ok(std::mem::take(&mut y)));
+        }
+        if let Some(r) = auto_decision {
+            let job = RetuneJob {
+                matrix: batch.matrix.clone(),
+                cache_key: cache_key.clone(),
+                generation,
+            };
+            maybe_flag_drift(&ctx, job, r, batch_products, batch_secs);
         }
         // LRU eviction (ROADMAP item): a worker that has served many
         // distinct keys must not park one thread pool per key forever.
         // Evict the least-recently-served engines above capacity, never
         // the one this batch just used.
-        if engines.len() > engine_capacity {
+        if engines.len() > ctx.engine_capacity {
             let mut evicted = 0u64;
-            while engines.len() > engine_capacity {
+            while engines.len() > ctx.engine_capacity {
                 let victim = engines
                     .iter()
                     .filter(|&(k, _)| used_key.as_ref() != Some(k))
@@ -484,9 +656,123 @@ fn worker_loop(
                 evicted += 1;
             }
             if evicted > 0 {
-                stats.lock().unwrap().engines_evicted += evicted;
+                ctx.stats.lock().unwrap().engines_evicted += evicted;
             }
         }
+    }
+}
+
+/// Fold one batch's measured rate into the key's EWMA and queue a
+/// background re-tune — once per key × generation — when it has drifted
+/// below `drift_fraction` of the decision's recorded rate. The rate is
+/// normalized by the decision's own `work_flops`, so the EWMA and the
+/// recorded rate are in the same units. Unmeasured (cost-model)
+/// decisions record no rate and are never drift-checked.
+fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: usize, secs: f64) {
+    if products == 0
+        || secs <= 0.0
+        || ctx.drift_fraction <= 0.0
+        || !r.measured
+        || r.mflops <= 0.0
+        || r.work_flops == 0
+    {
+        return;
+    }
+    let rate = metrics::mflops(r.work_flops * products, secs);
+    let mut drift = ctx.drift.lock().unwrap();
+    let st = drift.entry(job.cache_key.clone()).or_default();
+    st.ewma_mflops = if st.batches == 0 {
+        rate
+    } else {
+        EWMA_ALPHA * rate + (1.0 - EWMA_ALPHA) * st.ewma_mflops
+    };
+    st.batches += 1;
+    if st.batches < ctx.drift_min_batches || st.ewma_mflops >= ctx.drift_fraction * r.mflops {
+        return;
+    }
+    let already_pending = st.retune_pending;
+    st.retune_pending = true;
+    drop(drift);
+    ctx.stats.lock().unwrap().drift_events += 1;
+    if !already_pending {
+        let _ = ctx.retune_tx.send(job);
+    }
+}
+
+/// Everything the background re-tuner shares with the service.
+struct RetunerCtx {
+    registry: Arc<Mutex<Registry>>,
+    plans: Arc<PlanCache>,
+    route: RoutePolicy,
+    budget: TrialBudget,
+    decisions: Arc<DecisionCache>,
+    resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
+    drift: Arc<Mutex<HashMap<String, DriftState>>>,
+    stats: Arc<Mutex<Stats>>,
+}
+
+/// Drain drift-triggered re-tune jobs: re-run the measured trials (the
+/// sweep when `route.sweep_threads`) against the *current* machine
+/// state, upgrade the decision-cache entry in place, republish the
+/// resolution for workers, and reset the key's drift baseline.
+fn retuner_loop(rx: Receiver<RetuneJob>, ctx: RetunerCtx) {
+    while let Ok(job) = rx.recv() {
+        let hit = ctx.registry.lock().unwrap().get(&job.matrix).cloned();
+        let Some((a, generation)) = hit else { continue };
+        if generation != job.generation {
+            continue; // replaced since the drift was observed
+        }
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        // A zero budget cannot produce the measured decision a drift
+        // repair needs; degrade to the cheapest measuring budget.
+        let budget = if ctx.budget.is_zero() { TrialBudget::smoke() } else { ctx.budget };
+        let threads = ctx.route.threads.max(1);
+        let d = if ctx.route.sweep_threads {
+            let ladder = tuner::thread_ladder(threads);
+            let mut plan_for = tuner::cached_plan_provider(&ctx.plans, &job.cache_key, &kernel);
+            let d = tuner::sweep(&kernel, &ladder, &budget, &mut plan_for);
+            ctx.plans.invalidate_other_threads(&job.cache_key, d.nthreads);
+            d
+        } else {
+            let plan = ctx.plans.get_or_build(
+                &job.cache_key,
+                kernel.as_ref(),
+                PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
+            );
+            tuner::tune(&kernel, &plan, &budget)
+        };
+        // The fresh measurement is keyed by structure fingerprint, so it
+        // is worth persisting even if the registration changed under us.
+        ctx.decisions.put(d.clone());
+        // Publish to the workers only if the generation is still
+        // current: register() may have replaced the matrix while we
+        // measured, and it already purged this generation's entries —
+        // re-inserting would resurrect dead keys. The registry check
+        // happens *under* the map locks, so a concurrent replacement
+        // either purges after our insert or we observe its generation
+        // bump and skip.
+        {
+            let mut resolved = ctx.resolved.lock().unwrap();
+            let mut drift = ctx.drift.lock().unwrap();
+            let current = ctx
+                .registry
+                .lock()
+                .unwrap()
+                .get(&job.matrix)
+                .map(|(_, g)| *g)
+                == Some(job.generation);
+            if !current {
+                continue;
+            }
+            resolved.insert(job.cache_key.clone(), ResolvedAuto::from_decision(&d));
+            // Fresh baseline (and `retune_pending` cleared): the next
+            // drift judgement starts from scratch against the new
+            // decision.
+            drift.insert(job.cache_key, DriftState::default());
+        }
+        let mut s = ctx.stats.lock().unwrap();
+        s.retunes += 1;
+        s.tune_seconds += d.tuned_s;
     }
 }
 
@@ -688,6 +974,167 @@ mod tests {
         assert_eq!(s2.auto_choices[0].1, *label, "persisted decision picks the same engine");
         svc2.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_threads_resolves_engine_and_thread_count() {
+        let mut cfg = ServiceConfig::default();
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1; // force the parallel (Auto) path
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        let svc = MatvecService::start(cfg);
+        let a = mat(150, 94);
+        svc.register("m", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1, "first Auto registration runs the sweep");
+        assert_eq!(s.chosen_threads.len(), 1);
+        let (key, p) = &s.chosen_threads[0];
+        assert_eq!(key, "m");
+        assert!(*p == 1 || *p == 2, "thread count must come from the ladder, got {p}");
+        // Serving works at the swept thread count.
+        let x: Vec<f64> = (0..150).map(|i| (i as f64 * 0.01).sin()).collect();
+        let y = svc.call("m", x.clone()).unwrap();
+        let mut want = vec![0.0; 150];
+        a.spmv_into_zeroed(&x, &mut want);
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        // Same structure under a new key: the swept decision is served
+        // from the cache — no second sweep, same thread pick.
+        svc.register("m2", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1, "same structure must not re-sweep");
+        assert!(s.decision_hits >= 1);
+        assert_eq!(s.chosen_threads[1].1, s.chosen_threads[0].1);
+        svc.shutdown();
+    }
+
+    /// A doctored swept decision: sequential at 1 thread (deliberately
+    /// *not* `RoutePolicy::threads`) with an impossibly high recorded
+    /// rate, so the served EWMA must sit below any drift threshold.
+    fn doctored_decision(fp: u64, mflops: f64) -> tuner::Decision {
+        tuner::Decision {
+            kind: EngineKind::Sequential,
+            mflops,
+            measured: true,
+            tuned_s: 0.001,
+            fingerprint: fp,
+            nthreads: 1,
+            max_threads: 2,
+            features: tuner::Features {
+                n: 200,
+                work_flops: 2000,
+                scatter_pairs: 300,
+                scatter_ratio: 0.75,
+                bandwidth: 20,
+                colors: 4,
+                intervals: 6,
+                balance: 1.1,
+                nthreads: 2,
+            },
+            trials: Vec::new(),
+            sweep: vec![tuner::SweepPoint { nthreads: 1, trials: Vec::new() }],
+        }
+    }
+
+    #[test]
+    fn drift_triggers_background_retune() {
+        let dir = std::env::temp_dir().join(format!("csrc_drift_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let a = mat(200, 95);
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        let fp = tuner::fingerprint(kernel.as_ref());
+        // Pre-seed the persistent cache with the doctored decision under
+        // this service's (fingerprint × thread budget) key.
+        {
+            let cache = DecisionCache::open(&path);
+            cache.put(doctored_decision(fp, 1e9));
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.5;
+        cfg.drift_min_batches = 2;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 0, "the doctored decision must be a cache hit");
+        assert_eq!(
+            s.chosen_threads,
+            vec![("m".to_string(), 1)],
+            "the service must consume the swept thread count, not RoutePolicy::threads"
+        );
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 200];
+        a.spmv_into_zeroed(&x, &mut want);
+        // Serve batches until the background re-tune lands. Drift is
+        // certain — no real engine reaches 1e9 "Mflop/s" — so this loop
+        // only bounds how long we wait for the background thread.
+        let mut retuned = false;
+        for _ in 0..400 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+            if svc.stats().retunes >= 1 {
+                retuned = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let s = svc.stats();
+        assert!(retuned, "drift must queue a background re-tune (drift_events={})", s.drift_events);
+        assert!(s.drift_events >= 1);
+        // Serving still works against the upgraded decision.
+        let y = svc.call("m", x.clone()).unwrap();
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
+        // The re-tune upgraded the persisted entry in place: realistic
+        // measured rate, fresh sweep surface, same (fp × budget) key.
+        let back = DecisionCache::open(&path);
+        let d = back.get(fp, 2).expect("upgraded decision persisted");
+        assert!(d.measured && !d.sweep.is_empty());
+        assert!(d.mflops < 1e8, "recorded rate must be re-measured, got {}", d.mflops);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn partial_batch_flushes_at_the_deadline() {
+        // BatchPolicy::max_wait is a *release* deadline: one lone
+        // request (far below max_batch) must still be served once the
+        // batching window closes — not held until the batch fills.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.batch = BatchPolicy {
+            max_batch: 64,
+            max_wait: std::time::Duration::from_millis(40),
+        };
+        let svc = MatvecService::start(cfg);
+        let a = mat(40, 96);
+        svc.register("a", a.clone());
+        let x = vec![1.0; 40];
+        let t0 = Instant::now();
+        let rx = svc.submit("a", x.clone());
+        let y = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("partial batch must be released at the deadline, not held for max_batch")
+            .unwrap();
+        let waited = t0.elapsed();
+        let mut want = vec![0.0; 40];
+        a.spmv_into_zeroed(&x, &mut want);
+        crate::util::propcheck::assert_close(&y, &want, 1e-12, 1e-12).unwrap();
+        assert!(
+            waited >= std::time::Duration::from_millis(25),
+            "the dispatcher should wait out most of max_wait before releasing, waited {waited:?}"
+        );
+        let s = svc.stats();
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.batches, 1, "one partial batch, released by the deadline");
+        svc.shutdown();
     }
 
     #[test]

@@ -14,7 +14,7 @@ use super::dataset::DatasetEntry;
 use crate::graph::{greedy_coloring, ConflictGraph, Ordering as ColorOrdering};
 use crate::metrics;
 use crate::parallel::{build_engine, AccumMethod, EngineKind};
-use crate::plan::PlanBuilder;
+use crate::plan::{PlanBuilder, PlanCache};
 use crate::simulator::{
     sim_colorful, sim_csr_sequential, sim_csrc_sequential, sim_local_buffers, MachineConfig,
     MachineSim,
@@ -385,6 +385,55 @@ pub fn tune_headers() -> Vec<String> {
         .collect()
 }
 
+// ----------------------------------------------------------- Sweep table
+
+/// Beyond the paper's fixed-p tables: its §4 scalability observation —
+/// the best thread count varies per matrix, several peak *below* the
+/// core count — as a rate-vs-p surface (the Fig. 5/6 shape with p on the
+/// x axis). One column per ladder rung (the best engine's Mflop/s at
+/// that p), then the swept (engine × p) winner.
+pub fn sweep_table(
+    entries: &[DatasetEntry],
+    max_threads: usize,
+    budget: &TrialBudget,
+) -> Vec<Vec<String>> {
+    let ladder = tuner::thread_ladder(max_threads);
+    entries
+        .iter()
+        .map(|e| {
+            let m = Arc::new(e.build_csrc());
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let plans = PlanCache::new();
+            let mut plan_for = tuner::cached_plan_provider(&plans, e.name, &kernel);
+            let d = tuner::sweep(&kernel, &ladder, budget, &mut plan_for);
+            let mut cells = vec![e.name.to_string()];
+            for p in &ladder {
+                let best = d
+                    .sweep
+                    .iter()
+                    .find(|pt| pt.nthreads == *p)
+                    .and_then(|pt| pt.best())
+                    .map(|t| format!("{:.1}", t.mflops))
+                    .unwrap_or_else(|| "-".into());
+                cells.push(best);
+            }
+            cells.push(format!("{}@{}t", d.kind.label(), d.nthreads));
+            cells.push(format!("{:.1}", d.mflops));
+            cells
+        })
+        .collect()
+}
+
+pub fn sweep_headers(max_threads: usize) -> Vec<String> {
+    let mut h = vec!["matrix".to_string()];
+    for p in tuner::thread_ladder(max_threads) {
+        h.push(format!("best Mflop/s @{p}t"));
+    }
+    h.push("winner".into());
+    h.push("winner Mflop/s".into());
+    h
+}
+
 pub fn table2_headers() -> Vec<String> {
     let mut h = vec!["method".to_string()];
     for (machine, threads) in [("wolfdale", vec![2]), ("bloomfield", vec![2, 4])] {
@@ -450,6 +499,24 @@ mod tests {
         assert_eq!(rows[0].len(), plan_overview_headers().len());
         for r in &rows {
             assert_eq!(r.last().unwrap(), "yes", "{r:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_table_reports_each_ladder_rung() {
+        let rows = sweep_table(&smoke_suite()[..2], 2, &TrialBudget::smoke());
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), sweep_headers(2).len());
+        for r in &rows {
+            // Ladder [1, 2]: both rungs measured.
+            assert_ne!(r[1], "-", "{r:?}");
+            assert_ne!(r[2], "-", "{r:?}");
+            let winner = &r[r.len() - 2];
+            assert!(
+                winner.ends_with("@1t") || winner.ends_with("@2t"),
+                "winner must name its thread count: {winner}"
+            );
+            assert_ne!(r.last().unwrap().as_str(), "-", "{r:?}");
         }
     }
 

@@ -16,7 +16,7 @@ use csrc_spmv::gen;
 use csrc_spmv::harness::{self, figures, Report};
 use csrc_spmv::metrics;
 use csrc_spmv::parallel::{build_engine, EngineKind};
-use csrc_spmv::plan::PlanBuilder;
+use csrc_spmv::plan::{PlanBuilder, PlanCache};
 use csrc_spmv::runtime::XlaRuntime;
 use csrc_spmv::simulator::MachineConfig;
 use csrc_spmv::solver;
@@ -66,11 +66,12 @@ fn usage_and_exit() -> ! {
          csrc spmv    --matrix <..> --engine <seq|all-in-one|per-buffer|effective|interval|colorful|atomic>\n\
                       --threads P --products K\n\
          csrc tune    --matrix <..> [--threads P] [--runs R] [--products K]\n\
-                      [--cache decisions.json]\n\
+                      [--cache decisions.json] [--sweep-threads] [--report sweep.json]\n\
          csrc solve   --matrix <..> --solver <cg|gmres|bicg> [--tol 1e-10]\n\
          csrc serve   [--requests N] [--workers W] [--engine auto] [--min-parallel-n N]\n\
+                      [--sweep-threads]\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|all>\n\
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|all>\n\
                       [--suite smoke|quick|full] [--out results]"
     );
     std::process::exit(2);
@@ -184,9 +185,12 @@ fn cmd_spmv(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Autotune: trial every candidate engine on a matrix, print the table
-/// and the winner; `--cache` persists the decision so a later `tune` (or
-/// a service pointed at the same file) performs zero new trials.
+/// Autotune: trial every candidate engine on a matrix — with
+/// `--sweep-threads`, at every thread count of the 1,2,4,… ladder up to
+/// `--threads` — print the trial table(s) and the winner; `--cache`
+/// persists the decision so a later `tune` (or a service pointed at the
+/// same file) performs zero new trials; `--report` writes the decision
+/// (including the sweep surface) as JSON.
 fn cmd_tune(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
     let threads = args.usize_or("threads", 4);
@@ -197,12 +201,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let flops = m.flops();
     let a = Arc::new(m);
     let kernel: Arc<dyn SpmvKernel> = a.clone();
-    let plan = Arc::new(PlanBuilder::all(threads).build(kernel.as_ref()));
     let cache = match args.opt("cache") {
         Some(p) => tuner::DecisionCache::open(Path::new(p)),
         None => tuner::DecisionCache::in_memory(),
     };
-    let (d, hit) = tuner::resolve(&kernel, &plan, &budget, &cache);
+    let (d, hit) = if args.has_flag("sweep-threads") {
+        let ladder = tuner::thread_ladder(threads);
+        let plans = PlanCache::new();
+        let mut plan_for = tuner::cached_plan_provider(&plans, &name, &kernel);
+        tuner::resolve_swept(&kernel, &ladder, &budget, &cache, &mut plan_for)
+    } else {
+        let plan = Arc::new(PlanBuilder::all(threads).build(kernel.as_ref()));
+        tuner::resolve(&kernel, &plan, &budget, &cache)
+    };
     println!(
         "{name}: n={} colors={} intervals={} bandwidth={} scatter-ratio={:.3} balance={:.3}",
         d.features.n,
@@ -212,18 +223,31 @@ fn cmd_tune(args: &Args) -> Result<()> {
         d.features.scatter_ratio,
         d.features.balance
     );
-    for t in &d.trials {
+    let print_trial = |indent: &str, t: &tuner::TrialResult| {
         println!(
-            "  {:<28} {:>10.3} ms/product  {:>9.1} Mflop/s",
+            "{indent}{:<28} {:>10.3} ms/product  {:>9.1} Mflop/s",
             t.kind.label(),
             t.seconds_per_product * 1e3,
             metrics::mflops(flops, t.seconds_per_product)
         );
+    };
+    if d.sweep.is_empty() {
+        for t in &d.trials {
+            print_trial("  ", t);
+        }
+    } else {
+        for pt in &d.sweep {
+            println!("  p = {}:", pt.nthreads);
+            for t in &pt.trials {
+                print_trial("    ", t);
+            }
+        }
     }
     let win = d.trials.iter().find(|t| t.kind == d.kind);
     println!(
-        "winner: {} at {threads} threads ({}; tuned in {:.1} ms{})",
+        "winner: {} at {} threads ({}; tuned in {:.1} ms{})",
         d.kind.label(),
+        d.nthreads,
         match win {
             Some(w) => format!("{:.1} Mflop/s", metrics::mflops(flops, w.seconds_per_product)),
             None => "cost model, no trials".to_string(),
@@ -231,6 +255,16 @@ fn cmd_tune(args: &Args) -> Result<()> {
         d.tuned_s * 1e3,
         if hit { "; from decision cache, zero new trials" } else { "" }
     );
+    if let Some(report) = args.opt("report") {
+        let path = Path::new(report);
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, tuner::decision_json(&d).dump())?;
+        println!("wrote decision report to {report}");
+    }
     Ok(())
 }
 
@@ -277,6 +311,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.route.parallel_kind = EngineKind::parse(k).ok_or_else(|| msg("bad --engine"))?;
     }
     cfg.route.min_parallel_n = args.usize_or("min-parallel-n", cfg.route.min_parallel_n);
+    // `--sweep-threads` lets Auto pick the thread count per matrix, too.
+    cfg.route.sweep_threads = args.has_flag("sweep-threads");
     let svc = MatvecService::start(cfg);
     // Register a few dataset matrices once, remembering their sizes.
     let names = ["thermal", "torsion1", "poisson3Da"];
@@ -317,13 +353,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if !s.auto_choices.is_empty() {
         println!(
-            "autotuned {} matrices in {:.1} ms ({} cache hits):",
+            "autotuned {} matrices in {:.1} ms ({} cache hits, {} drift events, {} re-tunes):",
             s.tunes,
             s.tune_seconds * 1e3,
-            s.decision_hits
+            s.decision_hits,
+            s.drift_events,
+            s.retunes
         );
-        for (key, label) in &s.auto_choices {
-            println!("  {key} -> {label}");
+        for ((key, label), (_, p)) in s.auto_choices.iter().zip(&s.chosen_threads) {
+            println!("  {key} -> {label} @ {p} threads");
         }
     }
     svc.shutdown();
@@ -472,21 +510,33 @@ fn cmd_figures(args: &Args) -> Result<()> {
             &figures::plan_overview(&suite, 4),
         )?;
     }
+    // Trial budget for the tuner-backed tables (`tune`, `sweep`), scaled
+    // with the suite so `--suite smoke` stays CI-cheap while `full` gets
+    // stable medians.
+    let trial_budget = match args.opt_or("suite", "quick") {
+        "smoke" => tuner::TrialBudget::smoke(),
+        "full" => tuner::TrialBudget::default(),
+        _ => tuner::TrialBudget { runs: 2, products: 4 },
+    };
     if run_all || what == "tune" {
-        // Trial budget scales with the suite so `figures tune --suite
-        // smoke` stays CI-cheap while `full` gets stable medians.
-        let budget = match args.opt_or("suite", "quick") {
-            "smoke" => tuner::TrialBudget::smoke(),
-            "full" => tuner::TrialBudget::default(),
-            _ => tuner::TrialBudget { runs: 2, products: 4 },
-        };
         let headers = figures::tune_headers();
         let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         report.table(
             "tune",
             "Autotuner — measured per-matrix winner vs the fixed default (4 threads)",
             &h,
-            &figures::tune_table(&suite, args.usize_or("threads", 4), &budget),
+            &figures::tune_table(&suite, args.usize_or("threads", 4), &trial_budget),
+        )?;
+    }
+    if run_all || what == "sweep" {
+        let p = args.usize_or("threads", 4);
+        let headers = figures::sweep_headers(p);
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "sweep",
+            "Thread sweep — best rate per thread count and the swept (engine × p) winner",
+            &h,
+            &figures::sweep_table(&suite, p, &trial_budget),
         )?;
     }
     println!("wrote results under {out}/");

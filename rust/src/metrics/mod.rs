@@ -23,17 +23,27 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
 
 /// The paper's protocol: run `products` SpMVs per measurement, repeat
 /// `runs` times, report the median (§4: 1000 products, median of 3).
+/// See [`median_and_spread_of_runs`] for the zero-runs contract.
 pub fn median_of_runs<F: FnMut()>(runs: usize, products: usize, one_product: F) -> f64 {
     median_and_spread_of_runs(runs, products, one_product).0
 }
 
 /// [`median_of_runs`] plus the MAD across runs — the tuner's trial
 /// protocol records both so that noisy wins stay visible in reports.
+///
+/// An empty budget (`runs == 0` or `products == 0`) measures nothing and
+/// returns `(+∞, 0.0)` — "infinitely slow, perfectly certain" — instead
+/// of panicking inside [`stats::median`]'s non-empty contract. The +∞
+/// turns into a 0 Mflop/s rate through [`mflops`], so an unmeasured
+/// candidate can never be declared a winner by accident.
 pub fn median_and_spread_of_runs<F: FnMut()>(
     runs: usize,
     products: usize,
     mut one_product: F,
 ) -> (f64, f64) {
+    if runs == 0 || products == 0 {
+        return (f64::INFINITY, 0.0);
+    }
     let mut samples = Vec::with_capacity(runs);
     for _ in 0..runs {
         let t = Instant::now();
@@ -42,7 +52,10 @@ pub fn median_and_spread_of_runs<F: FnMut()>(
         }
         samples.push(t.elapsed().as_secs_f64() / products as f64);
     }
-    (stats::median(&samples), stats::mad(&samples))
+    (
+        stats::median(&samples).expect("runs > 0 was checked above"),
+        stats::mad(&samples).expect("runs > 0 was checked above"),
+    )
 }
 
 /// Fixed-bucket latency histogram (power-of-two microsecond buckets).
@@ -66,6 +79,10 @@ impl LatencyHistogram {
         Self { counts: vec![0; 32], total: 0, sum_us: 0.0, max_us: 0.0 }
     }
 
+    /// Record one latency. Sub-microsecond latencies are clamped into
+    /// the first bucket `[1, 2)µs` — `us.max(1.0)` keeps the `log2`
+    /// defined — so no quantile can ever report below 2µs; `mean_us` and
+    /// `max_us` keep the exact value.
     pub fn record(&mut self, seconds: f64) {
         let us = seconds * 1e6;
         let bucket = (us.max(1.0).log2() as usize).min(self.counts.len() - 1);
@@ -92,11 +109,16 @@ impl LatencyHistogram {
     }
 
     /// Upper bound of the bucket containing quantile q (approximate).
+    /// `q` is clamped into [0, 1], and the rank is clamped to at least
+    /// one sample: `q = 0` therefore reports the smallest *recorded*
+    /// bucket — with a plain `acc >= want` and `want = 0`, the first
+    /// (possibly empty) bucket would satisfy the scan and the answer
+    /// would be 2µs regardless of the data.
     pub fn quantile_us(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
         }
-        let want = (q * self.total as f64).ceil() as u64;
+        let want = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
         let mut acc = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
@@ -154,5 +176,33 @@ mod tests {
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
         assert!(h.mean_us() > 0.0);
         assert!(h.max_us() >= 999.0);
+    }
+
+    #[test]
+    fn quantile_zero_reports_the_smallest_recorded_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(100e-6); // bucket [64, 128)µs
+        h.record(200e-6); // bucket [128, 256)µs
+        assert_eq!(
+            h.quantile_us(0.0),
+            128.0,
+            "q=0 must skip empty leading buckets, not report their 2µs bound"
+        );
+        // Out-of-range q is clamped, not undefined.
+        assert_eq!(h.quantile_us(-3.0), 128.0);
+        assert_eq!(h.quantile_us(7.0), h.quantile_us(1.0));
+        assert!(h.quantile_us(1.0) >= h.quantile_us(0.0));
+        // Empty histogram still answers 0 for any q.
+        assert_eq!(LatencyHistogram::new().quantile_us(0.0), 0.0);
+    }
+
+    #[test]
+    fn empty_budgets_measure_as_infinitely_slow() {
+        let (per, mad) = median_and_spread_of_runs(0, 5, || {});
+        assert!(per.is_infinite() && mad == 0.0);
+        let (per, _) = median_and_spread_of_runs(3, 0, || {});
+        assert!(per.is_infinite());
+        // The defined value flows into a 0 rate, never a winning one.
+        assert_eq!(mflops(1_000_000, per), 0.0);
     }
 }

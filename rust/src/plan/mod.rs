@@ -411,6 +411,17 @@ impl PlanCache {
         self.map.lock().unwrap().retain(|k, _| !k.starts_with(prefix));
     }
 
+    /// Drop every plan cached for `key` at a thread count other than
+    /// `keep`. A thread-count sweep ([`crate::tuner::sweep`]) builds one
+    /// plan per ladder rung; once the winning p is known the other
+    /// rungs' analyses are dead weight — engines already holding an
+    /// `Arc` to a dropped plan are unaffected.
+    pub fn invalidate_other_threads(&self, key: &str, keep: usize) {
+        let keep_key = format!("{key}#p{keep}");
+        let prefix = format!("{key}#p");
+        self.map.lock().unwrap().retain(|k, _| !k.starts_with(&prefix) || *k == keep_key);
+    }
+
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
@@ -544,6 +555,24 @@ mod tests {
         cache.get_or_build("k@1", &a, PlanBuilder::for_kind(2, EngineKind::Atomic));
         cache.invalidate_prefix("k@");
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn invalidate_other_threads_keeps_the_winner() {
+        let a = mat(80, 3, 6);
+        let cache = PlanCache::new();
+        for p in [1usize, 2, 4] {
+            cache.get_or_build("m@0", &a, PlanBuilder::new(p));
+        }
+        cache.get_or_build("other", &a, PlanBuilder::new(4));
+        assert_eq!(cache.len(), 4);
+        cache.invalidate_other_threads("m@0", 2);
+        assert_eq!(cache.len(), 2, "only the winning rung and unrelated keys survive");
+        // The kept plan is still served from cache, losers rebuild.
+        cache.get_or_build("m@0", &a, PlanBuilder::new(2));
+        assert_eq!(cache.builds(), 4);
+        cache.get_or_build("m@0", &a, PlanBuilder::new(4));
+        assert_eq!(cache.builds(), 5);
     }
 
     #[test]

@@ -1,13 +1,22 @@
 //! JSON-backed persistent decision cache.
 //!
-//! Keyed by (structure [`super::fingerprint`] × thread-count): a restarted
-//! service that re-registers a known matrix reads its decision back and
-//! performs **zero** new trials. The file is written through on every
-//! [`DecisionCache::put`]; a missing or corrupt file starts the cache
-//! empty rather than failing — persisted decisions are a performance
-//! artifact, not a source of truth.
+//! Keyed by (structure [`super::fingerprint`] × thread *budget*
+//! [`Decision::max_threads`]): a restarted service that re-registers a
+//! known matrix reads its decision back and performs **zero** new
+//! trials. The file is written through on every [`DecisionCache::put`];
+//! a missing or corrupt file starts the cache empty rather than failing
+//! — persisted decisions are a performance artifact, not a source of
+//! truth.
+//!
+//! **Schema v2** (current): entries carry `max_threads` (the cache key's
+//! second half) and the full `sweep` surface of [`super::SweepPoint`]s.
+//! v1 files — written before the thread sweep existed — load without
+//! error as single-p decisions: `max_threads` defaults to the entry's
+//! `nthreads` and the sweep surface is empty, which is exactly what
+//! [`super::resolve_swept`] treats as "upgrade me when a sweeping caller
+//! brings a measuring budget".
 
-use super::{Decision, Features, TrialResult};
+use super::{Decision, Features, SweepPoint, TrialResult};
 use crate::parallel::EngineKind;
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
@@ -47,8 +56,12 @@ impl DecisionCache {
         }
     }
 
-    pub fn get(&self, fingerprint: u64, nthreads: usize) -> Option<Decision> {
-        let got = self.peek(fingerprint, nthreads);
+    /// Look up by (fingerprint × thread budget). The second component is
+    /// [`Decision::max_threads`] — for single-p decisions that equals
+    /// the decision's `nthreads`; a swept decision is filed under the
+    /// ladder's max even when its winning `nthreads` is smaller.
+    pub fn get(&self, fingerprint: u64, max_threads: usize) -> Option<Decision> {
+        let got = self.peek(fingerprint, max_threads);
         self.record(got.is_some());
         got
     }
@@ -57,8 +70,8 @@ impl DecisionCache {
     /// hit/miss accounting only after checking whether the entry
     /// actually satisfies the caller's budget (an unmeasured entry a
     /// measuring caller discards must not count as a hit).
-    pub(super) fn peek(&self, fingerprint: u64, nthreads: usize) -> Option<Decision> {
-        self.map.lock().unwrap().get(&(fingerprint, nthreads)).cloned()
+    pub(super) fn peek(&self, fingerprint: u64, max_threads: usize) -> Option<Decision> {
+        self.map.lock().unwrap().get(&(fingerprint, max_threads)).cloned()
     }
 
     pub(super) fn record(&self, hit: bool) {
@@ -74,7 +87,7 @@ impl DecisionCache {
     /// for this process either way.
     pub fn put(&self, d: Decision) {
         let mut map = self.map.lock().unwrap();
-        map.insert((d.fingerprint, d.nthreads), d);
+        map.insert((d.fingerprint, d.max_threads), d);
         if let Some(path) = &self.path {
             let _ = write_decisions(path, &map);
         }
@@ -124,17 +137,32 @@ fn trial_to_json(t: &TrialResult) -> Json {
     ])
 }
 
+fn sweep_point_to_json(pt: &SweepPoint) -> Json {
+    obj(vec![
+        ("nthreads", Json::Num(pt.nthreads as f64)),
+        ("trials", Json::Arr(pt.trials.iter().map(trial_to_json).collect())),
+    ])
+}
+
 fn decision_to_json(d: &Decision) -> Json {
     obj(vec![
         ("fingerprint", Json::Str(format!("{:016x}", d.fingerprint))),
         ("nthreads", Json::Num(d.nthreads as f64)),
+        ("max_threads", Json::Num(d.max_threads as f64)),
         ("kind", Json::Str(d.kind.label())),
         ("mflops", Json::Num(d.mflops)),
         ("measured", Json::Bool(d.measured)),
         ("tuned_s", Json::Num(d.tuned_s)),
         ("features", features_to_json(&d.features)),
         ("trials", Json::Arr(d.trials.iter().map(trial_to_json).collect())),
+        ("sweep", Json::Arr(d.sweep.iter().map(sweep_point_to_json).collect())),
     ])
+}
+
+/// JSON form of one decision — the persisted v2 schema's entry shape,
+/// exposed for CLI sweep reports (`csrc tune --report`).
+pub fn decision_json(d: &Decision) -> Json {
+    decision_to_json(d)
 }
 
 fn write_decisions(path: &Path, map: &HashMap<(u64, usize), Decision>) -> std::io::Result<()> {
@@ -144,9 +172,9 @@ fn write_decisions(path: &Path, map: &HashMap<(u64, usize), Decision>) -> std::i
         }
     }
     let mut entries: Vec<&Decision> = map.values().collect();
-    entries.sort_by_key(|d| (d.fingerprint, d.nthreads));
+    entries.sort_by_key(|d| (d.fingerprint, d.max_threads));
     let root = obj(vec![
-        ("version", Json::Num(1.0)),
+        ("version", Json::Num(2.0)),
         ("decisions", Json::Arr(entries.into_iter().map(decision_to_json).collect())),
     ]);
     // Write-to-temp + rename so a crash mid-write cannot truncate the
@@ -180,12 +208,26 @@ fn parse_trial(j: &Json) -> Option<TrialResult> {
     })
 }
 
+fn parse_sweep_point(j: &Json) -> Option<SweepPoint> {
+    Some(SweepPoint {
+        nthreads: j.get("nthreads")?.as_usize()?,
+        trials: j.get("trials")?.as_arr()?.iter().map(parse_trial).collect::<Option<Vec<_>>>()?,
+    })
+}
+
 fn parse_decisions(text: &str) -> Option<HashMap<(u64, usize), Decision>> {
     let j = Json::parse(text).ok()?;
     let mut map = HashMap::new();
     for d in j.get("decisions")?.as_arr()? {
         let fingerprint = u64::from_str_radix(d.get("fingerprint")?.as_str()?, 16).ok()?;
         let nthreads = d.get("nthreads")?.as_usize()?;
+        // v1 entries (no `max_threads`, no `sweep`) load as single-p
+        // decisions — backward compatibility is part of the v2 schema.
+        let max_threads = d.get("max_threads").and_then(Json::as_usize).unwrap_or(nthreads);
+        let sweep = match d.get("sweep") {
+            Some(s) => s.as_arr()?.iter().map(parse_sweep_point).collect::<Option<Vec<_>>>()?,
+            None => Vec::new(),
+        };
         let trials = d
             .get("trials")?
             .as_arr()?
@@ -193,7 +235,7 @@ fn parse_decisions(text: &str) -> Option<HashMap<(u64, usize), Decision>> {
             .map(parse_trial)
             .collect::<Option<Vec<_>>>()?;
         map.insert(
-            (fingerprint, nthreads),
+            (fingerprint, max_threads),
             Decision {
                 kind: EngineKind::parse(d.get("kind")?.as_str()?)?,
                 mflops: d.get("mflops")?.as_f64()?,
@@ -201,8 +243,10 @@ fn parse_decisions(text: &str) -> Option<HashMap<(u64, usize), Decision>> {
                 tuned_s: d.get("tuned_s")?.as_f64()?,
                 fingerprint,
                 nthreads,
+                max_threads,
                 features: parse_features(d.get("features")?)?,
                 trials,
+                sweep,
             },
         );
     }
@@ -215,6 +259,12 @@ mod tests {
     use crate::parallel::AccumMethod;
 
     fn fake_decision(fp: u64, nthreads: usize) -> Decision {
+        let trials = vec![TrialResult {
+            kind: EngineKind::Colorful,
+            seconds_per_product: 2.5e-4,
+            mad_s: 1e-6,
+            mflops: 90.0,
+        }];
         Decision {
             kind: EngineKind::LocalBuffers(AccumMethod::Effective),
             mflops: 123.5,
@@ -222,6 +272,7 @@ mod tests {
             tuned_s: 0.01,
             fingerprint: fp,
             nthreads,
+            max_threads: nthreads,
             features: Features {
                 n: 100,
                 work_flops: 900,
@@ -233,12 +284,11 @@ mod tests {
                 balance: 1.06,
                 nthreads,
             },
-            trials: vec![TrialResult {
-                kind: EngineKind::Colorful,
-                seconds_per_product: 2.5e-4,
-                mad_s: 1e-6,
-                mflops: 90.0,
-            }],
+            trials: trials.clone(),
+            sweep: vec![
+                SweepPoint { nthreads: 1, trials: Vec::new() },
+                SweepPoint { nthreads, trials },
+            ],
         }
     }
 
@@ -268,8 +318,62 @@ mod tests {
         assert_eq!(d.trials.len(), 1);
         assert_eq!(d.trials[0].kind, EngineKind::Colorful);
         assert!((d.trials[0].seconds_per_product - 2.5e-4).abs() < 1e-12);
+        // The v2 surface round-trips: key threads and the sweep rungs.
+        assert_eq!(d.max_threads, 2);
+        assert_eq!(d.sweep.len(), 2);
+        assert_eq!(d.sweep[0].nthreads, 1);
+        assert!(d.sweep[0].trials.is_empty());
+        assert_eq!(d.sweep[1].nthreads, 2);
+        assert_eq!(d.sweep[1].trials[0].kind, EngineKind::Colorful);
         assert_eq!(back.hits(), 1);
         assert_eq!(back.misses(), 0);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn v1_files_load_as_single_p_decisions() {
+        // A hand-rolled v1 file: no `max_threads`, no `sweep` — exactly
+        // what the pre-sweep serializer wrote. It must load without
+        // error, keyed (fingerprint × nthreads), with an empty sweep
+        // surface (the "upgrade me" marker for sweeping callers).
+        let text = r#"{
+            "version": 1,
+            "decisions": [{
+                "fingerprint": "000000000000002a",
+                "nthreads": 3,
+                "kind": "colorful",
+                "mflops": 55.5,
+                "measured": true,
+                "tuned_s": 0.02,
+                "features": {
+                    "n": 64, "work_flops": 500, "scatter_pairs": 100,
+                    "scatter_ratio": 0.7, "bandwidth": 9, "colors": 3,
+                    "intervals": 5, "balance": 1.01, "feat_nthreads": 3
+                },
+                "trials": [{
+                    "kind": "colorful", "seconds_per_product": 1.0e-4,
+                    "mad_s": 1.0e-6, "mflops": 55.5
+                }]
+            }]
+        }"#;
+        let path = temp_path("v1compat");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, text).unwrap();
+        let cache = DecisionCache::open(&path);
+        assert_eq!(cache.len(), 1, "v1 decision files must load without error");
+        let d = cache.get(0x2a, 3).expect("v1 entry keyed by its nthreads");
+        assert_eq!(d.kind, EngineKind::Colorful);
+        assert_eq!(d.nthreads, 3);
+        assert_eq!(d.max_threads, 3, "v1 entries are single-p: budget == pick");
+        assert!(d.sweep.is_empty());
+        // Re-writing the file upgrades it to the v2 schema.
+        cache.put(fake_decision(9, 2));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"version\":2"), "{text}");
+        assert!(text.contains("\"max_threads\""));
+        let back = DecisionCache::open(&path);
+        assert_eq!(back.len(), 2);
+        assert!(back.get(0x2a, 3).is_some(), "v1 entry survives the rewrite");
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 

@@ -14,11 +14,16 @@
 //!    the paper's median-of-runs protocol
 //!    ([`crate::metrics::median_and_spread_of_runs`]) under a
 //!    configurable [`TrialBudget`] — and emits a [`Decision`];
-//! 3. a zero budget skips the trials and falls back to [`cost_model`],
+//! 3. [`sweep`] adds the second dimension the paper's §4 scalability
+//!    curves demand: the same trials repeated across a thread-count
+//!    ladder ([`thread_ladder`]), because several matrices peak *below*
+//!    the machine's core count — the winning `(engine, nthreads)` pair
+//!    plus the full sweep surface land in the [`Decision`];
+//! 4. a zero budget skips the trials and falls back to [`cost_model`],
 //!    a paper-derived heuristic over the same features;
-//! 4. [`resolve`] fronts the whole thing with a persistent
-//!    [`DecisionCache`] keyed by (structure [`fingerprint`] ×
-//!    thread-count), so a restarted service never re-tunes a known
+//! 5. [`resolve`] / [`resolve_swept`] front the whole thing with a
+//!    persistent [`DecisionCache`] keyed by (structure [`fingerprint`] ×
+//!    thread budget), so a restarted service never re-tunes a known
 //!    matrix.
 //!
 //! [`crate::parallel::EngineKind::Auto`] is the routing-level entry
@@ -28,12 +33,12 @@
 pub mod cache;
 pub mod features;
 
-pub use cache::DecisionCache;
+pub use cache::{decision_json, DecisionCache};
 pub use features::{fingerprint, Features};
 
 use crate::metrics;
 use crate::parallel::{build_engine, AccumMethod, EngineKind};
-use crate::plan::{PlanPieces, SpmvPlan};
+use crate::plan::{PlanBuilder, PlanCache, PlanPieces, SpmvPlan};
 use crate::sparse::SpmvKernel;
 use std::sync::Arc;
 use std::time::Instant;
@@ -82,7 +87,24 @@ pub struct TrialResult {
     pub mflops: f64,
 }
 
-/// The tuner's verdict for one matrix × thread-count.
+/// One rung of the thread-count ladder in a swept decision: every
+/// candidate engine's measurement at `nthreads`.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub nthreads: usize,
+    pub trials: Vec<TrialResult>,
+}
+
+impl SweepPoint {
+    /// The fastest candidate at this thread count.
+    pub fn best(&self) -> Option<&TrialResult> {
+        self.trials
+            .iter()
+            .max_by(|a, b| a.mflops.partial_cmp(&b.mflops).expect("rates are finite"))
+    }
+}
+
+/// The tuner's verdict for one matrix × thread budget.
 #[derive(Clone, Debug)]
 pub struct Decision {
     /// The winning concrete engine (never [`EngineKind::Auto`]).
@@ -93,11 +115,21 @@ pub struct Decision {
     pub measured: bool,
     /// Wall-clock seconds the tuning run itself cost.
     pub tuned_s: f64,
-    /// Structure fingerprint — the cache key, with `nthreads`.
+    /// Structure fingerprint — the cache key, with `max_threads`.
     pub fingerprint: u64,
+    /// Thread count the winning engine should run at.
     pub nthreads: usize,
+    /// Thread budget the decision was tuned under — the second half of
+    /// the cache key. A swept decision may pick `nthreads < max_threads`
+    /// (the §4 curves: "more threads" is not monotone once memory
+    /// bandwidth saturates); single-p decisions have the two equal.
+    pub max_threads: usize,
     pub features: Features,
+    /// The winning thread count's trials (every candidate at that p).
     pub trials: Vec<TrialResult>,
+    /// Full (engine × nthreads) sweep surface; empty for single-p
+    /// decisions and for entries loaded from a v1 cache file.
+    pub sweep: Vec<SweepPoint>,
 }
 
 /// The candidate set for a thread count: every concrete engine that can
@@ -125,6 +157,38 @@ pub fn required_pieces(nthreads: usize) -> PlanPieces {
         need = need.union(PlanPieces::for_kind(kind));
     }
     need
+}
+
+/// A [`sweep`] plan provider backed by a shared [`PlanCache`]: one
+/// analysis per (key × thread count), each plan built with exactly
+/// [`required_pieces`]`(p)` — the contract [`sweep`] asserts. Every
+/// sweeping call site (service registration, background re-tune, CLI,
+/// figure harness, benches) goes through this so the contract cannot be
+/// broken by a hand-rolled closure.
+pub fn cached_plan_provider<'a>(
+    plans: &'a PlanCache,
+    key: &'a str,
+    kernel: &'a Arc<dyn SpmvKernel>,
+) -> impl FnMut(usize) -> Arc<SpmvPlan> + 'a {
+    move |p: usize| {
+        let builder = PlanBuilder::new(p).with_pieces(required_pieces(p));
+        plans.get_or_build(key, kernel.as_ref(), builder)
+    }
+}
+
+/// The thread-count ladder a [`sweep`] trials: 1, 2, 4, … doubling up to
+/// and always including `max` (the paper's §4 scalability axis, scaled
+/// to the caller's thread budget). `max == 0` is treated as 1.
+pub fn thread_ladder(max: usize) -> Vec<usize> {
+    let max = max.max(1);
+    let mut v = Vec::new();
+    let mut p = 1;
+    while p < max {
+        v.push(p);
+        p *= 2;
+    }
+    v.push(max);
+    v
 }
 
 /// Paper-derived heuristic over structural features — the zero-budget
@@ -188,17 +252,49 @@ fn tune_with_fingerprint(
             tuned_s: t0.elapsed().as_secs_f64(),
             fingerprint: fp,
             nthreads: plan.nthreads,
+            max_threads: plan.nthreads,
             features,
             trials: Vec::new(),
+            sweep: Vec::new(),
         };
     }
+    let trials =
+        measure_candidates(kernel, plan, budget, features.work_flops, &candidates(plan.nthreads));
+    let best = best_trial(&trials);
+    Decision {
+        kind: best.kind,
+        mflops: best.mflops,
+        measured: true,
+        tuned_s: t0.elapsed().as_secs_f64(),
+        fingerprint: fp,
+        nthreads: plan.nthreads,
+        max_threads: plan.nthreads,
+        features,
+        trials,
+        sweep: Vec::new(),
+    }
+}
+
+/// Measure every kind in `kinds` over the shared plan. Each engine runs
+/// one *untimed* warm-up product first: the first timed run would
+/// otherwise pay pool spin-up and cold caches, biasing the comparison
+/// against whichever candidate happens to run first (and, under a
+/// one-run budget where the median cannot shrug the cold run off,
+/// against every pool-backed engine).
+fn measure_candidates(
+    kernel: &Arc<dyn SpmvKernel>,
+    plan: &Arc<SpmvPlan>,
+    budget: &TrialBudget,
+    work: usize,
+    kinds: &[EngineKind],
+) -> Vec<TrialResult> {
     let n = kernel.dim();
     let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
     let mut y = vec![0.0; n];
-    let work = features.work_flops;
-    let mut trials = Vec::new();
-    for kind in candidates(plan.nthreads) {
+    let mut trials = Vec::with_capacity(kinds.len());
+    for &kind in kinds {
         let mut engine = build_engine(kind, kernel.clone(), plan.clone());
+        engine.spmv(&x, &mut y);
         let (per, mad) = metrics::median_and_spread_of_runs(budget.runs, budget.products, || {
             engine.spmv(&x, &mut y)
         });
@@ -209,19 +305,123 @@ fn tune_with_fingerprint(
             mflops: metrics::mflops(work, per),
         });
     }
-    let best = trials
+    trials
+}
+
+fn best_trial(trials: &[TrialResult]) -> &TrialResult {
+    trials
         .iter()
         .max_by(|a, b| a.mflops.partial_cmp(&b.mflops).expect("rates are finite"))
-        .expect("candidates is never empty");
+        .expect("candidates is never empty")
+}
+
+/// Two-dimensional tuning: trial every candidate engine at every thread
+/// count of `ladder`, returning the `(engine, nthreads)` argmax plus the
+/// full sweep surface. `plan_for(p)` supplies the shared plan at p —
+/// typically [`crate::plan::PlanCache::get_or_build`], so sweeping a
+/// registered matrix reuses one analysis per thread count; each returned
+/// plan must be built at p and cover [`required_pieces`]`(p)`.
+///
+/// The paper's §4 scalability curves motivate the second dimension:
+/// several matrices peak below the machine's core count (memory
+/// bandwidth saturates first), so tuning the engine at one fixed p
+/// leaves rate on the table — measurement must pick p too.
+pub fn sweep(
+    kernel: &Arc<dyn SpmvKernel>,
+    ladder: &[usize],
+    budget: &TrialBudget,
+    plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
+) -> Decision {
+    sweep_with_fingerprint(kernel, ladder, budget, plan_for, fingerprint(kernel.as_ref()))
+}
+
+fn sweep_with_fingerprint(
+    kernel: &Arc<dyn SpmvKernel>,
+    ladder: &[usize],
+    budget: &TrialBudget,
+    plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
+    fp: u64,
+) -> Decision {
+    assert!(!ladder.is_empty(), "thread ladder must name at least one thread count");
+    let max = ladder.iter().copied().max().unwrap_or(1);
+    let t0 = Instant::now();
+    let plan_max = plan_for(max);
+    assert!(
+        plan_max.nthreads == max && plan_max.pieces.covers(required_pieces(max)),
+        "plan_for must honour the requested thread count and tuner::required_pieces"
+    );
+    let features = Features::extract(kernel.as_ref(), &plan_max);
+    if budget.is_zero() {
+        let kind = cost_model(&features);
+        // The heuristic has no p axis: sequential runs at 1 thread,
+        // everything else at the full budget.
+        let nthreads = if kind == EngineKind::Sequential { 1 } else { max };
+        return Decision {
+            kind,
+            mflops: 0.0,
+            measured: false,
+            tuned_s: t0.elapsed().as_secs_f64(),
+            fingerprint: fp,
+            nthreads,
+            max_threads: max,
+            features,
+            trials: Vec::new(),
+            sweep: Vec::new(),
+        };
+    }
+    let work = features.work_flops;
+    let mut sweep: Vec<SweepPoint> = Vec::with_capacity(ladder.len());
+    // The sequential sweep ignores the plan's thread count, so one
+    // measurement (taken at the first rung) serves every rung — without
+    // this, the usually-slowest candidate would be re-timed per rung.
+    let mut seq_trial: Option<TrialResult> = None;
+    for &p in ladder {
+        if sweep.iter().any(|pt| pt.nthreads == p) {
+            continue; // a duplicated rung buys no information
+        }
+        let plan = if p == max { plan_max.clone() } else { plan_for(p) };
+        assert!(
+            plan.nthreads == p && plan.pieces.covers(required_pieces(p)),
+            "plan_for must honour the requested thread count and tuner::required_pieces"
+        );
+        let mut kinds = candidates(p);
+        if seq_trial.is_some() {
+            kinds.retain(|k| *k != EngineKind::Sequential);
+        }
+        let mut trials = measure_candidates(kernel, &plan, budget, work, &kinds);
+        match &seq_trial {
+            Some(t) => trials.insert(0, t.clone()),
+            None => {
+                seq_trial = trials.iter().find(|t| t.kind == EngineKind::Sequential).cloned();
+            }
+        }
+        sweep.push(SweepPoint { nthreads: p, trials });
+    }
+    let (best_p, best_kind, best_mflops) = sweep
+        .iter()
+        .map(|pt| {
+            let b = pt.best().expect("candidates is never empty");
+            (pt.nthreads, b.kind, b.mflops)
+        })
+        .max_by(|a, b| a.2.partial_cmp(&b.2).expect("rates are finite"))
+        .expect("ladder is never empty");
+    let trials = sweep
+        .iter()
+        .find(|pt| pt.nthreads == best_p)
+        .expect("winner rung exists")
+        .trials
+        .clone();
     Decision {
-        kind: best.kind,
-        mflops: best.mflops,
+        kind: best_kind,
+        mflops: best_mflops,
         measured: true,
         tuned_s: t0.elapsed().as_secs_f64(),
         fingerprint: fp,
-        nthreads: plan.nthreads,
+        nthreads: best_p,
+        max_threads: max,
         features,
         trials,
+        sweep,
     }
 }
 
@@ -231,7 +431,11 @@ fn tune_with_fingerprint(
 /// A cached *unmeasured* (cost-model) decision does not satisfy a caller
 /// that brought a measuring budget: it is re-tuned and the cache entry
 /// upgraded — otherwise one zero-budget call would freeze the heuristic
-/// pick forever.
+/// pick forever. A cached *swept* decision satisfies a single-p caller
+/// through [`single_p_view`]: the caller asked for `plan.nthreads`
+/// threads, so it gets that rung's winner, not the sweep's global
+/// (possibly lower-p) pick — re-tuning would let sweeping and
+/// non-sweeping callers endlessly overwrite each other's entries.
 pub fn resolve(
     kernel: &Arc<dyn SpmvKernel>,
     plan: &Arc<SpmvPlan>,
@@ -242,11 +446,61 @@ pub fn resolve(
     if let Some(d) = cache.peek(fp, plan.nthreads) {
         if d.measured || budget.is_zero() {
             cache.record(true);
-            return (d, true);
+            return (single_p_view(d, plan.nthreads), true);
         }
     }
     cache.record(false);
     let d = tune_with_fingerprint(kernel, plan, budget, fp);
+    cache.put(d.clone());
+    (d, false)
+}
+
+/// A single-p caller's view of a cached decision. Swept entries answer
+/// with their rung at exactly `p` — the cache key's `max_threads` *is*
+/// the caller's thread count, so that rung was measured — which keeps
+/// the caller's thread-count contract (`RoutePolicy::threads` means "run
+/// at p" unless `sweep_threads` opted into per-matrix picks). Single-p
+/// entries, and a sweep whose winner already sits at `p`, pass through
+/// unchanged; a malformed surface with no rung at `p` (hand-edited
+/// file) is served as recorded.
+fn single_p_view(d: Decision, p: usize) -> Decision {
+    if d.sweep.is_empty() || d.nthreads == p {
+        return d;
+    }
+    let best = d
+        .sweep
+        .iter()
+        .find(|pt| pt.nthreads == p)
+        .and_then(|pt| pt.best().map(|b| (b.kind, b.mflops, pt.trials.clone())));
+    match best {
+        Some((kind, mflops, trials)) => Decision { kind, mflops, nthreads: p, trials, ..d },
+        None => d,
+    }
+}
+
+/// Cache-fronted [`sweep`], keyed by (fingerprint × the ladder's max
+/// thread count). Same upgrade ladder as [`resolve`], one rung higher:
+/// an unmeasured entry never satisfies a measuring caller, and a
+/// measured *single-p* entry (a v1 cache file, or a plain [`tune`] at
+/// the same thread budget) does not satisfy a caller asking for the
+/// thread sweep — it is re-swept and the entry upgraded in place.
+pub fn resolve_swept(
+    kernel: &Arc<dyn SpmvKernel>,
+    ladder: &[usize],
+    budget: &TrialBudget,
+    cache: &DecisionCache,
+    plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
+) -> (Decision, bool) {
+    let fp = fingerprint(kernel.as_ref());
+    let max = ladder.iter().copied().max().unwrap_or(1);
+    if let Some(d) = cache.peek(fp, max) {
+        if budget.is_zero() || (d.measured && !d.sweep.is_empty()) {
+            cache.record(true);
+            return (d, true);
+        }
+    }
+    cache.record(false);
+    let d = sweep_with_fingerprint(kernel, ladder, budget, plan_for, fp);
     cache.put(d.clone());
     (d, false)
 }
@@ -279,7 +533,183 @@ mod tests {
         let best = d.trials.iter().map(|t| t.mflops).fold(0.0, f64::max);
         assert_eq!(d.mflops, best);
         assert_eq!(d.nthreads, 2);
+        // Single-p decisions: the thread budget equals the pick, and
+        // there is no sweep surface.
+        assert_eq!(d.max_threads, 2);
+        assert!(d.sweep.is_empty());
         assert_eq!(d.fingerprint, fingerprint(kernel.as_ref()));
+    }
+
+    #[test]
+    fn thread_ladder_doubles_up_to_max() {
+        assert_eq!(thread_ladder(1), vec![1]);
+        assert_eq!(thread_ladder(2), vec![1, 2]);
+        assert_eq!(thread_ladder(4), vec![1, 2, 4]);
+        assert_eq!(thread_ladder(6), vec![1, 2, 4, 6]);
+        assert_eq!(thread_ladder(0), vec![1], "zero budget degrades to one thread");
+    }
+
+    #[test]
+    fn sweep_picks_the_global_argmax_over_engines_and_threads() {
+        let (kernel, _) = kernel_and_plan(150, 6, 2);
+        let plans = crate::plan::PlanCache::new();
+        let ladder = thread_ladder(2);
+        let mut plan_for = cached_plan_provider(&plans, "m", &kernel);
+        let d = sweep(&kernel, &ladder, &TrialBudget::smoke(), &mut plan_for);
+        assert!(d.measured);
+        assert_eq!(d.max_threads, 2);
+        assert_eq!(d.sweep.len(), 2, "one point per ladder rung");
+        assert_eq!(d.sweep[0].nthreads, 1);
+        assert_eq!(d.sweep[0].trials.len(), candidates(1).len());
+        assert_eq!(d.sweep[1].nthreads, 2);
+        assert_eq!(d.sweep[1].trials.len(), candidates(2).len());
+        assert!(d.nthreads == 1 || d.nthreads == 2);
+        // The decision really is the argmax over the whole surface, and
+        // `trials` mirrors the winning rung.
+        let best = d
+            .sweep
+            .iter()
+            .flat_map(|pt| pt.trials.iter().map(|t| t.mflops))
+            .fold(0.0, f64::max);
+        assert_eq!(d.mflops, best);
+        let rung = d.sweep.iter().find(|pt| pt.nthreads == d.nthreads).unwrap();
+        assert!(rung.trials.iter().any(|t| t.kind == d.kind && t.mflops == d.mflops));
+        // One shared analysis per rung, no more.
+        assert_eq!(plans.builds(), 2);
+    }
+
+    #[test]
+    fn sweep_zero_budget_answers_from_cost_model() {
+        let (kernel, _) = kernel_and_plan(100, 7, 3);
+        let plans = crate::plan::PlanCache::new();
+        let mut plan_for = cached_plan_provider(&plans, "m", &kernel);
+        let d = sweep(&kernel, &thread_ladder(3), &TrialBudget::zero(), &mut plan_for);
+        assert!(!d.measured && d.sweep.is_empty() && d.trials.is_empty());
+        // n=100 < the fork-join threshold → sequential at one thread.
+        assert_eq!(d.kind, EngineKind::Sequential);
+        assert_eq!(d.nthreads, 1);
+        assert_eq!(d.max_threads, 3);
+    }
+
+    #[test]
+    fn resolve_swept_upgrades_single_p_entries_and_then_hits() {
+        let (kernel, plan) = kernel_and_plan(130, 8, 2);
+        let cache = DecisionCache::in_memory();
+        // A plain single-p tune at the same thread budget…
+        let (d0, hit0) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        assert!(!hit0 && d0.measured && d0.sweep.is_empty());
+        let plans = crate::plan::PlanCache::new();
+        let mut plan_for = cached_plan_provider(&plans, "m", &kernel);
+        // …does not satisfy a sweeping caller with a measuring budget:
+        // the entry is upgraded in place with the full surface.
+        let ladder = thread_ladder(2);
+        let (d1, hit1) =
+            resolve_swept(&kernel, &ladder, &TrialBudget::smoke(), &cache, &mut plan_for);
+        assert!(!hit1 && d1.measured && !d1.sweep.is_empty());
+        assert_eq!(cache.len(), 1, "the swept decision replaces the single-p entry");
+        // From now on, sweeping callers hit.
+        let (d2, hit2) =
+            resolve_swept(&kernel, &ladder, &TrialBudget::smoke(), &cache, &mut plan_for);
+        assert!(hit2);
+        assert_eq!(d2.kind, d1.kind);
+        assert_eq!(d2.nthreads, d1.nthreads);
+        // A zero-budget sweeping caller is happy with whatever is there.
+        let (_, hit3) =
+            resolve_swept(&kernel, &ladder, &TrialBudget::zero(), &cache, &mut plan_for);
+        assert!(hit3);
+    }
+
+    #[test]
+    fn resolve_serves_single_p_view_of_swept_entries() {
+        // A swept entry whose global winner sits at p=1 must not leak
+        // that thread count to a non-sweeping caller who asked for p=2:
+        // the caller gets the p=2 rung's winner (RoutePolicy::threads
+        // keeps its meaning unless sweep_threads opted in).
+        let (kernel, plan) = kernel_and_plan(140, 10, 2);
+        let cache = DecisionCache::in_memory();
+        let fp = fingerprint(kernel.as_ref());
+        let seq = TrialResult {
+            kind: EngineKind::Sequential,
+            seconds_per_product: 1e-4,
+            mad_s: 0.0,
+            mflops: 120.0,
+        };
+        let rung2 = vec![
+            TrialResult {
+                kind: EngineKind::Atomic,
+                seconds_per_product: 2e-4,
+                mad_s: 0.0,
+                mflops: 40.0,
+            },
+            TrialResult {
+                kind: EngineKind::Colorful,
+                seconds_per_product: 1e-4,
+                mad_s: 0.0,
+                mflops: 80.0,
+            },
+        ];
+        cache.put(Decision {
+            kind: EngineKind::Sequential,
+            mflops: 120.0,
+            measured: true,
+            tuned_s: 0.01,
+            fingerprint: fp,
+            nthreads: 1,
+            max_threads: 2,
+            features: Features::extract(kernel.as_ref(), &plan),
+            trials: vec![seq.clone()],
+            sweep: vec![
+                SweepPoint { nthreads: 1, trials: vec![seq] },
+                SweepPoint { nthreads: 2, trials: rung2 },
+            ],
+        });
+        let (d, hit) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        assert!(hit, "the swept entry satisfies the single-p caller");
+        assert_eq!(d.nthreads, 2, "the view answers at the caller's thread count");
+        assert_eq!(d.kind, EngineKind::Colorful, "…with that rung's winner");
+        assert_eq!(d.mflops, 80.0);
+        assert_eq!(d.trials.len(), 2, "…and that rung's trials");
+    }
+
+    #[test]
+    fn sweep_measures_sequential_once() {
+        // The sequential sweep ignores p — its trial is taken at the
+        // first rung and reused, so every rung still reports it but the
+        // identical measurement is not repeated.
+        let (kernel, _) = kernel_and_plan(150, 11, 2);
+        let plans = crate::plan::PlanCache::new();
+        let mut plan_for = cached_plan_provider(&plans, "m", &kernel);
+        let d = sweep(&kernel, &thread_ladder(2), &TrialBudget::smoke(), &mut plan_for);
+        let seq1 = d.sweep[0].trials.iter().find(|t| t.kind == EngineKind::Sequential).unwrap();
+        let seq2 = d.sweep[1].trials.iter().find(|t| t.kind == EngineKind::Sequential).unwrap();
+        assert_eq!(seq1.seconds_per_product, seq2.seconds_per_product);
+        assert_eq!(seq1.mflops, seq2.mflops);
+    }
+
+    #[test]
+    fn duplicated_candidates_measure_consistently() {
+        // Regression guard for the cold-start bias: with one untimed
+        // warm-up product per engine, a duplicated candidate cannot be
+        // penalized for running first (pool spin-up, cold caches) even
+        // under a one-run budget where the median cannot absorb it.
+        let (kernel, plan) = kernel_and_plan(3000, 9, 2);
+        let kind = EngineKind::LocalBuffers(AccumMethod::Effective);
+        let trials = measure_candidates(
+            &kernel,
+            &plan,
+            &TrialBudget { runs: 1, products: 4 },
+            Features::extract(kernel.as_ref(), &plan).work_flops,
+            &[kind, kind, kind],
+        );
+        assert_eq!(trials.len(), 3);
+        let rates: Vec<f64> = trials.iter().map(|t| t.mflops).collect();
+        let lo = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = rates.iter().cloned().fold(0.0, f64::max);
+        assert!(lo > 0.0);
+        assert!(
+            hi / lo < 5.0,
+            "duplicated candidates must measure consistently, got {rates:?}"
+        );
     }
 
     #[test]

@@ -62,8 +62,8 @@ impl Bench {
             }
             per_iter.push(t.elapsed().as_secs_f64() / iters as f64);
         }
-        let med = stats::median(&per_iter);
-        let mad = stats::mad(&per_iter);
+        let med = stats::median(&per_iter).expect("bench samples are never empty");
+        let mad = stats::mad(&per_iter).expect("bench samples are never empty");
         println!(
             "{:<48} {:>12} / iter   (±{:.1}%, {} iters × {} samples)",
             name,

@@ -1,44 +1,59 @@
 //! Summary statistics used by the bench harness and the paper-figure
 //! reports (the paper reports *medians over three runs*, §4).
+//!
+//! The location/spread estimators ([`median`], [`mean`], [`mad`],
+//! [`geomean`]) return `None` for an empty slice — there is no honest
+//! number to report — so the empty case is part of the signature instead
+//! of a panic deep inside a measurement loop. [`min`]/[`max`] keep their
+//! fold identities (±∞) for the empty slice, which every consumer treats
+//! as "no data".
 
 /// Median of a slice (not in-place; handles even lengths by averaging).
-pub fn median(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
+/// `None` when `xs` is empty.
+pub fn median(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = v.len();
-    if n % 2 == 1 {
-        v[n / 2]
-    } else {
-        0.5 * (v[n / 2 - 1] + v[n / 2])
+    Some(if n % 2 == 1 { v[n / 2] } else { 0.5 * (v[n / 2 - 1] + v[n / 2]) })
+}
+
+/// Arithmetic mean; `None` when `xs` is empty.
+pub fn mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
     }
+    Some(xs.iter().sum::<f64>() / xs.len() as f64)
 }
 
-pub fn mean(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
-    xs.iter().sum::<f64>() / xs.len() as f64
-}
-
+/// Minimum (`+∞` for an empty slice — the fold identity).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum (`-∞` for an empty slice — the fold identity).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
 }
 
 /// Median absolute deviation — robust spread estimate for bench noise.
-pub fn mad(xs: &[f64]) -> f64 {
-    let m = median(xs);
+/// `None` when `xs` is empty.
+pub fn mad(xs: &[f64]) -> Option<f64> {
+    let m = median(xs)?;
     let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
     median(&devs)
 }
 
 /// Geometric mean (used for "average speedup over the suite").
-pub fn geomean(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
+/// `None` when `xs` is empty.
+pub fn geomean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
     let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
-    (s / xs.len() as f64).exp()
+    Some((s / xs.len() as f64).exp())
 }
 
 #[cfg(test)]
@@ -47,14 +62,24 @@ mod tests {
 
     #[test]
     fn median_odd_even() {
-        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
-        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
-        assert_eq!(median(&[5.0]), 5.0);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), Some(2.0));
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), Some(2.5));
+        assert_eq!(median(&[5.0]), Some(5.0));
+    }
+
+    #[test]
+    fn empty_slices_are_not_a_panic() {
+        assert_eq!(median(&[]), None);
+        assert_eq!(mean(&[]), None);
+        assert_eq!(mad(&[]), None);
+        assert_eq!(geomean(&[]), None);
+        assert_eq!(min(&[]), f64::INFINITY);
+        assert_eq!(max(&[]), f64::NEG_INFINITY);
     }
 
     #[test]
     fn mean_simple() {
-        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), Some(2.0));
     }
 
     #[test]
@@ -68,13 +93,13 @@ mod tests {
     fn mad_robust_to_outlier() {
         let clean = [1.0, 1.1, 0.9, 1.0, 1.05];
         let noisy = [1.0, 1.1, 0.9, 1.0, 100.0];
-        assert!(mad(&noisy) < 1.0, "mad should shrug off one outlier");
-        assert!(mad(&clean) < 0.2);
+        assert!(mad(&noisy).unwrap() < 1.0, "mad should shrug off one outlier");
+        assert!(mad(&clean).unwrap() < 0.2);
     }
 
     #[test]
     fn geomean_of_speedups() {
-        let g = geomean(&[2.0, 8.0]);
+        let g = geomean(&[2.0, 8.0]).unwrap();
         assert!((g - 4.0).abs() < 1e-12);
     }
 }

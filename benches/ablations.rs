@@ -144,6 +144,119 @@ fn main() {
         b.run("rcm/spmv-restored", || restored.spmv_into_zeroed(&xs, &mut ys));
     }
 
+    // --- windowed vs full buffers + reorder vs identity (ISSUE 4) --------
+    // The two coupled bandwidth levers measured separately and together:
+    // (a) windowed local buffers vs the full-length p·n layout — the
+    //     windowed engine must zero/accumulate strictly fewer bytes
+    //     (reported below) on any matrix, and measurably fewer on a
+    //     banded one;
+    // (b) RCM reordering vs identity on a shuffled banded FEM-style
+    //     matrix — half-bandwidth and working-set reduction, with a
+    //     correctness check across every engine on the reordered
+    //     operator.
+    {
+        use csrc_spmv::parallel::{LocalBuffersEngine, ParallelSpmv};
+        use csrc_spmv::reorder::{rcm, Permutation, ReorderedEngine};
+        let mut rng = Rng::new(29);
+        let p = 4usize;
+        let n = 6000usize;
+        let band = Csrc::from_coo(&Coo::banded(n, 4, false, &mut rng)).unwrap();
+        let shuffle = Permutation::from_new_to_old(rng.permutation(n)).unwrap();
+        let shuffled = Arc::new(band.permuted(&shuffle));
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 1e-3).sin()).collect();
+        let mut ys = vec![0.0; n];
+        let mut oracle = vec![0.0; n];
+        shuffled.spmv_into_zeroed(&xs, &mut oracle);
+        let close = |y: &[f64]| {
+            y.iter().zip(&oracle).all(|(a, b)| (a - b).abs() <= 1e-9 * (1.0 + b.abs()))
+        };
+
+        // (a) windowed vs full on the shuffled matrix and on the RCM
+        // restoration (windowing pays most once the band is tight).
+        let perm = Arc::new(rcm(shuffled.as_ref()));
+        let restored = Arc::new(shuffled.permuted(&perm));
+        b.record("reorder/hbw-identity", shuffled.half_bandwidth() as f64, "rows");
+        b.record("reorder/hbw-rcm", restored.half_bandwidth() as f64, "rows");
+        for (tag, m) in [("shuffled", &shuffled), ("rcm", &restored)] {
+            let plan = Arc::new(PlanBuilder::all(p).build(m.as_ref()));
+            b.record(
+                &format!("reorder/ws-parallel-{tag}-kb"),
+                (m.working_set_bytes_parallel(&plan) / 1024) as f64,
+                "KB",
+            );
+            for method in [AccumMethod::AllInOne, AccumMethod::Effective] {
+                let mut windowed =
+                    LocalBuffersEngine::with_plan(m.clone(), plan.clone(), method);
+                let mut full = LocalBuffersEngine::with_plan_windowed(
+                    m.clone(),
+                    plan.clone(),
+                    method,
+                    false,
+                );
+                assert!(
+                    windowed.bytes_zeroed_per_product() <= full.bytes_zeroed_per_product()
+                        && windowed.buffer_bytes() < full.buffer_bytes(),
+                    "windowed buffers must shrink the byte footprint"
+                );
+                b.record(
+                    &format!("windowed/{tag}-{}-bytes-zeroed", method.label()),
+                    windowed.bytes_zeroed_per_product() as f64,
+                    "bytes",
+                );
+                b.record(
+                    &format!("windowed/{tag}-{}-bytes-zeroed-full", method.label()),
+                    full.bytes_zeroed_per_product() as f64,
+                    "bytes",
+                );
+                b.record(
+                    &format!("windowed/{tag}-{}-buffer-bytes", method.label()),
+                    windowed.buffer_bytes() as f64,
+                    "bytes",
+                );
+                b.record(
+                    &format!("windowed/{tag}-{}-buffer-bytes-full", method.label()),
+                    full.buffer_bytes() as f64,
+                    "bytes",
+                );
+                let t_w = b.run(&format!("windowed/{tag}-{}-windowed", method.label()), || {
+                    windowed.spmv(&xs, &mut ys)
+                });
+                let t_f = b.run(&format!("windowed/{tag}-{}-full", method.label()), || {
+                    full.spmv(&xs, &mut ys)
+                });
+                b.record(
+                    &format!("windowed/{tag}-{}-speedup", method.label()),
+                    t_f / t_w,
+                    "x",
+                );
+            }
+        }
+
+        // (b) reorder-vs-identity end-to-end: every engine over the RCM
+        // operator (permute in / un-permute out) must match the plain
+        // sequential oracle — no correctness regression — and the
+        // reordered effective engine is timed against the identity one.
+        let rplan = Arc::new(PlanBuilder::all(p).build(restored.as_ref()));
+        let iplan = Arc::new(PlanBuilder::all(p).build(shuffled.as_ref()));
+        for kind in EngineKind::all() {
+            let mut engine = ReorderedEngine::new(
+                build_engine(kind, restored.clone(), rplan.clone()),
+                perm.clone(),
+            );
+            let mut y = vec![f64::NAN; n];
+            engine.spmv(&xs, &mut y);
+            assert!(close(&y), "reordered {} diverges from the oracle", kind.label());
+        }
+        let kind = EngineKind::LocalBuffers(AccumMethod::Effective);
+        let mut identity = build_engine(kind, shuffled.clone(), iplan);
+        let mut reordered_eng =
+            ReorderedEngine::new(build_engine(kind, restored.clone(), rplan), perm.clone());
+        let t_id = b.run("reorder/spmv-identity-effective", || identity.spmv(&xs, &mut ys));
+        let t_rcm =
+            b.run("reorder/spmv-rcm-effective", || reordered_eng.spmv(&xs, &mut ys));
+        b.record("reorder/speedup-rcm-over-identity", t_id / t_rcm, "x");
+    }
+
     // --- distributed subdomain layer (paper §2.1/§5) ----------------------
     {
         use csrc_spmv::coordinator::DistributedMatrix;

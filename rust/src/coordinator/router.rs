@@ -7,13 +7,22 @@
 //! backend serves the fixed shapes the AOT artifacts were lowered for.
 
 use crate::parallel::{AccumMethod, EngineKind};
+use crate::reorder::ReorderPolicy;
 use crate::sparse::Csrc;
 
 /// Execution backend for one request.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Backend {
     NativeSequential,
-    NativeParallel { kind: EngineKind, threads: usize },
+    NativeParallel {
+        kind: EngineKind,
+        threads: usize,
+        /// Serve through the RCM ordering: the worker builds the engine
+        /// over the permuted matrix and permutes/un-permutes per
+        /// request. Set by policy (`RoutePolicy::reorder == Always`) or
+        /// by a tuned decision whose winner was a reordered candidate.
+        reorder: bool,
+    },
     /// AOT-compiled artifact (by manifest name).
     Xla { artifact: String },
 }
@@ -39,6 +48,12 @@ pub struct RoutePolicy {
     pub prefer_xla: bool,
     /// Artifact shapes available: (name, n_pad, w).
     pub xla_shapes: Vec<(String, usize, usize)>,
+    /// Bandwidth-aware RCM reordering ([`crate::reorder`]):
+    /// `Never` serves matrices as given; `Measure` (with
+    /// `parallel_kind == Auto`) lets the tuner race reordered candidates
+    /// against plain ones per matrix; `Always` serves every parallel
+    /// request through the RCM ordering.
+    pub reorder: ReorderPolicy,
 }
 
 impl Default for RoutePolicy {
@@ -50,6 +65,7 @@ impl Default for RoutePolicy {
             sweep_threads: false,
             prefer_xla: false,
             xla_shapes: Vec::new(),
+            reorder: ReorderPolicy::Never,
         }
     }
 }
@@ -78,7 +94,13 @@ impl Router {
         if a.n < self.policy.min_parallel_n {
             Backend::NativeSequential
         } else {
-            Backend::NativeParallel { kind: self.policy.parallel_kind, threads: self.policy.threads }
+            Backend::NativeParallel {
+                kind: self.policy.parallel_kind,
+                threads: self.policy.threads,
+                // `Measure` is meaningful only through the tuner (Auto),
+                // where the worker substitutes the decision's flag.
+                reorder: self.policy.reorder == ReorderPolicy::Always,
+            }
         }
     }
 }

@@ -27,6 +27,7 @@ use super::router::{Backend, RoutePolicy, Router};
 use crate::metrics::{self, LatencyHistogram};
 use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
 use crate::plan::{PlanBuilder, PlanCache};
+use crate::reorder::{self, Permutation, ReorderedEngine};
 use crate::sparse::{Csrc, SpmvKernel};
 use crate::tuner::{self, DecisionCache, TrialBudget};
 use std::collections::HashMap;
@@ -96,6 +97,9 @@ struct WorkerBatch {
 #[derive(Clone, Copy, Debug)]
 struct ResolvedAuto {
     kind: EngineKind,
+    /// The winner ran through the RCM ordering: serve via the permuted
+    /// matrix with per-request permute/un-permute.
+    reorder: bool,
     /// The decision's thread count (the swept pick, not necessarily
     /// `RoutePolicy::threads`).
     nthreads: usize,
@@ -113,6 +117,7 @@ impl ResolvedAuto {
     fn from_decision(d: &tuner::Decision) -> ResolvedAuto {
         ResolvedAuto {
             kind: d.kind,
+            reorder: d.reorder,
             nthreads: d.nthreads,
             mflops: d.mflops,
             work_flops: d.features.work_flops,
@@ -351,9 +356,14 @@ impl MatvecService {
                     &self.tune_budget,
                     &self.decisions,
                     &mut plan_for,
+                    self.route.reorder,
                 );
-                // Only the winning rung's analysis stays alive.
+                // Only the winning rung's analysis stays alive — for
+                // the plain plans and any reordered (`#rcm`) plans the
+                // workers may have built at losing thread counts.
                 self.plans.invalidate_other_threads(&cache_key, r.0.nthreads);
+                self.plans
+                    .invalidate_other_threads(&format!("{cache_key}#rcm"), r.0.nthreads);
                 r
             } else {
                 let plan = self.plans.get_or_build(
@@ -361,7 +371,13 @@ impl MatvecService {
                     kernel.as_ref(),
                     PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
                 );
-                tuner::resolve(&kernel, &plan, &self.tune_budget, &self.decisions)
+                tuner::resolve(
+                    &kernel,
+                    &plan,
+                    &self.tune_budget,
+                    &self.decisions,
+                    self.route.reorder,
+                )
             };
             self.resolved
                 .lock()
@@ -374,7 +390,9 @@ impl MatvecService {
                 s.tunes += 1;
                 s.tune_seconds += d.tuned_s;
             }
-            s.auto_choices.push((key.to_string(), d.kind.label()));
+            // Reordered winners are visible in the choice log (the plain
+            // label still parses as an EngineKind for plain winners).
+            s.auto_choices.push((key.to_string(), d.label()));
             s.chosen_threads.push((key.to_string(), d.nthreads));
         }
     }
@@ -523,10 +541,11 @@ struct WorkerCtx {
     drift_min_batches: u64,
 }
 
-/// Worker engine-cache key: (matrix, generation, engine label, threads).
-/// The thread count is part of the key because a re-tune may move a key
-/// to a different p.
-type EngineKey = (String, u64, String, usize);
+/// Worker engine-cache key: (matrix, generation, engine label, threads,
+/// reordered). The thread count is part of the key because a re-tune
+/// may move a key to a different p; the reorder flag because a re-tune
+/// may flip the ordering.
+type EngineKey = (String, u64, String, usize, bool);
 
 fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
     let router = Router::new(ctx.route.clone());
@@ -537,6 +556,9 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
     // generations. Values carry the last-served batch tick for the LRU
     // eviction below.
     let mut engines: HashMap<EngineKey, (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
+    // Per-`key@generation` RCM artifacts (permutation + permuted
+    // matrix), shared by every engine kind serving that key reordered.
+    let mut reordered: HashMap<String, (Arc<Csrc>, Arc<Permutation>)> = HashMap::new();
     let mut serve_tick: u64 = 0;
     while let Ok(batch) = rx.recv() {
         let hit = ctx.registry.lock().unwrap().get(&batch.matrix).cloned();
@@ -554,8 +576,13 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
         let cache_key = format!("{}@{generation}", batch.matrix);
         // Evict engines built for retired generations of this matrix —
         // each pins a ThreadPool (live OS threads), the old matrix, and
-        // its plan.
+        // its plan. RCM artifacts of retired generations go with them
+        // (over-matching a user key containing '@' only costs a rebuild).
         engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
+        {
+            let prefix = format!("{}@", batch.matrix);
+            reordered.retain(|k, _| *k == cache_key || !k.starts_with(&prefix));
+        }
         serve_tick += 1;
         let mut used_key: Option<EngineKey> = None;
         // Resolve Auto once per batch (it is batch-invariant): through
@@ -565,12 +592,16 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
         // no trials), rather than blocking or tuning on the request path.
         let mut auto_decision: Option<ResolvedAuto> = None;
         let backend = match router.route(&a) {
-            Backend::NativeParallel { kind: EngineKind::Auto, threads } => {
+            Backend::NativeParallel { kind: EngineKind::Auto, threads, reorder } => {
                 let known = ctx.resolved.lock().unwrap().get(&cache_key).copied();
                 match known {
                     Some(r) => {
                         auto_decision = Some(r);
-                        Backend::NativeParallel { kind: r.kind, threads: r.nthreads }
+                        Backend::NativeParallel {
+                            kind: r.kind,
+                            threads: r.nthreads,
+                            reorder: r.reorder,
+                        }
                     }
                     None => {
                         let plan = ctx.plans.get_or_build(
@@ -579,7 +610,7 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                             PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
                         );
                         let kind = tuner::cost_model(&tuner::Features::extract(a.as_ref(), &plan));
-                        Backend::NativeParallel { kind, threads }
+                        Backend::NativeParallel { kind, threads, reorder }
                     }
                 }
             }
@@ -601,15 +632,42 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
             let mut y = vec![0.0; a.n];
             match &backend {
                 Backend::NativeSequential => a.spmv_into_zeroed(&req.x, &mut y),
-                Backend::NativeParallel { kind, threads } => {
-                    let ekey = (batch.matrix.clone(), generation, kind.label(), *threads);
+                Backend::NativeParallel { kind, threads, reorder } => {
+                    let ekey =
+                        (batch.matrix.clone(), generation, kind.label(), *threads, *reorder);
                     let slot = engines.entry(ekey.clone()).or_insert_with(|| {
-                        let plan = ctx.plans.get_or_build(
-                            &cache_key,
-                            a.as_ref(),
-                            PlanBuilder::for_kind(*threads, *kind),
-                        );
-                        (build_engine(*kind, a.clone(), plan), 0)
+                        let engine: Box<dyn ParallelSpmv> = if *reorder {
+                            // Serve through the RCM ordering: the
+                            // permuted matrix and its plan are cached
+                            // (worker-local / shared respectively), and
+                            // the wrapper permutes x in / un-permutes y
+                            // out per request.
+                            let (pa, perm) = reordered
+                                .entry(cache_key.clone())
+                                .or_insert_with(|| {
+                                    let perm = Arc::new(reorder::rcm(a.as_ref()));
+                                    let pa = Arc::new(a.permuted(&perm));
+                                    (pa, perm)
+                                })
+                                .clone();
+                            let plan = ctx.plans.get_or_build(
+                                &format!("{cache_key}#rcm"),
+                                pa.as_ref(),
+                                PlanBuilder::for_kind(*threads, *kind),
+                            );
+                            Box::new(ReorderedEngine::new(
+                                build_engine(*kind, pa, plan),
+                                perm,
+                            ))
+                        } else {
+                            let plan = ctx.plans.get_or_build(
+                                &cache_key,
+                                a.as_ref(),
+                                PlanBuilder::for_kind(*threads, *kind),
+                            );
+                            build_engine(*kind, a.clone(), plan)
+                        };
+                        (engine, 0)
                     });
                     slot.1 = serve_tick;
                     let t = Instant::now();
@@ -657,6 +715,14 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
             }
             if evicted > 0 {
                 ctx.stats.lock().unwrap().engines_evicted += evicted;
+                // RCM artifacts (a matrix-sized permuted copy each) must
+                // not outlive the engines that used them: keep only keys
+                // that still back at least one reordered engine.
+                reordered.retain(|k, _| {
+                    engines
+                        .keys()
+                        .any(|e| e.4 && *k == format!("{}@{}", e.0, e.1))
+                });
             }
         }
     }
@@ -730,8 +796,18 @@ fn retuner_loop(rx: Receiver<RetuneJob>, ctx: RetunerCtx) {
         let d = if ctx.route.sweep_threads {
             let ladder = tuner::thread_ladder(threads);
             let mut plan_for = tuner::cached_plan_provider(&ctx.plans, &job.cache_key, &kernel);
-            let d = tuner::sweep(&kernel, &ladder, &budget, &mut plan_for);
+            let d = tuner::sweep_reordered(
+                &kernel,
+                &ladder,
+                &budget,
+                &mut plan_for,
+                ctx.route.reorder,
+            );
             ctx.plans.invalidate_other_threads(&job.cache_key, d.nthreads);
+            // Reordered (`#rcm`) plans workers built at the losing
+            // thread counts are dead weight too.
+            ctx.plans
+                .invalidate_other_threads(&format!("{}#rcm", job.cache_key), d.nthreads);
             d
         } else {
             let plan = ctx.plans.get_or_build(
@@ -739,7 +815,7 @@ fn retuner_loop(rx: Receiver<RetuneJob>, ctx: RetunerCtx) {
                 kernel.as_ref(),
                 PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
             );
-            tuner::tune(&kernel, &plan, &budget)
+            tuner::tune_reordered(&kernel, &plan, &budget, ctx.route.reorder)
         };
         // The fresh measurement is keyed by structure fingerprint, so it
         // is worth persisting even if the registration changed under us.
@@ -1015,6 +1091,7 @@ mod tests {
     fn doctored_decision(fp: u64, mflops: f64) -> tuner::Decision {
         tuner::Decision {
             kind: EngineKind::Sequential,
+            reorder: false,
             mflops,
             measured: true,
             tuned_s: 0.001,
@@ -1027,6 +1104,8 @@ mod tests {
                 scatter_pairs: 300,
                 scatter_ratio: 0.75,
                 bandwidth: 20,
+                window_rows: 320,
+                window_shrink: 0.8,
                 colors: 4,
                 intervals: 6,
                 balance: 1.1,
@@ -1100,6 +1179,68 @@ mod tests {
         assert!(d.measured && !d.sweep.is_empty());
         assert!(d.mflops < 1e8, "recorded rate must be re-measured, got {}", d.mflops);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reorder_always_serves_correct_products() {
+        // Policy Always: every parallel request runs through the RCM
+        // ordering (permuted engine + per-request permute/un-permute) —
+        // answers must be bit-identical in meaning to the plain path.
+        let mut rng = Rng::new(97);
+        let band = Csrc::from_coo(&Coo::banded(300, 2, false, &mut rng)).unwrap();
+        let shuffle =
+            Permutation::from_new_to_old(rng.permutation(300)).unwrap();
+        let a = Arc::new(band.permuted(&shuffle)); // shuffled: RCM has room
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.reorder = reorder::ReorderPolicy::Always;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 300];
+        a.spmv_into_zeroed(&x, &mut want);
+        for _ in 0..3 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        assert_eq!(svc.stats().completed, 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn auto_with_reorder_measure_resolves_and_serves() {
+        // Auto + Measure: the tuner races reordered candidates against
+        // plain ones; whatever wins, serving stays correct and the
+        // choice log records the ordering.
+        let mut rng = Rng::new(98);
+        let band = Csrc::from_coo(&Coo::banded(250, 2, false, &mut rng)).unwrap();
+        let shuffle =
+            Permutation::from_new_to_old(rng.permutation(250)).unwrap();
+        let a = Arc::new(band.permuted(&shuffle));
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.reorder = reorder::ReorderPolicy::Measure;
+        cfg.tune_budget = TrialBudget::smoke();
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1);
+        assert_eq!(s.auto_choices.len(), 1);
+        let label = &s.auto_choices[0].1;
+        // Either a plain EngineKind label or the reordered/ prefix.
+        let plain = label.strip_prefix("reordered/").unwrap_or(label);
+        assert!(EngineKind::parse(plain).is_some(), "{label}");
+        let x: Vec<f64> = (0..250).map(|i| (i as f64 * 0.02).cos()).collect();
+        let mut want = vec![0.0; 250];
+        a.spmv_into_zeroed(&x, &mut want);
+        let y = svc.call("m", x.clone()).unwrap();
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
     }
 
     #[test]

@@ -8,69 +8,31 @@
 //! effective ranges* of the local-buffers method and the color count of
 //! the colorful method — measured in the `ablations` bench.
 
-use crate::sparse::{Coo, Csrc};
+use crate::reorder::Permutation;
+use crate::sparse::Csrc;
 
 /// Reverse Cuthill–McKee ordering of the symmetric pattern of `a`.
 /// Returns `perm` with `perm[new] = old`.
+///
+/// Compatibility shim over [`crate::reorder::rcm`] — the full subsystem
+/// (pseudo-peripheral seeds, [`Permutation`], permuted operators) lives
+/// there; this keeps the original `Vec<usize>`-based call sites (and
+/// their tests) exercising the same implementation.
 pub fn reverse_cuthill_mckee(a: &Csrc) -> Vec<usize> {
-    let n = a.n;
-    // Build symmetric adjacency (both triangles).
-    let g = super::ConflictGraph::build(a);
-    let mut order = Vec::with_capacity(n);
-    let mut visited = vec![false; n];
-    let mut frontier = std::collections::VecDeque::new();
-    // Process every connected component; seed each from a minimum-degree
-    // peripheral-ish vertex.
-    loop {
-        let seed = match (0..n).filter(|&v| !visited[v]).min_by_key(|&v| g.direct_neighbors(v).len())
-        {
-            Some(s) => s,
-            None => break,
-        };
-        visited[seed] = true;
-        frontier.push_back(seed);
-        while let Some(v) = frontier.pop_front() {
-            order.push(v);
-            let mut nbrs: Vec<usize> = g
-                .direct_neighbors(v)
-                .iter()
-                .map(|&u| u as usize)
-                .filter(|&u| !visited[u])
-                .collect();
-            nbrs.sort_by_key(|&u| g.direct_neighbors(u).len());
-            for u in nbrs {
-                visited[u] = true;
-                frontier.push_back(u);
-            }
-        }
-    }
-    order.reverse(); // the "reverse" in RCM
-    order
+    crate::reorder::rcm(a).as_new_to_old().to_vec()
 }
 
 /// Apply a permutation (`perm[new] = old`) symmetrically: B = P A Pᵀ.
+/// Shim over [`Csrc::permuted`].
 pub fn permute(a: &Csrc, perm: &[usize]) -> Csrc {
-    let n = a.n;
-    assert_eq!(perm.len(), n);
-    let mut inv = vec![0usize; n];
-    for (new, &old) in perm.iter().enumerate() {
-        inv[old] = new;
-    }
-    let csr = a.to_csr();
-    let mut coo = Coo::with_capacity(n, n, a.nnz());
-    for i in 0..n {
-        for k in csr.row_range(i) {
-            coo.push(inv[i], inv[csr.ja[k] as usize], csr.a[k]);
-        }
-    }
-    coo.compact();
-    Csrc::from_coo(&coo).expect("permutation preserves structural symmetry")
+    let p = Permutation::from_new_to_old(perm.to_vec()).expect("perm must be a permutation");
+    a.permuted(&p)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::LinOp;
+    use crate::sparse::{Coo, LinOp};
     use crate::util::{propcheck, Rng};
 
     fn random(n: usize, npr: usize, seed: u64) -> Csrc {

@@ -13,7 +13,7 @@
 use super::dataset::DatasetEntry;
 use crate::graph::{greedy_coloring, ConflictGraph, Ordering as ColorOrdering};
 use crate::metrics;
-use crate::parallel::{build_engine, AccumMethod, EngineKind};
+use crate::parallel::{build_engine, AccumMethod, EngineKind, ParallelSpmv};
 use crate::plan::{PlanBuilder, PlanCache};
 use crate::simulator::{
     sim_colorful, sim_csr_sequential, sim_csrc_sequential, sim_local_buffers, MachineConfig,
@@ -432,6 +432,78 @@ pub fn sweep_headers(max_threads: usize) -> Vec<String> {
     h.push("winner".into());
     h.push("winner Mflop/s".into());
     h
+}
+
+// --------------------------------------------------------- Reorder table
+
+/// Beyond the paper: its §4.2 observation that performance follows the
+/// band structure, made actionable — RCM reordering + windowed local
+/// buffers per suite matrix. Columns: half-bandwidth before/after, the
+/// parallel working set (sequential ws + windowed buffers) before/after,
+/// measured windowed `local-buffers/effective` Mflop/s before/after
+/// (the reordered run pays its per-product permute/un-permute), and a
+/// correctness check of the reordered path against the plain product.
+pub fn reorder_table(entries: &[DatasetEntry], p: usize) -> Vec<Vec<String>> {
+    entries
+        .iter()
+        .map(|e| {
+            let m = Arc::new(e.build_csrc());
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let plan =
+                Arc::new(PlanBuilder::new(p).ranges().reorder().build(kernel.as_ref()));
+            let r = plan.reorder.clone().expect("reorder piece requested");
+            let permuted = Arc::new(m.permuted(&r.perm));
+            let pkernel: Arc<dyn SpmvKernel> = permuted.clone();
+            let pplan = Arc::new(PlanBuilder::new(p).ranges().build(pkernel.as_ref()));
+            let n = m.n;
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+            let mut y_plain = vec![0.0; n];
+            let mut y_reord = vec![0.0; n];
+            let products = products_for(m.nnz()).min(200);
+            let kind = EngineKind::LocalBuffers(AccumMethod::Effective);
+            let mut plain = build_engine(kind, kernel.clone(), plan.clone());
+            let mut reord = crate::reorder::ReorderedEngine::new(
+                build_engine(kind, pkernel.clone(), pplan.clone()),
+                r.perm.clone(),
+            );
+            let t_plain =
+                metrics::median_of_runs(2, products, || plain.spmv(&x, &mut y_plain));
+            let t_reord =
+                metrics::median_of_runs(2, products, || reord.spmv(&x, &mut y_reord));
+            let ok = y_plain
+                .iter()
+                .zip(&y_reord)
+                .all(|(a, b)| (a - b).abs() <= 1e-9 * (1.0 + a.abs()));
+            vec![
+                e.name.to_string(),
+                r.hbw_before.to_string(),
+                r.hbw_after.to_string(),
+                format!("{}", m.working_set_bytes_parallel(&plan) / 1024),
+                format!("{}", permuted.working_set_bytes_parallel(&pplan) / 1024),
+                format!("{:.1}", metrics::mflops(m.flops(), t_plain)),
+                format!("{:.1}", metrics::mflops(m.flops(), t_reord)),
+                format!("{:.2}", t_plain / t_reord),
+                if ok { "yes" } else { "NO" }.into(),
+            ]
+        })
+        .collect()
+}
+
+pub fn reorder_headers() -> Vec<String> {
+    [
+        "matrix",
+        "hbw",
+        "hbw rcm",
+        "ws par (KB)",
+        "ws par rcm (KB)",
+        "Mflop/s",
+        "Mflop/s rcm",
+        "speedup",
+        "correct",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
 }
 
 pub fn table2_headers() -> Vec<String> {

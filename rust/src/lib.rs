@@ -58,6 +58,7 @@ pub mod metrics;
 pub mod parallel;
 pub mod partition;
 pub mod plan;
+pub mod reorder;
 pub mod runtime;
 pub mod simulator;
 pub mod solver;

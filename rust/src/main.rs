@@ -17,6 +17,7 @@ use csrc_spmv::harness::{self, figures, Report};
 use csrc_spmv::metrics;
 use csrc_spmv::parallel::{build_engine, EngineKind};
 use csrc_spmv::plan::{PlanBuilder, PlanCache};
+use csrc_spmv::reorder::ReorderPolicy;
 use csrc_spmv::runtime::XlaRuntime;
 use csrc_spmv::simulator::MachineConfig;
 use csrc_spmv::solver;
@@ -40,6 +41,7 @@ fn main() {
         "gen" => cmd_gen(&args),
         "spmv" => cmd_spmv(&args),
         "tune" => cmd_tune(&args),
+        "reorder" => cmd_reorder(&args),
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
         "xla" => cmd_xla(&args),
@@ -59,19 +61,22 @@ fn usage_and_exit() -> ! {
     eprintln!(
         "csrc — parallel structurally-symmetric SpMV (CSRC), Batista et al. 2010 reproduction\n\
          \n\
-         usage: csrc <info|gen|spmv|tune|solve|serve|xla|figures> [options]\n\
+         usage: csrc <info|gen|spmv|tune|reorder|solve|serve|xla|figures> [options]\n\
          \n\
          csrc info    --matrix <dataset-name|file.mtx>\n\
          csrc gen     --kind <poisson2d|poisson3d|elasticity|band|random|dense> --nx N --out a.mtx\n\
+                      [--shuffle] (randomly renumber rows/cols — destroys band structure)\n\
          csrc spmv    --matrix <..> --engine <seq|all-in-one|per-buffer|effective|interval|colorful|atomic>\n\
                       --threads P --products K\n\
          csrc tune    --matrix <..> [--threads P] [--runs R] [--products K]\n\
                       [--cache decisions.json] [--sweep-threads] [--report sweep.json]\n\
+                      [--reorder never|measure|always]\n\
+         csrc reorder --matrix <..> [--threads P] [--out rcm.mtx]\n\
          csrc solve   --matrix <..> --solver <cg|gmres|bicg> [--tol 1e-10]\n\
          csrc serve   [--requests N] [--workers W] [--engine auto] [--min-parallel-n N]\n\
-                      [--sweep-threads]\n\
+                      [--sweep-threads] [--reorder never|measure|always]\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|all>\n\
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|all>\n\
                       [--suite smoke|quick|full] [--out results]"
     );
     std::process::exit(2);
@@ -125,7 +130,7 @@ fn cmd_gen(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 1) as u64;
     let conv = args.f64_or("convection", 0.0);
     let out = args.opt_or("out", "matrix.mtx");
-    let coo = match kind {
+    let mut coo = match kind {
         "poisson2d" => gen::poisson_2d_quad(nx, conv, seed),
         "poisson2d-tri" => gen::poisson_2d_tri(nx, conv, seed),
         "poisson3d" => gen::poisson_3d_hex(nx, conv, seed),
@@ -149,6 +154,27 @@ fn cmd_gen(args: &Args) -> Result<()> {
         }
         other => return Err(msg(format!("unknown kind {other:?}"))),
     };
+    // `--shuffle`: renumber rows/columns with a random symmetric
+    // permutation. Destroys the band structure on purpose — the input
+    // the `reorder` command (RCM) is meant to repair.
+    if args.has_flag("shuffle") {
+        if coo.nrows != coo.ncols {
+            return Err(msg("--shuffle needs a square matrix"));
+        }
+        let mut rng = Rng::new(seed.wrapping_add(0x9e37));
+        let perm = rng.permutation(coo.nrows);
+        let mut new_of = vec![0u32; coo.nrows];
+        for (new, &old) in perm.iter().enumerate() {
+            new_of[old] = new as u32;
+        }
+        for r in &mut coo.rows {
+            *r = new_of[*r as usize];
+        }
+        for c in &mut coo.cols {
+            *c = new_of[*c as usize];
+        }
+        coo.compact();
+    }
     mmio::write_matrix_market(Path::new(out), &coo, &format!("csrc gen --kind {kind}"))?;
     println!("wrote {out}: {}x{}, {} nnz", coo.nrows, coo.ncols, coo.nnz());
     Ok(())
@@ -205,14 +231,19 @@ fn cmd_tune(args: &Args) -> Result<()> {
         Some(p) => tuner::DecisionCache::open(Path::new(p)),
         None => tuner::DecisionCache::in_memory(),
     };
+    let policy = match args.opt("reorder") {
+        Some(s) => ReorderPolicy::parse(s)
+            .ok_or_else(|| msg("bad --reorder (never|measure|always)"))?,
+        None => ReorderPolicy::Never,
+    };
     let (d, hit) = if args.has_flag("sweep-threads") {
         let ladder = tuner::thread_ladder(threads);
         let plans = PlanCache::new();
         let mut plan_for = tuner::cached_plan_provider(&plans, &name, &kernel);
-        tuner::resolve_swept(&kernel, &ladder, &budget, &cache, &mut plan_for)
+        tuner::resolve_swept(&kernel, &ladder, &budget, &cache, &mut plan_for, policy)
     } else {
         let plan = Arc::new(PlanBuilder::all(threads).build(kernel.as_ref()));
-        tuner::resolve(&kernel, &plan, &budget, &cache)
+        tuner::resolve(&kernel, &plan, &budget, &cache, policy)
     };
     println!(
         "{name}: n={} colors={} intervals={} bandwidth={} scatter-ratio={:.3} balance={:.3}",
@@ -226,7 +257,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     let print_trial = |indent: &str, t: &tuner::TrialResult| {
         println!(
             "{indent}{:<28} {:>10.3} ms/product  {:>9.1} Mflop/s",
-            t.kind.label(),
+            t.label(),
             t.seconds_per_product * 1e3,
             metrics::mflops(flops, t.seconds_per_product)
         );
@@ -243,10 +274,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
             }
         }
     }
-    let win = d.trials.iter().find(|t| t.kind == d.kind);
+    let win = d.trials.iter().find(|t| t.kind == d.kind && t.reordered == d.reorder);
     println!(
         "winner: {} at {} threads ({}; tuned in {:.1} ms{})",
-        d.kind.label(),
+        d.label(),
         d.nthreads,
         match win {
             Some(w) => format!("{:.1} Mflop/s", metrics::mflops(flops, w.seconds_per_product)),
@@ -264,6 +295,41 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
         std::fs::write(path, tuner::decision_json(&d).dump())?;
         println!("wrote decision report to {report}");
+    }
+    Ok(())
+}
+
+/// RCM reorder report: half-bandwidth and working-set bytes before vs
+/// after, with the windowed-buffer accounting at `--threads`. `--out`
+/// writes the permuted matrix for downstream use.
+fn cmd_reorder(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let threads = args.usize_or("threads", 4);
+    let a = Arc::new(m);
+    let kernel: Arc<dyn SpmvKernel> = a.clone();
+    let plan = PlanBuilder::new(threads).ranges().reorder().build(kernel.as_ref());
+    let r = plan.reorder.as_ref().expect("reorder piece requested");
+    let permuted = a.permuted(&r.perm);
+    let pplan = PlanBuilder::new(threads).ranges().build(&permuted);
+    println!("matrix        : {name}");
+    println!("n             : {}  nnz {}", a.n, a.nnz());
+    println!("half-bandwidth: {} -> {}", r.hbw_before, r.hbw_after);
+    println!("ws sequential : {} KB", a.working_set_bytes() / 1024);
+    println!(
+        "ws parallel   : {} KB -> {} KB ({threads} threads, windowed buffers)",
+        a.working_set_bytes_parallel(&plan) / 1024,
+        permuted.working_set_bytes_parallel(&pplan) / 1024,
+    );
+    println!(
+        "full buffers  : {} KB (pre-windowing p*n layout)",
+        a.working_set_bytes().saturating_add(threads * a.n * 8) / 1024
+    );
+    println!("rcm analysis  : {:.2} ms", plan.stats.reorder_s * 1e3);
+    println!("hbw reduced   : {}", if r.improves() { "yes" } else { "no" });
+    if let Some(out) = args.opt("out") {
+        let coo = permuted.to_csr().to_coo();
+        mmio::write_matrix_market(Path::new(out), &coo, "csrc reorder (RCM-permuted)")?;
+        println!("wrote RCM-permuted matrix to {out}");
     }
     Ok(())
 }
@@ -313,6 +379,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.route.min_parallel_n = args.usize_or("min-parallel-n", cfg.route.min_parallel_n);
     // `--sweep-threads` lets Auto pick the thread count per matrix, too.
     cfg.route.sweep_threads = args.has_flag("sweep-threads");
+    // `--reorder measure` lets the tuner race RCM-reordered candidates;
+    // `always` serves every parallel request through the RCM ordering.
+    if let Some(s) = args.opt("reorder") {
+        cfg.route.reorder =
+            ReorderPolicy::parse(s).ok_or_else(|| msg("bad --reorder (never|measure|always)"))?;
+    }
     let svc = MatvecService::start(cfg);
     // Register a few dataset matrices once, remembering their sizes.
     let names = ["thermal", "torsion1", "poisson3Da"];
@@ -537,6 +609,17 @@ fn cmd_figures(args: &Args) -> Result<()> {
             "Thread sweep — best rate per thread count and the swept (engine × p) winner",
             &h,
             &figures::sweep_table(&suite, p, &trial_budget),
+        )?;
+    }
+    if run_all || what == "reorder" {
+        let p = args.usize_or("threads", 4);
+        let headers = figures::reorder_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "reorder",
+            "RCM reordering — half-bandwidth, windowed working set, Mflop/s before/after",
+            &h,
+            &figures::reorder_table(&suite, p),
         )?;
     }
     println!("wrote results under {out}/");

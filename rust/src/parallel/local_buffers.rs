@@ -9,6 +9,20 @@
 //! | effective  | own buffer over own effective range | own *owned rows*, buffers covering them        | Θ(p log(n/p))|
 //! | interval   | intervals of intersected eff ranges | intervals, assigned load-balanced              | Θ(p log(n/p))|
 //!
+//! **Windowed buffers.** Thread t only ever writes
+//! `[eff[t].start, block(t).end)` — its effective range — so its private
+//! buffer is allocated over exactly that window (`buf[t][i]` holds
+//! `y[win[t].start + i]`, plumbed through the kernel's `lo` offset)
+//! instead of a full-length copy of y. Every init/accumulation path
+//! indexes windowed buffers, so the bytes allocated, zeroed, swept and
+//! summed shrink from `p·n` to `Σ_t |eff[t]|`. Symmetric SpMV is
+//! bandwidth-bound (arXiv:0910.4836, arXiv:1907.06487): those bytes are
+//! the cost of the local-buffers strategy, and RCM reordering
+//! ([`crate::reorder`]) is what makes the windows tight — a banded
+//! matrix has `Σ|eff| ≈ n + p·hbw ≪ p·n`. The full-length layout
+//! survives behind [`LocalBuffersEngine::with_plan_windowed`] as the
+//! ablation baseline (`benches/ablations.rs` windowed-vs-full).
+//!
 //! All analysis (nnz-guided partition, effective ranges, interval
 //! decomposition) lives in the borrowed [`SpmvPlan`]; this type holds
 //! only execution state — the thread pool and the scatter buffers — and
@@ -59,6 +73,13 @@ pub struct LocalBuffersEngine {
     pool: ThreadPool,
     method: AccumMethod,
     bufs: SharedBuffers,
+    /// Per-thread buffer windows: `bufs[t][i]` holds `y[win[t].start + i]`.
+    /// Windowed engines use the plan's effective ranges; the full-length
+    /// baseline (and plans without the `ranges` piece) use `0..n`.
+    win: Vec<Range<usize>>,
+    /// Prefix sums of window lengths (`flat[t]` = slots before buffer t;
+    /// `flat[p]` = total slots) — the all-in-one flat init split.
+    flat: Vec<usize>,
     /// Nanoseconds of the slowest thread's init+accumulate work in the
     /// last call — the Table 2 measurement.
     pub last_overhead_ns: u64,
@@ -76,12 +97,26 @@ impl LocalBuffersEngine {
         Self::with_plan(kernel, plan, method)
     }
 
-    /// Build over a shared plan. The plan must carry the pieces `method`
-    /// needs (`ranges` for effective, `intervals` for interval).
+    /// Build over a shared plan with windowed buffers (the default). The
+    /// plan must carry the pieces `method` needs (`ranges` for
+    /// effective, `intervals` for interval).
     pub fn with_plan(
         kernel: Arc<dyn SpmvKernel>,
         plan: Arc<SpmvPlan>,
         method: AccumMethod,
+    ) -> Self {
+        Self::with_plan_windowed(kernel, plan, method, true)
+    }
+
+    /// [`LocalBuffersEngine::with_plan`] with the buffer layout made
+    /// explicit: `windowed = false` allocates the pre-windowing
+    /// full-length buffers (one n-sized copy of y per thread) — kept as
+    /// the measured baseline for the windowed-vs-full ablation.
+    pub fn with_plan_windowed(
+        kernel: Arc<dyn SpmvKernel>,
+        plan: Arc<SpmvPlan>,
+        method: AccumMethod,
+        windowed: bool,
     ) -> Self {
         let n = kernel.dim();
         assert_eq!(plan.n, n, "plan built for a different matrix");
@@ -95,13 +130,28 @@ impl LocalBuffersEngine {
             _ => {}
         }
         let p = plan.nthreads;
-        let bufs = SharedBuffers::new(p, n);
+        // Window = effective range (eff[t].end == block(t).end by plan
+        // invariant); plans without ranges fall back to full-length.
+        let win: Vec<Range<usize>> = match (&plan.eff, windowed) {
+            (Some(eff), true) => eff.clone(),
+            _ => (0..p).map(|_| 0..n).collect(),
+        };
+        let mut flat = Vec::with_capacity(p + 1);
+        let mut total = 0usize;
+        flat.push(0usize);
+        for r in &win {
+            total += r.len();
+            flat.push(total);
+        }
+        let bufs = SharedBuffers::windowed(&win);
         LocalBuffersEngine {
             kernel,
             plan,
             pool: ThreadPool::new(p),
             method,
             bufs,
+            win,
+            flat,
             last_overhead_ns: 0,
         }
     }
@@ -112,6 +162,70 @@ impl LocalBuffersEngine {
 
     pub fn effective_ranges(&self) -> Option<&[Range<usize>]> {
         self.plan.eff.as_deref()
+    }
+
+    /// The per-thread buffer windows actually allocated.
+    pub fn windows(&self) -> &[Range<usize>] {
+        &self.win
+    }
+
+    /// Bytes of private scatter-buffer backing this engine. Windowed
+    /// engines hold `Σ_t |win[t]| · 8`; the full-length baseline holds
+    /// `p·n·8`.
+    pub fn buffer_bytes(&self) -> usize {
+        *self.flat.last().unwrap() * 8
+    }
+
+    /// What the pre-windowing layout would allocate: `p·n·8`.
+    pub fn full_buffer_bytes(&self) -> usize {
+        self.plan.nthreads * self.plan.n * 8
+    }
+
+    /// Buffer bytes the init step zeroes per product under this
+    /// engine's method and layout (the Table 2 cost the windows shrink).
+    pub fn bytes_zeroed_per_product(&self) -> usize {
+        if self.pool.nthreads() == 1 {
+            return 0; // single-thread shortcut: no buffers at all
+        }
+        match self.method {
+            // Whole buffers, so exactly the allocated slots.
+            AccumMethod::AllInOne | AccumMethod::PerBuffer => self.buffer_bytes(),
+            // Own effective range only (identical in both layouts).
+            AccumMethod::Effective => self
+                .plan
+                .eff
+                .as_ref()
+                .map(|eff| eff.iter().map(|r| r.len()).sum::<usize>() * 8)
+                .unwrap_or_else(|| self.buffer_bytes()),
+            // Each interval zeroed once per covering buffer.
+            AccumMethod::Interval => self
+                .plan
+                .ints
+                .as_ref()
+                .map(|ints| {
+                    ints.iter().map(|i| i.range.len() * i.covers.len()).sum::<usize>() * 8
+                })
+                .unwrap_or_else(|| self.buffer_bytes()),
+        }
+    }
+
+    /// Buffer bytes the accumulation step reads per product.
+    pub fn bytes_accumulated_per_product(&self) -> usize {
+        if self.pool.nthreads() == 1 {
+            return 0;
+        }
+        match self.method {
+            // Every buffer summed over its (window ∩ y-split) extent.
+            AccumMethod::AllInOne | AccumMethod::PerBuffer => self.buffer_bytes(),
+            // Covering buffers over owned rows / intervals: one read per
+            // (row × covering buffer) = Σ |eff| either way.
+            AccumMethod::Effective | AccumMethod::Interval => self
+                .plan
+                .eff
+                .as_ref()
+                .map(|eff| eff.iter().map(|r| r.len()).sum::<usize>() * 8)
+                .unwrap_or_else(|| self.buffer_bytes()),
+        }
     }
 }
 
@@ -137,6 +251,8 @@ impl ParallelSpmv for LocalBuffersEngine {
         let ints: &[crate::partition::Interval] = plan.ints.as_deref().unwrap_or(&[]);
         let int_assign: &[Vec<usize>] = plan.int_assign.as_deref().unwrap_or(&[]);
         let bufs = &self.bufs;
+        let win: &[Range<usize>] = &self.win;
+        let flat: &[usize] = &self.flat;
         let method = self.method;
         let barrier = self.pool.barrier();
         let yv = SyncSlice::new(y);
@@ -150,39 +266,52 @@ impl ParallelSpmv for LocalBuffersEngine {
             let t0 = Instant::now();
             match method {
                 AccumMethod::AllInOne => {
-                    // The team's p buffers seen as one dense p*n array,
-                    // split evenly among threads.
-                    let total = p * n;
-                    let (lo, hi) = (t * total / p, (t + 1) * total / p);
-                    let mut i = lo;
-                    while i < hi {
-                        let b = i / n;
-                        let off = i % n;
-                        let run = (hi - i).min(n - off);
-                        // SAFETY: [b][off..off+run] touched by this thread
-                        // only — the flat split is disjoint.
-                        unsafe { bufs.get_mut(b)[off..off + run].fill(0.0) };
-                        i += run;
+                    // The team's buffers seen as one dense flat array of
+                    // `flat[p]` window slots, split evenly among threads.
+                    let total = flat[p];
+                    let (glo, ghi) = (t * total / p, (t + 1) * total / p);
+                    for b in 0..p {
+                        let (bs, be) = (flat[b], flat[b + 1]);
+                        let lo = glo.max(bs);
+                        let hi = ghi.min(be);
+                        if lo < hi {
+                            // SAFETY: the flat split is disjoint across
+                            // threads, so [lo-bs, hi-bs) of buffer b is
+                            // touched by this thread only.
+                            unsafe { bufs.get_mut(b)[lo - bs..hi - bs].fill(0.0) };
+                        }
                     }
                 }
                 AccumMethod::PerBuffer => {
-                    // Buffer-by-buffer, rows split among threads.
+                    // Buffer-by-buffer, each window split among threads.
                     for b in 0..p {
-                        let (lo, hi) = (t * n / p, (t + 1) * n / p);
+                        let len_b = win[b].len();
+                        let (lo, hi) = (t * len_b / p, (t + 1) * len_b / p);
+                        // SAFETY: [lo,hi) disjoint per thread within b.
                         unsafe { bufs.get_mut(b)[lo..hi].fill(0.0) };
                     }
                 }
                 AccumMethod::Effective => {
-                    // Own buffer, own effective range only.
+                    // Own buffer, own effective range only (the whole
+                    // window when windowed).
                     let r = eff[t].clone();
-                    unsafe { bufs.get_mut(t)[r].fill(0.0) };
+                    let off = win[t].start;
+                    // SAFETY: buffer t touched by thread t only here.
+                    unsafe { bufs.get_mut(t)[r.start - off..r.end - off].fill(0.0) };
                 }
                 AccumMethod::Interval => {
-                    // Assigned intervals, every covering buffer.
+                    // Assigned intervals, every covering buffer. An
+                    // interval is ⊆ eff[b] ⊆ win[b] for each b it covers.
                     for &i in &int_assign[t] {
                         let int = &ints[i];
                         for &b in &int.covers {
-                            unsafe { bufs.get_mut(b)[int.range.clone()].fill(0.0) };
+                            let off = win[b].start;
+                            // SAFETY: intervals are disjoint and each is
+                            // assigned to exactly one thread.
+                            unsafe {
+                                bufs.get_mut(b)[int.range.start - off..int.range.end - off]
+                                    .fill(0.0)
+                            };
                         }
                     }
                 }
@@ -190,26 +319,38 @@ impl ParallelSpmv for LocalBuffersEngine {
             overhead_ns += t0.elapsed().as_nanos() as u64;
             barrier.wait();
 
-            // ---- compute step: private buffer, no races ---------------
+            // ---- compute step: private windowed buffer, no races ------
             let block = part.block(t);
             // SAFETY: buffer t is written by thread t only in this phase.
             let buf = unsafe { bufs.get_mut(t) };
-            kernel.sweep_rows_into(x, block.start, block.end, buf, 0);
+            // The window offset is the kernel's `lo`: scatters land at
+            // `buf[j - win[t].start]`, and every write of the block sits
+            // in [eff[t].start, block.end) ⊆ win[t] by plan invariant.
+            kernel.sweep_rows_into(x, block.start, block.end, buf, win[t].start);
             barrier.wait();
 
             // ---- accumulation step ------------------------------------
             let t1 = Instant::now();
             match method {
                 AccumMethod::AllInOne => {
-                    // y rows split evenly; each thread sums all p buffers.
+                    // y rows split evenly; each thread sums the buffers
+                    // whose window overlaps its rows.
                     let (lo, hi) = (t * n / p, (t + 1) * n / p);
                     // SAFETY: [lo,hi) disjoint per thread.
                     let dst = unsafe { yv.slice_mut(lo..hi) };
                     dst.fill(0.0);
                     for b in 0..p {
-                        let src = unsafe { bufs.read(b) };
-                        for (d, s) in dst.iter_mut().zip(&src[lo..hi]) {
-                            *d += *s;
+                        let from = lo.max(win[b].start);
+                        let to = hi.min(win[b].end);
+                        if from < to {
+                            let src = unsafe { bufs.read(b) };
+                            let off = win[b].start;
+                            // Slice-zip keeps the loop bounds-check-free.
+                            for (d, s) in
+                                dst[from - lo..to - lo].iter_mut().zip(&src[from - off..to - off])
+                            {
+                                *d += *s;
+                            }
                         }
                     }
                 }
@@ -218,12 +359,21 @@ impl ParallelSpmv for LocalBuffersEngine {
                     let dst = unsafe { yv.slice_mut(lo..hi) };
                     dst.fill(0.0);
                     for b in 0..p {
-                        let src = unsafe { bufs.read(b) };
-                        for (d, s) in dst.iter_mut().zip(&src[lo..hi]) {
-                            *d += *s;
+                        let from = lo.max(win[b].start);
+                        let to = hi.min(win[b].end);
+                        if from < to {
+                            let src = unsafe { bufs.read(b) };
+                            let off = win[b].start;
+                            for (d, s) in
+                                dst[from - lo..to - lo].iter_mut().zip(&src[from - off..to - off])
+                            {
+                                *d += *s;
+                            }
                         }
                         // The paper's per-buffer scheme synchronizes the
-                        // team between buffers (span Θ(p log n)).
+                        // team between buffers (span Θ(p log n)); the
+                        // barrier count must match across threads, so it
+                        // sits outside the overlap check.
                         barrier.wait();
                     }
                 }
@@ -237,8 +387,12 @@ impl ParallelSpmv for LocalBuffersEngine {
                         let src = unsafe { bufs.read(b) };
                         let from = own.start.max(eff[b].start);
                         let to = own.end.min(eff[b].end);
-                        for i in from..to {
-                            dst[i - own.start] += src[i];
+                        let off = win[b].start;
+                        for (d, s) in dst[from - own.start..to - own.start]
+                            .iter_mut()
+                            .zip(&src[from - off..to - off])
+                        {
+                            *d += *s;
                         }
                     }
                 }
@@ -249,8 +403,10 @@ impl ParallelSpmv for LocalBuffersEngine {
                         dst.fill(0.0);
                         for &b in &int.covers {
                             let src = unsafe { bufs.read(b) };
-                            for (d, s) in dst.iter_mut().zip(&src[int.range.clone()]) {
-                                *d += *s;
+                            let off = win[b].start;
+                            let s = &src[int.range.start - off..int.range.end - off];
+                            for (d, v) in dst.iter_mut().zip(s) {
+                                *d += *v;
                             }
                         }
                     }
@@ -322,6 +478,51 @@ mod tests {
         }
     }
 
+    /// The windowed layout and the full-length baseline must agree on
+    /// every method (the windowed-vs-full ablation's correctness leg),
+    /// while the windowed engine backs strictly fewer bytes on a banded
+    /// matrix.
+    #[test]
+    fn windowed_matches_full_and_shrinks_bytes() {
+        let mut rng = Rng::new(56);
+        let a = Arc::new(Csrc::from_coo(&Coo::banded(240, 2, false, &mut rng)).unwrap());
+        let plan = Arc::new(PlanBuilder::all(4).build(a.as_ref()));
+        let x: Vec<f64> = (0..240).map(|i| (i as f64 * 0.05).sin()).collect();
+        let mut want = vec![0.0; 240];
+        a.spmv_into_zeroed(&x, &mut want);
+        for method in AccumMethod::all() {
+            let mut wdw = LocalBuffersEngine::with_plan(a.clone(), plan.clone(), method);
+            let mut full =
+                LocalBuffersEngine::with_plan_windowed(a.clone(), plan.clone(), method, false);
+            let (mut y1, mut y2) = (vec![f64::NAN; 240], vec![f64::NAN; 240]);
+            wdw.spmv(&x, &mut y1);
+            full.spmv(&x, &mut y2);
+            propcheck::assert_close(&y1, &want, 1e-11, 1e-11)
+                .unwrap_or_else(|e| panic!("windowed {}: {e}", method.label()));
+            propcheck::assert_close(&y2, &want, 1e-11, 1e-11)
+                .unwrap_or_else(|e| panic!("full {}: {e}", method.label()));
+            // A tight band keeps every effective range near its block:
+            // the windows must be a small fraction of p·n.
+            assert!(
+                wdw.buffer_bytes() < full.buffer_bytes() / 2,
+                "{}: windowed {} vs full {} bytes",
+                method.label(),
+                wdw.buffer_bytes(),
+                full.buffer_bytes()
+            );
+            assert_eq!(full.buffer_bytes(), full.full_buffer_bytes());
+            assert!(wdw.bytes_zeroed_per_product() <= full.bytes_zeroed_per_product());
+            assert!(wdw.bytes_accumulated_per_product() <= full.bytes_accumulated_per_product());
+            // All-in-one / per-buffer zero whole buffers: windowing must
+            // strictly shrink what they touch.
+            if matches!(method, AccumMethod::AllInOne | AccumMethod::PerBuffer) {
+                assert!(wdw.bytes_zeroed_per_product() < full.bytes_zeroed_per_product());
+            }
+            // The windows are exactly the plan's effective ranges.
+            assert_eq!(wdw.windows(), plan.eff.as_deref().unwrap());
+        }
+    }
+
     #[test]
     fn single_thread_shortcut_no_overhead() {
         let a = mat(40, 3, 51);
@@ -330,6 +531,7 @@ mod tests {
         let mut y = vec![0.0; 40];
         e.spmv(&x, &mut y);
         assert_eq!(e.last_overhead_ns, 0);
+        assert_eq!(e.bytes_zeroed_per_product(), 0);
     }
 
     #[test]
@@ -373,5 +575,33 @@ mod tests {
                 propcheck::assert_close(&y, &want, 1e-10, 1e-10).unwrap();
             }
         }
+    }
+
+    #[test]
+    fn property_windowed_buffers_match_oracle() {
+        // Random structurally-symmetric *and* banded patterns, every
+        // method, random thread counts: the windowed engine must match
+        // the sequential oracle bit-for-tolerance.
+        propcheck::check(10, |rng| {
+            let n = 16 + rng.below(120);
+            let coo = if rng.below(2) == 0 {
+                Coo::random_structurally_symmetric(n, 1 + rng.below(5), false, rng)
+            } else {
+                Coo::banded(n, 1 + rng.below(4), false, rng)
+            };
+            let a = Arc::new(Csrc::from_coo(&coo).map_err(|e| e.to_string())?);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mut want = vec![0.0; n];
+            a.spmv_into_zeroed(&x, &mut want);
+            let p = 2 + rng.below(5);
+            for method in AccumMethod::all() {
+                let mut e = LocalBuffersEngine::new(a.clone(), p, method);
+                let mut y = vec![f64::NAN; n];
+                e.spmv(&x, &mut y);
+                propcheck::assert_close(&y, &want, 1e-10, 1e-10)
+                    .map_err(|e| format!("{} p={p}: {e}", method.label()))?;
+            }
+            Ok(())
+        });
     }
 }

@@ -71,8 +71,30 @@ impl SharedBuffers {
         Self { bufs: (0..p).map(|_| UnsafeCell::new(vec![0.0; len])).collect() }
     }
 
+    /// One buffer per window, each sized to its window only — the
+    /// windowed local-buffers engine's backing store. `windows[t]` is
+    /// thread t's effective range; `buf[t][i]` holds `y[windows[t].start
+    /// + i]`.
+    pub fn windowed(windows: &[std::ops::Range<usize>]) -> Self {
+        Self {
+            bufs: windows.iter().map(|r| UnsafeCell::new(vec![0.0; r.len()])).collect(),
+        }
+    }
+
     pub fn count(&self) -> usize {
         self.bufs.len()
+    }
+
+    /// Length of buffer `t` (its window length).
+    pub fn len_of(&self, t: usize) -> usize {
+        // Safe: len() reads only the Vec header, and rebuilding buffers
+        // never happens after construction.
+        unsafe { (*self.bufs[t].get()).len() }
+    }
+
+    /// Total f64 slots across all buffers.
+    pub fn total_len(&self) -> usize {
+        (0..self.count()).map(|t| self.len_of(t)).sum()
     }
 
     /// # Safety

@@ -39,27 +39,40 @@ use std::time::Instant;
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PlanPieces {
     /// Per-thread effective ranges + owned-block covering sets (§3.1
-    /// *effective* accumulation).
+    /// *effective* accumulation; since the windowed-buffer change, every
+    /// local-buffers method sizes its scatter buffers from these).
     pub ranges: bool,
     /// Interval decomposition + balanced assignment (§3.1 *interval*
     /// accumulation; implies `ranges`).
     pub intervals: bool,
     /// Conflict coloring + per-class thread shares (§3.2 colorful).
     pub coloring: bool,
+    /// RCM reorder analysis ([`crate::reorder::rcm`]): the permutation
+    /// plus half-bandwidth before/after. Opt-in — no engine *requires*
+    /// it; the tuner's reordered candidates and the reorder figures
+    /// consume it.
+    pub reorder: bool,
 }
 
 impl PlanPieces {
+    /// Every piece an engine might need. The reorder analysis is *not*
+    /// included: it is policy-driven ([`crate::reorder::ReorderPolicy`]),
+    /// not engine-driven — request it with [`PlanBuilder::reorder`].
     pub fn all() -> PlanPieces {
-        PlanPieces { ranges: true, intervals: true, coloring: true }
+        PlanPieces { ranges: true, intervals: true, coloring: true, reorder: false }
     }
 
-    /// The pieces one engine kind needs.
+    /// The pieces one engine kind needs. Every local-buffers method now
+    /// asks for `ranges`: the effective ranges are the buffer *windows*,
+    /// so even all-in-one/per-buffer — which never consult them for
+    /// scheduling — need them to allocate windowed buffers instead of
+    /// full-length copies of y.
     pub fn for_kind(kind: EngineKind) -> PlanPieces {
         match kind {
             EngineKind::Sequential | EngineKind::Atomic => PlanPieces::default(),
             EngineKind::LocalBuffers(AccumMethod::AllInOne)
-            | EngineKind::LocalBuffers(AccumMethod::PerBuffer) => PlanPieces::default(),
-            EngineKind::LocalBuffers(AccumMethod::Effective) => {
+            | EngineKind::LocalBuffers(AccumMethod::PerBuffer)
+            | EngineKind::LocalBuffers(AccumMethod::Effective) => {
                 PlanPieces { ranges: true, ..Default::default() }
             }
             EngineKind::LocalBuffers(AccumMethod::Interval) => {
@@ -77,6 +90,7 @@ impl PlanPieces {
             ranges: self.ranges || other.ranges || self.intervals || other.intervals,
             intervals: self.intervals || other.intervals,
             coloring: self.coloring || other.coloring,
+            reorder: self.reorder || other.reorder,
         }
     }
 
@@ -85,6 +99,7 @@ impl PlanPieces {
         (self.ranges || !other.ranges)
             && (self.intervals || !other.intervals)
             && (self.coloring || !other.coloring)
+            && (self.reorder || !other.reorder)
     }
 }
 
@@ -96,7 +111,30 @@ pub struct PlanStats {
     pub ranges_s: f64,
     pub intervals_s: f64,
     pub coloring_s: f64,
+    pub reorder_s: f64,
     pub total_s: f64,
+}
+
+/// The reorder stage's output (`pieces.reorder`): the RCM permutation
+/// and the half-bandwidth it would achieve — recorded whether or not a
+/// caller decides to execute through it, so reorder-on vs reorder-off
+/// is an informed choice.
+#[derive(Clone, Debug)]
+pub struct ReorderPlan {
+    pub perm: Arc<crate::reorder::Permutation>,
+    /// Half-bandwidth of the kernel's symmetric pattern as given.
+    pub hbw_before: usize,
+    /// Half-bandwidth under the RCM permutation.
+    pub hbw_after: usize,
+}
+
+impl ReorderPlan {
+    /// Does the permutation actually tighten the band? (An already
+    /// well-ordered matrix gains nothing and should skip the permute /
+    /// un-permute cost.)
+    pub fn improves(&self) -> bool {
+        self.hbw_after < self.hbw_before
+    }
 }
 
 /// An immutable, shareable scheduling plan for one matrix × thread-count.
@@ -119,6 +157,8 @@ pub struct SpmvPlan {
     /// (`pieces.coloring`).
     pub colors: Option<ColorClasses>,
     pub color_shares: Option<Vec<Vec<(usize, usize)>>>,
+    /// RCM reorder analysis (`pieces.reorder`).
+    pub reorder: Option<ReorderPlan>,
     pub stats: PlanStats,
 }
 
@@ -197,6 +237,11 @@ impl SpmvPlan {
                 return Err(format!("interval {idx} unassigned"));
             }
         }
+        if let Some(r) = &self.reorder {
+            if r.perm.len() != n {
+                return Err(format!("reorder perm length {} != n {n}", r.perm.len()));
+            }
+        }
         if let Some(colors) = &self.colors {
             let g = ConflictGraph::build(kernel);
             colors.validate(&g)?;
@@ -254,6 +299,12 @@ impl PlanBuilder {
 
     pub fn coloring(self) -> PlanBuilder {
         self.with_pieces(PlanPieces { coloring: true, ..Default::default() })
+    }
+
+    /// Request the RCM reorder analysis (permutation + half-bandwidth
+    /// before/after in the plan and `reorder_s` in the stats).
+    pub fn reorder(self) -> PlanBuilder {
+        self.with_pieces(PlanPieces { reorder: true, ..Default::default() })
     }
 
     pub fn nthreads(&self) -> usize {
@@ -318,6 +369,13 @@ impl PlanBuilder {
             color_shares = Some(shares);
         }
 
+        let mut reorder = None;
+        if self.pieces.reorder {
+            let (rp, dt) = metrics::timed(|| crate::reorder::analyze(kernel));
+            stats.reorder_s = dt;
+            reorder = Some(rp);
+        }
+
         stats.total_s = t_all.elapsed().as_secs_f64();
         SpmvPlan {
             n,
@@ -331,6 +389,7 @@ impl PlanBuilder {
             int_assign,
             colors,
             color_shares,
+            reorder,
             stats,
         }
     }
@@ -469,10 +528,40 @@ mod tests {
         use crate::parallel::{AccumMethod, EngineKind};
         assert_eq!(PlanPieces::for_kind(EngineKind::Sequential), PlanPieces::default());
         assert!(PlanPieces::for_kind(EngineKind::LocalBuffers(AccumMethod::Effective)).ranges);
+        // Windowed buffers: even the methods that ignore effective
+        // ranges for *scheduling* need them for buffer sizing.
+        assert!(PlanPieces::for_kind(EngineKind::LocalBuffers(AccumMethod::AllInOne)).ranges);
+        assert!(PlanPieces::for_kind(EngineKind::LocalBuffers(AccumMethod::PerBuffer)).ranges);
         let p = PlanPieces::for_kind(EngineKind::LocalBuffers(AccumMethod::Interval));
         assert!(p.ranges && p.intervals);
         assert!(PlanPieces::for_kind(EngineKind::Colorful).coloring);
         assert_eq!(PlanPieces::for_kind(EngineKind::Auto), PlanPieces::all());
+        // Reorder is policy-driven, never engine-required.
+        for kind in EngineKind::all() {
+            assert!(!PlanPieces::for_kind(kind).reorder, "{}", kind.label());
+        }
+    }
+
+    #[test]
+    fn reorder_stage_records_permutation_and_bandwidth() {
+        let mut rng = Rng::new(7);
+        // A shuffled band: RCM must find a much tighter ordering.
+        let band = Csrc::from_coo(&Coo::banded(150, 2, false, &mut rng)).unwrap();
+        let shuffle =
+            crate::reorder::Permutation::from_new_to_old(rng.permutation(150)).unwrap();
+        let shuffled = band.permuted(&shuffle);
+        let plan = PlanBuilder::new(3).reorder().build(&shuffled);
+        plan.validate(&shuffled).unwrap();
+        let r = plan.reorder.as_ref().expect("reorder piece requested");
+        assert_eq!(r.hbw_before, shuffled.half_bandwidth());
+        assert!(r.improves(), "{} -> {}", r.hbw_before, r.hbw_after);
+        assert!(r.hbw_after <= r.hbw_before / 2);
+        assert!(plan.stats.reorder_s >= 0.0);
+        // The recorded bandwidth matches the actually permuted matrix.
+        let restored = shuffled.permuted(&r.perm);
+        assert_eq!(restored.half_bandwidth(), r.hbw_after);
+        // Plans without the piece stay reorder-free.
+        assert!(PlanBuilder::all(3).build(&shuffled).reorder.is_none());
     }
 
     #[test]

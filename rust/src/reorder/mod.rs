@@ -1,0 +1,615 @@
+//! Bandwidth-aware reordering — the analysis that makes the windowed
+//! local buffers small.
+//!
+//! The paper ties SpMV performance to the band structure (§4.2: cage15
+//! and F1 suffer from "the absence of a band structure") and both
+//! Schubert–Hager–Fehske (arXiv:0910.4836) and RACE (arXiv:1907.06487)
+//! show symmetric SpMV is bandwidth-bound: working-set bytes are the
+//! lever. Reverse Cuthill–McKee clusters the symmetric pattern around
+//! the diagonal, which
+//!
+//! * shrinks every thread's *effective range* (`SpmvPlan::eff`), so the
+//!   windowed scatter buffers of
+//!   [`crate::parallel::LocalBuffersEngine`] zero, sweep and accumulate
+//!   fewer bytes per product,
+//! * reduces the conflict-color count of the §3.2 colorful schedule,
+//! * improves x/y locality of the sequential sweep itself.
+//!
+//! This module owns the mechanics: [`Permutation`] (a validated
+//! new↔old index bijection with `apply`/`apply_inverse`/`inverse`),
+//! [`rcm`] (BFS from a pseudo-peripheral vertex per component, minimum
+//! degree tie-breaks, reversed), [`ReorderedLinOp`] (a solver-facing
+//! operator that permutes x in and un-permutes y out, so `cg`, `gmres`,
+//! `bicg` and `Jacobi` run transparently on reordered operators) and
+//! [`ReorderedEngine`] (the same wrapper at the [`ParallelSpmv`] level,
+//! used by the tuner's reordered candidates and the service workers).
+//! The permuted matrices themselves are built by
+//! [`crate::sparse::Csrc::permuted`] / [`crate::sparse::Csr::permuted`].
+
+use crate::parallel::ParallelSpmv;
+use crate::plan::SpmvPlan;
+use crate::sparse::{LinOp, SpmvKernel};
+use std::sync::Arc;
+
+/// When the stack should reorder a matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ReorderPolicy {
+    /// Run every matrix in its given ordering (the status quo).
+    #[default]
+    Never,
+    /// Let the tuner measure reordered candidates next to the plain
+    /// ones and keep whichever wins — reorder-on vs reorder-off is a
+    /// per-matrix measurement, not folklore.
+    Measure,
+    /// Always execute through the RCM ordering (ablations, matrices
+    /// known to be shuffled).
+    Always,
+}
+
+impl ReorderPolicy {
+    pub fn parse(s: &str) -> Option<ReorderPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "never" | "off" => Some(ReorderPolicy::Never),
+            "measure" | "auto" => Some(ReorderPolicy::Measure),
+            "always" | "on" => Some(ReorderPolicy::Always),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReorderPolicy::Never => "never",
+            ReorderPolicy::Measure => "measure",
+            ReorderPolicy::Always => "always",
+        }
+    }
+}
+
+/// A validated bijection between an *old* (given) and a *new*
+/// (reordered) row/column numbering. Both directions are stored so
+/// per-request permute/un-permute are straight gathers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Permutation {
+    /// `new_to_old[new] = old` — the order the rows are visited in.
+    new_to_old: Vec<usize>,
+    /// `old_to_new[old] = new`.
+    old_to_new: Vec<usize>,
+}
+
+impl Permutation {
+    pub fn identity(n: usize) -> Permutation {
+        Permutation { new_to_old: (0..n).collect(), old_to_new: (0..n).collect() }
+    }
+
+    /// Build from a `perm[new] = old` vector, rejecting anything that is
+    /// not a bijection on `0..len`.
+    pub fn from_new_to_old(new_to_old: Vec<usize>) -> Result<Permutation, String> {
+        let n = new_to_old.len();
+        let mut old_to_new = vec![usize::MAX; n];
+        for (new, &old) in new_to_old.iter().enumerate() {
+            if old >= n {
+                return Err(format!("index {old} out of range 0..{n}"));
+            }
+            if old_to_new[old] != usize::MAX {
+                return Err(format!("index {old} appears twice"));
+            }
+            old_to_new[old] = new;
+        }
+        Ok(Permutation { new_to_old, old_to_new })
+    }
+
+    pub fn len(&self) -> usize {
+        self.new_to_old.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.new_to_old.is_empty()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.new_to_old.iter().enumerate().all(|(new, &old)| new == old)
+    }
+
+    #[inline]
+    pub fn old_of(&self, new: usize) -> usize {
+        self.new_to_old[new]
+    }
+
+    #[inline]
+    pub fn new_of(&self, old: usize) -> usize {
+        self.old_to_new[old]
+    }
+
+    /// The `perm[new] = old` view (what [`rcm`] computed).
+    pub fn as_new_to_old(&self) -> &[usize] {
+        &self.new_to_old
+    }
+
+    /// Gather a vector into the *new* ordering: `out[new] = x[old]`.
+    pub fn apply(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.len());
+        assert_eq!(out.len(), self.len());
+        for (o, &old) in out.iter_mut().zip(&self.new_to_old) {
+            *o = x[old];
+        }
+    }
+
+    /// Scatter a reordered vector back: `out[old] = y[new]`.
+    pub fn apply_inverse(&self, y: &[f64], out: &mut [f64]) {
+        assert_eq!(y.len(), self.len());
+        assert_eq!(out.len(), self.len());
+        for (o, &new) in out.iter_mut().zip(&self.old_to_new) {
+            *o = y[new];
+        }
+    }
+
+    /// The inverse bijection (swaps the two directions).
+    pub fn inverse(&self) -> Permutation {
+        Permutation { new_to_old: self.old_to_new.clone(), old_to_new: self.new_to_old.clone() }
+    }
+}
+
+/// Symmetric adjacency of a kernel's scatter pattern (each unordered
+/// pair mirrored both ways), CSR-shaped. The contract on
+/// [`SpmvKernel::scatter_targets`] — each pair visited once across the
+/// sweep — makes the mirroring exact.
+fn symmetric_adjacency(a: &dyn SpmvKernel) -> (Vec<u32>, Vec<u32>) {
+    let n = a.dim();
+    let mut deg = vec![0u32; n];
+    for i in 0..n {
+        a.scatter_targets(i, &mut |j| {
+            deg[i] += 1;
+            deg[j] += 1;
+        });
+    }
+    let mut xadj = vec![0u32; n + 1];
+    for i in 0..n {
+        xadj[i + 1] = xadj[i] + deg[i];
+    }
+    let mut cursor: Vec<u32> = xadj[..n].to_vec();
+    let mut adj = vec![0u32; xadj[n] as usize];
+    for i in 0..n {
+        a.scatter_targets(i, &mut |j| {
+            adj[cursor[i] as usize] = j as u32;
+            cursor[i] += 1;
+            adj[cursor[j] as usize] = i as u32;
+            cursor[j] += 1;
+        });
+    }
+    (xadj, adj)
+}
+
+/// The BFS level structure rooted at `seed`: (eccentricity, vertices of
+/// the deepest level). `mark`/`epoch` implement O(level-structure-size)
+/// visited tracking — the caller bumps `epoch` instead of clearing the
+/// n-length array, so a graph of many components costs O(n + nnz)
+/// total, not O(n × components).
+fn level_structure(
+    xadj: &[u32],
+    adj: &[u32],
+    seed: usize,
+    mark: &mut [usize],
+    epoch: usize,
+) -> (usize, Vec<usize>) {
+    mark[seed] = epoch;
+    let mut frontier = vec![seed];
+    let mut depth = 0usize;
+    loop {
+        let mut next: Vec<usize> = Vec::new();
+        for &v in &frontier {
+            for &u in &adj[xadj[v] as usize..xadj[v + 1] as usize] {
+                let u = u as usize;
+                if mark[u] != epoch {
+                    mark[u] = epoch;
+                    next.push(u);
+                }
+            }
+        }
+        if next.is_empty() {
+            return (depth, frontier);
+        }
+        depth += 1;
+        frontier = next;
+    }
+}
+
+/// George–Liu pseudo-peripheral vertex: root a level structure at a
+/// minimum-degree start, re-root at a minimum-degree vertex of the
+/// deepest level while the eccentricity keeps growing. Strictly
+/// increasing depth bounds the iteration by the graph diameter.
+fn pseudo_peripheral(
+    xadj: &[u32],
+    adj: &[u32],
+    start: usize,
+    mark: &mut [usize],
+    epoch: &mut usize,
+) -> usize {
+    let mut seed = start;
+    *epoch += 1;
+    let (mut depth, mut last) = level_structure(xadj, adj, seed, mark, *epoch);
+    loop {
+        let candidate = *last
+            .iter()
+            .min_by_key(|&&u| (xadj[u + 1] - xadj[u], u as u32))
+            .unwrap_or(&seed);
+        if candidate == seed {
+            return seed;
+        }
+        *epoch += 1;
+        let (d2, l2) = level_structure(xadj, adj, candidate, mark, *epoch);
+        if d2 <= depth {
+            return seed;
+        }
+        seed = candidate;
+        depth = d2;
+        last = l2;
+    }
+}
+
+/// Reverse Cuthill–McKee over the kernel's symmetric scatter pattern:
+/// per connected component, a Cuthill–McKee traversal from a
+/// pseudo-peripheral vertex — each dequeued vertex appends its
+/// unvisited neighbours in ascending-degree order (the per-*vertex*
+/// queue discipline matters: it reproduces a full band's own ordering
+/// exactly, which per-level batching does not) — then the whole order
+/// reversed. Rows with no off-diagonal entries are bandwidth-neutral;
+/// they are emitted adjacently (and end up reversed with everything
+/// else — a scatter-free kernel maps to the full reversal, not the
+/// identity).
+pub fn rcm(a: &dyn SpmvKernel) -> Permutation {
+    let n = a.dim();
+    let (xadj, adj) = symmetric_adjacency(a);
+    let mut visited = vec![false; n];
+    let mut mark = vec![0usize; n];
+    let mut epoch = 0usize;
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    // Components seeded smallest-degree-first; each is traversed from a
+    // pseudo-peripheral vertex (long, thin level structure → small
+    // bandwidth).
+    let mut by_degree: Vec<usize> = (0..n).collect();
+    by_degree.sort_by_key(|&v| (xadj[v + 1] - xadj[v], v as u32));
+    for &cand in &by_degree {
+        if visited[cand] {
+            continue;
+        }
+        // Isolated vertices (every row of a scatter-free kernel) are
+        // their own component and bandwidth-neutral: emit directly, no
+        // pseudo-peripheral search.
+        if xadj[cand + 1] == xadj[cand] {
+            visited[cand] = true;
+            order.push(cand);
+            continue;
+        }
+        let seed = pseudo_peripheral(&xadj, &adj, cand, &mut mark, &mut epoch);
+        let mut head = order.len();
+        order.push(seed);
+        visited[seed] = true;
+        while head < order.len() {
+            let v = order[head];
+            head += 1;
+            let mut nbrs: Vec<usize> = adj[xadj[v] as usize..xadj[v + 1] as usize]
+                .iter()
+                .map(|&u| u as usize)
+                .filter(|&u| !visited[u])
+                .collect();
+            nbrs.sort_by_key(|&u| (xadj[u + 1] - xadj[u], u as u32));
+            for u in nbrs {
+                visited[u] = true;
+                order.push(u);
+            }
+        }
+    }
+    order.reverse();
+    Permutation::from_new_to_old(order).expect("the traversal visits every vertex exactly once")
+}
+
+/// Half-bandwidth of the kernel's symmetric pattern: max |i − j| over
+/// scatter pairs (0 for scatter-free kernels).
+pub fn pattern_half_bandwidth(a: &dyn SpmvKernel) -> usize {
+    let n = a.dim();
+    let mut bw = 0usize;
+    for i in 0..n {
+        a.scatter_targets(i, &mut |j| {
+            bw = bw.max(if j > i { j - i } else { i - j });
+        });
+    }
+    bw
+}
+
+/// The full reorder analysis for one kernel — the single implementation
+/// behind the plan's reorder stage ([`crate::plan::PlanBuilder::reorder`])
+/// and the tuner's reorder context: RCM permutation plus half-bandwidth
+/// before/after, so both always agree on what reordering would buy.
+pub fn analyze(kernel: &dyn SpmvKernel) -> crate::plan::ReorderPlan {
+    let perm = rcm(kernel);
+    let hbw_before = pattern_half_bandwidth(kernel);
+    let hbw_after = permuted_half_bandwidth(kernel, &perm);
+    crate::plan::ReorderPlan { perm: Arc::new(perm), hbw_before, hbw_after }
+}
+
+/// Half-bandwidth the pattern *would* have under `perm` — computed from
+/// the scatter pairs alone, no permuted matrix needed (the plan's
+/// reorder stage records before/after from this).
+pub fn permuted_half_bandwidth(a: &dyn SpmvKernel, perm: &Permutation) -> usize {
+    let n = a.dim();
+    assert_eq!(perm.len(), n);
+    let mut bw = 0usize;
+    for i in 0..n {
+        let pi = perm.new_of(i);
+        a.scatter_targets(i, &mut |j| {
+            let pj = perm.new_of(j);
+            bw = bw.max(if pj > pi { pj - pi } else { pi - pj });
+        });
+    }
+    bw
+}
+
+/// A solver-facing operator in the *original* numbering, executed
+/// through a reordered inner operator `B = P A Pᵀ`: apply permutes x
+/// in, runs B, and un-permutes y out. `apply_t` and `diagonal` forward
+/// the same way, so `bicg` (needs Aᵀx) and `Jacobi::new` (needs the
+/// diagonal) work transparently.
+pub struct ReorderedLinOp<O: LinOp> {
+    inner: O,
+    perm: Permutation,
+    /// Permute/un-permute scratch (px, py), reused across applies: the
+    /// sandwich sits on the solver hot path (every cg/gmres/bicg
+    /// iteration), so it must not allocate per call. Uncontended Mutex —
+    /// same pattern as [`crate::solver::EngineLinOp`].
+    scratch: std::sync::Mutex<(Vec<f64>, Vec<f64>)>,
+}
+
+impl<O: LinOp> ReorderedLinOp<O> {
+    /// `inner` must act in the reordered numbering (e.g. the matrix from
+    /// [`crate::sparse::Csrc::permuted`] with the same `perm`).
+    pub fn new(inner: O, perm: Permutation) -> ReorderedLinOp<O> {
+        assert_eq!(inner.dim(), perm.len(), "operator/permutation size mismatch");
+        let n = perm.len();
+        ReorderedLinOp {
+            inner,
+            perm,
+            scratch: std::sync::Mutex::new((vec![0.0; n], vec![0.0; n])),
+        }
+    }
+
+    pub fn permutation(&self) -> &Permutation {
+        &self.perm
+    }
+
+    pub fn inner(&self) -> &O {
+        &self.inner
+    }
+}
+
+impl<O: LinOp> LinOp for ReorderedLinOp<O> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let mut s = self.scratch.lock().unwrap();
+        let (px, py) = &mut *s;
+        self.perm.apply(x, px);
+        self.inner.apply(px, py);
+        self.perm.apply_inverse(py, y);
+    }
+
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) -> Result<(), String> {
+        // (Pᵀ B P)ᵀ = Pᵀ Bᵀ P — the same permute/un-permute sandwich.
+        let mut s = self.scratch.lock().unwrap();
+        let (px, py) = &mut *s;
+        self.perm.apply(x, px);
+        self.inner.apply_t(px, py)?;
+        self.perm.apply_inverse(py, y);
+        Ok(())
+    }
+
+    fn diagonal(&self) -> Option<Vec<f64>> {
+        // diag(A)[old] = diag(B)[new_of(old)].
+        let d = self.inner.diagonal()?;
+        let mut out = vec![0.0; d.len()];
+        self.perm.apply_inverse(&d, &mut out);
+        Some(out)
+    }
+}
+
+/// The same sandwich one level down: a [`ParallelSpmv`] engine built
+/// over the *permuted* kernel, exposed in the original numbering. The
+/// permute/un-permute gathers are part of every product — the tuner's
+/// reordered candidates are timed through this wrapper so the measured
+/// rate is end-to-end honest, and the service workers serve through it.
+pub struct ReorderedEngine {
+    inner: Box<dyn ParallelSpmv>,
+    perm: Arc<Permutation>,
+    px: Vec<f64>,
+    py: Vec<f64>,
+}
+
+impl ReorderedEngine {
+    pub fn new(inner: Box<dyn ParallelSpmv>, perm: Arc<Permutation>) -> ReorderedEngine {
+        let n = perm.len();
+        ReorderedEngine { inner, perm, px: vec![0.0; n], py: vec![0.0; n] }
+    }
+}
+
+impl ParallelSpmv for ReorderedEngine {
+    fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
+        self.perm.apply(x, &mut self.px);
+        self.inner.spmv(&self.px, &mut self.py);
+        self.perm.apply_inverse(&self.py, y);
+    }
+
+    fn name(&self) -> String {
+        format!("reordered/{}", self.inner.name())
+    }
+
+    fn nthreads(&self) -> usize {
+        self.inner.nthreads()
+    }
+
+    fn plan(&self) -> Option<&Arc<SpmvPlan>> {
+        self.inner.plan()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::{build_engine_auto, AccumMethod, EngineKind};
+    use crate::solver::{self, Jacobi};
+    use crate::sparse::{Coo, Csrc};
+    use crate::util::{propcheck, Rng};
+
+    fn random(n: usize, npr: usize, seed: u64) -> Csrc {
+        let mut rng = Rng::new(seed);
+        Csrc::from_coo(&Coo::random_structurally_symmetric(n, npr, false, &mut rng)).unwrap()
+    }
+
+    #[test]
+    fn permutation_validates_and_inverts() {
+        assert!(Permutation::from_new_to_old(vec![0, 2, 1]).is_ok());
+        assert!(Permutation::from_new_to_old(vec![0, 0, 1]).is_err());
+        assert!(Permutation::from_new_to_old(vec![0, 3, 1]).is_err());
+        let p = Permutation::from_new_to_old(vec![2, 0, 1]).unwrap();
+        assert_eq!(p.old_of(0), 2);
+        assert_eq!(p.new_of(2), 0);
+        let inv = p.inverse();
+        for i in 0..3 {
+            assert_eq!(inv.old_of(p.new_of(i)), i);
+        }
+        assert!(Permutation::identity(5).is_identity());
+        assert!(!p.is_identity());
+    }
+
+    #[test]
+    fn apply_then_inverse_roundtrips() {
+        let mut rng = Rng::new(1);
+        let p = Permutation::from_new_to_old(rng.permutation(40)).unwrap();
+        let x: Vec<f64> = (0..40).map(|_| rng.normal()).collect();
+        let mut px = vec![0.0; 40];
+        let mut back = vec![0.0; 40];
+        p.apply(&x, &mut px);
+        p.apply_inverse(&px, &mut back);
+        propcheck::assert_close(&back, &x, 0.0, 0.0).unwrap();
+        // apply gathers: px[new] = x[old].
+        for new in 0..40 {
+            assert_eq!(px[new], x[p.old_of(new)]);
+        }
+    }
+
+    #[test]
+    fn rcm_is_a_permutation_on_random_patterns() {
+        let a = random(90, 4, 2);
+        let p = rcm(&a);
+        let mut s = p.as_new_to_old().to_vec();
+        s.sort_unstable();
+        assert_eq!(s, (0..90).collect::<Vec<_>>());
+    }
+
+    /// Satellite: RCM must never *increase* the half-bandwidth of an
+    /// already optimally ordered band matrix — the BFS from a
+    /// pseudo-peripheral vertex of a full band walks it end to end.
+    #[test]
+    fn rcm_never_increases_bandwidth_on_banded() {
+        propcheck::check(10, |rng| {
+            let n = 30 + rng.below(120);
+            let hbw = 1 + rng.below(4);
+            let a = Csrc::from_coo(&Coo::banded(n, hbw, false, rng)).map_err(|e| e.to_string())?;
+            let before = a.half_bandwidth();
+            let p = rcm(&a);
+            let after = permuted_half_bandwidth(&a, &p);
+            if after > before {
+                return Err(format!("RCM grew the band: {before} -> {after}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rcm_recovers_band_from_shuffle() {
+        let mut rng = Rng::new(3);
+        let band = Csrc::from_coo(&Coo::banded(300, 2, true, &mut rng)).unwrap();
+        let shuffle = Permutation::from_new_to_old(rng.permutation(300)).unwrap();
+        let shuffled = band.permuted(&shuffle);
+        assert!(shuffled.half_bandwidth() > 30, "shuffle must destroy the band");
+        let p = rcm(&shuffled);
+        let restored = shuffled.permuted(&p);
+        assert!(
+            restored.half_bandwidth() <= shuffled.half_bandwidth() / 4,
+            "RCM {} vs shuffled {}",
+            restored.half_bandwidth(),
+            shuffled.half_bandwidth()
+        );
+        // The analytic half-bandwidth matches the built matrix.
+        assert_eq!(permuted_half_bandwidth(&shuffled, &p), restored.half_bandwidth());
+    }
+
+    #[test]
+    fn permuted_matrix_preserves_the_operator() {
+        // (P A Pᵀ)(P x) == P (A x) ⇔ the reordered LinOp equals A.
+        let a = random(70, 3, 4);
+        let mut rng = Rng::new(5);
+        let perm = Permutation::from_new_to_old(rng.permutation(70)).unwrap();
+        let b = a.permuted(&perm);
+        let op = ReorderedLinOp::new(b, perm);
+        let x: Vec<f64> = (0..70).map(|_| rng.normal()).collect();
+        let (mut y1, mut y2) = (vec![0.0; 70], vec![0.0; 70]);
+        a.apply(&x, &mut y1);
+        op.apply(&x, &mut y2);
+        propcheck::assert_close(&y1, &y2, 1e-11, 1e-11).unwrap();
+        // Transpose too (bicg's requirement).
+        a.apply_t(&x, &mut y1).unwrap();
+        op.apply_t(&x, &mut y2).unwrap();
+        propcheck::assert_close(&y1, &y2, 1e-11, 1e-11).unwrap();
+        // Diagonal comes back in the original numbering (Jacobi's
+        // requirement).
+        assert_eq!(op.diagonal().unwrap(), a.diagonal().unwrap());
+    }
+
+    #[test]
+    fn solvers_run_transparently_on_reordered_operators() {
+        let a = random(60, 3, 6);
+        let perm = rcm(&a);
+        let b = a.permuted(&perm);
+        let op = ReorderedLinOp::new(b, perm);
+        let mut rng = Rng::new(7);
+        let xstar: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+        let mut rhs = vec![0.0; 60];
+        a.apply(&xstar, &mut rhs);
+        // bicg exercises apply_t; Jacobi exercises diagonal.
+        let r = solver::bicg(&op, &rhs, 1e-10, 600).unwrap();
+        assert!(r.converged, "residual {}", r.residual);
+        for (got, want) in r.x.iter().zip(&xstar) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+        let jac = Jacobi::new(&op).expect("reordered operator exposes its diagonal");
+        let g = solver::gmres(&op, &rhs, 30, 1e-10, 200);
+        assert!(g.converged, "gmres residual {}", g.residual);
+        let _ = jac;
+    }
+
+    #[test]
+    fn reordered_engine_matches_plain_execution() {
+        let a = std::sync::Arc::new(random(120, 4, 8));
+        let perm = Arc::new(rcm(a.as_ref()));
+        let pa = std::sync::Arc::new(a.permuted(&perm));
+        let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.1).sin()).collect();
+        let mut want = vec![0.0; 120];
+        a.spmv_into_zeroed(&x, &mut want);
+        for kind in [
+            EngineKind::Sequential,
+            EngineKind::LocalBuffers(AccumMethod::Effective),
+            EngineKind::LocalBuffers(AccumMethod::Interval),
+            EngineKind::Colorful,
+            EngineKind::Atomic,
+        ] {
+            let inner = build_engine_auto(kind, pa.clone(), 3);
+            let mut engine = ReorderedEngine::new(inner, perm.clone());
+            assert!(engine.name().starts_with("reordered/"));
+            let mut y = vec![f64::NAN; 120];
+            engine.spmv(&x, &mut y);
+            propcheck::assert_close(&y, &want, 1e-11, 1e-11)
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+        }
+    }
+}

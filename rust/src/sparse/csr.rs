@@ -145,6 +145,21 @@ impl Csr {
     pub fn flops(&self) -> usize {
         2 * self.nnz()
     }
+
+    /// The matrix renumbered symmetrically by `perm` (B = P A Pᵀ) —
+    /// valid for any square CSR, no symmetry needed.
+    pub fn permuted(&self, perm: &crate::reorder::Permutation) -> Csr {
+        assert_eq!(self.nrows, self.ncols, "symmetric permutation needs a square matrix");
+        assert_eq!(perm.len(), self.nrows, "permutation length mismatch");
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for i in 0..self.nrows {
+            for k in self.row_range(i) {
+                coo.push(perm.new_of(i), perm.new_of(self.ja[k] as usize), self.a[k]);
+            }
+        }
+        coo.compact();
+        Csr::from_coo(&coo)
+    }
 }
 
 impl SpmvKernel for Csr {
@@ -191,6 +206,13 @@ impl SpmvKernel for Csr {
 
     fn kernel_name(&self) -> &'static str {
         "csr"
+    }
+
+    fn permuted(
+        &self,
+        perm: &crate::reorder::Permutation,
+    ) -> Option<std::sync::Arc<dyn SpmvKernel>> {
+        Some(std::sync::Arc::new(Csr::permuted(self, perm)))
     }
 }
 

@@ -236,16 +236,29 @@ impl Csrc {
     }
 
     /// y = Aᵀ x — the paper's §5 point: swap al and au, identical cost.
+    ///
+    /// Same unchecked-hot-loop shape as `spmv` — `bicg` pays this every
+    /// iteration, so the transpose must not lag the forward product on
+    /// bounds checks. Safety: identical argument to `spmv` — the sweep
+    /// touches exactly the same `ia`/`ja`/`ad`/`al`/`au` indices (only
+    /// the roles of `al` and `au` swap), all construction-validated and
+    /// immutable after construction.
     pub fn spmv_t(&self, x: &[f64], y: &mut [f64]) {
-        for i in 0..self.n {
-            let xi = x[i];
-            let mut t = self.ad[i] * xi;
-            for k in self.row_range(i) {
-                let j = self.ja[k] as usize;
-                t += self.au[k] * x[j]; // roles swapped
-                y[j] += self.al[k] * xi;
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        unsafe {
+            for i in 0..self.n {
+                let xi = *x.get_unchecked(i);
+                let mut t = self.ad.get_unchecked(i) * xi;
+                let start = *self.ia.get_unchecked(i) as usize;
+                let end = *self.ia.get_unchecked(i + 1) as usize;
+                for k in start..end {
+                    let j = *self.ja.get_unchecked(k) as usize;
+                    t += self.au.get_unchecked(k) * x.get_unchecked(j); // roles swapped
+                    *y.get_unchecked_mut(j) += self.al.get_unchecked(k) * xi;
+                }
+                *y.get_unchecked_mut(i) += t;
             }
-            y[i] += t;
         }
     }
 
@@ -320,6 +333,44 @@ impl Csrc {
             + 2 * self.n * 8
     }
 
+    /// Working-set bytes of one *parallel* local-buffers product under
+    /// `plan`: the sequential working set plus the p private scatter
+    /// buffers. With the plan's effective ranges the buffers are
+    /// *windowed* ([`crate::parallel::LocalBuffersEngine`]), so this
+    /// counts only the window bytes — Table-1-style reports and the
+    /// tuner's bandwidth features were under-counting the local-buffers
+    /// engines by up to `p·n·8` before this.
+    pub fn working_set_bytes_parallel(&self, plan: &crate::plan::SpmvPlan) -> usize {
+        assert_eq!(plan.n, self.n, "plan built for a different matrix");
+        if plan.nthreads <= 1 {
+            // The single-thread shortcut writes y directly: no buffers.
+            return self.working_set_bytes();
+        }
+        let buffer_bytes = match &plan.eff {
+            Some(eff) => eff.iter().map(|r| r.len()).sum::<usize>() * 8,
+            None => plan.nthreads * self.n * 8, // full-length fallback
+        };
+        self.working_set_bytes() + buffer_bytes
+    }
+
+    /// The matrix renumbered by `perm`: B = P A Pᵀ with
+    /// `B[new_i][new_j] = A[old_i][old_j]`. A symmetric permutation
+    /// preserves structural symmetry and the diagonal, so the result is
+    /// always a valid CSRC. Built via COO (O(nnz log nnz)) — reordering
+    /// is one-time analysis, not a hot path.
+    pub fn permuted(&self, perm: &crate::reorder::Permutation) -> Csrc {
+        assert_eq!(perm.len(), self.n, "permutation length mismatch");
+        let csr = self.to_csr();
+        let mut coo = Coo::with_capacity(self.n, self.n, self.nnz());
+        for i in 0..self.n {
+            for k in csr.row_range(i) {
+                coo.push(perm.new_of(i), perm.new_of(csr.ja[k] as usize), csr.a[k]);
+            }
+        }
+        coo.compact();
+        Csrc::from_coo(&coo).expect("symmetric permutation preserves structural symmetry")
+    }
+
     /// Flops of one SpMV: n multiplies + (nnz − n) multiply-adds ≈ 2·nnz − n
     /// on machines without FMA (§4.1).
     pub fn flops(&self) -> usize {
@@ -390,6 +441,13 @@ impl SpmvKernel for Csrc {
 
     fn kernel_name(&self) -> &'static str {
         "csrc"
+    }
+
+    fn permuted(
+        &self,
+        perm: &crate::reorder::Permutation,
+    ) -> Option<std::sync::Arc<dyn SpmvKernel>> {
+        Some(std::sync::Arc::new(Csrc::permuted(self, perm)))
     }
 }
 

@@ -97,6 +97,16 @@ pub trait SpmvKernel: Send + Sync {
 
     /// Format name for reports ("csrc", "csr", "bcsr").
     fn kernel_name(&self) -> &'static str;
+
+    /// The same matrix renumbered by `perm` (B = P A Pᵀ), as a fresh
+    /// kernel — what the tuner's reordered candidates and the service's
+    /// reorder policy execute against. Default `None`: formats without a
+    /// symmetric permutation (or where it is not worth implementing)
+    /// simply opt out of reordering.
+    fn permuted(&self, perm: &crate::reorder::Permutation) -> Option<std::sync::Arc<dyn SpmvKernel>> {
+        let _ = perm;
+        None
+    }
 }
 
 /// A square linear operator: the trait the solvers (`solver/`) and the

@@ -121,6 +121,8 @@ fn features_to_json(f: &Features) -> Json {
         ("scatter_pairs", Json::Num(f.scatter_pairs as f64)),
         ("scatter_ratio", Json::Num(f.scatter_ratio)),
         ("bandwidth", Json::Num(f.bandwidth as f64)),
+        ("window_rows", Json::Num(f.window_rows as f64)),
+        ("window_shrink", Json::Num(f.window_shrink)),
         ("colors", Json::Num(f.colors as f64)),
         ("intervals", Json::Num(f.intervals as f64)),
         ("balance", Json::Num(f.balance)),
@@ -131,6 +133,7 @@ fn features_to_json(f: &Features) -> Json {
 fn trial_to_json(t: &TrialResult) -> Json {
     obj(vec![
         ("kind", Json::Str(t.kind.label())),
+        ("reordered", Json::Bool(t.reordered)),
         ("seconds_per_product", Json::Num(t.seconds_per_product)),
         ("mad_s", Json::Num(t.mad_s)),
         ("mflops", Json::Num(t.mflops)),
@@ -150,6 +153,7 @@ fn decision_to_json(d: &Decision) -> Json {
         ("nthreads", Json::Num(d.nthreads as f64)),
         ("max_threads", Json::Num(d.max_threads as f64)),
         ("kind", Json::Str(d.kind.label())),
+        ("reorder", Json::Bool(d.reorder)),
         ("mflops", Json::Num(d.mflops)),
         ("measured", Json::Bool(d.measured)),
         ("tuned_s", Json::Num(d.tuned_s)),
@@ -192,6 +196,10 @@ fn parse_features(j: &Json) -> Option<Features> {
         scatter_pairs: j.get("scatter_pairs")?.as_usize()?,
         scatter_ratio: j.get("scatter_ratio")?.as_f64()?,
         bandwidth: j.get("bandwidth")?.as_usize()?,
+        // Window features were added with the windowed-buffers change;
+        // entries written before it load with neutral values.
+        window_rows: j.get("window_rows").and_then(Json::as_usize).unwrap_or(0),
+        window_shrink: j.get("window_shrink").and_then(Json::as_f64).unwrap_or(1.0),
         colors: j.get("colors")?.as_usize()?,
         intervals: j.get("intervals")?.as_usize()?,
         balance: j.get("balance")?.as_f64()?,
@@ -202,6 +210,8 @@ fn parse_features(j: &Json) -> Option<Features> {
 fn parse_trial(j: &Json) -> Option<TrialResult> {
     Some(TrialResult {
         kind: EngineKind::parse(j.get("kind")?.as_str()?)?,
+        // Pre-reorder entries are plain trials.
+        reordered: j.get("reordered").and_then(Json::as_bool).unwrap_or(false),
         seconds_per_product: j.get("seconds_per_product")?.as_f64()?,
         mad_s: j.get("mad_s")?.as_f64()?,
         mflops: j.get("mflops")?.as_f64()?,
@@ -238,6 +248,8 @@ fn parse_decisions(text: &str) -> Option<HashMap<(u64, usize), Decision>> {
             (fingerprint, max_threads),
             Decision {
                 kind: EngineKind::parse(d.get("kind")?.as_str()?)?,
+                // Pre-reorder entries never picked the reordered axis.
+                reorder: d.get("reorder").and_then(Json::as_bool).unwrap_or(false),
                 mflops: d.get("mflops")?.as_f64()?,
                 measured: d.get("measured")?.as_bool()?,
                 tuned_s: d.get("tuned_s")?.as_f64()?,
@@ -261,12 +273,14 @@ mod tests {
     fn fake_decision(fp: u64, nthreads: usize) -> Decision {
         let trials = vec![TrialResult {
             kind: EngineKind::Colorful,
+            reordered: true,
             seconds_per_product: 2.5e-4,
             mad_s: 1e-6,
             mflops: 90.0,
         }];
         Decision {
             kind: EngineKind::LocalBuffers(AccumMethod::Effective),
+            reorder: true,
             mflops: 123.5,
             measured: true,
             tuned_s: 0.01,
@@ -279,6 +293,8 @@ mod tests {
                 scatter_pairs: 200,
                 scatter_ratio: 0.8,
                 bandwidth: 17,
+                window_rows: 260,
+                window_shrink: 0.65,
                 colors: 5,
                 intervals: 9,
                 balance: 1.06,
@@ -314,6 +330,11 @@ mod tests {
         let d = back.get(7, 2).expect("persisted decision");
         assert_eq!(d.kind, EngineKind::LocalBuffers(AccumMethod::Effective));
         assert!(d.measured);
+        // The reorder axis and window features round-trip.
+        assert!(d.reorder);
+        assert!(d.trials[0].reordered);
+        assert_eq!(d.features.window_rows, 260);
+        assert!((d.features.window_shrink - 0.65).abs() < 1e-12);
         assert_eq!(d.features.colors, 5);
         assert_eq!(d.trials.len(), 1);
         assert_eq!(d.trials[0].kind, EngineKind::Colorful);
@@ -364,6 +385,9 @@ mod tests {
         let d = cache.get(0x2a, 3).expect("v1 entry keyed by its nthreads");
         assert_eq!(d.kind, EngineKind::Colorful);
         assert_eq!(d.nthreads, 3);
+        assert!(!d.reorder, "pre-reorder entries load as plain decisions");
+        assert!(!d.trials[0].reordered);
+        assert!((d.features.window_shrink - 1.0).abs() < 1e-12);
         assert_eq!(d.max_threads, 3, "v1 entries are single-p: budget == pick");
         assert!(d.sweep.is_empty());
         // Re-writing the file upgrades it to the v2 schema.

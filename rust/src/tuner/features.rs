@@ -31,6 +31,15 @@ pub struct Features {
     /// Off-diagonal half-bandwidth of the *write* pattern: max over rows
     /// of `i - row_write_lo(i)`.
     pub bandwidth: usize,
+    /// Total windowed-buffer rows `Σ_t |eff[t]|` — what the windowed
+    /// local-buffers engines allocate, zero and accumulate (equals n for
+    /// scatter-free kernels; `p·n` when the plan lacks ranges).
+    pub window_rows: usize,
+    /// `window_rows / (p·n)`: the fraction of the pre-windowing
+    /// full-length layout the windowed buffers still occupy. Low values
+    /// mean the effective ranges are tight (banded or RCM-reordered
+    /// patterns) and the local-buffers overhead is near its floor.
+    pub window_shrink: f64,
     /// Conflict colors (0 when the plan lacks the coloring piece).
     pub colors: usize,
     /// Interval count of the §3.1 decomposition (0 when absent).
@@ -65,12 +74,20 @@ impl Features {
             .collect();
         let max = works.iter().cloned().fold(0.0, f64::max);
         let avg = works.iter().sum::<f64>() / p as f64;
+        let window_rows = plan
+            .eff
+            .as_ref()
+            .map(|eff| eff.iter().map(|r| r.len()).sum())
+            .unwrap_or(p * n);
+        let full = p * n;
         Features {
             n,
             work_flops,
             scatter_pairs,
             scatter_ratio,
             bandwidth,
+            window_rows,
+            window_shrink: if full > 0 { window_rows as f64 / full as f64 } else { 1.0 },
             colors: plan.colors.as_ref().map(|c| c.num_colors()).unwrap_or(0),
             intervals: plan.ints.as_ref().map(|v| v.len()).unwrap_or(0),
             balance: if avg > 0.0 { max / avg } else { 1.0 },
@@ -132,11 +149,18 @@ mod tests {
         assert!(fc.colors > 1, "CSRC sweeps conflict");
         assert!(fc.intervals >= 1);
         assert!(fc.balance >= 1.0 - 1e-12);
-        // CSR scatters nothing: one color, zero write bandwidth below i.
+        // Windowed buffers: at least one slot per row, never more than
+        // the full p·n layout.
+        assert!(fc.window_rows >= 120 && fc.window_rows <= 3 * 120);
+        assert!(fc.window_shrink > 0.0 && fc.window_shrink <= 1.0);
+        // CSR scatters nothing: one color, zero write bandwidth below i,
+        // block-exact windows (Σ|eff| == n — the minimum possible).
         assert_eq!(fr.scatter_pairs, 0);
         assert_eq!(fr.scatter_ratio, 0.0);
         assert_eq!(fr.bandwidth, 0);
         assert_eq!(fr.colors, 1);
+        assert_eq!(fr.window_rows, 120);
+        assert!(fr.window_shrink <= fc.window_shrink + 1e-12);
     }
 
     #[test]

@@ -19,9 +19,16 @@
 //!    ladder ([`thread_ladder`]), because several matrices peak *below*
 //!    the machine's core count — the winning `(engine, nthreads)` pair
 //!    plus the full sweep surface land in the [`Decision`];
-//! 4. a zero budget skips the trials and falls back to [`cost_model`],
+//! 4. [`tune_reordered`] / [`sweep_reordered`] add the *reorder* axis
+//!    ([`candidates_with_reorder`]): under
+//!    [`crate::reorder::ReorderPolicy::Measure`] every candidate also
+//!    runs through the RCM ordering (timed behind a
+//!    [`ReorderedEngine`], so the per-product permute/un-permute
+//!    gathers count), and [`Decision::reorder`] records the winner's
+//!    ordering;
+//! 5. a zero budget skips the trials and falls back to [`cost_model`],
 //!    a paper-derived heuristic over the same features;
-//! 5. [`resolve`] / [`resolve_swept`] front the whole thing with a
+//! 6. [`resolve`] / [`resolve_swept`] front the whole thing with a
 //!    persistent [`DecisionCache`] keyed by (structure [`fingerprint`] ×
 //!    thread budget), so a restarted service never re-tunes a known
 //!    matrix.
@@ -37,8 +44,9 @@ pub use cache::{decision_json, DecisionCache};
 pub use features::{fingerprint, Features};
 
 use crate::metrics;
-use crate::parallel::{build_engine, AccumMethod, EngineKind};
+use crate::parallel::{build_engine, AccumMethod, EngineKind, ParallelSpmv};
 use crate::plan::{PlanBuilder, PlanCache, PlanPieces, SpmvPlan};
+use crate::reorder::{self, Permutation, ReorderPolicy, ReorderedEngine};
 use crate::sparse::SpmvKernel;
 use std::sync::Arc;
 use std::time::Instant;
@@ -79,12 +87,28 @@ impl TrialBudget {
 #[derive(Clone, Debug)]
 pub struct TrialResult {
     pub kind: EngineKind,
+    /// True when this trial ran through the RCM ordering (engine over
+    /// the permuted kernel behind a [`ReorderedEngine`] wrapper, so the
+    /// per-product permute/un-permute gathers are inside the timing).
+    pub reordered: bool,
     /// Median seconds per product across the budgeted runs.
     pub seconds_per_product: f64,
     /// MAD across runs — how noisy the median is.
     pub mad_s: f64,
     /// Rate normalized by the kernel's work units ([`Features::work_flops`]).
     pub mflops: f64,
+}
+
+impl TrialResult {
+    /// Display label: the engine kind, `reordered/`-prefixed when the
+    /// trial ran through the RCM ordering.
+    pub fn label(&self) -> String {
+        if self.reordered {
+            format!("reordered/{}", self.kind.label())
+        } else {
+            self.kind.label()
+        }
+    }
 }
 
 /// One rung of the thread-count ladder in a swept decision: every
@@ -109,6 +133,10 @@ impl SweepPoint {
 pub struct Decision {
     /// The winning concrete engine (never [`EngineKind::Auto`]).
     pub kind: EngineKind,
+    /// True when the winner ran through the RCM ordering — the caller
+    /// must execute via the permuted matrix with permute/un-permute per
+    /// product ([`ReorderedEngine`] / [`crate::reorder::ReorderedLinOp`]).
+    pub reorder: bool,
     /// The winner's measured rate (0 when `measured` is false).
     pub mflops: f64,
     /// False when the decision came from [`cost_model`] without trials.
@@ -132,6 +160,19 @@ pub struct Decision {
     pub sweep: Vec<SweepPoint>,
 }
 
+impl Decision {
+    /// Display label of the winner: the engine kind, `reordered/`-
+    /// prefixed when the decision executes through the RCM ordering —
+    /// the single source for every log/stat that prints a decision.
+    pub fn label(&self) -> String {
+        if self.reorder {
+            format!("reordered/{}", self.kind.label())
+        } else {
+            self.kind.label()
+        }
+    }
+}
+
 /// The candidate set for a thread count: every concrete engine that can
 /// possibly win, including the sequential baseline (small matrices do not
 /// amortize fork-join — the paper's §4.2 one-thread shortcut) and the
@@ -143,6 +184,33 @@ pub fn candidates(nthreads: usize) -> Vec<EngineKind> {
         v.extend(EngineKind::all_local_buffers());
         v.push(EngineKind::Colorful);
         v.push(EngineKind::Atomic);
+    }
+    v
+}
+
+/// One (engine × ordering) candidate of the two-axis search: the
+/// engine kinds of [`candidates`] crossed with whether the trial runs
+/// through the RCM ordering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    pub kind: EngineKind,
+    pub reordered: bool,
+}
+
+/// [`candidates`] with the reorder axis: every kind plain, plus —
+/// when `reorder` — every kind again through the RCM ordering, so the
+/// tuner measures reorder-on vs reorder-off per matrix instead of
+/// assuming either. (Reordered sequential is a real candidate: a
+/// bandwidth win that needs no threads at all.)
+pub fn candidates_with_reorder(nthreads: usize, reorder: bool) -> Vec<Candidate> {
+    let mut v: Vec<Candidate> = candidates(nthreads)
+        .into_iter()
+        .map(|kind| Candidate { kind, reordered: false })
+        .collect();
+    if reorder {
+        v.extend(
+            candidates(nthreads).into_iter().map(|kind| Candidate { kind, reordered: true }),
+        );
     }
     v
 }
@@ -224,7 +292,21 @@ pub fn cost_model(f: &Features) -> EngineKind {
 /// ([`required_pieces`]; `PlanBuilder::all` always suffices); panics
 /// otherwise (programming error, same contract as [`build_engine`]).
 pub fn tune(kernel: &Arc<dyn SpmvKernel>, plan: &Arc<SpmvPlan>, budget: &TrialBudget) -> Decision {
-    tune_with_fingerprint(kernel, plan, budget, fingerprint(kernel.as_ref()))
+    tune_with_fingerprint(kernel, plan, budget, fingerprint(kernel.as_ref()), ReorderPolicy::Never)
+}
+
+/// [`tune`] with the reorder axis: under [`ReorderPolicy::Measure`] the
+/// candidate set doubles ([`candidates_with_reorder`]) and the RCM
+/// ordering competes on measured rate; under [`ReorderPolicy::Always`]
+/// only the reordered candidates run (falling back to plain when the
+/// kernel cannot permute or RCM is the identity).
+pub fn tune_reordered(
+    kernel: &Arc<dyn SpmvKernel>,
+    plan: &Arc<SpmvPlan>,
+    budget: &TrialBudget,
+    policy: ReorderPolicy,
+) -> Decision {
+    tune_with_fingerprint(kernel, plan, budget, fingerprint(kernel.as_ref()), policy)
 }
 
 /// [`tune`] with a caller-supplied fingerprint, so [`resolve`] — which
@@ -235,6 +317,7 @@ fn tune_with_fingerprint(
     plan: &Arc<SpmvPlan>,
     budget: &TrialBudget,
     fp: u64,
+    policy: ReorderPolicy,
 ) -> Decision {
     assert!(
         plan.pieces.covers(required_pieces(plan.nthreads)),
@@ -247,6 +330,9 @@ fn tune_with_fingerprint(
         let kind = cost_model(&features);
         return Decision {
             kind,
+            // Without trials the only honest "always" is to honour the
+            // caller's forced ordering; Measure degrades to plain.
+            reorder: policy == ReorderPolicy::Always,
             mflops: 0.0,
             measured: false,
             tuned_s: t0.elapsed().as_secs_f64(),
@@ -258,11 +344,24 @@ fn tune_with_fingerprint(
             sweep: Vec::new(),
         };
     }
-    let trials =
-        measure_candidates(kernel, plan, budget, features.work_flops, &candidates(plan.nthreads));
+    let work = features.work_flops;
+    let rctx = if policy == ReorderPolicy::Never { None } else { reorder_context(kernel, plan) };
+    let cands = candidates_with_reorder(plan.nthreads, rctx.is_some());
+    let mut trials = Vec::new();
+    if policy != ReorderPolicy::Always || rctx.is_none() {
+        let plain: Vec<EngineKind> =
+            cands.iter().filter(|c| !c.reordered).map(|c| c.kind).collect();
+        trials.extend(measure_candidates(kernel, plan, budget, work, &plain));
+    }
+    if let Some((pk, pplan, perm)) = &rctx {
+        let reord: Vec<EngineKind> =
+            cands.iter().filter(|c| c.reordered).map(|c| c.kind).collect();
+        trials.extend(measure_reordered_candidates(pk, pplan, perm, budget, work, &reord));
+    }
     let best = best_trial(&trials);
     Decision {
         kind: best.kind,
+        reorder: best.reordered,
         mflops: best.mflops,
         measured: true,
         tuned_s: t0.elapsed().as_secs_f64(),
@@ -300,6 +399,69 @@ fn measure_candidates(
         });
         trials.push(TrialResult {
             kind,
+            reordered: false,
+            seconds_per_product: per,
+            mad_s: mad,
+            mflops: metrics::mflops(work, per),
+        });
+    }
+    trials
+}
+
+/// The reorder trial context: the permuted kernel, a plan built for it,
+/// and the permutation — or `None` when the kernel cannot permute
+/// (formats without [`SpmvKernel::permuted`]) or RCM cannot tighten the
+/// band (an already well-ordered matrix: reordering would only add the
+/// per-product gather cost, so there is nothing worth measuring).
+/// Prefers the analysis the plan's reorder stage already computed.
+fn reorder_context(
+    kernel: &Arc<dyn SpmvKernel>,
+    plan: &SpmvPlan,
+) -> Option<(Arc<dyn SpmvKernel>, Arc<SpmvPlan>, Arc<Permutation>)> {
+    let (perm, hbw_before, hbw_after) = match &plan.reorder {
+        Some(r) => (r.perm.clone(), r.hbw_before, r.hbw_after),
+        None => {
+            let r = reorder::analyze(kernel.as_ref());
+            (r.perm, r.hbw_before, r.hbw_after)
+        }
+    };
+    if hbw_after >= hbw_before {
+        return None;
+    }
+    let permuted = kernel.permuted(&perm)?;
+    let pieces = PlanPieces { reorder: false, ..plan.pieces };
+    let pplan =
+        Arc::new(PlanBuilder::new(plan.nthreads).with_pieces(pieces).build(permuted.as_ref()));
+    Some((permuted, pplan, perm))
+}
+
+/// [`measure_candidates`] through the RCM ordering: engines are built
+/// over the permuted kernel and timed behind a [`ReorderedEngine`], so
+/// the per-product permute/un-permute gathers count against the
+/// reordered candidates — the comparison with the plain trials is
+/// end-to-end honest.
+fn measure_reordered_candidates(
+    permuted: &Arc<dyn SpmvKernel>,
+    plan: &Arc<SpmvPlan>,
+    perm: &Arc<Permutation>,
+    budget: &TrialBudget,
+    work: usize,
+    kinds: &[EngineKind],
+) -> Vec<TrialResult> {
+    let n = permuted.dim();
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+    let mut y = vec![0.0; n];
+    let mut trials = Vec::with_capacity(kinds.len());
+    for &kind in kinds {
+        let inner = build_engine(kind, permuted.clone(), plan.clone());
+        let mut engine = ReorderedEngine::new(inner, perm.clone());
+        engine.spmv(&x, &mut y); // untimed warm-up, as for plain trials
+        let (per, mad) = metrics::median_and_spread_of_runs(budget.runs, budget.products, || {
+            engine.spmv(&x, &mut y)
+        });
+        trials.push(TrialResult {
+            kind,
+            reordered: true,
             seconds_per_product: per,
             mad_s: mad,
             mflops: metrics::mflops(work, per),
@@ -332,7 +494,29 @@ pub fn sweep(
     budget: &TrialBudget,
     plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
 ) -> Decision {
-    sweep_with_fingerprint(kernel, ladder, budget, plan_for, fingerprint(kernel.as_ref()))
+    sweep_with_fingerprint(
+        kernel,
+        ladder,
+        budget,
+        plan_for,
+        fingerprint(kernel.as_ref()),
+        ReorderPolicy::Never,
+    )
+}
+
+/// [`sweep`] with the reorder axis: every ladder rung trials the plain
+/// *and* the RCM-reordered candidates, so reorder-on vs reorder-off is
+/// measured per matrix across the whole (engine × p) surface. The
+/// permuted kernel's per-rung plans are built locally (they belong to
+/// the reordered structure, not the caller's plan cache key).
+pub fn sweep_reordered(
+    kernel: &Arc<dyn SpmvKernel>,
+    ladder: &[usize],
+    budget: &TrialBudget,
+    plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
+    policy: ReorderPolicy,
+) -> Decision {
+    sweep_with_fingerprint(kernel, ladder, budget, plan_for, fingerprint(kernel.as_ref()), policy)
 }
 
 fn sweep_with_fingerprint(
@@ -341,6 +525,7 @@ fn sweep_with_fingerprint(
     budget: &TrialBudget,
     plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
     fp: u64,
+    policy: ReorderPolicy,
 ) -> Decision {
     assert!(!ladder.is_empty(), "thread ladder must name at least one thread count");
     let max = ladder.iter().copied().max().unwrap_or(1);
@@ -358,6 +543,7 @@ fn sweep_with_fingerprint(
         let nthreads = if kind == EngineKind::Sequential { 1 } else { max };
         return Decision {
             kind,
+            reorder: policy == ReorderPolicy::Always,
             mflops: 0.0,
             measured: false,
             tuned_s: t0.elapsed().as_secs_f64(),
@@ -370,11 +556,21 @@ fn sweep_with_fingerprint(
         };
     }
     let work = features.work_flops;
+    // Reorder context shared across rungs: the permutation and permuted
+    // kernel are p-independent; only the plan is rebuilt per rung.
+    let rctx = if policy == ReorderPolicy::Never {
+        None
+    } else {
+        reorder_context(kernel, &plan_max)
+    };
+    let skip_plain = policy == ReorderPolicy::Always && rctx.is_some();
     let mut sweep: Vec<SweepPoint> = Vec::with_capacity(ladder.len());
-    // The sequential sweep ignores the plan's thread count, so one
-    // measurement (taken at the first rung) serves every rung — without
-    // this, the usually-slowest candidate would be re-timed per rung.
+    // The sequential sweeps (plain and reordered) ignore the plan's
+    // thread count, so one measurement each — taken at the first rung —
+    // serves every rung; without this the usually-slowest candidates
+    // would be re-timed per rung.
     let mut seq_trial: Option<TrialResult> = None;
+    let mut seq_trial_reordered: Option<TrialResult> = None;
     for &p in ladder {
         if sweep.iter().any(|pt| pt.nthreads == p) {
             continue; // a duplicated rung buys no information
@@ -384,26 +580,54 @@ fn sweep_with_fingerprint(
             plan.nthreads == p && plan.pieces.covers(required_pieces(p)),
             "plan_for must honour the requested thread count and tuner::required_pieces"
         );
-        let mut kinds = candidates(p);
-        if seq_trial.is_some() {
-            kinds.retain(|k| *k != EngineKind::Sequential);
+        let mut trials: Vec<TrialResult> = Vec::new();
+        if !skip_plain {
+            let mut kinds = candidates(p);
+            if seq_trial.is_some() {
+                kinds.retain(|k| *k != EngineKind::Sequential);
+            }
+            trials = measure_candidates(kernel, &plan, budget, work, &kinds);
+            match &seq_trial {
+                Some(t) => trials.insert(0, t.clone()),
+                None => {
+                    seq_trial =
+                        trials.iter().find(|t| t.kind == EngineKind::Sequential).cloned();
+                }
+            }
         }
-        let mut trials = measure_candidates(kernel, &plan, budget, work, &kinds);
-        match &seq_trial {
-            Some(t) => trials.insert(0, t.clone()),
-            None => {
-                seq_trial = trials.iter().find(|t| t.kind == EngineKind::Sequential).cloned();
+        if let Some((pk, pplan_max, perm)) = &rctx {
+            let pplan = if p == max {
+                pplan_max.clone()
+            } else {
+                Arc::new(
+                    PlanBuilder::new(p).with_pieces(required_pieces(p)).build(pk.as_ref()),
+                )
+            };
+            let mut kinds = candidates(p);
+            if seq_trial_reordered.is_some() {
+                kinds.retain(|k| *k != EngineKind::Sequential);
+            }
+            let start = trials.len();
+            trials.extend(measure_reordered_candidates(pk, &pplan, perm, budget, work, &kinds));
+            match &seq_trial_reordered {
+                Some(t) => trials.insert(start, t.clone()),
+                None => {
+                    seq_trial_reordered = trials[start..]
+                        .iter()
+                        .find(|t| t.kind == EngineKind::Sequential)
+                        .cloned();
+                }
             }
         }
         sweep.push(SweepPoint { nthreads: p, trials });
     }
-    let (best_p, best_kind, best_mflops) = sweep
+    let (best_p, best_kind, best_reorder, best_mflops) = sweep
         .iter()
         .map(|pt| {
             let b = pt.best().expect("candidates is never empty");
-            (pt.nthreads, b.kind, b.mflops)
+            (pt.nthreads, b.kind, b.reordered, b.mflops)
         })
-        .max_by(|a, b| a.2.partial_cmp(&b.2).expect("rates are finite"))
+        .max_by(|a, b| a.3.partial_cmp(&b.3).expect("rates are finite"))
         .expect("ladder is never empty");
     let trials = sweep
         .iter()
@@ -413,6 +637,7 @@ fn sweep_with_fingerprint(
         .clone();
     Decision {
         kind: best_kind,
+        reorder: best_reorder,
         mflops: best_mflops,
         measured: true,
         tuned_s: t0.elapsed().as_secs_f64(),
@@ -436,23 +661,72 @@ fn sweep_with_fingerprint(
 /// threads, so it gets that rung's winner, not the sweep's global
 /// (possibly lower-p) pick — re-tuning would let sweeping and
 /// non-sweeping callers endlessly overwrite each other's entries.
+/// A cached *measured* entry satisfies any reorder policy — re-tuning
+/// on every policy change would thrash the cache — with one exception:
+/// `Never` is an explicit off switch, so a cached reordered winner is
+/// demoted through [`never_view`] instead of silently re-enabling the
+/// permute/un-permute path. Callers wanting fresh reorder trials bring
+/// a fresh cache file.
 pub fn resolve(
     kernel: &Arc<dyn SpmvKernel>,
     plan: &Arc<SpmvPlan>,
     budget: &TrialBudget,
     cache: &DecisionCache,
+    policy: ReorderPolicy,
 ) -> (Decision, bool) {
     let fp = fingerprint(kernel.as_ref());
     if let Some(d) = cache.peek(fp, plan.nthreads) {
         if d.measured || budget.is_zero() {
             cache.record(true);
-            return (single_p_view(d, plan.nthreads), true);
+            return (never_view(single_p_view(d, plan.nthreads), policy), true);
         }
     }
     cache.record(false);
-    let d = tune_with_fingerprint(kernel, plan, budget, fp);
+    let d = tune_with_fingerprint(kernel, plan, budget, fp, policy);
     cache.put(d.clone());
     (d, false)
+}
+
+/// A `Never` caller's view of a cached decision: reordered execution is
+/// an opt-in, so a cached reordered winner is demoted to the best
+/// *plain* measurement — searched across the whole sweep surface when
+/// one was recorded (the plain optimum may sit at a different thread
+/// count than the reordered winner). An entry written under `Always`
+/// has no plain trials at all: the engine pick is kept (every engine
+/// runs correctly in the given ordering) but the recorded rate is
+/// cleared, since it was measured through the reordering and would
+/// otherwise arm the drift detector against an unreachable baseline.
+fn never_view(mut d: Decision, policy: ReorderPolicy) -> Decision {
+    if policy != ReorderPolicy::Never || !d.reorder {
+        return d;
+    }
+    let mut best: Option<(usize, EngineKind, f64)> = None;
+    let mut consider = |p: usize, t: &TrialResult| {
+        if !t.reordered && best.map_or(true, |(_, _, m)| t.mflops > m) {
+            best = Some((p, t.kind, t.mflops));
+        }
+    };
+    if d.sweep.is_empty() {
+        for t in &d.trials {
+            consider(d.nthreads, t);
+        }
+    } else {
+        for pt in &d.sweep {
+            for t in &pt.trials {
+                consider(pt.nthreads, t);
+            }
+        }
+    }
+    match best {
+        Some((p, kind, mflops)) => {
+            d.kind = kind;
+            d.mflops = mflops;
+            d.nthreads = p;
+        }
+        None => d.mflops = 0.0,
+    }
+    d.reorder = false;
+    d
 }
 
 /// A single-p caller's view of a cached decision. Swept entries answer
@@ -471,9 +745,11 @@ fn single_p_view(d: Decision, p: usize) -> Decision {
         .sweep
         .iter()
         .find(|pt| pt.nthreads == p)
-        .and_then(|pt| pt.best().map(|b| (b.kind, b.mflops, pt.trials.clone())));
+        .and_then(|pt| pt.best().map(|b| (b.kind, b.reordered, b.mflops, pt.trials.clone())));
     match best {
-        Some((kind, mflops, trials)) => Decision { kind, mflops, nthreads: p, trials, ..d },
+        Some((kind, reorder, mflops, trials)) => {
+            Decision { kind, reorder, mflops, nthreads: p, trials, ..d }
+        }
         None => d,
     }
 }
@@ -490,17 +766,18 @@ pub fn resolve_swept(
     budget: &TrialBudget,
     cache: &DecisionCache,
     plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
+    policy: ReorderPolicy,
 ) -> (Decision, bool) {
     let fp = fingerprint(kernel.as_ref());
     let max = ladder.iter().copied().max().unwrap_or(1);
     if let Some(d) = cache.peek(fp, max) {
         if budget.is_zero() || (d.measured && !d.sweep.is_empty()) {
             cache.record(true);
-            return (d, true);
+            return (never_view(d, policy), true);
         }
     }
     cache.record(false);
-    let d = sweep_with_fingerprint(kernel, ladder, budget, plan_for, fp);
+    let d = sweep_with_fingerprint(kernel, ladder, budget, plan_for, fp, policy);
     cache.put(d.clone());
     (d, false)
 }
@@ -525,6 +802,8 @@ mod tests {
         let (kernel, plan) = kernel_and_plan(150, 1, 2);
         let d = tune(&kernel, &plan, &TrialBudget::smoke());
         assert!(d.measured);
+        assert!(!d.reorder, "plain tune never picks the reordered axis");
+        assert!(d.trials.iter().all(|t| !t.reordered));
         assert_ne!(d.kind, EngineKind::Auto);
         assert_eq!(d.trials.len(), candidates(2).len());
         assert!(d.mflops > 0.0);
@@ -596,26 +875,44 @@ mod tests {
         let (kernel, plan) = kernel_and_plan(130, 8, 2);
         let cache = DecisionCache::in_memory();
         // A plain single-p tune at the same thread budget…
-        let (d0, hit0) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        let (d0, hit0) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
         assert!(!hit0 && d0.measured && d0.sweep.is_empty());
         let plans = crate::plan::PlanCache::new();
         let mut plan_for = cached_plan_provider(&plans, "m", &kernel);
         // …does not satisfy a sweeping caller with a measuring budget:
         // the entry is upgraded in place with the full surface.
         let ladder = thread_ladder(2);
-        let (d1, hit1) =
-            resolve_swept(&kernel, &ladder, &TrialBudget::smoke(), &cache, &mut plan_for);
+        let (d1, hit1) = resolve_swept(
+            &kernel,
+            &ladder,
+            &TrialBudget::smoke(),
+            &cache,
+            &mut plan_for,
+            ReorderPolicy::Never,
+        );
         assert!(!hit1 && d1.measured && !d1.sweep.is_empty());
         assert_eq!(cache.len(), 1, "the swept decision replaces the single-p entry");
         // From now on, sweeping callers hit.
-        let (d2, hit2) =
-            resolve_swept(&kernel, &ladder, &TrialBudget::smoke(), &cache, &mut plan_for);
+        let (d2, hit2) = resolve_swept(
+            &kernel,
+            &ladder,
+            &TrialBudget::smoke(),
+            &cache,
+            &mut plan_for,
+            ReorderPolicy::Never,
+        );
         assert!(hit2);
         assert_eq!(d2.kind, d1.kind);
         assert_eq!(d2.nthreads, d1.nthreads);
         // A zero-budget sweeping caller is happy with whatever is there.
-        let (_, hit3) =
-            resolve_swept(&kernel, &ladder, &TrialBudget::zero(), &cache, &mut plan_for);
+        let (_, hit3) = resolve_swept(
+            &kernel,
+            &ladder,
+            &TrialBudget::zero(),
+            &cache,
+            &mut plan_for,
+            ReorderPolicy::Never,
+        );
         assert!(hit3);
     }
 
@@ -630,6 +927,7 @@ mod tests {
         let fp = fingerprint(kernel.as_ref());
         let seq = TrialResult {
             kind: EngineKind::Sequential,
+            reordered: false,
             seconds_per_product: 1e-4,
             mad_s: 0.0,
             mflops: 120.0,
@@ -637,12 +935,14 @@ mod tests {
         let rung2 = vec![
             TrialResult {
                 kind: EngineKind::Atomic,
+                reordered: false,
                 seconds_per_product: 2e-4,
                 mad_s: 0.0,
                 mflops: 40.0,
             },
             TrialResult {
                 kind: EngineKind::Colorful,
+                reordered: false,
                 seconds_per_product: 1e-4,
                 mad_s: 0.0,
                 mflops: 80.0,
@@ -650,6 +950,7 @@ mod tests {
         ];
         cache.put(Decision {
             kind: EngineKind::Sequential,
+            reorder: false,
             mflops: 120.0,
             measured: true,
             tuned_s: 0.01,
@@ -663,7 +964,8 @@ mod tests {
                 SweepPoint { nthreads: 2, trials: rung2 },
             ],
         });
-        let (d, hit) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        let (d, hit) =
+            resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
         assert!(hit, "the swept entry satisfies the single-p caller");
         assert_eq!(d.nthreads, 2, "the view answers at the caller's thread count");
         assert_eq!(d.kind, EngineKind::Colorful, "…with that rung's winner");
@@ -737,16 +1039,168 @@ mod tests {
     fn resolve_runs_once_then_hits_the_cache() {
         let (kernel, plan) = kernel_and_plan(120, 4, 2);
         let cache = DecisionCache::in_memory();
-        let (d1, hit1) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        let (d1, hit1) =
+            resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
         assert!(!hit1);
-        let (d2, hit2) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        let (d2, hit2) =
+            resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
         assert!(hit2, "second resolve of the same structure must not re-tune");
         assert_eq!(d1.kind, d2.kind);
         // A different thread count is a different decision.
         let plan3 = Arc::new(PlanBuilder::all(3).build(kernel.as_ref()));
-        let (_, hit3) = resolve(&kernel, &plan3, &TrialBudget::smoke(), &cache);
+        let (_, hit3) =
+            resolve(&kernel, &plan3, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
         assert!(!hit3);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn reordered_candidates_double_the_set() {
+        let plain = candidates_with_reorder(4, false);
+        assert_eq!(plain.len(), candidates(4).len());
+        assert!(plain.iter().all(|c| !c.reordered));
+        let both = candidates_with_reorder(4, true);
+        assert_eq!(both.len(), 2 * candidates(4).len());
+        assert_eq!(both.iter().filter(|c| c.reordered).count(), candidates(4).len());
+    }
+
+    #[test]
+    fn tune_reordered_measures_both_orderings() {
+        // A shuffled band: RCM has real room, so the reordered trials
+        // are genuinely different engines. The winner is whichever
+        // measured faster — asserted structurally, not by timing.
+        let mut rng = Rng::new(21);
+        let band = Csrc::from_coo(&Coo::banded(400, 2, false, &mut rng)).unwrap();
+        let shuffle =
+            crate::reorder::Permutation::from_new_to_old(rng.permutation(400)).unwrap();
+        let shuffled = band.permuted(&shuffle);
+        let kernel: Arc<dyn SpmvKernel> = Arc::new(shuffled);
+        let plan = Arc::new(PlanBuilder::all(2).build(kernel.as_ref()));
+        let d = tune_reordered(&kernel, &plan, &TrialBudget::smoke(), ReorderPolicy::Measure);
+        assert!(d.measured);
+        assert_eq!(d.trials.len(), 2 * candidates(2).len());
+        assert!(d.trials.iter().any(|t| t.reordered));
+        assert!(d.trials.iter().any(|t| !t.reordered));
+        // The decision's reorder flag is the winning trial's.
+        let best = d
+            .trials
+            .iter()
+            .max_by(|a, b| a.mflops.partial_cmp(&b.mflops).unwrap())
+            .unwrap();
+        assert_eq!(d.reorder, best.reordered);
+        assert_eq!(d.kind, best.kind);
+        // Always restricts the search to the reordered half.
+        let da = tune_reordered(&kernel, &plan, &TrialBudget::smoke(), ReorderPolicy::Always);
+        assert!(da.reorder && da.trials.iter().all(|t| t.reordered));
+        // Never stays plain even on the same matrix.
+        let dn = tune_reordered(&kernel, &plan, &TrialBudget::smoke(), ReorderPolicy::Never);
+        assert!(!dn.reorder && dn.trials.iter().all(|t| !t.reordered));
+    }
+
+    #[test]
+    fn sweep_reordered_covers_every_rung_with_both_orderings() {
+        let mut rng = Rng::new(22);
+        let band = Csrc::from_coo(&Coo::banded(300, 2, false, &mut rng)).unwrap();
+        let shuffle =
+            crate::reorder::Permutation::from_new_to_old(rng.permutation(300)).unwrap();
+        let kernel: Arc<dyn SpmvKernel> = Arc::new(band.permuted(&shuffle));
+        let plans = crate::plan::PlanCache::new();
+        let mut plan_for = cached_plan_provider(&plans, "m", &kernel);
+        let d = sweep_reordered(
+            &kernel,
+            &thread_ladder(2),
+            &TrialBudget::smoke(),
+            &mut plan_for,
+            ReorderPolicy::Measure,
+        );
+        assert!(d.measured);
+        assert_eq!(d.sweep.len(), 2);
+        for pt in &d.sweep {
+            assert_eq!(pt.trials.len(), 2 * candidates(pt.nthreads).len());
+            assert!(pt.trials.iter().any(|t| t.reordered));
+            assert!(pt.trials.iter().any(|t| !t.reordered));
+        }
+        // The reordered sequential trial, like the plain one, is
+        // measured once and shared across rungs.
+        let rs1 = d.sweep[0]
+            .trials
+            .iter()
+            .find(|t| t.kind == EngineKind::Sequential && t.reordered)
+            .unwrap();
+        let rs2 = d.sweep[1]
+            .trials
+            .iter()
+            .find(|t| t.kind == EngineKind::Sequential && t.reordered)
+            .unwrap();
+        assert_eq!(rs1.seconds_per_product, rs2.seconds_per_product);
+    }
+
+    #[test]
+    fn reorder_context_skips_unimprovable_orderings() {
+        // A matrix RCM cannot improve (diagonal: bandwidth already 0)
+        // yields no reorder context — the gather cost would buy nothing.
+        let mut coo = Coo::new(6, 6);
+        for i in 0..6 {
+            coo.push(i, i, 2.0);
+        }
+        coo.compact();
+        let kernel: Arc<dyn SpmvKernel> = Arc::new(Csrc::from_coo(&coo).unwrap());
+        let plan = Arc::new(PlanBuilder::all(2).build(kernel.as_ref()));
+        assert!(reorder_context(&kernel, &plan).is_none());
+        // Tuning with Always on such a kernel falls back to plain trials.
+        let d = tune_reordered(&kernel, &plan, &TrialBudget::smoke(), ReorderPolicy::Always);
+        assert!(!d.reorder);
+        assert!(d.trials.iter().all(|t| !t.reordered));
+    }
+
+    #[test]
+    fn never_policy_demotes_cached_reordered_winners() {
+        // A cache written under `Measure` records a reordered winner; a
+        // later `Never` caller must get a plain decision (best plain
+        // trial), not a silently re-enabled permute/un-permute path.
+        let (kernel, plan) = kernel_and_plan(120, 12, 2);
+        let cache = DecisionCache::in_memory();
+        let fp = fingerprint(kernel.as_ref());
+        let trials = vec![
+            TrialResult {
+                kind: EngineKind::Colorful,
+                reordered: false,
+                seconds_per_product: 2e-4,
+                mad_s: 0.0,
+                mflops: 50.0,
+            },
+            TrialResult {
+                kind: EngineKind::LocalBuffers(AccumMethod::Effective),
+                reordered: true,
+                seconds_per_product: 1e-4,
+                mad_s: 0.0,
+                mflops: 100.0,
+            },
+        ];
+        cache.put(Decision {
+            kind: EngineKind::LocalBuffers(AccumMethod::Effective),
+            reorder: true,
+            mflops: 100.0,
+            measured: true,
+            tuned_s: 0.01,
+            fingerprint: fp,
+            nthreads: 2,
+            max_threads: 2,
+            features: Features::extract(kernel.as_ref(), &plan),
+            trials,
+            sweep: Vec::new(),
+        });
+        let (d, hit) =
+            resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
+        assert!(hit, "the measured entry still satisfies the caller");
+        assert!(!d.reorder, "Never must clear the reorder flag");
+        assert_eq!(d.kind, EngineKind::Colorful, "…and demote to the best plain trial");
+        assert_eq!(d.mflops, 50.0);
+        // A Measure caller keeps the recorded reordered winner.
+        let (d2, hit2) =
+            resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Measure);
+        assert!(hit2 && d2.reorder);
+        assert_eq!(d2.kind, EngineKind::LocalBuffers(AccumMethod::Effective));
     }
 
     #[test]
@@ -764,16 +1218,20 @@ mod tests {
     fn measured_budget_upgrades_a_cached_cost_model_decision() {
         let (kernel, plan) = kernel_and_plan(130, 5, 2);
         let cache = DecisionCache::in_memory();
-        let (d0, hit0) = resolve(&kernel, &plan, &TrialBudget::zero(), &cache);
+        let (d0, hit0) =
+            resolve(&kernel, &plan, &TrialBudget::zero(), &cache, ReorderPolicy::Never);
         assert!(!hit0 && !d0.measured);
         // Zero-budget callers keep hitting the heuristic entry...
-        let (_, hit1) = resolve(&kernel, &plan, &TrialBudget::zero(), &cache);
+        let (_, hit1) =
+            resolve(&kernel, &plan, &TrialBudget::zero(), &cache, ReorderPolicy::Never);
         assert!(hit1);
         // ...but a measuring budget re-tunes instead of freezing it.
-        let (d2, hit2) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        let (d2, hit2) =
+            resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
         assert!(!hit2 && d2.measured);
         // And the upgraded (measured) entry now satisfies everyone.
-        let (d3, hit3) = resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+        let (d3, hit3) =
+            resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
         assert!(hit3 && d3.measured);
     }
 }

@@ -151,7 +151,13 @@ fn autotuner_resolves_and_persists_across_instances() {
     let _ = std::fs::remove_dir_all(&dir);
     let path = dir.join("decisions.json");
     let cache = DecisionCache::open(&path);
-    let (d, hit) = tuner::resolve(&kernel, &plan, &TrialBudget::smoke(), &cache);
+    let (d, hit) = tuner::resolve(
+        &kernel,
+        &plan,
+        &TrialBudget::smoke(),
+        &cache,
+        csrc_spmv::reorder::ReorderPolicy::Never,
+    );
     assert!(!hit && d.measured);
     assert!(!d.trials.is_empty());
     // The winning engine really computes A·x.
@@ -166,7 +172,13 @@ fn autotuner_resolves_and_persists_across_instances() {
     }
     // Fresh cache instance on the same file: decision comes from disk.
     let cache2 = DecisionCache::open(&path);
-    let (d2, hit2) = tuner::resolve(&kernel, &plan, &TrialBudget::zero(), &cache2);
+    let (d2, hit2) = tuner::resolve(
+        &kernel,
+        &plan,
+        &TrialBudget::zero(),
+        &cache2,
+        csrc_spmv::reorder::ReorderPolicy::Never,
+    );
     assert!(hit2, "persisted decision must be found");
     assert_eq!(d2.kind, d.kind);
     assert!(d2.measured, "the persisted decision keeps its measured trials");
@@ -260,4 +272,74 @@ fn rcm_improves_effective_ranges() {
         span(&restored),
         span(&shuffled)
     );
+}
+
+#[test]
+fn property_reordered_engines_match_unpermuted_oracle() {
+    // ISSUE 4 satellite: for random structurally-symmetric AND banded
+    // patterns, every engine × every accumulation method executed on the
+    // RCM-permuted matrix must — after un-permutation — match the
+    // *unpermuted* sequential oracle. Seeds varied by propcheck.
+    use csrc_spmv::reorder::{rcm, ReorderedEngine};
+    use csrc_spmv::util::propcheck;
+    propcheck::check(6, |rng| {
+        let n = 20 + rng.below(100);
+        let coo = if rng.below(2) == 0 {
+            Coo::random_structurally_symmetric(n, 1 + rng.below(5), false, rng)
+        } else {
+            Coo::banded(n, 1 + rng.below(4), false, rng)
+        };
+        let a = Arc::new(Csrc::from_coo(&coo).map_err(|e| e.to_string())?);
+        let perm = Arc::new(rcm(a.as_ref()));
+        let permuted: Arc<Csrc> = Arc::new(a.permuted(&perm));
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0; n];
+        a.spmv_into_zeroed(&x, &mut want); // unpermuted oracle
+        let p = 2 + rng.below(4);
+        let plan = Arc::new(PlanBuilder::all(p).build(permuted.as_ref()));
+        for kind in EngineKind::all() {
+            let inner = build_engine(kind, permuted.clone(), plan.clone());
+            let mut engine = ReorderedEngine::new(inner, perm.clone());
+            let mut y = vec![f64::NAN; n];
+            engine.spmv(&x, &mut y);
+            propcheck::assert_close(&y, &want, 1e-10, 1e-10)
+                .map_err(|e| format!("{} p={p}: {e}", kind.label()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reordered_solver_pipeline_end_to_end() {
+    // FEM matrix → RCM → permuted CSRC + windowed parallel engine →
+    // ReorderedLinOp → Jacobi-CG converges to the solution of the
+    // *original* system.
+    use csrc_spmv::reorder::{rcm, ReorderedLinOp};
+    use csrc_spmv::solver::EngineLinOp;
+    let coo = gen::poisson_2d_quad(16, 0.0, 11);
+    let a = Arc::new(Csrc::from_coo(&coo).unwrap());
+    let n = a.n;
+    let perm = rcm(a.as_ref());
+    let permuted = Arc::new(a.permuted(&perm));
+    let kernel: Arc<dyn SpmvKernel> = permuted.clone();
+    let plan = Arc::new(
+        PlanBuilder::for_kind(3, EngineKind::LocalBuffers(AccumMethod::Interval))
+            .build(kernel.as_ref()),
+    );
+    let inner = EngineLinOp::new(
+        EngineKind::LocalBuffers(AccumMethod::Interval),
+        kernel.clone(),
+        plan,
+    );
+    let op = ReorderedLinOp::new(inner, perm);
+    let mut rng = Rng::new(45);
+    let xstar: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut b = vec![0.0; n];
+    a.apply(&xstar, &mut b);
+    let jac = Jacobi::new(a.as_ref()).expect("diagonal available");
+    let r = solver::cg(&op, &b, Some(&jac), 1e-11, 5000);
+    assert!(r.converged, "residual {}", r.residual);
+    for (got, want) in r.x.iter().zip(&xstar) {
+        assert!((got - want).abs() < 1e-6);
+    }
 }

@@ -12,7 +12,9 @@
 //!   default across the generated suite (the tuner's reason to exist),
 //! * swept (engine × nthreads) pick vs the engine tuned at a fixed
 //!   thread count (the §4 scalability claim: several matrices peak
-//!   below the core count).
+//!   below the core count),
+//! * learned cost model vs the hand-written heuristic on held-out
+//!   matrices (the cross-matrix claim behind `tuner::model`).
 //!
 //! Results land on stdout *and* in `results/ablations.json`.
 
@@ -354,6 +356,74 @@ fn main() {
             );
             b.record(&format!("sweep/{}-chosen-threads", e.name), swept.nthreads as f64, "threads");
             b.record(&format!("sweep/{}-speedup-over-fixed-p", e.name), t_fixed / t_swept, "x");
+        }
+    }
+
+    // --- learned cost model vs the hand-written heuristic -----------------
+    // Tune a small generated corpus, train the model on most of it, and
+    // compare cold-start picks on the held-out matrices: the model's
+    // pick and the heuristic's are each re-measured next to the
+    // measured winner. The JSON report records both rates plus whether
+    // the model matched the measured winner.
+    {
+        use csrc_spmv::reorder::ReorderPolicy;
+        use csrc_spmv::tuner::{self, TrialBudget};
+        let budget = TrialBudget { runs: 1, products: 2 };
+        let p = 2usize;
+        let mut corpus_decisions = Vec::new();
+        let mut held_out = Vec::new();
+        for seed in 0..8u64 {
+            let mut rng = Rng::new(100 + seed);
+            let coo = if seed % 2 == 0 {
+                Coo::random_structurally_symmetric(1200 + 200 * seed as usize, 4, false, &mut rng)
+            } else {
+                Coo::banded(1500 + 150 * seed as usize, 3, false, &mut rng)
+            };
+            let m = Arc::new(Csrc::from_coo(&coo).unwrap());
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let plan = Arc::new(PlanBuilder::all(p).build(kernel.as_ref()));
+            let d = tuner::tune(&kernel, &plan, &budget);
+            if seed < 6 {
+                corpus_decisions.push(d);
+            } else {
+                held_out.push((m, kernel, plan, d));
+            }
+        }
+        let model = tuner::CostModel::train(&tuner::model::rows_from_decisions(&corpus_decisions))
+            .expect("six measured decisions train");
+        for (i, (m, kernel, plan, d)) in held_out.iter().enumerate() {
+            let heur_kind = tuner::cost_model(&d.features);
+            // A declining model is recorded as exactly that — silently
+            // substituting the heuristic's pick would fabricate 1.0×
+            // "model" speedups out of the heuristic racing itself.
+            let Some(model_kind) = model.predict(&d.features, ReorderPolicy::Never).map(|p| p.kind)
+            else {
+                b.record(&format!("model/heldout{i}-model-declined"), 1.0, "bool");
+                continue;
+            };
+            let nn = m.n;
+            let xs: Vec<f64> = (0..nn).map(|i| (i as f64 * 0.001).sin()).collect();
+            let mut ys = vec![0.0; nn];
+            let mut em = build_engine(model_kind, kernel.clone(), plan.clone());
+            let mut eh = build_engine(heur_kind, kernel.clone(), plan.clone());
+            let t_model = b.run(
+                &format!("model/heldout{i}-model-pick({})", model_kind.label()),
+                || em.spmv(&xs, &mut ys),
+            );
+            let t_heur = b.run(
+                &format!("model/heldout{i}-heuristic-pick({})", heur_kind.label()),
+                || eh.spmv(&xs, &mut ys),
+            );
+            b.record(
+                &format!("model/heldout{i}-model-matches-measured-winner"),
+                (model_kind == d.kind) as usize as f64,
+                "bool",
+            );
+            b.record(
+                &format!("model/heldout{i}-speedup-model-over-heuristic"),
+                t_heur / t_model,
+                "x",
+            );
         }
     }
 

@@ -32,6 +32,13 @@ pub enum Backend {
 pub struct RoutePolicy {
     /// Below this row count the sequential sweep wins (fork-join cost).
     pub min_parallel_n: usize,
+    /// Concrete engine for the parallel path, or [`EngineKind::Auto`]
+    /// to let the tuner resolve it per matrix at registration time.
+    /// Auto's fallback order is: persisted decision-cache hit → learned
+    /// cost model (`ServiceConfig::model`, when configured) →
+    /// hand-written heuristic — with measured trials replacing all
+    /// three whenever the registration brings a non-zero
+    /// `ServiceConfig::tune_budget`.
     pub parallel_kind: EngineKind,
     /// Thread *budget*. With a concrete `parallel_kind` this is the
     /// thread count engines run at; with [`EngineKind::Auto`] plus

@@ -52,6 +52,13 @@ pub struct ServiceConfig {
     /// restarted service pointed at the same file re-tunes nothing it
     /// has already measured.
     pub decision_cache: Option<PathBuf>,
+    /// Learned cost-model file ([`tuner::CostModel`], written by
+    /// `csrc tune train`) consulted for zero-budget/cold-start Auto
+    /// resolutions *before* the hand-written heuristic. `None` — or an
+    /// unreadable file — means heuristic only. Fallback order per
+    /// registration: decision-cache hit → model → heuristic
+    /// (`ServiceStats::{model_hits, model_fallbacks}`).
+    pub model: Option<PathBuf>,
     /// Max engines one worker keeps cached (LRU by last-served batch).
     /// Each cached engine pins a thread pool, so abandoned keys must not
     /// park pools forever.
@@ -73,6 +80,7 @@ impl Default for ServiceConfig {
             route: RoutePolicy::default(),
             tune_budget: TrialBudget::default(),
             decision_cache: None,
+            model: None,
             engine_cache_capacity: 32,
             drift_fraction: 0.5,
             drift_min_batches: 8,
@@ -105,12 +113,20 @@ struct ResolvedAuto {
     nthreads: usize,
     /// The decision's recorded rate (0 when unmeasured).
     mflops: f64,
+    /// Served-rate baseline ([`tuner::Decision::served_mflops`]): the
+    /// per-request EWMA recorded after a drift re-tune. When > 0, drift
+    /// is judged against it instead of the optimistic trial rate.
+    served_mflops: f64,
     /// The work units the decision's rate was normalized by
     /// (`Features::work_flops`). The drift EWMA must use the *same*
     /// normalization — `Csrc::flops()` counts the symmetric kernel's
     /// flops differently, which would skew the comparison by up to 2×.
     work_flops: usize,
     measured: bool,
+    /// The decision-cache key, so a worker can write the served
+    /// baseline back into the persisted entry.
+    fingerprint: u64,
+    max_threads: usize,
 }
 
 impl ResolvedAuto {
@@ -120,8 +136,11 @@ impl ResolvedAuto {
             reorder: d.reorder,
             nthreads: d.nthreads,
             mflops: d.mflops,
+            served_mflops: d.served_mflops,
             work_flops: d.features.work_flops,
             measured: d.measured,
+            fingerprint: d.fingerprint,
+            max_threads: d.max_threads,
         }
     }
 }
@@ -134,6 +153,19 @@ struct DriftState {
     /// A re-tune has been queued and not yet completed — don't queue
     /// another for the same key × generation.
     retune_pending: bool,
+    /// Set by the re-tuner when it publishes an upgraded decision: the
+    /// next `drift_min_batches` batches *calibrate* — their EWMA is
+    /// recorded as the entry's served baseline instead of being judged
+    /// against the fresh (warm, optimistic) trial rate. Without this a
+    /// decision whose trial rate sits far above serving reality would
+    /// re-trigger after every re-tune: a storm.
+    calibrating: bool,
+    /// The baseline the calibration window recorded (0 = none yet).
+    /// Judgement reads it here, under the same lock, rather than from
+    /// the batch's `ResolvedAuto` snapshot: a second worker whose
+    /// snapshot predates the calibration write must not re-judge
+    /// against the optimistic trial rate and queue a spurious re-tune.
+    served_baseline: f64,
 }
 
 /// A drift-triggered re-tune request, handled off the request path.
@@ -141,6 +173,17 @@ struct RetuneJob {
     matrix: String,
     cache_key: String,
     generation: u64,
+}
+
+/// Work for the `matvec-retuner` thread — everything that must stay off
+/// the request path.
+enum RetunerMsg {
+    /// Re-run the measured trials and upgrade the decision entry.
+    Retune(RetuneJob),
+    /// Persist a calibration window's served-EWMA baseline into the
+    /// cache entry. `DecisionCache::set_served_rate` rewrites the whole
+    /// file, so a worker must not pay for it inside a batch.
+    RecordServedRate { fingerprint: u64, max_threads: usize, mflops: f64 },
 }
 
 /// Shared mutable service state.
@@ -158,6 +201,8 @@ struct Stats {
     chosen_threads: Vec<(String, usize)>,
     retunes: u64,
     drift_events: u64,
+    model_hits: u64,
+    model_fallbacks: u64,
 }
 
 /// Observable service counters.
@@ -195,6 +240,13 @@ pub struct ServiceStats {
     pub retunes: u64,
     /// Batches whose rate EWMA sat below the drift threshold.
     pub drift_events: u64,
+    /// Cold-start Auto registrations answered by the learned cost model
+    /// (zero-budget predictions; decision-cache hits count in
+    /// `decision_hits`, not here).
+    pub model_hits: u64,
+    /// Cold-start Auto registrations that fell back to the hand-written
+    /// heuristic — no model configured, or it declined to predict.
+    pub model_fallbacks: u64,
 }
 
 /// Registry value: the matrix plus a per-key generation counter.
@@ -213,11 +265,14 @@ pub struct MatvecService {
     route: RoutePolicy,
     tune_budget: TrialBudget,
     decisions: Arc<DecisionCache>,
+    /// Learned cost model for cold-start resolutions (loaded once at
+    /// start; shared with the workers for the racing-request fallback).
+    model: Option<Arc<tuner::CostModel>>,
     /// `key@generation` → engine + thread count resolved for an Auto route.
     resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
     /// `key@generation` → served-rate EWMA for drift detection.
     drift: Arc<Mutex<HashMap<String, DriftState>>>,
-    retune_tx: Option<Sender<RetuneJob>>,
+    retune_tx: Option<Sender<RetunerMsg>>,
     retuner: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -230,11 +285,14 @@ impl MatvecService {
             Some(path) => DecisionCache::open(path),
             None => DecisionCache::in_memory(),
         });
+        // A missing/invalid model file degrades (with a warning from
+        // `load`) to the heuristic — never a startup failure.
+        let model = cfg.model.as_ref().and_then(|p| tuner::CostModel::load(p)).map(Arc::new);
         let resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>> =
             Arc::new(Mutex::new(HashMap::new()));
         let drift: Arc<Mutex<HashMap<String, DriftState>>> = Arc::new(Mutex::new(HashMap::new()));
         let (queue_tx, queue_rx) = channel::<Request>();
-        let (retune_tx, retune_rx) = channel::<RetuneJob>();
+        let (retune_tx, retune_rx) = channel::<RetunerMsg>();
 
         // Background re-tuner: drains drift-triggered jobs off the
         // request path, upgrades the decision cache in place.
@@ -266,6 +324,7 @@ impl MatvecService {
                 stats: stats.clone(),
                 resolved: resolved.clone(),
                 drift: drift.clone(),
+                model: model.clone(),
                 retune_tx: retune_tx.clone(),
                 engine_capacity: cfg.engine_cache_capacity.max(1),
                 drift_fraction: cfg.drift_fraction,
@@ -297,6 +356,7 @@ impl MatvecService {
             route: cfg.route,
             tune_budget: cfg.tune_budget,
             decisions,
+            model,
             resolved,
             drift,
             retune_tx: Some(retune_tx),
@@ -342,7 +402,8 @@ impl MatvecService {
         // budget, so a re-registered matrix — or one registered with a
         // service restarted onto the same persisted cache — resolves
         // with zero new trials. (A request racing this resolution falls
-        // back to the cost model inside the worker; it never blocks.)
+        // back to the model/heuristic inside the worker; it never
+        // blocks.)
         if self.route.parallel_kind == EngineKind::Auto && a.n >= self.route.min_parallel_n {
             let cache_key = format!("{key}@{generation}");
             let kernel: Arc<dyn SpmvKernel> = a.clone();
@@ -350,13 +411,14 @@ impl MatvecService {
             let (d, hit) = if self.route.sweep_threads {
                 let ladder = tuner::thread_ladder(threads);
                 let mut plan_for = tuner::cached_plan_provider(&self.plans, &cache_key, &kernel);
-                let r = tuner::resolve_swept(
+                let r = tuner::resolve_swept_with_model(
                     &kernel,
                     &ladder,
                     &self.tune_budget,
                     &self.decisions,
                     &mut plan_for,
                     self.route.reorder,
+                    self.model.as_deref(),
                 );
                 // Only the winning rung's analysis stays alive — for
                 // the plain plans and any reordered (`#rcm`) plans the
@@ -371,12 +433,13 @@ impl MatvecService {
                     kernel.as_ref(),
                     PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
                 );
-                tuner::resolve(
+                tuner::resolve_with_model(
                     &kernel,
                     &plan,
                     &self.tune_budget,
                     &self.decisions,
                     self.route.reorder,
+                    self.model.as_deref(),
                 )
             };
             self.resolved
@@ -389,6 +452,13 @@ impl MatvecService {
             if !hit {
                 s.tunes += 1;
                 s.tune_seconds += d.tuned_s;
+                // Cold-start provenance: who answered when no cached
+                // decision satisfied the caller.
+                match d.provenance {
+                    tuner::Provenance::Model => s.model_hits += 1,
+                    tuner::Provenance::Heuristic => s.model_fallbacks += 1,
+                    tuner::Provenance::Measured => {}
+                }
             }
             // Reordered winners are visible in the choice log (the plain
             // label still parses as an EngineKind for plain winners).
@@ -440,6 +510,8 @@ impl MatvecService {
             chosen_threads: s.chosen_threads.clone(),
             retunes: s.retunes,
             drift_events: s.drift_events,
+            model_hits: s.model_hits,
+            model_fallbacks: s.model_fallbacks,
         }
     }
 
@@ -535,7 +607,14 @@ struct WorkerCtx {
     stats: Arc<Mutex<Stats>>,
     resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
     drift: Arc<Mutex<HashMap<String, DriftState>>>,
-    retune_tx: Sender<RetuneJob>,
+    /// Cold-start model, consulted by the racing-request fallback so the
+    /// fallback order (cache → model → heuristic) holds on the worker
+    /// side too.
+    model: Option<Arc<tuner::CostModel>>,
+    /// Re-tunes *and* served-baseline write-backs go here — both touch
+    /// the persisted decision cache, which must stay off the request
+    /// path.
+    retune_tx: Sender<RetunerMsg>,
     engine_capacity: usize,
     drift_fraction: f64,
     drift_min_batches: u64,
@@ -588,8 +667,9 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
         // Resolve Auto once per batch (it is batch-invariant): through
         // the registration-time decision — which carries the swept
         // thread count, not `RoutePolicy::threads` blindly — or, for a
-        // request racing that resolution, the cost model (features only,
-        // no trials), rather than blocking or tuning on the request path.
+        // request racing that resolution, the model/heuristic (features
+        // only, no trials), rather than blocking or tuning on the
+        // request path.
         let mut auto_decision: Option<ResolvedAuto> = None;
         let backend = match router.route(&a) {
             Backend::NativeParallel { kind: EngineKind::Auto, threads, reorder } => {
@@ -609,7 +689,26 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                             a.as_ref(),
                             PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
                         );
-                        let kind = tuner::cost_model(&tuner::Features::extract(a.as_ref(), &plan));
+                        // Same fallback order as registration (model,
+                        // then heuristic). The batch executes with the
+                        // route's reorder flag either way (an Always
+                        // route builds the RCM engine regardless), so
+                        // the model must score classes for the ordering
+                        // that will actually run — predicting plain for
+                        // a reordered execution would pick from the
+                        // wrong class space.
+                        let features = tuner::Features::extract(a.as_ref(), &plan);
+                        let policy = if reorder {
+                            crate::reorder::ReorderPolicy::Always
+                        } else {
+                            crate::reorder::ReorderPolicy::Never
+                        };
+                        let kind = ctx
+                            .model
+                            .as_deref()
+                            .and_then(|m| m.predict(&features, policy))
+                            .map(|p| p.kind)
+                            .unwrap_or_else(|| tuner::cost_model(&features));
                         Backend::NativeParallel { kind, threads, reorder }
                     }
                 }
@@ -730,10 +829,19 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
 
 /// Fold one batch's measured rate into the key's EWMA and queue a
 /// background re-tune — once per key × generation — when it has drifted
-/// below `drift_fraction` of the decision's recorded rate. The rate is
-/// normalized by the decision's own `work_flops`, so the EWMA and the
-/// recorded rate are in the same units. Unmeasured (cost-model)
+/// below `drift_fraction` of the decision's *baseline* rate. The rate
+/// is normalized by the decision's own `work_flops`, so the EWMA and
+/// the baseline are in the same units. Unmeasured (model/heuristic)
 /// decisions record no rate and are never drift-checked.
+///
+/// The baseline is the entry's **served** rate when one has been
+/// recorded, else the trial rate. Trials are warm back-to-back products
+/// and therefore optimistic relative to per-request serving — judging
+/// serving against them forever re-triggers (a re-tune storm). So the
+/// first `drift_min_batches` batches after a re-tune *calibrate*
+/// (`DriftState::calibrating`): their EWMA is written back into the
+/// resolved entry and the persisted cache entry as the served baseline,
+/// and only later batches are judged, against that baseline.
 fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: usize, secs: f64) {
     if products == 0
         || secs <= 0.0
@@ -753,7 +861,42 @@ fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: 
         EWMA_ALPHA * rate + (1.0 - EWMA_ALPHA) * st.ewma_mflops
     };
     st.batches += 1;
-    if st.batches < ctx.drift_min_batches || st.ewma_mflops >= ctx.drift_fraction * r.mflops {
+    if st.batches < ctx.drift_min_batches {
+        return;
+    }
+    if st.calibrating {
+        // Enough post-re-tune batches: the EWMA *is* serving reality
+        // now. (The first sample can straddle the old engine for one
+        // batch — the EWMA shrugs that off.) Record it as the judging
+        // baseline under this lock, publish it to the resolved entry
+        // (cheap, in-memory) and hand the persisted write-back — a full
+        // cache-file rewrite — to the re-tuner thread; judgement
+        // restarts next batch.
+        st.calibrating = false;
+        st.served_baseline = st.ewma_mflops;
+        let ewma = st.ewma_mflops;
+        drop(drift);
+        if let Some(e) = ctx.resolved.lock().unwrap().get_mut(&job.cache_key) {
+            e.served_mflops = ewma;
+        }
+        let _ = ctx.retune_tx.send(RetunerMsg::RecordServedRate {
+            fingerprint: r.fingerprint,
+            max_threads: r.max_threads,
+            mflops: ewma,
+        });
+        return;
+    }
+    // Baseline preference: the lock-protected calibration record, then
+    // the decision's persisted served rate (a restarted service), then
+    // — for never-calibrated decisions — the trial rate.
+    let baseline = if st.served_baseline > 0.0 {
+        st.served_baseline
+    } else if r.served_mflops > 0.0 {
+        r.served_mflops
+    } else {
+        r.mflops
+    };
+    if st.ewma_mflops >= ctx.drift_fraction * baseline {
         return;
     }
     let already_pending = st.retune_pending;
@@ -761,7 +904,7 @@ fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: 
     drop(drift);
     ctx.stats.lock().unwrap().drift_events += 1;
     if !already_pending {
-        let _ = ctx.retune_tx.send(job);
+        let _ = ctx.retune_tx.send(RetunerMsg::Retune(job));
     }
 }
 
@@ -777,12 +920,21 @@ struct RetunerCtx {
     stats: Arc<Mutex<Stats>>,
 }
 
-/// Drain drift-triggered re-tune jobs: re-run the measured trials (the
-/// sweep when `route.sweep_threads`) against the *current* machine
-/// state, upgrade the decision-cache entry in place, republish the
-/// resolution for workers, and reset the key's drift baseline.
-fn retuner_loop(rx: Receiver<RetuneJob>, ctx: RetunerCtx) {
-    while let Ok(job) = rx.recv() {
+/// Drain re-tuner work: drift-triggered re-tunes (re-run the measured
+/// trials — the sweep when `route.sweep_threads` — against the
+/// *current* machine state, upgrade the decision-cache entry in place,
+/// republish the resolution for workers, and reset the key's drift
+/// state into calibration) and served-baseline write-backs the workers
+/// hand off (a full cache-file rewrite each — request-path poison).
+fn retuner_loop(rx: Receiver<RetunerMsg>, ctx: RetunerCtx) {
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            RetunerMsg::Retune(job) => job,
+            RetunerMsg::RecordServedRate { fingerprint, max_threads, mflops } => {
+                ctx.decisions.set_served_rate(fingerprint, max_threads, mflops);
+                continue;
+            }
+        };
         let hit = ctx.registry.lock().unwrap().get(&job.matrix).cloned();
         let Some((a, generation)) = hit else { continue };
         if generation != job.generation {
@@ -841,10 +993,12 @@ fn retuner_loop(rx: Receiver<RetuneJob>, ctx: RetunerCtx) {
                 continue;
             }
             resolved.insert(job.cache_key.clone(), ResolvedAuto::from_decision(&d));
-            // Fresh baseline (and `retune_pending` cleared): the next
-            // drift judgement starts from scratch against the new
-            // decision.
-            drift.insert(job.cache_key, DriftState::default());
+            // Fresh state (`retune_pending` cleared) in *calibration*
+            // mode: the next drift_min_batches batches record the
+            // served EWMA as the new entry's baseline instead of being
+            // judged against its warm trial rate — see maybe_flag_drift
+            // (this is what stops the re-tune storm).
+            drift.insert(job.cache_key, DriftState { calibrating: true, ..Default::default() });
         }
         let mut s = ctx.stats.lock().unwrap();
         s.retunes += 1;
@@ -1094,6 +1248,8 @@ mod tests {
             reorder: false,
             mflops,
             measured: true,
+            provenance: tuner::Provenance::Measured,
+            served_mflops: 0.0,
             tuned_s: 0.001,
             fingerprint: fp,
             nthreads: 1,
@@ -1178,6 +1334,234 @@ mod tests {
         let d = back.get(fp, 2).expect("upgraded decision persisted");
         assert!(d.measured && !d.sweep.is_empty());
         assert!(d.mflops < 1e8, "recorded rate must be re-measured, got {}", d.mflops);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retuned_decision_uses_served_baseline_not_trial_rate() {
+        // Satellite (ISSUE 5): a doctored optimistic trial rate must
+        // trigger exactly ONE re-tune, not a storm. After the re-tune
+        // the worker's calibration window records the served EWMA into
+        // the entry, and later drift judgements run against that
+        // serving baseline — which the serving rate trivially meets.
+        let dir = std::env::temp_dir().join(format!("csrc_storm_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let a = mat(200, 195);
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        let fp = tuner::fingerprint(kernel.as_ref());
+        {
+            let cache = DecisionCache::open(&path);
+            cache.put(doctored_decision(fp, 1e9));
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.25;
+        cfg.drift_min_batches = 2;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 200];
+        a.spmv_into_zeroed(&x, &mut want);
+        // Serve until the (certain) first re-tune lands.
+        let mut retuned = false;
+        for _ in 0..400 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+            if svc.stats().retunes >= 1 {
+                retuned = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(retuned, "the doctored rate must trigger the first re-tune");
+        // Plenty of post-re-tune batches: calibration (2 batches) plus
+        // many judged ones. Without the served baseline every judged
+        // batch would re-flag drift against the fresh warm trial rate.
+        for _ in 0..40 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        // Give any (wrongly) queued re-tune time to complete.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let s = svc.stats();
+        assert_eq!(s.retunes, 1, "served-EWMA baseline must stop the re-tune storm");
+        svc.shutdown();
+        // The baseline was persisted with the upgraded entry.
+        let back = DecisionCache::open(&path);
+        let d = back.get(fp, 2).expect("upgraded decision persisted");
+        assert!(d.measured);
+        assert!(d.mflops < 1e8, "trial rate was re-measured, got {}", d.mflops);
+        assert!(d.served_mflops > 0.0, "calibration must record the served baseline");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_register_serve_retune_stress() {
+        // Satellite (ISSUE 5): concurrent register/serve/retune must
+        // lose no cache upgrades — every doctored entry ends up
+        // re-measured in place — and the retune counter must reflect
+        // the observed upgrades (one per key, no storms), even with a
+        // key being re-registered mid-flight.
+        let dir = std::env::temp_dir().join(format!("csrc_stress_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let mats: Vec<Arc<Csrc>> = (0..3).map(|i| mat(200, 300 + i)).collect();
+        let fps: Vec<u64> = mats
+            .iter()
+            .map(|m| {
+                let k: Arc<dyn SpmvKernel> = m.clone();
+                tuner::fingerprint(k.as_ref())
+            })
+            .collect();
+        {
+            let cache = DecisionCache::open(&path);
+            for fp in &fps {
+                cache.put(doctored_decision(*fp, 1e9));
+            }
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 2;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.25;
+        cfg.drift_min_batches = 2;
+        let svc = MatvecService::start(cfg);
+        for (i, m) in mats.iter().enumerate() {
+            svc.register(&format!("m{i}"), m.clone());
+        }
+        assert_eq!(svc.stats().tunes, 0, "all three doctored entries must be cache hits");
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for c in 0..3usize {
+                let svc = &svc;
+                let mats = &mats;
+                let stop = stop.clone();
+                scope.spawn(move || {
+                    let mut i = c;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        let k = i % 3;
+                        let m = &mats[k];
+                        let x: Vec<f64> =
+                            (0..m.n).map(|j| ((i + j) as f64 * 0.01).sin()).collect();
+                        let mut want = vec![0.0; m.n];
+                        m.spmv_into_zeroed(&x, &mut want);
+                        let y = svc.call(&format!("m{k}"), x).unwrap();
+                        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+                        i += 1;
+                    }
+                });
+            }
+            // Meanwhile: wait for all three re-tunes, poking a
+            // concurrent replacement of m0 (same matrix, so in-flight
+            // x vectors stay valid) into the middle of the run.
+            let mut ok = false;
+            for round in 0..1200 {
+                if svc.stats().retunes >= 3 {
+                    ok = true;
+                    break;
+                }
+                if round == 30 || round == 90 {
+                    svc.register("m0", mats[0].clone());
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            assert!(ok, "all drifted keys must re-tune (retunes={})", svc.stats().retunes);
+        });
+        let s = svc.stats();
+        assert_eq!(s.failed, 0, "every request must serve cleanly through the churn");
+        assert_eq!(s.completed, s.submitted);
+        svc.shutdown();
+        // No lost upgrades: every doctored entry was re-measured in
+        // place despite the concurrent replacements…
+        let back = DecisionCache::open(&path);
+        for fp in &fps {
+            let d = back.get(*fp, 2).expect("entry survives");
+            assert!(d.measured, "upgrade must keep the entry measured");
+            assert!(d.mflops < 1e8, "trial rate must be re-measured, got {}", d.mflops);
+        }
+        // …and the retune counter matches the observed upgrades: one
+        // per key (the served-EWMA baseline forbids storms), plus at
+        // most one extra per m0 re-registration that raced its own
+        // upgrade (a replaced generation re-drifts once).
+        assert!(
+            (3..=5).contains(&s.retunes),
+            "retunes {} must match the 3 observed upgrades (± racing re-registrations)",
+            s.retunes
+        );
+    }
+
+    #[test]
+    fn zero_budget_auto_answers_from_model_when_supplied() {
+        // ISSUE 5 acceptance at the service level: with an empty
+        // decision cache and a zero trial budget, registration answers
+        // from the supplied model (ServiceStats::model_hits), and from
+        // the heuristic only when none is configured (model_fallbacks).
+        let dir = std::env::temp_dir().join(format!("csrc_model_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let model_path = dir.join("model.json");
+        let a = mat(200, 400);
+        // Train a tiny constant model that crowns `colorful` — a pick
+        // the registration must echo verbatim if it consulted the model
+        // (the heuristic would choose a local-buffers engine here).
+        {
+            let kernel: Arc<dyn SpmvKernel> = a.clone();
+            let plan = crate::plan::PlanBuilder::all(2).build(kernel.as_ref());
+            let features = tuner::Features::extract(kernel.as_ref(), &plan);
+            let rows: Vec<tuner::CorpusRow> = (0..3u64)
+                .map(|i| tuner::CorpusRow {
+                    fingerprint: i,
+                    max_threads: 2,
+                    features: features.clone(),
+                    kind: EngineKind::Colorful,
+                    reordered: false,
+                    nthreads: 2,
+                    rung_rates: vec![(2, 500.0)],
+                })
+                .collect();
+            tuner::CostModel::train(&rows).unwrap().save(&model_path).unwrap();
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.tune_budget = TrialBudget::zero();
+        cfg.model = Some(model_path);
+        let svc = MatvecService::start(cfg.clone());
+        svc.register("m", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.model_hits, 1, "the model must answer the cold start");
+        assert_eq!(s.model_fallbacks, 0);
+        assert_eq!(s.auto_choices[0].1, "colorful", "the planted model pick");
+        // Serving runs correctly on the predicted engine.
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 200];
+        a.spmv_into_zeroed(&x, &mut want);
+        let y = svc.call("m", x.clone()).unwrap();
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
+        // The same config without a model falls back to the heuristic.
+        cfg.model = None;
+        let svc2 = MatvecService::start(cfg);
+        svc2.register("m", a.clone());
+        let s2 = svc2.stats();
+        assert_eq!(s2.model_hits, 0);
+        assert_eq!(s2.model_fallbacks, 1, "no model: the heuristic answers");
+        assert_ne!(s2.auto_choices[0].1, "colorful", "the heuristic picks differently here");
+        svc2.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

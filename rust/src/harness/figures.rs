@@ -506,6 +506,91 @@ pub fn reorder_headers() -> Vec<String> {
     .collect()
 }
 
+// ------------------------------------------------------------ Model table
+
+/// Beyond the paper: the learned cross-matrix cost model
+/// ([`crate::tuner::model`]) judged per matrix — the measured winner
+/// next to the model's and the heuristic's cold-start picks, with
+/// *regret* = the % of measured rate each zero-trial pick leaves on the
+/// table. With no pre-trained `model` supplied, each row trains
+/// leave-one-out on the rest of the suite's measured decisions, so
+/// every prediction is for a matrix the model never saw — the
+/// cross-matrix claim, tested directly.
+pub fn model_table(
+    entries: &[DatasetEntry],
+    p: usize,
+    budget: &TrialBudget,
+    model: Option<&tuner::CostModel>,
+) -> Vec<Vec<String>> {
+    let measured: Vec<(&str, tuner::Decision)> = entries
+        .iter()
+        .map(|e| {
+            let m = Arc::new(e.build_csrc());
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let plan = Arc::new(PlanBuilder::all(p).build(kernel.as_ref()));
+            (e.name, tuner::tune(&kernel, &plan, budget))
+        })
+        .collect();
+    measured
+        .iter()
+        .enumerate()
+        .map(|(i, (name, d))| {
+            // Leave-one-out fallback: train on every *other* decision.
+            let trained;
+            let predictor = match model {
+                Some(m) => Some(m),
+                None => {
+                    let held: Vec<tuner::Decision> = measured
+                        .iter()
+                        .enumerate()
+                        .filter(|(j, _)| *j != i)
+                        .map(|(_, (_, d))| d.clone())
+                        .collect();
+                    trained = tuner::CostModel::train(&tuner::model::rows_from_decisions(&held));
+                    trained.as_ref()
+                }
+            };
+            let heur_pick = tuner::cost_model(&d.features);
+            // A declining model (e.g. one with no plain classes) shows
+            // as "-", never as the heuristic's pick in disguise — the
+            // whole point of the table is the model-vs-heuristic gap.
+            let model_pick = predictor
+                .and_then(|m| m.predict(&d.features, crate::reorder::ReorderPolicy::Never))
+                .map(|pr| pr.kind);
+            let best = d.mflops;
+            let rate_of = |k: EngineKind| {
+                d.trials.iter().find(|t| t.kind == k && !t.reordered).map(|t| t.mflops)
+            };
+            let regret = |k: EngineKind| match rate_of(k) {
+                Some(r) if best > 0.0 => format!("{:.1}", (1.0 - r / best).max(0.0) * 100.0),
+                _ => "-".into(),
+            };
+            vec![
+                name.to_string(),
+                d.kind.label(),
+                model_pick.map_or_else(|| "-".into(), |k| k.label()),
+                model_pick.map_or_else(|| "-".into(), &regret),
+                heur_pick.label(),
+                regret(heur_pick),
+            ]
+        })
+        .collect()
+}
+
+pub fn model_headers() -> Vec<String> {
+    [
+        "matrix",
+        "measured winner",
+        "model pick",
+        "model regret %",
+        "heuristic pick",
+        "heuristic regret %",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
 pub fn table2_headers() -> Vec<String> {
     let mut h = vec!["method".to_string()];
     for (machine, threads) in [("wolfdale", vec![2]), ("bloomfield", vec![2, 4])] {
@@ -589,6 +674,32 @@ mod tests {
                 "winner must name its thread count: {winner}"
             );
             assert_ne!(r.last().unwrap().as_str(), "-", "{r:?}");
+        }
+    }
+
+    #[test]
+    fn model_table_reports_regret_per_matrix() {
+        let rows = model_table(&smoke_suite()[..3], 2, &TrialBudget::smoke(), None);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].len(), model_headers().len());
+        for r in &rows {
+            // Measured winner and the heuristic pick are concrete
+            // engine labels; the model pick is one too unless the model
+            // declined ("-", never the heuristic in disguise).
+            for col in [1usize, 4] {
+                assert!(EngineKind::parse(&r[col]).is_some(), "{r:?}");
+                assert_ne!(r[col], "auto", "{r:?}");
+            }
+            if r[2] != "-" {
+                assert!(EngineKind::parse(&r[2]).is_some(), "{r:?}");
+            }
+            // Regret parses and is non-negative whenever the pick was
+            // among the measured trials.
+            for col in [3usize, 5] {
+                if r[col] != "-" {
+                    assert!(r[col].parse::<f64>().unwrap() >= 0.0, "{r:?}");
+                }
+            }
         }
     }
 

@@ -8,7 +8,8 @@
 //! * `solve   --matrix <..> --solver cg|gmres|bicg`
 //! * `serve   --requests 64`                         — coordinator demo
 //! * `xla     --artifacts artifacts`                 — run the AOT path
-//! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|all>`
+//! * `tune train --corpus <dir> --model model.json`  — fit the cost model
+//! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|model|all>`
 //!            `[--suite quick|full|smoke] [--out results]`
 
 use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
@@ -70,14 +71,15 @@ fn usage_and_exit() -> ! {
                       --threads P --products K\n\
          csrc tune    --matrix <..> [--threads P] [--runs R] [--products K]\n\
                       [--cache decisions.json] [--sweep-threads] [--report sweep.json]\n\
-                      [--reorder never|measure|always]\n\
+                      [--reorder never|measure|always] [--model model.json]\n\
+         csrc tune train --corpus <dir|decisions.json> --model model.json\n\
          csrc reorder --matrix <..> [--threads P] [--out rcm.mtx]\n\
          csrc solve   --matrix <..> --solver <cg|gmres|bicg> [--tol 1e-10]\n\
          csrc serve   [--requests N] [--workers W] [--engine auto] [--min-parallel-n N]\n\
-                      [--sweep-threads] [--reorder never|measure|always]\n\
+                      [--sweep-threads] [--reorder never|measure|always] [--model model.json]\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|all>\n\
-                      [--suite smoke|quick|full] [--out results]"
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|model|all>\n\
+                      [--suite smoke|quick|full] [--out results] [--model model.json]"
     );
     std::process::exit(2);
 }
@@ -216,8 +218,14 @@ fn cmd_spmv(args: &Args) -> Result<()> {
 /// `--threads` — print the trial table(s) and the winner; `--cache`
 /// persists the decision so a later `tune` (or a service pointed at the
 /// same file) performs zero new trials; `--report` writes the decision
-/// (including the sweep surface) as JSON.
+/// (including the sweep surface) as JSON; `--model` consults a trained
+/// cost model ([`tuner::CostModel`]) for zero-budget (`--runs 0`)
+/// cold starts before the heuristic. `csrc tune train` fits that model
+/// from the persisted decision corpus.
 fn cmd_tune(args: &Args) -> Result<()> {
+    if args.positional.first().map(|s| s.as_str()) == Some("train") {
+        return cmd_tune_train(args);
+    }
     let (name, m) = load_matrix(args)?;
     let threads = args.usize_or("threads", 4);
     let budget = tuner::TrialBudget {
@@ -236,14 +244,24 @@ fn cmd_tune(args: &Args) -> Result<()> {
             .ok_or_else(|| msg("bad --reorder (never|measure|always)"))?,
         None => ReorderPolicy::Never,
     };
+    // An unreadable model file warns and degrades to the heuristic.
+    let model = args.opt("model").and_then(|p| tuner::CostModel::load(Path::new(p)));
     let (d, hit) = if args.has_flag("sweep-threads") {
         let ladder = tuner::thread_ladder(threads);
         let plans = PlanCache::new();
         let mut plan_for = tuner::cached_plan_provider(&plans, &name, &kernel);
-        tuner::resolve_swept(&kernel, &ladder, &budget, &cache, &mut plan_for, policy)
+        tuner::resolve_swept_with_model(
+            &kernel,
+            &ladder,
+            &budget,
+            &cache,
+            &mut plan_for,
+            policy,
+            model.as_ref(),
+        )
     } else {
         let plan = Arc::new(PlanBuilder::all(threads).build(kernel.as_ref()));
-        tuner::resolve(&kernel, &plan, &budget, &cache, policy)
+        tuner::resolve_with_model(&kernel, &plan, &budget, &cache, policy, model.as_ref())
     };
     println!(
         "{name}: n={} colors={} intervals={} bandwidth={} scatter-ratio={:.3} balance={:.3}",
@@ -281,7 +299,10 @@ fn cmd_tune(args: &Args) -> Result<()> {
         d.nthreads,
         match win {
             Some(w) => format!("{:.1} Mflop/s", metrics::mflops(flops, w.seconds_per_product)),
-            None => "cost model, no trials".to_string(),
+            None => match d.provenance {
+                tuner::Provenance::Model => "model prediction, no trials".to_string(),
+                _ => "cost model, no trials".to_string(),
+            },
         },
         d.tuned_s * 1e3,
         if hit { "; from decision cache, zero new trials" } else { "" }
@@ -296,6 +317,28 @@ fn cmd_tune(args: &Args) -> Result<()> {
         std::fs::write(path, tuner::decision_json(&d).dump())?;
         println!("wrote decision report to {report}");
     }
+    Ok(())
+}
+
+/// `csrc tune train --corpus <dir|decisions.json> --model <out.json>`:
+/// flatten the persisted decision cache(s) — schema v1 and v2 both load
+/// — into labeled rows and fit the learned cost model that `tune
+/// --model`, `serve --model` and `figures model` consume.
+fn cmd_tune_train(args: &Args) -> Result<()> {
+    let corpus = args
+        .opt("corpus")
+        .ok_or_else(|| msg("--corpus <dir|decisions.json> required"))?;
+    let out = args.opt_or("model", "model.json");
+    let rows = tuner::model::load_corpus(Path::new(corpus))?;
+    if rows.is_empty() {
+        return Err(msg(format!(
+            "corpus {corpus:?} holds no measured decisions (run `csrc tune --cache …` first)"
+        )));
+    }
+    let m = tuner::CostModel::train(&rows)
+        .ok_or_else(|| msg("model training failed on a non-empty corpus"))?;
+    m.save(Path::new(out))?;
+    println!("trained cost model ({}); wrote {out}", m.summary());
     Ok(())
 }
 
@@ -385,6 +428,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.route.reorder =
             ReorderPolicy::parse(s).ok_or_else(|| msg("bad --reorder (never|measure|always)"))?;
     }
+    // `--model` arms the learned cost model for cold-start resolutions
+    // (consulted after the decision cache, before the heuristic).
+    if let Some(p) = args.opt("model") {
+        cfg.model = Some(std::path::PathBuf::from(p));
+    }
     let svc = MatvecService::start(cfg);
     // Register a few dataset matrices once, remembering their sizes.
     let names = ["thermal", "torsion1", "poisson3Da"];
@@ -425,10 +473,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if !s.auto_choices.is_empty() {
         println!(
-            "autotuned {} matrices in {:.1} ms ({} cache hits, {} drift events, {} re-tunes):",
+            "autotuned {} matrices in {:.1} ms ({} cache hits, {} model hits, \
+             {} heuristic fallbacks, {} drift events, {} re-tunes):",
             s.tunes,
             s.tune_seconds * 1e3,
             s.decision_hits,
+            s.model_hits,
+            s.model_fallbacks,
             s.drift_events,
             s.retunes
         );
@@ -620,6 +671,21 @@ fn cmd_figures(args: &Args) -> Result<()> {
             "RCM reordering — half-bandwidth, windowed working set, Mflop/s before/after",
             &h,
             &figures::reorder_table(&suite, p),
+        )?;
+    }
+    if run_all || what == "model" {
+        // With `--model` the supplied file predicts for every matrix;
+        // without it each row trains leave-one-out on the rest of the
+        // suite's measured decisions — a genuine cross-matrix test.
+        let model = args.opt("model").and_then(|p| tuner::CostModel::load(Path::new(p)));
+        let headers = figures::model_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let p = args.usize_or("threads", 4);
+        report.table(
+            "model",
+            "Learned cost model — measured winner vs model/heuristic cold-start picks and regret",
+            &h,
+            &figures::model_table(&suite, p, &trial_budget, model.as_ref()),
         )?;
     }
     println!("wrote results under {out}/");

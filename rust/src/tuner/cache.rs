@@ -15,11 +15,18 @@
 //! `nthreads` and the sweep surface is empty, which is exactly what
 //! [`super::resolve_swept`] treats as "upgrade me when a sweeping caller
 //! brings a measuring budget".
+//!
+//! **Degradation rules** (the file is a performance artifact, never a
+//! source of truth): a file that is not JSON, lacks the `decisions`
+//! array, or was written by a *newer* schema than this build knows is
+//! ignored wholesale — the cache starts empty with a warning. A single
+//! malformed entry inside an otherwise healthy file is *skipped*, not
+//! fatal: one corrupt record must not re-tune the whole fleet.
 
-use super::{Decision, Features, SweepPoint, TrialResult};
+use super::{Decision, Features, Provenance, SweepPoint, TrialResult};
 use crate::parallel::EngineKind;
 use crate::util::json::Json;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -43,11 +50,42 @@ impl DecisionCache {
     }
 
     /// Open (or create on first `put`) a persistent cache at `path`.
+    /// A corrupt, truncated, wrong-version or otherwise unreadable file
+    /// degrades to an empty cache with a warning — resolution must
+    /// never abort on a damaged performance artifact.
     pub fn open(path: &Path) -> DecisionCache {
-        let map = std::fs::read_to_string(path)
-            .ok()
-            .and_then(|text| parse_decisions(&text))
-            .unwrap_or_default();
+        let map = match std::fs::read_to_string(path) {
+            // Genuinely absent: a fresh cache, nothing to warn about.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => HashMap::new(),
+            // Present but unreadable (permissions, EIO): warn loudly —
+            // the next put() will overwrite whatever is there, and the
+            // operator should know the accumulated decisions (and the
+            // model-training corpus they form) are about to be lost.
+            Err(e) => {
+                eprintln!(
+                    "warning: decision cache {} unreadable ({e}); starting empty",
+                    path.display()
+                );
+                HashMap::new()
+            }
+            Ok(text) => match parse_decisions(&text) {
+                Ok((map, 0)) => map,
+                Ok((map, skipped)) => {
+                    eprintln!(
+                        "warning: decision cache {}: skipped {skipped} malformed entries",
+                        path.display()
+                    );
+                    map
+                }
+                Err(e) => {
+                    eprintln!(
+                        "warning: decision cache {} ignored ({e}); starting empty",
+                        path.display()
+                    );
+                    HashMap::new()
+                }
+            },
+        };
         DecisionCache {
             path: Some(path.to_path_buf()),
             map: Mutex::new(map),
@@ -93,6 +131,18 @@ impl DecisionCache {
         }
     }
 
+    /// Record the service's served-rate baseline into an entry (see
+    /// [`Decision::served_mflops`]) and write the file through. A no-op
+    /// when the entry has been replaced or evicted meanwhile.
+    pub fn set_served_rate(&self, fingerprint: u64, max_threads: usize, mflops: f64) {
+        let mut map = self.map.lock().unwrap();
+        let Some(d) = map.get_mut(&(fingerprint, max_threads)) else { return };
+        d.served_mflops = mflops;
+        if let Some(path) = &self.path {
+            let _ = write_decisions(path, &map);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
@@ -110,12 +160,8 @@ impl DecisionCache {
     }
 }
 
-fn obj(pairs: Vec<(&str, Json)>) -> Json {
-    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
-}
-
 fn features_to_json(f: &Features) -> Json {
-    obj(vec![
+    Json::obj(vec![
         ("n", Json::Num(f.n as f64)),
         ("work_flops", Json::Num(f.work_flops as f64)),
         ("scatter_pairs", Json::Num(f.scatter_pairs as f64)),
@@ -131,7 +177,7 @@ fn features_to_json(f: &Features) -> Json {
 }
 
 fn trial_to_json(t: &TrialResult) -> Json {
-    obj(vec![
+    Json::obj(vec![
         ("kind", Json::Str(t.kind.label())),
         ("reordered", Json::Bool(t.reordered)),
         ("seconds_per_product", Json::Num(t.seconds_per_product)),
@@ -141,14 +187,14 @@ fn trial_to_json(t: &TrialResult) -> Json {
 }
 
 fn sweep_point_to_json(pt: &SweepPoint) -> Json {
-    obj(vec![
+    Json::obj(vec![
         ("nthreads", Json::Num(pt.nthreads as f64)),
         ("trials", Json::Arr(pt.trials.iter().map(trial_to_json).collect())),
     ])
 }
 
 fn decision_to_json(d: &Decision) -> Json {
-    obj(vec![
+    Json::obj(vec![
         ("fingerprint", Json::Str(format!("{:016x}", d.fingerprint))),
         ("nthreads", Json::Num(d.nthreads as f64)),
         ("max_threads", Json::Num(d.max_threads as f64)),
@@ -156,6 +202,8 @@ fn decision_to_json(d: &Decision) -> Json {
         ("reorder", Json::Bool(d.reorder)),
         ("mflops", Json::Num(d.mflops)),
         ("measured", Json::Bool(d.measured)),
+        ("provenance", Json::Str(d.provenance.label().to_string())),
+        ("served_mflops", Json::Num(d.served_mflops)),
         ("tuned_s", Json::Num(d.tuned_s)),
         ("features", features_to_json(&d.features)),
         ("trials", Json::Arr(d.trials.iter().map(trial_to_json).collect())),
@@ -169,24 +217,21 @@ pub fn decision_json(d: &Decision) -> Json {
     decision_to_json(d)
 }
 
+/// Current (write-side) schema version. Files claiming a *newer*
+/// version are ignored wholesale: their entries may mean something this
+/// build would misread.
+const CACHE_VERSION: f64 = 2.0;
+
 fn write_decisions(path: &Path, map: &HashMap<(u64, usize), Decision>) -> std::io::Result<()> {
-    if let Some(dir) = path.parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
-        }
-    }
     let mut entries: Vec<&Decision> = map.values().collect();
     entries.sort_by_key(|d| (d.fingerprint, d.max_threads));
-    let root = obj(vec![
-        ("version", Json::Num(2.0)),
+    let root = Json::obj(vec![
+        ("version", Json::Num(CACHE_VERSION)),
         ("decisions", Json::Arr(entries.into_iter().map(decision_to_json).collect())),
     ]);
-    // Write-to-temp + rename so a crash mid-write cannot truncate the
-    // cache (a half-written file would read back as "corrupt → empty"
-    // and silently re-tune everything on the next start).
-    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-    std::fs::write(&tmp, root.dump())?;
-    std::fs::rename(&tmp, path)
+    // Atomic write: a half-written file would read back as "corrupt →
+    // empty" and silently re-tune everything on the next start.
+    crate::util::write_atomic(path, &root.dump())
 }
 
 fn parse_features(j: &Json) -> Option<Features> {
@@ -225,44 +270,93 @@ fn parse_sweep_point(j: &Json) -> Option<SweepPoint> {
     })
 }
 
-fn parse_decisions(text: &str) -> Option<HashMap<(u64, usize), Decision>> {
-    let j = Json::parse(text).ok()?;
+/// One entry; `None` = this record is malformed (the caller skips it).
+fn parse_decision(d: &Json) -> Option<((u64, usize), Decision)> {
+    let fingerprint = u64::from_str_radix(d.get("fingerprint")?.as_str()?, 16).ok()?;
+    let nthreads = d.get("nthreads")?.as_usize()?;
+    // v1 entries (no `max_threads`, no `sweep`) load as single-p
+    // decisions — backward compatibility is part of the v2 schema.
+    let max_threads = d.get("max_threads").and_then(Json::as_usize).unwrap_or(nthreads);
+    let sweep = match d.get("sweep") {
+        Some(s) => s.as_arr()?.iter().map(parse_sweep_point).collect::<Option<Vec<_>>>()?,
+        None => Vec::new(),
+    };
+    let trials =
+        d.get("trials")?.as_arr()?.iter().map(parse_trial).collect::<Option<Vec<_>>>()?;
+    let measured = d.get("measured")?.as_bool()?;
+    Some((
+        (fingerprint, max_threads),
+        Decision {
+            kind: EngineKind::parse(d.get("kind")?.as_str()?)?,
+            // Pre-reorder entries never picked the reordered axis.
+            reorder: d.get("reorder").and_then(Json::as_bool).unwrap_or(false),
+            mflops: d.get("mflops")?.as_f64()?,
+            measured,
+            // Entries written before provenance existed: a measured
+            // entry came from trials, an unmeasured one from the
+            // heuristic (the model postdates the field).
+            provenance: d
+                .get("provenance")
+                .and_then(Json::as_str)
+                .and_then(Provenance::parse)
+                .unwrap_or(if measured { Provenance::Measured } else { Provenance::Heuristic }),
+            served_mflops: d.get("served_mflops").and_then(Json::as_f64).unwrap_or(0.0),
+            tuned_s: d.get("tuned_s")?.as_f64()?,
+            fingerprint,
+            nthreads,
+            max_threads,
+            features: parse_features(d.get("features")?)?,
+            trials,
+            sweep,
+        },
+    ))
+}
+
+/// Parse a whole cache file. `Err` = the file is unusable (not JSON, no
+/// `decisions` array, or a newer schema version); `Ok((map, skipped))`
+/// = the healthy entries plus how many malformed ones were dropped.
+fn parse_decisions(text: &str) -> Result<(HashMap<(u64, usize), Decision>, usize), String> {
+    let j = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    if let Some(v) = j.get("version").and_then(Json::as_f64) {
+        if v > CACHE_VERSION {
+            return Err(format!(
+                "schema version {v} is newer than this build understands (max {CACHE_VERSION})"
+            ));
+        }
+    }
+    let entries = j
+        .get("decisions")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "no `decisions` array".to_string())?;
     let mut map = HashMap::new();
-    for d in j.get("decisions")?.as_arr()? {
-        let fingerprint = u64::from_str_radix(d.get("fingerprint")?.as_str()?, 16).ok()?;
-        let nthreads = d.get("nthreads")?.as_usize()?;
-        // v1 entries (no `max_threads`, no `sweep`) load as single-p
-        // decisions — backward compatibility is part of the v2 schema.
-        let max_threads = d.get("max_threads").and_then(Json::as_usize).unwrap_or(nthreads);
-        let sweep = match d.get("sweep") {
-            Some(s) => s.as_arr()?.iter().map(parse_sweep_point).collect::<Option<Vec<_>>>()?,
-            None => Vec::new(),
-        };
-        let trials = d
-            .get("trials")?
-            .as_arr()?
-            .iter()
-            .map(parse_trial)
-            .collect::<Option<Vec<_>>>()?;
-        map.insert(
-            (fingerprint, max_threads),
-            Decision {
-                kind: EngineKind::parse(d.get("kind")?.as_str()?)?,
-                // Pre-reorder entries never picked the reordered axis.
-                reorder: d.get("reorder").and_then(Json::as_bool).unwrap_or(false),
-                mflops: d.get("mflops")?.as_f64()?,
-                measured: d.get("measured")?.as_bool()?,
-                tuned_s: d.get("tuned_s")?.as_f64()?,
-                fingerprint,
-                nthreads,
-                max_threads,
-                features: parse_features(d.get("features")?)?,
-                trials,
-                sweep,
-            },
+    let mut skipped = 0usize;
+    for d in entries {
+        match parse_decision(d) {
+            Some((key, dec)) => {
+                map.insert(key, dec);
+            }
+            None => skipped += 1,
+        }
+    }
+    Ok((map, skipped))
+}
+
+/// Read one decision-cache file into a flat, deterministically sorted
+/// decision list — the corpus loader's entry point ([`super::model`]).
+/// Same per-entry leniency as [`DecisionCache::open`], but file-level
+/// problems come back as `Err` so the caller can attribute them.
+pub fn load_decisions_file(path: &Path) -> Result<Vec<Decision>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let (map, skipped) = parse_decisions(&text)?;
+    if skipped > 0 {
+        eprintln!(
+            "warning: decision cache {}: skipped {skipped} malformed entries",
+            path.display()
         );
     }
-    Some(map)
+    let mut v: Vec<Decision> = map.into_values().collect();
+    v.sort_by_key(|d| (d.fingerprint, d.max_threads));
+    Ok(v)
 }
 
 #[cfg(test)]
@@ -283,6 +377,8 @@ mod tests {
             reorder: true,
             mflops: 123.5,
             measured: true,
+            provenance: Provenance::Measured,
+            served_mflops: 0.0,
             tuned_s: 0.01,
             fingerprint: fp,
             nthreads,
@@ -411,6 +507,106 @@ mod tests {
         // And put() repairs the file.
         cache.put(fake_decision(1, 2));
         assert_eq!(DecisionCache::open(&path).len(), 1);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn truncated_file_starts_empty_and_recovers() {
+        // Write a healthy cache, then chop the file mid-entry — the
+        // shape a crash mid-copy or a half-synced disk produces. The
+        // cache must open empty (no abort, no panic) and be writable.
+        let path = temp_path("truncated");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        {
+            let cache = DecisionCache::open(&path);
+            cache.put(fake_decision(11, 2));
+            cache.put(fake_decision(12, 2));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let cache = DecisionCache::open(&path);
+        assert!(cache.is_empty(), "truncated JSON must degrade to an empty cache");
+        cache.put(fake_decision(13, 2));
+        assert_eq!(DecisionCache::open(&path).len(), 1, "put() repairs the file");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn newer_schema_version_is_ignored_wholesale() {
+        // A file stamped by a future build may encode entries this one
+        // would misread — ignore it (with a warning) instead of
+        // guessing.
+        let path = temp_path("future");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(
+            &path,
+            r#"{"version": 99, "decisions": [{"fingerprint": "02a", "nthreads": 2}]}"#,
+        )
+        .unwrap();
+        let cache = DecisionCache::open(&path);
+        assert!(cache.is_empty());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn non_json_bytes_start_empty() {
+        let path = temp_path("nonjson");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"\x00\x01binary garbage\xff, definitely not json").unwrap();
+        assert!(DecisionCache::open(&path).is_empty());
+        // A wrong-shape (valid JSON, no `decisions`) file is equally
+        // unusable.
+        std::fs::write(&path, r#"{"hello": "world"}"#).unwrap();
+        assert!(DecisionCache::open(&path).is_empty());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn malformed_entries_are_skipped_not_fatal() {
+        // One bad record in a healthy file must not discard the healthy
+        // entries (one corrupt record must not re-tune the fleet).
+        let path = temp_path("partial");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        {
+            let cache = DecisionCache::open(&path);
+            cache.put(fake_decision(21, 2));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let sabotaged = text.replace(
+            "\"decisions\":[",
+            "\"decisions\":[{\"fingerprint\":\"zz-not-hex\",\"nthreads\":1},",
+        );
+        assert_ne!(sabotaged, text, "sabotage must have landed");
+        std::fs::write(&path, sabotaged).unwrap();
+        let cache = DecisionCache::open(&path);
+        assert_eq!(cache.len(), 1, "the healthy entry survives the malformed one");
+        assert!(cache.get(21, 2).is_some());
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn served_rate_and_provenance_round_trip() {
+        let path = temp_path("served");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        let cache = DecisionCache::open(&path);
+        cache.put(fake_decision(31, 2));
+        // The served-EWMA baseline lands in the entry and the file.
+        cache.set_served_rate(31, 2, 77.5);
+        cache.set_served_rate(999, 2, 1.0); // unknown key: a no-op
+        let back = DecisionCache::open(&path);
+        let d = back.get(31, 2).unwrap();
+        assert!((d.served_mflops - 77.5).abs() < 1e-12);
+        assert_eq!(d.provenance, Provenance::Measured);
+        // Pre-provenance files infer it from `measured`.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let stripped = text
+            .replace("\"provenance\":\"measured\",", "")
+            .replace("\"served_mflops\":7.75e1,", "");
+        std::fs::write(&path, stripped).unwrap();
+        let back = DecisionCache::open(&path);
+        let d = back.get(31, 2).expect("entry still parses without the new fields");
+        assert_eq!(d.provenance, Provenance::Measured, "inferred from measured=true");
+        assert_eq!(d.served_mflops, 0.0);
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 

@@ -53,6 +53,43 @@ pub struct Features {
 }
 
 impl Features {
+    /// Names of the derived feature vector the learned cost model
+    /// ([`super::model`]) trains on, index-aligned with
+    /// [`Features::raw_vector`]. Persisted in model files so a reader
+    /// can tell what each weight multiplies.
+    pub const RAW_FEATURE_NAMES: [&'static str; 10] = [
+        "log_n",
+        "log_work_per_row",
+        "scatter_ratio",
+        "rel_bandwidth",
+        "window_shrink",
+        "log_colors",
+        "log_intervals",
+        "balance",
+        "log_nthreads",
+        "log_work",
+    ];
+
+    /// Derived feature vector for the learned cost model: log-compressed
+    /// sizes, ratios already in [0, 1], and the write bandwidth relative
+    /// to the order — dimensionless numbers, so a model trained on small
+    /// matrices transfers to big ones instead of memorizing scales.
+    pub fn raw_vector(&self) -> [f64; 10] {
+        let n = self.n.max(1) as f64;
+        [
+            (1.0 + self.n as f64).ln(),
+            (1.0 + self.work_flops as f64 / n).ln(),
+            self.scatter_ratio,
+            (1.0 + self.bandwidth as f64) / (1.0 + n),
+            self.window_shrink,
+            (1.0 + self.colors as f64).ln(),
+            (1.0 + self.intervals as f64).ln(),
+            self.balance,
+            (1.0 + self.nthreads as f64).ln(),
+            (1.0 + self.work_flops as f64).ln(),
+        ]
+    }
+
     /// Extract features from a kernel and the plan built for it. Cheap:
     /// one O(nnz) pass plus reads of what the plan already computed.
     pub fn extract(kernel: &dyn SpmvKernel, plan: &SpmvPlan) -> Features {
@@ -161,6 +198,27 @@ mod tests {
         assert_eq!(fr.colors, 1);
         assert_eq!(fr.window_rows, 120);
         assert!(fr.window_shrink <= fc.window_shrink + 1e-12);
+    }
+
+    #[test]
+    fn raw_vector_is_aligned_and_finite() {
+        let c = coo(100, 5);
+        let csrc = Csrc::from_coo(&c).unwrap();
+        let plan = PlanBuilder::all(2).build(&csrc);
+        let f = Features::extract(&csrc, &plan);
+        let v = f.raw_vector();
+        assert_eq!(v.len(), Features::RAW_FEATURE_NAMES.len());
+        assert!(v.iter().all(|x| x.is_finite()));
+        // Ratios stay dimensionless: scatter_ratio, rel_bandwidth and
+        // window_shrink all live in [0, 1].
+        for idx in [2usize, 3, 4] {
+            assert!(
+                (0.0..=1.0).contains(&v[idx]),
+                "{} = {} out of range",
+                Features::RAW_FEATURE_NAMES[idx],
+                v[idx]
+            );
+        }
     }
 
     #[test]

@@ -26,12 +26,14 @@
 //!    [`ReorderedEngine`], so the per-product permute/un-permute
 //!    gathers count), and [`Decision::reorder`] records the winner's
 //!    ordering;
-//! 5. a zero budget skips the trials and falls back to [`cost_model`],
-//!    a paper-derived heuristic over the same features;
+//! 5. a zero budget skips the trials and falls back to the learned
+//!    [`CostModel`] when one is supplied ([`resolve_with_model`]) and
+//!    otherwise to [`cost_model`], a paper-derived heuristic over the
+//!    same features — [`Decision::provenance`] records which answered;
 //! 6. [`resolve`] / [`resolve_swept`] front the whole thing with a
 //!    persistent [`DecisionCache`] keyed by (structure [`fingerprint`] ×
 //!    thread budget), so a restarted service never re-tunes a known
-//!    matrix.
+//!    matrix. Fallback order: cache hit → model prediction → heuristic.
 //!
 //! [`crate::parallel::EngineKind::Auto`] is the routing-level entry
 //! point: the coordinator resolves it here at registration time and the
@@ -39,9 +41,11 @@
 
 pub mod cache;
 pub mod features;
+pub mod model;
 
 pub use cache::{decision_json, DecisionCache};
 pub use features::{fingerprint, Features};
+pub use model::{CostModel, CorpusRow, Prediction};
 
 use crate::metrics;
 use crate::parallel::{build_engine, AccumMethod, EngineKind, ParallelSpmv};
@@ -54,7 +58,7 @@ use std::time::Instant;
 /// How much measuring a tuning run may do: `runs` timed repetitions of
 /// `products` back-to-back products per candidate engine (the paper's §4
 /// protocol, scaled down). A zero budget means "no trials": the decision
-/// comes from [`cost_model`] alone.
+/// comes from the learned [`CostModel`] (when supplied) or [`cost_model`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TrialBudget {
     pub runs: usize,
@@ -128,6 +132,38 @@ impl SweepPoint {
     }
 }
 
+/// Where a decision's pick came from — surfaced in service stats and
+/// persisted with the entry, so a cache full of cold-start placeholders
+/// is distinguishable from measured truth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Provenance {
+    /// Measured trials picked the winner (`Decision::measured`).
+    Measured,
+    /// The learned [`CostModel`] predicted it (zero-budget/cold-start).
+    Model,
+    /// The hand-written [`cost_model`] heuristic picked it.
+    Heuristic,
+}
+
+impl Provenance {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Provenance::Measured => "measured",
+            Provenance::Model => "model",
+            Provenance::Heuristic => "heuristic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Provenance> {
+        match s {
+            "measured" => Some(Provenance::Measured),
+            "model" => Some(Provenance::Model),
+            "heuristic" => Some(Provenance::Heuristic),
+            _ => None,
+        }
+    }
+}
+
 /// The tuner's verdict for one matrix × thread budget.
 #[derive(Clone, Debug)]
 pub struct Decision {
@@ -139,8 +175,19 @@ pub struct Decision {
     pub reorder: bool,
     /// The winner's measured rate (0 when `measured` is false).
     pub mflops: f64,
-    /// False when the decision came from [`cost_model`] without trials.
+    /// False when the decision came from the model or the heuristic
+    /// without trials.
     pub measured: bool,
+    /// Which path picked the winner: measured trials, the learned
+    /// [`CostModel`], or the [`cost_model`] heuristic. `Measured` iff
+    /// `measured` is true.
+    pub provenance: Provenance,
+    /// Served-rate baseline (Mflop/s) the service records back into the
+    /// entry after a drift re-tune (0 = none yet). Drift must be judged
+    /// against *serving* reality — the trial rate is warm back-to-back
+    /// products and therefore optimistic, and judging per-request
+    /// serving against it re-triggers forever (a re-tune storm).
+    pub served_mflops: f64,
     /// Wall-clock seconds the tuning run itself cost.
     pub tuned_s: f64,
     /// Structure fingerprint — the cache key, with `max_threads`.
@@ -292,7 +339,14 @@ pub fn cost_model(f: &Features) -> EngineKind {
 /// ([`required_pieces`]; `PlanBuilder::all` always suffices); panics
 /// otherwise (programming error, same contract as [`build_engine`]).
 pub fn tune(kernel: &Arc<dyn SpmvKernel>, plan: &Arc<SpmvPlan>, budget: &TrialBudget) -> Decision {
-    tune_with_fingerprint(kernel, plan, budget, fingerprint(kernel.as_ref()), ReorderPolicy::Never)
+    tune_with_fingerprint(
+        kernel,
+        plan,
+        budget,
+        fingerprint(kernel.as_ref()),
+        ReorderPolicy::Never,
+        None,
+    )
 }
 
 /// [`tune`] with the reorder axis: under [`ReorderPolicy::Measure`] the
@@ -306,7 +360,7 @@ pub fn tune_reordered(
     budget: &TrialBudget,
     policy: ReorderPolicy,
 ) -> Decision {
-    tune_with_fingerprint(kernel, plan, budget, fingerprint(kernel.as_ref()), policy)
+    tune_with_fingerprint(kernel, plan, budget, fingerprint(kernel.as_ref()), policy, None)
 }
 
 /// [`tune`] with a caller-supplied fingerprint, so [`resolve`] — which
@@ -318,6 +372,7 @@ fn tune_with_fingerprint(
     budget: &TrialBudget,
     fp: u64,
     policy: ReorderPolicy,
+    model: Option<&CostModel>,
 ) -> Decision {
     assert!(
         plan.pieces.covers(required_pieces(plan.nthreads)),
@@ -327,14 +382,21 @@ fn tune_with_fingerprint(
     let t0 = Instant::now();
     let features = Features::extract(kernel.as_ref(), plan);
     if budget.is_zero() {
-        let kind = cost_model(&features);
+        // Cold-start fallback order: learned model, then the heuristic.
+        // (A model prediction already honours the reorder policy; on
+        // the heuristic path the only honest "always" is the caller's
+        // forced ordering — Measure degrades to plain.)
+        let (kind, reorder, provenance) = match model.and_then(|m| m.predict(&features, policy)) {
+            Some(p) => (p.kind, p.reordered, Provenance::Model),
+            None => (cost_model(&features), policy == ReorderPolicy::Always, Provenance::Heuristic),
+        };
         return Decision {
             kind,
-            // Without trials the only honest "always" is to honour the
-            // caller's forced ordering; Measure degrades to plain.
-            reorder: policy == ReorderPolicy::Always,
+            reorder,
             mflops: 0.0,
             measured: false,
+            provenance,
+            served_mflops: 0.0,
             tuned_s: t0.elapsed().as_secs_f64(),
             fingerprint: fp,
             nthreads: plan.nthreads,
@@ -364,6 +426,8 @@ fn tune_with_fingerprint(
         reorder: best.reordered,
         mflops: best.mflops,
         measured: true,
+        provenance: Provenance::Measured,
+        served_mflops: 0.0,
         tuned_s: t0.elapsed().as_secs_f64(),
         fingerprint: fp,
         nthreads: plan.nthreads,
@@ -501,6 +565,7 @@ pub fn sweep(
         plan_for,
         fingerprint(kernel.as_ref()),
         ReorderPolicy::Never,
+        None,
     )
 }
 
@@ -516,7 +581,15 @@ pub fn sweep_reordered(
     plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
     policy: ReorderPolicy,
 ) -> Decision {
-    sweep_with_fingerprint(kernel, ladder, budget, plan_for, fingerprint(kernel.as_ref()), policy)
+    sweep_with_fingerprint(
+        kernel,
+        ladder,
+        budget,
+        plan_for,
+        fingerprint(kernel.as_ref()),
+        policy,
+        None,
+    )
 }
 
 fn sweep_with_fingerprint(
@@ -526,6 +599,7 @@ fn sweep_with_fingerprint(
     plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
     fp: u64,
     policy: ReorderPolicy,
+    model: Option<&CostModel>,
 ) -> Decision {
     assert!(!ladder.is_empty(), "thread ladder must name at least one thread count");
     let max = ladder.iter().copied().max().unwrap_or(1);
@@ -537,15 +611,29 @@ fn sweep_with_fingerprint(
     );
     let features = Features::extract(kernel.as_ref(), &plan_max);
     if budget.is_zero() {
-        let kind = cost_model(&features);
-        // The heuristic has no p axis: sequential runs at 1 thread,
-        // everything else at the full budget.
-        let nthreads = if kind == EngineKind::Sequential { 1 } else { max };
+        // Cold-start fallback order: learned model (which also picks
+        // the thread count through its per-rung rate regressors), then
+        // the heuristic, which has no p axis — sequential runs at 1
+        // thread, everything else at the full budget.
+        let (kind, reorder, nthreads, provenance) =
+            match model.and_then(|m| m.predict(&features, policy).map(|p| (m, p))) {
+                Some((m, p)) => {
+                    let nt = m.predict_threads(&features, p.kind, max);
+                    (p.kind, p.reordered, nt, Provenance::Model)
+                }
+                None => {
+                    let kind = cost_model(&features);
+                    let nthreads = if kind == EngineKind::Sequential { 1 } else { max };
+                    (kind, policy == ReorderPolicy::Always, nthreads, Provenance::Heuristic)
+                }
+            };
         return Decision {
             kind,
-            reorder: policy == ReorderPolicy::Always,
+            reorder,
             mflops: 0.0,
             measured: false,
+            provenance,
+            served_mflops: 0.0,
             tuned_s: t0.elapsed().as_secs_f64(),
             fingerprint: fp,
             nthreads,
@@ -640,6 +728,8 @@ fn sweep_with_fingerprint(
         reorder: best_reorder,
         mflops: best_mflops,
         measured: true,
+        provenance: Provenance::Measured,
+        served_mflops: 0.0,
         tuned_s: t0.elapsed().as_secs_f64(),
         fingerprint: fp,
         nthreads: best_p,
@@ -674,17 +764,95 @@ pub fn resolve(
     cache: &DecisionCache,
     policy: ReorderPolicy,
 ) -> (Decision, bool) {
+    resolve_with_model(kernel, plan, budget, cache, policy, None)
+}
+
+/// [`resolve`] with the learned cost model in the fallback chain: on a
+/// cache miss with a zero budget the model — when supplied — answers
+/// before the hand-written heuristic ([`Decision::provenance`] records
+/// which). With a measuring budget the model is ignored: real trials
+/// beat any prediction.
+pub fn resolve_with_model(
+    kernel: &Arc<dyn SpmvKernel>,
+    plan: &Arc<SpmvPlan>,
+    budget: &TrialBudget,
+    cache: &DecisionCache,
+    policy: ReorderPolicy,
+    model: Option<&CostModel>,
+) -> (Decision, bool) {
     let fp = fingerprint(kernel.as_ref());
     if let Some(d) = cache.peek(fp, plan.nthreads) {
-        if d.measured || budget.is_zero() {
+        if (d.measured || budget.is_zero()) && !placeholder_outranked(&d, model, policy, false) {
             cache.record(true);
             return (never_view(single_p_view(d, plan.nthreads), policy), true);
         }
     }
     cache.record(false);
-    let d = tune_with_fingerprint(kernel, plan, budget, fp, policy);
+    let d = tune_with_fingerprint(kernel, plan, budget, fp, policy, model);
     cache.put(d.clone());
     (d, false)
+}
+
+/// Should a cached *placeholder* (unmeasured entry) be re-answered for
+/// this caller instead of served? Measured entries always stand — real
+/// trials beat predictions. Placeholders yield in three cases:
+///
+/// * the recorded ordering is **incompatible with the caller's forced
+///   policy** — a reordered pick under `Never` (`never_view` could only
+///   strip the flag while keeping an engine chosen *for* reordered
+///   execution; the model's plain-class pick can be a different engine
+///   entirely) or a plain pick under `Always` (service workers execute
+///   the resolved decision's flag, so serving it would silently disable
+///   the forced RCM ordering);
+/// * a **heuristic** placeholder meets a model that can actually answer
+///   under the caller's policy: the fallback order (cache → model →
+///   heuristic) demands the upgrade;
+/// * a **model** placeholder meets a model whose prediction *under the
+///   caller's policy* disagrees with the recorded pick — e.g. a plain
+///   entry written by a `Never` caller met by a `Measure` caller whose
+///   prediction is a reordered class. Same-policy callers always agree
+///   (the model is deterministic), so this cannot churn; cross-policy
+///   callers sharing one cache each re-answer at *registration* time —
+///   the returned decision, not the cache entry, is what each service
+///   serves by.
+///
+/// All checks run against the entry's own recorded features — cheap, a
+/// few dot products — and a model that would decline (e.g. trained only
+/// on reordered winners, asked under `Never`) never invalidates an
+/// entry just to have the miss path write an identical one back.
+/// `check_threads` is set by the swept resolver, where the model also
+/// picks `nthreads`: a retrained model's rung regressors moving the
+/// thread pick must re-answer a Model placeholder even when the engine
+/// class is unchanged. The single-p resolver passes false — its thread
+/// count is the caller's plan, not the model's to move.
+fn placeholder_outranked(
+    d: &Decision,
+    model: Option<&CostModel>,
+    policy: ReorderPolicy,
+    check_threads: bool,
+) -> bool {
+    if d.measured {
+        return false;
+    }
+    if (policy == ReorderPolicy::Never && d.reorder)
+        || (policy == ReorderPolicy::Always && !d.reorder)
+    {
+        return true;
+    }
+    match d.provenance {
+        Provenance::Measured => false,
+        Provenance::Heuristic => {
+            model.is_some_and(|m| m.predict(&d.features, policy).is_some())
+        }
+        Provenance::Model => model.is_some_and(|m| {
+            m.predict(&d.features, policy).is_some_and(|p| {
+                p.kind != d.kind
+                    || p.reordered != d.reorder
+                    || (check_threads
+                        && m.predict_threads(&d.features, p.kind, d.max_threads) != d.nthreads)
+            })
+        }),
+    }
 }
 
 /// A `Never` caller's view of a cached decision: reordered execution is
@@ -768,16 +936,34 @@ pub fn resolve_swept(
     plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
     policy: ReorderPolicy,
 ) -> (Decision, bool) {
+    resolve_swept_with_model(kernel, ladder, budget, cache, plan_for, policy, None)
+}
+
+/// [`resolve_swept`] with the learned cost model in the fallback chain
+/// (see [`resolve_with_model`]): on a zero-budget miss the model picks
+/// the engine *and* — through its per-rung rate regressors — the
+/// thread count.
+pub fn resolve_swept_with_model(
+    kernel: &Arc<dyn SpmvKernel>,
+    ladder: &[usize],
+    budget: &TrialBudget,
+    cache: &DecisionCache,
+    plan_for: &mut dyn FnMut(usize) -> Arc<SpmvPlan>,
+    policy: ReorderPolicy,
+    model: Option<&CostModel>,
+) -> (Decision, bool) {
     let fp = fingerprint(kernel.as_ref());
     let max = ladder.iter().copied().max().unwrap_or(1);
     if let Some(d) = cache.peek(fp, max) {
-        if budget.is_zero() || (d.measured && !d.sweep.is_empty()) {
+        if (budget.is_zero() || (d.measured && !d.sweep.is_empty()))
+            && !placeholder_outranked(&d, model, policy, true)
+        {
             cache.record(true);
             return (never_view(d, policy), true);
         }
     }
     cache.record(false);
-    let d = sweep_with_fingerprint(kernel, ladder, budget, plan_for, fp, policy);
+    let d = sweep_with_fingerprint(kernel, ladder, budget, plan_for, fp, policy, model);
     cache.put(d.clone());
     (d, false)
 }
@@ -953,6 +1139,8 @@ mod tests {
             reorder: false,
             mflops: 120.0,
             measured: true,
+            provenance: Provenance::Measured,
+            served_mflops: 0.0,
             tuned_s: 0.01,
             fingerprint: fp,
             nthreads: 1,
@@ -1019,10 +1207,335 @@ mod tests {
         let (kernel, plan) = kernel_and_plan(100, 2, 3);
         let d = tune(&kernel, &plan, &TrialBudget::zero());
         assert!(!d.measured);
+        assert_eq!(d.provenance, Provenance::Heuristic, "no model supplied");
         assert!(d.trials.is_empty());
         assert_ne!(d.kind, EngineKind::Auto);
         // n=100 < the fork-join threshold → sequential.
         assert_eq!(d.kind, EngineKind::Sequential);
+    }
+
+    /// A model trained on a corpus that always crowned one engine is a
+    /// constant predictor — unmistakable next to the heuristic when the
+    /// planted pick is something `cost_model` never chooses.
+    fn constant_model(features: &Features, kind: EngineKind, rungs: &[(usize, f64)]) -> CostModel {
+        let rows: Vec<model::CorpusRow> = (0..4u64)
+            .map(|i| model::CorpusRow {
+                fingerprint: i,
+                max_threads: features.nthreads,
+                features: features.clone(),
+                kind,
+                reordered: false,
+                nthreads: features.nthreads,
+                rung_rates: rungs.to_vec(),
+            })
+            .collect();
+        CostModel::train(&rows).expect("non-empty corpus trains")
+    }
+
+    #[test]
+    fn zero_budget_resolve_consults_the_model_before_the_heuristic() {
+        // ISSUE 5 acceptance: with an empty decision cache and
+        // TrialBudget::zero(), resolve answers from the trained model
+        // when one is supplied, and from the heuristic only when not.
+        let (kernel, plan) = kernel_and_plan(150, 31, 2);
+        let features = Features::extract(kernel.as_ref(), &plan);
+        let m = constant_model(&features, EngineKind::Atomic, &[(2, 500.0)]);
+        let cache = DecisionCache::in_memory();
+        let (d, hit) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache,
+            ReorderPolicy::Never,
+            Some(&m),
+        );
+        assert!(!hit && !d.measured);
+        assert_eq!(d.provenance, Provenance::Model);
+        assert_eq!(d.kind, EngineKind::Atomic, "the planted model pick, not the heuristic's");
+        // Without a model the same call answers from the heuristic.
+        let cache2 = DecisionCache::in_memory();
+        let (d2, _) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache2,
+            ReorderPolicy::Never,
+            None,
+        );
+        assert_eq!(d2.provenance, Provenance::Heuristic);
+        assert_eq!(d2.kind, cost_model(&d2.features));
+        // A measuring budget ignores the model and runs real trials.
+        let (d3, hit3) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::smoke(),
+            &cache2,
+            ReorderPolicy::Never,
+            Some(&m),
+        );
+        assert!(!hit3 && d3.measured);
+        assert_eq!(d3.provenance, Provenance::Measured);
+        // The model decision was cached: later zero-budget callers hit.
+        let (d4, hit4) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache,
+            ReorderPolicy::Never,
+            None,
+        );
+        assert!(hit4, "model placeholders are cached like heuristic ones");
+        assert_eq!(d4.provenance, Provenance::Model);
+    }
+
+    #[test]
+    fn a_later_supplied_model_upgrades_heuristic_placeholders() {
+        // A zero-budget resolve without a model writes a heuristic
+        // placeholder. Training a model afterwards must not leave it
+        // silently dead: the next model-armed zero-budget caller
+        // re-predicts and upgrades the entry in place.
+        let (kernel, plan) = kernel_and_plan(150, 33, 2);
+        let cache = DecisionCache::in_memory();
+        let (d0, hit0) =
+            resolve(&kernel, &plan, &TrialBudget::zero(), &cache, ReorderPolicy::Never);
+        assert!(!hit0);
+        assert_eq!(d0.provenance, Provenance::Heuristic);
+        let features = Features::extract(kernel.as_ref(), &plan);
+        let m = constant_model(&features, EngineKind::Atomic, &[(2, 500.0)]);
+        let (d1, hit1) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache,
+            ReorderPolicy::Never,
+            Some(&m),
+        );
+        assert!(!hit1, "a heuristic placeholder must not satisfy a model-armed caller");
+        assert_eq!(d1.provenance, Provenance::Model);
+        assert_eq!(d1.kind, EngineKind::Atomic);
+        // The upgraded (model) placeholder now satisfies the same caller
+        // — no churn on every resolve.
+        let (d2, hit2) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache,
+            ReorderPolicy::Never,
+            Some(&m),
+        );
+        assert!(hit2);
+        assert_eq!(d2.provenance, Provenance::Model);
+        assert_eq!(cache.len(), 1, "upgrade in place, not a second entry");
+        // A model that cannot answer under the caller's policy (trained
+        // only on reordered winners, asked under Never) must leave the
+        // placeholder alone instead of re-missing on every resolve.
+        let reordered_rows: Vec<model::CorpusRow> = (0..4u64)
+            .map(|i| model::CorpusRow {
+                fingerprint: i,
+                max_threads: 2,
+                features: features.clone(),
+                kind: EngineKind::Colorful,
+                reordered: true,
+                nthreads: 2,
+                rung_rates: vec![(2, 500.0)],
+            })
+            .collect();
+        let blind = CostModel::train(&reordered_rows).unwrap();
+        let cache3 = DecisionCache::in_memory();
+        let _ = resolve(&kernel, &plan, &TrialBudget::zero(), &cache3, ReorderPolicy::Never);
+        let (d3, hit3) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache3,
+            ReorderPolicy::Never,
+            Some(&blind),
+        );
+        assert!(hit3, "a model that declines under Never must not invalidate the entry");
+        assert_eq!(d3.provenance, Provenance::Heuristic);
+    }
+
+    #[test]
+    fn always_caller_re_answers_a_plain_placeholder() {
+        // Shared cache, no model: a Never caller's plain zero-budget
+        // placeholder must not pin a later Always caller to unreordered
+        // execution (workers serve the resolved decision's flag).
+        let (kernel, plan) = kernel_and_plan(150, 36, 2);
+        let cache = DecisionCache::in_memory();
+        let (d0, _) =
+            resolve(&kernel, &plan, &TrialBudget::zero(), &cache, ReorderPolicy::Never);
+        assert!(!d0.reorder);
+        let (d1, hit1) =
+            resolve(&kernel, &plan, &TrialBudget::zero(), &cache, ReorderPolicy::Always);
+        assert!(!hit1, "a plain placeholder must not satisfy an Always caller");
+        assert!(d1.reorder);
+        // And back: cross-policy zero-budget callers sharing one cache
+        // alternate at registration time, each served its own ordering.
+        let (d2, hit2) =
+            resolve(&kernel, &plan, &TrialBudget::zero(), &cache, ReorderPolicy::Always);
+        assert!(hit2 && d2.reorder, "same-policy callers hit — no churn");
+        let (d3, hit3) =
+            resolve(&kernel, &plan, &TrialBudget::zero(), &cache, ReorderPolicy::Never);
+        assert!(!hit3 && !d3.reorder);
+    }
+
+    #[test]
+    fn retrained_thread_pick_re_answers_swept_model_placeholders() {
+        let (kernel, _) = kernel_and_plan(150, 35, 4);
+        let plans = crate::plan::PlanCache::new();
+        let mut plan_for = cached_plan_provider(&plans, "m", &kernel);
+        let plan = plan_for(4);
+        let features = Features::extract(kernel.as_ref(), &plan);
+        let cache = DecisionCache::in_memory();
+        let ladder = thread_ladder(4);
+        let fast_high =
+            constant_model(&features, EngineKind::Colorful, &[(2, 100.0), (4, 900.0)]);
+        let (d1, _) = resolve_swept_with_model(
+            &kernel,
+            &ladder,
+            &TrialBudget::zero(),
+            &cache,
+            &mut plan_for,
+            ReorderPolicy::Never,
+            Some(&fast_high),
+        );
+        assert_eq!((d1.kind, d1.nthreads), (EngineKind::Colorful, 4));
+        // Retrained rung regressors now peak at p = 2: same engine
+        // class, moved thread pick — the swept placeholder must be
+        // re-answered, not served stale.
+        let fast_low =
+            constant_model(&features, EngineKind::Colorful, &[(2, 900.0), (4, 100.0)]);
+        let (d2, hit2) = resolve_swept_with_model(
+            &kernel,
+            &ladder,
+            &TrialBudget::zero(),
+            &cache,
+            &mut plan_for,
+            ReorderPolicy::Never,
+            Some(&fast_low),
+        );
+        assert!(!hit2, "a moved thread pick must re-answer the placeholder");
+        assert_eq!((d2.kind, d2.nthreads), (EngineKind::Colorful, 2));
+        // Agreement hits — no churn.
+        let (d3, hit3) = resolve_swept_with_model(
+            &kernel,
+            &ladder,
+            &TrialBudget::zero(),
+            &cache,
+            &mut plan_for,
+            ReorderPolicy::Never,
+            Some(&fast_low),
+        );
+        assert!(hit3);
+        assert_eq!(d3.nthreads, 2);
+    }
+
+    #[test]
+    fn never_caller_does_not_inherit_a_reordered_placeholder_kind() {
+        // A zero-budget Measure resolution can cache an unmeasured
+        // *reordered* model pick. A later Never caller must not be
+        // served that engine with the flag stripped — the model's
+        // plain-class pick can be a different engine — it re-answers
+        // plain and upgrades the placeholder.
+        let (kernel, plan) = kernel_and_plan(150, 34, 2);
+        let features = Features::extract(kernel.as_ref(), &plan);
+        // Two classes separated on scatter_ratio: this matrix's own
+        // features ⇒ reordered/colorful; far-off scatter ⇒ plain
+        // interval. Under Never only the plain class is eligible.
+        let mut far = features.clone();
+        far.scatter_ratio = 0.01;
+        let rows: Vec<model::CorpusRow> = (0..8u64)
+            .map(|i| {
+                let near = i % 2 == 0;
+                model::CorpusRow {
+                    fingerprint: i,
+                    max_threads: 2,
+                    features: if near { features.clone() } else { far.clone() },
+                    kind: if near {
+                        EngineKind::Colorful
+                    } else {
+                        EngineKind::LocalBuffers(AccumMethod::Interval)
+                    },
+                    reordered: near,
+                    nthreads: 2,
+                    rung_rates: vec![(2, 500.0)],
+                }
+            })
+            .collect();
+        let m = CostModel::train(&rows).unwrap();
+        let cache = DecisionCache::in_memory();
+        let (d1, _) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache,
+            ReorderPolicy::Measure,
+            Some(&m),
+        );
+        assert!(!d1.measured && d1.reorder, "Measure caches the reordered model pick");
+        assert_eq!(d1.kind, EngineKind::Colorful);
+        let (d2, hit2) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache,
+            ReorderPolicy::Never,
+            Some(&m),
+        );
+        assert!(!hit2, "a reordered placeholder must not satisfy a Never caller");
+        assert!(!d2.reorder);
+        assert_eq!(d2.kind, EngineKind::LocalBuffers(AccumMethod::Interval));
+        // The plain placeholder now satisfies Never callers — no churn.
+        let (d3, hit3) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache,
+            ReorderPolicy::Never,
+            Some(&m),
+        );
+        assert!(hit3);
+        assert_eq!(d3.kind, EngineKind::LocalBuffers(AccumMethod::Interval));
+        // …and the mirror direction: a Measure caller whose model
+        // disagrees with the plain placeholder re-answers too, instead
+        // of being pinned to the Never caller's engine.
+        let (d4, hit4) = resolve_with_model(
+            &kernel,
+            &plan,
+            &TrialBudget::zero(),
+            &cache,
+            ReorderPolicy::Measure,
+            Some(&m),
+        );
+        assert!(!hit4, "a disagreeing Measure caller must re-answer");
+        assert!(d4.reorder);
+        assert_eq!(d4.kind, EngineKind::Colorful);
+    }
+
+    #[test]
+    fn zero_budget_sweep_takes_model_engine_and_thread_pick() {
+        let (kernel, _) = kernel_and_plan(150, 32, 2);
+        let plans = crate::plan::PlanCache::new();
+        let mut plan_for = cached_plan_provider(&plans, "m", &kernel);
+        let plan = plan_for(2);
+        let features = Features::extract(kernel.as_ref(), &plan);
+        // Rate surface planted to peak at p = 2.
+        let m = constant_model(&features, EngineKind::Colorful, &[(1, 100.0), (2, 900.0)]);
+        let cache = DecisionCache::in_memory();
+        let (d, hit) = resolve_swept_with_model(
+            &kernel,
+            &thread_ladder(2),
+            &TrialBudget::zero(),
+            &cache,
+            &mut plan_for,
+            ReorderPolicy::Never,
+            Some(&m),
+        );
+        assert!(!hit && !d.measured);
+        assert_eq!(d.provenance, Provenance::Model);
+        assert_eq!(d.kind, EngineKind::Colorful);
+        assert_eq!(d.nthreads, 2, "thread pick follows the trained rate surface");
+        assert_eq!(d.max_threads, 2);
     }
 
     #[test]
@@ -1182,6 +1695,8 @@ mod tests {
             reorder: true,
             mflops: 100.0,
             measured: true,
+            provenance: Provenance::Measured,
+            served_mflops: 0.0,
             tuned_s: 0.01,
             fingerprint: fp,
             nthreads: 2,

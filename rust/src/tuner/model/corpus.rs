@@ -1,0 +1,250 @@
+//! Corpus loader: flatten persisted decision-cache files (schema v1 and
+//! v2) into labeled training rows for the learned cost model. Every
+//! measured decision already records exactly the features the model
+//! needs (`Features`), the winner it should predict (`kind`, `reorder`,
+//! `nthreads`) and — for swept decisions — the rate surface the thread
+//! regressors fit; the cache is a free training set.
+
+use super::super::{cache, Decision, Features};
+use crate::parallel::EngineKind;
+use crate::util::error::{msg, Result};
+use std::path::Path;
+
+/// One labeled training example.
+#[derive(Clone, Debug)]
+pub struct CorpusRow {
+    /// Structure fingerprint — part of the deterministic sort key.
+    pub fingerprint: u64,
+    /// Thread budget the decision was tuned under (the cache key's
+    /// second half).
+    pub max_threads: usize,
+    pub features: Features,
+    /// The measured winner the classifier learns to predict.
+    pub kind: EngineKind,
+    /// Whether the winner ran through the RCM ordering.
+    pub reordered: bool,
+    /// The winning thread count.
+    pub nthreads: usize,
+    /// Best measured rate per thread-ladder rung — the sweep surface
+    /// when recorded, else the single measured point.
+    pub rung_rates: Vec<(usize, f64)>,
+}
+
+/// Flatten decisions into training rows. Only *measured* decisions
+/// qualify — heuristic and model placeholders carry no signal about
+/// what actually won. Rows are sorted by (fingerprint × max_threads) so
+/// training, and therefore the serialized model, is deterministic
+/// regardless of file or hash-map order, and deduplicated on that same
+/// key (first occurrence wins): the same matrix persisted into several
+/// cache files must not be over-weighted in the classifier or the rung
+/// regressors.
+pub fn rows_from_decisions(decisions: &[Decision]) -> Vec<CorpusRow> {
+    let mut rows: Vec<CorpusRow> = decisions
+        .iter()
+        .filter(|d| d.measured && d.kind != EngineKind::Auto)
+        .map(|d| {
+            let mut rung_rates: Vec<(usize, f64)> = d
+                .sweep
+                .iter()
+                .filter_map(|pt| pt.best().map(|b| (pt.nthreads, b.mflops)))
+                .collect();
+            if rung_rates.is_empty() && d.mflops > 0.0 {
+                rung_rates.push((d.nthreads, d.mflops));
+            }
+            CorpusRow {
+                fingerprint: d.fingerprint,
+                max_threads: d.max_threads,
+                features: d.features.clone(),
+                kind: d.kind,
+                reordered: d.reorder,
+                nthreads: d.nthreads,
+                rung_rates,
+            }
+        })
+        .collect();
+    // Stable sort + dedup: among duplicates the first in input order
+    // (file order for `load_corpus`) survives.
+    rows.sort_by_key(|r| (r.fingerprint, r.max_threads));
+    rows.dedup_by_key(|r| (r.fingerprint, r.max_threads));
+    rows
+}
+
+/// Load every decision-cache JSON file under `path` — a single file, or
+/// a directory scanned (non-recursively) for `*.json` — into training
+/// rows. Unparseable files are skipped with a warning: a corpus is an
+/// accumulation artifact, partial is normal. A missing path is an
+/// error; an empty result is the caller's problem to report.
+pub fn load_corpus(path: &Path) -> Result<Vec<CorpusRow>> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    if path.is_dir() {
+        let entries = std::fs::read_dir(path)
+            .map_err(|e| msg(format!("read corpus dir {}: {e}", path.display())))?;
+        for entry in entries {
+            let p = entry
+                .map_err(|e| msg(format!("read corpus dir {}: {e}", path.display())))?
+                .path();
+            if p.extension().and_then(|e| e.to_str()) == Some("json") {
+                files.push(p);
+            }
+        }
+        files.sort();
+    } else if path.is_file() {
+        files.push(path.to_path_buf());
+    } else {
+        return Err(msg(format!("corpus path {} does not exist", path.display())));
+    }
+    let mut decisions = Vec::new();
+    for f in &files {
+        match cache::load_decisions_file(f) {
+            Ok(mut ds) => decisions.append(&mut ds),
+            Err(e) => eprintln!("warning: skipping corpus file {}: {e}", f.display()),
+        }
+    }
+    Ok(rows_from_decisions(&decisions))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::{DecisionCache, Provenance, SweepPoint, TrialResult};
+    use super::*;
+    use crate::parallel::AccumMethod;
+
+    fn features(n: usize, p: usize) -> Features {
+        Features {
+            n,
+            work_flops: 9 * n,
+            scatter_pairs: n / 2,
+            scatter_ratio: 0.5,
+            bandwidth: n / 10,
+            window_rows: 2 * n,
+            window_shrink: 2.0 / p as f64,
+            colors: 4,
+            intervals: 6,
+            balance: 1.05,
+            nthreads: p,
+        }
+    }
+
+    fn trial(kind: EngineKind, mflops: f64) -> TrialResult {
+        TrialResult {
+            kind,
+            reordered: false,
+            seconds_per_product: 1e-4,
+            mad_s: 0.0,
+            mflops,
+        }
+    }
+
+    fn swept_decision(fp: u64, kind: EngineKind) -> Decision {
+        Decision {
+            kind,
+            reorder: false,
+            mflops: 200.0,
+            measured: true,
+            provenance: Provenance::Measured,
+            served_mflops: 0.0,
+            tuned_s: 0.01,
+            fingerprint: fp,
+            nthreads: 2,
+            max_threads: 2,
+            features: features(500, 2),
+            trials: vec![trial(kind, 200.0)],
+            sweep: vec![
+                SweepPoint { nthreads: 1, trials: vec![trial(EngineKind::Sequential, 90.0)] },
+                SweepPoint { nthreads: 2, trials: vec![trial(kind, 200.0)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn rows_keep_measured_decisions_only_and_sort() {
+        let mut unmeasured = swept_decision(9, EngineKind::Colorful);
+        unmeasured.measured = false;
+        unmeasured.provenance = Provenance::Heuristic;
+        let decisions = vec![
+            swept_decision(7, EngineKind::Colorful),
+            unmeasured,
+            swept_decision(3, EngineKind::LocalBuffers(AccumMethod::Effective)),
+        ];
+        let rows = rows_from_decisions(&decisions);
+        assert_eq!(rows.len(), 2, "unmeasured decisions are not training data");
+        assert_eq!(rows[0].fingerprint, 3, "rows sort by fingerprint");
+        assert_eq!(rows[1].fingerprint, 7);
+        // The same (fingerprint × max_threads) appearing again — e.g.
+        // the same matrix persisted into two cache files — must not be
+        // over-weighted: duplicates collapse, first occurrence wins.
+        let mut dup = vec![
+            swept_decision(7, EngineKind::Colorful),
+            swept_decision(7, EngineKind::Atomic),
+            swept_decision(3, EngineKind::LocalBuffers(AccumMethod::Effective)),
+        ];
+        let rows = rows_from_decisions(&dup);
+        assert_eq!(rows.len(), 2, "duplicate entries collapse");
+        assert_eq!(rows[1].kind, EngineKind::Colorful, "first occurrence wins");
+        dup.swap(0, 1);
+        assert_eq!(rows_from_decisions(&dup)[1].kind, EngineKind::Atomic);
+        assert_eq!(rows[0].kind, EngineKind::LocalBuffers(AccumMethod::Effective));
+        // The sweep surface flattens into per-rung best rates.
+        assert_eq!(rows[1].rung_rates, vec![(1, 90.0), (2, 200.0)]);
+    }
+
+    #[test]
+    fn single_p_decisions_contribute_their_one_point() {
+        let mut d = swept_decision(1, EngineKind::Atomic);
+        d.sweep.clear();
+        let rows = rows_from_decisions(&[d]);
+        assert_eq!(rows[0].rung_rates, vec![(2, 200.0)]);
+    }
+
+    #[test]
+    fn load_corpus_walks_a_directory_of_cache_files() {
+        let dir = std::env::temp_dir().join(format!("csrc_corpus_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // One v2 file written by the cache itself…
+        {
+            let cache = DecisionCache::open(&dir.join("a.json"));
+            cache.put(swept_decision(5, EngineKind::Colorful));
+        }
+        // …one hand-rolled v1 file (no max_threads, no sweep)…
+        std::fs::write(
+            dir.join("b.json"),
+            r#"{
+                "version": 1,
+                "decisions": [{
+                    "fingerprint": "0000000000000002",
+                    "nthreads": 3,
+                    "kind": "colorful",
+                    "mflops": 55.5,
+                    "measured": true,
+                    "tuned_s": 0.02,
+                    "features": {
+                        "n": 64, "work_flops": 500, "scatter_pairs": 100,
+                        "scatter_ratio": 0.7, "bandwidth": 9, "colors": 3,
+                        "intervals": 5, "balance": 1.01, "feat_nthreads": 3
+                    },
+                    "trials": [{
+                        "kind": "colorful", "seconds_per_product": 1.0e-4,
+                        "mad_s": 1.0e-6, "mflops": 55.5
+                    }]
+                }]
+            }"#,
+        )
+        .unwrap();
+        // …one file that is not a decision cache at all (skipped with a
+        // warning), and one non-json file (never read).
+        std::fs::write(dir.join("c.json"), "not json at all").unwrap();
+        std::fs::write(dir.join("readme.txt"), "ignore me").unwrap();
+        let rows = load_corpus(&dir).unwrap();
+        assert_eq!(rows.len(), 2, "v1 + v2 entries load; garbage is skipped");
+        assert_eq!(rows[0].fingerprint, 2);
+        assert_eq!(rows[0].rung_rates, vec![(3, 55.5)], "v1 entries carry one point");
+        assert_eq!(rows[1].fingerprint, 5);
+        // A single file works too.
+        let one = load_corpus(&dir.join("a.json")).unwrap();
+        assert_eq!(one.len(), 1);
+        // A missing path is a hard error, not an empty corpus.
+        assert!(load_corpus(&dir.join("nope.json")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,173 @@
+//! Dependency-free trainers for the learned cost model: a multinomial
+//! (softmax) logistic classifier fit by full-batch gradient descent and
+//! a closed-form ridge regressor solved via the normal equations. Both
+//! are deterministic — zero initialization, fixed iteration counts,
+//! rows visited in the caller's (sorted) order — so the same corpus
+//! always yields a byte-identical model file.
+
+/// L2 regularization weight shared by both trainers — small enough not
+/// to blunt a clean structural rule, large enough to keep tiny corpora
+/// from blowing weights up.
+pub(super) const LAMBDA: f64 = 1e-3;
+/// Full-batch gradient steps for the classifier.
+const ITERS: usize = 400;
+/// Step size — safe for standardized features (unit variance).
+const LR: f64 = 0.5;
+
+pub(super) fn dot(w: &[f64], x: &[f64]) -> f64 {
+    w.iter().zip(x).map(|(a, b)| a * b).sum()
+}
+
+/// In-place stable softmax (shift by the max before exponentiating).
+pub(super) fn softmax_in_place(z: &mut [f64]) {
+    let m = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut sum = 0.0;
+    for v in z.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        for v in z.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Fit softmax weights. `x` rows are standardized features *with* a
+/// trailing bias 1.0; `y[i]` is row i's class index; `nclasses` the
+/// class count. Returns one weight vector per class (same layout as the
+/// rows). The bias column is not weight-decayed (standard practice —
+/// the intercept carries the class prior).
+pub(super) fn fit_softmax(x: &[Vec<f64>], y: &[usize], nclasses: usize) -> Vec<Vec<f64>> {
+    let nfeat = x.first().map(|r| r.len()).unwrap_or(0);
+    let mut w = vec![vec![0.0; nfeat]; nclasses];
+    if x.is_empty() || nclasses == 0 {
+        return w;
+    }
+    let inv_rows = 1.0 / x.len() as f64;
+    let mut grad = vec![vec![0.0; nfeat]; nclasses];
+    let mut probs = vec![0.0; nclasses];
+    for _ in 0..ITERS {
+        for g in grad.iter_mut() {
+            for v in g.iter_mut() {
+                *v = 0.0;
+            }
+        }
+        for (row, &cls) in x.iter().zip(y) {
+            for (c, p) in probs.iter_mut().enumerate() {
+                *p = dot(&w[c], row);
+            }
+            softmax_in_place(&mut probs);
+            for (c, g) in grad.iter_mut().enumerate() {
+                let err = probs[c] - if c == cls { 1.0 } else { 0.0 };
+                for (gj, &xj) in g.iter_mut().zip(row) {
+                    *gj += err * xj;
+                }
+            }
+        }
+        for (c, wc) in w.iter_mut().enumerate() {
+            for (j, wj) in wc.iter_mut().enumerate() {
+                let reg = if j + 1 == nfeat { 0.0 } else { LAMBDA * *wj };
+                *wj -= LR * (grad[c][j] * inv_rows + reg);
+            }
+        }
+    }
+    w
+}
+
+/// Closed-form ridge regression `argmin ‖Xw − y‖² + λ‖w‖²` via the
+/// normal equations, solved by Gaussian elimination with partial
+/// pivoting. Rows carry the trailing bias 1.0 (regularizing the bias
+/// too is harmless at λ = 1e-3 and keeps the system strictly positive
+/// definite even for degenerate corpora).
+pub(super) fn fit_ridge(x: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    let nfeat = x.first().map(|r| r.len()).unwrap_or(0);
+    if nfeat == 0 {
+        return Vec::new();
+    }
+    // Augmented system [XᵀX + λI | Xᵀy].
+    let mut a = vec![vec![0.0; nfeat + 1]; nfeat];
+    for (row, &t) in x.iter().zip(y) {
+        for i in 0..nfeat {
+            for j in 0..nfeat {
+                a[i][j] += row[i] * row[j];
+            }
+            a[i][nfeat] += row[i] * t;
+        }
+    }
+    for (i, ai) in a.iter_mut().enumerate() {
+        ai[i] += LAMBDA;
+    }
+    for col in 0..nfeat {
+        let pivot = (col..nfeat)
+            .max_by(|&p, &q| a[p][col].abs().partial_cmp(&a[q][col].abs()).expect("finite"))
+            .expect("non-empty range");
+        a.swap(col, pivot);
+        let diag = a[col][col];
+        if diag.abs() < 1e-12 {
+            continue;
+        }
+        for r in col + 1..nfeat {
+            let f = a[r][col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..=nfeat {
+                a[r][c] -= f * a[col][c];
+            }
+        }
+    }
+    let mut w = vec![0.0; nfeat];
+    for i in (0..nfeat).rev() {
+        let mut v = a[i][nfeat];
+        for j in i + 1..nfeat {
+            v -= a[i][j] * w[j];
+        }
+        w[i] = if a[i][i].abs() < 1e-12 { 0.0 } else { v / a[i][i] };
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_separates_a_one_dimensional_rule() {
+        // Feature = [v, bias]; class 1 iff v > 0. Clean margin.
+        let x: Vec<Vec<f64>> = (0..20)
+            .map(|i| {
+                let v = if i % 2 == 0 { -1.0 - 0.05 * i as f64 } else { 1.0 + 0.05 * i as f64 };
+                vec![v, 1.0]
+            })
+            .collect();
+        let y: Vec<usize> = (0..20).map(|i| i % 2).collect();
+        let w = fit_softmax(&x, &y, 2);
+        for (row, &cls) in x.iter().zip(&y) {
+            let s0 = dot(&w[0], row);
+            let s1 = dot(&w[1], row);
+            assert_eq!((s1 > s0) as usize, cls, "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn ridge_recovers_a_linear_trend() {
+        // y = 3v + 1 exactly; ridge with tiny λ lands within 1%.
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64 / 10.0, 1.0]).collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 * r[0] + 1.0).collect();
+        let w = fit_ridge(&x, &y);
+        assert!((w[0] - 3.0).abs() < 0.05, "slope {w:?}");
+        assert!((w[1] - 1.0).abs() < 0.05, "intercept {w:?}");
+    }
+
+    #[test]
+    fn trainers_are_deterministic() {
+        let x: Vec<Vec<f64>> = (0..8).map(|i| vec![(i as f64).sin(), 1.0]).collect();
+        let y: Vec<usize> = (0..8).map(|i| i % 2).collect();
+        let w1 = fit_softmax(&x, &y, 2);
+        let w2 = fit_softmax(&x, &y, 2);
+        assert_eq!(w1, w2);
+        let t: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        assert_eq!(fit_ridge(&x, &t), fit_ridge(&x, &t));
+    }
+}

@@ -42,6 +42,13 @@ impl Json {
         Ok(v)
     }
 
+    /// Build an object from (key, value) pairs — the serializer-side
+    /// convenience shared by the decision cache and the cost-model
+    /// files, so their JSON shape comes from one place.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),

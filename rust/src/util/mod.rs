@@ -14,6 +14,21 @@ pub mod json;
 pub mod propcheck;
 pub mod stats;
 
+/// Crash-safe file write shared by the decision cache and the cost-model
+/// files: create the parent directory, write to a pid-suffixed temp file,
+/// then rename into place — a crash mid-write can never leave a truncated
+/// file that later readers silently degrade past.
+pub fn write_atomic(path: &std::path::Path, contents: &str) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+}
+
 /// xorshift64* — deterministic, seedable, good enough for workload
 /// generation and property tests (not cryptographic).
 #[derive(Clone, Debug)]

@@ -14,9 +14,12 @@
 //!   thread count (the §4 scalability claim: several matrices peak
 //!   below the core count),
 //! * learned cost model vs the hand-written heuristic on held-out
-//!   matrices (the cross-matrix claim behind `tuner::model`).
+//!   matrices (the cross-matrix claim behind `tuner::model`),
+//! * blocked multi-vector panels (`spmv_multi`) vs k serial products on
+//!   a FEM-like matrix (DESIGN.md §11) — separate `BENCH_spmm.json`.
 //!
-//! Results land on stdout *and* in `results/ablations.json`.
+//! Results land on stdout *and* in `results/ablations.json` (the SpMM
+//! ablation writes its own `results/BENCH_spmm.json`).
 
 use csrc_spmv::graph::{greedy_coloring, stride_capped_coloring, ConflictGraph, Ordering};
 use csrc_spmv::harness::smoke_suite;
@@ -443,4 +446,74 @@ fn main() {
     }
 
     b.finish_json(std::path::Path::new("results/ablations.json")).expect("write json report");
+
+    // --- SpMM: blocked panels vs k serial products (ISSUE 6) --------------
+    // One blocked `spmv_multi` sweep reads A (values + column indices)
+    // once for all k vectors, where k serial calls stream the matrix k
+    // times — so on a FEM-like banded matrix whose working set dwarfs
+    // the cache, the blocked product should win for the wider panels.
+    // Correctness first: every engine's k=4 panel against the serial
+    // oracle, column by column. Results land in their own report,
+    // `results/BENCH_spmm.json`.
+    {
+        let mut sb = Bench::new("spmm");
+        let mut rng = Rng::new(31);
+        let n = 20_000usize;
+        let fem = Arc::new(Csrc::from_coo(&Coo::banded(n, 6, false, &mut rng)).unwrap());
+        let kernel: Arc<dyn SpmvKernel> = fem.clone();
+        let plan = Arc::new(PlanBuilder::all(2).build(kernel.as_ref()));
+        sb.record("spmm/ws-kb", (fem.working_set_bytes() / 1024) as f64, "KB");
+        let kmax = 8usize;
+        let cols: Vec<Vec<f64>> = (0..kmax)
+            .map(|c| (0..n).map(|i| ((i + 11 * c) as f64 * 1e-3).sin()).collect())
+            .collect();
+        let oracle: Vec<Vec<f64>> = cols
+            .iter()
+            .map(|x| {
+                let mut y = vec![0.0; n];
+                fem.spmv_into_zeroed(x, &mut y);
+                y
+            })
+            .collect();
+        let pack = |k: usize| {
+            let mut xp = vec![0.0; n * k];
+            for (c, col) in cols.iter().take(k).enumerate() {
+                for (i, &v) in col.iter().enumerate() {
+                    xp[i * k + c] = v;
+                }
+            }
+            xp
+        };
+        for kind in EngineKind::all() {
+            let mut engine = build_engine(kind, kernel.clone(), plan.clone());
+            let k = 4usize;
+            let xp = pack(k);
+            let mut yp = vec![f64::NAN; n * k];
+            engine.spmv_multi(&xp, &mut yp, k);
+            for (c, want) in oracle.iter().take(k).enumerate() {
+                assert!(
+                    (0..n).all(|i| (yp[i * k + c] - want[i]).abs() <= 1e-9 * (1.0 + want[i].abs())),
+                    "spmm {} column {c} diverges from the serial oracle",
+                    kind.label()
+                );
+            }
+        }
+        let kind = EngineKind::LocalBuffers(AccumMethod::Effective);
+        let mut engine = build_engine(kind, kernel.clone(), plan.clone());
+        let mut y = vec![0.0; n];
+        for k in [1usize, 2, 4, 8] {
+            let t_serial = sb.run(&format!("spmm/k{k}-serial"), || {
+                for x in cols.iter().take(k) {
+                    engine.spmv(x, &mut y);
+                }
+            });
+            let xp = pack(k);
+            let mut yp = vec![0.0; n * k];
+            let t_blocked =
+                sb.run(&format!("spmm/k{k}-blocked"), || engine.spmv_multi(&xp, &mut yp, k));
+            sb.record(&format!("spmm/k{k}-speedup"), t_serial / t_blocked, "x");
+        }
+        sb.finish_json(std::path::Path::new("results/BENCH_spmm.json"))
+            .expect("write spmm json report");
+    }
 }

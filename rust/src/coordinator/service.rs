@@ -39,6 +39,11 @@ use std::time::Instant;
 /// Weight of the newest batch in the drift EWMA (higher = jumpier).
 const EWMA_ALPHA: f64 = 0.3;
 
+/// Panel width used to coalesce same-matrix requests on routes without
+/// a tuned block pick (explicit engine routes, and requests racing an
+/// Auto resolution). Matches the top of the tuner's block ladder.
+const DEFAULT_PANEL_WIDTH: usize = 8;
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -127,6 +132,10 @@ struct ResolvedAuto {
     /// baseline back into the persisted entry.
     fingerprint: u64,
     max_threads: usize,
+    /// The decision's tuned panel width: same-matrix requests in one
+    /// batch coalesce into `spmv_multi` panels this wide (1 = the
+    /// blocked product lost its own tuning race, serve serially).
+    block_k: usize,
 }
 
 impl ResolvedAuto {
@@ -141,6 +150,7 @@ impl ResolvedAuto {
             measured: d.measured,
             fingerprint: d.fingerprint,
             max_threads: d.max_threads,
+            block_k: d.block_k.max(1),
         }
     }
 }
@@ -203,6 +213,9 @@ struct Stats {
     drift_events: u64,
     model_hits: u64,
     model_fallbacks: u64,
+    coalesced_products: u64,
+    coalesced_requests: u64,
+    rcm_builds: u64,
 }
 
 /// Observable service counters.
@@ -247,6 +260,14 @@ pub struct ServiceStats {
     /// Cold-start Auto registrations that fell back to the hand-written
     /// heuristic — no model configured, or it declined to predict.
     pub model_fallbacks: u64,
+    /// Blocked (`spmv_multi`) products run in place of serial per-request
+    /// products — one per coalesced panel.
+    pub coalesced_products: u64,
+    /// Requests served through those panels (`Σ` panel widths).
+    pub coalesced_requests: u64,
+    /// RCM orderings computed for reordered serving. With N workers all
+    /// serving one key through the shared registry this stays 1, not N.
+    pub rcm_builds: u64,
 }
 
 /// Registry value: the matrix plus a per-key generation counter.
@@ -254,6 +275,13 @@ pub struct ServiceStats {
 /// replaced matrix can never be served by state built for its
 /// predecessor — stale engines become unreachable instead of unsound.
 type Registry = HashMap<String, (Arc<Csrc>, u64)>;
+
+/// Shared RCM artifacts for reordered serving, keyed by
+/// `key@generation`: the permutation and the permuted matrix. Shared
+/// across workers (like the plan cache) so a matrix served reordered by
+/// N workers is permuted once, not once per worker; entries of retired
+/// generations are collected by `register()` on replacement.
+type RcmRegistry = HashMap<String, (Arc<Csrc>, Arc<Permutation>)>;
 
 pub struct MatvecService {
     registry: Arc<Mutex<Registry>>,
@@ -270,6 +298,8 @@ pub struct MatvecService {
     model: Option<Arc<tuner::CostModel>>,
     /// `key@generation` → engine + thread count resolved for an Auto route.
     resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
+    /// `key@generation` → RCM artifacts shared by all workers.
+    rcm: Arc<Mutex<RcmRegistry>>,
     /// `key@generation` → served-rate EWMA for drift detection.
     drift: Arc<Mutex<HashMap<String, DriftState>>>,
     retune_tx: Option<Sender<RetunerMsg>>,
@@ -290,6 +320,7 @@ impl MatvecService {
         let model = cfg.model.as_ref().and_then(|p| tuner::CostModel::load(p)).map(Arc::new);
         let resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>> =
             Arc::new(Mutex::new(HashMap::new()));
+        let rcm: Arc<Mutex<RcmRegistry>> = Arc::new(Mutex::new(HashMap::new()));
         let drift: Arc<Mutex<HashMap<String, DriftState>>> = Arc::new(Mutex::new(HashMap::new()));
         let (queue_tx, queue_rx) = channel::<Request>();
         let (retune_tx, retune_rx) = channel::<RetunerMsg>();
@@ -323,6 +354,7 @@ impl MatvecService {
                 route: cfg.route.clone(),
                 stats: stats.clone(),
                 resolved: resolved.clone(),
+                rcm: rcm.clone(),
                 drift: drift.clone(),
                 model: model.clone(),
                 retune_tx: retune_tx.clone(),
@@ -358,6 +390,7 @@ impl MatvecService {
             decisions,
             model,
             resolved,
+            rcm,
             drift,
             retune_tx: Some(retune_tx),
             retuner: Some(retuner),
@@ -393,6 +426,11 @@ impl MatvecService {
             // exactly: `key@<generation>` with an all-digit suffix, never
             // another live key like `key@other@0`.
             self.plans.invalidate_prefix(&prefix);
+            // RCM artifacts follow the plans' lifecycle: purged here by
+            // prefix (over-matching only costs a rebuild; an artifact a
+            // worker races in mid-replace is collected by the next
+            // replacement at the latest).
+            self.rcm.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
             self.resolved.lock().unwrap().retain(|k, _| !is_generation_of(k, &prefix));
             self.drift.lock().unwrap().retain(|k, _| !is_generation_of(k, &prefix));
         }
@@ -512,6 +550,9 @@ impl MatvecService {
             drift_events: s.drift_events,
             model_hits: s.model_hits,
             model_fallbacks: s.model_fallbacks,
+            coalesced_products: s.coalesced_products,
+            coalesced_requests: s.coalesced_requests,
+            rcm_builds: s.rcm_builds,
         }
     }
 
@@ -606,6 +647,10 @@ struct WorkerCtx {
     route: RoutePolicy,
     stats: Arc<Mutex<Stats>>,
     resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
+    /// Shared RCM artifacts — one permutation + permuted matrix per
+    /// served `key@generation`, built by whichever worker gets there
+    /// first (under the lock, so never twice).
+    rcm: Arc<Mutex<RcmRegistry>>,
     drift: Arc<Mutex<HashMap<String, DriftState>>>,
     /// Cold-start model, consulted by the racing-request fallback so the
     /// fallback order (cache → model → heuristic) holds on the worker
@@ -635,9 +680,6 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
     // generations. Values carry the last-served batch tick for the LRU
     // eviction below.
     let mut engines: HashMap<EngineKey, (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
-    // Per-`key@generation` RCM artifacts (permutation + permuted
-    // matrix), shared by every engine kind serving that key reordered.
-    let mut reordered: HashMap<String, (Arc<Csrc>, Arc<Permutation>)> = HashMap::new();
     let mut serve_tick: u64 = 0;
     while let Ok(batch) = rx.recv() {
         let hit = ctx.registry.lock().unwrap().get(&batch.matrix).cloned();
@@ -655,13 +697,9 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
         let cache_key = format!("{}@{generation}", batch.matrix);
         // Evict engines built for retired generations of this matrix —
         // each pins a ThreadPool (live OS threads), the old matrix, and
-        // its plan. RCM artifacts of retired generations go with them
-        // (over-matching a user key containing '@' only costs a rebuild).
+        // its plan. (Retired RCM artifacts live in the shared registry
+        // and are collected by `register()` on replacement.)
         engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
-        {
-            let prefix = format!("{}@", batch.matrix);
-            reordered.retain(|k, _| *k == cache_key || !k.starts_with(&prefix));
-        }
         serve_tick += 1;
         let mut used_key: Option<EngineKey> = None;
         // Resolve Auto once per batch (it is batch-invariant): through
@@ -716,9 +754,13 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
             other => other,
         };
         // Per-batch rate sample for drift detection: seconds spent in
-        // engine products and how many ran.
+        // engine products and how many vector products ran (a k-wide
+        // panel counts k — the EWMA stays per-vector-normalized).
         let mut batch_secs = 0.0f64;
         let mut batch_products = 0usize;
+        // Validate lengths up front: a malformed request fails on its
+        // own and never joins a panel.
+        let mut valid: Vec<Request> = Vec::with_capacity(batch.requests.len());
         for req in batch.requests {
             if req.x.len() != a.n {
                 let mut s = ctx.stats.lock().unwrap();
@@ -726,67 +768,124 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                 let _ = req
                     .reply
                     .send(Err(format!("x length {} != n {}", req.x.len(), a.n)));
-                continue;
+            } else {
+                valid.push(req);
             }
-            let mut y = vec![0.0; a.n];
-            match &backend {
-                Backend::NativeSequential => a.spmv_into_zeroed(&req.x, &mut y),
-                Backend::NativeParallel { kind, threads, reorder } => {
-                    let ekey =
-                        (batch.matrix.clone(), generation, kind.label(), *threads, *reorder);
-                    let slot = engines.entry(ekey.clone()).or_insert_with(|| {
-                        let engine: Box<dyn ParallelSpmv> = if *reorder {
-                            // Serve through the RCM ordering: the
-                            // permuted matrix and its plan are cached
-                            // (worker-local / shared respectively), and
-                            // the wrapper permutes x in / un-permutes y
-                            // out per request.
-                            let (pa, perm) = reordered
-                                .entry(cache_key.clone())
+        }
+        match &backend {
+            Backend::NativeSequential => {
+                for req in &valid {
+                    let mut y = vec![0.0; a.n];
+                    a.spmv_into_zeroed(&req.x, &mut y);
+                    finish_request(&ctx, req, y);
+                }
+            }
+            Backend::Xla { artifact } => {
+                // The XLA path is exercised via examples/ and the CLI
+                // (XlaRuntime is heavyweight); in-service we fall back
+                // to sequential to keep the worker self-contained.
+                let _ = artifact;
+                for req in &valid {
+                    let mut y = vec![0.0; a.n];
+                    a.spmv_into_zeroed(&req.x, &mut y);
+                    finish_request(&ctx, req, y);
+                }
+            }
+            Backend::NativeParallel { kind, threads, reorder } if !valid.is_empty() => {
+                let ekey =
+                    (batch.matrix.clone(), generation, kind.label(), *threads, *reorder);
+                let slot = engines.entry(ekey.clone()).or_insert_with(|| {
+                    let engine: Box<dyn ParallelSpmv> = if *reorder {
+                        // Serve through the RCM ordering: the permuted
+                        // matrix and its permutation come from the
+                        // *shared* registry — whichever worker arrives
+                        // first builds them under the lock, every other
+                        // worker (and engine kind) reuses the Arcs. The
+                        // wrapper permutes x in / un-permutes y out per
+                        // product.
+                        let (pa, perm) = {
+                            let mut rcm = ctx.rcm.lock().unwrap();
+                            rcm.entry(cache_key.clone())
                                 .or_insert_with(|| {
+                                    ctx.stats.lock().unwrap().rcm_builds += 1;
                                     let perm = Arc::new(reorder::rcm(a.as_ref()));
                                     let pa = Arc::new(a.permuted(&perm));
                                     (pa, perm)
                                 })
-                                .clone();
-                            let plan = ctx.plans.get_or_build(
-                                &format!("{cache_key}#rcm"),
-                                pa.as_ref(),
-                                PlanBuilder::for_kind(*threads, *kind),
-                            );
-                            Box::new(ReorderedEngine::new(
-                                build_engine(*kind, pa, plan),
-                                perm,
-                            ))
-                        } else {
-                            let plan = ctx.plans.get_or_build(
-                                &cache_key,
-                                a.as_ref(),
-                                PlanBuilder::for_kind(*threads, *kind),
-                            );
-                            build_engine(*kind, a.clone(), plan)
+                                .clone()
                         };
-                        (engine, 0)
-                    });
-                    slot.1 = serve_tick;
-                    let t = Instant::now();
-                    slot.0.spmv(&req.x, &mut y);
-                    batch_secs += t.elapsed().as_secs_f64();
-                    batch_products += 1;
-                    used_key = Some(ekey);
-                }
-                Backend::Xla { artifact } => {
-                    // The XLA path is exercised via examples/ and the CLI
-                    // (XlaRuntime is heavyweight); in-service we fall back
-                    // to sequential to keep the worker self-contained.
-                    let _ = artifact;
-                    a.spmv_into_zeroed(&req.x, &mut y);
+                        let plan = ctx.plans.get_or_build(
+                            &format!("{cache_key}#rcm"),
+                            pa.as_ref(),
+                            PlanBuilder::for_kind(*threads, *kind),
+                        );
+                        Box::new(ReorderedEngine::new(
+                            build_engine(*kind, pa, plan),
+                            perm,
+                        ))
+                    } else {
+                        let plan = ctx.plans.get_or_build(
+                            &cache_key,
+                            a.as_ref(),
+                            PlanBuilder::for_kind(*threads, *kind),
+                        );
+                        build_engine(*kind, a.clone(), plan)
+                    };
+                    (engine, 0)
+                });
+                slot.1 = serve_tick;
+                used_key = Some(ekey);
+                // Coalesce the batch into k-wide panels: the tuned
+                // width for resolved Auto routes (block_k = 1 means the
+                // blocked product lost its own race — serve serially),
+                // the ladder cap for explicit routes.
+                let cap = auto_decision
+                    .map(|r| r.block_k.max(1))
+                    .unwrap_or(DEFAULT_PANEL_WIDTH);
+                let mut i = 0usize;
+                while i < valid.len() {
+                    let g = cap.min(valid.len() - i);
+                    if g <= 1 {
+                        let req = &valid[i];
+                        let mut y = vec![0.0; a.n];
+                        let t = Instant::now();
+                        slot.0.spmv(&req.x, &mut y);
+                        batch_secs += t.elapsed().as_secs_f64();
+                        batch_products += 1;
+                        finish_request(&ctx, req, y);
+                        i += 1;
+                    } else {
+                        // Pack the g request vectors into one row-major
+                        // panel (x[j*g + c] = request c's x[j]), run a
+                        // single blocked product, unpack per request.
+                        let mut xp = vec![0.0; a.n * g];
+                        for (c, req) in valid[i..i + g].iter().enumerate() {
+                            for (j, &v) in req.x.iter().enumerate() {
+                                xp[j * g + c] = v;
+                            }
+                        }
+                        let mut yp = vec![0.0; a.n * g];
+                        let t = Instant::now();
+                        slot.0.spmv_multi(&xp, &mut yp, g);
+                        batch_secs += t.elapsed().as_secs_f64();
+                        batch_products += g;
+                        {
+                            let mut s = ctx.stats.lock().unwrap();
+                            s.coalesced_products += 1;
+                            s.coalesced_requests += g as u64;
+                        }
+                        for (c, req) in valid[i..i + g].iter().enumerate() {
+                            let mut y = vec![0.0; a.n];
+                            for (j, yj) in y.iter_mut().enumerate() {
+                                *yj = yp[j * g + c];
+                            }
+                            finish_request(&ctx, req, y);
+                        }
+                        i += g;
+                    }
                 }
             }
-            let mut s = ctx.stats.lock().unwrap();
-            s.completed += 1;
-            s.latency.as_mut().unwrap().record(req.enqueued.elapsed().as_secs_f64());
-            let _ = req.reply.send(Ok(std::mem::take(&mut y)));
+            Backend::NativeParallel { .. } => {} // every request failed validation
         }
         if let Some(r) = auto_decision {
             let job = RetuneJob {
@@ -814,17 +913,17 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
             }
             if evicted > 0 {
                 ctx.stats.lock().unwrap().engines_evicted += evicted;
-                // RCM artifacts (a matrix-sized permuted copy each) must
-                // not outlive the engines that used them: keep only keys
-                // that still back at least one reordered engine.
-                reordered.retain(|k, _| {
-                    engines
-                        .keys()
-                        .any(|e| e.4 && *k == format!("{}@{}", e.0, e.1))
-                });
             }
         }
     }
+}
+
+/// Reply to one served request and record its completion + latency.
+fn finish_request(ctx: &WorkerCtx, req: &Request, y: Vec<f64>) {
+    let mut s = ctx.stats.lock().unwrap();
+    s.completed += 1;
+    s.latency.as_mut().unwrap().record(req.enqueued.elapsed().as_secs_f64());
+    let _ = req.reply.send(Ok(y));
 }
 
 /// Fold one batch's measured rate into the key's EWMA and queue a
@@ -1269,6 +1368,8 @@ mod tests {
             },
             trials: Vec::new(),
             sweep: vec![tuner::SweepPoint { nthreads: 1, trials: Vec::new() }],
+            block_k: 1,
+            block_rates: Vec::new(),
         }
     }
 
@@ -1529,6 +1630,7 @@ mod tests {
                     reordered: false,
                     nthreads: 2,
                     rung_rates: vec![(2, 500.0)],
+                    block_rates: Vec::new(),
                 })
                 .collect();
             tuner::CostModel::train(&rows).unwrap().save(&model_path).unwrap();
@@ -1591,6 +1693,95 @@ mod tests {
         }
         assert_eq!(svc.stats().completed, 3);
         svc.shutdown();
+    }
+
+    #[test]
+    fn rcm_built_once_across_workers() {
+        // Satellite (ISSUE 6): four workers all serving one key through
+        // the RCM ordering must share a single permutation build — the
+        // artifact registry is service-wide, like the plan cache.
+        let mut rng = Rng::new(99);
+        let band = Csrc::from_coo(&Coo::banded(300, 2, false, &mut rng)).unwrap();
+        let shuffle = Permutation::from_new_to_old(rng.permutation(300)).unwrap();
+        let a = Arc::new(band.permuted(&shuffle));
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 4;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.reorder = reorder::ReorderPolicy::Always;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 300];
+        a.spmv_into_zeroed(&x, &mut want);
+        let rxs: Vec<_> = (0..24).map(|_| svc.submit("m", x.clone())).collect();
+        for rx in rxs {
+            let y = rx.recv().unwrap().unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 24);
+        assert_eq!(s.rcm_builds, 1, "N workers must share one RCM build, got {}", s.rcm_builds);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn coalesced_batches_replay_the_tuned_block_width() {
+        // Tentpole acceptance (ISSUE 6): a persisted k>1 decision,
+        // replayed by a cold-cache service, makes the worker coalesce
+        // same-matrix requests into blocked products — and the answers
+        // stay exact per request.
+        let dir = std::env::temp_dir().join(format!("csrc_spmm_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let a = mat(200, 500);
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        let fp = tuner::fingerprint(kernel.as_ref());
+        {
+            let cache = DecisionCache::open(&path);
+            let mut d = doctored_decision(fp, 100.0);
+            d.block_k = 4;
+            d.block_rates = vec![(1, 100.0), (2, 110.0), (4, 130.0), (8, 120.0)];
+            cache.put(d);
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.batch = BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(50),
+        };
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.0; // isolate coalescing from drift re-tunes
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        assert_eq!(svc.stats().tunes, 0, "the persisted k>1 decision must be a cache hit");
+        // A burst within the batching window forms one multi-request
+        // batch, which the worker serves as two width-4 panels.
+        let xs: Vec<Vec<f64>> = (0..8)
+            .map(|r| (0..200).map(|i| ((r * 200 + i) as f64 * 0.01).sin()).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit("m", x.clone())).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let y = rx.recv().unwrap().unwrap();
+            let mut want = vec![0.0; 200];
+            a.spmv_into_zeroed(x, &mut want);
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 8);
+        assert!(
+            s.coalesced_products >= 1 && s.coalesced_requests >= 2,
+            "a burst against a k=4 decision must coalesce (products={}, requests={})",
+            s.coalesced_products,
+            s.coalesced_requests
+        );
+        svc.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

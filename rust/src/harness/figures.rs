@@ -506,6 +506,74 @@ pub fn reorder_headers() -> Vec<String> {
     .collect()
 }
 
+// ------------------------------------------------------------- SpMM table
+
+/// Block widths the SpMM table (and the tuner's block axis) measures.
+pub const SPMM_WIDTHS: [usize; 3] = [2, 4, 8];
+
+/// Beyond the paper: the multi-vector extension (DESIGN.md §11). Per
+/// matrix, k serial `spmv` calls vs one blocked `spmv_multi` panel at
+/// the same engine and thread count — the amortization a blocked sweep
+/// buys (one pass over A serves all k vectors). Columns: the serial
+/// per-vector Mflop/s baseline, then blocked per-vector Mflop/s and
+/// speedup at each width, and a correctness check of every blocked
+/// column against its independent product.
+pub fn spmm_table(entries: &[DatasetEntry], p: usize) -> Vec<Vec<String>> {
+    entries
+        .iter()
+        .map(|e| {
+            let m = Arc::new(e.build_csrc());
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let plan = Arc::new(PlanBuilder::all(p).build(kernel.as_ref()));
+            let kind = EngineKind::LocalBuffers(AccumMethod::Effective);
+            let mut engine = build_engine(kind, kernel.clone(), plan);
+            let n = m.n;
+            let kmax = *SPMM_WIDTHS.last().unwrap();
+            let xs: Vec<Vec<f64>> = (0..kmax)
+                .map(|c| (0..n).map(|i| ((i + 7 * c) as f64 * 0.001).sin()).collect())
+                .collect();
+            let products = products_for(m.nnz()).min(100);
+            let mut y = vec![0.0; n];
+            let serial_s = metrics::median_of_runs(2, products, || engine.spmv(&xs[0], &mut y));
+            let mut cells =
+                vec![e.name.to_string(), format!("{:.1}", metrics::mflops(m.flops(), serial_s))];
+            let mut ok = true;
+            for &k in &SPMM_WIDTHS {
+                let mut xp = vec![0.0; n * k];
+                for (c, col) in xs.iter().take(k).enumerate() {
+                    for (i, &v) in col.iter().enumerate() {
+                        xp[i * k + c] = v;
+                    }
+                }
+                let mut yp = vec![0.0; n * k];
+                let panel_s =
+                    metrics::median_of_runs(2, products, || engine.spmv_multi(&xp, &mut yp, k));
+                let per_vec = panel_s / k as f64;
+                cells.push(format!("{:.1}", metrics::mflops(m.flops(), per_vec)));
+                cells.push(format!("{:.2}", serial_s / per_vec));
+                for (c, col) in xs.iter().take(k).enumerate() {
+                    let mut want = vec![0.0; n];
+                    m.spmv_into_zeroed(col, &mut want);
+                    ok &= (0..n)
+                        .all(|i| (yp[i * k + c] - want[i]).abs() <= 1e-9 * (1.0 + want[i].abs()));
+                }
+            }
+            cells.push(if ok { "yes" } else { "NO" }.into());
+            cells
+        })
+        .collect()
+}
+
+pub fn spmm_headers() -> Vec<String> {
+    let mut h = vec!["matrix".to_string(), "serial Mflop/s".to_string()];
+    for k in SPMM_WIDTHS {
+        h.push(format!("k={k} Mflop/s/vec"));
+        h.push(format!("k={k} speedup"));
+    }
+    h.push("correct".into());
+    h
+}
+
 // ------------------------------------------------------------ Model table
 
 /// Beyond the paper: the learned cross-matrix cost model
@@ -699,6 +767,20 @@ mod tests {
                 if r[col] != "-" {
                     assert!(r[col].parse::<f64>().unwrap() >= 0.0, "{r:?}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_table_blocked_panels_match_serial_products() {
+        let rows = spmm_table(&smoke_suite()[..2], 2);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].len(), spmm_headers().len());
+        for r in &rows {
+            assert_eq!(r.last().unwrap(), "yes", "{r:?}");
+            // Serial baseline and every blocked width produced a rate.
+            for cell in &r[1..r.len() - 1] {
+                assert!(cell.parse::<f64>().unwrap() > 0.0, "{r:?}");
             }
         }
     }

@@ -5,11 +5,11 @@
 //! * `info    --matrix <name|file.mtx>`              — format statistics
 //! * `gen     --kind poisson3d --nx 40 --out a.mtx`  — generate a matrix
 //! * `spmv    --matrix <..> --engine effective --threads 4 --products 100`
-//! * `solve   --matrix <..> --solver cg|gmres|bicg`
+//! * `solve   --matrix <..> --solver cg|gmres|bicg|block-cg [--rhs K]`
 //! * `serve   --requests 64`                         — coordinator demo
 //! * `xla     --artifacts artifacts`                 — run the AOT path
 //! * `tune train --corpus <dir> --model model.json`  — fit the cost model
-//! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|model|all>`
+//! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|spmm|model|all>`
 //!            `[--suite quick|full|smoke] [--out results]`
 
 use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
@@ -74,11 +74,13 @@ fn usage_and_exit() -> ! {
                       [--reorder never|measure|always] [--model model.json]\n\
          csrc tune train --corpus <dir|decisions.json> --model model.json\n\
          csrc reorder --matrix <..> [--threads P] [--out rcm.mtx]\n\
-         csrc solve   --matrix <..> --solver <cg|gmres|bicg> [--tol 1e-10]\n\
+         csrc solve   --matrix <..> --solver <cg|gmres|bicg|block-cg> [--tol 1e-10]\n\
+                      [--rhs K] [--engine <kind>] [--threads P] (block-cg: K right-hand sides,\n\
+                      one blocked spmv_multi product per iteration)\n\
          csrc serve   [--requests N] [--workers W] [--engine auto] [--min-parallel-n N]\n\
                       [--sweep-threads] [--reorder never|measure|always] [--model model.json]\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|model|all>\n\
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|spmm|model|all>\n\
                       [--suite smoke|quick|full] [--out results] [--model model.json]"
     );
     std::process::exit(2);
@@ -292,16 +294,27 @@ fn cmd_tune(args: &Args) -> Result<()> {
             }
         }
     }
+    if !d.block_rates.is_empty() {
+        println!("  block widths (per-vector rate at the winning engine):");
+        for &(bk, rate) in &d.block_rates {
+            println!(
+                "    k = {bk}: {rate:>9.1} Mflop/s{}",
+                if bk == d.block_k { "  <- winner" } else { "" }
+            );
+        }
+    }
     let win = d.trials.iter().find(|t| t.kind == d.kind && t.reordered == d.reorder);
     println!(
-        "winner: {} at {} threads ({}; tuned in {:.1} ms{})",
+        "winner: {} at {} threads, block width {} ({}; tuned in {:.1} ms{})",
         d.label(),
         d.nthreads,
+        d.block_k,
         match win {
             Some(w) => format!("{:.1} Mflop/s", metrics::mflops(flops, w.seconds_per_product)),
             None => match d.provenance {
                 tuner::Provenance::Model => "model prediction, no trials".to_string(),
-                _ => "cost model, no trials".to_string(),
+                tuner::Provenance::Heuristic => "heuristic pick, no trials".to_string(),
+                tuner::Provenance::Measured => "measured, no matching trial recorded".to_string(),
             },
         },
         d.tuned_s * 1e3,
@@ -382,6 +395,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let tol = args.f64_or("tol", 1e-10);
     let which = args.opt_or("solver", "cg");
     let n = m.n;
+    let m = Arc::new(m);
     let mut rng = Rng::new(7);
     let xstar: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let mut b = vec![0.0; n];
@@ -389,16 +403,43 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let t = std::time::Instant::now();
     let (its, res, ok) = match which {
         "cg" => {
-            let r = solver::cg(&m, &b, None, tol, 10 * n);
+            let r = solver::cg(m.as_ref(), &b, None, tol, 10 * n);
             (r.iterations, r.residual, r.converged)
         }
         "gmres" => {
-            let r = solver::gmres(&m, &b, 50, tol, 200);
+            let r = solver::gmres(m.as_ref(), &b, 50, tol, 200);
             (r.iterations, r.residual, r.converged)
         }
         "bicg" => {
-            let r = solver::bicg(&m, &b, tol, 10 * n).map_err(msg)?;
+            let r = solver::bicg(m.as_ref(), &b, tol, 10 * n).map_err(msg)?;
             (r.iterations, r.residual, r.converged)
+        }
+        "block-cg" => {
+            // Multi-RHS: k planted solutions, one row-major panel, one
+            // blocked engine product per iteration.
+            let k = args.usize_or("rhs", 4).max(1);
+            let threads = args.usize_or("threads", 2);
+            let kind = match args.opt("engine") {
+                Some(s) => EngineKind::parse(s)
+                    .ok_or_else(|| msg(format!("bad --engine {s:?}")))?,
+                None => EngineKind::Colorful,
+            };
+            let mut xs = vec![0.0; n * k];
+            for v in xs.iter_mut() {
+                *v = rng.normal();
+            }
+            let mut bp = vec![0.0; n * k];
+            m.apply_multi(&xs, &mut bp, k);
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let op = solver::EngineLinOp::auto(kind, kernel, threads);
+            let r = solver::block_cg(&op, &bp, k, tol, 10 * n);
+            println!(
+                "{name}: block-cg over {} at {threads} threads, {k} right-hand sides \
+                 (one blocked product per iteration)",
+                kind.label()
+            );
+            let worst = r.residuals.iter().cloned().fold(0.0, f64::max);
+            (r.iterations, worst, r.converged)
         }
         other => return Err(msg(format!("unknown solver {other:?}"))),
     };
@@ -470,6 +511,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         s.p99_latency_us,
         s.plan_builds,
         s.plan_build_seconds * 1e3
+    );
+    println!(
+        "coalesced {} requests into {} blocked products; rcm_builds={}",
+        s.coalesced_requests, s.coalesced_products, s.rcm_builds
     );
     if !s.auto_choices.is_empty() {
         println!(
@@ -671,6 +716,17 @@ fn cmd_figures(args: &Args) -> Result<()> {
             "RCM reordering — half-bandwidth, windowed working set, Mflop/s before/after",
             &h,
             &figures::reorder_table(&suite, p),
+        )?;
+    }
+    if run_all || what == "spmm" {
+        let p = args.usize_or("threads", 4);
+        let headers = figures::spmm_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "spmm",
+            "SpMM — blocked multi-vector panels vs k serial products (per-vector Mflop/s)",
+            &h,
+            &figures::spmm_table(&suite, p),
         )?;
     }
     if run_all || what == "model" {

@@ -79,6 +79,47 @@ impl ParallelSpmv for AtomicEngine {
         }
     }
 
+    /// k-wide product: the same contribution stream, with each target
+    /// widened to a k-slot panel (`n·k` CAS slots, grown lazily and kept
+    /// across calls).
+    fn spmv_multi(&mut self, x: &[f64], y: &mut [f64], k: usize) {
+        assert!(k >= 1);
+        if k == 1 {
+            return self.spmv(x, y);
+        }
+        let n = self.plan.n;
+        debug_assert_eq!(x.len(), n * k);
+        debug_assert_eq!(y.len(), n * k);
+        let p = self.pool.nthreads();
+        if p == 1 {
+            self.kernel.sweep_full_multi(x, y, k);
+            return;
+        }
+        if self.bits.len() < n * k {
+            let grow = n * k - self.bits.len();
+            self.bits.extend((0..grow).map(|_| AtomicU64::new(0)));
+        }
+        let kernel = &*self.kernel;
+        let part = &self.plan.part;
+        let bits = &self.bits[..n * k];
+        let barrier = self.pool.barrier();
+        self.pool.run(move |t| {
+            let (lo, hi) = (t * n / p, (t + 1) * n / p);
+            for slot in &bits[lo * k..hi * k] {
+                slot.store(0, Ordering::Relaxed);
+            }
+            barrier.wait();
+            let block = part.block(t);
+            for i in block {
+                kernel
+                    .sweep_row_contribs_multi(x, k, i, &mut |idx, v| atomic_add(&bits[idx], v));
+            }
+        });
+        for (dst, slot) in y.iter_mut().zip(bits) {
+            *dst = f64::from_bits(slot.load(Ordering::Relaxed));
+        }
+    }
+
     fn name(&self) -> String {
         "atomic".into()
     }

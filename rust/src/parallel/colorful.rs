@@ -100,6 +100,49 @@ impl ParallelSpmv for ColorfulEngine {
         });
     }
 
+    /// k-wide product: identical schedule (zero cooperatively, one color
+    /// class at a time), but every row sweep writes a k-slot panel. The
+    /// coloring invariant is unchanged — row i's write set is `{i} ∪
+    /// scatter targets`, and widening each target to k adjacent slots
+    /// keeps distinct rows' panels disjoint.
+    fn spmv_multi(&mut self, x: &[f64], y: &mut [f64], k: usize) {
+        assert!(k >= 1);
+        if k == 1 {
+            return self.spmv(x, y);
+        }
+        let n = self.plan.n;
+        debug_assert_eq!(x.len(), n * k);
+        debug_assert_eq!(y.len(), n * k);
+        let p = self.pool.nthreads();
+        if p == 1 {
+            self.kernel.sweep_full_multi(x, y, k);
+            return;
+        }
+        let kernel = &*self.kernel;
+        let colors = self.plan.colors.as_ref().unwrap();
+        let shares = self.plan.color_shares.as_ref().unwrap();
+        let barrier = self.pool.barrier();
+        let yv = SyncSlice::new(y);
+
+        self.pool.run(move |t| {
+            let (lo, hi) = (t * n / p, (t + 1) * n / p);
+            // SAFETY: disjoint per-thread chunks (scaled by k).
+            unsafe { yv.slice_mut(lo * k..hi * k).fill(0.0) };
+            barrier.wait();
+            for (class, share) in colors.classes.iter().zip(shares) {
+                let (s, e) = share[t];
+                for &row in &class[s..e] {
+                    let i = row as usize;
+                    // SAFETY: same disjointness as spmv — the multi sweep
+                    // writes only slots `idx·k..idx·k+k` for idx in row
+                    // i's write set, disjoint within a color class.
+                    unsafe { kernel.sweep_row_shared_multi(x, k, i, yv.as_mut_ptr()) };
+                }
+                barrier.wait();
+            }
+        });
+    }
+
     fn name(&self) -> String {
         format!("colorful({} colors)", self.num_colors())
     }

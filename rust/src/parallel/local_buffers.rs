@@ -80,6 +80,11 @@ pub struct LocalBuffersEngine {
     /// Prefix sums of window lengths (`flat[t]` = slots before buffer t;
     /// `flat[p]` = total slots) — the all-in-one flat init split.
     flat: Vec<usize>,
+    /// Lazily-built k-wide scatter buffers for the multi-vector path:
+    /// the same windows widened to `|win[t]|·k` slots (`Σ|eff[t]|·k`
+    /// total). Cached per k and rebuilt only when k changes, so a
+    /// service coalescing at a steady block size allocates once.
+    multi: Option<(usize, SharedBuffers)>,
     /// Nanoseconds of the slowest thread's init+accumulate work in the
     /// last call — the Table 2 measurement.
     pub last_overhead_ns: u64,
@@ -152,6 +157,7 @@ impl LocalBuffersEngine {
             bufs,
             win,
             flat,
+            multi: None,
             last_overhead_ns: 0,
         }
     }
@@ -179,6 +185,13 @@ impl LocalBuffersEngine {
     /// What the pre-windowing layout would allocate: `p·n·8`.
     pub fn full_buffer_bytes(&self) -> usize {
         self.plan.nthreads * self.plan.n * 8
+    }
+
+    /// Bytes the k-wide multi-vector path backs: the same windows
+    /// widened to `Σ_t |win[t]| · k · 8` (the windowed-buffer widening
+    /// math of DESIGN.md §11).
+    pub fn buffer_bytes_multi(&self, k: usize) -> usize {
+        self.buffer_bytes() * k
     }
 
     /// Buffer bytes the init step zeroes per product under this
@@ -405,6 +418,196 @@ impl ParallelSpmv for LocalBuffersEngine {
                             let src = unsafe { bufs.read(b) };
                             let off = win[b].start;
                             let s = &src[int.range.start - off..int.range.end - off];
+                            for (d, v) in dst.iter_mut().zip(s) {
+                                *d += *v;
+                            }
+                        }
+                    }
+                }
+            }
+            overhead_ns += t1.elapsed().as_nanos() as u64;
+            ov.fetch_max(overhead_ns, Ordering::Relaxed);
+        });
+
+        self.last_overhead_ns = max_overhead.load(Ordering::Relaxed);
+    }
+
+    /// k-wide product through the same four init/compute/accumulate
+    /// schemes, with every window boundary scaled by k: buffer b holds
+    /// `|win[b]|·k` slots and slot `(j - win[b].start)·k + c` is column
+    /// c of `y_j`. The buffers are rebuilt only when k changes.
+    fn spmv_multi(&mut self, x: &[f64], y: &mut [f64], k: usize) {
+        assert!(k >= 1);
+        if k == 1 {
+            return self.spmv(x, y);
+        }
+        let p = self.pool.nthreads();
+        let n = self.plan.n;
+        debug_assert_eq!(x.len(), n * k);
+        debug_assert_eq!(y.len(), n * k);
+
+        if p == 1 {
+            self.kernel.sweep_full_multi(x, y, k);
+            self.last_overhead_ns = 0;
+            return;
+        }
+
+        // Lazily (re)build the k-wide windowed buffers.
+        if self.multi.as_ref().map(|(mk, _)| *mk) != Some(k) {
+            let scaled: Vec<Range<usize>> =
+                self.win.iter().map(|r| r.start * k..r.end * k).collect();
+            self.multi = Some((k, SharedBuffers::windowed(&scaled)));
+        }
+
+        let kernel = &*self.kernel;
+        let plan = &*self.plan;
+        let part = &plan.part;
+        let eff: &[Range<usize>] = plan.eff.as_deref().unwrap_or(&[]);
+        let covering: &[Vec<usize>] = plan.covering.as_deref().unwrap_or(&[]);
+        let ints: &[crate::partition::Interval] = plan.ints.as_deref().unwrap_or(&[]);
+        let int_assign: &[Vec<usize>] = plan.int_assign.as_deref().unwrap_or(&[]);
+        let bufs = &self.multi.as_ref().expect("built above").1;
+        let win: &[Range<usize>] = &self.win;
+        let flat: &[usize] = &self.flat;
+        let method = self.method;
+        let barrier = self.pool.barrier();
+        let yv = SyncSlice::new(y);
+        let max_overhead = AtomicU64::new(0);
+        let ov = &max_overhead;
+
+        self.pool.run(move |t| {
+            let mut overhead_ns = 0u64;
+
+            // ---- init step: same splits as spmv(), scaled by k --------
+            let t0 = Instant::now();
+            match method {
+                AccumMethod::AllInOne => {
+                    let total = flat[p] * k;
+                    let (glo, ghi) = (t * total / p, (t + 1) * total / p);
+                    for b in 0..p {
+                        let (bs, be) = (flat[b] * k, flat[b + 1] * k);
+                        let lo = glo.max(bs);
+                        let hi = ghi.min(be);
+                        if lo < hi {
+                            // SAFETY: the flat split is disjoint across
+                            // threads (see spmv).
+                            unsafe { bufs.get_mut(b)[lo - bs..hi - bs].fill(0.0) };
+                        }
+                    }
+                }
+                AccumMethod::PerBuffer => {
+                    for b in 0..p {
+                        let len_b = win[b].len() * k;
+                        let (lo, hi) = (t * len_b / p, (t + 1) * len_b / p);
+                        // SAFETY: [lo,hi) disjoint per thread within b.
+                        unsafe { bufs.get_mut(b)[lo..hi].fill(0.0) };
+                    }
+                }
+                AccumMethod::Effective => {
+                    let r = eff[t].clone();
+                    let off = win[t].start;
+                    // SAFETY: buffer t touched by thread t only here.
+                    unsafe {
+                        bufs.get_mut(t)[(r.start - off) * k..(r.end - off) * k].fill(0.0)
+                    };
+                }
+                AccumMethod::Interval => {
+                    for &i in &int_assign[t] {
+                        let int = &ints[i];
+                        for &b in &int.covers {
+                            let off = win[b].start;
+                            // SAFETY: intervals are disjoint and each is
+                            // assigned to exactly one thread.
+                            unsafe {
+                                bufs.get_mut(b)
+                                    [(int.range.start - off) * k..(int.range.end - off) * k]
+                                    .fill(0.0)
+                            };
+                        }
+                    }
+                }
+            }
+            overhead_ns += t0.elapsed().as_nanos() as u64;
+            barrier.wait();
+
+            // ---- compute step: private k-wide windowed buffer ---------
+            let block = part.block(t);
+            // SAFETY: buffer t is written by thread t only in this phase.
+            let buf = unsafe { bufs.get_mut(t) };
+            kernel.sweep_rows_into_multi(x, k, block.start, block.end, buf, win[t].start);
+            barrier.wait();
+
+            // ---- accumulation step: row windows scaled by k -----------
+            let t1 = Instant::now();
+            match method {
+                AccumMethod::AllInOne => {
+                    let (lo, hi) = (t * n / p, (t + 1) * n / p);
+                    // SAFETY: row split [lo,hi) disjoint per thread.
+                    let dst = unsafe { yv.slice_mut(lo * k..hi * k) };
+                    dst.fill(0.0);
+                    for b in 0..p {
+                        let from = lo.max(win[b].start);
+                        let to = hi.min(win[b].end);
+                        if from < to {
+                            let src = unsafe { bufs.read(b) };
+                            let off = win[b].start;
+                            for (d, s) in dst[(from - lo) * k..(to - lo) * k]
+                                .iter_mut()
+                                .zip(&src[(from - off) * k..(to - off) * k])
+                            {
+                                *d += *s;
+                            }
+                        }
+                    }
+                }
+                AccumMethod::PerBuffer => {
+                    let (lo, hi) = (t * n / p, (t + 1) * n / p);
+                    let dst = unsafe { yv.slice_mut(lo * k..hi * k) };
+                    dst.fill(0.0);
+                    for b in 0..p {
+                        let from = lo.max(win[b].start);
+                        let to = hi.min(win[b].end);
+                        if from < to {
+                            let src = unsafe { bufs.read(b) };
+                            let off = win[b].start;
+                            for (d, s) in dst[(from - lo) * k..(to - lo) * k]
+                                .iter_mut()
+                                .zip(&src[(from - off) * k..(to - off) * k])
+                            {
+                                *d += *s;
+                            }
+                        }
+                        barrier.wait();
+                    }
+                }
+                AccumMethod::Effective => {
+                    let own = part.block(t);
+                    let dst = unsafe { yv.slice_mut(own.start * k..own.end * k) };
+                    dst.fill(0.0);
+                    for &b in &covering[t] {
+                        let src = unsafe { bufs.read(b) };
+                        let from = own.start.max(eff[b].start);
+                        let to = own.end.min(eff[b].end);
+                        let off = win[b].start;
+                        for (d, s) in dst[(from - own.start) * k..(to - own.start) * k]
+                            .iter_mut()
+                            .zip(&src[(from - off) * k..(to - off) * k])
+                        {
+                            *d += *s;
+                        }
+                    }
+                }
+                AccumMethod::Interval => {
+                    for &idx in &int_assign[t] {
+                        let int = &ints[idx];
+                        let dst =
+                            unsafe { yv.slice_mut(int.range.start * k..int.range.end * k) };
+                        dst.fill(0.0);
+                        for &b in &int.covers {
+                            let src = unsafe { bufs.read(b) };
+                            let off = win[b].start;
+                            let s = &src
+                                [(int.range.start - off) * k..(int.range.end - off) * k];
                             for (d, v) in dst.iter_mut().zip(s) {
                                 *d += *v;
                             }

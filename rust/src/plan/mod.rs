@@ -168,6 +168,22 @@ impl SpmvPlan {
         Arc::new(PlanBuilder::for_kind(nthreads, kind).build(kernel))
     }
 
+    /// Scatter-buffer bytes a k-wide local-buffers product backs under
+    /// this plan: `Σ_t |eff[t]| · k · 8` with windowed buffers (the
+    /// effective ranges present), `p·n·k·8` for the full-length
+    /// fallback, 0 when a single thread bypasses buffers entirely.
+    pub fn windowed_buffer_bytes(&self, k: usize) -> usize {
+        assert!(k >= 1);
+        if self.nthreads <= 1 {
+            return 0;
+        }
+        let slots = match &self.eff {
+            Some(eff) => eff.iter().map(|r| r.len()).sum::<usize>(),
+            None => self.nthreads * self.n,
+        };
+        slots * k * 8
+    }
+
     /// Check every structural invariant against the kernel the plan was
     /// built for. Used by the property tests and by debug assertions.
     pub fn validate(&self, kernel: &dyn SpmvKernel) -> Result<(), String> {

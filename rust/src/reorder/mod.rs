@@ -143,6 +143,28 @@ impl Permutation {
         }
     }
 
+    /// k-wide [`Permutation::apply`]: gather row-major n×k panels,
+    /// `out[new·k + c] = x[old·k + c]` — k columns permuted per product
+    /// with one pass over the index vector.
+    pub fn apply_multi(&self, x: &[f64], out: &mut [f64], k: usize) {
+        assert!(k >= 1);
+        assert_eq!(x.len(), self.len() * k);
+        assert_eq!(out.len(), self.len() * k);
+        for (o, &old) in out.chunks_exact_mut(k).zip(&self.new_to_old) {
+            o.copy_from_slice(&x[old * k..old * k + k]);
+        }
+    }
+
+    /// k-wide [`Permutation::apply_inverse`]: `out[old·k + c] = y[new·k + c]`.
+    pub fn apply_inverse_multi(&self, y: &[f64], out: &mut [f64], k: usize) {
+        assert!(k >= 1);
+        assert_eq!(y.len(), self.len() * k);
+        assert_eq!(out.len(), self.len() * k);
+        for (o, &new) in out.chunks_exact_mut(k).zip(&self.old_to_new) {
+            o.copy_from_slice(&y[new * k..new * k + k]);
+        }
+    }
+
     /// The inverse bijection (swaps the two directions).
     pub fn inverse(&self) -> Permutation {
         Permutation { new_to_old: self.old_to_new.clone(), old_to_new: self.new_to_old.clone() }
@@ -421,22 +443,63 @@ impl<O: LinOp> LinOp for ReorderedLinOp<O> {
 pub struct ReorderedEngine {
     inner: Box<dyn ParallelSpmv>,
     perm: Arc<Permutation>,
+    /// Permute/un-permute scratch, reused in place across products and
+    /// grown (never shrunk) to `n·k` for the widest panel seen — the
+    /// sandwich must not allocate fresh n-vectors per product.
     px: Vec<f64>,
     py: Vec<f64>,
+    /// How many times the scratch pair (re)allocated — tests assert this
+    /// stays at the grow-once minimum across repeated products.
+    scratch_reallocs: usize,
 }
 
 impl ReorderedEngine {
     pub fn new(inner: Box<dyn ParallelSpmv>, perm: Arc<Permutation>) -> ReorderedEngine {
         let n = perm.len();
-        ReorderedEngine { inner, perm, px: vec![0.0; n], py: vec![0.0; n] }
+        ReorderedEngine {
+            inner,
+            perm,
+            px: vec![0.0; n],
+            py: vec![0.0; n],
+            scratch_reallocs: 1,
+        }
+    }
+
+    /// Allocation count of the permute scratch (1 after construction;
+    /// +1 only when a wider panel forces a grow).
+    pub fn scratch_reallocs(&self) -> usize {
+        self.scratch_reallocs
+    }
+
+    fn ensure_scratch(&mut self, len: usize) {
+        if self.px.len() < len {
+            self.px = vec![0.0; len];
+            self.py = vec![0.0; len];
+            self.scratch_reallocs += 1;
+        }
     }
 }
 
 impl ParallelSpmv for ReorderedEngine {
     fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
-        self.perm.apply(x, &mut self.px);
-        self.inner.spmv(&self.px, &mut self.py);
-        self.perm.apply_inverse(&self.py, y);
+        let n = self.perm.len();
+        self.perm.apply(x, &mut self.px[..n]);
+        self.inner.spmv(&self.px[..n], &mut self.py[..n]);
+        self.perm.apply_inverse(&self.py[..n], y);
+    }
+
+    fn spmv_multi(&mut self, x: &[f64], y: &mut [f64], k: usize) {
+        assert!(k >= 1);
+        if k == 1 {
+            return self.spmv(x, y);
+        }
+        let n = self.perm.len();
+        self.ensure_scratch(n * k);
+        // Split borrows: perm/inner are disjoint from px/py.
+        let perm = self.perm.clone();
+        perm.apply_multi(x, &mut self.px[..n * k], k);
+        self.inner.spmv_multi(&self.px[..n * k], &mut self.py[..n * k], k);
+        perm.apply_inverse_multi(&self.py[..n * k], y, k);
     }
 
     fn name(&self) -> String {
@@ -495,6 +558,58 @@ mod tests {
         for new in 0..40 {
             assert_eq!(px[new], x[p.old_of(new)]);
         }
+    }
+
+    #[test]
+    fn apply_multi_matches_columnwise_apply() {
+        let mut rng = Rng::new(21);
+        let p = Permutation::from_new_to_old(rng.permutation(30)).unwrap();
+        for k in [1usize, 2, 3, 8] {
+            let x: Vec<f64> = (0..30 * k).map(|_| rng.normal()).collect();
+            let mut panel = vec![0.0; 30 * k];
+            p.apply_multi(&x, &mut panel, k);
+            let mut back = vec![0.0; 30 * k];
+            p.apply_inverse_multi(&panel, &mut back, k);
+            propcheck::assert_close(&back, &x, 0.0, 0.0).unwrap();
+            for c in 0..k {
+                let xc: Vec<f64> = (0..30).map(|i| x[i * k + c]).collect();
+                let mut want = vec![0.0; 30];
+                p.apply(&xc, &mut want);
+                for new in 0..30 {
+                    assert_eq!(panel[new * k + c], want[new], "k={k} c={c}");
+                }
+            }
+        }
+    }
+
+    /// Satellite: the reordered sandwich permutes through reused scratch
+    /// — repeated products (including k-wide ones at a fixed k) must not
+    /// allocate; only a wider panel may grow the pair, once.
+    #[test]
+    fn reordered_engine_scratch_grows_once() {
+        let a = std::sync::Arc::new(random(80, 3, 22));
+        let perm = Arc::new(rcm(a.as_ref()));
+        let pa = std::sync::Arc::new(a.permuted(&perm));
+        let inner = build_engine_auto(EngineKind::LocalBuffers(AccumMethod::Effective), pa, 2);
+        let mut engine = ReorderedEngine::new(inner, perm);
+        assert_eq!(engine.scratch_reallocs(), 1);
+        let x: Vec<f64> = (0..80).map(|i| (i as f64).sin()).collect();
+        let mut y = vec![0.0; 80];
+        for _ in 0..3 {
+            engine.spmv(&x, &mut y);
+        }
+        assert_eq!(engine.scratch_reallocs(), 1, "k=1 products must not allocate");
+        let xp: Vec<f64> = (0..80 * 4).map(|i| (i as f64).cos()).collect();
+        let mut yp = vec![0.0; 80 * 4];
+        for _ in 0..3 {
+            engine.spmv_multi(&xp, &mut yp, 4);
+        }
+        assert_eq!(engine.scratch_reallocs(), 2, "k=4 grows once, then reuses");
+        let xp2: Vec<f64> = (0..80 * 2).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut yp2 = vec![0.0; 80 * 2];
+        engine.spmv_multi(&xp2, &mut yp2, 2);
+        engine.spmv(&x, &mut y);
+        assert_eq!(engine.scratch_reallocs(), 2, "narrower panels reuse the wide scratch");
     }
 
     #[test]

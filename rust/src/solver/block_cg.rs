@@ -1,0 +1,204 @@
+//! Multi-RHS conjugate gradients over blocked products.
+//!
+//! Solves A·X = B for an SPD operator and a row-major n×k right-hand
+//! panel by running k *independent* CG recurrences in lockstep: the
+//! per-column scalars (α, β, ρ) never couple, but every iteration's k
+//! matrix products fuse into ONE [`crate::sparse::LinOp::apply_multi`]
+//! call — the paper's amortization argument (one sweep of A serves k
+//! vectors) applied to the solver layer. Converged columns freeze in
+//! place while the rest keep iterating, so a panel with one hard column
+//! costs the same products as solving that column alone.
+
+use crate::sparse::LinOp;
+
+#[derive(Debug)]
+pub struct BlockCgResult {
+    /// Solution panel, row-major n×k (`x[i*k + c]` = column c's x_i).
+    pub x: Vec<f64>,
+    /// Iterations until every column converged (or `max_iter`).
+    pub iterations: usize,
+    /// Final relative residual per column.
+    pub residuals: Vec<f64>,
+    /// Every column converged.
+    pub converged: bool,
+}
+
+/// Dot product of column `c` of two row-major n×k panels.
+#[inline]
+fn col_dot(a: &[f64], b: &[f64], k: usize, c: usize) -> f64 {
+    a.iter()
+        .skip(c)
+        .step_by(k)
+        .zip(b.iter().skip(c).step_by(k))
+        .map(|(x, y)| x * y)
+        .sum()
+}
+
+/// Solve A X = B for SPD A; `b` is a row-major n×k panel. Plain CG
+/// recurrences per column (no preconditioner), one blocked product per
+/// iteration.
+pub fn block_cg(a: &dyn LinOp, b: &[f64], k: usize, tol: f64, max_iter: usize) -> BlockCgResult {
+    assert!(k >= 1, "block_cg needs at least one right-hand side");
+    let n = a.dim();
+    assert_eq!(b.len(), n * k, "b must be a row-major n×k panel");
+    let mut x = vec![0.0; n * k];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n * k];
+    let bnorm: Vec<f64> = (0..k).map(|c| col_dot(b, b, k, c).sqrt().max(1e-300)).collect();
+    let mut rz: Vec<f64> = (0..k).map(|c| col_dot(&r, &r, k, c)).collect();
+    let mut active: Vec<bool> = (0..k).map(|c| rz[c].sqrt() / bnorm[c] >= tol).collect();
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        if active.iter().all(|&live| !live) {
+            iterations = it;
+            break;
+        }
+        iterations = it + 1;
+        // One blocked product serves every column — including frozen
+        // ones, whose stale p columns are simply ignored below (the
+        // panel sweep is one pass over A either way).
+        a.apply_multi(&p, &mut ap, k);
+        for c in 0..k {
+            if !active[c] {
+                continue;
+            }
+            let denom = col_dot(&p, &ap, k, c);
+            if denom <= 0.0 {
+                // Breakdown (non-SPD or exhausted Krylov space): freeze
+                // the column at its current iterate.
+                active[c] = false;
+                continue;
+            }
+            let alpha = rz[c] / denom;
+            for (xi, pi) in x.iter_mut().skip(c).step_by(k).zip(p.iter().skip(c).step_by(k)) {
+                *xi += alpha * pi;
+            }
+            for (ri, api) in r.iter_mut().skip(c).step_by(k).zip(ap.iter().skip(c).step_by(k)) {
+                *ri -= alpha * api;
+            }
+            let rz_new = col_dot(&r, &r, k, c);
+            if rz_new.sqrt() / bnorm[c] < tol {
+                active[c] = false;
+                rz[c] = rz_new;
+                continue;
+            }
+            let beta = rz_new / rz[c];
+            rz[c] = rz_new;
+            for (pi, ri) in p.iter_mut().skip(c).step_by(k).zip(r.iter().skip(c).step_by(k)) {
+                *pi = ri + beta * *pi;
+            }
+        }
+    }
+    let residuals: Vec<f64> = (0..k).map(|c| col_dot(&r, &r, k, c).sqrt() / bnorm[c]).collect();
+    let converged = residuals.iter().all(|&res| res < tol);
+    BlockCgResult { x, iterations, residuals, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::cg;
+    use crate::sparse::{Coo, Csrc};
+    use crate::util::Rng;
+
+    fn spd(n: usize, seed: u64) -> Csrc {
+        let mut rng = Rng::new(seed);
+        let coo = Coo::random_structurally_symmetric(n, 3, true, &mut rng);
+        Csrc::from_coo(&coo).unwrap()
+    }
+
+    /// Row-major panel whose column c is the vector `cols[c]`.
+    fn pack(cols: &[Vec<f64>], n: usize) -> Vec<f64> {
+        let k = cols.len();
+        let mut panel = vec![0.0; n * k];
+        for (c, col) in cols.iter().enumerate() {
+            for (i, &v) in col.iter().enumerate() {
+                panel[i * k + c] = v;
+            }
+        }
+        panel
+    }
+
+    #[test]
+    fn block_cg_matches_k_independent_cg_solves() {
+        let n = 100;
+        let a = spd(n, 110);
+        let mut rng = Rng::new(2);
+        let bs: Vec<Vec<f64>> = (0..3).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let panel = pack(&bs, n);
+        let r = block_cg(&a, &panel, 3, 1e-10, 2000);
+        assert!(r.converged, "residuals {:?}", r.residuals);
+        for (c, b) in bs.iter().enumerate() {
+            let single = cg::cg(&a, b, None, 1e-10, 2000);
+            assert!(single.converged);
+            for i in 0..n {
+                let got = r.x[i * 3 + c];
+                let want = single.x[i];
+                assert!((got - want).abs() < 1e-6, "col {c} row {i}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_cg_k1_equals_plain_cg() {
+        let n = 80;
+        let a = spd(n, 111);
+        let b: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.1).sin()).collect();
+        let blocked = block_cg(&a, &b, 1, 1e-10, 2000);
+        let plain = cg::cg(&a, &b, None, 1e-10, 2000);
+        assert!(blocked.converged && plain.converged);
+        for (got, want) in blocked.x.iter().zip(&plain.x) {
+            assert!((got - want).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn converged_columns_freeze_while_others_iterate() {
+        // Column 0 is already solved (b = 0 ⇒ x = 0 instantly); the
+        // solver must keep iterating the hard column without disturbing
+        // the frozen one.
+        let n = 90;
+        let a = spd(n, 112);
+        let mut rng = Rng::new(3);
+        let hard: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let panel = pack(&[vec![0.0; n], hard.clone()], n);
+        let r = block_cg(&a, &panel, 2, 1e-10, 2000);
+        assert!(r.converged, "residuals {:?}", r.residuals);
+        for i in 0..n {
+            assert_eq!(r.x[i * 2], 0.0, "the zero column must stay exactly zero");
+        }
+        let single = cg::cg(&a, &hard, None, 1e-10, 2000);
+        for i in 0..n {
+            assert!((r.x[i * 2 + 1] - single.x[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn block_cg_runs_on_a_parallel_engine() {
+        // End-to-end over the engine layer: every iteration's blocked
+        // product goes through ParallelSpmv::spmv_multi.
+        use crate::parallel::EngineKind;
+        use crate::plan::PlanBuilder;
+        use crate::solver::EngineLinOp;
+        use std::sync::Arc;
+        let n = 120;
+        let a = Arc::new(spd(n, 113));
+        let plan = Arc::new(PlanBuilder::all(2).build(a.as_ref()));
+        let op = EngineLinOp::new(EngineKind::Colorful, a.clone(), plan);
+        let mut rng = Rng::new(4);
+        let bs: Vec<Vec<f64>> = (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let panel = pack(&bs, n);
+        let r = block_cg(&op, &panel, 4, 1e-10, 3000);
+        assert!(r.converged, "residuals {:?}", r.residuals);
+        // Residual check against the sequential oracle.
+        for (c, b) in bs.iter().enumerate() {
+            let xc: Vec<f64> = (0..n).map(|i| r.x[i * 4 + c]).collect();
+            let mut ax = vec![0.0; n];
+            a.spmv_into_zeroed(&xc, &mut ax);
+            let res: f64 = ax.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt();
+            let bn: f64 = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!(res / bn < 1e-8, "col {c}: residual {}", res / bn);
+        }
+    }
+}

@@ -8,10 +8,12 @@
 //! [`ParallelLinOp`]. [`bicg`] exercises Aᵀx — the operation CSRC gets
 //! for free (§5).
 
+pub mod block_cg;
 pub mod cg;
 pub mod gmres;
 pub mod precond;
 
+pub use block_cg::{block_cg, BlockCgResult};
 pub use cg::{cg, CgResult};
 pub use gmres::{gmres, GmresResult};
 pub use precond::{Jacobi, Preconditioner};
@@ -39,6 +41,9 @@ impl LinOp for ParallelLinOp<'_> {
     }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.engine.lock().unwrap().spmv(x, y);
+    }
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], k: usize) {
+        self.engine.lock().unwrap().spmv_multi(x, y, k);
     }
 }
 
@@ -70,6 +75,9 @@ impl LinOp for EngineLinOp {
     }
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         self.engine.lock().unwrap().spmv(x, y);
+    }
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], k: usize) {
+        self.engine.lock().unwrap().spmv_multi(x, y, k);
     }
 }
 

@@ -117,6 +117,30 @@ impl Bcsr {
         }
         t
     }
+
+    /// k-wide analogue of [`Bcsr::row_dot`]: accumulate row i's dot
+    /// products against a row-major n×k panel into `out[0..kc]` for the
+    /// column window `[c0, c0 + kc)`. One scan of the block row serves
+    /// the whole register panel.
+    #[inline]
+    fn row_dot_panel(&self, x: &[f64], k: usize, i: usize, c0: usize, out: &mut [f64]) {
+        let (r, c) = (self.r, self.c);
+        let br = i / r;
+        let ri = i - br * r;
+        let kc = out.len();
+        for kb in self.ia[br] as usize..self.ia[br + 1] as usize {
+            let j0 = self.ja[kb] as usize * c;
+            let cols = c.min(self.ncols - j0);
+            let blk = &self.a[kb * r * c..(kb + 1) * r * c];
+            for ci in 0..cols {
+                let v = blk[ri * c + ci];
+                let xj = (j0 + ci) * k + c0;
+                for (cc, o) in out.iter_mut().enumerate().take(kc) {
+                    *o += v * x[xj + cc];
+                }
+            }
+        }
+    }
 }
 
 impl SpmvKernel for Bcsr {
@@ -156,6 +180,66 @@ impl SpmvKernel for Bcsr {
 
     fn sweep_full(&self, x: &[f64], y: &mut [f64]) {
         self.spmv(x, y);
+    }
+
+    fn sweep_rows_into_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        r0: usize,
+        r1: usize,
+        buf: &mut [f64],
+        lo: usize,
+    ) {
+        assert!(k >= 1 && r1 <= self.nrows && x.len() == self.ncols * k);
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            let mut t = [0.0f64; 8];
+            for i in r0..r1 {
+                t[..kc].fill(0.0);
+                self.row_dot_panel(x, k, i, c0, &mut t[..kc]);
+                let yi = (i - lo) * k + c0;
+                for c in 0..kc {
+                    buf[yi + c] += t[c];
+                }
+            }
+            c0 += kc;
+        }
+    }
+
+    unsafe fn sweep_row_shared_multi(&self, x: &[f64], k: usize, i: usize, y: *mut f64) {
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            let mut t = [0.0f64; 8];
+            t[..kc].fill(0.0);
+            self.row_dot_panel(x, k, i, c0, &mut t[..kc]);
+            for c in 0..kc {
+                *y.add(i * k + c0 + c) += t[c];
+            }
+            c0 += kc;
+        }
+    }
+
+    fn sweep_row_contribs_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        i: usize,
+        emit: &mut dyn FnMut(usize, f64),
+    ) {
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            let mut t = [0.0f64; 8];
+            t[..kc].fill(0.0);
+            self.row_dot_panel(x, k, i, c0, &mut t[..kc]);
+            for c in 0..kc {
+                emit(i * k + c0 + c, t[c]);
+            }
+            c0 += kc;
+        }
     }
 
     fn kernel_name(&self) -> &'static str {

@@ -79,6 +79,42 @@ impl Csr {
         }
     }
 
+    /// Multi-vector row-block sweep over row-major panels (the k-wide
+    /// analogue of [`Csr::spmv_rows_into`]): `buf[(i - lo)*k + c]`
+    /// accumulates column c of y_i. Reads each row's indices and values
+    /// once for all k columns, in register panels of ≤ 8.
+    pub fn spmv_rows_into_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        r0: usize,
+        r1: usize,
+        buf: &mut [f64],
+        lo: usize,
+    ) {
+        assert!(k >= 1 && r1 <= self.nrows && x.len() == self.ncols * k);
+        debug_assert!(buf.len() >= (r1 - lo) * k);
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            for i in r0..r1 {
+                let mut t = [0.0f64; 8];
+                for kk in self.row_range(i) {
+                    let xj = self.ja[kk] as usize * k + c0;
+                    let av = self.a[kk];
+                    for c in 0..kc {
+                        t[c] += av * x[xj + c];
+                    }
+                }
+                let yi = (i - lo) * k + c0;
+                for c in 0..kc {
+                    buf[yi + c] += t[c];
+                }
+            }
+            c0 += kc;
+        }
+    }
+
     /// yᵀ = Aᵀ x — requires a column-order sweep; expensive for CSR (the
     /// §5 contrast with CSRC's free transpose).
     pub fn spmv_t(&self, x: &[f64], y: &mut [f64]) {
@@ -202,6 +238,62 @@ impl SpmvKernel for Csr {
 
     fn sweep_full(&self, x: &[f64], y: &mut [f64]) {
         self.spmv(x, y);
+    }
+
+    fn sweep_rows_into_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        r0: usize,
+        r1: usize,
+        buf: &mut [f64],
+        lo: usize,
+    ) {
+        self.spmv_rows_into_multi(x, k, r0, r1, buf, lo);
+    }
+
+    unsafe fn sweep_row_shared_multi(&self, x: &[f64], k: usize, i: usize, y: *mut f64) {
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            let mut t = [0.0f64; 8];
+            for kk in self.row_range(i) {
+                let xj = self.ja[kk] as usize * k + c0;
+                let av = self.a[kk];
+                for c in 0..kc {
+                    t[c] += av * x[xj + c];
+                }
+            }
+            for c in 0..kc {
+                *y.add(i * k + c0 + c) += t[c];
+            }
+            c0 += kc;
+        }
+    }
+
+    fn sweep_row_contribs_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        i: usize,
+        emit: &mut dyn FnMut(usize, f64),
+    ) {
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            let mut t = [0.0f64; 8];
+            for kk in self.row_range(i) {
+                let xj = self.ja[kk] as usize * k + c0;
+                let av = self.a[kk];
+                for c in 0..kc {
+                    t[c] += av * x[xj + c];
+                }
+            }
+            for c in 0..kc {
+                emit(i * k + c0 + c, t[c]);
+            }
+            c0 += kc;
+        }
     }
 
     fn kernel_name(&self) -> &'static str {

@@ -235,6 +235,72 @@ impl Csrc {
         }
     }
 
+    /// Multi-vector (SpMM) row-block sweep: the k-wide analogue of
+    /// [`Csrc::spmv_rows_into`] over row-major panels (`x[j*k + c]`,
+    /// `buf[(j - lo)*k + c]`). One pass over `ia`/`ja`/`al`/`au` serves
+    /// all k columns — the matrix (values *and* index structure) is read
+    /// once instead of k times, which is the whole blocked-product win
+    /// on a bandwidth-bound sweep. Columns are processed in register
+    /// panels of ≤ 8 so the per-row accumulator stays on the stack for
+    /// any k.
+    pub fn spmv_rows_into_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        r0: usize,
+        r1: usize,
+        buf: &mut [f64],
+        lo: usize,
+    ) {
+        assert!(k >= 1 && r1 <= self.n && x.len() == self.n * k);
+        debug_assert!(buf.len() >= (r1 - lo) * k);
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            // Safety: same construction invariants as `spmv` (every
+            // ja[kk] < i < n); panel offsets stay inside x (len n·k) and
+            // buf (covers rows [lo, r1) × k, asserted above and checked
+            // per-scatter in debug builds).
+            unsafe {
+                for i in r0..r1 {
+                    let xi = i * k + c0;
+                    let adi = *self.ad.get_unchecked(i);
+                    let mut t = [0.0f64; 8];
+                    for c in 0..kc {
+                        t[c] = adi * *x.get_unchecked(xi + c);
+                    }
+                    let start = *self.ia.get_unchecked(i) as usize;
+                    let end = *self.ia.get_unchecked(i + 1) as usize;
+                    for kk in start..end {
+                        let j = *self.ja.get_unchecked(kk) as usize;
+                        let alv = *self.al.get_unchecked(kk);
+                        let auv = *self.au.get_unchecked(kk);
+                        let xj = j * k + c0;
+                        debug_assert!(j >= lo && (j - lo) * k + c0 + kc <= buf.len());
+                        let yj = (j - lo) * k + c0;
+                        for c in 0..kc {
+                            t[c] += alv * *x.get_unchecked(xj + c);
+                            *buf.get_unchecked_mut(yj + c) += auv * *x.get_unchecked(xi + c);
+                        }
+                    }
+                    let yi = (i - lo) * k + c0;
+                    for c in 0..kc {
+                        *buf.get_unchecked_mut(yi + c) += t[c];
+                    }
+                }
+            }
+            c0 += kc;
+        }
+    }
+
+    /// Full k-wide product into a row-major panel, `y` fully
+    /// overwritten — the sequential SpMM baseline.
+    pub fn spmv_panel(&self, x: &[f64], y: &mut [f64], k: usize) {
+        assert_eq!(y.len(), self.n * k);
+        y.fill(0.0);
+        self.spmv_rows_into_multi(x, k, 0, self.n, y, 0);
+    }
+
     /// y = Aᵀ x — the paper's §5 point: swap al and au, identical cost.
     ///
     /// Same unchecked-hot-loop shape as `spmv` — `bicg` pays this every
@@ -341,16 +407,21 @@ impl Csrc {
     /// tuner's bandwidth features were under-counting the local-buffers
     /// engines by up to `p·n·8` before this.
     pub fn working_set_bytes_parallel(&self, plan: &crate::plan::SpmvPlan) -> usize {
+        self.working_set_bytes_parallel_multi(plan, 1)
+    }
+
+    /// k-wide working set: the matrix arrays are read once regardless of
+    /// k (the point of the blocked product), while x, y and the scatter
+    /// windows widen to k columns ([`crate::plan::SpmvPlan::windowed_buffer_bytes`]).
+    pub fn working_set_bytes_parallel_multi(
+        &self,
+        plan: &crate::plan::SpmvPlan,
+        k: usize,
+    ) -> usize {
         assert_eq!(plan.n, self.n, "plan built for a different matrix");
-        if plan.nthreads <= 1 {
-            // The single-thread shortcut writes y directly: no buffers.
-            return self.working_set_bytes();
-        }
-        let buffer_bytes = match &plan.eff {
-            Some(eff) => eff.iter().map(|r| r.len()).sum::<usize>() * 8,
-            None => plan.nthreads * self.n * 8, // full-length fallback
-        };
-        self.working_set_bytes() + buffer_bytes
+        let vectors = 2 * self.n * 8 * (k - 1); // x/y beyond the k=1 base
+        // Single thread writes y directly (windowed_buffer_bytes is 0).
+        self.working_set_bytes() + vectors + plan.windowed_buffer_bytes(k)
     }
 
     /// The matrix renumbered by `perm`: B = P A Pᵀ with
@@ -439,6 +510,78 @@ impl SpmvKernel for Csrc {
         self.spmv_into_zeroed(x, y);
     }
 
+    fn sweep_rows_into_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        r0: usize,
+        r1: usize,
+        buf: &mut [f64],
+        lo: usize,
+    ) {
+        self.spmv_rows_into_multi(x, k, r0, r1, buf, lo);
+    }
+
+    fn sweep_full_multi(&self, x: &[f64], y: &mut [f64], k: usize) {
+        self.spmv_panel(x, y, k);
+    }
+
+    unsafe fn sweep_row_shared_multi(&self, x: &[f64], k: usize, i: usize, y: *mut f64) {
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            let xi = i * k + c0;
+            let mut t = [0.0f64; 8];
+            for c in 0..kc {
+                t[c] = self.ad[i] * x[xi + c];
+            }
+            for kk in self.row_range(i) {
+                let j = self.ja[kk] as usize;
+                let (alv, auv) = (self.al[kk], self.au[kk]);
+                let xj = j * k + c0;
+                for c in 0..kc {
+                    t[c] += alv * x[xj + c];
+                    *y.add(xj + c) += auv * x[xi + c];
+                }
+            }
+            for c in 0..kc {
+                *y.add(xi + c) += t[c];
+            }
+            c0 += kc;
+        }
+    }
+
+    fn sweep_row_contribs_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        i: usize,
+        emit: &mut dyn FnMut(usize, f64),
+    ) {
+        let mut c0 = 0usize;
+        while c0 < k {
+            let kc = (k - c0).min(8);
+            let xi = i * k + c0;
+            let mut t = [0.0f64; 8];
+            for c in 0..kc {
+                t[c] = self.ad[i] * x[xi + c];
+            }
+            for kk in self.row_range(i) {
+                let j = self.ja[kk] as usize;
+                let (alv, auv) = (self.al[kk], self.au[kk]);
+                let xj = j * k + c0;
+                for c in 0..kc {
+                    t[c] += alv * x[xj + c];
+                    emit(xj + c, auv * x[xi + c]);
+                }
+            }
+            for c in 0..kc {
+                emit(xi + c, t[c]);
+            }
+            c0 += kc;
+        }
+    }
+
     fn kernel_name(&self) -> &'static str {
         "csrc"
     }
@@ -462,6 +605,9 @@ impl LinOp for Csrc {
         y.fill(0.0);
         self.spmv_t(x, y);
         Ok(())
+    }
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], k: usize) {
+        self.spmv_panel(x, y, k);
     }
     fn diagonal(&self) -> Option<Vec<f64>> {
         Some(self.ad.clone())
@@ -642,6 +788,35 @@ mod tests {
             csr.spmv(&x, &mut y1);
             m.spmv_into_zeroed(&x, &mut y2);
             propcheck::assert_close(&y1, &y2, 1e-11, 1e-11)
+        });
+    }
+
+    #[test]
+    fn property_panel_spmm_matches_k_serial_spmv() {
+        // The fused k-wide sweep must equal k independent products for
+        // every k, including k > 8 (the register-panel chunk width).
+        propcheck::check(15, |rng| {
+            let n = 8 + rng.below(50);
+            let coo = Coo::random_structurally_symmetric(n, 4, false, rng);
+            let m = Csrc::from_coo(&coo).map_err(|e| e.to_string())?;
+            let k = 1 + rng.below(11);
+            let xp: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+            let mut yp = vec![0.0; n * k];
+            m.spmv_panel(&xp, &mut yp, k);
+            let (mut xc, mut yc) = (vec![0.0; n], vec![0.0; n]);
+            for c in 0..k {
+                for j in 0..n {
+                    xc[j] = xp[j * k + c];
+                }
+                m.spmv_into_zeroed(&xc, &mut yc);
+                for i in 0..n {
+                    let got = yp[i * k + c];
+                    if (got - yc[i]).abs() > 1e-11 * (1.0 + yc[i].abs()) {
+                        return Err(format!("k={k} col {c} row {i}: {got} vs {}", yc[i]));
+                    }
+                }
+            }
+            Ok(())
         });
     }
 

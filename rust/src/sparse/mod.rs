@@ -95,6 +95,94 @@ pub trait SpmvKernel: Send + Sync {
     /// the single-thread shortcut).
     fn sweep_full(&self, x: &[f64], y: &mut [f64]);
 
+    /// Multi-vector (SpMM) variant of [`SpmvKernel::sweep_rows_into`]:
+    /// sweep rows [r0, r1) of a k-wide product, accumulating into a
+    /// row-major panel buffer where `buf[(j - lo)*k + c]` holds column
+    /// `c` of `y_j`. `x` is the matching n×k row-major panel
+    /// (`x[j*k + c]` = column c of x_j). The default runs k gathered
+    /// single-vector sweeps — correct for any kernel; the concrete
+    /// formats override it with fused panel sweeps that read the matrix
+    /// (values *and* indices) once for all k columns, which is the whole
+    /// point of blocking a bandwidth-bound product.
+    fn sweep_rows_into_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        r0: usize,
+        r1: usize,
+        buf: &mut [f64],
+        lo: usize,
+    ) {
+        assert!(k >= 1 && buf.len() % k == 0);
+        let n = self.dim();
+        debug_assert_eq!(x.len(), n * k);
+        let mut xc = vec![0.0; n];
+        let mut tmp = vec![0.0; buf.len() / k];
+        for c in 0..k {
+            for (s, panel) in xc.iter_mut().zip(x.chunks_exact(k)) {
+                *s = panel[c];
+            }
+            for v in tmp.iter_mut() {
+                *v = 0.0;
+            }
+            self.sweep_rows_into(&xc, r0, r1, &mut tmp, lo);
+            for (v, panel) in tmp.iter().zip(buf.chunks_exact_mut(k)) {
+                panel[c] += *v;
+            }
+        }
+    }
+
+    /// Multi-vector variant of [`SpmvKernel::sweep_full`]: `y` is an
+    /// n×k row-major panel, fully overwritten. Default: zero + one
+    /// accumulating panel sweep over all rows.
+    fn sweep_full_multi(&self, x: &[f64], y: &mut [f64], k: usize) {
+        y.fill(0.0);
+        self.sweep_rows_into_multi(x, k, 0, self.dim(), y, 0);
+    }
+
+    /// Multi-vector variant of [`SpmvKernel::sweep_row_shared`]: one
+    /// row's sweep of a k-wide product into a shared n×k row-major
+    /// panel through a raw pointer (`y[j*k + c]`). The default gathers
+    /// each column and replays the single-vector contributions — it
+    /// writes exactly the indices the scalar sweep writes, so the
+    /// colorful executor's disjointness guarantee carries over.
+    ///
+    /// # Safety
+    /// `y` must point at a buffer of at least `dim() * k` elements, and
+    /// no other thread may concurrently access any panel row that row
+    /// `i`'s sweep writes.
+    unsafe fn sweep_row_shared_multi(&self, x: &[f64], k: usize, i: usize, y: *mut f64) {
+        let n = self.dim();
+        let mut xc = vec![0.0; n];
+        for c in 0..k {
+            for (s, panel) in xc.iter_mut().zip(x.chunks_exact(k)) {
+                *s = panel[c];
+            }
+            self.sweep_row_contribs(&xc, i, &mut |idx, v| *y.add(idx * k + c) += v);
+        }
+    }
+
+    /// Multi-vector variant of [`SpmvKernel::sweep_row_contribs`]:
+    /// visit every (flat panel slot, value) contribution of row i's
+    /// k-wide sweep, where the slot is `idx * k + c`. Feeds the atomics
+    /// baseline's n×k CAS table.
+    fn sweep_row_contribs_multi(
+        &self,
+        x: &[f64],
+        k: usize,
+        i: usize,
+        emit: &mut dyn FnMut(usize, f64),
+    ) {
+        let n = self.dim();
+        let mut xc = vec![0.0; n];
+        for c in 0..k {
+            for (s, panel) in xc.iter_mut().zip(x.chunks_exact(k)) {
+                *s = panel[c];
+            }
+            self.sweep_row_contribs(&xc, i, &mut |idx, v| emit(idx * k + c, v));
+        }
+    }
+
     /// Format name for reports ("csrc", "csr", "bcsr").
     fn kernel_name(&self) -> &'static str;
 
@@ -128,5 +216,25 @@ pub trait LinOp {
     /// operator cannot expose one.
     fn diagonal(&self) -> Option<Vec<f64>> {
         None
+    }
+    /// Y = A X for a row-major n×k panel (`x[j*k + c]`, `y[i*k + c]`;
+    /// `y` fully overwritten) — what the block solvers iterate on.
+    /// Default: k gathered single-vector products; operators with a
+    /// blocked kernel (CSRC, the parallel engines) override it.
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], k: usize) {
+        assert!(k >= 1);
+        let n = self.dim();
+        debug_assert!(x.len() == n * k && y.len() == n * k);
+        let mut xc = vec![0.0; n];
+        let mut yc = vec![0.0; n];
+        for c in 0..k {
+            for (s, panel) in xc.iter_mut().zip(x.chunks_exact(k)) {
+                *s = panel[c];
+            }
+            self.apply(&xc, &mut yc);
+            for (v, panel) in yc.iter().zip(y.chunks_exact_mut(k)) {
+                panel[c] = *v;
+            }
+        }
     }
 }

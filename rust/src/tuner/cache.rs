@@ -208,6 +208,21 @@ fn decision_to_json(d: &Decision) -> Json {
         ("features", features_to_json(&d.features)),
         ("trials", Json::Arr(d.trials.iter().map(trial_to_json).collect())),
         ("sweep", Json::Arr(d.sweep.iter().map(sweep_point_to_json).collect())),
+        ("block_k", Json::Num(d.block_k as f64)),
+        (
+            "block_rates",
+            Json::Arr(
+                d.block_rates
+                    .iter()
+                    .map(|&(k, rate)| {
+                        Json::obj(vec![
+                            ("k", Json::Num(k as f64)),
+                            ("mflops", Json::Num(rate)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -308,6 +323,18 @@ fn parse_decision(d: &Json) -> Option<((u64, usize), Decision)> {
             features: parse_features(d.get("features")?)?,
             trials,
             sweep,
+            // The block axis is additive: entries written before the
+            // multi-vector path serve one RHS per product.
+            block_k: d.get("block_k").and_then(Json::as_usize).unwrap_or(1),
+            block_rates: match d.get("block_rates").and_then(Json::as_arr) {
+                Some(arr) => arr
+                    .iter()
+                    .filter_map(|e| {
+                        Some((e.get("k")?.as_usize()?, e.get("mflops")?.as_f64()?))
+                    })
+                    .collect(),
+                None => Vec::new(),
+            },
         },
     ))
 }
@@ -401,6 +428,8 @@ mod tests {
                 SweepPoint { nthreads: 1, trials: Vec::new() },
                 SweepPoint { nthreads, trials },
             ],
+            block_k: 4,
+            block_rates: vec![(1, 100.0), (2, 110.0), (4, 123.5), (8, 120.0)],
         }
     }
 
@@ -607,6 +636,53 @@ mod tests {
         let d = back.get(31, 2).expect("entry still parses without the new fields");
         assert_eq!(d.provenance, Provenance::Measured, "inferred from measured=true");
         assert_eq!(d.served_mflops, 0.0);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn block_axis_round_trips_and_defaults_to_one() {
+        let path = temp_path("blockk");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+        let cache = DecisionCache::open(&path);
+        cache.put(fake_decision(41, 2));
+        let back = DecisionCache::open(&path);
+        let d = back.get(41, 2).unwrap();
+        assert_eq!(d.block_k, 4);
+        assert_eq!(d.block_rates.len(), 4);
+        assert_eq!(d.block_rates[2], (4, 123.5));
+        // The persisted file names the new fields.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"block_k\""), "{text}");
+        assert!(text.contains("\"block_rates\""), "{text}");
+        // Entries written before the block axis existed load with
+        // block_k = 1 and no rate curve — additive schema, same rule as
+        // provenance/served_mflops.
+        let pre_block = r#"{
+            "version": 2,
+            "decisions": [{
+                "fingerprint": "0000000000000029",
+                "nthreads": 2,
+                "max_threads": 2,
+                "kind": "colorful",
+                "mflops": 55.5,
+                "measured": true,
+                "tuned_s": 0.02,
+                "features": {
+                    "n": 64, "work_flops": 500, "scatter_pairs": 100,
+                    "scatter_ratio": 0.7, "bandwidth": 9, "colors": 3,
+                    "intervals": 5, "balance": 1.01, "feat_nthreads": 2
+                },
+                "trials": [{
+                    "kind": "colorful", "seconds_per_product": 1.0e-4,
+                    "mad_s": 1.0e-6, "mflops": 55.5
+                }]
+            }]
+        }"#;
+        std::fs::write(&path, pre_block).unwrap();
+        let back = DecisionCache::open(&path);
+        let d = back.get(0x29, 2).expect("entry parses without the block fields");
+        assert_eq!(d.block_k, 1);
+        assert!(d.block_rates.is_empty());
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 

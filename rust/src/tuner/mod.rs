@@ -205,6 +205,14 @@ pub struct Decision {
     /// Full (engine × nthreads) sweep surface; empty for single-p
     /// decisions and for entries loaded from a v1 cache file.
     pub sweep: Vec<SweepPoint>,
+    /// The block-size axis: how many right-hand sides the winner should
+    /// coalesce per product (`ParallelSpmv::spmv_multi`). 1 means plain
+    /// SpMV; measured decisions pick the per-vector-rate argmax over
+    /// [`BLOCK_LADDER`]. Entries from older cache files default to 1.
+    pub block_k: usize,
+    /// Per-vector Mflop/s of the winner at each trialled block size —
+    /// `(k, rate)` pairs over [`BLOCK_LADDER`]; empty when unmeasured.
+    pub block_rates: Vec<(usize, f64)>,
 }
 
 impl Decision {
@@ -390,6 +398,10 @@ fn tune_with_fingerprint(
             Some(p) => (p.kind, p.reordered, Provenance::Model),
             None => (cost_model(&features), policy == ReorderPolicy::Always, Provenance::Heuristic),
         };
+        let block_k = match (provenance, model) {
+            (Provenance::Model, Some(m)) => m.predict_block_k(&features, 8),
+            _ => heuristic_block_k(&features),
+        };
         return Decision {
             kind,
             reorder,
@@ -404,6 +416,8 @@ fn tune_with_fingerprint(
             features,
             trials: Vec::new(),
             sweep: Vec::new(),
+            block_k,
+            block_rates: Vec::new(),
         };
     }
     let work = features.work_flops;
@@ -420,7 +434,10 @@ fn tune_with_fingerprint(
             cands.iter().filter(|c| c.reordered).map(|c| c.kind).collect();
         trials.extend(measure_reordered_candidates(pk, pplan, perm, budget, work, &reord));
     }
-    let best = best_trial(&trials);
+    let best = best_trial(&trials).clone();
+    let block_rates =
+        block_axis_for_winner(kernel, plan, &rctx, best.kind, best.reordered, budget, work);
+    let block_k = best_block_k(&block_rates);
     Decision {
         kind: best.kind,
         reorder: best.reordered,
@@ -435,6 +452,8 @@ fn tune_with_fingerprint(
         features,
         trials,
         sweep: Vec::new(),
+        block_k,
+        block_rates,
     }
 }
 
@@ -541,6 +560,78 @@ fn best_trial(trials: &[TrialResult]) -> &TrialResult {
         .expect("candidates is never empty")
 }
 
+/// The block-size ladder the tuner trials on the winning engine: how
+/// many right-hand sides one blocked product coalesces. SpMV is
+/// bandwidth-bound, so reading the matrix once for k panels usually
+/// beats k serial products once k amortizes the extra x/y traffic.
+pub const BLOCK_LADDER: [usize; 4] = [1, 2, 4, 8];
+
+/// Zero-budget fallback for the block axis: large matrices are
+/// bandwidth-bound (the blocked product's win), small ones live in
+/// cache where the extra panel traffic can cost more than it saves.
+pub fn heuristic_block_k(f: &Features) -> usize {
+    if f.n >= 2048 {
+        4
+    } else {
+        1
+    }
+}
+
+/// Time the winner's k-wide product over [`BLOCK_LADDER`], returning
+/// `(k, per-vector Mflop/s)` — one blocked product computes k vectors,
+/// so the honest comparison normalizes by `work · k`.
+fn measure_block_axis(
+    engine: &mut dyn ParallelSpmv,
+    n: usize,
+    budget: &TrialBudget,
+    work: usize,
+) -> Vec<(usize, f64)> {
+    let mut rates = Vec::with_capacity(BLOCK_LADDER.len());
+    for &k in BLOCK_LADDER.iter() {
+        let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.001).sin()).collect();
+        let mut y = vec![0.0; n * k];
+        engine.spmv_multi(&x, &mut y, k); // untimed warm-up
+        let (per, _) = metrics::median_and_spread_of_runs(budget.runs, budget.products, || {
+            engine.spmv_multi(&x, &mut y, k)
+        });
+        rates.push((k, metrics::mflops(work * k, per)));
+    }
+    rates
+}
+
+/// The per-vector-rate argmax of a measured block axis (1 when empty).
+pub fn best_block_k(rates: &[(usize, f64)]) -> usize {
+    rates
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("rates are finite"))
+        .map(|&(k, _)| k)
+        .unwrap_or(1)
+}
+
+/// Build the decision's winning engine (reordered or plain) and measure
+/// its block axis. `rctx` must be the same reorder context the winner
+/// was trialled in when `best.reordered`.
+fn block_axis_for_winner(
+    kernel: &Arc<dyn SpmvKernel>,
+    plan: &Arc<SpmvPlan>,
+    rctx: &Option<(Arc<dyn SpmvKernel>, Arc<SpmvPlan>, Arc<Permutation>)>,
+    kind: EngineKind,
+    reordered: bool,
+    budget: &TrialBudget,
+    work: usize,
+) -> Vec<(usize, f64)> {
+    let n = kernel.dim();
+    if reordered {
+        if let Some((pk, pplan, perm)) = rctx {
+            let inner = build_engine(kind, pk.clone(), pplan.clone());
+            let mut engine = ReorderedEngine::new(inner, perm.clone());
+            return measure_block_axis(&mut engine, n, budget, work);
+        }
+    }
+    let mut engine = build_engine(kind, kernel.clone(), plan.clone());
+    measure_block_axis(engine.as_mut(), n, budget, work)
+}
+
 /// Two-dimensional tuning: trial every candidate engine at every thread
 /// count of `ladder`, returning the `(engine, nthreads)` argmax plus the
 /// full sweep surface. `plan_for(p)` supplies the shared plan at p —
@@ -627,6 +718,10 @@ fn sweep_with_fingerprint(
                     (kind, policy == ReorderPolicy::Always, nthreads, Provenance::Heuristic)
                 }
             };
+        let block_k = match (provenance, model) {
+            (Provenance::Model, Some(m)) => m.predict_block_k(&features, 8),
+            _ => heuristic_block_k(&features),
+        };
         return Decision {
             kind,
             reorder,
@@ -641,6 +736,8 @@ fn sweep_with_fingerprint(
             features,
             trials: Vec::new(),
             sweep: Vec::new(),
+            block_k,
+            block_rates: Vec::new(),
         };
     }
     let work = features.work_flops;
@@ -723,6 +820,28 @@ fn sweep_with_fingerprint(
         .expect("winner rung exists")
         .trials
         .clone();
+    // Block axis at the winning rung: the engine and its plan at best_p.
+    let plan_best = if best_p == max { plan_max.clone() } else { plan_for(best_p) };
+    let rctx_best = rctx.as_ref().map(|(pk, pplan_max, perm)| {
+        let pplan = if best_p == max {
+            pplan_max.clone()
+        } else {
+            Arc::new(
+                PlanBuilder::new(best_p).with_pieces(required_pieces(best_p)).build(pk.as_ref()),
+            )
+        };
+        (pk.clone(), pplan, perm.clone())
+    });
+    let block_rates = block_axis_for_winner(
+        kernel,
+        &plan_best,
+        &rctx_best,
+        best_kind,
+        best_reorder,
+        budget,
+        work,
+    );
+    let block_k = best_block_k(&block_rates);
     Decision {
         kind: best_kind,
         reorder: best_reorder,
@@ -737,6 +856,8 @@ fn sweep_with_fingerprint(
         features,
         trials,
         sweep,
+        block_k,
+        block_rates,
     }
 }
 
@@ -1003,6 +1124,17 @@ mod tests {
         assert_eq!(d.max_threads, 2);
         assert!(d.sweep.is_empty());
         assert_eq!(d.fingerprint, fingerprint(kernel.as_ref()));
+        // A measured decision carries the whole block axis: one rate
+        // per ladder width, and a winner drawn from the ladder.
+        assert_eq!(d.block_rates.len(), BLOCK_LADDER.len());
+        assert!(BLOCK_LADDER.contains(&d.block_k));
+        assert!(d.block_rates.iter().all(|&(_, r)| r > 0.0));
+        let (bk, _) = d
+            .block_rates
+            .iter()
+            .copied()
+            .fold((1, 0.0), |a, b| if b.1 > a.1 { b } else { a });
+        assert_eq!(d.block_k, bk, "block_k is the argmax of its own axis");
     }
 
     #[test]
@@ -1041,6 +1173,9 @@ mod tests {
         assert!(rung.trials.iter().any(|t| t.kind == d.kind && t.mflops == d.mflops));
         // One shared analysis per rung, no more.
         assert_eq!(plans.builds(), 2);
+        // The sweep winner is re-measured over the block ladder too.
+        assert_eq!(d.block_rates.len(), BLOCK_LADDER.len());
+        assert!(BLOCK_LADDER.contains(&d.block_k));
     }
 
     #[test]
@@ -1054,6 +1189,10 @@ mod tests {
         assert_eq!(d.kind, EngineKind::Sequential);
         assert_eq!(d.nthreads, 1);
         assert_eq!(d.max_threads, 3);
+        // Zero budget measures no block axis; the width is the
+        // heuristic's answer (small matrix → no blocking).
+        assert!(d.block_rates.is_empty());
+        assert_eq!(d.block_k, 1);
     }
 
     #[test]
@@ -1151,6 +1290,8 @@ mod tests {
                 SweepPoint { nthreads: 1, trials: vec![seq] },
                 SweepPoint { nthreads: 2, trials: rung2 },
             ],
+            block_k: 1,
+            block_rates: Vec::new(),
         });
         let (d, hit) =
             resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);
@@ -1227,6 +1368,7 @@ mod tests {
                 reordered: false,
                 nthreads: features.nthreads,
                 rung_rates: rungs.to_vec(),
+                block_rates: Vec::new(),
             })
             .collect();
         CostModel::train(&rows).expect("non-empty corpus trains")
@@ -1338,6 +1480,7 @@ mod tests {
                 reordered: true,
                 nthreads: 2,
                 rung_rates: vec![(2, 500.0)],
+                block_rates: Vec::new(),
             })
             .collect();
         let blind = CostModel::train(&reordered_rows).unwrap();
@@ -1459,6 +1602,7 @@ mod tests {
                     reordered: near,
                     nthreads: 2,
                     rung_rates: vec![(2, 500.0)],
+                    block_rates: Vec::new(),
                 }
             })
             .collect();
@@ -1704,6 +1848,8 @@ mod tests {
             features: Features::extract(kernel.as_ref(), &plan),
             trials,
             sweep: Vec::new(),
+            block_k: 1,
+            block_rates: Vec::new(),
         });
         let (d, hit) =
             resolve(&kernel, &plan, &TrialBudget::smoke(), &cache, ReorderPolicy::Never);

@@ -28,6 +28,9 @@ pub struct CorpusRow {
     /// Best measured rate per thread-ladder rung — the sweep surface
     /// when recorded, else the single measured point.
     pub rung_rates: Vec<(usize, f64)>,
+    /// Per-vector rate at each block width the winner was re-measured
+    /// at (the block-size axis); empty for pre-block-axis decisions.
+    pub block_rates: Vec<(usize, f64)>,
 }
 
 /// Flatten decisions into training rows. Only *measured* decisions
@@ -59,6 +62,7 @@ pub fn rows_from_decisions(decisions: &[Decision]) -> Vec<CorpusRow> {
                 reordered: d.reorder,
                 nthreads: d.nthreads,
                 rung_rates,
+                block_rates: d.block_rates.clone(),
             }
         })
         .collect();
@@ -153,6 +157,8 @@ mod tests {
                 SweepPoint { nthreads: 1, trials: vec![trial(EngineKind::Sequential, 90.0)] },
                 SweepPoint { nthreads: 2, trials: vec![trial(kind, 200.0)] },
             ],
+            block_k: 4,
+            block_rates: vec![(1, 200.0), (2, 230.0), (4, 260.0), (8, 250.0)],
         }
     }
 
@@ -184,8 +190,10 @@ mod tests {
         dup.swap(0, 1);
         assert_eq!(rows_from_decisions(&dup)[1].kind, EngineKind::Atomic);
         assert_eq!(rows[0].kind, EngineKind::LocalBuffers(AccumMethod::Effective));
-        // The sweep surface flattens into per-rung best rates.
+        // The sweep surface flattens into per-rung best rates, and the
+        // block axis rides along verbatim.
         assert_eq!(rows[1].rung_rates, vec![(1, 90.0), (2, 200.0)]);
+        assert_eq!(rows[1].block_rates, vec![(1, 200.0), (2, 230.0), (4, 260.0), (8, 250.0)]);
     }
 
     #[test]
@@ -239,6 +247,7 @@ mod tests {
         assert_eq!(rows.len(), 2, "v1 + v2 entries load; garbage is skipped");
         assert_eq!(rows[0].fingerprint, 2);
         assert_eq!(rows[0].rung_rates, vec![(3, 55.5)], "v1 entries carry one point");
+        assert!(rows[0].block_rates.is_empty(), "pre-block-axis entries have no k surface");
         assert_eq!(rows[1].fingerprint, 5);
         // A single file works too.
         let one = load_corpus(&dir.join("a.json")).unwrap();

@@ -98,6 +98,10 @@ pub struct CostModel {
     /// Per thread-count regressors (sorted by p): predict
     /// `ln(1 + best Mflop/s at p)` from the standardized features.
     rungs: Vec<(usize, Vec<f64>)>,
+    /// Per block-width regressors (sorted by k): predict
+    /// `ln(1 + per-vector Mflop/s at width k)` from the standardized
+    /// features. Empty when the corpus predates the block axis.
+    kblocks: Vec<(usize, Vec<f64>)>,
     /// Rows the model was trained on (provenance for reports).
     trained_rows: usize,
 }
@@ -175,7 +179,23 @@ impl CostModel {
         }
         let rungs: Vec<(usize, Vec<f64>)> =
             by_p.into_iter().map(|(p, (x, y))| (p, train::fit_ridge(&x, &y))).collect();
-        Some(CostModel { mean, std, classes, weights, rungs, trained_rows: rows.len() })
+        // Block-width regressors over whatever block axes the corpus
+        // holds. Width 1 is kept — unlike rung 1 it is a real candidate
+        // (narrow matrices lose to panel overhead), so the argmax in
+        // `predict_block_k` needs its rate on the same scale.
+        let mut by_k: BTreeMap<usize, (Vec<Vec<f64>>, Vec<f64>)> = BTreeMap::new();
+        for (row, x) in rows.iter().zip(&xs) {
+            for &(k, rate) in &row.block_rates {
+                if rate > 0.0 && rate.is_finite() {
+                    let e = by_k.entry(k).or_default();
+                    e.0.push(x.clone());
+                    e.1.push((1.0 + rate).ln());
+                }
+            }
+        }
+        let kblocks: Vec<(usize, Vec<f64>)> =
+            by_k.into_iter().map(|(k, (x, y))| (k, train::fit_ridge(&x, &y))).collect();
+        Some(CostModel { mean, std, classes, weights, rungs, kblocks, trained_rows: rows.len() })
     }
 
     /// Score every class compatible with `policy` and return the
@@ -221,12 +241,33 @@ impl CostModel {
         best.map_or(max, |(p, _)| p)
     }
 
+    /// Block-width pick for multi-RHS work: evaluate the trained
+    /// per-width rate regressors (per-vector Mflop/s) at every width
+    /// `<= max_k` and take the argmax. A corpus that predates the block
+    /// axis trains no width regressors; the pick then falls back to the
+    /// structural heuristic — the same answer a model-less zero-budget
+    /// caller gets.
+    pub fn predict_block_k(&self, f: &Features, max_k: usize) -> usize {
+        let max_k = max_k.max(1);
+        if self.kblocks.is_empty() {
+            return super::heuristic_block_k(f).min(max_k);
+        }
+        let x = standardize(&f.raw_vector(), &self.mean, &self.std);
+        self.kblocks
+            .iter()
+            .filter(|(k, _)| *k <= max_k)
+            .map(|(k, w)| (*k, train::dot(w, &x)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).expect("rates are finite"))
+            .map_or(1, |(k, _)| k)
+    }
+
     /// Short human summary for CLI/stat lines.
     pub fn summary(&self) -> String {
         format!(
-            "{} classes, {} thread rungs, trained on {} decisions",
+            "{} classes, {} thread rungs, {} block widths, trained on {} decisions",
             self.classes.len(),
             self.rungs.len(),
+            self.kblocks.len(),
             self.trained_rows
         )
     }
@@ -262,6 +303,20 @@ impl CostModel {
                         .map(|(p, w)| {
                             Json::obj(vec![
                                 ("nthreads", Json::Num(*p as f64)),
+                                ("weights", jnums(w)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "kblocks",
+                Json::Arr(
+                    self.kblocks
+                        .iter()
+                        .map(|(k, w)| {
+                            Json::obj(vec![
+                                ("k", Json::Num(*k as f64)),
                                 ("weights", jnums(w)),
                             ])
                         })
@@ -337,8 +392,27 @@ impl CostModel {
                 Some((p, w))
             })
             .collect::<Option<Vec<_>>>()?;
+        // Additive: model files written before the block axis have no
+        // `kblocks` and load with none (predict_block_k then falls back
+        // to the heuristic). A *present* but malformed array is a bad
+        // file, rejected like any other shape error.
+        let kblocks: Vec<(usize, Vec<f64>)> = match j.get("kblocks") {
+            None => Vec::new(),
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|r| {
+                    let k = r.get("k")?.as_usize()?;
+                    let w = jnums_back(r.get("weights")?)?;
+                    if w.len() != nraw + 1 || !all_finite(&w) {
+                        return None;
+                    }
+                    Some((k, w))
+                })
+                .collect::<Option<Vec<_>>>()?,
+        };
         let trained_rows = j.get("trained_rows").and_then(Json::as_usize).unwrap_or(0);
-        Some(CostModel { mean, std, classes, weights, rungs, trained_rows })
+        Some(CostModel { mean, std, classes, weights, rungs, kblocks, trained_rows })
     }
 
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
@@ -425,6 +499,12 @@ mod tests {
             reordered: false,
             nthreads: 4,
             rung_rates: vec![(1, 400.0), (2, 700.0), (4, 900.0 + i as f64)],
+            block_rates: vec![
+                (1, 500.0),
+                (2, 560.0),
+                (4, 640.0 + i as f64),
+                (8, 600.0),
+            ],
         }
     }
 
@@ -575,6 +655,45 @@ mod tests {
         assert!(m.predict_threads(&f, EngineKind::Colorful, 2) <= 2);
         // With no applicable rung the parallel pick takes the budget.
         assert_eq!(m.predict_threads(&f, EngineKind::Colorful, 1), 1);
+    }
+
+    #[test]
+    fn block_pick_follows_the_trained_width_surface() {
+        // Per-vector rates in the planted corpus peak at k = 4 ⇒ the
+        // width regressors must send the pick there, clamp to the
+        // caller's ceiling, and degrade to the heuristic when the
+        // corpus carries no block axis.
+        let m = CostModel::train(&planted_corpus()).unwrap();
+        let f = feat(5000, 0.8, 8, 8, 4);
+        assert_eq!(m.predict_block_k(&f, 8), 4);
+        assert!(m.predict_block_k(&f, 2) <= 2, "pick must respect the ceiling");
+        // A pre-block-axis corpus trains no width regressors: the model
+        // answers with the structural heuristic instead of guessing.
+        let legacy: Vec<CorpusRow> = planted_corpus()
+            .into_iter()
+            .map(|mut r| {
+                r.block_rates.clear();
+                r
+            })
+            .collect();
+        let m0 = CostModel::train(&legacy).unwrap();
+        assert_eq!(
+            m0.predict_block_k(&f, 8),
+            super::super::heuristic_block_k(&f),
+            "no width surface ⇒ heuristic fallback"
+        );
+        // And the width surface survives the JSON round-trip.
+        let back =
+            CostModel::from_json(&Json::parse(&m.to_json().dump()).unwrap()).expect("parses");
+        assert_eq!(back.predict_block_k(&f, 8), 4);
+        // A legacy model *file* (no kblocks key) loads with no width
+        // surface rather than being rejected.
+        let mut stripped = m.to_json();
+        if let Json::Obj(map) = &mut stripped {
+            map.remove("kblocks");
+        }
+        let old = CostModel::from_json(&stripped).expect("pre-block-axis files still load");
+        assert_eq!(old.predict_block_k(&f, 8), super::super::heuristic_block_k(&f));
     }
 
     #[test]

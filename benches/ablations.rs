@@ -16,10 +16,13 @@
 //! * learned cost model vs the hand-written heuristic on held-out
 //!   matrices (the cross-matrix claim behind `tuner::model`),
 //! * blocked multi-vector panels (`spmv_multi`) vs k serial products on
-//!   a FEM-like matrix (DESIGN.md §11) — separate `BENCH_spmm.json`.
+//!   a FEM-like matrix (DESIGN.md §11) — separate `BENCH_spmm.json`,
+//! * instrumentation overhead: products with the phase spans disabled,
+//!   metrics-enabled, and traced (DESIGN.md §12) — separate
+//!   `BENCH_obs.json`.
 //!
 //! Results land on stdout *and* in `results/ablations.json` (the SpMM
-//! ablation writes its own `results/BENCH_spmm.json`).
+//! and obs ablations write their own `results/BENCH_*.json`).
 
 use csrc_spmv::graph::{greedy_coloring, stride_capped_coloring, ConflictGraph, Ordering};
 use csrc_spmv::harness::smoke_suite;
@@ -515,5 +518,58 @@ fn main() {
         }
         sb.finish_json(std::path::Path::new("results/BENCH_spmm.json"))
             .expect("write spmm json report");
+    }
+
+    // --- instrumentation overhead (ISSUE 7) -------------------------------
+    // The phase spans are compiled in unconditionally and gated on two
+    // relaxed atomic loads, so a product served with instrumentation
+    // disabled must stay within 2% of an uninstrumented build. Rather
+    // than racing two timed loops (noise swamps a 2% bound in CI), the
+    // bound is measured directly: disabled `obs::phase()` costs
+    // nanoseconds, a product crosses it a counted handful of times, and
+    // their product over the product time is the worst-case overhead.
+    // Metrics-enabled and traced runs are timed alongside for the real
+    // cost of turning each dial. Own report: results/BENCH_obs.json.
+    {
+        use csrc_spmv::obs::{self, Phase};
+        let mut ob = Bench::new("obs");
+        obs::set_metrics_enabled(false);
+        let t_gate = ob.run("obs/phase-guard-disabled", || {
+            std::hint::black_box(obs::phase(Phase::Sweep));
+        });
+        let mut rng = Rng::new(41);
+        let n = 10_000usize;
+        let fem = Arc::new(Csrc::from_coo(&Coo::banded(n, 5, false, &mut rng)).unwrap());
+        let kernel: Arc<dyn SpmvKernel> = fem.clone();
+        let plan = Arc::new(PlanBuilder::all(2).build(kernel.as_ref()));
+        let kind = EngineKind::LocalBuffers(AccumMethod::Effective);
+        let mut engine = build_engine(kind, kernel, plan);
+        let xs: Vec<f64> = (0..n).map(|i| (i as f64 * 1e-3).sin()).collect();
+        let mut ys = vec![0.0; n];
+        let t_off = ob.run("obs/spmv-disabled", || engine.spmv(&xs, &mut ys));
+        // One instrumented product counts the spans a product crosses.
+        obs::set_metrics_enabled(true);
+        obs::reset_phases();
+        engine.spmv(&xs, &mut ys);
+        let spans: u64 = obs::phase_totals().iter().map(|t| t.calls).sum();
+        let t_on = ob.run("obs/spmv-metrics", || engine.spmv(&xs, &mut ys));
+        obs::start_trace();
+        let t_tr = ob.run("obs/spmv-traced", || engine.spmv(&xs, &mut ys));
+        let events = obs::stop_trace();
+        obs::set_metrics_enabled(false);
+        ob.record("obs/spans-per-product", spans as f64, "spans");
+        ob.record("obs/trace-events", events.len() as f64, "events");
+        ob.record("obs/trace-dropped", obs::trace_dropped() as f64, "begin events");
+        ob.record("obs/metrics-over-disabled", t_on / t_off, "x");
+        ob.record("obs/trace-over-disabled", t_tr / t_off, "x");
+        let overhead_pct = 100.0 * spans as f64 * t_gate / t_off;
+        ob.record("obs/disabled-overhead-pct", overhead_pct, "% of product");
+        assert!(
+            overhead_pct < 2.0,
+            "disabled instrumentation must stay within 2% of a product \
+             ({spans} spans x {t_gate:.3e}s gate vs {t_off:.3e}s product)"
+        );
+        ob.finish_json(std::path::Path::new("results/BENCH_obs.json"))
+            .expect("write obs json report");
     }
 }

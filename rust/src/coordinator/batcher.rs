@@ -46,6 +46,29 @@ pub fn form_batches(queue: &[String], policy: &BatchPolicy) -> Vec<Batch> {
     batches
 }
 
+/// Coalescing accounting for one dispatch round, reported by the
+/// dispatcher into the service's metrics registry
+/// (`csrc_batches_total`; the `coalesce` phase span covers the
+/// formation itself).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Requests drained from the queue this round.
+    pub requests: usize,
+    /// Batches they were grouped into (`<= requests`).
+    pub batches: usize,
+    /// Largest batch formed (0 when the round was empty).
+    pub widest: usize,
+}
+
+/// Summarize one round's batches for the coalescing counters.
+pub fn summarize(batches: &[Batch]) -> BatchStats {
+    BatchStats {
+        requests: batches.iter().map(|b| b.requests.len()).sum(),
+        batches: batches.len(),
+        widest: batches.iter().map(|b| b.requests.len()).max().unwrap_or(0),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,6 +99,14 @@ mod tests {
     #[test]
     fn empty_queue_no_batches() {
         assert!(form_batches(&[], &BatchPolicy::default()).is_empty());
+    }
+
+    #[test]
+    fn summarize_counts_requests_batches_and_width() {
+        let batches = form_batches(&q(&["a", "b", "a", "a", "b"]), &BatchPolicy::default());
+        let s = summarize(&batches);
+        assert_eq!(s, BatchStats { requests: 5, batches: 2, widest: 3 });
+        assert_eq!(summarize(&[]), BatchStats { requests: 0, batches: 0, widest: 0 });
     }
 
     #[test]

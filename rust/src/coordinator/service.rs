@@ -7,7 +7,11 @@
 //! resolves the backend via the [`super::router`] policy, runs the
 //! products on its cached engine, and replies through each request's
 //! channel. Metrics (counts + latency histogram) are sampled on the
-//! worker side.
+//! worker side into the service's [`MetricsRegistry`] —
+//! [`ServiceStats`] is a typed snapshot over those registry atomics,
+//! and the same registry serves Prometheus scrapes
+//! ([`crate::obs::serve_metrics`]), so the CLI endpoint and `stats()`
+//! can never disagree.
 //!
 //! Engines hold execution state (pools, buffers) and stay per-worker,
 //! but the *analysis* they run — the [`crate::plan::SpmvPlan`] — is
@@ -22,9 +26,10 @@
 //! key is queued to a background re-tuner thread — the decision cache
 //! entry is upgraded off the request path, never on it.
 
-use super::batcher::{form_batches, BatchPolicy};
+use super::batcher::{form_batches, summarize, BatchPolicy};
 use super::router::{Backend, RoutePolicy, Router};
-use crate::metrics::{self, LatencyHistogram};
+use crate::metrics;
+use crate::obs::{self, Counter, HistogramHandle, MetricsRegistry, Phase};
 use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
 use crate::plan::{PlanBuilder, PlanCache};
 use crate::reorder::{self, Permutation, ReorderedEngine};
@@ -196,29 +201,71 @@ enum RetunerMsg {
     RecordServedRate { fingerprint: u64, max_threads: usize, mflops: f64 },
 }
 
-/// Shared mutable service state.
+/// Auto-route choice log. Genuinely structured (ordered key/value
+/// pairs), so it lives behind a small mutex next to the registry's
+/// scalar atomics — nothing on the request path touches it.
 #[derive(Default)]
-struct Stats {
-    submitted: u64,
-    completed: u64,
-    failed: u64,
-    batches: u64,
-    latency: Option<LatencyHistogram>,
-    tunes: u64,
-    tune_seconds: f64,
-    engines_evicted: u64,
+struct ChoiceLog {
     auto_choices: Vec<(String, String)>,
     chosen_threads: Vec<(String, usize)>,
-    retunes: u64,
-    drift_events: u64,
-    model_hits: u64,
-    model_fallbacks: u64,
-    coalesced_products: u64,
-    coalesced_requests: u64,
-    rcm_builds: u64,
 }
 
-/// Observable service counters.
+/// Shared mutable service state: typed handles into the service's
+/// [`MetricsRegistry`]. Every scalar [`ServiceStats`] reports lives in
+/// a registry atomic, so a `stats()` snapshot and a Prometheus scrape
+/// read the *same* cells — the old `Mutex<Stats>` could not serve a
+/// scrape without cloning, and a lock-free copy of it could tear.
+struct Counters {
+    obs: Arc<MetricsRegistry>,
+    submitted: Counter,
+    completed: Counter,
+    failed: Counter,
+    batches: Counter,
+    tunes: Counter,
+    /// Nanoseconds — registry counters are integers; `stats()` converts
+    /// back to seconds.
+    tune_ns: Counter,
+    engines_evicted: Counter,
+    retunes: Counter,
+    drift_events: Counter,
+    model_hits: Counter,
+    model_fallbacks: Counter,
+    coalesced_products: Counter,
+    coalesced_requests: Counter,
+    rcm_builds: Counter,
+    choices: Mutex<ChoiceLog>,
+}
+
+impl Counters {
+    fn new(obs: Arc<MetricsRegistry>) -> Counters {
+        Counters {
+            submitted: obs.counter("csrc_requests_submitted_total"),
+            completed: obs.counter("csrc_requests_completed_total"),
+            failed: obs.counter("csrc_requests_failed_total"),
+            batches: obs.counter("csrc_batches_total"),
+            tunes: obs.counter("csrc_tunes_total"),
+            tune_ns: obs.counter("csrc_tune_ns_total"),
+            engines_evicted: obs.counter("csrc_engines_evicted_total"),
+            retunes: obs.counter("csrc_retunes_total"),
+            drift_events: obs.counter("csrc_drift_events_total"),
+            model_hits: obs.counter("csrc_model_hits_total"),
+            model_fallbacks: obs.counter("csrc_model_fallbacks_total"),
+            coalesced_products: obs.counter("csrc_coalesced_products_total"),
+            coalesced_requests: obs.counter("csrc_coalesced_requests_total"),
+            rcm_builds: obs.counter("csrc_rcm_builds_total"),
+            choices: Mutex::new(ChoiceLog::default()),
+            obs,
+        }
+    }
+
+    fn add_tune_seconds(&self, s: f64) {
+        self.tune_ns.add((s * 1e9) as u64);
+    }
+}
+
+/// Observable service counters: a typed snapshot over the service's
+/// [`MetricsRegistry`] atomics, taken in an order that preserves
+/// `completed + failed <= submitted` even while workers are mid-batch.
 #[derive(Clone, Debug)]
 pub struct ServiceStats {
     pub submitted: u64,
@@ -289,7 +336,7 @@ pub struct MatvecService {
     queue_tx: Option<Sender<Request>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    stats: Arc<Mutex<Stats>>,
+    stats: Arc<Counters>,
     route: RoutePolicy,
     tune_budget: TrialBudget,
     decisions: Arc<DecisionCache>,
@@ -310,7 +357,7 @@ impl MatvecService {
     pub fn start(cfg: ServiceConfig) -> MatvecService {
         let registry: Arc<Mutex<Registry>> = Arc::new(Mutex::new(HashMap::new()));
         let plans = Arc::new(PlanCache::new());
-        let stats = Arc::new(Mutex::new(Stats { latency: Some(LatencyHistogram::new()), ..Default::default() }));
+        let stats = Arc::new(Counters::new(Arc::new(MetricsRegistry::new())));
         let decisions = Arc::new(match &cfg.decision_cache {
             Some(path) => DecisionCache::open(path),
             None => DecisionCache::in_memory(),
@@ -353,6 +400,7 @@ impl MatvecService {
                 plans: plans.clone(),
                 route: cfg.route.clone(),
                 stats: stats.clone(),
+                latency: stats.obs.histogram("csrc_request_latency_us"),
                 resolved: resolved.clone(),
                 rcm: rcm.clone(),
                 drift: drift.clone(),
@@ -486,32 +534,29 @@ impl MatvecService {
                 .insert(cache_key.clone(), ResolvedAuto::from_decision(&d));
             // Fresh drift baseline for the new decision/generation.
             self.drift.lock().unwrap().insert(cache_key, DriftState::default());
-            let mut s = self.stats.lock().unwrap();
             if !hit {
-                s.tunes += 1;
-                s.tune_seconds += d.tuned_s;
+                self.stats.tunes.inc();
+                self.stats.add_tune_seconds(d.tuned_s);
                 // Cold-start provenance: who answered when no cached
                 // decision satisfied the caller.
                 match d.provenance {
-                    tuner::Provenance::Model => s.model_hits += 1,
-                    tuner::Provenance::Heuristic => s.model_fallbacks += 1,
+                    tuner::Provenance::Model => self.stats.model_hits.inc(),
+                    tuner::Provenance::Heuristic => self.stats.model_fallbacks.inc(),
                     tuner::Provenance::Measured => {}
                 }
             }
             // Reordered winners are visible in the choice log (the plain
             // label still parses as an EngineKind for plain winners).
-            s.auto_choices.push((key.to_string(), d.label()));
-            s.chosen_threads.push((key.to_string(), d.nthreads));
+            let mut log = self.stats.choices.lock().unwrap();
+            log.auto_choices.push((key.to_string(), d.label()));
+            log.chosen_threads.push((key.to_string(), d.nthreads));
         }
     }
 
     /// Submit y = A·x; returns the reply channel.
     pub fn submit(&self, key: &str, x: Vec<f64>) -> Receiver<Result<Vec<f64>, String>> {
         let (tx, rx) = channel();
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.submitted += 1;
-        }
+        self.stats.submitted.inc();
         let req = Request { matrix: key.to_string(), x, enqueued: Instant::now(), reply: tx };
         // If the service is shutting down the reply channel will just
         // return a disconnect error to the caller.
@@ -528,32 +573,53 @@ impl MatvecService {
             .map_err(|_| "service shut down before reply".to_string())?
     }
 
+    /// Snapshot the registry into a [`ServiceStats`]. Read order matters
+    /// for consistency without a global lock: `completed`/`failed` are
+    /// read *before* `submitted` — a request is counted submitted before
+    /// it can possibly complete, so anything finishing between the two
+    /// reads only widens `submitted` and the snapshot invariant
+    /// `completed + failed <= submitted` holds in every interleaving.
+    /// (The old `Mutex<Stats>` version held the same lock the workers
+    /// bumped counters under; this one never blocks a worker.)
     pub fn stats(&self) -> ServiceStats {
-        let s = self.stats.lock().unwrap();
-        let lat = s.latency.as_ref().unwrap();
+        let c = &self.stats;
+        let completed = c.completed.get();
+        let failed = c.failed.get();
+        let lat = c.obs.merged_histogram("csrc_request_latency_us");
+        let log = c.choices.lock().unwrap();
+        let auto_choices = log.auto_choices.clone();
+        let chosen_threads = log.chosen_threads.clone();
+        drop(log);
+        let submitted = c.submitted.get();
         ServiceStats {
-            submitted: s.submitted,
-            completed: s.completed,
-            failed: s.failed,
-            batches: s.batches,
+            submitted,
+            completed,
+            failed,
+            batches: c.batches.get(),
             mean_latency_us: lat.mean_us(),
             p99_latency_us: lat.quantile_us(0.99),
             plan_builds: self.plans.builds(),
             plan_build_seconds: self.plans.build_seconds(),
-            tunes: s.tunes,
-            tune_seconds: s.tune_seconds,
+            tunes: c.tunes.get(),
+            tune_seconds: c.tune_ns.get() as f64 / 1e9,
             decision_hits: self.decisions.hits(),
-            engines_evicted: s.engines_evicted,
-            auto_choices: s.auto_choices.clone(),
-            chosen_threads: s.chosen_threads.clone(),
-            retunes: s.retunes,
-            drift_events: s.drift_events,
-            model_hits: s.model_hits,
-            model_fallbacks: s.model_fallbacks,
-            coalesced_products: s.coalesced_products,
-            coalesced_requests: s.coalesced_requests,
-            rcm_builds: s.rcm_builds,
+            engines_evicted: c.engines_evicted.get(),
+            auto_choices,
+            chosen_threads,
+            retunes: c.retunes.get(),
+            drift_events: c.drift_events.get(),
+            model_hits: c.model_hits.get(),
+            model_fallbacks: c.model_fallbacks.get(),
+            coalesced_products: c.coalesced_products.get(),
+            coalesced_requests: c.coalesced_requests.get(),
+            rcm_builds: c.rcm_builds.get(),
         }
+    }
+
+    /// The service's metrics registry — render it directly or expose it
+    /// with [`crate::obs::serve_metrics`] (`csrc serve --metrics-addr`).
+    pub fn metrics_registry(&self) -> Arc<MetricsRegistry> {
+        self.stats.obs.clone()
     }
 
     /// Graceful shutdown: drain, stop threads.
@@ -598,7 +664,7 @@ fn dispatcher_loop(
     queue: Receiver<Request>,
     worker_txs: Vec<Sender<WorkerBatch>>,
     policy: BatchPolicy,
-    stats: Arc<Mutex<Stats>>,
+    stats: Arc<Counters>,
 ) {
     let mut next_worker = 0usize;
     loop {
@@ -621,12 +687,11 @@ fn dispatcher_loop(
             }
         }
         // Form per-matrix batches and ship them.
+        let coalesce_span = obs::phase(Phase::Coalesce);
         let keys: Vec<String> = pending.iter().map(|r| r.matrix.clone()).collect();
         let batches = form_batches(&keys, &policy);
-        {
-            let mut s = stats.lock().unwrap();
-            s.batches += batches.len() as u64;
-        }
+        drop(coalesce_span);
+        stats.batches.add(summarize(&batches).batches as u64);
         // Move requests out of `pending` into their batches (descending
         // index take keeps indices valid).
         let mut slots: Vec<Option<Request>> = pending.into_iter().map(Some).collect();
@@ -645,7 +710,11 @@ struct WorkerCtx {
     registry: Arc<Mutex<Registry>>,
     plans: Arc<PlanCache>,
     route: RoutePolicy,
-    stats: Arc<Mutex<Stats>>,
+    stats: Arc<Counters>,
+    /// This worker's slice of the `csrc_request_latency_us` summary —
+    /// recorded lock-free of other workers, merged at snapshot/scrape
+    /// time ([`MetricsRegistry::merged_histogram`]).
+    latency: HistogramHandle,
     resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
     /// Shared RCM artifacts — one permutation + permuted matrix per
     /// served `key@generation`, built by whichever worker gets there
@@ -682,11 +751,11 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
     let mut engines: HashMap<EngineKey, (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
     let mut serve_tick: u64 = 0;
     while let Ok(batch) = rx.recv() {
+        let _serve_span = obs::phase(Phase::Serve);
         let hit = ctx.registry.lock().unwrap().get(&batch.matrix).cloned();
         let Some((a, generation)) = hit else {
-            let mut s = ctx.stats.lock().unwrap();
             for r in batch.requests {
-                s.failed += 1;
+                ctx.stats.failed.inc();
                 let _ = r.reply.send(Err(format!("unknown matrix {:?}", batch.matrix)));
             }
             continue;
@@ -763,8 +832,7 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
         let mut valid: Vec<Request> = Vec::with_capacity(batch.requests.len());
         for req in batch.requests {
             if req.x.len() != a.n {
-                let mut s = ctx.stats.lock().unwrap();
-                s.failed += 1;
+                ctx.stats.failed.inc();
                 let _ = req
                     .reply
                     .send(Err(format!("x length {} != n {}", req.x.len(), a.n)));
@@ -779,6 +847,7 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                     a.spmv_into_zeroed(&req.x, &mut y);
                     finish_request(&ctx, req, y);
                 }
+                count_products(&ctx, &batch.matrix, "sequential", 1, valid.len() as u64);
             }
             Backend::Xla { artifact } => {
                 // The XLA path is exercised via examples/ and the CLI
@@ -790,6 +859,7 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                     a.spmv_into_zeroed(&req.x, &mut y);
                     finish_request(&ctx, req, y);
                 }
+                count_products(&ctx, &batch.matrix, "sequential", 1, valid.len() as u64);
             }
             Backend::NativeParallel { kind, threads, reorder } if !valid.is_empty() => {
                 let ekey =
@@ -807,7 +877,7 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                             let mut rcm = ctx.rcm.lock().unwrap();
                             rcm.entry(cache_key.clone())
                                 .or_insert_with(|| {
-                                    ctx.stats.lock().unwrap().rcm_builds += 1;
+                                    ctx.stats.rcm_builds.inc();
                                     let perm = Arc::new(reorder::rcm(a.as_ref()));
                                     let pa = Arc::new(a.permuted(&perm));
                                     (pa, perm)
@@ -842,6 +912,7 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                 let cap = auto_decision
                     .map(|r| r.block_k.max(1))
                     .unwrap_or(DEFAULT_PANEL_WIDTH);
+                let engine_label = kind.label();
                 let mut i = 0usize;
                 while i < valid.len() {
                     let g = cap.min(valid.len() - i);
@@ -852,28 +923,30 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                         slot.0.spmv(&req.x, &mut y);
                         batch_secs += t.elapsed().as_secs_f64();
                         batch_products += 1;
+                        count_products(&ctx, &batch.matrix, &engine_label, 1, 1);
                         finish_request(&ctx, req, y);
                         i += 1;
                     } else {
                         // Pack the g request vectors into one row-major
                         // panel (x[j*g + c] = request c's x[j]), run a
                         // single blocked product, unpack per request.
+                        let pack_span = obs::phase(Phase::Coalesce);
                         let mut xp = vec![0.0; a.n * g];
                         for (c, req) in valid[i..i + g].iter().enumerate() {
                             for (j, &v) in req.x.iter().enumerate() {
                                 xp[j * g + c] = v;
                             }
                         }
+                        drop(pack_span);
                         let mut yp = vec![0.0; a.n * g];
                         let t = Instant::now();
                         slot.0.spmv_multi(&xp, &mut yp, g);
                         batch_secs += t.elapsed().as_secs_f64();
                         batch_products += g;
-                        {
-                            let mut s = ctx.stats.lock().unwrap();
-                            s.coalesced_products += 1;
-                            s.coalesced_requests += g as u64;
-                        }
+                        ctx.stats.coalesced_products.inc();
+                        ctx.stats.coalesced_requests.add(g as u64);
+                        count_products(&ctx, &batch.matrix, &engine_label, g, 1);
+                        let unpack_span = obs::phase(Phase::Coalesce);
                         for (c, req) in valid[i..i + g].iter().enumerate() {
                             let mut y = vec![0.0; a.n];
                             for (j, yj) in y.iter_mut().enumerate() {
@@ -881,6 +954,7 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                             }
                             finish_request(&ctx, req, y);
                         }
+                        drop(unpack_span);
                         i += g;
                     }
                 }
@@ -912,18 +986,33 @@ fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                 evicted += 1;
             }
             if evicted > 0 {
-                ctx.stats.lock().unwrap().engines_evicted += evicted;
+                ctx.stats.engines_evicted.add(evicted);
             }
         }
     }
 }
 
 /// Reply to one served request and record its completion + latency.
+/// `completed` is bumped *before* the reply is sent, so a caller whose
+/// `call()` has returned is always visible in the next snapshot.
 fn finish_request(ctx: &WorkerCtx, req: &Request, y: Vec<f64>) {
-    let mut s = ctx.stats.lock().unwrap();
-    s.completed += 1;
-    s.latency.as_mut().unwrap().record(req.enqueued.elapsed().as_secs_f64());
+    ctx.stats.completed.inc();
+    ctx.latency.record(req.enqueued.elapsed().as_secs_f64());
     let _ = req.reply.send(Ok(y));
+}
+
+/// Bump the per-engine product family
+/// (`csrc_engine_products_total{matrix,engine,k}`) for `products`
+/// products served at panel width `k`.
+fn count_products(ctx: &WorkerCtx, matrix: &str, engine: &str, k: usize, products: u64) {
+    let width = k.to_string();
+    ctx.stats
+        .obs
+        .family_counter(
+            "csrc_engine_products_total",
+            &[("matrix", matrix), ("engine", engine), ("k", &width)],
+        )
+        .add(products);
 }
 
 /// Fold one batch's measured rate into the key's EWMA and queue a
@@ -1001,7 +1090,7 @@ fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: 
     let already_pending = st.retune_pending;
     st.retune_pending = true;
     drop(drift);
-    ctx.stats.lock().unwrap().drift_events += 1;
+    ctx.stats.drift_events.inc();
     if !already_pending {
         let _ = ctx.retune_tx.send(RetunerMsg::Retune(job));
     }
@@ -1016,7 +1105,7 @@ struct RetunerCtx {
     decisions: Arc<DecisionCache>,
     resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
     drift: Arc<Mutex<HashMap<String, DriftState>>>,
-    stats: Arc<Mutex<Stats>>,
+    stats: Arc<Counters>,
 }
 
 /// Drain re-tuner work: drift-triggered re-tunes (re-run the measured
@@ -1039,6 +1128,7 @@ fn retuner_loop(rx: Receiver<RetunerMsg>, ctx: RetunerCtx) {
         if generation != job.generation {
             continue; // replaced since the drift was observed
         }
+        let _retune_span = obs::phase(Phase::Retune);
         let kernel: Arc<dyn SpmvKernel> = a.clone();
         // A zero budget cannot produce the measured decision a drift
         // repair needs; degrade to the cheapest measuring budget.
@@ -1099,9 +1189,8 @@ fn retuner_loop(rx: Receiver<RetunerMsg>, ctx: RetunerCtx) {
             // (this is what stops the re-tune storm).
             drift.insert(job.cache_key, DriftState { calibrating: true, ..Default::default() });
         }
-        let mut s = ctx.stats.lock().unwrap();
-        s.retunes += 1;
-        s.tune_seconds += d.tuned_s;
+        ctx.stats.retunes.inc();
+        ctx.stats.add_tune_seconds(d.tuned_s);
     }
 }
 
@@ -1892,6 +1981,84 @@ mod tests {
             "capacity-1 cache must evict between matrices, evicted {}",
             s.engines_evicted
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stats_snapshot_stays_consistent_under_concurrent_serving() {
+        // Satellite (ISSUE 7): ServiceStats is now a snapshot over the
+        // registry's atomics. Snapshots taken while callers hammer the
+        // service must never tear — `completed + failed > submitted`
+        // was possible when the scrape-side copy raced the worker-side
+        // multi-field update — and must be monotone between reads.
+        let svc = MatvecService::start(ServiceConfig::default());
+        let a = mat(60, 93);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..60).map(|i| (i as f64 * 0.05).sin()).collect();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let svc = &svc;
+                let x = x.clone();
+                let stop = stop.clone();
+                scope.spawn(move || {
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        svc.call("m", x.clone()).unwrap();
+                    }
+                });
+            }
+            let mut last_completed = 0u64;
+            for _ in 0..300 {
+                let s = svc.stats();
+                assert!(
+                    s.completed + s.failed <= s.submitted,
+                    "torn snapshot: completed {} + failed {} > submitted {}",
+                    s.completed,
+                    s.failed,
+                    s.submitted
+                );
+                assert!(s.completed >= last_completed, "completed went backwards");
+                last_completed = s.completed;
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+        // Quiesced (every call() returned): the books balance exactly.
+        let s = svc.stats();
+        assert_eq!(s.completed + s.failed, s.submitted);
+        assert!(s.completed > 0);
+        assert!(s.mean_latency_us > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_registry_scrape_matches_service_stats() {
+        // Tentpole acceptance (ISSUE 7): the Prometheus rendering and
+        // stats() read the same registry cells — the scrape must show
+        // the per-engine product family and the same request counts.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.min_parallel_n = 1; // force the parallel path
+        cfg.route.threads = 2;
+        let svc = MatvecService::start(cfg);
+        let a = mat(80, 94);
+        svc.register("m", a.clone());
+        let x = vec![1.0; 80];
+        for _ in 0..3 {
+            svc.call("m", x.clone()).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 3);
+        let text = svc.metrics_registry().render_prometheus();
+        assert!(text.contains("csrc_requests_submitted_total 3"), "{text}");
+        assert!(text.contains("csrc_requests_completed_total 3"), "{text}");
+        assert!(
+            text.contains("csrc_engine_products_total{engine="),
+            "per-engine family must be exposed:\n{text}"
+        );
+        assert!(text.contains("matrix=\"m\""), "{text}");
+        assert!(text.contains("csrc_request_latency_us_count 3"), "{text}");
+        // The scrape folds in the process-wide phase totals.
+        assert!(text.contains("csrc_phase_seconds_total{phase=\"serve\"}"), "{text}");
         svc.shutdown();
     }
 

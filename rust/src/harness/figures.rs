@@ -13,6 +13,7 @@
 use super::dataset::DatasetEntry;
 use crate::graph::{greedy_coloring, ConflictGraph, Ordering as ColorOrdering};
 use crate::metrics;
+use crate::obs::{self, Phase};
 use crate::parallel::{build_engine, AccumMethod, EngineKind, ParallelSpmv};
 use crate::plan::{PlanBuilder, PlanCache};
 use crate::simulator::{
@@ -671,6 +672,62 @@ pub fn table2_headers() -> Vec<String> {
     h
 }
 
+// -------------------------------------------------------------- Obs table
+
+/// Phases an in-process product run exercises (DESIGN.md §12): plan
+/// construction once, then zero/sweep/accumulate per product.
+const OBS_PHASES: [Phase; 4] = [Phase::PlanBuild, Phase::Zero, Phase::Sweep, Phase::Accumulate];
+
+/// Beyond the paper: the instrumentation cross-check. Per matrix, reset
+/// the process-wide phase timers, build a plan and run a handful of
+/// local-buffers products, then report where the instrumented time went
+/// — absolute ms and share per phase, plus the grand total and span
+/// count. The caller owns the global metrics switch
+/// ([`obs::set_metrics_enabled`]); with instrumentation off every cell
+/// legitimately reads zero, which the shape tests rely on.
+pub fn obs_table(entries: &[DatasetEntry], p: usize) -> Vec<Vec<String>> {
+    entries
+        .iter()
+        .map(|e| {
+            obs::reset_phases();
+            let m = Arc::new(e.build_csrc());
+            let kernel: Arc<dyn SpmvKernel> = m.clone();
+            let plan = Arc::new(PlanBuilder::all(p).build(kernel.as_ref()));
+            let kind = EngineKind::LocalBuffers(AccumMethod::Effective);
+            let mut engine = build_engine(kind, kernel.clone(), plan);
+            let n = m.n;
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+            let mut y = vec![0.0; n];
+            for _ in 0..products_for(m.nnz()).min(20) {
+                engine.spmv(&x, &mut y);
+            }
+            let totals = obs::phase_totals();
+            let grand_ns: u64 = totals.iter().map(|t| t.ns).sum();
+            let spans: u64 = totals.iter().map(|t| t.calls).sum();
+            let mut cells = vec![e.name.to_string()];
+            for phase in OBS_PHASES {
+                let t = totals.iter().find(|t| t.phase == phase).expect("phase in totals");
+                cells.push(format!("{:.3}", t.ns as f64 / 1e6));
+                cells.push(format!("{:.1}", t.ns as f64 * 100.0 / grand_ns.max(1) as f64));
+            }
+            cells.push(format!("{:.3}", grand_ns as f64 / 1e6));
+            cells.push(spans.to_string());
+            cells
+        })
+        .collect()
+}
+
+pub fn obs_headers() -> Vec<String> {
+    let mut h = vec!["matrix".to_string()];
+    for phase in OBS_PHASES {
+        h.push(format!("{} ms", phase.label()));
+        h.push(format!("{} %", phase.label()));
+    }
+    h.push("total ms".into());
+    h.push("spans".into());
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -782,6 +839,24 @@ mod tests {
             for cell in &r[1..r.len() - 1] {
                 assert!(cell.parse::<f64>().unwrap() > 0.0, "{r:?}");
             }
+        }
+    }
+
+    #[test]
+    fn obs_table_header_matches_row_width() {
+        // Deliberately run WITHOUT toggling the global metrics switch:
+        // other tests share the process, and the table's shape must not
+        // depend on instrumentation being live (cells just read 0).
+        let rows = obs_table(&smoke_suite()[..2], 2);
+        assert_eq!(rows.len(), 2);
+        let headers = obs_headers();
+        for r in &rows {
+            assert_eq!(r.len(), headers.len(), "{r:?}");
+            // Every numeric cell parses; shares are percentages.
+            for cell in &r[1..r.len() - 1] {
+                assert!(cell.parse::<f64>().unwrap() >= 0.0, "{r:?}");
+            }
+            let _spans: u64 = r.last().unwrap().parse().unwrap();
         }
     }
 

@@ -55,6 +55,7 @@ pub mod gen;
 pub mod graph;
 pub mod harness;
 pub mod metrics;
+pub mod obs;
 pub mod parallel;
 pub mod partition;
 pub mod plan;

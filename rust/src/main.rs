@@ -6,7 +6,8 @@
 //! * `gen     --kind poisson3d --nx 40 --out a.mtx`  — generate a matrix
 //! * `spmv    --matrix <..> --engine effective --threads 4 --products 100`
 //! * `solve   --matrix <..> --solver cg|gmres|bicg|block-cg [--rhs K]`
-//! * `serve   --requests 64`                         — coordinator demo
+//! * `serve   --requests 64 [--metrics-addr 127.0.0.1:9464]` — coordinator demo
+//! * `trace   --matrix <..> [--rhs K] [--out trace.json]` — traced product
 //! * `xla     --artifacts artifacts`                 — run the AOT path
 //! * `tune train --corpus <dir> --model model.json`  — fit the cost model
 //! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|spmm|model|all>`
@@ -16,6 +17,7 @@ use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
 use csrc_spmv::gen;
 use csrc_spmv::harness::{self, figures, Report};
 use csrc_spmv::metrics;
+use csrc_spmv::obs;
 use csrc_spmv::parallel::{build_engine, EngineKind};
 use csrc_spmv::plan::{PlanBuilder, PlanCache};
 use csrc_spmv::reorder::ReorderPolicy;
@@ -45,6 +47,7 @@ fn main() {
         "reorder" => cmd_reorder(&args),
         "solve" => cmd_solve(&args),
         "serve" => cmd_serve(&args),
+        "trace" => cmd_trace(&args),
         "xla" => cmd_xla(&args),
         "figures" => cmd_figures(&args),
         "help" | "--help" | "-h" => {
@@ -62,7 +65,7 @@ fn usage_and_exit() -> ! {
     eprintln!(
         "csrc — parallel structurally-symmetric SpMV (CSRC), Batista et al. 2010 reproduction\n\
          \n\
-         usage: csrc <info|gen|spmv|tune|reorder|solve|serve|xla|figures> [options]\n\
+         usage: csrc <info|gen|spmv|tune|reorder|solve|serve|trace|xla|figures> [options]\n\
          \n\
          csrc info    --matrix <dataset-name|file.mtx>\n\
          csrc gen     --kind <poisson2d|poisson3d|elasticity|band|random|dense> --nx N --out a.mtx\n\
@@ -79,8 +82,13 @@ fn usage_and_exit() -> ! {
                       one blocked spmv_multi product per iteration)\n\
          csrc serve   [--requests N] [--workers W] [--engine auto] [--min-parallel-n N]\n\
                       [--sweep-threads] [--reorder never|measure|always] [--model model.json]\n\
+                      [--metrics-addr HOST:PORT] (Prometheus text endpoint; port 0 = pick free)\n\
+                      [--linger-ms T] (keep serving scrapes T ms after the demo requests)\n\
+         csrc trace   --matrix <..> [--engine <kind>] [--threads P] [--rhs K] [--out trace.json]\n\
+                      (run one traced product; prints the per-phase breakdown and writes a\n\
+                      chrome://tracing JSON dump, validated against the event schema)\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|spmm|model|all>\n\
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|spmm|model|obs|all>\n\
                       [--suite smoke|quick|full] [--out results] [--model model.json]"
     );
     std::process::exit(2);
@@ -475,6 +483,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.model = Some(std::path::PathBuf::from(p));
     }
     let svc = MatvecService::start(cfg);
+    // `--metrics-addr` exposes the service registry as a Prometheus
+    // text endpoint and turns on phase timing so scrapes carry the
+    // per-phase totals too.
+    if let Some(addr) = args.opt("metrics-addr") {
+        obs::set_metrics_enabled(true);
+        let bound = obs::serve_metrics(addr, svc.metrics_registry())?;
+        println!("metrics: http://{bound}/metrics");
+    }
     // Register a few dataset matrices once, remembering their sizes.
     let names = ["thermal", "torsion1", "poisson3Da"];
     let mut sizes = std::collections::HashMap::new();
@@ -532,7 +548,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("  {key} -> {label} @ {p} threads");
         }
     }
+    // `--linger-ms` keeps the process (and the metrics endpoint) alive
+    // so an external scraper can read the final counters — the CI obs
+    // smoke job curls the endpoint inside this window.
+    let linger = args.usize_or("linger-ms", 0);
+    if linger > 0 {
+        println!("lingering {linger} ms for scrapes");
+        std::thread::sleep(std::time::Duration::from_millis(linger as u64));
+    }
     svc.shutdown();
+    Ok(())
+}
+
+/// `csrc trace`: run one (multi-vector) product under full tracing,
+/// print the per-phase wall-clock breakdown, and write the span events
+/// as chrome://tracing JSON (load in `about:tracing` or
+/// <https://ui.perfetto.dev>), self-validated against the event schema.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let (name, m) = load_matrix(args)?;
+    let kind = EngineKind::parse(args.opt_or("engine", "effective"))
+        .ok_or_else(|| msg("bad --engine"))?;
+    let threads = args.usize_or("threads", 2);
+    let k = args.usize_or("rhs", 4).max(1);
+    let n = m.n;
+    let a = Arc::new(m);
+    let kernel: Arc<dyn SpmvKernel> = a.clone();
+    // Trace everything from analysis to the product: plan build (with
+    // any reorder stage), then the engine's zero/sweep/accumulate
+    // phases across all pool threads.
+    obs::reset_phases();
+    obs::set_metrics_enabled(true);
+    obs::start_trace();
+    let plan = Arc::new(PlanBuilder::for_kind(threads, kind).build(kernel.as_ref()));
+    let mut engine = build_engine(kind, kernel, plan);
+    let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.001).sin()).collect();
+    let mut y = vec![0.0; n * k];
+    engine.spmv_multi(&x, &mut y, k);
+    let engine_name = engine.name();
+    drop(engine); // pool threads park; every span is closed
+    let events = obs::stop_trace();
+    obs::set_metrics_enabled(false);
+    println!("{name}: engine={engine_name} threads={threads} k={k}");
+    let totals = obs::phase_totals();
+    let total_ns: u64 = totals.iter().map(|t| t.ns).sum();
+    println!("phase breakdown (plan build + one spmv_multi product):");
+    for t in &totals {
+        if t.calls == 0 {
+            continue;
+        }
+        println!(
+            "  {:<16} {:>5} spans  {:>10.3} ms  {:>5.1}%",
+            t.phase.label(),
+            t.calls,
+            t.ns as f64 / 1e6,
+            100.0 * t.ns as f64 / total_ns.max(1) as f64
+        );
+    }
+    let j = obs::trace_to_json(&events);
+    let nevents = obs::validate_trace_json(&j).map_err(msg)?;
+    let out = args.opt_or("out", "trace.json");
+    std::fs::write(Path::new(out), j.dump())?;
+    println!(
+        "trace valid: {nevents} events ({} begin events dropped at the ring cap); wrote {out}",
+        obs::trace_dropped()
+    );
     Ok(())
 }
 
@@ -742,6 +821,23 @@ fn cmd_figures(args: &Args) -> Result<()> {
             "Learned cost model — measured winner vs model/heuristic cold-start picks and regret",
             &h,
             &figures::model_table(&suite, p, &trial_budget, model.as_ref()),
+        )?;
+    }
+    if run_all || what == "obs" {
+        // Phase timing must be on for spans to attribute; the table
+        // helper itself never toggles the process-wide switch (lib
+        // tests call it with instrumentation off).
+        let p = args.usize_or("threads", 4);
+        let headers = figures::obs_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        obs::set_metrics_enabled(true);
+        let rows = figures::obs_table(&suite, p);
+        obs::set_metrics_enabled(false);
+        report.table(
+            "obs",
+            "Observability — per-phase time share of one instrumented product run per matrix",
+            &h,
+            &rows,
         )?;
     }
     println!("wrote results under {out}/");

@@ -92,8 +92,28 @@ impl LatencyHistogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Fold `other` into `self`. Every histogram shares the fixed
+    /// power-of-two bucket layout, so bucket-wise addition is exact:
+    /// merging per-worker histograms is indistinguishable (for counts,
+    /// mean, max, and every quantile) from having recorded all samples
+    /// into one histogram — the service-level distribution the
+    /// coordinator snapshots instead of averaging workers wrongly.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *mine += *theirs;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Sum of all recorded latencies in µs (summary `_sum` exposition).
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -194,6 +214,62 @@ mod tests {
         assert!(h.quantile_us(1.0) >= h.quantile_us(0.0));
         // Empty histogram still answers 0 for any q.
         assert_eq!(LatencyHistogram::new().quantile_us(0.0), 0.0);
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_recording_into_one_histogram() {
+        use crate::util::propcheck;
+        propcheck::check(25, |rng| {
+            // Random samples split across a random number of "worker"
+            // histograms, then merged, must match one histogram that
+            // recorded every sample: counts, mean, max, and quantiles.
+            let workers = 1 + rng.below(5);
+            let mut parts: Vec<LatencyHistogram> =
+                (0..workers).map(|_| LatencyHistogram::new()).collect();
+            let mut whole = LatencyHistogram::new();
+            for _ in 0..rng.below(200) {
+                // Spread samples across ~9 decades, sub-µs to seconds.
+                let seconds = 10f64.powf(rng.f64() * 9.0 - 7.0);
+                parts[rng.below(workers)].record(seconds);
+                whole.record(seconds);
+            }
+            let mut merged = LatencyHistogram::new();
+            for p in &parts {
+                merged.merge(p);
+            }
+            if merged.count() != whole.count() {
+                return Err(format!("count {} vs {}", merged.count(), whole.count()));
+            }
+            if (merged.mean_us() - whole.mean_us()).abs() > 1e-9 * whole.mean_us().max(1.0) {
+                return Err(format!("mean {} vs {}", merged.mean_us(), whole.mean_us()));
+            }
+            if merged.max_us() != whole.max_us() {
+                return Err(format!("max {} vs {}", merged.max_us(), whole.max_us()));
+            }
+            for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+                if merged.quantile_us(q) != whole.quantile_us(q) {
+                    return Err(format!(
+                        "q{q}: {} vs {}",
+                        merged.quantile_us(q),
+                        whole.quantile_us(q)
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_into_empty_copies_and_empty_merge_is_noop() {
+        let mut h = LatencyHistogram::new();
+        h.record(50e-6);
+        let mut empty = LatencyHistogram::new();
+        empty.merge(&h);
+        assert_eq!(empty.count(), 1);
+        assert_eq!(empty.max_us(), h.max_us());
+        h.merge(&LatencyHistogram::new());
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum_us(), 50.0);
     }
 
     #[test]

@@ -1,0 +1,721 @@
+//! Observability: span-based phase tracing, a process-wide phase timer,
+//! and a metrics registry with Prometheus text exposition (DESIGN.md
+//! §12).
+//!
+//! Three layers, cheapest first:
+//!
+//! 1. **Phase spans** — [`phase`] returns a guard that attributes the
+//!    enclosed wall-clock time to one of the fixed [`Phase`]s (zero,
+//!    sweep, accumulate, permute-scatter, …). When observability is off
+//!    the call is a single relaxed atomic load returning `None`, so the
+//!    instrumentation stays compiled into the hot paths at a cost the
+//!    `instrumentation-overhead` ablation bounds below 2%.
+//! 2. **Trace ring** — with [`start_trace`] active, every span also
+//!    pushes begin/end events (timestamped under one lock, so the event
+//!    sequence is globally monotone) into a bounded buffer that
+//!    serializes to the `chrome://tracing` JSON event format.
+//! 3. **[`MetricsRegistry`]** — named counters, gauges, labeled counter
+//!    families (matrix × engine × k), and mergeable latency histograms.
+//!    The coordinator keeps one registry per service; [`serve_metrics`]
+//!    exposes any registry over HTTP in the Prometheus text format,
+//!    folding in the process-wide phase totals.
+//!
+//! Phase timers and the trace ring are process-wide (engines are shared
+//! executors with no service handle); registries are per-owner so unit
+//! tests with exact counter expectations never observe each other.
+
+use crate::metrics::LatencyHistogram;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// The fixed set of instrumented phases. Trace event names and the
+/// `phase` label of `csrc_phase_seconds_total` are drawn from
+/// [`Phase::label`]; the trace validator rejects anything else.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Plan construction (partition/ranges/intervals/coloring).
+    PlanBuild = 0,
+    /// RCM analysis + permutation construction.
+    Reorder = 1,
+    /// One measured candidate inside `tuner::{tune,sweep}`.
+    TuneTrial = 2,
+    /// Zeroing y / local buffers / atomic slots before a product.
+    Zero = 3,
+    /// The symmetric row sweep itself.
+    Sweep = 4,
+    /// Buffer accumulation (local-buffers) or atomic copy-out.
+    Accumulate = 5,
+    /// Permute x in / scatter y out around a reordered engine.
+    PermuteScatter = 6,
+    /// Packing/unpacking coalesced SpMM panels in the service worker.
+    Coalesce = 7,
+    /// One worker batch, end to end.
+    Serve = 8,
+    /// One background re-tune triggered by drift.
+    Retune = 9,
+}
+
+/// Number of phases (length of [`Phase::ALL`]).
+pub const NPHASES: usize = 10;
+
+impl Phase {
+    pub const ALL: [Phase; NPHASES] = [
+        Phase::PlanBuild,
+        Phase::Reorder,
+        Phase::TuneTrial,
+        Phase::Zero,
+        Phase::Sweep,
+        Phase::Accumulate,
+        Phase::PermuteScatter,
+        Phase::Coalesce,
+        Phase::Serve,
+        Phase::Retune,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::PlanBuild => "plan_build",
+            Phase::Reorder => "reorder",
+            Phase::TuneTrial => "tune_trial",
+            Phase::Zero => "zero",
+            Phase::Sweep => "sweep",
+            Phase::Accumulate => "accumulate",
+            Phase::PermuteScatter => "permute_scatter",
+            Phase::Coalesce => "coalesce",
+            Phase::Serve => "serve",
+            Phase::Retune => "retune",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+static METRICS_ON: AtomicBool = AtomicBool::new(false);
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+
+struct PhaseCell {
+    ns: AtomicU64,
+    calls: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const PHASE_CELL_ZERO: PhaseCell = PhaseCell { ns: AtomicU64::new(0), calls: AtomicU64::new(0) };
+static PHASE_CELLS: [PhaseCell; NPHASES] = [PHASE_CELL_ZERO; NPHASES];
+
+/// Enable/disable phase timing globally. Tracing has its own switch
+/// ([`start_trace`]); either one makes [`phase`] return a live guard.
+pub fn set_metrics_enabled(on: bool) {
+    METRICS_ON.store(on, Relaxed);
+}
+
+pub fn metrics_enabled() -> bool {
+    METRICS_ON.load(Relaxed)
+}
+
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Relaxed)
+}
+
+/// Begin a phase span; the guard attributes elapsed time on drop. When
+/// both metrics and tracing are off this is one relaxed load and a
+/// branch — the near-free disabled path the overhead ablation asserts.
+#[inline]
+pub fn phase(p: Phase) -> Option<PhaseGuard> {
+    if !METRICS_ON.load(Relaxed) && !TRACE_ON.load(Relaxed) {
+        return None;
+    }
+    Some(PhaseGuard::begin(p))
+}
+
+pub struct PhaseGuard {
+    phase: Phase,
+    start: Instant,
+    traced: bool,
+}
+
+impl PhaseGuard {
+    fn begin(phase: Phase) -> Self {
+        let traced = TRACE_ON.load(Relaxed) && push_event(phase.label(), true);
+        PhaseGuard { phase, start: Instant::now(), traced }
+    }
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        let cell = &PHASE_CELLS[self.phase.index()];
+        cell.ns.fetch_add(self.start.elapsed().as_nanos() as u64, Relaxed);
+        cell.calls.fetch_add(1, Relaxed);
+        if self.traced {
+            push_event(self.phase.label(), false);
+        }
+    }
+}
+
+/// One row of the process-wide phase accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseTotal {
+    pub phase: Phase,
+    pub calls: u64,
+    pub ns: u64,
+}
+
+impl PhaseTotal {
+    pub fn seconds(&self) -> f64 {
+        self.ns as f64 / 1e9
+    }
+}
+
+/// Snapshot of the per-phase totals, in [`Phase::ALL`] order.
+pub fn phase_totals() -> Vec<PhaseTotal> {
+    Phase::ALL
+        .iter()
+        .map(|&p| {
+            let cell = &PHASE_CELLS[p.index()];
+            PhaseTotal { phase: p, calls: cell.calls.load(Relaxed), ns: cell.ns.load(Relaxed) }
+        })
+        .collect()
+}
+
+/// Zero the per-phase totals (figure harnesses isolate per-matrix runs).
+pub fn reset_phases() {
+    for cell in &PHASE_CELLS {
+        cell.ns.store(0, Relaxed);
+        cell.calls.store(0, Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace ring
+// ---------------------------------------------------------------------
+
+/// Begin events past this many buffered events are dropped (end events
+/// of already-begun spans still land, keeping the trace balanced).
+pub const TRACE_CAP: usize = 1 << 16;
+
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// A [`Phase::label`].
+    pub name: &'static str,
+    /// `true` = span begin (`"B"`), `false` = span end (`"E"`).
+    pub begin: bool,
+    /// Microseconds since [`start_trace`].
+    pub ts_us: f64,
+    /// Small dense thread id (assigned on first event per thread).
+    pub tid: u32,
+}
+
+struct TraceBuf {
+    epoch: Option<Instant>,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+static TRACE_BUF: Mutex<TraceBuf> =
+    Mutex::new(TraceBuf { epoch: None, events: Vec::new(), dropped: 0 });
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TID: std::cell::Cell<u32> = std::cell::Cell::new(0);
+}
+
+fn current_tid() -> u32 {
+    TID.with(|c| {
+        let mut t = c.get();
+        if t == 0 {
+            t = NEXT_TID.fetch_add(1, Relaxed);
+            c.set(t);
+        }
+        t
+    })
+}
+
+fn push_event(name: &'static str, begin: bool) -> bool {
+    let mut buf = TRACE_BUF.lock().unwrap();
+    let ts_us = match buf.epoch {
+        Some(e) => e.elapsed().as_secs_f64() * 1e6,
+        None => return false,
+    };
+    if begin && buf.events.len() >= TRACE_CAP {
+        buf.dropped += 1;
+        return false;
+    }
+    buf.events.push(TraceEvent { name, begin, ts_us, tid: current_tid() });
+    true
+}
+
+/// Start recording trace events (clears any previous trace). Spans that
+/// begin while tracing is active push begin/end pairs; stop with
+/// [`stop_trace`] only after the traced work has fully completed, or
+/// the in-flight spans' end events are lost and the trace unbalances.
+pub fn start_trace() {
+    let mut buf = TRACE_BUF.lock().unwrap();
+    buf.epoch = Some(Instant::now());
+    buf.events.clear();
+    buf.dropped = 0;
+    TRACE_ON.store(true, Relaxed);
+}
+
+/// Stop tracing and drain the recorded events.
+pub fn stop_trace() -> Vec<TraceEvent> {
+    TRACE_ON.store(false, Relaxed);
+    let mut buf = TRACE_BUF.lock().unwrap();
+    buf.epoch = None;
+    std::mem::take(&mut buf.events)
+}
+
+/// Begin events dropped by the ring cap during the last/current trace.
+pub fn trace_dropped() -> u64 {
+    TRACE_BUF.lock().unwrap().dropped
+}
+
+/// Serialize events to the `chrome://tracing` JSON event format
+/// (`about:tracing` → Load, or https://ui.perfetto.dev).
+pub fn trace_to_json(events: &[TraceEvent]) -> Json {
+    let list = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.to_string())),
+                ("cat", Json::Str("csrc".to_string())),
+                ("ph", Json::Str(if e.begin { "B" } else { "E" }.to_string())),
+                ("ts", Json::Num(e.ts_us)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(list)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Validate a serialized trace against the event schema: a
+/// `traceEvents` array whose events carry name/ph/ts/pid/tid, names
+/// drawn from [`Phase::ALL`], globally monotone timestamps (they are
+/// assigned under one lock), and balanced, properly nested begin/end
+/// per thread. Returns the number of events.
+pub fn validate_trace_json(j: &Json) -> Result<usize, String> {
+    let events = j
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    let allowed: Vec<&str> = Phase::ALL.iter().map(|p| p.label()).collect();
+    let mut stacks: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    let mut last_ts = f64::NEG_INFINITY;
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing name"))?;
+        if !allowed.contains(&name) {
+            return Err(format!("event {i}: unknown phase name {name:?}"));
+        }
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let ts = ev
+            .get("ts")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("event {i}: missing ts"))?;
+        let tid = ev
+            .get("tid")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("event {i}: missing tid"))? as u64;
+        if ev.get("pid").and_then(|v| v.as_f64()).is_none() {
+            return Err(format!("event {i}: missing pid"));
+        }
+        if ts < last_ts {
+            return Err(format!("event {i}: timestamp {ts} < {last_ts} (not monotone)"));
+        }
+        last_ts = ts;
+        let stack = stacks.entry(tid).or_default();
+        match ph {
+            "B" => stack.push(name.to_string()),
+            "E" => match stack.pop() {
+                Some(open) if open == name => {}
+                Some(open) => return Err(format!("event {i}: end {name:?} closes {open:?}")),
+                None => return Err(format!("event {i}: end {name:?} with no open span")),
+            },
+            other => return Err(format!("event {i}: ph must be B or E, got {other:?}")),
+        }
+    }
+    for (tid, stack) in &stacks {
+        if !stack.is_empty() {
+            return Err(format!("tid {tid}: {} unclosed span(s) {stack:?}", stack.len()));
+        }
+    }
+    Ok(events.len())
+}
+
+// ---------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------
+
+/// Monotone counter handle; clones share one atomic, so hot paths keep
+/// a clone and bump lock-free.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// f64 gauge handle (bits in one atomic; `add` is a CAS loop).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Relaxed);
+    }
+
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Relaxed, Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Relaxed))
+    }
+}
+
+/// Handle to one registered latency histogram (e.g. one worker's).
+#[derive(Clone)]
+pub struct HistogramHandle(Arc<Mutex<LatencyHistogram>>);
+
+impl HistogramHandle {
+    pub fn record(&self, seconds: f64) {
+        self.0.lock().unwrap().record(seconds);
+    }
+
+    pub fn snapshot(&self) -> LatencyHistogram {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// Named counters/gauges, labeled counter families, and mergeable
+/// latency histograms. One registry per owner (the coordinator creates
+/// one per `MatvecService`); rendering folds in the process-wide phase
+/// totals so a single scrape shows both layers.
+pub struct MetricsRegistry {
+    counters: Mutex<Vec<(String, Arc<AtomicU64>)>>,
+    gauges: Mutex<Vec<(String, Arc<AtomicU64>)>>,
+    families: Mutex<BTreeMap<String, BTreeMap<String, Arc<AtomicU64>>>>,
+    histograms: Mutex<Vec<(String, Arc<Mutex<LatencyHistogram>>)>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry {
+            counters: Mutex::new(Vec::new()),
+            gauges: Mutex::new(Vec::new()),
+            families: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Get or create the counter `name`; handles share one atomic.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut v = self.counters.lock().unwrap();
+        if let Some((_, a)) = v.iter().find(|(n, _)| n == name) {
+            return Counter(a.clone());
+        }
+        let a = Arc::new(AtomicU64::new(0));
+        v.push((name.to_string(), a.clone()));
+        Counter(a)
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut v = self.gauges.lock().unwrap();
+        if let Some((_, a)) = v.iter().find(|(n, _)| n == name) {
+            return Gauge(a.clone());
+        }
+        let a = Arc::new(AtomicU64::new(0));
+        v.push((name.to_string(), a.clone()));
+        Gauge(a)
+    }
+
+    /// Get or create one series of a labeled counter family, e.g.
+    /// `csrc_engine_products_total{matrix=…,engine=…,k=…}`. Labels are
+    /// sorted by key so the same set always maps to the same series.
+    pub fn family_counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let mut sorted: Vec<(&str, &str)> = labels.to_vec();
+        sorted.sort();
+        let blob = sorted
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+            .collect::<Vec<_>>()
+            .join(",");
+        let mut fam = self.families.lock().unwrap();
+        let series = fam.entry(name.to_string()).or_default();
+        Counter(series.entry(blob).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone())
+    }
+
+    /// Register a **new** histogram under `name`. Several handles may
+    /// share a name (one per worker); [`Self::merged_histogram`] folds
+    /// them into one distribution at snapshot time.
+    pub fn histogram(&self, name: &str) -> HistogramHandle {
+        let h = Arc::new(Mutex::new(LatencyHistogram::new()));
+        self.histograms.lock().unwrap().push((name.to_string(), h.clone()));
+        HistogramHandle(h)
+    }
+
+    /// Merge every histogram registered under `name`
+    /// ([`LatencyHistogram::merge`] is exact: shared bucket layout).
+    pub fn merged_histogram(&self, name: &str) -> LatencyHistogram {
+        let mut out = LatencyHistogram::new();
+        for (n, h) in self.histograms.lock().unwrap().iter() {
+            if n == name {
+                out.merge(&h.lock().unwrap());
+            }
+        }
+        out
+    }
+
+    /// Render the Prometheus text exposition format (version 0.0.4):
+    /// counters, labeled families, gauges, histograms (as summaries
+    /// with q50/q90/q99 + `_sum`/`_count`), then the process-wide phase
+    /// totals as `csrc_phase_seconds_total{phase=…}` / `_calls_total`.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, a) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", a.load(Relaxed)));
+        }
+        for (name, series) in self.families.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            for (labels, a) in series {
+                out.push_str(&format!("{name}{{{labels}}} {}\n", a.load(Relaxed)));
+            }
+        }
+        for (name, a) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {}\n", f64::from_bits(a.load(Relaxed))));
+        }
+        let mut names: Vec<String> = Vec::new();
+        for (n, _) in self.histograms.lock().unwrap().iter() {
+            if !names.contains(n) {
+                names.push(n.clone());
+            }
+        }
+        for name in &names {
+            let h = self.merged_histogram(name);
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            for q in [0.5, 0.9, 0.99] {
+                out.push_str(&format!("{name}{{quantile=\"{q}\"}} {}\n", h.quantile_us(q)));
+            }
+            out.push_str(&format!("{name}_sum {}\n", h.sum_us()));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+        }
+        out.push_str("# TYPE csrc_phase_seconds_total counter\n");
+        for t in phase_totals() {
+            let label = t.phase.label();
+            out.push_str(&format!("csrc_phase_seconds_total{{phase=\"{label}\"}} "));
+            out.push_str(&format!("{}\n", t.seconds()));
+        }
+        out.push_str("# TYPE csrc_phase_calls_total counter\n");
+        for t in phase_totals() {
+            let label = t.phase.label();
+            out.push_str(&format!("csrc_phase_calls_total{{phase=\"{label}\"}} {}\n", t.calls));
+        }
+        out
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+// ---------------------------------------------------------------------
+// Exposition endpoint
+// ---------------------------------------------------------------------
+
+/// Serve `GET /metrics` scrapes of `registry` on `addr` from a detached
+/// thread; returns the bound address (port 0 picks a free one). The
+/// listener lives for the process — it is an exposition endpoint, not a
+/// general web server.
+pub fn serve_metrics(addr: &str, registry: Arc<MetricsRegistry>) -> std::io::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new().name("csrc-metrics".into()).spawn(move || {
+        for mut stream in listener.incoming().flatten() {
+            let _ = answer_scrape(&mut stream, &registry);
+        }
+    })?;
+    Ok(local)
+}
+
+fn answer_scrape(s: &mut TcpStream, registry: &MetricsRegistry) -> std::io::Result<()> {
+    // Best-effort read of the request head; every path gets the same
+    // body, so a short or slow request cannot wedge the thread.
+    let _ = s.set_read_timeout(Some(std::time::Duration::from_millis(500)));
+    let mut head = [0u8; 1024];
+    let _ = s.read(&mut head);
+    let body = registry.render_prometheus();
+    let mut resp = String::new();
+    resp.push_str("HTTP/1.1 200 OK\r\n");
+    resp.push_str("Content-Type: text/plain; version=0.0.4\r\n");
+    resp.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    resp.push_str("Connection: close\r\n\r\n");
+    resp.push_str(&body);
+    s.write_all(resp.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that toggle the process-wide switches serialize here so
+    /// the lib test binary's parallel runner can't interleave them.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_phase_returns_none() {
+        let _g = serial();
+        set_metrics_enabled(false);
+        assert!(!trace_enabled());
+        assert!(phase(Phase::Sweep).is_none());
+    }
+
+    #[test]
+    fn phase_guard_accumulates_time_and_calls() {
+        let _g = serial();
+        set_metrics_enabled(true);
+        let before = phase_totals()[Phase::Accumulate.index()];
+        {
+            let _p = phase(Phase::Accumulate);
+            std::hint::black_box(0u64);
+        }
+        let after = phase_totals()[Phase::Accumulate.index()];
+        set_metrics_enabled(false);
+        assert!(after.calls >= before.calls + 1);
+        assert!(after.ns >= before.ns);
+    }
+
+    #[test]
+    fn registry_counters_and_families_render() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("csrc_requests_submitted_total");
+        c.add(3);
+        // Same name → same atomic.
+        assert_eq!(reg.counter("csrc_requests_submitted_total").get(), 3);
+        let f = reg.family_counter(
+            "csrc_engine_products_total",
+            &[("matrix", "thermal"), ("engine", "atomic"), ("k", "4")],
+        );
+        f.inc();
+        // Label order must not mint a second series.
+        let f2 = reg.family_counter(
+            "csrc_engine_products_total",
+            &[("k", "4"), ("engine", "atomic"), ("matrix", "thermal")],
+        );
+        assert_eq!(f2.get(), 1);
+        let g = reg.gauge("csrc_served_mflops");
+        g.set(123.5);
+        g.add(0.5);
+        assert_eq!(g.get(), 124.0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("csrc_requests_submitted_total 3"));
+        assert!(text.contains("# TYPE csrc_engine_products_total counter"));
+        assert!(text
+            .contains("csrc_engine_products_total{engine=\"atomic\",k=\"4\",matrix=\"thermal\"} 1"));
+        assert!(text.contains("csrc_served_mflops 124"));
+        assert!(text.contains("csrc_phase_seconds_total{phase=\"sweep\"}"));
+    }
+
+    #[test]
+    fn registry_histograms_merge_across_handles() {
+        let reg = MetricsRegistry::new();
+        let a = reg.histogram("csrc_request_latency_us");
+        let b = reg.histogram("csrc_request_latency_us");
+        a.record(100e-6);
+        b.record(200e-6);
+        let merged = reg.merged_histogram("csrc_request_latency_us");
+        assert_eq!(merged.count(), 2);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE csrc_request_latency_us summary"));
+        assert!(text.contains("csrc_request_latency_us_count 2"));
+    }
+
+    #[test]
+    fn validator_accepts_wellformed_and_rejects_malformed() {
+        let ok = r#"{"traceEvents":[
+            {"name":"serve","cat":"csrc","ph":"B","ts":1.0,"pid":1,"tid":1},
+            {"name":"sweep","cat":"csrc","ph":"B","ts":2.0,"pid":1,"tid":1},
+            {"name":"sweep","cat":"csrc","ph":"E","ts":3.0,"pid":1,"tid":1},
+            {"name":"serve","cat":"csrc","ph":"E","ts":4.0,"pid":1,"tid":1}
+        ]}"#;
+        assert_eq!(validate_trace_json(&Json::parse(ok).unwrap()).unwrap(), 4);
+        // Unknown phase name.
+        let bad_name = ok.replace("\"sweep\"", "\"mystery\"");
+        assert!(validate_trace_json(&Json::parse(&bad_name).unwrap()).is_err());
+        // Non-monotone timestamps.
+        let bad_ts = ok.replace("\"ts\":3.0", "\"ts\":0.5");
+        assert!(validate_trace_json(&Json::parse(&bad_ts).unwrap()).is_err());
+        // Unbalanced: drop the last end event.
+        let unbalanced = r#"{"traceEvents":[
+            {"name":"serve","cat":"csrc","ph":"B","ts":1.0,"pid":1,"tid":1}
+        ]}"#;
+        assert!(validate_trace_json(&Json::parse(unbalanced).unwrap()).is_err());
+        // Interleaved (not nested) spans on one thread.
+        let crossed = r#"{"traceEvents":[
+            {"name":"serve","cat":"csrc","ph":"B","ts":1.0,"pid":1,"tid":1},
+            {"name":"sweep","cat":"csrc","ph":"B","ts":2.0,"pid":1,"tid":1},
+            {"name":"serve","cat":"csrc","ph":"E","ts":3.0,"pid":1,"tid":1},
+            {"name":"sweep","cat":"csrc","ph":"E","ts":4.0,"pid":1,"tid":1}
+        ]}"#;
+        assert!(validate_trace_json(&Json::parse(crossed).unwrap()).is_err());
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_scrapes() {
+        let reg = Arc::new(MetricsRegistry::new());
+        reg.counter("csrc_requests_submitted_total").add(7);
+        let addr = serve_metrics("127.0.0.1:0", reg).expect("bind loopback");
+        let mut conn = TcpStream::connect(addr).expect("connect");
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"));
+        assert!(resp.contains("text/plain"));
+        assert!(resp.contains("csrc_requests_submitted_total 7"));
+    }
+}

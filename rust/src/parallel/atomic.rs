@@ -7,6 +7,7 @@
 
 use super::pool::ThreadPool;
 use super::ParallelSpmv;
+use crate::obs::{self, Phase};
 use crate::plan::{PlanBuilder, SpmvPlan};
 use crate::sparse::SpmvKernel;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -56,6 +57,7 @@ impl ParallelSpmv for AtomicEngine {
         let n = self.plan.n;
         let p = self.pool.nthreads();
         if p == 1 {
+            let _sweep_span = obs::phase(Phase::Sweep);
             self.kernel.sweep_full(x, y);
             return;
         }
@@ -64,16 +66,20 @@ impl ParallelSpmv for AtomicEngine {
         let bits = &self.bits;
         let barrier = self.pool.barrier();
         self.pool.run(move |t| {
+            let zero_span = obs::phase(Phase::Zero);
             let (lo, hi) = (t * n / p, (t + 1) * n / p);
             for slot in &bits[lo..hi] {
                 slot.store(0, Ordering::Relaxed);
             }
+            drop(zero_span);
             barrier.wait();
+            let _sweep_span = obs::phase(Phase::Sweep);
             let block = part.block(t);
             for i in block {
                 kernel.sweep_row_contribs(x, i, &mut |idx, v| atomic_add(&bits[idx], v));
             }
         });
+        let _accum_span = obs::phase(Phase::Accumulate);
         for (dst, slot) in y.iter_mut().zip(&self.bits) {
             *dst = f64::from_bits(slot.load(Ordering::Relaxed));
         }
@@ -92,6 +98,7 @@ impl ParallelSpmv for AtomicEngine {
         debug_assert_eq!(y.len(), n * k);
         let p = self.pool.nthreads();
         if p == 1 {
+            let _sweep_span = obs::phase(Phase::Sweep);
             self.kernel.sweep_full_multi(x, y, k);
             return;
         }
@@ -104,17 +111,21 @@ impl ParallelSpmv for AtomicEngine {
         let bits = &self.bits[..n * k];
         let barrier = self.pool.barrier();
         self.pool.run(move |t| {
+            let zero_span = obs::phase(Phase::Zero);
             let (lo, hi) = (t * n / p, (t + 1) * n / p);
             for slot in &bits[lo * k..hi * k] {
                 slot.store(0, Ordering::Relaxed);
             }
+            drop(zero_span);
             barrier.wait();
+            let _sweep_span = obs::phase(Phase::Sweep);
             let block = part.block(t);
             for i in block {
                 kernel
                     .sweep_row_contribs_multi(x, k, i, &mut |idx, v| atomic_add(&bits[idx], v));
             }
         });
+        let _accum_span = obs::phase(Phase::Accumulate);
         for (dst, slot) in y.iter_mut().zip(bits) {
             *dst = f64::from_bits(slot.load(Ordering::Relaxed));
         }

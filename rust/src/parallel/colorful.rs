@@ -14,6 +14,7 @@ use super::pool::ThreadPool;
 use super::share::SyncSlice;
 use super::ParallelSpmv;
 use crate::graph::ColorClasses;
+use crate::obs::{self, Phase};
 use crate::plan::{PlanBuilder, SpmvPlan};
 use crate::sparse::SpmvKernel;
 use std::sync::Arc;
@@ -66,6 +67,7 @@ impl ParallelSpmv for ColorfulEngine {
         debug_assert_eq!(y.len(), n);
         let p = self.pool.nthreads();
         if p == 1 {
+            let _sweep_span = obs::phase(Phase::Sweep);
             self.kernel.sweep_full(x, y);
             return;
         }
@@ -77,10 +79,13 @@ impl ParallelSpmv for ColorfulEngine {
 
         self.pool.run(move |t| {
             // Phase 0: zero y cooperatively (disjoint chunks).
+            let zero_span = obs::phase(Phase::Zero);
             let (lo, hi) = (t * n / p, (t + 1) * n / p);
             // SAFETY: disjoint per-thread chunks.
             unsafe { yv.slice_mut(lo..hi).fill(0.0) };
+            drop(zero_span);
             barrier.wait();
+            let _sweep_span = obs::phase(Phase::Sweep);
             // One color at a time; rows inside a class are conflict-free
             // — by the coloring invariant no other thread's row in this
             // phase writes any y position row i's sweep writes — so the
@@ -115,6 +120,7 @@ impl ParallelSpmv for ColorfulEngine {
         debug_assert_eq!(y.len(), n * k);
         let p = self.pool.nthreads();
         if p == 1 {
+            let _sweep_span = obs::phase(Phase::Sweep);
             self.kernel.sweep_full_multi(x, y, k);
             return;
         }
@@ -125,10 +131,13 @@ impl ParallelSpmv for ColorfulEngine {
         let yv = SyncSlice::new(y);
 
         self.pool.run(move |t| {
+            let zero_span = obs::phase(Phase::Zero);
             let (lo, hi) = (t * n / p, (t + 1) * n / p);
             // SAFETY: disjoint per-thread chunks (scaled by k).
             unsafe { yv.slice_mut(lo * k..hi * k).fill(0.0) };
+            drop(zero_span);
             barrier.wait();
+            let _sweep_span = obs::phase(Phase::Sweep);
             for (class, share) in colors.classes.iter().zip(shares) {
                 let (s, e) = share[t];
                 for &row in &class[s..e] {

@@ -32,6 +32,7 @@
 use super::pool::ThreadPool;
 use super::share::{SharedBuffers, SyncSlice};
 use super::ParallelSpmv;
+use crate::obs::{self, Phase};
 use crate::plan::{PlanBuilder, SpmvPlan};
 use crate::sparse::SpmvKernel;
 use std::ops::Range;
@@ -251,6 +252,7 @@ impl ParallelSpmv for LocalBuffersEngine {
 
         // Single-thread shortcut (§4.2): use the global vector directly.
         if p == 1 {
+            let _sweep_span = obs::phase(Phase::Sweep);
             self.kernel.sweep_full(x, y);
             self.last_overhead_ns = 0;
             return;
@@ -276,6 +278,7 @@ impl ParallelSpmv for LocalBuffersEngine {
             let mut overhead_ns = 0u64;
 
             // ---- init step -------------------------------------------
+            let zero_span = obs::phase(Phase::Zero);
             let t0 = Instant::now();
             match method {
                 AccumMethod::AllInOne => {
@@ -330,9 +333,11 @@ impl ParallelSpmv for LocalBuffersEngine {
                 }
             }
             overhead_ns += t0.elapsed().as_nanos() as u64;
+            drop(zero_span);
             barrier.wait();
 
             // ---- compute step: private windowed buffer, no races ------
+            let sweep_span = obs::phase(Phase::Sweep);
             let block = part.block(t);
             // SAFETY: buffer t is written by thread t only in this phase.
             let buf = unsafe { bufs.get_mut(t) };
@@ -340,9 +345,11 @@ impl ParallelSpmv for LocalBuffersEngine {
             // `buf[j - win[t].start]`, and every write of the block sits
             // in [eff[t].start, block.end) ⊆ win[t] by plan invariant.
             kernel.sweep_rows_into(x, block.start, block.end, buf, win[t].start);
+            drop(sweep_span);
             barrier.wait();
 
             // ---- accumulation step ------------------------------------
+            let accum_span = obs::phase(Phase::Accumulate);
             let t1 = Instant::now();
             match method {
                 AccumMethod::AllInOne => {
@@ -426,6 +433,7 @@ impl ParallelSpmv for LocalBuffersEngine {
                 }
             }
             overhead_ns += t1.elapsed().as_nanos() as u64;
+            drop(accum_span);
             ov.fetch_max(overhead_ns, Ordering::Relaxed);
         });
 
@@ -447,6 +455,7 @@ impl ParallelSpmv for LocalBuffersEngine {
         debug_assert_eq!(y.len(), n * k);
 
         if p == 1 {
+            let _sweep_span = obs::phase(Phase::Sweep);
             self.kernel.sweep_full_multi(x, y, k);
             self.last_overhead_ns = 0;
             return;
@@ -479,6 +488,7 @@ impl ParallelSpmv for LocalBuffersEngine {
             let mut overhead_ns = 0u64;
 
             // ---- init step: same splits as spmv(), scaled by k --------
+            let zero_span = obs::phase(Phase::Zero);
             let t0 = Instant::now();
             match method {
                 AccumMethod::AllInOne => {
@@ -528,16 +538,20 @@ impl ParallelSpmv for LocalBuffersEngine {
                 }
             }
             overhead_ns += t0.elapsed().as_nanos() as u64;
+            drop(zero_span);
             barrier.wait();
 
             // ---- compute step: private k-wide windowed buffer ---------
+            let sweep_span = obs::phase(Phase::Sweep);
             let block = part.block(t);
             // SAFETY: buffer t is written by thread t only in this phase.
             let buf = unsafe { bufs.get_mut(t) };
             kernel.sweep_rows_into_multi(x, k, block.start, block.end, buf, win[t].start);
+            drop(sweep_span);
             barrier.wait();
 
             // ---- accumulation step: row windows scaled by k -----------
+            let accum_span = obs::phase(Phase::Accumulate);
             let t1 = Instant::now();
             match method {
                 AccumMethod::AllInOne => {
@@ -616,6 +630,7 @@ impl ParallelSpmv for LocalBuffersEngine {
                 }
             }
             overhead_ns += t1.elapsed().as_nanos() as u64;
+            drop(accum_span);
             ov.fetch_max(overhead_ns, Ordering::Relaxed);
         });
 

@@ -332,6 +332,7 @@ impl PlanBuilder {
     }
 
     pub fn build(&self, kernel: &dyn SpmvKernel) -> SpmvPlan {
+        let _span = crate::obs::phase(crate::obs::Phase::PlanBuild);
         let t_all = Instant::now();
         let p = self.nthreads;
         let n = kernel.dim();

@@ -279,6 +279,7 @@ fn pseudo_peripheral(
 /// else — a scatter-free kernel maps to the full reversal, not the
 /// identity).
 pub fn rcm(a: &dyn SpmvKernel) -> Permutation {
+    let _span = crate::obs::phase(crate::obs::Phase::Reorder);
     let n = a.dim();
     let (xadj, adj) = symmetric_adjacency(a);
     let mut visited = vec![false; n];
@@ -483,8 +484,11 @@ impl ReorderedEngine {
 impl ParallelSpmv for ReorderedEngine {
     fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
         let n = self.perm.len();
+        let gather = crate::obs::phase(crate::obs::Phase::PermuteScatter);
         self.perm.apply(x, &mut self.px[..n]);
+        drop(gather);
         self.inner.spmv(&self.px[..n], &mut self.py[..n]);
+        let _scatter = crate::obs::phase(crate::obs::Phase::PermuteScatter);
         self.perm.apply_inverse(&self.py[..n], y);
     }
 
@@ -497,8 +501,11 @@ impl ParallelSpmv for ReorderedEngine {
         self.ensure_scratch(n * k);
         // Split borrows: perm/inner are disjoint from px/py.
         let perm = self.perm.clone();
+        let gather = crate::obs::phase(crate::obs::Phase::PermuteScatter);
         perm.apply_multi(x, &mut self.px[..n * k], k);
+        drop(gather);
         self.inner.spmv_multi(&self.px[..n * k], &mut self.py[..n * k], k);
+        let _scatter = crate::obs::phase(crate::obs::Phase::PermuteScatter);
         perm.apply_inverse_multi(&self.py[..n * k], y, k);
     }
 

@@ -477,9 +477,11 @@ fn measure_candidates(
     for &kind in kinds {
         let mut engine = build_engine(kind, kernel.clone(), plan.clone());
         engine.spmv(&x, &mut y);
+        let trial_span = crate::obs::phase(crate::obs::Phase::TuneTrial);
         let (per, mad) = metrics::median_and_spread_of_runs(budget.runs, budget.products, || {
             engine.spmv(&x, &mut y)
         });
+        drop(trial_span);
         trials.push(TrialResult {
             kind,
             reordered: false,
@@ -539,9 +541,11 @@ fn measure_reordered_candidates(
         let inner = build_engine(kind, permuted.clone(), plan.clone());
         let mut engine = ReorderedEngine::new(inner, perm.clone());
         engine.spmv(&x, &mut y); // untimed warm-up, as for plain trials
+        let trial_span = crate::obs::phase(crate::obs::Phase::TuneTrial);
         let (per, mad) = metrics::median_and_spread_of_runs(budget.runs, budget.products, || {
             engine.spmv(&x, &mut y)
         });
+        drop(trial_span);
         trials.push(TrialResult {
             kind,
             reordered: true,
@@ -591,9 +595,11 @@ fn measure_block_axis(
         let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.001).sin()).collect();
         let mut y = vec![0.0; n * k];
         engine.spmv_multi(&x, &mut y, k); // untimed warm-up
+        let trial_span = crate::obs::phase(crate::obs::Phase::TuneTrial);
         let (per, _) = metrics::median_and_spread_of_runs(budget.runs, budget.products, || {
             engine.spmv_multi(&x, &mut y, k)
         });
+        drop(trial_span);
         rates.push((k, metrics::mflops(work * k, per)));
     }
     rates

@@ -1,0 +1,92 @@
+//! Trace schema integration test (own binary: tracing flips the
+//! process-wide `TRACE_ON` switch, so this must not share a process
+//! with the library's exact-count tests).
+//!
+//! One traced plan-build + `spmv_multi` product, then the contract the
+//! `csrc trace` CLI and CI rely on: events serialize to the
+//! chrome://tracing format, survive a parse round-trip, carry only the
+//! fixed phase names, keep globally monotone timestamps, and every
+//! begin has a balancing, properly nested end.
+
+use csrc_spmv::obs::{self, Phase};
+use csrc_spmv::parallel::{build_engine, AccumMethod, EngineKind};
+use csrc_spmv::plan::PlanBuilder;
+use csrc_spmv::sparse::{Coo, Csrc, SpmvKernel};
+use csrc_spmv::util::json::Json;
+use csrc_spmv::util::Rng;
+use std::sync::Arc;
+
+#[test]
+fn traced_spmv_multi_emits_a_valid_schema() {
+    // One test fn only: concurrent #[test]s toggling the global trace
+    // switch would interleave their spans.
+    let mut rng = Rng::new(17);
+    let coo = Coo::random_structurally_symmetric(400, 5, false, &mut rng);
+    let a = Arc::new(Csrc::from_coo(&coo).unwrap());
+    let n = a.n;
+    let kernel: Arc<dyn SpmvKernel> = a.clone();
+    let kind = EngineKind::LocalBuffers(AccumMethod::Effective);
+
+    obs::reset_phases();
+    obs::start_trace();
+    let plan = Arc::new(PlanBuilder::for_kind(3, kind).build(kernel.as_ref()));
+    let mut engine = build_engine(kind, kernel, plan);
+    let k = 4;
+    let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.001).sin()).collect();
+    let mut y = vec![0.0; n * k];
+    engine.spmv_multi(&x, &mut y, k);
+    drop(engine); // pool threads park; every span is closed
+    let events = obs::stop_trace();
+
+    // Raw events: non-empty, balanced, monotone, fixed name set.
+    assert!(!events.is_empty(), "a traced product must record spans");
+    let begins = events.iter().filter(|e| e.begin).count();
+    assert_eq!(begins * 2, events.len(), "begin/end events must pair up");
+    let allowed: Vec<&str> = Phase::ALL.iter().map(|p| p.label()).collect();
+    for e in &events {
+        assert!(allowed.contains(&e.name), "unknown phase name {:?}", e.name);
+    }
+    for w in events.windows(2) {
+        assert!(w[0].ts_us <= w[1].ts_us, "timestamps must be globally monotone");
+    }
+    assert_eq!(obs::trace_dropped(), 0, "small trace must fit the ring");
+
+    // The run exercised the phases the CLI prints for this path.
+    let seen: Vec<&str> = events.iter().filter(|e| e.begin).map(|e| e.name).collect();
+    for phase in [Phase::PlanBuild, Phase::Zero, Phase::Sweep, Phase::Accumulate] {
+        assert!(seen.contains(&phase.label()), "missing {:?} span", phase);
+    }
+
+    // Serialized form validates, and survives a dump → parse round-trip
+    // (what `csrc trace --out` writes is what CI re-validates).
+    let j = obs::trace_to_json(&events);
+    let nevents = obs::validate_trace_json(&j).expect("schema valid");
+    assert_eq!(nevents, events.len());
+    let reparsed = Json::parse(&j.dump()).expect("round-trip parse");
+    assert_eq!(obs::validate_trace_json(&reparsed).expect("still valid"), events.len());
+
+    // Tampering is caught: swap one end event's name.
+    if let Some(arr) = reparsed.get("traceEvents").and_then(|e| e.as_arr()) {
+        let mut broken: Vec<Json> = arr.to_vec();
+        for ev in broken.iter_mut().rev() {
+            if ev.get("ph").and_then(|p| p.as_str()) == Some("E") {
+                *ev = Json::obj(vec![
+                    ("name", Json::Str("retune".to_string())),
+                    ("cat", Json::Str("csrc".to_string())),
+                    ("ph", Json::Str("E".to_string())),
+                    ("ts", ev.get("ts").cloned().unwrap()),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", ev.get("tid").cloned().unwrap()),
+                ]);
+                break;
+            }
+        }
+        let tampered = Json::obj(vec![
+            ("traceEvents", Json::Arr(broken)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ]);
+        assert!(obs::validate_trace_json(&tampered).is_err(), "mismatched end must fail");
+    } else {
+        panic!("traceEvents array missing after round-trip");
+    }
+}

@@ -19,7 +19,10 @@
 //!   a FEM-like matrix (DESIGN.md §11) — separate `BENCH_spmm.json`,
 //! * instrumentation overhead: products with the phase spans disabled,
 //!   metrics-enabled, and traced (DESIGN.md §12) — separate
-//!   `BENCH_obs.json`.
+//!   `BENCH_obs.json`,
+//! * shard scaling: end-to-end served rate and halo volume through the
+//!   sharded front vs shard count (DESIGN.md §13) — separate
+//!   `BENCH_shard.json`.
 //!
 //! Results land on stdout *and* in `results/ablations.json` (the SpMM
 //! and obs ablations write their own `results/BENCH_*.json`).
@@ -274,7 +277,7 @@ fn main() {
         let mut ys = vec![0.0; g.nrows];
         b.run("distributed/global-spmv", || g.spmv(&xs, &mut ys));
         for nsub in [2usize, 4, 8] {
-            let dm = DistributedMatrix::from_global(&g, nsub);
+            let mut dm = DistributedMatrix::from_global(&g, nsub);
             b.record(
                 &format!("distributed/halo-volume-{nsub}sub"),
                 dm.halo_volume() as f64,
@@ -571,5 +574,58 @@ fn main() {
         );
         ob.finish_json(std::path::Path::new("results/BENCH_obs.json"))
             .expect("write obs json report");
+    }
+
+    // --- shard scaling (ISSUE 8) ------------------------------------------
+    // The sharded front pays a halo (ghost values re-gathered per
+    // product, growing with the shard count) and scatter/gather routing
+    // to buy shard-local tuning and bounded queues. This measures that
+    // trade directly on a FEM-like banded matrix: end-to-end served
+    // rate (single-vector and a k=4 panel) and halo volume per shard
+    // count, correctness asserted against the sequential kernel. Own
+    // report: results/BENCH_shard.json.
+    {
+        use csrc_spmv::coordinator::{ShardConfig, ShardedMatvecService};
+        let mut hb = Bench::new("shard");
+        let mut rng = Rng::new(51);
+        let n = 20_000usize;
+        let fem = Arc::new(Csrc::from_coo(&Coo::banded(n, 6, false, &mut rng)).unwrap());
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 1e-3).sin()).collect();
+        let mut want = vec![0.0; n];
+        fem.spmv_into_zeroed(&x, &mut want);
+        let k = 4usize;
+        let xp: Vec<f64> = (0..n * k).map(|i| ((i % n) as f64 * 1e-3).cos()).collect();
+        for nshards in [1usize, 2, 4, 7] {
+            let svc = ShardedMatvecService::start(ShardConfig {
+                nshards,
+                ..ShardConfig::default()
+            });
+            svc.register("fem", fem.clone());
+            let got = svc.spmv("fem", &x).expect("sharded product");
+            assert!(
+                (0..n).all(|i| (got[i] - want[i]).abs() <= 1e-9 * (1.0 + want[i].abs())),
+                "{nshards}-shard product diverges from the sequential kernel"
+            );
+            let t1 = hb.run(&format!("shard/s{nshards}-spmv"), || {
+                std::hint::black_box(svc.spmv("fem", &x).expect("sharded product"));
+            });
+            let tk = hb.run(&format!("shard/s{nshards}-spmv-multi-k{k}"), || {
+                std::hint::black_box(svc.spmv_multi("fem", &xp, k).expect("sharded panel"));
+            });
+            hb.record(
+                &format!("shard/s{nshards}-mflops"),
+                fem.flops() as f64 / t1.max(1e-12) / 1e6,
+                "Mflop/s served",
+            );
+            hb.record(
+                &format!("shard/s{nshards}-panel-mflops-per-vec"),
+                fem.flops() as f64 * k as f64 / tk.max(1e-12) / 1e6,
+                "Mflop/s/vec served",
+            );
+            hb.record(&format!("shard/s{nshards}-halo"), svc.halo_doubles(), "doubles/product");
+            svc.shutdown();
+        }
+        hb.finish_json(std::path::Path::new("results/BENCH_shard.json"))
+            .expect("write shard json report");
     }
 }

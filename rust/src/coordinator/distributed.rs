@@ -10,24 +10,65 @@
 //! distributed CG couples the coarse (subdomain) and fine (thread)
 //! parallelism — the paper's closing "currently, we conduct experiments
 //! on the effect of coupling both coarse- and fine-grained parallelisms".
+//!
+//! Subdomain products run either the serial Fig. 2(b) sweep or — after
+//! [`DistributedMatrix::attach_engines`] — a tuner-raced [`ParallelSpmv`]
+//! engine over the square CSRC part plus the CSR coupling sweep, so each
+//! subdomain is tuned like any registered matrix. All per-product scratch
+//! (local x gather, local y, halo) lives in the [`Subdomain`] and is
+//! reused across products; [`DistributedMatrix::scratch_reallocs`] counts
+//! (re)allocations the same way `ReorderedEngine::scratch_reallocs` does.
+
+use std::sync::Arc;
 
 use crate::gen::decomp;
-use crate::sparse::{Csr, CsrcRect};
+use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
+use crate::plan::PlanBuilder;
+use crate::sparse::{Csr, Csrc, CsrcRect, SpmvKernel};
+use crate::tuner::{self, TrialBudget};
 
 /// One subdomain: local rectangular matrix + the global ids its ghost
-/// columns refer to.
+/// columns refer to + reusable product scratch.
 pub struct Subdomain {
     pub rank: usize,
     pub rows: std::ops::Range<usize>,
     pub local: CsrcRect,
     /// Global row ids of ghost columns (local columns n..m, in order).
     pub ghosts: Vec<usize>,
+    /// Local x: owned rows followed by gathered halo values (len m·k).
+    xl: Vec<f64>,
+    /// Local y (len n_l·k).
+    yl: Vec<f64>,
+    /// Optional parallel engine over the square CSRC part; the coupling
+    /// sweep is applied on top of its output. `None` → serial Fig. 2(b).
+    engine: Option<Box<dyn ParallelSpmv>>,
+}
+
+impl Subdomain {
+    /// One local product into `self.yl` for panel width `k`, using the
+    /// attached engine when present (square sweep + coupling add) and the
+    /// serial rectangular kernel otherwise. `self.xl` holds the local
+    /// vector (owned rows then halo) on entry.
+    fn product(&mut self, k: usize) {
+        let nl = self.rows.len();
+        match &mut self.engine {
+            Some(eng) => {
+                eng.spmv_multi(&self.xl[..nl * k], &mut self.yl, k);
+                self.local.coupling_spmv_multi_into(&self.xl[nl * k..], &mut self.yl, k);
+            }
+            None => self.local.spmv_multi(&self.xl, &mut self.yl, k),
+        }
+    }
 }
 
 /// A process-group stand-in: all subdomains of one global matrix.
 pub struct DistributedMatrix {
     pub n: usize,
     pub subs: Vec<Subdomain>,
+    /// How many times any subdomain's scratch was (re)allocated. Starts
+    /// at 0; the first product costs one allocation per buffer class and
+    /// steady-state products cost none (only widening a panel grows it).
+    scratch_reallocs: usize,
 }
 
 impl DistributedMatrix {
@@ -53,38 +94,90 @@ impl DistributedMatrix {
                         }
                     }
                 }
-                Subdomain { rank: s, rows, local, ghosts }
+                Subdomain { rank: s, rows, local, ghosts, xl: Vec::new(), yl: Vec::new(), engine: None }
             })
             .collect();
-        DistributedMatrix { n, subs }
+        DistributedMatrix { n, subs, scratch_reallocs: 0 }
+    }
+
+    /// Attach a parallel engine to every subdomain's square part. With
+    /// [`EngineKind::Auto`] each square part is tuner-raced under
+    /// `budget` — the subdomain is tuned like any registered matrix;
+    /// concrete kinds skip the race.
+    pub fn attach_engines(&mut self, kind: EngineKind, nthreads: usize, budget: &TrialBudget) {
+        for s in &mut self.subs {
+            let kernel: Arc<dyn SpmvKernel> = Arc::new(s.local.square.clone());
+            let plan = Arc::new(PlanBuilder::all(nthreads).build(kernel.as_ref()));
+            let concrete = if kind == EngineKind::Auto {
+                tuner::tune(&kernel, &plan, budget).kind
+            } else {
+                kind
+            };
+            s.engine = Some(build_engine(concrete, kernel, plan));
+        }
+    }
+
+    /// Borrow each subdomain's square CSRC part (e.g. to register the
+    /// shards with a serving front).
+    pub fn square_parts(&self) -> Vec<Arc<Csrc>> {
+        self.subs.iter().map(|s| Arc::new(s.local.square.clone())).collect()
+    }
+
+    /// Grow a scratch vector to exactly `len`, counting reallocations.
+    fn ensure(buf: &mut Vec<f64>, len: usize, reallocs: &mut usize) {
+        if buf.capacity() < len {
+            *buf = vec![0.0; len];
+            *reallocs += 1;
+        } else {
+            buf.resize(len, 0.0);
+        }
     }
 
     /// The halo exchange: gather each subdomain's ghost values from the
-    /// (conceptually remote) owners. In-process this is a gather from the
-    /// global vector; the communication volume per rank is reported so
+    /// (conceptually remote) owners into the tail of its local-x scratch.
+    /// In-process this is a gather from the global vector; the
+    /// communication volume per rank is reported by [`halo_volume`] so
     /// benches can chart it.
-    pub fn exchange_ghosts(&self, x: &[f64]) -> Vec<Vec<f64>> {
-        self.subs
-            .iter()
-            .map(|s| s.ghosts.iter().map(|&g| x[g]).collect())
-            .collect()
+    ///
+    /// [`halo_volume`]: DistributedMatrix::halo_volume
+    pub fn exchange_ghosts(&mut self, x: &[f64]) {
+        self.scatter_multi(x, 1)
+    }
+
+    /// Scatter the global panel (n×k row-major) into each subdomain's
+    /// local-x scratch: owned rows first, then the gathered halo.
+    fn scatter_multi(&mut self, x: &[f64], k: usize) {
+        for s in &mut self.subs {
+            let nl = s.rows.len();
+            Self::ensure(&mut s.xl, s.local.m * k, &mut self.scratch_reallocs);
+            for (off, i) in s.rows.clone().enumerate() {
+                s.xl[off * k..off * k + k].copy_from_slice(&x[i * k..i * k + k]);
+            }
+            for (off, &g) in s.ghosts.iter().enumerate() {
+                s.xl[(nl + off) * k..(nl + off) * k + k].copy_from_slice(&x[g * k..g * k + k]);
+            }
+        }
     }
 
     /// Distributed y = A x: per-subdomain rectangular CSRC products (the
-    /// Fig. 2b kernel) + ghost exchange, scattered back to global ids.
-    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
-        assert_eq!(x.len(), self.n);
-        assert_eq!(y.len(), self.n);
-        let halos = self.exchange_ghosts(x);
-        for (s, halo) in self.subs.iter().zip(&halos) {
+    /// Fig. 2b kernel, or the attached engine + coupling sweep) + ghost
+    /// exchange, scattered back to global ids. No per-product heap
+    /// traffic after the first call.
+    pub fn spmv(&mut self, x: &[f64], y: &mut [f64]) {
+        self.spmv_multi(x, y, 1)
+    }
+
+    /// Panel form: Y (n×k row-major) = A X.
+    pub fn spmv_multi(&mut self, x: &[f64], y: &mut [f64], k: usize) {
+        assert_eq!(x.len(), self.n * k);
+        assert_eq!(y.len(), self.n * k);
+        self.scatter_multi(x, k);
+        for s in &mut self.subs {
             let nl = s.rows.len();
-            let mut xl = Vec::with_capacity(s.local.m);
-            xl.extend(s.rows.clone().map(|i| x[i]));
-            xl.extend_from_slice(halo);
-            let mut yl = vec![0.0; nl];
-            s.local.spmv(&xl, &mut yl);
+            Self::ensure(&mut s.yl, nl * k, &mut self.scratch_reallocs);
+            s.product(k);
             for (off, i) in s.rows.clone().enumerate() {
-                y[i] = yl[off];
+                y[i * k..i * k + k].copy_from_slice(&s.yl[off * k..off * k + k]);
             }
         }
     }
@@ -93,6 +186,11 @@ impl DistributedMatrix {
     pub fn halo_volume(&self) -> usize {
         self.subs.iter().map(|s| s.ghosts.len()).sum()
     }
+
+    /// How many scratch (re)allocations all products so far have cost.
+    pub fn scratch_reallocs(&self) -> usize {
+        self.scratch_reallocs
+    }
 }
 
 /// Distributed (block-row) conjugate gradients on the subdomain matvec —
@@ -100,7 +198,7 @@ impl DistributedMatrix {
 /// each, exactly the paper's deployment shape. Returns (x, iterations,
 /// relative residual).
 pub fn distributed_cg(
-    dm: &DistributedMatrix,
+    dm: &mut DistributedMatrix,
     b: &[f64],
     tol: f64,
     max_iter: usize,
@@ -148,7 +246,7 @@ mod tests {
         let g = global();
         let n = g.nrows;
         for nsub in [1, 2, 4, 7] {
-            let dm = DistributedMatrix::from_global(&g, nsub);
+            let mut dm = DistributedMatrix::from_global(&g, nsub);
             let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
             let (mut y1, mut y2) = (vec![0.0; n], vec![0.0; n]);
             g.spmv(&x, &mut y1);
@@ -156,6 +254,78 @@ mod tests {
             propcheck::assert_close(&y1, &y2, 1e-11, 1e-11)
                 .unwrap_or_else(|e| panic!("nsub={nsub}: {e}"));
         }
+    }
+
+    #[test]
+    fn engine_backed_spmv_matches_global() {
+        let g = global();
+        let n = g.nrows;
+        for (nsub, kind) in [
+            (2, EngineKind::LocalBuffers(crate::parallel::AccumMethod::Effective)),
+            (4, EngineKind::Atomic),
+            (3, EngineKind::Auto),
+        ] {
+            let mut dm = DistributedMatrix::from_global(&g, nsub);
+            dm.attach_engines(kind, 2, &TrialBudget::smoke());
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).cos()).collect();
+            let (mut y1, mut y2) = (vec![0.0; n], vec![0.0; n]);
+            g.spmv(&x, &mut y1);
+            dm.spmv(&x, &mut y2);
+            propcheck::assert_close(&y1, &y2, 1e-11, 1e-11)
+                .unwrap_or_else(|e| panic!("nsub={nsub} kind={kind:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn distributed_spmv_multi_matches_columns() {
+        let g = global();
+        let n = g.nrows;
+        let mut dm = DistributedMatrix::from_global(&g, 4);
+        dm.attach_engines(EngineKind::Atomic, 2, &TrialBudget::zero());
+        let k = 4;
+        let mut rng = crate::util::Rng::new(31);
+        let x: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0; n * k];
+        dm.spmv_multi(&x, &mut y, k);
+        for c in 0..k {
+            let xc: Vec<f64> = (0..n).map(|j| x[j * k + c]).collect();
+            let mut want = vec![0.0; n];
+            g.spmv(&xc, &mut want);
+            let got: Vec<f64> = (0..n).map(|i| y[i * k + c]).collect();
+            propcheck::assert_close(&got, &want, 1e-11, 1e-11)
+                .unwrap_or_else(|e| panic!("col {c}: {e}"));
+        }
+    }
+
+    /// The satellite fix: scratch is allocated on first use and then
+    /// reused — repeated products add no allocations; only widening the
+    /// panel grows the buffers, and narrowing back is free.
+    #[test]
+    fn subdomain_scratch_grows_once() {
+        let g = global();
+        let n = g.nrows;
+        let mut dm = DistributedMatrix::from_global(&g, 4);
+        assert_eq!(dm.scratch_reallocs(), 0, "construction allocates no scratch");
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.1).sin()).collect();
+        let mut y = vec![0.0; n];
+        dm.spmv(&x, &mut y);
+        let after_first = dm.scratch_reallocs();
+        assert_eq!(after_first, 8, "first product: xl + yl per subdomain");
+        for _ in 0..10 {
+            dm.spmv(&x, &mut y);
+        }
+        assert_eq!(dm.scratch_reallocs(), after_first, "steady state allocates nothing");
+        // Widening to a panel grows each buffer once more...
+        let k = 4;
+        let xp: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.2).cos()).collect();
+        let mut yp = vec![0.0; n * k];
+        dm.spmv_multi(&xp, &mut yp, k);
+        let after_wide = dm.scratch_reallocs();
+        assert_eq!(after_wide, 16);
+        // ...and narrower products afterwards reuse the wide scratch.
+        dm.spmv(&x, &mut y);
+        dm.spmv_multi(&xp, &mut yp, k);
+        assert_eq!(dm.scratch_reallocs(), after_wide);
     }
 
     #[test]
@@ -171,12 +341,12 @@ mod tests {
     fn distributed_cg_converges() {
         let g = global();
         let n = g.nrows;
-        let dm = DistributedMatrix::from_global(&g, 4);
+        let mut dm = DistributedMatrix::from_global(&g, 4);
         let mut rng = crate::util::Rng::new(17);
         let xstar: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
         let mut b = vec![0.0; n];
         g.spmv(&xstar, &mut b);
-        let (x, its, res) = distributed_cg(&dm, &b, 1e-11, 5 * n);
+        let (x, its, res) = distributed_cg(&mut dm, &b, 1e-11, 5 * n);
         assert!(res < 1e-11, "residual {res}");
         assert!(its < 5 * n);
         for (got, want) in x.iter().zip(&xstar) {

@@ -8,16 +8,82 @@
 //! a backend per request (sequential / parallel engine / the XLA
 //! artifact runtime), worker threads, and service metrics.
 //!
+//! The service itself is built from shard-local modules — registration
+//! state ([`registration`]), batch-serving workers ([`worker`]), the
+//! background re-tuner ([`retuner`]), and counters ([`stats`]) — with
+//! [`service`] as the shell that wires them together. [`shard`] scales
+//! that out: a [`ShardedMatvecService`] row-block-partitions each
+//! registered matrix (the paper's §5 overlapping decomposition, via
+//! [`distributed`]'s machinery) and runs one complete private
+//! [`MatvecService`] per shard behind a scatter/gather front router.
+//!
 //! Everything is std-only (threads + mpsc): tokio is not in the offline
 //! vendor tree, and the request path must never touch python.
 
 pub mod batcher;
+pub(crate) mod registration;
+pub(crate) mod retuner;
 pub mod router;
 pub mod service;
+pub mod shard;
+pub(crate) mod stats;
+pub(crate) mod worker;
 
 pub use batcher::{form_batches, Batch, BatchPolicy};
 pub use router::{Backend, RoutePolicy, Router};
-pub use service::{MatvecService, ServiceConfig, ServiceStats};
+pub use service::{MatvecService, ServiceConfig};
+pub use shard::{ShardConfig, ShardStats, ShardedMatvecService};
+pub use stats::ServiceStats;
 
 pub mod distributed;
 pub use distributed::{distributed_cg, DistributedMatrix, Subdomain};
+
+/// Shared fixtures for the coordinator's module tests.
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::parallel::EngineKind;
+    use crate::sparse::{Coo, Csrc};
+    use crate::tuner;
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    pub(crate) fn mat(n: usize, seed: u64) -> Arc<Csrc> {
+        let mut rng = Rng::new(seed);
+        Arc::new(Csrc::from_coo(&Coo::random_structurally_symmetric(n, 3, false, &mut rng)).unwrap())
+    }
+
+    /// A doctored swept decision: sequential at 1 thread (deliberately
+    /// *not* `RoutePolicy::threads`) with an arbitrary recorded rate —
+    /// pass an impossibly high one to force drift below any threshold.
+    pub(crate) fn doctored_decision(fp: u64, mflops: f64) -> tuner::Decision {
+        tuner::Decision {
+            kind: EngineKind::Sequential,
+            reorder: false,
+            mflops,
+            measured: true,
+            provenance: tuner::Provenance::Measured,
+            served_mflops: 0.0,
+            tuned_s: 0.001,
+            fingerprint: fp,
+            nthreads: 1,
+            max_threads: 2,
+            features: tuner::Features {
+                n: 200,
+                work_flops: 2000,
+                scatter_pairs: 300,
+                scatter_ratio: 0.75,
+                bandwidth: 20,
+                window_rows: 320,
+                window_shrink: 0.8,
+                colors: 4,
+                intervals: 6,
+                balance: 1.1,
+                nthreads: 2,
+            },
+            trials: Vec::new(),
+            sweep: vec![tuner::SweepPoint { nthreads: 1, trials: Vec::new() }],
+            block_k: 1,
+            block_rates: Vec::new(),
+        }
+    }
+}

@@ -1,0 +1,371 @@
+//! Shard-local registration state: the matrix registry, the resolved
+//! Auto-route table, drift-tracking state, the shared RCM artifact
+//! registry, and the registration-time Auto resolution itself.
+//!
+//! Everything here is owned per [`MatvecService`](super::MatvecService)
+//! — i.e. per shard when serving through a
+//! [`ShardedMatvecService`](super::ShardedMatvecService): each shard
+//! resolves, caches, and drift-tracks its own row-block independently.
+
+use crate::parallel::EngineKind;
+use crate::plan::{PlanBuilder, PlanCache};
+use crate::reorder::Permutation;
+use crate::sparse::{Csrc, SpmvKernel};
+use crate::tuner::{self, DecisionCache, TrialBudget};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::router::RoutePolicy;
+
+/// Registry value: the matrix plus a per-key generation counter.
+/// Worker-side caches (engines, plans) key on `key@generation`, so a
+/// replaced matrix can never be served by state built for its
+/// predecessor — stale engines become unreachable instead of unsound.
+pub(crate) type Registry = HashMap<String, (Arc<Csrc>, u64)>;
+
+/// Shared RCM artifacts for reordered serving, keyed by
+/// `key@generation`: the permutation and the permuted matrix. Shared
+/// across workers (like the plan cache) so a matrix served reordered by
+/// N workers is permuted once, not once per worker; entries of retired
+/// generations are collected by `register()` on replacement.
+pub(crate) type RcmRegistry = HashMap<String, (Arc<Csrc>, Arc<Permutation>)>;
+
+/// What an Auto registration resolved to — everything a worker needs to
+/// build the engine and to judge rate drift.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ResolvedAuto {
+    pub(crate) kind: EngineKind,
+    /// The winner ran through the RCM ordering: serve via the permuted
+    /// matrix with per-request permute/un-permute.
+    pub(crate) reorder: bool,
+    /// The decision's thread count (the swept pick, not necessarily
+    /// `RoutePolicy::threads`).
+    pub(crate) nthreads: usize,
+    /// The decision's recorded rate (0 when unmeasured).
+    pub(crate) mflops: f64,
+    /// Served-rate baseline ([`tuner::Decision::served_mflops`]): the
+    /// per-request EWMA recorded after a drift re-tune. When > 0, drift
+    /// is judged against it instead of the optimistic trial rate.
+    pub(crate) served_mflops: f64,
+    /// The work units the decision's rate was normalized by
+    /// (`Features::work_flops`). The drift EWMA must use the *same*
+    /// normalization — `Csrc::flops()` counts the symmetric kernel's
+    /// flops differently, which would skew the comparison by up to 2×.
+    pub(crate) work_flops: usize,
+    pub(crate) measured: bool,
+    /// The decision-cache key, so a worker can write the served
+    /// baseline back into the persisted entry.
+    pub(crate) fingerprint: u64,
+    pub(crate) max_threads: usize,
+    /// The decision's tuned panel width: same-matrix requests in one
+    /// batch coalesce into `spmv_multi` panels this wide (1 = the
+    /// blocked product lost its own tuning race, serve serially).
+    pub(crate) block_k: usize,
+}
+
+impl ResolvedAuto {
+    pub(crate) fn from_decision(d: &tuner::Decision) -> ResolvedAuto {
+        ResolvedAuto {
+            kind: d.kind,
+            reorder: d.reorder,
+            nthreads: d.nthreads,
+            mflops: d.mflops,
+            served_mflops: d.served_mflops,
+            work_flops: d.features.work_flops,
+            measured: d.measured,
+            fingerprint: d.fingerprint,
+            max_threads: d.max_threads,
+            block_k: d.block_k.max(1),
+        }
+    }
+}
+
+/// Per-key drift tracking state (keyed by `key@generation`).
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct DriftState {
+    pub(crate) ewma_mflops: f64,
+    pub(crate) batches: u64,
+    /// A re-tune has been queued and not yet completed — don't queue
+    /// another for the same key × generation.
+    pub(crate) retune_pending: bool,
+    /// Set by the re-tuner when it publishes an upgraded decision: the
+    /// next `drift_min_batches` batches *calibrate* — their EWMA is
+    /// recorded as the entry's served baseline instead of being judged
+    /// against the fresh (warm, optimistic) trial rate. Without this a
+    /// decision whose trial rate sits far above serving reality would
+    /// re-trigger after every re-tune: a storm.
+    pub(crate) calibrating: bool,
+    /// The baseline the calibration window recorded (0 = none yet).
+    /// Judgement reads it here, under the same lock, rather than from
+    /// the batch's `ResolvedAuto` snapshot: a second worker whose
+    /// snapshot predates the calibration write must not re-judge
+    /// against the optimistic trial rate and queue a spurious re-tune.
+    pub(crate) served_baseline: f64,
+}
+
+/// Does `k` name a generation of exactly the key whose prefix is
+/// `"key@"` — i.e. `key@<digits>`? An all-digit suffix can only be a
+/// generation stamped by `register()`; anything else (e.g. `key@b@0`)
+/// belongs to a *different* user key that happens to contain '@'.
+pub(crate) fn is_generation_of(k: &str, prefix: &str) -> bool {
+    k.starts_with(prefix)
+        && k.len() > prefix.len()
+        && k[prefix.len()..].bytes().all(|b| b.is_ascii_digit())
+}
+
+/// Everything registration-time Auto resolution reads — borrowed from
+/// the service so the resolution logic lives here, shard-local, instead
+/// of inside the service monolith.
+pub(crate) struct ResolverCtx<'a> {
+    pub(crate) plans: &'a PlanCache,
+    pub(crate) route: &'a RoutePolicy,
+    pub(crate) budget: &'a TrialBudget,
+    pub(crate) decisions: &'a DecisionCache,
+    pub(crate) model: Option<&'a tuner::CostModel>,
+}
+
+/// Resolve an Auto registration to a concrete decision, off the request
+/// path. With `route.sweep_threads` the tuner races the thread ladder
+/// (and losing rungs' plans — plain and `#rcm` — are invalidated);
+/// otherwise it tunes at the route's fixed thread count. Returns the
+/// decision and whether it was a decision-cache hit.
+pub(crate) fn resolve_auto(
+    ctx: &ResolverCtx<'_>,
+    cache_key: &str,
+    kernel: &Arc<dyn SpmvKernel>,
+) -> (tuner::Decision, bool) {
+    let threads = ctx.route.threads.max(1);
+    if ctx.route.sweep_threads {
+        let ladder = tuner::thread_ladder(threads);
+        let mut plan_for = tuner::cached_plan_provider(ctx.plans, cache_key, kernel);
+        let r = tuner::resolve_swept_with_model(
+            kernel,
+            &ladder,
+            ctx.budget,
+            ctx.decisions,
+            &mut plan_for,
+            ctx.route.reorder,
+            ctx.model,
+        );
+        // Only the winning rung's analysis stays alive — for the plain
+        // plans and any reordered (`#rcm`) plans the workers may have
+        // built at losing thread counts.
+        ctx.plans.invalidate_other_threads(cache_key, r.0.nthreads);
+        ctx.plans.invalidate_other_threads(&format!("{cache_key}#rcm"), r.0.nthreads);
+        r
+    } else {
+        let plan = ctx.plans.get_or_build(
+            cache_key,
+            kernel.as_ref(),
+            PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
+        );
+        tuner::resolve_with_model(
+            kernel,
+            &plan,
+            ctx.budget,
+            ctx.decisions,
+            ctx.route.reorder,
+            ctx.model,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::mat;
+    use super::super::{MatvecService, ServiceConfig};
+    use super::*;
+    use crate::reorder;
+    use crate::sparse::Coo;
+    use crate::util::Rng;
+
+    #[test]
+    fn resolved_sweep_matches_generations_exactly() {
+        // Re-registering "a" must not drop the Auto decision of a
+        // different live key that merely starts with "a@".
+        assert!(is_generation_of("a@0", "a@"));
+        assert!(is_generation_of("a@12", "a@"));
+        assert!(!is_generation_of("a@b@0", "a@"));
+        assert!(!is_generation_of("a@", "a@"));
+        assert!(!is_generation_of("ab@0", "a@"));
+    }
+
+    #[test]
+    fn auto_routing_tunes_once_and_persists_decisions() {
+        let dir = std::env::temp_dir().join(format!("csrc_auto_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = ServiceConfig::default();
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1; // force the parallel (Auto) path
+        cfg.route.threads = 2;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(dir.join("decisions.json"));
+        let a = mat(150, 89);
+        let x: Vec<f64> = (0..150).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 150];
+        a.spmv_into_zeroed(&x, &mut want);
+
+        let svc = MatvecService::start(cfg.clone());
+        svc.register("m", a.clone());
+        let y = svc.call("m", x.clone()).unwrap();
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1, "first Auto registration runs measured trials");
+        assert!(s.tune_seconds > 0.0);
+        assert_eq!(s.auto_choices.len(), 1);
+        let (key, label) = &s.auto_choices[0];
+        assert_eq!(key, "m");
+        let resolved = EngineKind::parse(label).expect("resolved label parses");
+        assert_ne!(resolved, EngineKind::Auto, "Auto must resolve to a concrete engine");
+        // Registering the same structure under another key: decision
+        // cache hit, zero new trials.
+        svc.register("m-again", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1, "same structure must not re-tune");
+        assert!(s.decision_hits >= 1);
+        svc.shutdown();
+
+        // A restarted service on the same persisted cache re-tunes
+        // nothing: zero trials, decision read from disk.
+        let svc2 = MatvecService::start(cfg);
+        svc2.register("m", a.clone());
+        let y2 = svc2.call("m", x).unwrap();
+        crate::util::propcheck::assert_close(&y2, &want, 1e-11, 1e-11).unwrap();
+        let s2 = svc2.stats();
+        assert_eq!(s2.tunes, 0, "restart must hit the persisted decision cache");
+        assert!(s2.decision_hits >= 1);
+        assert_eq!(s2.auto_choices[0].1, *label, "persisted decision picks the same engine");
+        svc2.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_threads_resolves_engine_and_thread_count() {
+        let mut cfg = ServiceConfig::default();
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1; // force the parallel (Auto) path
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        let svc = MatvecService::start(cfg);
+        let a = mat(150, 94);
+        svc.register("m", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1, "first Auto registration runs the sweep");
+        assert_eq!(s.chosen_threads.len(), 1);
+        let (key, p) = &s.chosen_threads[0];
+        assert_eq!(key, "m");
+        assert!(*p == 1 || *p == 2, "thread count must come from the ladder, got {p}");
+        // Serving works at the swept thread count.
+        let x: Vec<f64> = (0..150).map(|i| (i as f64 * 0.01).sin()).collect();
+        let y = svc.call("m", x.clone()).unwrap();
+        let mut want = vec![0.0; 150];
+        a.spmv_into_zeroed(&x, &mut want);
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        // Same structure under a new key: the swept decision is served
+        // from the cache — no second sweep, same thread pick.
+        svc.register("m2", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1, "same structure must not re-sweep");
+        assert!(s.decision_hits >= 1);
+        assert_eq!(s.chosen_threads[1].1, s.chosen_threads[0].1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn zero_budget_auto_answers_from_model_when_supplied() {
+        // ISSUE 5 acceptance at the service level: with an empty
+        // decision cache and a zero trial budget, registration answers
+        // from the supplied model (ServiceStats::model_hits), and from
+        // the heuristic only when none is configured (model_fallbacks).
+        let dir = std::env::temp_dir().join(format!("csrc_model_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let model_path = dir.join("model.json");
+        let a = mat(200, 400);
+        // Train a tiny constant model that crowns `colorful` — a pick
+        // the registration must echo verbatim if it consulted the model
+        // (the heuristic would choose a local-buffers engine here).
+        {
+            let kernel: Arc<dyn SpmvKernel> = a.clone();
+            let plan = crate::plan::PlanBuilder::all(2).build(kernel.as_ref());
+            let features = tuner::Features::extract(kernel.as_ref(), &plan);
+            let rows: Vec<tuner::CorpusRow> = (0..3u64)
+                .map(|i| tuner::CorpusRow {
+                    fingerprint: i,
+                    max_threads: 2,
+                    features: features.clone(),
+                    kind: EngineKind::Colorful,
+                    reordered: false,
+                    nthreads: 2,
+                    rung_rates: vec![(2, 500.0)],
+                    block_rates: Vec::new(),
+                })
+                .collect();
+            tuner::CostModel::train(&rows).unwrap().save(&model_path).unwrap();
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.tune_budget = TrialBudget::zero();
+        cfg.model = Some(model_path);
+        let svc = MatvecService::start(cfg.clone());
+        svc.register("m", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.model_hits, 1, "the model must answer the cold start");
+        assert_eq!(s.model_fallbacks, 0);
+        assert_eq!(s.auto_choices[0].1, "colorful", "the planted model pick");
+        // Serving runs correctly on the predicted engine.
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 200];
+        a.spmv_into_zeroed(&x, &mut want);
+        let y = svc.call("m", x.clone()).unwrap();
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
+        // The same config without a model falls back to the heuristic.
+        cfg.model = None;
+        let svc2 = MatvecService::start(cfg);
+        svc2.register("m", a.clone());
+        let s2 = svc2.stats();
+        assert_eq!(s2.model_hits, 0);
+        assert_eq!(s2.model_fallbacks, 1, "no model: the heuristic answers");
+        assert_ne!(s2.auto_choices[0].1, "colorful", "the heuristic picks differently here");
+        svc2.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auto_with_reorder_measure_resolves_and_serves() {
+        // Auto + Measure: the tuner races reordered candidates against
+        // plain ones; whatever wins, serving stays correct and the
+        // choice log records the ordering.
+        let mut rng = Rng::new(98);
+        let band = Csrc::from_coo(&Coo::banded(250, 2, false, &mut rng)).unwrap();
+        let shuffle = Permutation::from_new_to_old(rng.permutation(250)).unwrap();
+        let a = Arc::new(band.permuted(&shuffle));
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.reorder = reorder::ReorderPolicy::Measure;
+        cfg.tune_budget = TrialBudget::smoke();
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1);
+        assert_eq!(s.auto_choices.len(), 1);
+        let label = &s.auto_choices[0].1;
+        // Either a plain EngineKind label or the reordered/ prefix.
+        let plain = label.strip_prefix("reordered/").unwrap_or(label);
+        assert!(EngineKind::parse(plain).is_some(), "{label}");
+        let x: Vec<f64> = (0..250).map(|i| (i as f64 * 0.02).cos()).collect();
+        let mut want = vec![0.0; 250];
+        a.spmv_into_zeroed(&x, &mut want);
+        let y = svc.call("m", x.clone()).unwrap();
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
+    }
+}

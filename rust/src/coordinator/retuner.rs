@@ -1,0 +1,373 @@
+//! Shard-local background re-tuner: drift-triggered re-measurement and
+//! decision-cache write-backs, off the request path.
+//!
+//! One `matvec-retuner` thread per [`MatvecService`](super::MatvecService)
+//! — so under a sharded front every shard re-tunes against its *own*
+//! row-block independently, with its own decision cache and drift
+//! state.
+
+use super::registration::{DriftState, Registry, ResolvedAuto};
+use super::router::RoutePolicy;
+use super::stats::Counters;
+use crate::obs::{self, Phase};
+use crate::plan::{PlanBuilder, PlanCache};
+use crate::sparse::SpmvKernel;
+use crate::tuner::{self, DecisionCache, TrialBudget};
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+
+/// A drift-triggered re-tune request, handled off the request path.
+pub(crate) struct RetuneJob {
+    pub(crate) matrix: String,
+    pub(crate) cache_key: String,
+    pub(crate) generation: u64,
+}
+
+/// Work for the `matvec-retuner` thread — everything that must stay off
+/// the request path.
+pub(crate) enum RetunerMsg {
+    /// Re-run the measured trials and upgrade the decision entry.
+    Retune(RetuneJob),
+    /// Persist a calibration window's served-EWMA baseline into the
+    /// cache entry. `DecisionCache::set_served_rate` rewrites the whole
+    /// file, so a worker must not pay for it inside a batch.
+    RecordServedRate { fingerprint: u64, max_threads: usize, mflops: f64 },
+}
+
+/// Everything the background re-tuner shares with the service.
+pub(crate) struct RetunerCtx {
+    pub(crate) registry: Arc<Mutex<Registry>>,
+    pub(crate) plans: Arc<PlanCache>,
+    pub(crate) route: RoutePolicy,
+    pub(crate) budget: TrialBudget,
+    pub(crate) decisions: Arc<DecisionCache>,
+    pub(crate) resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
+    pub(crate) drift: Arc<Mutex<HashMap<String, DriftState>>>,
+    pub(crate) stats: Arc<Counters>,
+}
+
+/// Drain re-tuner work: drift-triggered re-tunes (re-run the measured
+/// trials — the sweep when `route.sweep_threads` — against the
+/// *current* machine state, upgrade the decision-cache entry in place,
+/// republish the resolution for workers, and reset the key's drift
+/// state into calibration) and served-baseline write-backs the workers
+/// hand off (a full cache-file rewrite each — request-path poison).
+pub(crate) fn retuner_loop(rx: Receiver<RetunerMsg>, ctx: RetunerCtx) {
+    while let Ok(msg) = rx.recv() {
+        let job = match msg {
+            RetunerMsg::Retune(job) => job,
+            RetunerMsg::RecordServedRate { fingerprint, max_threads, mflops } => {
+                ctx.decisions.set_served_rate(fingerprint, max_threads, mflops);
+                continue;
+            }
+        };
+        let hit = ctx.registry.lock().unwrap().get(&job.matrix).cloned();
+        let Some((a, generation)) = hit else { continue };
+        if generation != job.generation {
+            continue; // replaced since the drift was observed
+        }
+        let _retune_span = obs::phase(Phase::Retune);
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        // A zero budget cannot produce the measured decision a drift
+        // repair needs; degrade to the cheapest measuring budget.
+        let budget = if ctx.budget.is_zero() { TrialBudget::smoke() } else { ctx.budget };
+        let threads = ctx.route.threads.max(1);
+        let d = if ctx.route.sweep_threads {
+            let ladder = tuner::thread_ladder(threads);
+            let mut plan_for = tuner::cached_plan_provider(&ctx.plans, &job.cache_key, &kernel);
+            let d = tuner::sweep_reordered(
+                &kernel,
+                &ladder,
+                &budget,
+                &mut plan_for,
+                ctx.route.reorder,
+            );
+            ctx.plans.invalidate_other_threads(&job.cache_key, d.nthreads);
+            // Reordered (`#rcm`) plans workers built at the losing
+            // thread counts are dead weight too.
+            ctx.plans
+                .invalidate_other_threads(&format!("{}#rcm", job.cache_key), d.nthreads);
+            d
+        } else {
+            let plan = ctx.plans.get_or_build(
+                &job.cache_key,
+                kernel.as_ref(),
+                PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
+            );
+            tuner::tune_reordered(&kernel, &plan, &budget, ctx.route.reorder)
+        };
+        // The fresh measurement is keyed by structure fingerprint, so it
+        // is worth persisting even if the registration changed under us.
+        ctx.decisions.put(d.clone());
+        // Publish to the workers only if the generation is still
+        // current: register() may have replaced the matrix while we
+        // measured, and it already purged this generation's entries —
+        // re-inserting would resurrect dead keys. The registry check
+        // happens *under* the map locks, so a concurrent replacement
+        // either purges after our insert or we observe its generation
+        // bump and skip.
+        {
+            let mut resolved = ctx.resolved.lock().unwrap();
+            let mut drift = ctx.drift.lock().unwrap();
+            let current = ctx
+                .registry
+                .lock()
+                .unwrap()
+                .get(&job.matrix)
+                .map(|(_, g)| *g)
+                == Some(job.generation);
+            if !current {
+                continue;
+            }
+            resolved.insert(job.cache_key.clone(), ResolvedAuto::from_decision(&d));
+            // Fresh state (`retune_pending` cleared) in *calibration*
+            // mode: the next drift_min_batches batches record the
+            // served EWMA as the new entry's baseline instead of being
+            // judged against its warm trial rate — see maybe_flag_drift
+            // (this is what stops the re-tune storm).
+            drift.insert(job.cache_key, DriftState { calibrating: true, ..Default::default() });
+        }
+        ctx.stats.retunes.inc();
+        ctx.stats.add_tune_seconds(d.tuned_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::{doctored_decision, mat};
+    use super::super::{MatvecService, ServiceConfig};
+    use super::*;
+    use crate::parallel::EngineKind;
+    use crate::sparse::Csrc;
+
+    #[test]
+    fn drift_triggers_background_retune() {
+        let dir = std::env::temp_dir().join(format!("csrc_drift_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let a = mat(200, 95);
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        let fp = tuner::fingerprint(kernel.as_ref());
+        // Pre-seed the persistent cache with the doctored decision under
+        // this service's (fingerprint × thread budget) key.
+        {
+            let cache = DecisionCache::open(&path);
+            cache.put(doctored_decision(fp, 1e9));
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.5;
+        cfg.drift_min_batches = 2;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let s = svc.stats();
+        assert_eq!(s.tunes, 0, "the doctored decision must be a cache hit");
+        assert_eq!(
+            s.chosen_threads,
+            vec![("m".to_string(), 1)],
+            "the service must consume the swept thread count, not RoutePolicy::threads"
+        );
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 200];
+        a.spmv_into_zeroed(&x, &mut want);
+        // Serve batches until the background re-tune lands. Drift is
+        // certain — no real engine reaches 1e9 "Mflop/s" — so this loop
+        // only bounds how long we wait for the background thread.
+        let mut retuned = false;
+        for _ in 0..400 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+            if svc.stats().retunes >= 1 {
+                retuned = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let s = svc.stats();
+        assert!(retuned, "drift must queue a background re-tune (drift_events={})", s.drift_events);
+        assert!(s.drift_events >= 1);
+        // Serving still works against the upgraded decision.
+        let y = svc.call("m", x.clone()).unwrap();
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
+        // The re-tune upgraded the persisted entry in place: realistic
+        // measured rate, fresh sweep surface, same (fp × budget) key.
+        let back = DecisionCache::open(&path);
+        let d = back.get(fp, 2).expect("upgraded decision persisted");
+        assert!(d.measured && !d.sweep.is_empty());
+        assert!(d.mflops < 1e8, "recorded rate must be re-measured, got {}", d.mflops);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retuned_decision_uses_served_baseline_not_trial_rate() {
+        // Satellite (ISSUE 5): a doctored optimistic trial rate must
+        // trigger exactly ONE re-tune, not a storm. After the re-tune
+        // the worker's calibration window records the served EWMA into
+        // the entry, and later drift judgements run against that
+        // serving baseline — which the serving rate trivially meets.
+        let dir = std::env::temp_dir().join(format!("csrc_storm_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let a = mat(200, 195);
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        let fp = tuner::fingerprint(kernel.as_ref());
+        {
+            let cache = DecisionCache::open(&path);
+            cache.put(doctored_decision(fp, 1e9));
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.25;
+        cfg.drift_min_batches = 2;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 200];
+        a.spmv_into_zeroed(&x, &mut want);
+        // Serve until the (certain) first re-tune lands.
+        let mut retuned = false;
+        for _ in 0..400 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+            if svc.stats().retunes >= 1 {
+                retuned = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(retuned, "the doctored rate must trigger the first re-tune");
+        // Plenty of post-re-tune batches: calibration (2 batches) plus
+        // many judged ones. Without the served baseline every judged
+        // batch would re-flag drift against the fresh warm trial rate.
+        for _ in 0..40 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        // Give any (wrongly) queued re-tune time to complete.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let s = svc.stats();
+        assert_eq!(s.retunes, 1, "served-EWMA baseline must stop the re-tune storm");
+        svc.shutdown();
+        // The baseline was persisted with the upgraded entry.
+        let back = DecisionCache::open(&path);
+        let d = back.get(fp, 2).expect("upgraded decision persisted");
+        assert!(d.measured);
+        assert!(d.mflops < 1e8, "trial rate was re-measured, got {}", d.mflops);
+        assert!(d.served_mflops > 0.0, "calibration must record the served baseline");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_register_serve_retune_stress() {
+        // Satellite (ISSUE 5): concurrent register/serve/retune must
+        // lose no cache upgrades — every doctored entry ends up
+        // re-measured in place — and the retune counter must reflect
+        // the observed upgrades (one per key, no storms), even with a
+        // key being re-registered mid-flight.
+        let dir = std::env::temp_dir().join(format!("csrc_stress_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let mats: Vec<Arc<Csrc>> = (0..3).map(|i| mat(200, 300 + i)).collect();
+        let fps: Vec<u64> = mats
+            .iter()
+            .map(|m| {
+                let k: Arc<dyn SpmvKernel> = m.clone();
+                tuner::fingerprint(k.as_ref())
+            })
+            .collect();
+        {
+            let cache = DecisionCache::open(&path);
+            for fp in &fps {
+                cache.put(doctored_decision(*fp, 1e9));
+            }
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 2;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.25;
+        cfg.drift_min_batches = 2;
+        let svc = MatvecService::start(cfg);
+        for (i, m) in mats.iter().enumerate() {
+            svc.register(&format!("m{i}"), m.clone());
+        }
+        assert_eq!(svc.stats().tunes, 0, "all three doctored entries must be cache hits");
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for c in 0..3usize {
+                let svc = &svc;
+                let mats = &mats;
+                let stop = stop.clone();
+                scope.spawn(move || {
+                    let mut i = c;
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        let k = i % 3;
+                        let m = &mats[k];
+                        let x: Vec<f64> =
+                            (0..m.n).map(|j| ((i + j) as f64 * 0.01).sin()).collect();
+                        let mut want = vec![0.0; m.n];
+                        m.spmv_into_zeroed(&x, &mut want);
+                        let y = svc.call(&format!("m{k}"), x).unwrap();
+                        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+                        i += 1;
+                    }
+                });
+            }
+            // Meanwhile: wait for all three re-tunes, poking a
+            // concurrent replacement of m0 (same matrix, so in-flight
+            // x vectors stay valid) into the middle of the run.
+            let mut ok = false;
+            for round in 0..1200 {
+                if svc.stats().retunes >= 3 {
+                    ok = true;
+                    break;
+                }
+                if round == 30 || round == 90 {
+                    svc.register("m0", mats[0].clone());
+                }
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            assert!(ok, "all drifted keys must re-tune (retunes={})", svc.stats().retunes);
+        });
+        let s = svc.stats();
+        assert_eq!(s.failed, 0, "every request must serve cleanly through the churn");
+        assert_eq!(s.completed, s.submitted);
+        svc.shutdown();
+        // No lost upgrades: every doctored entry was re-measured in
+        // place despite the concurrent replacements…
+        let back = DecisionCache::open(&path);
+        for fp in &fps {
+            let d = back.get(*fp, 2).expect("entry survives");
+            assert!(d.measured, "upgrade must keep the entry measured");
+            assert!(d.mflops < 1e8, "trial rate must be re-measured, got {}", d.mflops);
+        }
+        // …and the retune counter matches the observed upgrades: one
+        // per key (the served-EWMA baseline forbids storms), plus at
+        // most one extra per m0 re-registration that raced its own
+        // upgrade (a replaced generation re-drifts once).
+        assert!(
+            (3..=5).contains(&s.retunes),
+            "retunes {} must match the 3 observed upgrades (± racing re-registrations)",
+            s.retunes
+        );
+    }
+}

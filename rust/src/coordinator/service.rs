@@ -3,15 +3,15 @@
 //!
 //! Flow: `submit()` enqueues (matrix-key, x, reply-channel) → the
 //! dispatcher thread drains the queue, forms per-matrix batches
-//! ([`super::batcher`]), and hands each batch to a worker → the worker
-//! resolves the backend via the [`super::router`] policy, runs the
-//! products on its cached engine, and replies through each request's
-//! channel. Metrics (counts + latency histogram) are sampled on the
-//! worker side into the service's [`MetricsRegistry`] —
-//! [`ServiceStats`] is a typed snapshot over those registry atomics,
-//! and the same registry serves Prometheus scrapes
-//! ([`crate::obs::serve_metrics`]), so the CLI endpoint and `stats()`
-//! can never disagree.
+//! ([`super::batcher`]), and hands each batch to a worker
+//! ([`super::worker`]) → the worker resolves the backend via the
+//! [`super::router`] policy, runs the products on its cached engine, and
+//! replies through each request's channel. Metrics (counts + latency
+//! histogram) are sampled on the worker side into the service's
+//! [`MetricsRegistry`] — [`ServiceStats`] ([`super::stats`]) is a typed
+//! snapshot over those registry atomics, and the same registry serves
+//! Prometheus scrapes ([`crate::obs::serve_metrics`]), so the CLI
+//! endpoint and `stats()` can never disagree.
 //!
 //! Engines hold execution state (pools, buffers) and stay per-worker,
 //! but the *analysis* they run — the [`crate::plan::SpmvPlan`] — is
@@ -23,16 +23,30 @@
 //! Autotuned routing is *self-correcting*: workers fold each batch's
 //! measured rate into a per-key EWMA, and when it drifts below
 //! [`ServiceConfig::drift_fraction`] of the decision's recorded rate the
-//! key is queued to a background re-tuner thread — the decision cache
-//! entry is upgraded off the request path, never on it.
+//! key is queued to a background re-tuner thread ([`super::retuner`]) —
+//! the decision cache entry is upgraded off the request path, never on
+//! it.
+//!
+//! This file owns only the service *shell*: configuration, lifecycle
+//! (thread spawn/join), registration, and the dispatcher. The serving
+//! internals live in shard-local sibling modules —
+//! [`super::registration`] (registry types, Auto resolution),
+//! [`super::worker`] (engine cache + batch execution + drift),
+//! [`super::retuner`] (background re-measurement), and [`super::stats`]
+//! (counters + snapshot) — so a [`super::ShardedMatvecService`] can own
+//! one complete, private instance of all of it per shard.
 
 use super::batcher::{form_batches, summarize, BatchPolicy};
-use super::router::{Backend, RoutePolicy, Router};
-use crate::metrics;
-use crate::obs::{self, Counter, HistogramHandle, MetricsRegistry, Phase};
-use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
-use crate::plan::{PlanBuilder, PlanCache};
-use crate::reorder::{self, Permutation, ReorderedEngine};
+use super::registration::{
+    self, is_generation_of, DriftState, RcmRegistry, Registry, ResolvedAuto, ResolverCtx,
+};
+use super::retuner::{retuner_loop, RetunerCtx, RetunerMsg};
+use super::router::RoutePolicy;
+use super::stats::{Counters, ServiceStats};
+use super::worker::{worker_loop, Request, WorkerBatch, WorkerCtx};
+use crate::obs::{self, MetricsRegistry, Phase};
+use crate::parallel::EngineKind;
+use crate::plan::PlanCache;
 use crate::sparse::{Csrc, SpmvKernel};
 use crate::tuner::{self, DecisionCache, TrialBudget};
 use std::collections::HashMap;
@@ -40,14 +54,6 @@ use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
-
-/// Weight of the newest batch in the drift EWMA (higher = jumpier).
-const EWMA_ALPHA: f64 = 0.3;
-
-/// Panel width used to coalesce same-matrix requests on routes without
-/// a tuned block pick (explicit engine routes, and requests racing an
-/// Auto resolution). Matches the top of the tuner's block ladder.
-const DEFAULT_PANEL_WIDTH: usize = 8;
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -97,238 +103,6 @@ impl Default for ServiceConfig {
         }
     }
 }
-
-struct Request {
-    matrix: String,
-    x: Vec<f64>,
-    enqueued: Instant,
-    reply: Sender<Result<Vec<f64>, String>>,
-}
-
-struct WorkerBatch {
-    matrix: String,
-    requests: Vec<Request>,
-}
-
-/// What an Auto registration resolved to — everything a worker needs to
-/// build the engine and to judge rate drift.
-#[derive(Clone, Copy, Debug)]
-struct ResolvedAuto {
-    kind: EngineKind,
-    /// The winner ran through the RCM ordering: serve via the permuted
-    /// matrix with per-request permute/un-permute.
-    reorder: bool,
-    /// The decision's thread count (the swept pick, not necessarily
-    /// `RoutePolicy::threads`).
-    nthreads: usize,
-    /// The decision's recorded rate (0 when unmeasured).
-    mflops: f64,
-    /// Served-rate baseline ([`tuner::Decision::served_mflops`]): the
-    /// per-request EWMA recorded after a drift re-tune. When > 0, drift
-    /// is judged against it instead of the optimistic trial rate.
-    served_mflops: f64,
-    /// The work units the decision's rate was normalized by
-    /// (`Features::work_flops`). The drift EWMA must use the *same*
-    /// normalization — `Csrc::flops()` counts the symmetric kernel's
-    /// flops differently, which would skew the comparison by up to 2×.
-    work_flops: usize,
-    measured: bool,
-    /// The decision-cache key, so a worker can write the served
-    /// baseline back into the persisted entry.
-    fingerprint: u64,
-    max_threads: usize,
-    /// The decision's tuned panel width: same-matrix requests in one
-    /// batch coalesce into `spmv_multi` panels this wide (1 = the
-    /// blocked product lost its own tuning race, serve serially).
-    block_k: usize,
-}
-
-impl ResolvedAuto {
-    fn from_decision(d: &tuner::Decision) -> ResolvedAuto {
-        ResolvedAuto {
-            kind: d.kind,
-            reorder: d.reorder,
-            nthreads: d.nthreads,
-            mflops: d.mflops,
-            served_mflops: d.served_mflops,
-            work_flops: d.features.work_flops,
-            measured: d.measured,
-            fingerprint: d.fingerprint,
-            max_threads: d.max_threads,
-            block_k: d.block_k.max(1),
-        }
-    }
-}
-
-/// Per-key drift tracking state (keyed by `key@generation`).
-#[derive(Clone, Copy, Debug, Default)]
-struct DriftState {
-    ewma_mflops: f64,
-    batches: u64,
-    /// A re-tune has been queued and not yet completed — don't queue
-    /// another for the same key × generation.
-    retune_pending: bool,
-    /// Set by the re-tuner when it publishes an upgraded decision: the
-    /// next `drift_min_batches` batches *calibrate* — their EWMA is
-    /// recorded as the entry's served baseline instead of being judged
-    /// against the fresh (warm, optimistic) trial rate. Without this a
-    /// decision whose trial rate sits far above serving reality would
-    /// re-trigger after every re-tune: a storm.
-    calibrating: bool,
-    /// The baseline the calibration window recorded (0 = none yet).
-    /// Judgement reads it here, under the same lock, rather than from
-    /// the batch's `ResolvedAuto` snapshot: a second worker whose
-    /// snapshot predates the calibration write must not re-judge
-    /// against the optimistic trial rate and queue a spurious re-tune.
-    served_baseline: f64,
-}
-
-/// A drift-triggered re-tune request, handled off the request path.
-struct RetuneJob {
-    matrix: String,
-    cache_key: String,
-    generation: u64,
-}
-
-/// Work for the `matvec-retuner` thread — everything that must stay off
-/// the request path.
-enum RetunerMsg {
-    /// Re-run the measured trials and upgrade the decision entry.
-    Retune(RetuneJob),
-    /// Persist a calibration window's served-EWMA baseline into the
-    /// cache entry. `DecisionCache::set_served_rate` rewrites the whole
-    /// file, so a worker must not pay for it inside a batch.
-    RecordServedRate { fingerprint: u64, max_threads: usize, mflops: f64 },
-}
-
-/// Auto-route choice log. Genuinely structured (ordered key/value
-/// pairs), so it lives behind a small mutex next to the registry's
-/// scalar atomics — nothing on the request path touches it.
-#[derive(Default)]
-struct ChoiceLog {
-    auto_choices: Vec<(String, String)>,
-    chosen_threads: Vec<(String, usize)>,
-}
-
-/// Shared mutable service state: typed handles into the service's
-/// [`MetricsRegistry`]. Every scalar [`ServiceStats`] reports lives in
-/// a registry atomic, so a `stats()` snapshot and a Prometheus scrape
-/// read the *same* cells — the old `Mutex<Stats>` could not serve a
-/// scrape without cloning, and a lock-free copy of it could tear.
-struct Counters {
-    obs: Arc<MetricsRegistry>,
-    submitted: Counter,
-    completed: Counter,
-    failed: Counter,
-    batches: Counter,
-    tunes: Counter,
-    /// Nanoseconds — registry counters are integers; `stats()` converts
-    /// back to seconds.
-    tune_ns: Counter,
-    engines_evicted: Counter,
-    retunes: Counter,
-    drift_events: Counter,
-    model_hits: Counter,
-    model_fallbacks: Counter,
-    coalesced_products: Counter,
-    coalesced_requests: Counter,
-    rcm_builds: Counter,
-    choices: Mutex<ChoiceLog>,
-}
-
-impl Counters {
-    fn new(obs: Arc<MetricsRegistry>) -> Counters {
-        Counters {
-            submitted: obs.counter("csrc_requests_submitted_total"),
-            completed: obs.counter("csrc_requests_completed_total"),
-            failed: obs.counter("csrc_requests_failed_total"),
-            batches: obs.counter("csrc_batches_total"),
-            tunes: obs.counter("csrc_tunes_total"),
-            tune_ns: obs.counter("csrc_tune_ns_total"),
-            engines_evicted: obs.counter("csrc_engines_evicted_total"),
-            retunes: obs.counter("csrc_retunes_total"),
-            drift_events: obs.counter("csrc_drift_events_total"),
-            model_hits: obs.counter("csrc_model_hits_total"),
-            model_fallbacks: obs.counter("csrc_model_fallbacks_total"),
-            coalesced_products: obs.counter("csrc_coalesced_products_total"),
-            coalesced_requests: obs.counter("csrc_coalesced_requests_total"),
-            rcm_builds: obs.counter("csrc_rcm_builds_total"),
-            choices: Mutex::new(ChoiceLog::default()),
-            obs,
-        }
-    }
-
-    fn add_tune_seconds(&self, s: f64) {
-        self.tune_ns.add((s * 1e9) as u64);
-    }
-}
-
-/// Observable service counters: a typed snapshot over the service's
-/// [`MetricsRegistry`] atomics, taken in an order that preserves
-/// `completed + failed <= submitted` even while workers are mid-batch.
-#[derive(Clone, Debug)]
-pub struct ServiceStats {
-    pub submitted: u64,
-    pub completed: u64,
-    pub failed: u64,
-    pub batches: u64,
-    pub mean_latency_us: f64,
-    pub p99_latency_us: f64,
-    /// How many scheduling plans were built (cache misses) — with N
-    /// workers all serving one matrix this stays 1, not N.
-    pub plan_builds: u64,
-    /// Total wall-clock seconds spent in plan analysis.
-    pub plan_build_seconds: f64,
-    /// Measured tuning runs performed for `EngineKind::Auto`
-    /// registrations (decision-cache hits do not count).
-    pub tunes: u64,
-    /// Wall-clock seconds spent inside those tuning runs.
-    pub tune_seconds: f64,
-    /// Autotuner decisions answered from the (possibly persisted)
-    /// decision cache with zero new trials.
-    pub decision_hits: u64,
-    /// Engines dropped from worker caches by the LRU eviction policy.
-    pub engines_evicted: u64,
-    /// (matrix key, resolved engine label) per Auto registration, in
-    /// registration order.
-    pub auto_choices: Vec<(String, String)>,
-    /// (matrix key, decision thread count) per Auto registration — with
-    /// `RoutePolicy::sweep_threads` this is the swept pick, which may
-    /// sit below `RoutePolicy::threads`.
-    pub chosen_threads: Vec<(String, usize)>,
-    /// Background re-tunes completed after drift detection.
-    pub retunes: u64,
-    /// Batches whose rate EWMA sat below the drift threshold.
-    pub drift_events: u64,
-    /// Cold-start Auto registrations answered by the learned cost model
-    /// (zero-budget predictions; decision-cache hits count in
-    /// `decision_hits`, not here).
-    pub model_hits: u64,
-    /// Cold-start Auto registrations that fell back to the hand-written
-    /// heuristic — no model configured, or it declined to predict.
-    pub model_fallbacks: u64,
-    /// Blocked (`spmv_multi`) products run in place of serial per-request
-    /// products — one per coalesced panel.
-    pub coalesced_products: u64,
-    /// Requests served through those panels (`Σ` panel widths).
-    pub coalesced_requests: u64,
-    /// RCM orderings computed for reordered serving. With N workers all
-    /// serving one key through the shared registry this stays 1, not N.
-    pub rcm_builds: u64,
-}
-
-/// Registry value: the matrix plus a per-key generation counter.
-/// Worker-side caches (engines, plans) key on `key@generation`, so a
-/// replaced matrix can never be served by state built for its
-/// predecessor — stale engines become unreachable instead of unsound.
-type Registry = HashMap<String, (Arc<Csrc>, u64)>;
-
-/// Shared RCM artifacts for reordered serving, keyed by
-/// `key@generation`: the permutation and the permuted matrix. Shared
-/// across workers (like the plan cache) so a matrix served reordered by
-/// N workers is permuted once, not once per worker; entries of retired
-/// generations are collected by `register()` on replacement.
-type RcmRegistry = HashMap<String, (Arc<Csrc>, Arc<Permutation>)>;
 
 pub struct MatvecService {
     registry: Arc<Mutex<Registry>>,
@@ -483,51 +257,24 @@ impl MatvecService {
             self.drift.lock().unwrap().retain(|k, _| !is_generation_of(k, &prefix));
         }
         // Auto routing: resolve the concrete engine — and, with
-        // `sweep_threads`, the thread count — now, off the request path.
-        // The decision cache is keyed by structure fingerprint × thread
-        // budget, so a re-registered matrix — or one registered with a
-        // service restarted onto the same persisted cache — resolves
-        // with zero new trials. (A request racing this resolution falls
-        // back to the model/heuristic inside the worker; it never
-        // blocks.)
+        // `sweep_threads`, the thread count — now, off the request path
+        // ([`registration::resolve_auto`]). The decision cache is keyed
+        // by structure fingerprint × thread budget, so a re-registered
+        // matrix — or one registered with a service restarted onto the
+        // same persisted cache — resolves with zero new trials. (A
+        // request racing this resolution falls back to the
+        // model/heuristic inside the worker; it never blocks.)
         if self.route.parallel_kind == EngineKind::Auto && a.n >= self.route.min_parallel_n {
             let cache_key = format!("{key}@{generation}");
             let kernel: Arc<dyn SpmvKernel> = a.clone();
-            let threads = self.route.threads.max(1);
-            let (d, hit) = if self.route.sweep_threads {
-                let ladder = tuner::thread_ladder(threads);
-                let mut plan_for = tuner::cached_plan_provider(&self.plans, &cache_key, &kernel);
-                let r = tuner::resolve_swept_with_model(
-                    &kernel,
-                    &ladder,
-                    &self.tune_budget,
-                    &self.decisions,
-                    &mut plan_for,
-                    self.route.reorder,
-                    self.model.as_deref(),
-                );
-                // Only the winning rung's analysis stays alive — for
-                // the plain plans and any reordered (`#rcm`) plans the
-                // workers may have built at losing thread counts.
-                self.plans.invalidate_other_threads(&cache_key, r.0.nthreads);
-                self.plans
-                    .invalidate_other_threads(&format!("{cache_key}#rcm"), r.0.nthreads);
-                r
-            } else {
-                let plan = self.plans.get_or_build(
-                    &cache_key,
-                    kernel.as_ref(),
-                    PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
-                );
-                tuner::resolve_with_model(
-                    &kernel,
-                    &plan,
-                    &self.tune_budget,
-                    &self.decisions,
-                    self.route.reorder,
-                    self.model.as_deref(),
-                )
+            let ctx = ResolverCtx {
+                plans: &self.plans,
+                route: &self.route,
+                budget: &self.tune_budget,
+                decisions: &self.decisions,
+                model: self.model.as_deref(),
             };
+            let (d, hit) = registration::resolve_auto(&ctx, &cache_key, &kernel);
             self.resolved
                 .lock()
                 .unwrap()
@@ -571,6 +318,17 @@ impl MatvecService {
         self.submit(key, x)
             .recv()
             .map_err(|_| "service shut down before reply".to_string())?
+    }
+
+    /// Requests currently submitted but not yet answered. The sharded
+    /// front reads this as its per-shard queue depth for back-pressure;
+    /// the read order (completed/failed first) keeps the depth an
+    /// over-estimate, never an under-estimate — a full queue can only
+    /// look fuller, so back-pressure stays conservative.
+    pub fn in_flight(&self) -> u64 {
+        let c = &self.stats;
+        let done = c.completed.get() + c.failed.get();
+        c.submitted.get().saturating_sub(done)
     }
 
     /// Snapshot the registry into a [`ServiceStats`]. Read order matters
@@ -650,16 +408,6 @@ impl Drop for MatvecService {
     }
 }
 
-/// Does `k` name a generation of exactly the key whose prefix is
-/// `"key@"` — i.e. `key@<digits>`? An all-digit suffix can only be a
-/// generation stamped by `register()`; anything else (e.g. `key@b@0`)
-/// belongs to a *different* user key that happens to contain '@'.
-fn is_generation_of(k: &str, prefix: &str) -> bool {
-    k.starts_with(prefix)
-        && k.len() > prefix.len()
-        && k[prefix.len()..].bytes().all(|b| b.is_ascii_digit())
-}
-
 fn dispatcher_loop(
     queue: Receiver<Request>,
     worker_txs: Vec<Sender<WorkerBatch>>,
@@ -705,505 +453,11 @@ fn dispatcher_loop(
     }
 }
 
-/// Everything one worker thread shares with the service.
-struct WorkerCtx {
-    registry: Arc<Mutex<Registry>>,
-    plans: Arc<PlanCache>,
-    route: RoutePolicy,
-    stats: Arc<Counters>,
-    /// This worker's slice of the `csrc_request_latency_us` summary —
-    /// recorded lock-free of other workers, merged at snapshot/scrape
-    /// time ([`MetricsRegistry::merged_histogram`]).
-    latency: HistogramHandle,
-    resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
-    /// Shared RCM artifacts — one permutation + permuted matrix per
-    /// served `key@generation`, built by whichever worker gets there
-    /// first (under the lock, so never twice).
-    rcm: Arc<Mutex<RcmRegistry>>,
-    drift: Arc<Mutex<HashMap<String, DriftState>>>,
-    /// Cold-start model, consulted by the racing-request fallback so the
-    /// fallback order (cache → model → heuristic) holds on the worker
-    /// side too.
-    model: Option<Arc<tuner::CostModel>>,
-    /// Re-tunes *and* served-baseline write-backs go here — both touch
-    /// the persisted decision cache, which must stay off the request
-    /// path.
-    retune_tx: Sender<RetunerMsg>,
-    engine_capacity: usize,
-    drift_fraction: f64,
-    drift_min_batches: u64,
-}
-
-/// Worker engine-cache key: (matrix, generation, engine label, threads,
-/// reordered). The thread count is part of the key because a re-tune
-/// may move a key to a different p; the reorder flag because a re-tune
-/// may flip the ordering.
-type EngineKey = (String, u64, String, usize, bool);
-
-fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
-    let router = Router::new(ctx.route.clone());
-    // Engine cache per [`EngineKey`] — engines hold execution state
-    // (pool, buffers) and are not Sync, so each worker owns its own; the
-    // *plan* inside every engine comes from the shared service cache.
-    // Structural keys so user keys containing '@' cannot alias
-    // generations. Values carry the last-served batch tick for the LRU
-    // eviction below.
-    let mut engines: HashMap<EngineKey, (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
-    let mut serve_tick: u64 = 0;
-    while let Ok(batch) = rx.recv() {
-        let _serve_span = obs::phase(Phase::Serve);
-        let hit = ctx.registry.lock().unwrap().get(&batch.matrix).cloned();
-        let Some((a, generation)) = hit else {
-            for r in batch.requests {
-                ctx.stats.failed.inc();
-                let _ = r.reply.send(Err(format!("unknown matrix {:?}", batch.matrix)));
-            }
-            continue;
-        };
-        // Generation-qualified key: caches can never mix state across a
-        // register() replacement (the matrix and its engines/plans stay
-        // a consistent snapshot even if the registry changes mid-batch).
-        let cache_key = format!("{}@{generation}", batch.matrix);
-        // Evict engines built for retired generations of this matrix —
-        // each pins a ThreadPool (live OS threads), the old matrix, and
-        // its plan. (Retired RCM artifacts live in the shared registry
-        // and are collected by `register()` on replacement.)
-        engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
-        serve_tick += 1;
-        let mut used_key: Option<EngineKey> = None;
-        // Resolve Auto once per batch (it is batch-invariant): through
-        // the registration-time decision — which carries the swept
-        // thread count, not `RoutePolicy::threads` blindly — or, for a
-        // request racing that resolution, the model/heuristic (features
-        // only, no trials), rather than blocking or tuning on the
-        // request path.
-        let mut auto_decision: Option<ResolvedAuto> = None;
-        let backend = match router.route(&a) {
-            Backend::NativeParallel { kind: EngineKind::Auto, threads, reorder } => {
-                let known = ctx.resolved.lock().unwrap().get(&cache_key).copied();
-                match known {
-                    Some(r) => {
-                        auto_decision = Some(r);
-                        Backend::NativeParallel {
-                            kind: r.kind,
-                            threads: r.nthreads,
-                            reorder: r.reorder,
-                        }
-                    }
-                    None => {
-                        let plan = ctx.plans.get_or_build(
-                            &cache_key,
-                            a.as_ref(),
-                            PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
-                        );
-                        // Same fallback order as registration (model,
-                        // then heuristic). The batch executes with the
-                        // route's reorder flag either way (an Always
-                        // route builds the RCM engine regardless), so
-                        // the model must score classes for the ordering
-                        // that will actually run — predicting plain for
-                        // a reordered execution would pick from the
-                        // wrong class space.
-                        let features = tuner::Features::extract(a.as_ref(), &plan);
-                        let policy = if reorder {
-                            crate::reorder::ReorderPolicy::Always
-                        } else {
-                            crate::reorder::ReorderPolicy::Never
-                        };
-                        let kind = ctx
-                            .model
-                            .as_deref()
-                            .and_then(|m| m.predict(&features, policy))
-                            .map(|p| p.kind)
-                            .unwrap_or_else(|| tuner::cost_model(&features));
-                        Backend::NativeParallel { kind, threads, reorder }
-                    }
-                }
-            }
-            other => other,
-        };
-        // Per-batch rate sample for drift detection: seconds spent in
-        // engine products and how many vector products ran (a k-wide
-        // panel counts k — the EWMA stays per-vector-normalized).
-        let mut batch_secs = 0.0f64;
-        let mut batch_products = 0usize;
-        // Validate lengths up front: a malformed request fails on its
-        // own and never joins a panel.
-        let mut valid: Vec<Request> = Vec::with_capacity(batch.requests.len());
-        for req in batch.requests {
-            if req.x.len() != a.n {
-                ctx.stats.failed.inc();
-                let _ = req
-                    .reply
-                    .send(Err(format!("x length {} != n {}", req.x.len(), a.n)));
-            } else {
-                valid.push(req);
-            }
-        }
-        match &backend {
-            Backend::NativeSequential => {
-                for req in &valid {
-                    let mut y = vec![0.0; a.n];
-                    a.spmv_into_zeroed(&req.x, &mut y);
-                    finish_request(&ctx, req, y);
-                }
-                count_products(&ctx, &batch.matrix, "sequential", 1, valid.len() as u64);
-            }
-            Backend::Xla { artifact } => {
-                // The XLA path is exercised via examples/ and the CLI
-                // (XlaRuntime is heavyweight); in-service we fall back
-                // to sequential to keep the worker self-contained.
-                let _ = artifact;
-                for req in &valid {
-                    let mut y = vec![0.0; a.n];
-                    a.spmv_into_zeroed(&req.x, &mut y);
-                    finish_request(&ctx, req, y);
-                }
-                count_products(&ctx, &batch.matrix, "sequential", 1, valid.len() as u64);
-            }
-            Backend::NativeParallel { kind, threads, reorder } if !valid.is_empty() => {
-                let ekey =
-                    (batch.matrix.clone(), generation, kind.label(), *threads, *reorder);
-                let slot = engines.entry(ekey.clone()).or_insert_with(|| {
-                    let engine: Box<dyn ParallelSpmv> = if *reorder {
-                        // Serve through the RCM ordering: the permuted
-                        // matrix and its permutation come from the
-                        // *shared* registry — whichever worker arrives
-                        // first builds them under the lock, every other
-                        // worker (and engine kind) reuses the Arcs. The
-                        // wrapper permutes x in / un-permutes y out per
-                        // product.
-                        let (pa, perm) = {
-                            let mut rcm = ctx.rcm.lock().unwrap();
-                            rcm.entry(cache_key.clone())
-                                .or_insert_with(|| {
-                                    ctx.stats.rcm_builds.inc();
-                                    let perm = Arc::new(reorder::rcm(a.as_ref()));
-                                    let pa = Arc::new(a.permuted(&perm));
-                                    (pa, perm)
-                                })
-                                .clone()
-                        };
-                        let plan = ctx.plans.get_or_build(
-                            &format!("{cache_key}#rcm"),
-                            pa.as_ref(),
-                            PlanBuilder::for_kind(*threads, *kind),
-                        );
-                        Box::new(ReorderedEngine::new(
-                            build_engine(*kind, pa, plan),
-                            perm,
-                        ))
-                    } else {
-                        let plan = ctx.plans.get_or_build(
-                            &cache_key,
-                            a.as_ref(),
-                            PlanBuilder::for_kind(*threads, *kind),
-                        );
-                        build_engine(*kind, a.clone(), plan)
-                    };
-                    (engine, 0)
-                });
-                slot.1 = serve_tick;
-                used_key = Some(ekey);
-                // Coalesce the batch into k-wide panels: the tuned
-                // width for resolved Auto routes (block_k = 1 means the
-                // blocked product lost its own race — serve serially),
-                // the ladder cap for explicit routes.
-                let cap = auto_decision
-                    .map(|r| r.block_k.max(1))
-                    .unwrap_or(DEFAULT_PANEL_WIDTH);
-                let engine_label = kind.label();
-                let mut i = 0usize;
-                while i < valid.len() {
-                    let g = cap.min(valid.len() - i);
-                    if g <= 1 {
-                        let req = &valid[i];
-                        let mut y = vec![0.0; a.n];
-                        let t = Instant::now();
-                        slot.0.spmv(&req.x, &mut y);
-                        batch_secs += t.elapsed().as_secs_f64();
-                        batch_products += 1;
-                        count_products(&ctx, &batch.matrix, &engine_label, 1, 1);
-                        finish_request(&ctx, req, y);
-                        i += 1;
-                    } else {
-                        // Pack the g request vectors into one row-major
-                        // panel (x[j*g + c] = request c's x[j]), run a
-                        // single blocked product, unpack per request.
-                        let pack_span = obs::phase(Phase::Coalesce);
-                        let mut xp = vec![0.0; a.n * g];
-                        for (c, req) in valid[i..i + g].iter().enumerate() {
-                            for (j, &v) in req.x.iter().enumerate() {
-                                xp[j * g + c] = v;
-                            }
-                        }
-                        drop(pack_span);
-                        let mut yp = vec![0.0; a.n * g];
-                        let t = Instant::now();
-                        slot.0.spmv_multi(&xp, &mut yp, g);
-                        batch_secs += t.elapsed().as_secs_f64();
-                        batch_products += g;
-                        ctx.stats.coalesced_products.inc();
-                        ctx.stats.coalesced_requests.add(g as u64);
-                        count_products(&ctx, &batch.matrix, &engine_label, g, 1);
-                        let unpack_span = obs::phase(Phase::Coalesce);
-                        for (c, req) in valid[i..i + g].iter().enumerate() {
-                            let mut y = vec![0.0; a.n];
-                            for (j, yj) in y.iter_mut().enumerate() {
-                                *yj = yp[j * g + c];
-                            }
-                            finish_request(&ctx, req, y);
-                        }
-                        drop(unpack_span);
-                        i += g;
-                    }
-                }
-            }
-            Backend::NativeParallel { .. } => {} // every request failed validation
-        }
-        if let Some(r) = auto_decision {
-            let job = RetuneJob {
-                matrix: batch.matrix.clone(),
-                cache_key: cache_key.clone(),
-                generation,
-            };
-            maybe_flag_drift(&ctx, job, r, batch_products, batch_secs);
-        }
-        // LRU eviction (ROADMAP item): a worker that has served many
-        // distinct keys must not park one thread pool per key forever.
-        // Evict the least-recently-served engines above capacity, never
-        // the one this batch just used.
-        if engines.len() > ctx.engine_capacity {
-            let mut evicted = 0u64;
-            while engines.len() > ctx.engine_capacity {
-                let victim = engines
-                    .iter()
-                    .filter(|&(k, _)| used_key.as_ref() != Some(k))
-                    .min_by_key(|&(_, &(_, tick))| tick)
-                    .map(|(k, _)| k.clone());
-                let Some(v) = victim else { break };
-                engines.remove(&v);
-                evicted += 1;
-            }
-            if evicted > 0 {
-                ctx.stats.engines_evicted.add(evicted);
-            }
-        }
-    }
-}
-
-/// Reply to one served request and record its completion + latency.
-/// `completed` is bumped *before* the reply is sent, so a caller whose
-/// `call()` has returned is always visible in the next snapshot.
-fn finish_request(ctx: &WorkerCtx, req: &Request, y: Vec<f64>) {
-    ctx.stats.completed.inc();
-    ctx.latency.record(req.enqueued.elapsed().as_secs_f64());
-    let _ = req.reply.send(Ok(y));
-}
-
-/// Bump the per-engine product family
-/// (`csrc_engine_products_total{matrix,engine,k}`) for `products`
-/// products served at panel width `k`.
-fn count_products(ctx: &WorkerCtx, matrix: &str, engine: &str, k: usize, products: u64) {
-    let width = k.to_string();
-    ctx.stats
-        .obs
-        .family_counter(
-            "csrc_engine_products_total",
-            &[("matrix", matrix), ("engine", engine), ("k", &width)],
-        )
-        .add(products);
-}
-
-/// Fold one batch's measured rate into the key's EWMA and queue a
-/// background re-tune — once per key × generation — when it has drifted
-/// below `drift_fraction` of the decision's *baseline* rate. The rate
-/// is normalized by the decision's own `work_flops`, so the EWMA and
-/// the baseline are in the same units. Unmeasured (model/heuristic)
-/// decisions record no rate and are never drift-checked.
-///
-/// The baseline is the entry's **served** rate when one has been
-/// recorded, else the trial rate. Trials are warm back-to-back products
-/// and therefore optimistic relative to per-request serving — judging
-/// serving against them forever re-triggers (a re-tune storm). So the
-/// first `drift_min_batches` batches after a re-tune *calibrate*
-/// (`DriftState::calibrating`): their EWMA is written back into the
-/// resolved entry and the persisted cache entry as the served baseline,
-/// and only later batches are judged, against that baseline.
-fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: usize, secs: f64) {
-    if products == 0
-        || secs <= 0.0
-        || ctx.drift_fraction <= 0.0
-        || !r.measured
-        || r.mflops <= 0.0
-        || r.work_flops == 0
-    {
-        return;
-    }
-    let rate = metrics::mflops(r.work_flops * products, secs);
-    let mut drift = ctx.drift.lock().unwrap();
-    let st = drift.entry(job.cache_key.clone()).or_default();
-    st.ewma_mflops = if st.batches == 0 {
-        rate
-    } else {
-        EWMA_ALPHA * rate + (1.0 - EWMA_ALPHA) * st.ewma_mflops
-    };
-    st.batches += 1;
-    if st.batches < ctx.drift_min_batches {
-        return;
-    }
-    if st.calibrating {
-        // Enough post-re-tune batches: the EWMA *is* serving reality
-        // now. (The first sample can straddle the old engine for one
-        // batch — the EWMA shrugs that off.) Record it as the judging
-        // baseline under this lock, publish it to the resolved entry
-        // (cheap, in-memory) and hand the persisted write-back — a full
-        // cache-file rewrite — to the re-tuner thread; judgement
-        // restarts next batch.
-        st.calibrating = false;
-        st.served_baseline = st.ewma_mflops;
-        let ewma = st.ewma_mflops;
-        drop(drift);
-        if let Some(e) = ctx.resolved.lock().unwrap().get_mut(&job.cache_key) {
-            e.served_mflops = ewma;
-        }
-        let _ = ctx.retune_tx.send(RetunerMsg::RecordServedRate {
-            fingerprint: r.fingerprint,
-            max_threads: r.max_threads,
-            mflops: ewma,
-        });
-        return;
-    }
-    // Baseline preference: the lock-protected calibration record, then
-    // the decision's persisted served rate (a restarted service), then
-    // — for never-calibrated decisions — the trial rate.
-    let baseline = if st.served_baseline > 0.0 {
-        st.served_baseline
-    } else if r.served_mflops > 0.0 {
-        r.served_mflops
-    } else {
-        r.mflops
-    };
-    if st.ewma_mflops >= ctx.drift_fraction * baseline {
-        return;
-    }
-    let already_pending = st.retune_pending;
-    st.retune_pending = true;
-    drop(drift);
-    ctx.stats.drift_events.inc();
-    if !already_pending {
-        let _ = ctx.retune_tx.send(RetunerMsg::Retune(job));
-    }
-}
-
-/// Everything the background re-tuner shares with the service.
-struct RetunerCtx {
-    registry: Arc<Mutex<Registry>>,
-    plans: Arc<PlanCache>,
-    route: RoutePolicy,
-    budget: TrialBudget,
-    decisions: Arc<DecisionCache>,
-    resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
-    drift: Arc<Mutex<HashMap<String, DriftState>>>,
-    stats: Arc<Counters>,
-}
-
-/// Drain re-tuner work: drift-triggered re-tunes (re-run the measured
-/// trials — the sweep when `route.sweep_threads` — against the
-/// *current* machine state, upgrade the decision-cache entry in place,
-/// republish the resolution for workers, and reset the key's drift
-/// state into calibration) and served-baseline write-backs the workers
-/// hand off (a full cache-file rewrite each — request-path poison).
-fn retuner_loop(rx: Receiver<RetunerMsg>, ctx: RetunerCtx) {
-    while let Ok(msg) = rx.recv() {
-        let job = match msg {
-            RetunerMsg::Retune(job) => job,
-            RetunerMsg::RecordServedRate { fingerprint, max_threads, mflops } => {
-                ctx.decisions.set_served_rate(fingerprint, max_threads, mflops);
-                continue;
-            }
-        };
-        let hit = ctx.registry.lock().unwrap().get(&job.matrix).cloned();
-        let Some((a, generation)) = hit else { continue };
-        if generation != job.generation {
-            continue; // replaced since the drift was observed
-        }
-        let _retune_span = obs::phase(Phase::Retune);
-        let kernel: Arc<dyn SpmvKernel> = a.clone();
-        // A zero budget cannot produce the measured decision a drift
-        // repair needs; degrade to the cheapest measuring budget.
-        let budget = if ctx.budget.is_zero() { TrialBudget::smoke() } else { ctx.budget };
-        let threads = ctx.route.threads.max(1);
-        let d = if ctx.route.sweep_threads {
-            let ladder = tuner::thread_ladder(threads);
-            let mut plan_for = tuner::cached_plan_provider(&ctx.plans, &job.cache_key, &kernel);
-            let d = tuner::sweep_reordered(
-                &kernel,
-                &ladder,
-                &budget,
-                &mut plan_for,
-                ctx.route.reorder,
-            );
-            ctx.plans.invalidate_other_threads(&job.cache_key, d.nthreads);
-            // Reordered (`#rcm`) plans workers built at the losing
-            // thread counts are dead weight too.
-            ctx.plans
-                .invalidate_other_threads(&format!("{}#rcm", job.cache_key), d.nthreads);
-            d
-        } else {
-            let plan = ctx.plans.get_or_build(
-                &job.cache_key,
-                kernel.as_ref(),
-                PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
-            );
-            tuner::tune_reordered(&kernel, &plan, &budget, ctx.route.reorder)
-        };
-        // The fresh measurement is keyed by structure fingerprint, so it
-        // is worth persisting even if the registration changed under us.
-        ctx.decisions.put(d.clone());
-        // Publish to the workers only if the generation is still
-        // current: register() may have replaced the matrix while we
-        // measured, and it already purged this generation's entries —
-        // re-inserting would resurrect dead keys. The registry check
-        // happens *under* the map locks, so a concurrent replacement
-        // either purges after our insert or we observe its generation
-        // bump and skip.
-        {
-            let mut resolved = ctx.resolved.lock().unwrap();
-            let mut drift = ctx.drift.lock().unwrap();
-            let current = ctx
-                .registry
-                .lock()
-                .unwrap()
-                .get(&job.matrix)
-                .map(|(_, g)| *g)
-                == Some(job.generation);
-            if !current {
-                continue;
-            }
-            resolved.insert(job.cache_key.clone(), ResolvedAuto::from_decision(&d));
-            // Fresh state (`retune_pending` cleared) in *calibration*
-            // mode: the next drift_min_batches batches record the
-            // served EWMA as the new entry's baseline instead of being
-            // judged against its warm trial rate — see maybe_flag_drift
-            // (this is what stops the re-tune storm).
-            drift.insert(job.cache_key, DriftState { calibrating: true, ..Default::default() });
-        }
-        ctx.stats.retunes.inc();
-        ctx.stats.add_tune_seconds(d.tuned_s);
-    }
-}
-
 #[cfg(test)]
 mod tests {
+    use super::super::test_support::mat;
     use super::*;
     use crate::sparse::Coo;
-    use crate::util::Rng;
-
-    fn mat(n: usize, seed: u64) -> Arc<Csrc> {
-        let mut rng = Rng::new(seed);
-        Arc::new(Csrc::from_coo(&Coo::random_structurally_symmetric(n, 3, false, &mut rng)).unwrap())
-    }
 
     #[test]
     fn serves_correct_products() {
@@ -1265,22 +519,6 @@ mod tests {
     }
 
     #[test]
-    fn parallel_backend_used_for_large_matrices() {
-        let mut cfg = ServiceConfig::default();
-        cfg.route.min_parallel_n = 32; // force the parallel path
-        cfg.route.threads = 2;
-        let svc = MatvecService::start(cfg);
-        let a = mat(200, 84);
-        svc.register("big", a.clone());
-        let x = vec![1.0; 200];
-        let y = svc.call("big", x.clone()).unwrap();
-        let mut want = vec![0.0; 200];
-        a.spmv_into_zeroed(&x, &mut want);
-        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        svc.shutdown();
-    }
-
-    #[test]
     fn plan_built_once_across_workers_and_requests() {
         // Four workers hammering one matrix over the parallel backend
         // must share a single cached plan — the registry analyzes a
@@ -1310,600 +548,6 @@ mod tests {
         let x2 = vec![1.0; 90];
         let _ = svc.call("other", x2).unwrap();
         assert_eq!(svc.stats().plan_builds, 2);
-        svc.shutdown();
-    }
-
-    #[test]
-    fn replacing_a_matrix_retires_its_engines_and_plans() {
-        // After register() overwrites a key — even with a different size
-        // — requests must run against the new matrix, not a worker's
-        // cached engine for the old one.
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1; // one worker so the engine cache is definitely warm
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        let svc = MatvecService::start(cfg);
-        let a1 = mat(60, 87);
-        svc.register("m", a1.clone());
-        let x1 = vec![1.0; 60];
-        let y1 = svc.call("m", x1.clone()).unwrap();
-        let mut want1 = vec![0.0; 60];
-        a1.spmv_into_zeroed(&x1, &mut want1);
-        crate::util::propcheck::assert_close(&y1, &want1, 1e-11, 1e-11).unwrap();
-        // Replace with a smaller matrix (the dangerous direction for a
-        // stale engine) and serve again.
-        let a2 = mat(40, 88);
-        svc.register("m", a2.clone());
-        let x2 = vec![1.0; 40];
-        let y2 = svc.call("m", x2.clone()).unwrap();
-        let mut want2 = vec![0.0; 40];
-        a2.spmv_into_zeroed(&x2, &mut want2);
-        crate::util::propcheck::assert_close(&y2, &want2, 1e-11, 1e-11).unwrap();
-        let s = svc.stats();
-        assert_eq!(s.completed, 2);
-        assert_eq!(s.plan_builds, 2, "replacement must build a fresh plan");
-        svc.shutdown();
-    }
-
-    #[test]
-    fn auto_routing_tunes_once_and_persists_decisions() {
-        let dir = std::env::temp_dir().join(format!("csrc_auto_svc_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        let mut cfg = ServiceConfig::default();
-        cfg.route.parallel_kind = EngineKind::Auto;
-        cfg.route.min_parallel_n = 1; // force the parallel (Auto) path
-        cfg.route.threads = 2;
-        cfg.tune_budget = TrialBudget::smoke();
-        cfg.decision_cache = Some(dir.join("decisions.json"));
-        let a = mat(150, 89);
-        let x: Vec<f64> = (0..150).map(|i| (i as f64 * 0.01).sin()).collect();
-        let mut want = vec![0.0; 150];
-        a.spmv_into_zeroed(&x, &mut want);
-
-        let svc = MatvecService::start(cfg.clone());
-        svc.register("m", a.clone());
-        let y = svc.call("m", x.clone()).unwrap();
-        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        let s = svc.stats();
-        assert_eq!(s.tunes, 1, "first Auto registration runs measured trials");
-        assert!(s.tune_seconds > 0.0);
-        assert_eq!(s.auto_choices.len(), 1);
-        let (key, label) = &s.auto_choices[0];
-        assert_eq!(key, "m");
-        let resolved = EngineKind::parse(label).expect("resolved label parses");
-        assert_ne!(resolved, EngineKind::Auto, "Auto must resolve to a concrete engine");
-        // Registering the same structure under another key: decision
-        // cache hit, zero new trials.
-        svc.register("m-again", a.clone());
-        let s = svc.stats();
-        assert_eq!(s.tunes, 1, "same structure must not re-tune");
-        assert!(s.decision_hits >= 1);
-        svc.shutdown();
-
-        // A restarted service on the same persisted cache re-tunes
-        // nothing: zero trials, decision read from disk.
-        let svc2 = MatvecService::start(cfg);
-        svc2.register("m", a.clone());
-        let y2 = svc2.call("m", x).unwrap();
-        crate::util::propcheck::assert_close(&y2, &want, 1e-11, 1e-11).unwrap();
-        let s2 = svc2.stats();
-        assert_eq!(s2.tunes, 0, "restart must hit the persisted decision cache");
-        assert!(s2.decision_hits >= 1);
-        assert_eq!(s2.auto_choices[0].1, *label, "persisted decision picks the same engine");
-        svc2.shutdown();
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    fn sweep_threads_resolves_engine_and_thread_count() {
-        let mut cfg = ServiceConfig::default();
-        cfg.route.parallel_kind = EngineKind::Auto;
-        cfg.route.min_parallel_n = 1; // force the parallel (Auto) path
-        cfg.route.threads = 2;
-        cfg.route.sweep_threads = true;
-        cfg.tune_budget = TrialBudget::smoke();
-        let svc = MatvecService::start(cfg);
-        let a = mat(150, 94);
-        svc.register("m", a.clone());
-        let s = svc.stats();
-        assert_eq!(s.tunes, 1, "first Auto registration runs the sweep");
-        assert_eq!(s.chosen_threads.len(), 1);
-        let (key, p) = &s.chosen_threads[0];
-        assert_eq!(key, "m");
-        assert!(*p == 1 || *p == 2, "thread count must come from the ladder, got {p}");
-        // Serving works at the swept thread count.
-        let x: Vec<f64> = (0..150).map(|i| (i as f64 * 0.01).sin()).collect();
-        let y = svc.call("m", x.clone()).unwrap();
-        let mut want = vec![0.0; 150];
-        a.spmv_into_zeroed(&x, &mut want);
-        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        // Same structure under a new key: the swept decision is served
-        // from the cache — no second sweep, same thread pick.
-        svc.register("m2", a.clone());
-        let s = svc.stats();
-        assert_eq!(s.tunes, 1, "same structure must not re-sweep");
-        assert!(s.decision_hits >= 1);
-        assert_eq!(s.chosen_threads[1].1, s.chosen_threads[0].1);
-        svc.shutdown();
-    }
-
-    /// A doctored swept decision: sequential at 1 thread (deliberately
-    /// *not* `RoutePolicy::threads`) with an impossibly high recorded
-    /// rate, so the served EWMA must sit below any drift threshold.
-    fn doctored_decision(fp: u64, mflops: f64) -> tuner::Decision {
-        tuner::Decision {
-            kind: EngineKind::Sequential,
-            reorder: false,
-            mflops,
-            measured: true,
-            provenance: tuner::Provenance::Measured,
-            served_mflops: 0.0,
-            tuned_s: 0.001,
-            fingerprint: fp,
-            nthreads: 1,
-            max_threads: 2,
-            features: tuner::Features {
-                n: 200,
-                work_flops: 2000,
-                scatter_pairs: 300,
-                scatter_ratio: 0.75,
-                bandwidth: 20,
-                window_rows: 320,
-                window_shrink: 0.8,
-                colors: 4,
-                intervals: 6,
-                balance: 1.1,
-                nthreads: 2,
-            },
-            trials: Vec::new(),
-            sweep: vec![tuner::SweepPoint { nthreads: 1, trials: Vec::new() }],
-            block_k: 1,
-            block_rates: Vec::new(),
-        }
-    }
-
-    #[test]
-    fn drift_triggers_background_retune() {
-        let dir = std::env::temp_dir().join(format!("csrc_drift_svc_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        let path = dir.join("decisions.json");
-        let a = mat(200, 95);
-        let kernel: Arc<dyn SpmvKernel> = a.clone();
-        let fp = tuner::fingerprint(kernel.as_ref());
-        // Pre-seed the persistent cache with the doctored decision under
-        // this service's (fingerprint × thread budget) key.
-        {
-            let cache = DecisionCache::open(&path);
-            cache.put(doctored_decision(fp, 1e9));
-        }
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.route.parallel_kind = EngineKind::Auto;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.route.sweep_threads = true;
-        cfg.tune_budget = TrialBudget::smoke();
-        cfg.decision_cache = Some(path.clone());
-        cfg.drift_fraction = 0.5;
-        cfg.drift_min_batches = 2;
-        let svc = MatvecService::start(cfg);
-        svc.register("m", a.clone());
-        let s = svc.stats();
-        assert_eq!(s.tunes, 0, "the doctored decision must be a cache hit");
-        assert_eq!(
-            s.chosen_threads,
-            vec![("m".to_string(), 1)],
-            "the service must consume the swept thread count, not RoutePolicy::threads"
-        );
-        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
-        let mut want = vec![0.0; 200];
-        a.spmv_into_zeroed(&x, &mut want);
-        // Serve batches until the background re-tune lands. Drift is
-        // certain — no real engine reaches 1e9 "Mflop/s" — so this loop
-        // only bounds how long we wait for the background thread.
-        let mut retuned = false;
-        for _ in 0..400 {
-            let y = svc.call("m", x.clone()).unwrap();
-            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-            if svc.stats().retunes >= 1 {
-                retuned = true;
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(5));
-        }
-        let s = svc.stats();
-        assert!(retuned, "drift must queue a background re-tune (drift_events={})", s.drift_events);
-        assert!(s.drift_events >= 1);
-        // Serving still works against the upgraded decision.
-        let y = svc.call("m", x.clone()).unwrap();
-        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        svc.shutdown();
-        // The re-tune upgraded the persisted entry in place: realistic
-        // measured rate, fresh sweep surface, same (fp × budget) key.
-        let back = DecisionCache::open(&path);
-        let d = back.get(fp, 2).expect("upgraded decision persisted");
-        assert!(d.measured && !d.sweep.is_empty());
-        assert!(d.mflops < 1e8, "recorded rate must be re-measured, got {}", d.mflops);
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    fn retuned_decision_uses_served_baseline_not_trial_rate() {
-        // Satellite (ISSUE 5): a doctored optimistic trial rate must
-        // trigger exactly ONE re-tune, not a storm. After the re-tune
-        // the worker's calibration window records the served EWMA into
-        // the entry, and later drift judgements run against that
-        // serving baseline — which the serving rate trivially meets.
-        let dir = std::env::temp_dir().join(format!("csrc_storm_svc_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        let path = dir.join("decisions.json");
-        let a = mat(200, 195);
-        let kernel: Arc<dyn SpmvKernel> = a.clone();
-        let fp = tuner::fingerprint(kernel.as_ref());
-        {
-            let cache = DecisionCache::open(&path);
-            cache.put(doctored_decision(fp, 1e9));
-        }
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.route.parallel_kind = EngineKind::Auto;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.route.sweep_threads = true;
-        cfg.tune_budget = TrialBudget::smoke();
-        cfg.decision_cache = Some(path.clone());
-        cfg.drift_fraction = 0.25;
-        cfg.drift_min_batches = 2;
-        let svc = MatvecService::start(cfg);
-        svc.register("m", a.clone());
-        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
-        let mut want = vec![0.0; 200];
-        a.spmv_into_zeroed(&x, &mut want);
-        // Serve until the (certain) first re-tune lands.
-        let mut retuned = false;
-        for _ in 0..400 {
-            let y = svc.call("m", x.clone()).unwrap();
-            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-            if svc.stats().retunes >= 1 {
-                retuned = true;
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(5));
-        }
-        assert!(retuned, "the doctored rate must trigger the first re-tune");
-        // Plenty of post-re-tune batches: calibration (2 batches) plus
-        // many judged ones. Without the served baseline every judged
-        // batch would re-flag drift against the fresh warm trial rate.
-        for _ in 0..40 {
-            let y = svc.call("m", x.clone()).unwrap();
-            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        }
-        // Give any (wrongly) queued re-tune time to complete.
-        std::thread::sleep(std::time::Duration::from_millis(100));
-        let s = svc.stats();
-        assert_eq!(s.retunes, 1, "served-EWMA baseline must stop the re-tune storm");
-        svc.shutdown();
-        // The baseline was persisted with the upgraded entry.
-        let back = DecisionCache::open(&path);
-        let d = back.get(fp, 2).expect("upgraded decision persisted");
-        assert!(d.measured);
-        assert!(d.mflops < 1e8, "trial rate was re-measured, got {}", d.mflops);
-        assert!(d.served_mflops > 0.0, "calibration must record the served baseline");
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    fn concurrent_register_serve_retune_stress() {
-        // Satellite (ISSUE 5): concurrent register/serve/retune must
-        // lose no cache upgrades — every doctored entry ends up
-        // re-measured in place — and the retune counter must reflect
-        // the observed upgrades (one per key, no storms), even with a
-        // key being re-registered mid-flight.
-        let dir = std::env::temp_dir().join(format!("csrc_stress_svc_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        let path = dir.join("decisions.json");
-        let mats: Vec<Arc<Csrc>> = (0..3).map(|i| mat(200, 300 + i)).collect();
-        let fps: Vec<u64> = mats
-            .iter()
-            .map(|m| {
-                let k: Arc<dyn SpmvKernel> = m.clone();
-                tuner::fingerprint(k.as_ref())
-            })
-            .collect();
-        {
-            let cache = DecisionCache::open(&path);
-            for fp in &fps {
-                cache.put(doctored_decision(*fp, 1e9));
-            }
-        }
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 2;
-        cfg.route.parallel_kind = EngineKind::Auto;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.route.sweep_threads = true;
-        cfg.tune_budget = TrialBudget::smoke();
-        cfg.decision_cache = Some(path.clone());
-        cfg.drift_fraction = 0.25;
-        cfg.drift_min_batches = 2;
-        let svc = MatvecService::start(cfg);
-        for (i, m) in mats.iter().enumerate() {
-            svc.register(&format!("m{i}"), m.clone());
-        }
-        assert_eq!(svc.stats().tunes, 0, "all three doctored entries must be cache hits");
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        std::thread::scope(|scope| {
-            for c in 0..3usize {
-                let svc = &svc;
-                let mats = &mats;
-                let stop = stop.clone();
-                scope.spawn(move || {
-                    let mut i = c;
-                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                        let k = i % 3;
-                        let m = &mats[k];
-                        let x: Vec<f64> =
-                            (0..m.n).map(|j| ((i + j) as f64 * 0.01).sin()).collect();
-                        let mut want = vec![0.0; m.n];
-                        m.spmv_into_zeroed(&x, &mut want);
-                        let y = svc.call(&format!("m{k}"), x).unwrap();
-                        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-                        i += 1;
-                    }
-                });
-            }
-            // Meanwhile: wait for all three re-tunes, poking a
-            // concurrent replacement of m0 (same matrix, so in-flight
-            // x vectors stay valid) into the middle of the run.
-            let mut ok = false;
-            for round in 0..1200 {
-                if svc.stats().retunes >= 3 {
-                    ok = true;
-                    break;
-                }
-                if round == 30 || round == 90 {
-                    svc.register("m0", mats[0].clone());
-                }
-                std::thread::sleep(std::time::Duration::from_millis(5));
-            }
-            stop.store(true, std::sync::atomic::Ordering::Relaxed);
-            assert!(ok, "all drifted keys must re-tune (retunes={})", svc.stats().retunes);
-        });
-        let s = svc.stats();
-        assert_eq!(s.failed, 0, "every request must serve cleanly through the churn");
-        assert_eq!(s.completed, s.submitted);
-        svc.shutdown();
-        // No lost upgrades: every doctored entry was re-measured in
-        // place despite the concurrent replacements…
-        let back = DecisionCache::open(&path);
-        for fp in &fps {
-            let d = back.get(*fp, 2).expect("entry survives");
-            assert!(d.measured, "upgrade must keep the entry measured");
-            assert!(d.mflops < 1e8, "trial rate must be re-measured, got {}", d.mflops);
-        }
-        // …and the retune counter matches the observed upgrades: one
-        // per key (the served-EWMA baseline forbids storms), plus at
-        // most one extra per m0 re-registration that raced its own
-        // upgrade (a replaced generation re-drifts once).
-        assert!(
-            (3..=5).contains(&s.retunes),
-            "retunes {} must match the 3 observed upgrades (± racing re-registrations)",
-            s.retunes
-        );
-    }
-
-    #[test]
-    fn zero_budget_auto_answers_from_model_when_supplied() {
-        // ISSUE 5 acceptance at the service level: with an empty
-        // decision cache and a zero trial budget, registration answers
-        // from the supplied model (ServiceStats::model_hits), and from
-        // the heuristic only when none is configured (model_fallbacks).
-        let dir = std::env::temp_dir().join(format!("csrc_model_svc_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        let model_path = dir.join("model.json");
-        let a = mat(200, 400);
-        // Train a tiny constant model that crowns `colorful` — a pick
-        // the registration must echo verbatim if it consulted the model
-        // (the heuristic would choose a local-buffers engine here).
-        {
-            let kernel: Arc<dyn SpmvKernel> = a.clone();
-            let plan = crate::plan::PlanBuilder::all(2).build(kernel.as_ref());
-            let features = tuner::Features::extract(kernel.as_ref(), &plan);
-            let rows: Vec<tuner::CorpusRow> = (0..3u64)
-                .map(|i| tuner::CorpusRow {
-                    fingerprint: i,
-                    max_threads: 2,
-                    features: features.clone(),
-                    kind: EngineKind::Colorful,
-                    reordered: false,
-                    nthreads: 2,
-                    rung_rates: vec![(2, 500.0)],
-                    block_rates: Vec::new(),
-                })
-                .collect();
-            tuner::CostModel::train(&rows).unwrap().save(&model_path).unwrap();
-        }
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.route.parallel_kind = EngineKind::Auto;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.tune_budget = TrialBudget::zero();
-        cfg.model = Some(model_path);
-        let svc = MatvecService::start(cfg.clone());
-        svc.register("m", a.clone());
-        let s = svc.stats();
-        assert_eq!(s.model_hits, 1, "the model must answer the cold start");
-        assert_eq!(s.model_fallbacks, 0);
-        assert_eq!(s.auto_choices[0].1, "colorful", "the planted model pick");
-        // Serving runs correctly on the predicted engine.
-        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
-        let mut want = vec![0.0; 200];
-        a.spmv_into_zeroed(&x, &mut want);
-        let y = svc.call("m", x.clone()).unwrap();
-        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        svc.shutdown();
-        // The same config without a model falls back to the heuristic.
-        cfg.model = None;
-        let svc2 = MatvecService::start(cfg);
-        svc2.register("m", a.clone());
-        let s2 = svc2.stats();
-        assert_eq!(s2.model_hits, 0);
-        assert_eq!(s2.model_fallbacks, 1, "no model: the heuristic answers");
-        assert_ne!(s2.auto_choices[0].1, "colorful", "the heuristic picks differently here");
-        svc2.shutdown();
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    fn reorder_always_serves_correct_products() {
-        // Policy Always: every parallel request runs through the RCM
-        // ordering (permuted engine + per-request permute/un-permute) —
-        // answers must be bit-identical in meaning to the plain path.
-        let mut rng = Rng::new(97);
-        let band = Csrc::from_coo(&Coo::banded(300, 2, false, &mut rng)).unwrap();
-        let shuffle =
-            Permutation::from_new_to_old(rng.permutation(300)).unwrap();
-        let a = Arc::new(band.permuted(&shuffle)); // shuffled: RCM has room
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.route.reorder = reorder::ReorderPolicy::Always;
-        let svc = MatvecService::start(cfg);
-        svc.register("m", a.clone());
-        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.01).sin()).collect();
-        let mut want = vec![0.0; 300];
-        a.spmv_into_zeroed(&x, &mut want);
-        for _ in 0..3 {
-            let y = svc.call("m", x.clone()).unwrap();
-            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        }
-        assert_eq!(svc.stats().completed, 3);
-        svc.shutdown();
-    }
-
-    #[test]
-    fn rcm_built_once_across_workers() {
-        // Satellite (ISSUE 6): four workers all serving one key through
-        // the RCM ordering must share a single permutation build — the
-        // artifact registry is service-wide, like the plan cache.
-        let mut rng = Rng::new(99);
-        let band = Csrc::from_coo(&Coo::banded(300, 2, false, &mut rng)).unwrap();
-        let shuffle = Permutation::from_new_to_old(rng.permutation(300)).unwrap();
-        let a = Arc::new(band.permuted(&shuffle));
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 4;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.route.reorder = reorder::ReorderPolicy::Always;
-        let svc = MatvecService::start(cfg);
-        svc.register("m", a.clone());
-        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.01).sin()).collect();
-        let mut want = vec![0.0; 300];
-        a.spmv_into_zeroed(&x, &mut want);
-        let rxs: Vec<_> = (0..24).map(|_| svc.submit("m", x.clone())).collect();
-        for rx in rxs {
-            let y = rx.recv().unwrap().unwrap();
-            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        }
-        let s = svc.stats();
-        assert_eq!(s.completed, 24);
-        assert_eq!(s.rcm_builds, 1, "N workers must share one RCM build, got {}", s.rcm_builds);
-        svc.shutdown();
-    }
-
-    #[test]
-    fn coalesced_batches_replay_the_tuned_block_width() {
-        // Tentpole acceptance (ISSUE 6): a persisted k>1 decision,
-        // replayed by a cold-cache service, makes the worker coalesce
-        // same-matrix requests into blocked products — and the answers
-        // stay exact per request.
-        let dir = std::env::temp_dir().join(format!("csrc_spmm_svc_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        let path = dir.join("decisions.json");
-        let a = mat(200, 500);
-        let kernel: Arc<dyn SpmvKernel> = a.clone();
-        let fp = tuner::fingerprint(kernel.as_ref());
-        {
-            let cache = DecisionCache::open(&path);
-            let mut d = doctored_decision(fp, 100.0);
-            d.block_k = 4;
-            d.block_rates = vec![(1, 100.0), (2, 110.0), (4, 130.0), (8, 120.0)];
-            cache.put(d);
-        }
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.batch = BatchPolicy {
-            max_batch: 8,
-            max_wait: std::time::Duration::from_millis(50),
-        };
-        cfg.route.parallel_kind = EngineKind::Auto;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.route.sweep_threads = true;
-        cfg.tune_budget = TrialBudget::smoke();
-        cfg.decision_cache = Some(path.clone());
-        cfg.drift_fraction = 0.0; // isolate coalescing from drift re-tunes
-        let svc = MatvecService::start(cfg);
-        svc.register("m", a.clone());
-        assert_eq!(svc.stats().tunes, 0, "the persisted k>1 decision must be a cache hit");
-        // A burst within the batching window forms one multi-request
-        // batch, which the worker serves as two width-4 panels.
-        let xs: Vec<Vec<f64>> = (0..8)
-            .map(|r| (0..200).map(|i| ((r * 200 + i) as f64 * 0.01).sin()).collect())
-            .collect();
-        let rxs: Vec<_> = xs.iter().map(|x| svc.submit("m", x.clone())).collect();
-        for (x, rx) in xs.iter().zip(rxs) {
-            let y = rx.recv().unwrap().unwrap();
-            let mut want = vec![0.0; 200];
-            a.spmv_into_zeroed(x, &mut want);
-            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        }
-        let s = svc.stats();
-        assert_eq!(s.completed, 8);
-        assert!(
-            s.coalesced_products >= 1 && s.coalesced_requests >= 2,
-            "a burst against a k=4 decision must coalesce (products={}, requests={})",
-            s.coalesced_products,
-            s.coalesced_requests
-        );
-        svc.shutdown();
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    fn auto_with_reorder_measure_resolves_and_serves() {
-        // Auto + Measure: the tuner races reordered candidates against
-        // plain ones; whatever wins, serving stays correct and the
-        // choice log records the ordering.
-        let mut rng = Rng::new(98);
-        let band = Csrc::from_coo(&Coo::banded(250, 2, false, &mut rng)).unwrap();
-        let shuffle =
-            Permutation::from_new_to_old(rng.permutation(250)).unwrap();
-        let a = Arc::new(band.permuted(&shuffle));
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.route.parallel_kind = EngineKind::Auto;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.route.reorder = reorder::ReorderPolicy::Measure;
-        cfg.tune_budget = TrialBudget::smoke();
-        let svc = MatvecService::start(cfg);
-        svc.register("m", a.clone());
-        let s = svc.stats();
-        assert_eq!(s.tunes, 1);
-        assert_eq!(s.auto_choices.len(), 1);
-        let label = &s.auto_choices[0].1;
-        // Either a plain EngineKind label or the reordered/ prefix.
-        let plain = label.strip_prefix("reordered/").unwrap_or(label);
-        assert!(EngineKind::parse(plain).is_some(), "{label}");
-        let x: Vec<f64> = (0..250).map(|i| (i as f64 * 0.02).cos()).collect();
-        let mut want = vec![0.0; 250];
-        a.spmv_into_zeroed(&x, &mut want);
-        let y = svc.call("m", x.clone()).unwrap();
-        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
         svc.shutdown();
     }
 
@@ -1939,126 +583,6 @@ mod tests {
         let s = svc.stats();
         assert_eq!(s.completed, 1);
         assert_eq!(s.batches, 1, "one partial batch, released by the deadline");
-        svc.shutdown();
-    }
-
-    #[test]
-    fn resolved_sweep_matches_generations_exactly() {
-        // Re-registering "a" must not drop the Auto decision of a
-        // different live key that merely starts with "a@".
-        assert!(is_generation_of("a@0", "a@"));
-        assert!(is_generation_of("a@12", "a@"));
-        assert!(!is_generation_of("a@b@0", "a@"));
-        assert!(!is_generation_of("a@", "a@"));
-        assert!(!is_generation_of("ab@0", "a@"));
-    }
-
-    #[test]
-    fn worker_engine_cache_evicts_lru() {
-        // Capacity-1 worker cache serving two matrices must release the
-        // older engine (and its parked pool) instead of hoarding both.
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.route.min_parallel_n = 1;
-        cfg.route.threads = 2;
-        cfg.engine_cache_capacity = 1;
-        let svc = MatvecService::start(cfg);
-        let a = mat(60, 91);
-        let b = mat(50, 92);
-        svc.register("a", a.clone());
-        svc.register("b", b.clone());
-        for (key, m) in [("a", &a), ("b", &b), ("a", &a)] {
-            let x = vec![1.0; m.n];
-            let y = svc.call(key, x.clone()).unwrap();
-            let mut want = vec![0.0; m.n];
-            m.spmv_into_zeroed(&x, &mut want);
-            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
-        }
-        let s = svc.stats();
-        assert_eq!(s.completed, 3);
-        assert!(
-            s.engines_evicted >= 1,
-            "capacity-1 cache must evict between matrices, evicted {}",
-            s.engines_evicted
-        );
-        svc.shutdown();
-    }
-
-    #[test]
-    fn stats_snapshot_stays_consistent_under_concurrent_serving() {
-        // Satellite (ISSUE 7): ServiceStats is now a snapshot over the
-        // registry's atomics. Snapshots taken while callers hammer the
-        // service must never tear — `completed + failed > submitted`
-        // was possible when the scrape-side copy raced the worker-side
-        // multi-field update — and must be monotone between reads.
-        let svc = MatvecService::start(ServiceConfig::default());
-        let a = mat(60, 93);
-        svc.register("m", a.clone());
-        let x: Vec<f64> = (0..60).map(|i| (i as f64 * 0.05).sin()).collect();
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        std::thread::scope(|scope| {
-            for _ in 0..2 {
-                let svc = &svc;
-                let x = x.clone();
-                let stop = stop.clone();
-                scope.spawn(move || {
-                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                        svc.call("m", x.clone()).unwrap();
-                    }
-                });
-            }
-            let mut last_completed = 0u64;
-            for _ in 0..300 {
-                let s = svc.stats();
-                assert!(
-                    s.completed + s.failed <= s.submitted,
-                    "torn snapshot: completed {} + failed {} > submitted {}",
-                    s.completed,
-                    s.failed,
-                    s.submitted
-                );
-                assert!(s.completed >= last_completed, "completed went backwards");
-                last_completed = s.completed;
-            }
-            stop.store(true, std::sync::atomic::Ordering::Relaxed);
-        });
-        // Quiesced (every call() returned): the books balance exactly.
-        let s = svc.stats();
-        assert_eq!(s.completed + s.failed, s.submitted);
-        assert!(s.completed > 0);
-        assert!(s.mean_latency_us > 0.0);
-        svc.shutdown();
-    }
-
-    #[test]
-    fn metrics_registry_scrape_matches_service_stats() {
-        // Tentpole acceptance (ISSUE 7): the Prometheus rendering and
-        // stats() read the same registry cells — the scrape must show
-        // the per-engine product family and the same request counts.
-        let mut cfg = ServiceConfig::default();
-        cfg.workers = 1;
-        cfg.route.min_parallel_n = 1; // force the parallel path
-        cfg.route.threads = 2;
-        let svc = MatvecService::start(cfg);
-        let a = mat(80, 94);
-        svc.register("m", a.clone());
-        let x = vec![1.0; 80];
-        for _ in 0..3 {
-            svc.call("m", x.clone()).unwrap();
-        }
-        let s = svc.stats();
-        assert_eq!(s.completed, 3);
-        let text = svc.metrics_registry().render_prometheus();
-        assert!(text.contains("csrc_requests_submitted_total 3"), "{text}");
-        assert!(text.contains("csrc_requests_completed_total 3"), "{text}");
-        assert!(
-            text.contains("csrc_engine_products_total{engine="),
-            "per-engine family must be exposed:\n{text}"
-        );
-        assert!(text.contains("matrix=\"m\""), "{text}");
-        assert!(text.contains("csrc_request_latency_us_count 3"), "{text}");
-        // The scrape folds in the process-wide phase totals.
-        assert!(text.contains("csrc_phase_seconds_total{phase=\"serve\"}"), "{text}");
         svc.shutdown();
     }
 

@@ -1,0 +1,491 @@
+//! Sharded serving: row-block shards behind a scatter/gather front.
+//!
+//! A [`ShardedMatvecService`] scales the single-process service out the
+//! way the paper's §5 scales the kernel out: each registered matrix is
+//! row-block partitioned into `nshards` overlapping subdomains (the
+//! [`super::distributed`] decomposition — square CSRC part per owned
+//! row slab plus a rectangular coupling to the ghost columns), and each
+//! shard owns a *complete, private* [`MatvecService`]: its own worker
+//! pool, plan cache, decision cache, RCM registry, and
+//! [`crate::obs::MetricsRegistry`]. Tuning, drift detection, re-tuning,
+//! and metrics are therefore shard-local — one hot shard re-tunes
+//! without touching its neighbours, exactly the isolation a NUMA-domain
+//! or per-process deployment needs.
+//!
+//! The front router is thin and synchronous: `spmv`/`spmv_multi`
+//! *scatter* x (owned rows per shard, plus a gathered halo of ghost
+//! values), submit the k panel columns to every shard (each shard's
+//! batcher re-coalesces them into one blocked product), overlap the
+//! serial coupling sweep `A_R · halo` with the shards' square products,
+//! then *gather* per-shard replies back into y. Scatter and gather are
+//! traced as their own phases ([`crate::obs::Phase::Scatter`] /
+//! [`crate::obs::Phase::Gather`]).
+//!
+//! Two service-shaped guardrails live at the front, not in the shards:
+//! *back-pressure* — a shard whose in-flight depth would exceed
+//! [`ShardConfig::queue_capacity`] rejects the product instead of
+//! growing its queue — and a per-shard *deadline* on the gather side, so
+//! a wedged shard turns into an error, not a hang.
+
+use super::distributed::DistributedMatrix;
+use super::service::{MatvecService, ServiceConfig};
+use super::stats::ServiceStats;
+use crate::obs::{self, Counter, Gauge, MetricsRegistry, Phase};
+use crate::sparse::{Csrc, CsrcRect};
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Sharded-front configuration. `service` is the template every shard's
+/// private [`MatvecService`] is started from; a file-backed
+/// [`ServiceConfig::decision_cache`] is suffixed `.shard<i>` per shard
+/// so persisted tuning decisions stay shard-local too.
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    pub nshards: usize,
+    /// Max requests in flight per shard (submitted, not yet answered).
+    /// A product whose k columns would push a shard past this is
+    /// rejected up front — bounded queues, not unbounded growth.
+    pub queue_capacity: usize,
+    /// Gather-side wait per reply; a shard that misses it fails the
+    /// product (and bumps `csrc_shard_deadline_exceeded_total`).
+    pub deadline: Duration,
+    pub service: ServiceConfig,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            nshards: 2,
+            queue_capacity: 1024,
+            deadline: Duration::from_secs(30),
+            service: ServiceConfig::default(),
+        }
+    }
+}
+
+/// One shard's slice of a registered matrix, kept by the front for
+/// scatter/gather: the owned row slab, the global ids of the ghost
+/// columns, and the rectangular coupling (the shard's service serves
+/// only the square part — the front applies `A_R · halo` itself).
+struct ShardPart {
+    rows: Range<usize>,
+    ghosts: Vec<usize>,
+    rect: CsrcRect,
+}
+
+/// A registered matrix's full decomposition. `parts.len()` may sit
+/// below `nshards` for tiny matrices (never more slabs than rows).
+struct ShardedParts {
+    n: usize,
+    parts: Vec<ShardPart>,
+}
+
+/// Per-shard front counters + the shard's own service snapshot.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Column requests this shard was handed by the front.
+    pub requests: u64,
+    /// Products rejected at the front because this shard's queue was
+    /// full (counted once per product, not per column).
+    pub rejects: u64,
+    /// Gather-side deadline misses charged to this shard.
+    pub deadline_exceeded: u64,
+    pub service: ServiceStats,
+}
+
+pub struct ShardedMatvecService {
+    cfg: ShardConfig,
+    services: Vec<MatvecService>,
+    registry: Mutex<HashMap<String, Arc<ShardedParts>>>,
+    /// Front-side registry: scatter/gather counters live here; each
+    /// shard's serving metrics stay in its service's own registry.
+    obs: Arc<MetricsRegistry>,
+    requests: Vec<Counter>,
+    rejects: Vec<Counter>,
+    deadline_exceeded: Vec<Counter>,
+    /// Total ghost values gathered per single-vector product, summed
+    /// over every registered matrix — the halo-volume cost of the
+    /// current shard count, scraped by the CI smoke.
+    halo: Gauge,
+}
+
+impl ShardedMatvecService {
+    pub fn start(cfg: ShardConfig) -> ShardedMatvecService {
+        assert!(cfg.nshards >= 1, "need at least one shard");
+        let obs_reg = Arc::new(MetricsRegistry::new());
+        let mut services = Vec::with_capacity(cfg.nshards);
+        let mut requests = Vec::with_capacity(cfg.nshards);
+        let mut rejects = Vec::with_capacity(cfg.nshards);
+        let mut deadline_exceeded = Vec::with_capacity(cfg.nshards);
+        for i in 0..cfg.nshards {
+            let mut sc = cfg.service.clone();
+            if let Some(path) = &mut sc.decision_cache {
+                let name = path
+                    .file_name()
+                    .map(|f| f.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "decisions.json".into());
+                path.set_file_name(format!("{name}.shard{i}"));
+            }
+            services.push(MatvecService::start(sc));
+            let l = i.to_string();
+            requests.push(obs_reg.family_counter("csrc_shard_requests_total", &[("shard", &l)]));
+            rejects.push(obs_reg.family_counter("csrc_shard_rejects_total", &[("shard", &l)]));
+            deadline_exceeded
+                .push(obs_reg.family_counter("csrc_shard_deadline_exceeded_total", &[("shard", &l)]));
+        }
+        let halo = obs_reg.gauge("csrc_shard_halo_doubles");
+        ShardedMatvecService {
+            cfg,
+            services,
+            registry: Mutex::new(HashMap::new()),
+            obs: obs_reg,
+            requests,
+            rejects,
+            deadline_exceeded,
+            halo,
+        }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.cfg.nshards
+    }
+
+    /// Register (or replace) a matrix under a key: decompose it into
+    /// row-block subdomains and register each shard's square part with
+    /// that shard's private service (which tunes it like any matrix —
+    /// every shard is tuner-raced independently). The front keeps the
+    /// row slabs, ghost maps, and coupling rectangles for scatter/gather.
+    pub fn register(&self, key: &str, a: Arc<Csrc>) {
+        let global = a.to_csr();
+        let nsub = self.cfg.nshards.min(global.nrows.max(1));
+        let dm = DistributedMatrix::from_global(&global, nsub);
+        let mut parts = Vec::with_capacity(nsub);
+        for sub in dm.subs {
+            let rank = sub.rank;
+            let local = sub.local;
+            self.services[rank].register(key, Arc::new(local.square.clone()));
+            parts.push(ShardPart { rows: sub.rows, ghosts: sub.ghosts, rect: local });
+        }
+        let mut reg = self.registry.lock().unwrap();
+        reg.insert(key.to_string(), Arc::new(ShardedParts { n: global.nrows, parts }));
+        let total: usize =
+            reg.values().map(|p| p.parts.iter().map(|s| s.ghosts.len()).sum::<usize>()).sum();
+        self.halo.set(total as f64);
+    }
+
+    /// y = A·x through the sharded front.
+    pub fn spmv(&self, key: &str, x: &[f64]) -> Result<Vec<f64>, String> {
+        self.spmv_multi(key, x, 1)
+    }
+
+    /// Y = A·X for a row-major n×k panel. Scatter → k column requests
+    /// per shard (each shard's batcher re-coalesces them into a blocked
+    /// product) → coupling sweep on the front thread while the shards
+    /// run → gather with per-shard deadlines.
+    pub fn spmv_multi(&self, key: &str, x: &[f64], k: usize) -> Result<Vec<f64>, String> {
+        assert!(k >= 1);
+        let parts = self
+            .registry
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| format!("unknown matrix {key:?}"))?;
+        if x.len() != parts.n * k {
+            return Err(format!(
+                "x has length {} but {key:?} is {}x{} with k={k}",
+                x.len(),
+                parts.n,
+                parts.n
+            ));
+        }
+        // Back-pressure: refuse the whole product before submitting any
+        // column if some shard's queue cannot take k more requests.
+        // `in_flight` over-estimates depth (completed is read first), so
+        // a full queue can only look fuller — rejection is conservative.
+        for (i, svc) in self.services[..parts.parts.len()].iter().enumerate() {
+            if svc.in_flight() + k as u64 > self.cfg.queue_capacity as u64 {
+                self.rejects[i].inc();
+                return Err(format!(
+                    "shard {i} queue full ({} in flight, capacity {})",
+                    svc.in_flight(),
+                    self.cfg.queue_capacity
+                ));
+            }
+        }
+        // Scatter: per shard, slice the owned rows out of each panel
+        // column and gather the ghost values into a halo panel.
+        let mut pending = Vec::with_capacity(parts.parts.len());
+        let mut halos = Vec::with_capacity(parts.parts.len());
+        {
+            let _span = obs::phase(Phase::Scatter);
+            for (i, part) in parts.parts.iter().enumerate() {
+                let mut halo = vec![0.0; part.ghosts.len() * k];
+                for (g, &gj) in part.ghosts.iter().enumerate() {
+                    halo[g * k..g * k + k].copy_from_slice(&x[gj * k..gj * k + k]);
+                }
+                let mut cols = Vec::with_capacity(k);
+                for c in 0..k {
+                    let xs: Vec<f64> = part.rows.clone().map(|r| x[r * k + c]).collect();
+                    cols.push(self.services[i].submit(key, xs));
+                }
+                self.requests[i].add(k as u64);
+                pending.push(cols);
+                halos.push(halo);
+            }
+        }
+        // Coupling sweeps run here, overlapped with the shards' square
+        // products: y_shard = service(A_S · x_owned) + A_R · halo.
+        let coups: Vec<Vec<f64>> = parts
+            .parts
+            .iter()
+            .zip(&halos)
+            .map(|(part, halo)| {
+                let mut coup = vec![0.0; part.rows.len() * k];
+                part.rect.coupling_spmv_multi_into(halo, &mut coup, k);
+                coup
+            })
+            .collect();
+        // Gather: collect every shard's columns (deadline per reply) and
+        // add the coupling contribution back into the global panel.
+        let mut y = vec![0.0; parts.n * k];
+        {
+            let _span = obs::phase(Phase::Gather);
+            for (i, (part, cols)) in parts.parts.iter().zip(pending).enumerate() {
+                let coup = &coups[i];
+                for (c, rx) in cols.into_iter().enumerate() {
+                    let yc = match rx.recv_timeout(self.cfg.deadline) {
+                        Ok(reply) => reply?,
+                        Err(_) => {
+                            self.deadline_exceeded[i].inc();
+                            return Err(format!(
+                                "shard {i} missed the {:?} deadline",
+                                self.cfg.deadline
+                            ));
+                        }
+                    };
+                    for (r, v) in yc.into_iter().enumerate() {
+                        y[(part.rows.start + r) * k + c] = v + coup[r * k + c];
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// Per-shard stats: front counters + each shard's service snapshot.
+    pub fn stats(&self) -> Vec<ShardStats> {
+        self.services
+            .iter()
+            .enumerate()
+            .map(|(i, svc)| ShardStats {
+                shard: i,
+                requests: self.requests[i].get(),
+                rejects: self.rejects[i].get(),
+                deadline_exceeded: self.deadline_exceeded[i].get(),
+                service: svc.stats(),
+            })
+            .collect()
+    }
+
+    /// Current halo volume (ghost doubles gathered per single-vector
+    /// product, summed over registered matrices).
+    pub fn halo_doubles(&self) -> f64 {
+        self.halo.get()
+    }
+
+    /// One Prometheus page for the whole deployment: the front's
+    /// registry (with the process-wide phase totals, emitted once) plus
+    /// every shard's registry with a `shard="<i>"` label injected into
+    /// each sample.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = self.obs.render_prometheus();
+        for (i, svc) in self.services.iter().enumerate() {
+            let label = i.to_string();
+            out.push_str(
+                &svc.metrics_registry().render_prometheus_with(&[("shard", &label)], false),
+            );
+        }
+        out
+    }
+
+    /// Serve the composed page on a scrape endpoint
+    /// (`csrc serve --shards N --metrics-addr`).
+    pub fn serve_metrics(&self, addr: &str) -> std::io::Result<SocketAddr> {
+        let front = self.obs.clone();
+        let shards: Vec<Arc<MetricsRegistry>> =
+            self.services.iter().map(|s| s.metrics_registry()).collect();
+        obs::serve_rendered(addr, move || {
+            let mut out = front.render_prometheus();
+            for (i, r) in shards.iter().enumerate() {
+                let label = i.to_string();
+                out.push_str(&r.render_prometheus_with(&[("shard", &label)], false));
+            }
+            out
+        })
+    }
+
+    /// Graceful shutdown: every shard drains and joins.
+    pub fn shutdown(mut self) {
+        for svc in self.services.drain(..) {
+            svc.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batcher::BatchPolicy;
+    use super::super::test_support::mat;
+    use super::*;
+    use crate::sparse::LinOp;
+
+    fn assert_close(got: &[f64], want: &[f64]) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            // Summation order differs across the shard boundary — bit
+            // equality is not expected, 1e-11 relative is.
+            assert!(
+                (g - w).abs() <= 1e-11 * (1.0 + w.abs()),
+                "index {i}: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_spmv_matches_unsharded_for_every_shard_count() {
+        let a = mat(120, 71);
+        let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut want = vec![0.0; 120];
+        a.apply(&x, &mut want);
+        for nshards in [1usize, 2, 4, 7] {
+            let svc = ShardedMatvecService::start(ShardConfig {
+                nshards,
+                ..ShardConfig::default()
+            });
+            svc.register("a", a.clone());
+            let got = svc.spmv("a", &x).unwrap();
+            assert_close(&got, &want);
+            if nshards > 1 {
+                assert!(svc.halo_doubles() > 0.0, "overlap decomposition must have ghosts");
+            }
+            let stats = svc.stats();
+            assert_eq!(stats.len(), nshards);
+            assert!(stats.iter().all(|s| s.rejects == 0 && s.deadline_exceeded == 0));
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn sharded_spmv_multi_matches_unsharded_for_every_shard_count() {
+        let n = 96;
+        let k = 4;
+        let a = mat(n, 72);
+        let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.13).cos()).collect();
+        let mut want = vec![0.0; n * k];
+        a.apply_multi(&x, &mut want, k);
+        for nshards in [1usize, 2, 4, 7] {
+            let svc = ShardedMatvecService::start(ShardConfig {
+                nshards,
+                ..ShardConfig::default()
+            });
+            svc.register("a", a.clone());
+            let got = svc.spmv_multi("a", &x, k).unwrap();
+            assert_close(&got, &want);
+            // Every shard served k column requests.
+            for s in svc.stats() {
+                assert_eq!(s.requests, k as u64, "shard {}", s.shard);
+            }
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn replacing_a_matrix_reshards_it() {
+        let svc =
+            ShardedMatvecService::start(ShardConfig { nshards: 3, ..ShardConfig::default() });
+        let a = mat(80, 73);
+        let b = mat(64, 74);
+        svc.register("m", a);
+        let halo_a = svc.halo_doubles();
+        svc.register("m", b.clone());
+        assert_ne!(svc.halo_doubles(), halo_a, "replacement must re-decompose");
+        let x: Vec<f64> = (0..64).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let mut want = vec![0.0; 64];
+        b.apply(&x, &mut want);
+        assert_close(&svc.spmv("m", &x).unwrap(), &want);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_key_and_wrong_length_fail_cleanly() {
+        let svc =
+            ShardedMatvecService::start(ShardConfig { nshards: 2, ..ShardConfig::default() });
+        assert!(svc.spmv("nope", &[1.0, 2.0]).is_err());
+        svc.register("a", mat(40, 75));
+        let short = vec![0.0; 39];
+        assert!(svc.spmv("a", &short).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn full_shard_queue_rejects_instead_of_deadlocking() {
+        // One shard whose dispatcher parks partial batches for 200ms: a
+        // submitted product sits in flight for the whole window, so a
+        // second product arriving mid-window must bounce off the
+        // capacity-1 queue — rejection, not unbounded growth or a hang.
+        let cfg = ShardConfig {
+            nshards: 1,
+            queue_capacity: 1,
+            service: ServiceConfig {
+                workers: 1,
+                batch: BatchPolicy {
+                    max_batch: 64,
+                    max_wait: std::time::Duration::from_millis(200),
+                },
+                ..ServiceConfig::default()
+            },
+            ..ShardConfig::default()
+        };
+        let svc = Arc::new(ShardedMatvecService::start(cfg));
+        let n = 60;
+        let a = mat(n, 76);
+        svc.register("a", a);
+        let x: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let first = {
+            let svc = svc.clone();
+            let x = x.clone();
+            std::thread::spawn(move || svc.spmv("a", &x))
+        };
+        // Land inside the 200ms batching window with a wide margin.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let second = svc.spmv("a", &x);
+        assert!(second.is_err(), "saturated shard must reject");
+        assert!(second.unwrap_err().contains("queue full"));
+        assert!(first.join().unwrap().is_ok(), "parked product still completes");
+        assert_eq!(svc.stats()[0].rejects, 1);
+        // Capacity frees up once the first product drains.
+        assert!(svc.spmv("a", &x).is_ok());
+    }
+
+    #[test]
+    fn composed_scrape_carries_shard_labels_and_halo_gauge() {
+        let svc =
+            ShardedMatvecService::start(ShardConfig { nshards: 2, ..ShardConfig::default() });
+        svc.register("a", mat(70, 77));
+        let x = vec![1.0; 70];
+        svc.spmv("a", &x).unwrap();
+        let page = svc.render_prometheus();
+        assert!(page.contains("csrc_shard_halo_doubles"));
+        assert!(page.contains("csrc_shard_requests_total{shard=\"0\"}"));
+        assert!(page.contains("csrc_shard_requests_total{shard=\"1\"}"));
+        // Shard service counters carry the injected label.
+        assert!(page.contains("csrc_requests_submitted_total{shard=\"0\"}"));
+        assert!(page.contains("csrc_requests_submitted_total{shard=\"1\"}"));
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,213 @@
+//! Shard-local service statistics: typed counter handles over a
+//! [`MetricsRegistry`] plus the [`ServiceStats`] snapshot.
+//!
+//! Every [`MatvecService`](super::MatvecService) — and therefore every
+//! shard of a [`ShardedMatvecService`](super::ShardedMatvecService) —
+//! owns one [`Counters`]: its own registry, its own atomics, its own
+//! latency histogram. Nothing here is process-global, which is what
+//! makes per-shard metrics labeling possible (the sharded front renders
+//! each shard's registry with an injected `shard="i"` label).
+
+use crate::obs::{Counter, MetricsRegistry};
+use std::sync::{Arc, Mutex};
+
+/// Auto-route choice log. Genuinely structured (ordered key/value
+/// pairs), so it lives behind a small mutex next to the registry's
+/// scalar atomics — nothing on the request path touches it.
+#[derive(Default)]
+pub(crate) struct ChoiceLog {
+    pub(crate) auto_choices: Vec<(String, String)>,
+    pub(crate) chosen_threads: Vec<(String, usize)>,
+}
+
+/// Shared mutable service state: typed handles into the service's
+/// [`MetricsRegistry`]. Every scalar [`ServiceStats`] reports lives in
+/// a registry atomic, so a `stats()` snapshot and a Prometheus scrape
+/// read the *same* cells — the old `Mutex<Stats>` could not serve a
+/// scrape without cloning, and a lock-free copy of it could tear.
+pub(crate) struct Counters {
+    pub(crate) obs: Arc<MetricsRegistry>,
+    pub(crate) submitted: Counter,
+    pub(crate) completed: Counter,
+    pub(crate) failed: Counter,
+    pub(crate) batches: Counter,
+    pub(crate) tunes: Counter,
+    /// Nanoseconds — registry counters are integers; `stats()` converts
+    /// back to seconds.
+    pub(crate) tune_ns: Counter,
+    pub(crate) engines_evicted: Counter,
+    pub(crate) retunes: Counter,
+    pub(crate) drift_events: Counter,
+    pub(crate) model_hits: Counter,
+    pub(crate) model_fallbacks: Counter,
+    pub(crate) coalesced_products: Counter,
+    pub(crate) coalesced_requests: Counter,
+    pub(crate) rcm_builds: Counter,
+    pub(crate) choices: Mutex<ChoiceLog>,
+}
+
+impl Counters {
+    pub(crate) fn new(obs: Arc<MetricsRegistry>) -> Counters {
+        Counters {
+            submitted: obs.counter("csrc_requests_submitted_total"),
+            completed: obs.counter("csrc_requests_completed_total"),
+            failed: obs.counter("csrc_requests_failed_total"),
+            batches: obs.counter("csrc_batches_total"),
+            tunes: obs.counter("csrc_tunes_total"),
+            tune_ns: obs.counter("csrc_tune_ns_total"),
+            engines_evicted: obs.counter("csrc_engines_evicted_total"),
+            retunes: obs.counter("csrc_retunes_total"),
+            drift_events: obs.counter("csrc_drift_events_total"),
+            model_hits: obs.counter("csrc_model_hits_total"),
+            model_fallbacks: obs.counter("csrc_model_fallbacks_total"),
+            coalesced_products: obs.counter("csrc_coalesced_products_total"),
+            coalesced_requests: obs.counter("csrc_coalesced_requests_total"),
+            rcm_builds: obs.counter("csrc_rcm_builds_total"),
+            choices: Mutex::new(ChoiceLog::default()),
+            obs,
+        }
+    }
+
+    pub(crate) fn add_tune_seconds(&self, s: f64) {
+        self.tune_ns.add((s * 1e9) as u64);
+    }
+}
+
+/// Observable service counters: a typed snapshot over the service's
+/// [`MetricsRegistry`] atomics, taken in an order that preserves
+/// `completed + failed <= submitted` even while workers are mid-batch.
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: f64,
+    /// How many scheduling plans were built (cache misses) — with N
+    /// workers all serving one matrix this stays 1, not N.
+    pub plan_builds: u64,
+    /// Total wall-clock seconds spent in plan analysis.
+    pub plan_build_seconds: f64,
+    /// Measured tuning runs performed for `EngineKind::Auto`
+    /// registrations (decision-cache hits do not count).
+    pub tunes: u64,
+    /// Wall-clock seconds spent inside those tuning runs.
+    pub tune_seconds: f64,
+    /// Autotuner decisions answered from the (possibly persisted)
+    /// decision cache with zero new trials.
+    pub decision_hits: u64,
+    /// Engines dropped from worker caches by the LRU eviction policy.
+    pub engines_evicted: u64,
+    /// (matrix key, resolved engine label) per Auto registration, in
+    /// registration order.
+    pub auto_choices: Vec<(String, String)>,
+    /// (matrix key, decision thread count) per Auto registration — with
+    /// `RoutePolicy::sweep_threads` this is the swept pick, which may
+    /// sit below `RoutePolicy::threads`.
+    pub chosen_threads: Vec<(String, usize)>,
+    /// Background re-tunes completed after drift detection.
+    pub retunes: u64,
+    /// Batches whose rate EWMA sat below the drift threshold.
+    pub drift_events: u64,
+    /// Cold-start Auto registrations answered by the learned cost model
+    /// (zero-budget predictions; decision-cache hits count in
+    /// `decision_hits`, not here).
+    pub model_hits: u64,
+    /// Cold-start Auto registrations that fell back to the hand-written
+    /// heuristic — no model configured, or it declined to predict.
+    pub model_fallbacks: u64,
+    /// Blocked (`spmv_multi`) products run in place of serial per-request
+    /// products — one per coalesced panel.
+    pub coalesced_products: u64,
+    /// Requests served through those panels (`Σ` panel widths).
+    pub coalesced_requests: u64,
+    /// RCM orderings computed for reordered serving. With N workers all
+    /// serving one key through the shared registry this stays 1, not N.
+    pub rcm_builds: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::mat;
+    use super::super::{MatvecService, ServiceConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn stats_snapshot_stays_consistent_under_concurrent_serving() {
+        // Satellite (ISSUE 7): ServiceStats is now a snapshot over the
+        // registry's atomics. Snapshots taken while callers hammer the
+        // service must never tear — `completed + failed > submitted`
+        // was possible when the scrape-side copy raced the worker-side
+        // multi-field update — and must be monotone between reads.
+        let svc = MatvecService::start(ServiceConfig::default());
+        let a = mat(60, 93);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..60).map(|i| (i as f64 * 0.05).sin()).collect();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let svc = &svc;
+                let x = x.clone();
+                let stop = stop.clone();
+                scope.spawn(move || {
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        svc.call("m", x.clone()).unwrap();
+                    }
+                });
+            }
+            let mut last_completed = 0u64;
+            for _ in 0..300 {
+                let s = svc.stats();
+                assert!(
+                    s.completed + s.failed <= s.submitted,
+                    "torn snapshot: completed {} + failed {} > submitted {}",
+                    s.completed,
+                    s.failed,
+                    s.submitted
+                );
+                assert!(s.completed >= last_completed, "completed went backwards");
+                last_completed = s.completed;
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+        // Quiesced (every call() returned): the books balance exactly.
+        let s = svc.stats();
+        assert_eq!(s.completed + s.failed, s.submitted);
+        assert!(s.completed > 0);
+        assert!(s.mean_latency_us > 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_registry_scrape_matches_service_stats() {
+        // Tentpole acceptance (ISSUE 7): the Prometheus rendering and
+        // stats() read the same registry cells — the scrape must show
+        // the per-engine product family and the same request counts.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.min_parallel_n = 1; // force the parallel path
+        cfg.route.threads = 2;
+        let svc = MatvecService::start(cfg);
+        let a = mat(80, 94);
+        svc.register("m", a.clone());
+        let x = vec![1.0; 80];
+        for _ in 0..3 {
+            svc.call("m", x.clone()).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 3);
+        let text = svc.metrics_registry().render_prometheus();
+        assert!(text.contains("csrc_requests_submitted_total 3"), "{text}");
+        assert!(text.contains("csrc_requests_completed_total 3"), "{text}");
+        assert!(
+            text.contains("csrc_engine_products_total{engine="),
+            "per-engine family must be exposed:\n{text}"
+        );
+        assert!(text.contains("matrix=\"m\""), "{text}");
+        assert!(text.contains("csrc_request_latency_us_count 3"), "{text}");
+        // The scrape folds in the process-wide phase totals.
+        assert!(text.contains("csrc_phase_seconds_total{phase=\"serve\"}"), "{text}");
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,642 @@
+//! Shard-local worker: engine cache, batch execution, coalescing into
+//! blocked products, and drift detection.
+//!
+//! Each worker thread owns its engines (pools, buffers — not Sync) and
+//! shares the plan cache, RCM registry, resolved-Auto table, and drift
+//! map with its sibling workers of the *same* service. Under a
+//! [`ShardedMatvecService`](super::ShardedMatvecService) every shard
+//! spawns its own workers over its own state — nothing in this module
+//! is shared across shards.
+
+use super::registration::{DriftState, RcmRegistry, Registry, ResolvedAuto};
+use super::retuner::{RetuneJob, RetunerMsg};
+use super::router::{Backend, RoutePolicy, Router};
+use super::stats::Counters;
+use crate::metrics;
+use crate::obs::{self, HistogramHandle, Phase};
+use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
+use crate::plan::{PlanBuilder, PlanCache};
+use crate::reorder::{self, ReorderedEngine};
+use crate::tuner;
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Weight of the newest batch in the drift EWMA (higher = jumpier).
+pub(crate) const EWMA_ALPHA: f64 = 0.3;
+
+/// Panel width used to coalesce same-matrix requests on routes without
+/// a tuned block pick (explicit engine routes, and requests racing an
+/// Auto resolution). Matches the top of the tuner's block ladder.
+pub(crate) const DEFAULT_PANEL_WIDTH: usize = 8;
+
+pub(crate) struct Request {
+    pub(crate) matrix: String,
+    pub(crate) x: Vec<f64>,
+    pub(crate) enqueued: Instant,
+    pub(crate) reply: Sender<Result<Vec<f64>, String>>,
+}
+
+pub(crate) struct WorkerBatch {
+    pub(crate) matrix: String,
+    pub(crate) requests: Vec<Request>,
+}
+
+/// Everything one worker thread shares with the service.
+pub(crate) struct WorkerCtx {
+    pub(crate) registry: Arc<Mutex<Registry>>,
+    pub(crate) plans: Arc<PlanCache>,
+    pub(crate) route: RoutePolicy,
+    pub(crate) stats: Arc<Counters>,
+    /// This worker's slice of the `csrc_request_latency_us` summary —
+    /// recorded lock-free of other workers, merged at snapshot/scrape
+    /// time ([`crate::obs::MetricsRegistry::merged_histogram`]).
+    pub(crate) latency: HistogramHandle,
+    pub(crate) resolved: Arc<Mutex<HashMap<String, ResolvedAuto>>>,
+    /// Shared RCM artifacts — one permutation + permuted matrix per
+    /// served `key@generation`, built by whichever worker gets there
+    /// first (under the lock, so never twice).
+    pub(crate) rcm: Arc<Mutex<RcmRegistry>>,
+    pub(crate) drift: Arc<Mutex<HashMap<String, DriftState>>>,
+    /// Cold-start model, consulted by the racing-request fallback so the
+    /// fallback order (cache → model → heuristic) holds on the worker
+    /// side too.
+    pub(crate) model: Option<Arc<tuner::CostModel>>,
+    /// Re-tunes *and* served-baseline write-backs go here — both touch
+    /// the persisted decision cache, which must stay off the request
+    /// path.
+    pub(crate) retune_tx: Sender<RetunerMsg>,
+    pub(crate) engine_capacity: usize,
+    pub(crate) drift_fraction: f64,
+    pub(crate) drift_min_batches: u64,
+}
+
+/// Worker engine-cache key: (matrix, generation, engine label, threads,
+/// reordered). The thread count is part of the key because a re-tune
+/// may move a key to a different p; the reorder flag because a re-tune
+/// may flip the ordering.
+type EngineKey = (String, u64, String, usize, bool);
+
+pub(crate) fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
+    let router = Router::new(ctx.route.clone());
+    // Engine cache per [`EngineKey`] — engines hold execution state
+    // (pool, buffers) and are not Sync, so each worker owns its own; the
+    // *plan* inside every engine comes from the shared service cache.
+    // Structural keys so user keys containing '@' cannot alias
+    // generations. Values carry the last-served batch tick for the LRU
+    // eviction below.
+    let mut engines: HashMap<EngineKey, (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
+    let mut serve_tick: u64 = 0;
+    while let Ok(batch) = rx.recv() {
+        let _serve_span = obs::phase(Phase::Serve);
+        let hit = ctx.registry.lock().unwrap().get(&batch.matrix).cloned();
+        let Some((a, generation)) = hit else {
+            for r in batch.requests {
+                ctx.stats.failed.inc();
+                let _ = r.reply.send(Err(format!("unknown matrix {:?}", batch.matrix)));
+            }
+            continue;
+        };
+        // Generation-qualified key: caches can never mix state across a
+        // register() replacement (the matrix and its engines/plans stay
+        // a consistent snapshot even if the registry changes mid-batch).
+        let cache_key = format!("{}@{generation}", batch.matrix);
+        // Evict engines built for retired generations of this matrix —
+        // each pins a ThreadPool (live OS threads), the old matrix, and
+        // its plan. (Retired RCM artifacts live in the shared registry
+        // and are collected by `register()` on replacement.)
+        engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
+        serve_tick += 1;
+        let mut used_key: Option<EngineKey> = None;
+        // Resolve Auto once per batch (it is batch-invariant): through
+        // the registration-time decision — which carries the swept
+        // thread count, not `RoutePolicy::threads` blindly — or, for a
+        // request racing that resolution, the model/heuristic (features
+        // only, no trials), rather than blocking or tuning on the
+        // request path.
+        let mut auto_decision: Option<ResolvedAuto> = None;
+        let backend = match router.route(&a) {
+            Backend::NativeParallel { kind: EngineKind::Auto, threads, reorder } => {
+                let known = ctx.resolved.lock().unwrap().get(&cache_key).copied();
+                match known {
+                    Some(r) => {
+                        auto_decision = Some(r);
+                        Backend::NativeParallel {
+                            kind: r.kind,
+                            threads: r.nthreads,
+                            reorder: r.reorder,
+                        }
+                    }
+                    None => {
+                        let plan = ctx.plans.get_or_build(
+                            &cache_key,
+                            a.as_ref(),
+                            PlanBuilder::new(threads).with_pieces(tuner::required_pieces(threads)),
+                        );
+                        // Same fallback order as registration (model,
+                        // then heuristic). The batch executes with the
+                        // route's reorder flag either way (an Always
+                        // route builds the RCM engine regardless), so
+                        // the model must score classes for the ordering
+                        // that will actually run — predicting plain for
+                        // a reordered execution would pick from the
+                        // wrong class space.
+                        let features = tuner::Features::extract(a.as_ref(), &plan);
+                        let policy = if reorder {
+                            crate::reorder::ReorderPolicy::Always
+                        } else {
+                            crate::reorder::ReorderPolicy::Never
+                        };
+                        let kind = ctx
+                            .model
+                            .as_deref()
+                            .and_then(|m| m.predict(&features, policy))
+                            .map(|p| p.kind)
+                            .unwrap_or_else(|| tuner::cost_model(&features));
+                        Backend::NativeParallel { kind, threads, reorder }
+                    }
+                }
+            }
+            other => other,
+        };
+        // Per-batch rate sample for drift detection: seconds spent in
+        // engine products and how many vector products ran (a k-wide
+        // panel counts k — the EWMA stays per-vector-normalized).
+        let mut batch_secs = 0.0f64;
+        let mut batch_products = 0usize;
+        // Validate lengths up front: a malformed request fails on its
+        // own and never joins a panel.
+        let mut valid: Vec<Request> = Vec::with_capacity(batch.requests.len());
+        for req in batch.requests {
+            if req.x.len() != a.n {
+                ctx.stats.failed.inc();
+                let _ = req
+                    .reply
+                    .send(Err(format!("x length {} != n {}", req.x.len(), a.n)));
+            } else {
+                valid.push(req);
+            }
+        }
+        match &backend {
+            Backend::NativeSequential => {
+                for req in &valid {
+                    let mut y = vec![0.0; a.n];
+                    a.spmv_into_zeroed(&req.x, &mut y);
+                    finish_request(&ctx, req, y);
+                }
+                count_products(&ctx, &batch.matrix, "sequential", 1, valid.len() as u64);
+            }
+            Backend::Xla { artifact } => {
+                // The XLA path is exercised via examples/ and the CLI
+                // (XlaRuntime is heavyweight); in-service we fall back
+                // to sequential to keep the worker self-contained.
+                let _ = artifact;
+                for req in &valid {
+                    let mut y = vec![0.0; a.n];
+                    a.spmv_into_zeroed(&req.x, &mut y);
+                    finish_request(&ctx, req, y);
+                }
+                count_products(&ctx, &batch.matrix, "sequential", 1, valid.len() as u64);
+            }
+            Backend::NativeParallel { kind, threads, reorder } if !valid.is_empty() => {
+                let ekey =
+                    (batch.matrix.clone(), generation, kind.label(), *threads, *reorder);
+                let slot = engines.entry(ekey.clone()).or_insert_with(|| {
+                    let engine: Box<dyn ParallelSpmv> = if *reorder {
+                        // Serve through the RCM ordering: the permuted
+                        // matrix and its permutation come from the
+                        // *shared* registry — whichever worker arrives
+                        // first builds them under the lock, every other
+                        // worker (and engine kind) reuses the Arcs. The
+                        // wrapper permutes x in / un-permutes y out per
+                        // product.
+                        let (pa, perm) = {
+                            let mut rcm = ctx.rcm.lock().unwrap();
+                            rcm.entry(cache_key.clone())
+                                .or_insert_with(|| {
+                                    ctx.stats.rcm_builds.inc();
+                                    let perm = Arc::new(reorder::rcm(a.as_ref()));
+                                    let pa = Arc::new(a.permuted(&perm));
+                                    (pa, perm)
+                                })
+                                .clone()
+                        };
+                        let plan = ctx.plans.get_or_build(
+                            &format!("{cache_key}#rcm"),
+                            pa.as_ref(),
+                            PlanBuilder::for_kind(*threads, *kind),
+                        );
+                        Box::new(ReorderedEngine::new(
+                            build_engine(*kind, pa, plan),
+                            perm,
+                        ))
+                    } else {
+                        let plan = ctx.plans.get_or_build(
+                            &cache_key,
+                            a.as_ref(),
+                            PlanBuilder::for_kind(*threads, *kind),
+                        );
+                        build_engine(*kind, a.clone(), plan)
+                    };
+                    (engine, 0)
+                });
+                slot.1 = serve_tick;
+                used_key = Some(ekey);
+                // Coalesce the batch into k-wide panels: the tuned
+                // width for resolved Auto routes (block_k = 1 means the
+                // blocked product lost its own race — serve serially),
+                // the ladder cap for explicit routes.
+                let cap = auto_decision
+                    .map(|r| r.block_k.max(1))
+                    .unwrap_or(DEFAULT_PANEL_WIDTH);
+                let engine_label = kind.label();
+                let mut i = 0usize;
+                while i < valid.len() {
+                    let g = cap.min(valid.len() - i);
+                    if g <= 1 {
+                        let req = &valid[i];
+                        let mut y = vec![0.0; a.n];
+                        let t = Instant::now();
+                        slot.0.spmv(&req.x, &mut y);
+                        batch_secs += t.elapsed().as_secs_f64();
+                        batch_products += 1;
+                        count_products(&ctx, &batch.matrix, &engine_label, 1, 1);
+                        finish_request(&ctx, req, y);
+                        i += 1;
+                    } else {
+                        // Pack the g request vectors into one row-major
+                        // panel (x[j*g + c] = request c's x[j]), run a
+                        // single blocked product, unpack per request.
+                        let pack_span = obs::phase(Phase::Coalesce);
+                        let mut xp = vec![0.0; a.n * g];
+                        for (c, req) in valid[i..i + g].iter().enumerate() {
+                            for (j, &v) in req.x.iter().enumerate() {
+                                xp[j * g + c] = v;
+                            }
+                        }
+                        drop(pack_span);
+                        let mut yp = vec![0.0; a.n * g];
+                        let t = Instant::now();
+                        slot.0.spmv_multi(&xp, &mut yp, g);
+                        batch_secs += t.elapsed().as_secs_f64();
+                        batch_products += g;
+                        ctx.stats.coalesced_products.inc();
+                        ctx.stats.coalesced_requests.add(g as u64);
+                        count_products(&ctx, &batch.matrix, &engine_label, g, 1);
+                        let unpack_span = obs::phase(Phase::Coalesce);
+                        for (c, req) in valid[i..i + g].iter().enumerate() {
+                            let mut y = vec![0.0; a.n];
+                            for (j, yj) in y.iter_mut().enumerate() {
+                                *yj = yp[j * g + c];
+                            }
+                            finish_request(&ctx, req, y);
+                        }
+                        drop(unpack_span);
+                        i += g;
+                    }
+                }
+            }
+            Backend::NativeParallel { .. } => {} // every request failed validation
+        }
+        if let Some(r) = auto_decision {
+            let job = RetuneJob {
+                matrix: batch.matrix.clone(),
+                cache_key: cache_key.clone(),
+                generation,
+            };
+            maybe_flag_drift(&ctx, job, r, batch_products, batch_secs);
+        }
+        // LRU eviction (ROADMAP item): a worker that has served many
+        // distinct keys must not park one thread pool per key forever.
+        // Evict the least-recently-served engines above capacity, never
+        // the one this batch just used.
+        if engines.len() > ctx.engine_capacity {
+            let mut evicted = 0u64;
+            while engines.len() > ctx.engine_capacity {
+                let victim = engines
+                    .iter()
+                    .filter(|&(k, _)| used_key.as_ref() != Some(k))
+                    .min_by_key(|&(_, &(_, tick))| tick)
+                    .map(|(k, _)| k.clone());
+                let Some(v) = victim else { break };
+                engines.remove(&v);
+                evicted += 1;
+            }
+            if evicted > 0 {
+                ctx.stats.engines_evicted.add(evicted);
+            }
+        }
+    }
+}
+
+/// Reply to one served request and record its completion + latency.
+/// `completed` is bumped *before* the reply is sent, so a caller whose
+/// `call()` has returned is always visible in the next snapshot.
+fn finish_request(ctx: &WorkerCtx, req: &Request, y: Vec<f64>) {
+    ctx.stats.completed.inc();
+    ctx.latency.record(req.enqueued.elapsed().as_secs_f64());
+    let _ = req.reply.send(Ok(y));
+}
+
+/// Bump the per-engine product family
+/// (`csrc_engine_products_total{matrix,engine,k}`) for `products`
+/// products served at panel width `k`.
+fn count_products(ctx: &WorkerCtx, matrix: &str, engine: &str, k: usize, products: u64) {
+    let width = k.to_string();
+    ctx.stats
+        .obs
+        .family_counter(
+            "csrc_engine_products_total",
+            &[("matrix", matrix), ("engine", engine), ("k", &width)],
+        )
+        .add(products);
+}
+
+/// Fold one batch's measured rate into the key's EWMA and queue a
+/// background re-tune — once per key × generation — when it has drifted
+/// below `drift_fraction` of the decision's *baseline* rate. The rate
+/// is normalized by the decision's own `work_flops`, so the EWMA and
+/// the baseline are in the same units. Unmeasured (model/heuristic)
+/// decisions record no rate and are never drift-checked.
+///
+/// The baseline is the entry's **served** rate when one has been
+/// recorded, else the trial rate. Trials are warm back-to-back products
+/// and therefore optimistic relative to per-request serving — judging
+/// serving against them forever re-triggers (a re-tune storm). So the
+/// first `drift_min_batches` batches after a re-tune *calibrate*
+/// (`DriftState::calibrating`): their EWMA is written back into the
+/// resolved entry and the persisted cache entry as the served baseline,
+/// and only later batches are judged, against that baseline.
+fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: usize, secs: f64) {
+    if products == 0
+        || secs <= 0.0
+        || ctx.drift_fraction <= 0.0
+        || !r.measured
+        || r.mflops <= 0.0
+        || r.work_flops == 0
+    {
+        return;
+    }
+    let rate = metrics::mflops(r.work_flops * products, secs);
+    let mut drift = ctx.drift.lock().unwrap();
+    let st = drift.entry(job.cache_key.clone()).or_default();
+    st.ewma_mflops = if st.batches == 0 {
+        rate
+    } else {
+        EWMA_ALPHA * rate + (1.0 - EWMA_ALPHA) * st.ewma_mflops
+    };
+    st.batches += 1;
+    if st.batches < ctx.drift_min_batches {
+        return;
+    }
+    if st.calibrating {
+        // Enough post-re-tune batches: the EWMA *is* serving reality
+        // now. (The first sample can straddle the old engine for one
+        // batch — the EWMA shrugs that off.) Record it as the judging
+        // baseline under this lock, publish it to the resolved entry
+        // (cheap, in-memory) and hand the persisted write-back — a full
+        // cache-file rewrite — to the re-tuner thread; judgement
+        // restarts next batch.
+        st.calibrating = false;
+        st.served_baseline = st.ewma_mflops;
+        let ewma = st.ewma_mflops;
+        drop(drift);
+        if let Some(e) = ctx.resolved.lock().unwrap().get_mut(&job.cache_key) {
+            e.served_mflops = ewma;
+        }
+        let _ = ctx.retune_tx.send(RetunerMsg::RecordServedRate {
+            fingerprint: r.fingerprint,
+            max_threads: r.max_threads,
+            mflops: ewma,
+        });
+        return;
+    }
+    // Baseline preference: the lock-protected calibration record, then
+    // the decision's persisted served rate (a restarted service), then
+    // — for never-calibrated decisions — the trial rate.
+    let baseline = if st.served_baseline > 0.0 {
+        st.served_baseline
+    } else if r.served_mflops > 0.0 {
+        r.served_mflops
+    } else {
+        r.mflops
+    };
+    if st.ewma_mflops >= ctx.drift_fraction * baseline {
+        return;
+    }
+    let already_pending = st.retune_pending;
+    st.retune_pending = true;
+    drop(drift);
+    ctx.stats.drift_events.inc();
+    if !already_pending {
+        let _ = ctx.retune_tx.send(RetunerMsg::Retune(job));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batcher::BatchPolicy;
+    use super::super::test_support::{doctored_decision, mat};
+    use super::super::{MatvecService, ServiceConfig};
+    use super::*;
+    use crate::reorder::Permutation;
+    use crate::sparse::{Coo, Csrc};
+    use crate::tuner::{DecisionCache, TrialBudget};
+    use crate::util::Rng;
+
+    #[test]
+    fn parallel_backend_used_for_large_matrices() {
+        let mut cfg = ServiceConfig::default();
+        cfg.route.min_parallel_n = 32; // force the parallel path
+        cfg.route.threads = 2;
+        let svc = MatvecService::start(cfg);
+        let a = mat(200, 84);
+        svc.register("big", a.clone());
+        let x = vec![1.0; 200];
+        let y = svc.call("big", x.clone()).unwrap();
+        let mut want = vec![0.0; 200];
+        a.spmv_into_zeroed(&x, &mut want);
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn replacing_a_matrix_retires_its_engines_and_plans() {
+        // After register() overwrites a key — even with a different size
+        // — requests must run against the new matrix, not a worker's
+        // cached engine for the old one.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1; // one worker so the engine cache is definitely warm
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        let svc = MatvecService::start(cfg);
+        let a1 = mat(60, 87);
+        svc.register("m", a1.clone());
+        let x1 = vec![1.0; 60];
+        let y1 = svc.call("m", x1.clone()).unwrap();
+        let mut want1 = vec![0.0; 60];
+        a1.spmv_into_zeroed(&x1, &mut want1);
+        crate::util::propcheck::assert_close(&y1, &want1, 1e-11, 1e-11).unwrap();
+        // Replace with a smaller matrix (the dangerous direction for a
+        // stale engine) and serve again.
+        let a2 = mat(40, 88);
+        svc.register("m", a2.clone());
+        let x2 = vec![1.0; 40];
+        let y2 = svc.call("m", x2.clone()).unwrap();
+        let mut want2 = vec![0.0; 40];
+        a2.spmv_into_zeroed(&x2, &mut want2);
+        crate::util::propcheck::assert_close(&y2, &want2, 1e-11, 1e-11).unwrap();
+        let s = svc.stats();
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.plan_builds, 2, "replacement must build a fresh plan");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reorder_always_serves_correct_products() {
+        // Policy Always: every parallel request runs through the RCM
+        // ordering (permuted engine + per-request permute/un-permute) —
+        // answers must be bit-identical in meaning to the plain path.
+        let mut rng = Rng::new(97);
+        let band = Csrc::from_coo(&Coo::banded(300, 2, false, &mut rng)).unwrap();
+        let shuffle = Permutation::from_new_to_old(rng.permutation(300)).unwrap();
+        let a = Arc::new(band.permuted(&shuffle)); // shuffled: RCM has room
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.reorder = reorder::ReorderPolicy::Always;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 300];
+        a.spmv_into_zeroed(&x, &mut want);
+        for _ in 0..3 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        assert_eq!(svc.stats().completed, 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn rcm_built_once_across_workers() {
+        // Satellite (ISSUE 6): four workers all serving one key through
+        // the RCM ordering must share a single permutation build — the
+        // artifact registry is service-wide, like the plan cache.
+        let mut rng = Rng::new(99);
+        let band = Csrc::from_coo(&Coo::banded(300, 2, false, &mut rng)).unwrap();
+        let shuffle = Permutation::from_new_to_old(rng.permutation(300)).unwrap();
+        let a = Arc::new(band.permuted(&shuffle));
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 4;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.reorder = reorder::ReorderPolicy::Always;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..300).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 300];
+        a.spmv_into_zeroed(&x, &mut want);
+        let rxs: Vec<_> = (0..24).map(|_| svc.submit("m", x.clone())).collect();
+        for rx in rxs {
+            let y = rx.recv().unwrap().unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 24);
+        assert_eq!(s.rcm_builds, 1, "N workers must share one RCM build, got {}", s.rcm_builds);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn coalesced_batches_replay_the_tuned_block_width() {
+        // Tentpole acceptance (ISSUE 6): a persisted k>1 decision,
+        // replayed by a cold-cache service, makes the worker coalesce
+        // same-matrix requests into blocked products — and the answers
+        // stay exact per request.
+        let dir = std::env::temp_dir().join(format!("csrc_spmm_svc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let a = mat(200, 500);
+        let kernel: Arc<dyn crate::sparse::SpmvKernel> = a.clone();
+        let fp = tuner::fingerprint(kernel.as_ref());
+        {
+            let cache = DecisionCache::open(&path);
+            let mut d = doctored_decision(fp, 100.0);
+            d.block_k = 4;
+            d.block_rates = vec![(1, 100.0), (2, 110.0), (4, 130.0), (8, 120.0)];
+            cache.put(d);
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.batch = BatchPolicy {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(50),
+        };
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.0; // isolate coalescing from drift re-tunes
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        assert_eq!(svc.stats().tunes, 0, "the persisted k>1 decision must be a cache hit");
+        // A burst within the batching window forms one multi-request
+        // batch, which the worker serves as two width-4 panels.
+        let xs: Vec<Vec<f64>> = (0..8)
+            .map(|r| (0..200).map(|i| ((r * 200 + i) as f64 * 0.01).sin()).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit("m", x.clone())).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let y = rx.recv().unwrap().unwrap();
+            let mut want = vec![0.0; 200];
+            a.spmv_into_zeroed(x, &mut want);
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 8);
+        assert!(
+            s.coalesced_products >= 1 && s.coalesced_requests >= 2,
+            "a burst against a k=4 decision must coalesce (products={}, requests={})",
+            s.coalesced_products,
+            s.coalesced_requests
+        );
+        svc.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_engine_cache_evicts_lru() {
+        // Capacity-1 worker cache serving two matrices must release the
+        // older engine (and its parked pool) instead of hoarding both.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.engine_cache_capacity = 1;
+        let svc = MatvecService::start(cfg);
+        let a = mat(60, 91);
+        let b = mat(50, 92);
+        svc.register("a", a.clone());
+        svc.register("b", b.clone());
+        for (key, m) in [("a", &a), ("b", &b), ("a", &a)] {
+            let x = vec![1.0; m.n];
+            let y = svc.call(key, x.clone()).unwrap();
+            let mut want = vec![0.0; m.n];
+            m.spmv_into_zeroed(&x, &mut want);
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        let s = svc.stats();
+        assert_eq!(s.completed, 3);
+        assert!(
+            s.engines_evicted >= 1,
+            "capacity-1 cache must evict between matrices, evicted {}",
+            s.engines_evicted
+        );
+        svc.shutdown();
+    }
+}

@@ -11,6 +11,7 @@
 //! * Table 2 — avg max per-thread init+accumulate cycles by ws class.
 
 use super::dataset::DatasetEntry;
+use crate::coordinator::{ShardConfig, ShardedMatvecService};
 use crate::graph::{greedy_coloring, ConflictGraph, Ordering as ColorOrdering};
 use crate::metrics;
 use crate::obs::{self, Phase};
@@ -728,6 +729,61 @@ pub fn obs_headers() -> Vec<String> {
     h
 }
 
+// ------------------------------------------------------------ Shard table
+
+/// Shard counts the sharded-serving table sweeps (matching the shard
+/// equivalence tests: 1 = the unsharded baseline, 7 deliberately odd).
+pub const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+/// Beyond the paper: sharded serving (DESIGN.md §13). Per matrix and
+/// shard count, the served single-vector rate through the scatter/gather
+/// front (includes routing, queueing, and coupling — an end-to-end
+/// serving rate, not a kernel rate) and the halo volume the overlap
+/// decomposition pays at that shard count, plus a correctness check of
+/// every served product against the sequential kernel.
+pub fn shard_table(entries: &[DatasetEntry]) -> Vec<Vec<String>> {
+    entries
+        .iter()
+        .map(|e| {
+            let m = Arc::new(e.build_csrc());
+            let n = m.n;
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.001).sin()).collect();
+            let mut want = vec![0.0; n];
+            m.spmv_into_zeroed(&x, &mut want);
+            let mut cells = vec![e.name.to_string()];
+            let mut ok = true;
+            let products = products_for(m.nnz()).min(10);
+            for s in SHARD_COUNTS {
+                let svc = ShardedMatvecService::start(ShardConfig {
+                    nshards: s,
+                    ..ShardConfig::default()
+                });
+                svc.register(e.name, m.clone());
+                let mut y = Vec::new();
+                let secs = metrics::median_of_runs(2, products, || {
+                    y = svc.spmv(e.name, &x).expect("sharded product");
+                });
+                ok &= (0..n).all(|i| (y[i] - want[i]).abs() <= 1e-9 * (1.0 + want[i].abs()));
+                cells.push(format!("{:.1}", metrics::mflops(m.flops(), secs)));
+                cells.push(format!("{:.0}", svc.halo_doubles()));
+                svc.shutdown();
+            }
+            cells.push(if ok { "yes" } else { "NO" }.into());
+            cells
+        })
+        .collect()
+}
+
+pub fn shard_headers() -> Vec<String> {
+    let mut h = vec!["matrix".to_string()];
+    for s in SHARD_COUNTS {
+        h.push(format!("s={s} Mflop/s"));
+        h.push(format!("s={s} halo"));
+    }
+    h.push("correct".into());
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -773,6 +829,17 @@ mod tests {
         let rows = table2(&smoke_suite()[..1]);
         assert_eq!(rows.len(), 4);
         assert_eq!(rows[0].len(), table2_headers().len());
+    }
+
+    #[test]
+    fn shard_table_matches_headers_and_serves_correctly() {
+        let rows = shard_table(&smoke_suite()[..1]);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].len(), shard_headers().len());
+        assert_eq!(rows[0].last().unwrap(), "yes", "{rows:?}");
+        // shards=1 pays no halo; every sharded count pays some.
+        assert_eq!(rows[0][2], "0");
+        assert_ne!(rows[0][4], "0");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! * `figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|spmm|model|all>`
 //!            `[--suite quick|full|smoke] [--out results]`
 
-use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
+use csrc_spmv::coordinator::{MatvecService, ServiceConfig, ShardConfig, ShardedMatvecService};
 use csrc_spmv::gen;
 use csrc_spmv::harness::{self, figures, Report};
 use csrc_spmv::metrics;
@@ -82,13 +82,17 @@ fn usage_and_exit() -> ! {
                       one blocked spmv_multi product per iteration)\n\
          csrc serve   [--requests N] [--workers W] [--engine auto] [--min-parallel-n N]\n\
                       [--sweep-threads] [--reorder never|measure|always] [--model model.json]\n\
+                      [--shards S] (row-block shard the service: one private service per shard\n\
+                      behind a scatter/gather front with bounded per-shard queues)\n\
                       [--metrics-addr HOST:PORT] (Prometheus text endpoint; port 0 = pick free)\n\
                       [--linger-ms T] (keep serving scrapes T ms after the demo requests)\n\
          csrc trace   --matrix <..> [--engine <kind>] [--threads P] [--rhs K] [--out trace.json]\n\
+                      [--shards S] (trace one product through the sharded front instead:\n\
+                      scatter/gather spans plus per-shard serve spans on distinct tids)\n\
                       (run one traced product; prints the per-phase breakdown and writes a\n\
                       chrome://tracing JSON dump, validated against the event schema)\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|spmm|model|obs|all>\n\
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|spmm|model|obs|shard|all>\n\
                       [--suite smoke|quick|full] [--out results] [--model model.json]"
     );
     std::process::exit(2);
@@ -482,6 +486,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = args.opt("model") {
         cfg.model = Some(std::path::PathBuf::from(p));
     }
+    // `--shards N` serves through the sharded front instead: each
+    // registered matrix is row-block partitioned and every shard runs a
+    // private service built from this same config.
+    if let Some(nshards) = args.opt("shards") {
+        let nshards: usize = nshards.parse().map_err(|_| msg("bad --shards"))?;
+        return serve_sharded(args, nshards.max(1), cfg);
+    }
     let svc = MatvecService::start(cfg);
     // `--metrics-addr` exposes the service registry as a Prometheus
     // text endpoint and turns on phase timing so scrapes carry the
@@ -560,12 +571,80 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `csrc serve --shards N`: the same demo through the sharded front —
+/// row-block shards, each with a private service, behind the
+/// scatter/gather router. The metrics endpoint serves one composed page:
+/// front counters (halo gauge, per-shard request/reject/deadline
+/// families) plus every shard's registry labeled `shard="<i>"`.
+fn serve_sharded(args: &Args, nshards: usize, service: ServiceConfig) -> Result<()> {
+    let requests = args.usize_or("requests", 64);
+    let cfg = ShardConfig { nshards, service, ..ShardConfig::default() };
+    let svc = ShardedMatvecService::start(cfg);
+    if let Some(addr) = args.opt("metrics-addr") {
+        obs::set_metrics_enabled(true);
+        let bound = svc.serve_metrics(addr)?;
+        println!("metrics: http://{bound}/metrics");
+    }
+    let names = ["thermal", "torsion1", "poisson3Da"];
+    let mut sizes = std::collections::HashMap::new();
+    for name in names {
+        let e = harness::full_suite().into_iter().find(|e| e.name == name).unwrap();
+        let m = Arc::new(e.build_csrc());
+        sizes.insert(name, m.n);
+        svc.register(name, m);
+    }
+    let mut rng = Rng::new(11);
+    let t = std::time::Instant::now();
+    let mut ok = 0;
+    for i in 0..requests {
+        let key = names[i % names.len()];
+        let n = sizes[key];
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        if svc.spmv(key, &x).is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{requests} across {nshards} shards in {:.3}s ({:.0} req/s); \
+         halo={} doubles/product",
+        dt,
+        requests as f64 / dt,
+        svc.halo_doubles()
+    );
+    for s in svc.stats() {
+        println!(
+            "  shard {}: {} col-requests, {} rejects, {} deadline misses; \
+             completed={} batches={} plan_builds={} tunes={}",
+            s.shard,
+            s.requests,
+            s.rejects,
+            s.deadline_exceeded,
+            s.service.completed,
+            s.service.batches,
+            s.service.plan_builds,
+            s.service.tunes
+        );
+    }
+    let linger = args.usize_or("linger-ms", 0);
+    if linger > 0 {
+        println!("lingering {linger} ms for scrapes");
+        std::thread::sleep(std::time::Duration::from_millis(linger as u64));
+    }
+    svc.shutdown();
+    Ok(())
+}
+
 /// `csrc trace`: run one (multi-vector) product under full tracing,
 /// print the per-phase wall-clock breakdown, and write the span events
 /// as chrome://tracing JSON (load in `about:tracing` or
 /// <https://ui.perfetto.dev>), self-validated against the event schema.
 fn cmd_trace(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
+    if let Some(nshards) = args.opt("shards") {
+        let nshards: usize = nshards.parse().map_err(|_| msg("bad --shards"))?;
+        return trace_sharded(args, &name, m, nshards.max(1));
+    }
     let kind = EngineKind::parse(args.opt_or("engine", "effective"))
         .ok_or_else(|| msg("bad --engine"))?;
     let threads = args.usize_or("threads", 2);
@@ -592,6 +671,53 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let totals = obs::phase_totals();
     let total_ns: u64 = totals.iter().map(|t| t.ns).sum();
     println!("phase breakdown (plan build + one spmv_multi product):");
+    for t in &totals {
+        if t.calls == 0 {
+            continue;
+        }
+        println!(
+            "  {:<16} {:>5} spans  {:>10.3} ms  {:>5.1}%",
+            t.phase.label(),
+            t.calls,
+            t.ns as f64 / 1e6,
+            100.0 * t.ns as f64 / total_ns.max(1) as f64
+        );
+    }
+    let j = obs::trace_to_json(&events);
+    let nevents = obs::validate_trace_json(&j).map_err(msg)?;
+    let out = args.opt_or("out", "trace.json");
+    std::fs::write(Path::new(out), j.dump())?;
+    println!(
+        "trace valid: {nevents} events ({} begin events dropped at the ring cap); wrote {out}",
+        obs::trace_dropped()
+    );
+    Ok(())
+}
+
+/// `csrc trace --shards N`: one traced panel product through the
+/// sharded front. The dump carries the front's scatter/gather spans on
+/// the caller's thread plus every shard's serve/sweep spans on its own
+/// worker tids — the per-shard concurrency is visible in the timeline.
+fn trace_sharded(args: &Args, name: &str, m: Csrc, nshards: usize) -> Result<()> {
+    let k = args.usize_or("rhs", 4).max(1);
+    let n = m.n;
+    let a = Arc::new(m);
+    obs::reset_phases();
+    obs::set_metrics_enabled(true);
+    obs::start_trace();
+    let svc = ShardedMatvecService::start(ShardConfig { nshards, ..ShardConfig::default() });
+    svc.register(name, a);
+    let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.001).sin()).collect();
+    svc.spmv_multi(name, &x, k).map_err(msg)?;
+    // Shut the shards down *before* closing the trace: worker and
+    // retuner threads exit, so every span they opened is closed.
+    svc.shutdown();
+    let events = obs::stop_trace();
+    obs::set_metrics_enabled(false);
+    println!("{name}: sharded front, {nshards} shards, k={k}");
+    let totals = obs::phase_totals();
+    let total_ns: u64 = totals.iter().map(|t| t.ns).sum();
+    println!("phase breakdown (register + one sharded spmv_multi product):");
     for t in &totals {
         if t.calls == 0 {
             continue;
@@ -821,6 +947,16 @@ fn cmd_figures(args: &Args) -> Result<()> {
             "Learned cost model — measured winner vs model/heuristic cold-start picks and regret",
             &h,
             &figures::model_table(&suite, p, &trial_budget, model.as_ref()),
+        )?;
+    }
+    if run_all || what == "shard" {
+        let headers = figures::shard_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "shard",
+            "Sharded serving — end-to-end rate and halo volume vs shard count",
+            &h,
+            &figures::shard_table(&suite),
         )?;
     }
     if run_all || what == "obs" {

@@ -59,10 +59,14 @@ pub enum Phase {
     Serve = 8,
     /// One background re-tune triggered by drift.
     Retune = 9,
+    /// Sharded front: split x into per-shard local rows + gathered halo.
+    Scatter = 10,
+    /// Sharded front: collect per-shard results + coupling back into y.
+    Gather = 11,
 }
 
 /// Number of phases (length of [`Phase::ALL`]).
-pub const NPHASES: usize = 10;
+pub const NPHASES: usize = 12;
 
 impl Phase {
     pub const ALL: [Phase; NPHASES] = [
@@ -76,6 +80,8 @@ impl Phase {
         Phase::Coalesce,
         Phase::Serve,
         Phase::Retune,
+        Phase::Scatter,
+        Phase::Gather,
     ];
 
     pub fn label(self) -> &'static str {
@@ -90,6 +96,8 @@ impl Phase {
             Phase::Coalesce => "coalesce",
             Phase::Serve => "serve",
             Phase::Retune => "retune",
+            Phase::Scatter => "scatter",
+            Phase::Gather => "gather",
         }
     }
 
@@ -505,20 +513,38 @@ impl MetricsRegistry {
     /// with q50/q90/q99 + `_sum`/`_count`), then the process-wide phase
     /// totals as `csrc_phase_seconds_total{phase=…}` / `_calls_total`.
     pub fn render_prometheus(&self) -> String {
+        self.render_prometheus_with(&[], true)
+    }
+
+    /// [`Self::render_prometheus`] with `extra` label pairs injected
+    /// into every sample — the sharded front tags each shard's registry
+    /// with `shard="i"` — and optionally without the process-wide phase
+    /// totals: those are global, so a front that concatenates N shard
+    /// renderings must emit them once, not N times.
+    pub fn render_prometheus_with(&self, extra: &[(&str, &str)], include_phases: bool) -> String {
+        // `inner` goes inside an existing label block ('k="v",' ...),
+        // `bare` is the complete block for otherwise-unlabeled samples.
+        let inner: String =
+            extra.iter().map(|(k, v)| format!("{k}=\"{}\",", escape_label(v))).collect();
+        let bare = if inner.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", inner.trim_end_matches(','))
+        };
         let mut out = String::new();
         for (name, a) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("# TYPE {name} counter\n"));
-            out.push_str(&format!("{name} {}\n", a.load(Relaxed)));
+            out.push_str(&format!("{name}{bare} {}\n", a.load(Relaxed)));
         }
         for (name, series) in self.families.lock().unwrap().iter() {
             out.push_str(&format!("# TYPE {name} counter\n"));
             for (labels, a) in series {
-                out.push_str(&format!("{name}{{{labels}}} {}\n", a.load(Relaxed)));
+                out.push_str(&format!("{name}{{{inner}{labels}}} {}\n", a.load(Relaxed)));
             }
         }
         for (name, a) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("# TYPE {name} gauge\n"));
-            out.push_str(&format!("{name} {}\n", f64::from_bits(a.load(Relaxed))));
+            out.push_str(&format!("{name}{bare} {}\n", f64::from_bits(a.load(Relaxed))));
         }
         let mut names: Vec<String> = Vec::new();
         for (n, _) in self.histograms.lock().unwrap().iter() {
@@ -530,21 +556,26 @@ impl MetricsRegistry {
             let h = self.merged_histogram(name);
             out.push_str(&format!("# TYPE {name} summary\n"));
             for q in [0.5, 0.9, 0.99] {
-                out.push_str(&format!("{name}{{quantile=\"{q}\"}} {}\n", h.quantile_us(q)));
+                out.push_str(&format!("{name}{{{inner}quantile=\"{q}\"}} {}\n", h.quantile_us(q)));
             }
-            out.push_str(&format!("{name}_sum {}\n", h.sum_us()));
-            out.push_str(&format!("{name}_count {}\n", h.count()));
+            out.push_str(&format!("{name}_sum{bare} {}\n", h.sum_us()));
+            out.push_str(&format!("{name}_count{bare} {}\n", h.count()));
         }
-        out.push_str("# TYPE csrc_phase_seconds_total counter\n");
-        for t in phase_totals() {
-            let label = t.phase.label();
-            out.push_str(&format!("csrc_phase_seconds_total{{phase=\"{label}\"}} "));
-            out.push_str(&format!("{}\n", t.seconds()));
-        }
-        out.push_str("# TYPE csrc_phase_calls_total counter\n");
-        for t in phase_totals() {
-            let label = t.phase.label();
-            out.push_str(&format!("csrc_phase_calls_total{{phase=\"{label}\"}} {}\n", t.calls));
+        if include_phases {
+            out.push_str("# TYPE csrc_phase_seconds_total counter\n");
+            for t in phase_totals() {
+                let label = t.phase.label();
+                out.push_str(&format!("csrc_phase_seconds_total{{{inner}phase=\"{label}\"}} "));
+                out.push_str(&format!("{}\n", t.seconds()));
+            }
+            out.push_str("# TYPE csrc_phase_calls_total counter\n");
+            for t in phase_totals() {
+                let label = t.phase.label();
+                out.push_str(&format!(
+                    "csrc_phase_calls_total{{{inner}phase=\"{label}\"}} {}\n",
+                    t.calls
+                ));
+            }
         }
         out
     }
@@ -569,29 +600,38 @@ fn escape_label(v: &str) -> String {
 /// listener lives for the process — it is an exposition endpoint, not a
 /// general web server.
 pub fn serve_metrics(addr: &str, registry: Arc<MetricsRegistry>) -> std::io::Result<SocketAddr> {
+    serve_rendered(addr, move || registry.render_prometheus())
+}
+
+/// [`serve_metrics`] generalized to a closure that produces the scrape
+/// body — the sharded front composes one exposition per scrape from its
+/// own registry plus every shard's (labeled `shard="i"`).
+pub fn serve_rendered<F>(addr: &str, render: F) -> std::io::Result<SocketAddr>
+where
+    F: Fn() -> String + Send + 'static,
+{
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     std::thread::Builder::new().name("csrc-metrics".into()).spawn(move || {
         for mut stream in listener.incoming().flatten() {
-            let _ = answer_scrape(&mut stream, &registry);
+            let _ = answer_scrape(&mut stream, &render());
         }
     })?;
     Ok(local)
 }
 
-fn answer_scrape(s: &mut TcpStream, registry: &MetricsRegistry) -> std::io::Result<()> {
+fn answer_scrape(s: &mut TcpStream, body: &str) -> std::io::Result<()> {
     // Best-effort read of the request head; every path gets the same
     // body, so a short or slow request cannot wedge the thread.
     let _ = s.set_read_timeout(Some(std::time::Duration::from_millis(500)));
     let mut head = [0u8; 1024];
     let _ = s.read(&mut head);
-    let body = registry.render_prometheus();
     let mut resp = String::new();
     resp.push_str("HTTP/1.1 200 OK\r\n");
     resp.push_str("Content-Type: text/plain; version=0.0.4\r\n");
     resp.push_str(&format!("Content-Length: {}\r\n", body.len()));
     resp.push_str("Connection: close\r\n\r\n");
-    resp.push_str(&body);
+    resp.push_str(body);
     s.write_all(resp.as_bytes())
 }
 

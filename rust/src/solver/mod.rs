@@ -81,6 +81,40 @@ impl LinOp for EngineLinOp {
     }
 }
 
+/// Adapter: a matrix registered with a
+/// [`crate::coordinator::ShardedMatvecService`] is a
+/// [`LinOp`] — every solver iteration scatters across the shards and
+/// gathers back, so a CG/GMRES solve exercises the full sharded serving
+/// path (the §5 "iterative solver on a decomposed domain" shape).
+/// Serving errors (unknown key, back-pressure, deadline) panic: solvers
+/// have no error channel for the operator, and a mid-solve rejection is
+/// a deployment bug, not a numerical event.
+pub struct ShardedLinOp<'a> {
+    svc: &'a crate::coordinator::ShardedMatvecService,
+    key: String,
+    n: usize,
+}
+
+impl<'a> ShardedLinOp<'a> {
+    pub fn new(svc: &'a crate::coordinator::ShardedMatvecService, key: &str, n: usize) -> Self {
+        Self { svc, key: key.to_string(), n }
+    }
+}
+
+impl LinOp for ShardedLinOp<'_> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let r = self.svc.spmv(&self.key, x).expect("sharded spmv failed mid-solve");
+        y.copy_from_slice(&r);
+    }
+    fn apply_multi(&self, x: &[f64], y: &mut [f64], k: usize) {
+        let r = self.svc.spmv_multi(&self.key, x, k).expect("sharded spmv_multi failed mid-solve");
+        y.copy_from_slice(&r);
+    }
+}
+
 /// BiCG — an oblique-projection method needing both A·v and Aᵀ·v per
 /// iteration: the workload where CSRC's free transpose pays (§5).
 pub struct BicgResult {
@@ -205,6 +239,30 @@ mod tests {
         op.apply(&x, &mut y1);
         a.spmv_into_zeroed(&x, &mut y2);
         crate::util::propcheck::assert_close(&y1, &y2, 1e-11, 1e-11).unwrap();
+    }
+
+    #[test]
+    fn sharded_linop_runs_cg_through_the_front() {
+        use crate::coordinator::{ShardConfig, ShardedMatvecService};
+        let mut rng = Rng::new(94);
+        let coo = Coo::random_structurally_symmetric(90, 3, true, &mut rng);
+        let a = std::sync::Arc::new(Csrc::from_coo(&coo).unwrap());
+        let xstar: Vec<f64> = (0..90).map(|_| rng.normal()).collect();
+        let mut b = vec![0.0; 90];
+        a.spmv_into_zeroed(&xstar, &mut b);
+        // Unsharded reference solve on the raw operator.
+        let want = cg::cg(a.as_ref(), &b, None, 1e-10, 2000);
+        assert!(want.converged, "reference residual {}", want.residual);
+        for nshards in [2usize, 4] {
+            let svc =
+                ShardedMatvecService::start(ShardConfig { nshards, ..ShardConfig::default() });
+            svc.register("a", a.clone());
+            let op = ShardedLinOp::new(&svc, "a", 90);
+            let r = cg::cg(&op, &b, None, 1e-10, 2000);
+            assert!(r.converged, "nshards={nshards} residual {}", r.residual);
+            crate::util::propcheck::assert_close(&r.x, &want.x, 1e-6, 1e-6).unwrap();
+            svc.shutdown();
+        }
     }
 
     #[test]

@@ -72,6 +72,86 @@ impl CsrcRect {
         }
     }
 
+    /// Panel form of Fig. 2(b): Y (n×k, row-major) = A X (m×k, row-major).
+    /// Each nonzero is read once per panel, mirroring `Csrc::spmv_multi`,
+    /// so sharded serving composes with the batcher's coalesced SpMM
+    /// instead of de-interleaving into k scalar products.
+    pub fn spmv_multi(&self, x: &[f64], y: &mut [f64], k: usize) {
+        if k == 1 {
+            self.spmv(x, y);
+            return;
+        }
+        let n = self.n();
+        debug_assert_eq!(x.len(), self.m * k);
+        debug_assert_eq!(y.len(), n * k);
+        y.fill(0.0);
+        let mut t = vec![0.0; k];
+        for i in 0..n {
+            let xi = &x[i * k..i * k + k];
+            let adi = self.square.ad[i];
+            for c in 0..k {
+                t[c] = adi * xi[c];
+            }
+            for kk in self.square.row_range(i) {
+                let j = self.square.ja[kk] as usize;
+                let (al, au) = (self.square.al[kk], self.square.au[kk]);
+                let xj = &x[j * k..j * k + k];
+                let yj = &mut y[j * k..j * k + k];
+                for c in 0..k {
+                    t[c] += al * xj[c];
+                    yj[c] += au * xi[c];
+                }
+            }
+            for kk in self.iar[i] as usize..self.iar[i + 1] as usize {
+                let ar = self.ar[kk];
+                let j = n + self.jar[kk] as usize;
+                let xj = &x[j * k..j * k + k];
+                for c in 0..k {
+                    t[c] += ar * xj[c];
+                }
+            }
+            let yi = &mut y[i * k..i * k + k];
+            for c in 0..k {
+                yi[c] += t[c];
+            }
+        }
+    }
+
+    /// Coupling-only sweep: y (len n) += A_R · halo (len m−n). The halo
+    /// vector is indexed by *local ghost column* (0-based), i.e. the
+    /// caller has already gathered x[ghosts[..]] — this is the front
+    /// router's gather-side contribution in sharded serving.
+    pub fn coupling_spmv_into(&self, halo: &[f64], y: &mut [f64]) {
+        let n = self.n();
+        debug_assert_eq!(halo.len(), self.m - n);
+        debug_assert_eq!(y.len(), n);
+        for i in 0..n {
+            let mut t = 0.0;
+            for k in self.iar[i] as usize..self.iar[i + 1] as usize {
+                t += self.ar[k] * halo[self.jar[k] as usize];
+            }
+            y[i] += t;
+        }
+    }
+
+    /// Panel form of the coupling sweep: Y (n×k) += A_R · HALO ((m−n)×k),
+    /// both row-major.
+    pub fn coupling_spmv_multi_into(&self, halo: &[f64], y: &mut [f64], k: usize) {
+        let n = self.n();
+        debug_assert_eq!(halo.len(), (self.m - n) * k);
+        debug_assert_eq!(y.len(), n * k);
+        for i in 0..n {
+            let yi = &mut y[i * k..i * k + k];
+            for kk in self.iar[i] as usize..self.iar[i + 1] as usize {
+                let ar = self.ar[kk];
+                let hj = &halo[self.jar[kk] as usize * k..][..k];
+                for c in 0..k {
+                    yi[c] += ar * hj[c];
+                }
+            }
+        }
+    }
+
     pub fn working_set_bytes(&self) -> usize {
         self.square.working_set_bytes()
             + (self.iar.len() + self.jar.len()) * 4
@@ -149,6 +229,57 @@ mod tests {
         coo.push(0, 4, 1.0); // rectangular part — fine
         coo.compact();
         assert!(CsrcRect::from_coo(&coo).is_err());
+    }
+
+    #[test]
+    fn spmv_multi_matches_column_by_column() {
+        let mut rng = Rng::new(21);
+        let coo = random_rect(24, 33, &mut rng);
+        let rect = CsrcRect::from_coo(&coo).unwrap();
+        let (n, m) = (rect.n(), rect.m);
+        for k in [1, 2, 4, 7] {
+            let x: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let mut y = vec![0.0; n * k];
+            rect.spmv_multi(&x, &mut y, k);
+            for c in 0..k {
+                let xc: Vec<f64> = (0..m).map(|j| x[j * k + c]).collect();
+                let mut yc = vec![0.0; n];
+                rect.spmv(&xc, &mut yc);
+                let got: Vec<f64> = (0..n).map(|i| y[i * k + c]).collect();
+                propcheck::assert_close(&got, &yc, 1e-12, 1e-12)
+                    .unwrap_or_else(|e| panic!("k={k} col {c}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn coupling_sweep_matches_full_minus_square() {
+        let mut rng = Rng::new(22);
+        let coo = random_rect(18, 26, &mut rng);
+        let rect = CsrcRect::from_coo(&coo).unwrap();
+        let (n, m) = (rect.n(), rect.m);
+        let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        // Full rectangular product...
+        let mut yfull = vec![0.0; n];
+        rect.spmv(&x, &mut yfull);
+        // ...equals square part + coupling-only sweep over the halo tail.
+        let mut ysplit = vec![0.0; n];
+        rect.square.spmv_into_zeroed(&x[..n], &mut ysplit);
+        rect.coupling_spmv_into(&x[n..], &mut ysplit);
+        propcheck::assert_close(&yfull, &ysplit, 1e-12, 1e-12).unwrap();
+
+        // Panel variant against k scalar coupling sweeps.
+        let k = 3;
+        let halo: Vec<f64> = (0..(m - n) * k).map(|_| rng.normal()).collect();
+        let mut yp = vec![0.0; n * k];
+        rect.coupling_spmv_multi_into(&halo, &mut yp, k);
+        for c in 0..k {
+            let hc: Vec<f64> = (0..m - n).map(|j| halo[j * k + c]).collect();
+            let mut yc = vec![0.0; n];
+            rect.coupling_spmv_into(&hc, &mut yc);
+            let got: Vec<f64> = (0..n).map(|i| yp[i * k + c]).collect();
+            propcheck::assert_close(&got, &yc, 1e-13, 1e-13).unwrap();
+        }
     }
 
     #[test]

@@ -22,7 +22,10 @@
 //!   `BENCH_obs.json`,
 //! * shard scaling: end-to-end served rate and halo volume through the
 //!   sharded front vs shard count (DESIGN.md §13) — separate
-//!   `BENCH_shard.json`.
+//!   `BENCH_shard.json`,
+//! * fault-injection overhead: disarmed chaos gates (one relaxed load
+//!   each) bounded against a served product (DESIGN.md §14) — separate
+//!   `BENCH_faults.json`.
 //!
 //! Results land on stdout *and* in `results/ablations.json` (the SpMM
 //! and obs ablations write their own `results/BENCH_*.json`).
@@ -627,5 +630,69 @@ fn main() {
         }
         hb.finish_json(std::path::Path::new("results/BENCH_shard.json"))
             .expect("write shard json report");
+    }
+
+    // --- fault-injection overhead (ISSUE 9) -------------------------------
+    // The chaos gates are compiled in unconditionally, exactly like the
+    // obs spans: disarmed, each `faults::fire()` is one relaxed load.
+    // Same methodology as the obs bound — measure the disarmed gate
+    // directly, count how many gates one sharded product crosses (a
+    // rate-0 armed spec sends every crossing down the counting path
+    // without ever firing), and bound the disarmed overhead by their
+    // product over the product time. A rate-0 armed product is timed
+    // alongside for the real cost of the armed slow path (one mutex
+    // lock per gate). Own report: results/BENCH_faults.json.
+    {
+        use csrc_spmv::coordinator::{ShardConfig, ShardedMatvecService};
+        use csrc_spmv::faults::{self, InjectionPoint};
+        let mut fb = Bench::new("faults");
+        faults::reset();
+        let t_gate = fb.run("faults/fire-gate-disarmed", || {
+            std::hint::black_box(faults::fire(InjectionPoint::WorkerPanic));
+        });
+        let mut rng = Rng::new(61);
+        let n = 10_000usize;
+        let fem = Arc::new(Csrc::from_coo(&Coo::banded(n, 5, false, &mut rng)).unwrap());
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 1e-3).sin()).collect();
+        let mut want = vec![0.0; n];
+        fem.spmv_into_zeroed(&x, &mut want);
+        let svc = ShardedMatvecService::start(ShardConfig {
+            nshards: 2,
+            ..ShardConfig::default()
+        });
+        svc.register("fem", fem.clone());
+        let got = svc.spmv("fem", &x).expect("warm product");
+        assert!(
+            (0..n).all(|i| (got[i] - want[i]).abs() <= 1e-9 * (1.0 + want[i].abs())),
+            "sharded product diverges from the sequential kernel"
+        );
+        let t_off = fb.run("faults/spmv-disarmed", || {
+            std::hint::black_box(svc.spmv("fem", &x).expect("disarmed product"));
+        });
+        // Count the gates a product crosses: arm an empty (all-idle)
+        // spec so every `fire()` counts a check and none ever fires.
+        faults::configure("").expect("empty chaos spec");
+        faults::set_chaos_enabled(true);
+        let products = 4u64;
+        for _ in 0..products {
+            std::hint::black_box(svc.spmv("fem", &x).expect("counted product"));
+        }
+        let gates = faults::checks_total().div_ceil(products);
+        let t_armed = fb.run("faults/spmv-armed-rate0", || {
+            std::hint::black_box(svc.spmv("fem", &x).expect("armed product"));
+        });
+        faults::reset();
+        svc.shutdown();
+        fb.record("faults/gates-per-product", gates as f64, "gates");
+        fb.record("faults/armed-over-disarmed", t_armed / t_off, "x");
+        let overhead_pct = 100.0 * gates as f64 * t_gate / t_off;
+        fb.record("faults/disarmed-overhead-pct", overhead_pct, "% of product");
+        assert!(
+            overhead_pct < 2.0,
+            "disarmed fault gates must stay within 2% of a product \
+             ({gates} gates x {t_gate:.3e}s gate vs {t_off:.3e}s product)"
+        );
+        fb.finish_json(std::path::Path::new("results/BENCH_faults.json"))
+            .expect("write faults json report");
     }
 }

@@ -1,0 +1,164 @@
+//! Typed error taxonomy for the serving stack.
+//!
+//! Every failure a caller can see from [`MatvecService::call`] or the
+//! sharded front is either [`ServiceError::Retryable`] — a transient
+//! condition (full queue, missed deadline, crashed worker) carrying a
+//! suggested back-off — or [`ServiceError::Fatal`] — a caller bug
+//! (unknown matrix, wrong operand length) or shutdown, where retrying
+//! can never help. The front's retry loop, the circuit breakers, and
+//! the CLI chaos workload all branch on this split instead of string
+//! matching.
+//!
+//! [`MatvecService::call`]: super::MatvecService::call
+
+use std::fmt;
+use std::time::Duration;
+
+/// Why a retryable rejection happened — carried inside
+/// [`ServiceError::Retryable`] and used as the `reason` label of the
+/// `csrc_shard_rejections_total{shard,reason}` counter family.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Back-pressure: the shard's bounded queue could not absorb the
+    /// product even after the front's jittered retries.
+    QueueFull { shard: usize, depth: usize, capacity: usize },
+    /// The shard failed to answer within the configured deadline.
+    DeadlineExceeded { shard: usize, deadline: Duration },
+    /// A worker thread panicked mid-batch; the panic was caught, the
+    /// request failed over, and the supervisor is restarting the worker.
+    WorkerCrashed { shard: Option<usize> },
+}
+
+impl RejectReason {
+    /// Stable label for the `reason` dimension of rejection counters.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue-full",
+            RejectReason::DeadlineExceeded { .. } => "deadline-exceeded",
+            RejectReason::WorkerCrashed { .. } => "worker-crashed",
+        }
+    }
+
+    /// Which shard rejected, when known.
+    pub fn shard(&self) -> Option<usize> {
+        match self {
+            RejectReason::QueueFull { shard, .. } => Some(*shard),
+            RejectReason::DeadlineExceeded { shard, .. } => Some(*shard),
+            RejectReason::WorkerCrashed { shard } => *shard,
+        }
+    }
+}
+
+/// What a serving call can fail with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Transient: back off for `after` and retry the same call.
+    Retryable { reason: RejectReason, after: Duration },
+    /// Permanent: retrying can never succeed (caller bug or shutdown).
+    Fatal(String),
+}
+
+impl ServiceError {
+    /// Shorthand for a permanent error.
+    pub fn fatal(msg: impl Into<String>) -> ServiceError {
+        ServiceError::Fatal(msg.into())
+    }
+
+    /// Is retrying this call worthwhile?
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, ServiceError::Retryable { .. })
+    }
+
+    /// Suggested back-off before retrying, if retryable.
+    pub fn retry_after(&self) -> Option<Duration> {
+        match self {
+            ServiceError::Retryable { after, .. } => Some(*after),
+            ServiceError::Fatal(_) => None,
+        }
+    }
+
+    /// The rejection reason, if retryable.
+    pub fn reason(&self) -> Option<&RejectReason> {
+        match self {
+            ServiceError::Retryable { reason, .. } => Some(reason),
+            ServiceError::Fatal(_) => None,
+        }
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::Retryable { reason, after } => match reason {
+                RejectReason::QueueFull { shard, depth, capacity } => write!(
+                    f,
+                    "shard {shard} queue full ({depth} in flight, capacity {capacity}); \
+                     retry after {after:?}"
+                ),
+                RejectReason::DeadlineExceeded { shard, deadline } => write!(
+                    f,
+                    "shard {shard} missed the {deadline:?} deadline; retry after {after:?}"
+                ),
+                RejectReason::WorkerCrashed { shard: Some(s) } => write!(
+                    f,
+                    "shard {s}: worker crashed mid-batch (panic caught); retry after {after:?}"
+                ),
+                RejectReason::WorkerCrashed { shard: None } => {
+                    write!(f, "worker crashed mid-batch (panic caught); retry after {after:?}")
+                }
+            },
+            ServiceError::Fatal(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<ServiceError> for String {
+    fn from(e: ServiceError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_keeps_the_grep_surface() {
+        let qf = ServiceError::Retryable {
+            reason: RejectReason::QueueFull { shard: 2, depth: 9, capacity: 8 },
+            after: Duration::from_millis(1),
+        };
+        assert!(qf.to_string().contains("queue full"));
+        assert!(qf.to_string().contains("shard 2"));
+        assert!(qf.to_string().contains("capacity 8"));
+        let dl = ServiceError::Retryable {
+            reason: RejectReason::DeadlineExceeded {
+                shard: 0,
+                deadline: Duration::from_millis(40),
+            },
+            after: Duration::from_millis(250),
+        };
+        assert!(dl.to_string().contains("missed the"));
+        assert!(dl.to_string().contains("deadline"));
+        let fatal = ServiceError::fatal("unknown matrix \"a\"");
+        assert!(fatal.to_string().contains("unknown matrix"));
+    }
+
+    #[test]
+    fn taxonomy_helpers() {
+        let e = ServiceError::Retryable {
+            reason: RejectReason::WorkerCrashed { shard: None },
+            after: Duration::from_millis(10),
+        };
+        assert!(e.is_retryable());
+        assert_eq!(e.retry_after(), Some(Duration::from_millis(10)));
+        assert_eq!(e.reason().unwrap().label(), "worker-crashed");
+        assert_eq!(e.reason().unwrap().shard(), None);
+        let f = ServiceError::fatal("nope");
+        assert!(!f.is_retryable());
+        assert_eq!(f.retry_after(), None);
+        assert!(f.reason().is_none());
+    }
+}

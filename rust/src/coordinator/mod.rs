@@ -21,6 +21,7 @@
 //! vendor tree, and the request path must never touch python.
 
 pub mod batcher;
+pub mod error;
 pub(crate) mod registration;
 pub(crate) mod retuner;
 pub mod router;
@@ -30,9 +31,10 @@ pub(crate) mod stats;
 pub(crate) mod worker;
 
 pub use batcher::{form_batches, Batch, BatchPolicy};
+pub use error::{RejectReason, ServiceError};
 pub use router::{Backend, RoutePolicy, Router};
 pub use service::{MatvecService, ServiceConfig};
-pub use shard::{ShardConfig, ShardStats, ShardedMatvecService};
+pub use shard::{BreakerState, FrontStats, ShardConfig, ShardStats, ShardedMatvecService};
 pub use stats::ServiceStats;
 
 pub mod distributed;

@@ -13,9 +13,15 @@ use crate::obs::{self, Phase};
 use crate::plan::{PlanBuilder, PlanCache};
 use crate::sparse::SpmvKernel;
 use crate::tuner::{self, DecisionCache, TrialBudget};
+use crate::util::lock_unpoisoned;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
+
+/// The re-tune channel, shared so the supervisor can hand the *same*
+/// receiver to a respawned re-tuner: queued jobs survive a crash.
+pub(crate) type SharedRetuneRx = Arc<Mutex<Receiver<RetunerMsg>>>;
 
 /// A drift-triggered re-tune request, handled off the request path.
 pub(crate) struct RetuneJob {
@@ -35,7 +41,9 @@ pub(crate) enum RetunerMsg {
     RecordServedRate { fingerprint: u64, max_threads: usize, mflops: f64 },
 }
 
-/// Everything the background re-tuner shares with the service.
+/// Everything the background re-tuner shares with the service. `Clone`
+/// so the supervisor can keep a respawn template.
+#[derive(Clone)]
 pub(crate) struct RetunerCtx {
     pub(crate) registry: Arc<Mutex<Registry>>,
     pub(crate) plans: Arc<PlanCache>,
@@ -53,19 +61,39 @@ pub(crate) struct RetunerCtx {
 /// republish the resolution for workers, and reset the key's drift
 /// state into calibration) and served-baseline write-backs the workers
 /// hand off (a full cache-file rewrite each — request-path poison).
-pub(crate) fn retuner_loop(rx: Receiver<RetunerMsg>, ctx: RetunerCtx) {
-    while let Ok(msg) = rx.recv() {
+///
+/// Each message is handled under `catch_unwind`, so a panicking re-tune
+/// loses *that job only*; the loop reports `true` ("crashed") so the
+/// supervisor respawns a fresh re-tuner against the same shared
+/// receiver. Returns `false` on a clean channel close.
+pub(crate) fn retuner_loop(rx: SharedRetuneRx, ctx: RetunerCtx) -> bool {
+    loop {
+        let msg = match lock_unpoisoned(&rx).recv() {
+            Ok(msg) => msg,
+            Err(_) => return false, // every sender dropped: clean shutdown
+        };
+        if catch_unwind(AssertUnwindSafe(|| handle_retuner_msg(&ctx, msg))).is_err() {
+            // The job is lost (drift will re-flag it), but the thread
+            // must not die silently: report the crash for respawn.
+            ctx.stats.panics_caught.inc();
+            return true;
+        }
+    }
+}
+
+fn handle_retuner_msg(ctx: &RetunerCtx, msg: RetunerMsg) {
+    {
         let job = match msg {
             RetunerMsg::Retune(job) => job,
             RetunerMsg::RecordServedRate { fingerprint, max_threads, mflops } => {
                 ctx.decisions.set_served_rate(fingerprint, max_threads, mflops);
-                continue;
+                return;
             }
         };
-        let hit = ctx.registry.lock().unwrap().get(&job.matrix).cloned();
-        let Some((a, generation)) = hit else { continue };
+        let hit = lock_unpoisoned(&ctx.registry).get(&job.matrix).cloned();
+        let Some((a, generation)) = hit else { return };
         if generation != job.generation {
-            continue; // replaced since the drift was observed
+            return; // replaced since the drift was observed
         }
         let _retune_span = obs::phase(Phase::Retune);
         let kernel: Arc<dyn SpmvKernel> = a.clone();
@@ -108,17 +136,12 @@ pub(crate) fn retuner_loop(rx: Receiver<RetunerMsg>, ctx: RetunerCtx) {
         // either purges after our insert or we observe its generation
         // bump and skip.
         {
-            let mut resolved = ctx.resolved.lock().unwrap();
-            let mut drift = ctx.drift.lock().unwrap();
-            let current = ctx
-                .registry
-                .lock()
-                .unwrap()
-                .get(&job.matrix)
-                .map(|(_, g)| *g)
+            let mut resolved = lock_unpoisoned(&ctx.resolved);
+            let mut drift = lock_unpoisoned(&ctx.drift);
+            let current = lock_unpoisoned(&ctx.registry).get(&job.matrix).map(|(_, g)| *g)
                 == Some(job.generation);
             if !current {
-                continue;
+                return;
             }
             resolved.insert(job.cache_key.clone(), ResolvedAuto::from_decision(&d));
             // Fresh state (`retune_pending` cleared) in *calibration*

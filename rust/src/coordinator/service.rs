@@ -37,23 +37,33 @@
 //! one complete, private instance of all of it per shard.
 
 use super::batcher::{form_batches, summarize, BatchPolicy};
+use super::error::ServiceError;
 use super::registration::{
     self, is_generation_of, DriftState, RcmRegistry, Registry, ResolvedAuto, ResolverCtx,
 };
-use super::retuner::{retuner_loop, RetunerCtx, RetunerMsg};
+use super::retuner::{retuner_loop, RetunerCtx, RetunerMsg, SharedRetuneRx};
 use super::router::RoutePolicy;
 use super::stats::{Counters, ServiceStats};
-use super::worker::{worker_loop, Request, WorkerBatch, WorkerCtx};
+use super::worker::{worker_loop, ReplySlot, Request, SharedBatchRx, WorkerBatch, WorkerCtx};
 use crate::obs::{self, MetricsRegistry, Phase};
 use crate::parallel::EngineKind;
 use crate::plan::PlanCache;
 use crate::sparse::{Csrc, SpmvKernel};
 use crate::tuner::{self, DecisionCache, TrialBudget};
+use crate::util::lock_unpoisoned;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// First supervisor respawn delay after a thread crash; doubles per
+/// consecutive crash of the same slot, capped at
+/// [`RESTART_BACKOFF_CAP`] so a hard-crashing worker cannot spin the
+/// supervisor, and a one-off panic costs ~10ms of extra latency.
+pub(crate) const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(10);
+pub(crate) const RESTART_BACKOFF_CAP: Duration = Duration::from_secs(1);
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -109,7 +119,8 @@ pub struct MatvecService {
     plans: Arc<PlanCache>,
     queue_tx: Option<Sender<Request>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Owns and joins every worker + the retuner; respawns crashes.
+    supervisor: Option<std::thread::JoinHandle<()>>,
     stats: Arc<Counters>,
     route: RoutePolicy,
     tune_budget: TrialBudget,
@@ -124,7 +135,134 @@ pub struct MatvecService {
     /// `key@generation` → served-rate EWMA for drift detection.
     drift: Arc<Mutex<HashMap<String, DriftState>>>,
     retune_tx: Option<Sender<RetunerMsg>>,
-    retuner: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Which supervised thread an [`ExitReport`] is about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Role {
+    Worker(usize),
+    Retuner,
+}
+
+/// Sent by every supervised thread as its last act: which slot finished
+/// and whether it crashed (batch panic) or exited cleanly (shutdown).
+struct ExitReport {
+    role: Role,
+    crashed: bool,
+}
+
+fn spawn_worker(
+    slot: usize,
+    rx: SharedBatchRx,
+    ctx: WorkerCtx,
+    exit_tx: Sender<ExitReport>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("matvec-worker-{slot}"))
+        .spawn(move || {
+            let crashed = worker_loop(rx, ctx);
+            let _ = exit_tx.send(ExitReport { role: Role::Worker(slot), crashed });
+        })
+        .expect("spawn worker")
+}
+
+fn spawn_retuner(
+    rx: SharedRetuneRx,
+    ctx: RetunerCtx,
+    exit_tx: Sender<ExitReport>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("matvec-retuner".into())
+        .spawn(move || {
+            let crashed = retuner_loop(rx, ctx);
+            let _ = exit_tx.send(ExitReport { role: Role::Retuner, crashed });
+        })
+        .expect("spawn retuner")
+}
+
+/// Everything the supervisor needs to respawn a crashed thread: the
+/// shared queue receivers (so a replacement resumes the dead thread's
+/// queue) and a context template per slot.
+struct Supervision {
+    exit_rx: Receiver<ExitReport>,
+    /// The supervisor's own sender clone — handed to every respawn, and
+    /// keeps `exit_rx.recv()` from erroring while threads are down.
+    exit_tx: Sender<ExitReport>,
+    worker_rxs: Vec<SharedBatchRx>,
+    worker_ctxs: Vec<WorkerCtx>,
+    worker_handles: Vec<Option<JoinHandle<()>>>,
+    retune_rx: SharedRetuneRx,
+    retuner_ctx: Option<RetunerCtx>,
+    retuner_handle: Option<JoinHandle<()>>,
+    stats: Arc<Counters>,
+}
+
+/// Supervision tree root: join every exiting thread, respawn crashes
+/// with capped exponential backoff, stop respawning once shutdown is
+/// observed, and return only when every supervised thread is gone.
+fn supervisor_loop(mut sup: Supervision) {
+    let nworkers = sup.worker_handles.len();
+    let mut live = nworkers + 1; // workers + retuner
+    let mut backoff = vec![RESTART_BACKOFF_BASE; nworkers + 1]; // last = retuner
+    let mut shutting_down = false;
+    while live > 0 {
+        let report = match sup.exit_rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // unreachable: sup.exit_tx keeps the channel open
+        };
+        let handle = match report.role {
+            Role::Worker(i) => sup.worker_handles[i].take(),
+            Role::Retuner => sup.retuner_handle.take(),
+        };
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+        live -= 1;
+        if !report.crashed {
+            // Clean exits only happen at shutdown (a worker's queue
+            // closes only once the dispatcher is gone). Stop respawning
+            // and release the templates: each worker template holds a
+            // retune sender, and the retuner cannot drain and exit
+            // until every sender is dropped.
+            if !shutting_down {
+                shutting_down = true;
+                sup.worker_ctxs.clear();
+                sup.retuner_ctx = None;
+            }
+            continue;
+        }
+        if shutting_down {
+            continue; // tearing down: let crashed slots stay down
+        }
+        // Crashed mid-service: respawn with capped exponential backoff.
+        // The shared queue receiver survives the dead thread, so any
+        // batches it had not pulled are served by the replacement.
+        let bi = match report.role {
+            Role::Worker(i) => i,
+            Role::Retuner => nworkers,
+        };
+        std::thread::sleep(backoff[bi]);
+        backoff[bi] = (backoff[bi] * 2).min(RESTART_BACKOFF_CAP);
+        let _restart_span = obs::phase(Phase::Restart);
+        sup.stats.worker_restarts.inc();
+        match report.role {
+            Role::Worker(i) => {
+                sup.worker_handles[i] = Some(spawn_worker(
+                    i,
+                    sup.worker_rxs[i].clone(),
+                    sup.worker_ctxs[i].clone(),
+                    sup.exit_tx.clone(),
+                ));
+            }
+            Role::Retuner => {
+                if let Some(ctx) = sup.retuner_ctx.clone() {
+                    sup.retuner_handle =
+                        Some(spawn_retuner(sup.retune_rx.clone(), ctx, sup.exit_tx.clone()));
+                }
+            }
+        }
+        live += 1;
+    }
 }
 
 impl MatvecService {
@@ -145,9 +283,12 @@ impl MatvecService {
         let drift: Arc<Mutex<HashMap<String, DriftState>>> = Arc::new(Mutex::new(HashMap::new()));
         let (queue_tx, queue_rx) = channel::<Request>();
         let (retune_tx, retune_rx) = channel::<RetunerMsg>();
+        let (exit_tx, exit_rx) = channel::<ExitReport>();
 
         // Background re-tuner: drains drift-triggered jobs off the
-        // request path, upgrades the decision cache in place.
+        // request path, upgrades the decision cache in place. Its queue
+        // receiver is shared so a respawn after a crash resumes it.
+        let retune_rx: SharedRetuneRx = Arc::new(Mutex::new(retune_rx));
         let retuner_ctx = RetunerCtx {
             registry: registry.clone(),
             plans: plans.clone(),
@@ -158,17 +299,20 @@ impl MatvecService {
             drift: drift.clone(),
             stats: stats.clone(),
         };
-        let retuner = std::thread::Builder::new()
-            .name("matvec-retuner".into())
-            .spawn(move || retuner_loop(retune_rx, retuner_ctx))
-            .expect("spawn retuner");
+        let retuner_handle =
+            spawn_retuner(retune_rx.clone(), retuner_ctx.clone(), exit_tx.clone());
 
-        // Worker channels.
+        // Worker channels: the send side goes to the dispatcher, the
+        // receive side is shared with the supervisor so a respawned
+        // worker resumes the dead one's queue.
         let mut worker_txs: Vec<Sender<WorkerBatch>> = Vec::new();
-        let mut workers = Vec::new();
+        let mut worker_rxs: Vec<SharedBatchRx> = Vec::new();
+        let mut worker_ctxs: Vec<WorkerCtx> = Vec::new();
+        let mut worker_handles: Vec<Option<JoinHandle<()>>> = Vec::new();
         for wid in 0..cfg.workers.max(1) {
             let (tx, rx) = channel::<WorkerBatch>();
             worker_txs.push(tx);
+            let rx: SharedBatchRx = Arc::new(Mutex::new(rx));
             let ctx = WorkerCtx {
                 registry: registry.clone(),
                 plans: plans.clone(),
@@ -184,12 +328,9 @@ impl MatvecService {
                 drift_fraction: cfg.drift_fraction,
                 drift_min_batches: cfg.drift_min_batches,
             };
-            workers.push(
-                std::thread::Builder::new()
-                    .name(format!("matvec-worker-{wid}"))
-                    .spawn(move || worker_loop(rx, ctx))
-                    .expect("spawn worker"),
-            );
+            worker_handles.push(Some(spawn_worker(wid, rx.clone(), ctx.clone(), exit_tx.clone())));
+            worker_rxs.push(rx);
+            worker_ctxs.push(ctx);
         }
 
         // Dispatcher: drain queue -> batches -> round-robin workers.
@@ -200,12 +341,32 @@ impl MatvecService {
             .spawn(move || dispatcher_loop(queue_rx, worker_txs, batch_policy, stats_d))
             .expect("spawn dispatcher");
 
+        // Supervisor: owns every worker/retuner handle, joins exits,
+        // respawns crashes (capped backoff), and itself exits only once
+        // every supervised thread is down — so joining the supervisor
+        // joins the whole tree.
+        let sup = Supervision {
+            exit_rx,
+            exit_tx,
+            worker_rxs,
+            worker_ctxs,
+            worker_handles,
+            retune_rx,
+            retuner_ctx: Some(retuner_ctx),
+            retuner_handle: Some(retuner_handle),
+            stats: stats.clone(),
+        };
+        let supervisor = std::thread::Builder::new()
+            .name("matvec-supervisor".into())
+            .spawn(move || supervisor_loop(sup))
+            .expect("spawn supervisor");
+
         MatvecService {
             registry,
             plans,
             queue_tx: Some(queue_tx),
             dispatcher: Some(dispatcher),
-            workers,
+            supervisor: Some(supervisor),
             stats,
             route: cfg.route,
             tune_budget: cfg.tune_budget,
@@ -215,7 +376,6 @@ impl MatvecService {
             rcm,
             drift,
             retune_tx: Some(retune_tx),
-            retuner: Some(retuner),
         }
     }
 
@@ -235,7 +395,7 @@ impl MatvecService {
         // under the registry lock would stall all workers behind an
         // unrelated build.
         let (generation, replaced) = {
-            let mut reg = self.registry.lock().unwrap();
+            let mut reg = lock_unpoisoned(&self.registry);
             let generation = reg.get(key).map(|(_, g)| g + 1).unwrap_or(0);
             let replaced = reg.insert(key.to_string(), (a.clone(), generation)).is_some();
             (generation, replaced)
@@ -252,9 +412,9 @@ impl MatvecService {
             // prefix (over-matching only costs a rebuild; an artifact a
             // worker races in mid-replace is collected by the next
             // replacement at the latest).
-            self.rcm.lock().unwrap().retain(|k, _| !k.starts_with(&prefix));
-            self.resolved.lock().unwrap().retain(|k, _| !is_generation_of(k, &prefix));
-            self.drift.lock().unwrap().retain(|k, _| !is_generation_of(k, &prefix));
+            lock_unpoisoned(&self.rcm).retain(|k, _| !k.starts_with(&prefix));
+            lock_unpoisoned(&self.resolved).retain(|k, _| !is_generation_of(k, &prefix));
+            lock_unpoisoned(&self.drift).retain(|k, _| !is_generation_of(k, &prefix));
         }
         // Auto routing: resolve the concrete engine — and, with
         // `sweep_threads`, the thread count — now, off the request path
@@ -275,12 +435,10 @@ impl MatvecService {
                 model: self.model.as_deref(),
             };
             let (d, hit) = registration::resolve_auto(&ctx, &cache_key, &kernel);
-            self.resolved
-                .lock()
-                .unwrap()
+            lock_unpoisoned(&self.resolved)
                 .insert(cache_key.clone(), ResolvedAuto::from_decision(&d));
             // Fresh drift baseline for the new decision/generation.
-            self.drift.lock().unwrap().insert(cache_key, DriftState::default());
+            lock_unpoisoned(&self.drift).insert(cache_key, DriftState::default());
             if !hit {
                 self.stats.tunes.inc();
                 self.stats.add_tune_seconds(d.tuned_s);
@@ -294,17 +452,25 @@ impl MatvecService {
             }
             // Reordered winners are visible in the choice log (the plain
             // label still parses as an EngineKind for plain winners).
-            let mut log = self.stats.choices.lock().unwrap();
+            let mut log = lock_unpoisoned(&self.stats.choices);
             log.auto_choices.push((key.to_string(), d.label()));
             log.chosen_threads.push((key.to_string(), d.nthreads));
         }
     }
 
-    /// Submit y = A·x; returns the reply channel.
-    pub fn submit(&self, key: &str, x: Vec<f64>) -> Receiver<Result<Vec<f64>, String>> {
+    /// Submit y = A·x; returns the reply channel. A request resolves to
+    /// `Ok(y)`, a typed [`ServiceError`] (retryable worker crash, fatal
+    /// caller bug), or a channel disconnect if the service shuts down
+    /// before answering — never silence.
+    pub fn submit(&self, key: &str, x: Vec<f64>) -> Receiver<Result<Vec<f64>, ServiceError>> {
         let (tx, rx) = channel();
         self.stats.submitted.inc();
-        let req = Request { matrix: key.to_string(), x, enqueued: Instant::now(), reply: tx };
+        let req = Request {
+            matrix: key.to_string(),
+            x,
+            enqueued: Instant::now(),
+            reply: ReplySlot::new(tx),
+        };
         // If the service is shutting down the reply channel will just
         // return a disconnect error to the caller.
         if let Some(q) = &self.queue_tx {
@@ -314,10 +480,10 @@ impl MatvecService {
     }
 
     /// Convenience: submit and wait.
-    pub fn call(&self, key: &str, x: Vec<f64>) -> Result<Vec<f64>, String> {
+    pub fn call(&self, key: &str, x: Vec<f64>) -> Result<Vec<f64>, ServiceError> {
         self.submit(key, x)
             .recv()
-            .map_err(|_| "service shut down before reply".to_string())?
+            .map_err(|_| ServiceError::fatal("service shut down before reply"))?
     }
 
     /// Requests currently submitted but not yet answered. The sharded
@@ -344,7 +510,7 @@ impl MatvecService {
         let completed = c.completed.get();
         let failed = c.failed.get();
         let lat = c.obs.merged_histogram("csrc_request_latency_us");
-        let log = c.choices.lock().unwrap();
+        let log = lock_unpoisoned(&c.choices);
         let auto_choices = log.auto_choices.clone();
         let chosen_threads = log.chosen_threads.clone();
         drop(log);
@@ -371,6 +537,8 @@ impl MatvecService {
             coalesced_products: c.coalesced_products.get(),
             coalesced_requests: c.coalesced_requests.get(),
             rcm_builds: c.rcm_builds.get(),
+            panics_caught: c.panics_caught.get(),
+            worker_restarts: c.worker_restarts.get(),
         }
     }
 
@@ -390,14 +558,15 @@ impl MatvecService {
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
-        // Workers (the other senders) are gone: dropping ours closes the
-        // re-tune queue, and the re-tuner drains what is pending first.
+        // With the dispatcher gone the worker queues close, so workers
+        // drain and exit cleanly; the first clean exit tells the
+        // supervisor to stop respawning and drop its context templates
+        // (whose retune senders, with ours below, are what keep the
+        // retuner alive). Joining the supervisor therefore joins every
+        // worker *and* the retuner — nothing detaches.
         self.retune_tx.take();
-        if let Some(r) = self.retuner.take() {
-            let _ = r.join();
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
     }
 }
@@ -478,7 +647,8 @@ mod tests {
     fn unknown_matrix_fails_cleanly() {
         let svc = MatvecService::start(ServiceConfig::default());
         let err = svc.call("ghost", vec![1.0; 4]).unwrap_err();
-        assert!(err.contains("unknown matrix"), "{err}");
+        assert!(!err.is_retryable(), "an unknown matrix is a caller bug, not transient");
+        assert!(err.to_string().contains("unknown matrix"), "{err}");
         assert_eq!(svc.stats().failed, 1);
     }
 
@@ -487,7 +657,8 @@ mod tests {
         let svc = MatvecService::start(ServiceConfig::default());
         svc.register("a", mat(50, 81));
         let err = svc.call("a", vec![1.0; 3]).unwrap_err();
-        assert!(err.contains("length"), "{err}");
+        assert!(!err.is_retryable(), "a wrong-length operand is a caller bug, not transient");
+        assert!(err.to_string().contains("length"), "{err}");
     }
 
     #[test]

@@ -21,22 +21,41 @@
 //! traced as their own phases ([`crate::obs::Phase::Scatter`] /
 //! [`crate::obs::Phase::Gather`]).
 //!
-//! Two service-shaped guardrails live at the front, not in the shards:
-//! *back-pressure* — a shard whose in-flight depth would exceed
-//! [`ShardConfig::queue_capacity`] rejects the product instead of
-//! growing its queue — and a per-shard *deadline* on the gather side, so
-//! a wedged shard turns into an error, not a hang.
+//! Fault tolerance lives at the front (DESIGN.md §14). Failures are
+//! **typed** ([`ServiceError`]): back-pressure and deadline misses are
+//! `Retryable` with a suggested back-off, caller bugs are `Fatal`.
+//! Queue-full submits are retried a few times with jittered exponential
+//! back-off before the product is rejected. Each shard has a **circuit
+//! breaker**: `breaker_threshold` consecutive product failures
+//! (deadline misses and worker-crash replies — queue-full is healthy
+//! back-pressure and does not count) open it; an open breaker routes
+//! the shard's row block through the **sequential fallback** — the
+//! front computes `A_S · x_owned` itself on the retained square part
+//! (slower, never wrong, counted in
+//! `csrc_shard_degraded_products_total`) — until the cooldown expires
+//! and a half-open probe is admitted. Breaker state is a Prometheus
+//! gauge (`csrc_shard_breaker_state`: 0 closed / 1 open / 2 half-open)
+//! and every transition bumps
+//! `csrc_shard_breaker_transitions_total{shard,to}`.
 
 use super::distributed::DistributedMatrix;
+use super::error::{RejectReason, ServiceError};
 use super::service::{MatvecService, ServiceConfig};
 use super::stats::ServiceStats;
+use crate::faults::{self, InjectionPoint};
 use crate::obs::{self, Counter, Gauge, MetricsRegistry, Phase};
 use crate::sparse::{Csrc, CsrcRect};
+use crate::util::{lock_unpoisoned, Rng};
 use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::ops::Range;
+use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Ceiling on the front's jittered retry back-off between queue-full
+/// submit attempts.
+const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(20);
 
 /// Sharded-front configuration. `service` is the template every shard's
 /// private [`MatvecService`] is started from; a file-backed
@@ -52,6 +71,19 @@ pub struct ShardConfig {
     /// Gather-side wait per reply; a shard that misses it fails the
     /// product (and bumps `csrc_shard_deadline_exceeded_total`).
     pub deadline: Duration,
+    /// Consecutive product failures (deadline misses, worker-crash
+    /// replies) that open a shard's circuit breaker. Queue-full
+    /// rejections never count — back-pressure is the system working.
+    pub breaker_threshold: u32,
+    /// How long an open breaker serves degraded before admitting one
+    /// half-open probe product.
+    pub breaker_cooldown: Duration,
+    /// Submit attempts per shard per product while its queue is full
+    /// (the first attempt counts; `1` disables retrying).
+    pub retry_attempts: u32,
+    /// Base of the jittered exponential back-off between those
+    /// attempts (doubled per attempt, capped at 20ms).
+    pub retry_backoff: Duration,
     pub service: ServiceConfig,
 }
 
@@ -61,15 +93,189 @@ impl Default for ShardConfig {
             nshards: 2,
             queue_capacity: 1024,
             deadline: Duration::from_secs(30),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            retry_attempts: 3,
+            retry_backoff: Duration::from_millis(1),
             service: ServiceConfig::default(),
         }
     }
 }
 
+/// Circuit-breaker states, exported so callers can read
+/// [`ShardStats::breaker`]. The numeric value is what the
+/// `csrc_shard_breaker_state` gauge reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: products flow to the shard's service.
+    Closed = 0,
+    /// Tripped: the shard's row block is served by the sequential
+    /// fallback until the cooldown expires.
+    Open = 1,
+    /// Cooldown expired: exactly one probe product is in flight against
+    /// the shard; everyone else still degrades.
+    HalfOpen = 2,
+}
+
+impl BreakerState {
+    /// `to` label of `csrc_shard_breaker_transitions_total`.
+    pub fn label(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// What the breaker decided for one product.
+enum Admission {
+    /// Send the shard's columns to its service; `probe` marks the one
+    /// half-open trial product.
+    Live { probe: bool },
+    /// Serve this shard's row block through the sequential fallback.
+    Degraded,
+}
+
+struct BreakerInner {
+    state: BreakerState,
+    /// Consecutive product failures while closed.
+    failures: u32,
+    /// When the breaker last opened; half-open is admitted once
+    /// `cooldown` has elapsed since then.
+    opened_at: Option<Instant>,
+}
+
+/// Per-shard circuit breaker: closed → (threshold consecutive failures)
+/// → open → (cooldown) → half-open probe → closed on success, re-open
+/// on failure. All transitions are counted and mirrored into a gauge.
+struct Breaker {
+    shard: usize,
+    threshold: u32,
+    cooldown: Duration,
+    inner: Mutex<BreakerInner>,
+    state_gauge: Gauge,
+    obs: Arc<MetricsRegistry>,
+}
+
+impl Breaker {
+    fn new(
+        shard: usize,
+        threshold: u32,
+        cooldown: Duration,
+        obs: &Arc<MetricsRegistry>,
+    ) -> Breaker {
+        let label = shard.to_string();
+        let state_gauge = obs.family_gauge("csrc_shard_breaker_state", &[("shard", &label)]);
+        state_gauge.set(BreakerState::Closed as u8 as f64);
+        Breaker {
+            shard,
+            threshold: threshold.max(1),
+            cooldown,
+            inner: Mutex::new(BreakerInner {
+                state: BreakerState::Closed,
+                failures: 0,
+                opened_at: None,
+            }),
+            state_gauge,
+            obs: obs.clone(),
+        }
+    }
+
+    /// Move to `to`, mirror the gauge, count the transition. Caller
+    /// holds the inner lock (passed as `g`).
+    fn transition(&self, g: &mut BreakerInner, to: BreakerState) {
+        if g.state == to {
+            return;
+        }
+        let _span = obs::phase(Phase::Breaker);
+        g.state = to;
+        self.state_gauge.set(to as u8 as f64);
+        let label = self.shard.to_string();
+        self.obs
+            .family_counter(
+                "csrc_shard_breaker_transitions_total",
+                &[("shard", &label), ("to", to.label())],
+            )
+            .inc();
+    }
+
+    /// Admission decision for one product, advancing open → half-open
+    /// when the cooldown has expired.
+    fn admit(&self) -> Admission {
+        let mut g = lock_unpoisoned(&self.inner);
+        match g.state {
+            BreakerState::Closed => Admission::Live { probe: false },
+            BreakerState::Open => {
+                let cooled = match g.opened_at {
+                    Some(t) => t.elapsed() >= self.cooldown,
+                    None => true,
+                };
+                if cooled {
+                    self.transition(&mut g, BreakerState::HalfOpen);
+                    Admission::Live { probe: true }
+                } else {
+                    Admission::Degraded
+                }
+            }
+            // Someone else's probe is in flight; don't pile on.
+            BreakerState::HalfOpen => Admission::Degraded,
+        }
+    }
+
+    /// The shard answered a whole product: reset the failure streak and
+    /// close a half-open breaker (the probe passed).
+    fn record_success(&self) {
+        let mut g = lock_unpoisoned(&self.inner);
+        g.failures = 0;
+        if g.state != BreakerState::Closed {
+            self.transition(&mut g, BreakerState::Closed);
+            g.opened_at = None;
+        }
+    }
+
+    /// The shard failed a product (deadline miss or worker-crash
+    /// reply): trip at the threshold; a failed probe re-opens with a
+    /// fresh cooldown.
+    fn record_failure(&self) {
+        let mut g = lock_unpoisoned(&self.inner);
+        match g.state {
+            BreakerState::Closed => {
+                g.failures += 1;
+                if g.failures >= self.threshold {
+                    g.opened_at = Some(Instant::now());
+                    self.transition(&mut g, BreakerState::Open);
+                }
+            }
+            BreakerState::HalfOpen => {
+                g.opened_at = Some(Instant::now());
+                self.transition(&mut g, BreakerState::Open);
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// The product carrying this shard's probe aborted before the shard
+    /// could answer (some *other* shard failed first). Return to open
+    /// WITHOUT refreshing `opened_at`: the shard proved nothing either
+    /// way, so the next product may probe again immediately.
+    fn abort_probe(&self) {
+        let mut g = lock_unpoisoned(&self.inner);
+        if g.state == BreakerState::HalfOpen {
+            self.transition(&mut g, BreakerState::Open);
+        }
+    }
+
+    fn state(&self) -> BreakerState {
+        lock_unpoisoned(&self.inner).state
+    }
+}
+
 /// One shard's slice of a registered matrix, kept by the front for
 /// scatter/gather: the owned row slab, the global ids of the ghost
-/// columns, and the rectangular coupling (the shard's service serves
-/// only the square part — the front applies `A_R · halo` itself).
+/// columns, and the rectangular coupling. `rect.square` doubles as the
+/// retained sequential fallback — with the shard's breaker open the
+/// front runs `A_S · x_owned` itself (slower, never wrong).
 struct ShardPart {
     rows: Range<usize>,
     ghosts: Vec<usize>,
@@ -94,7 +300,29 @@ pub struct ShardStats {
     pub rejects: u64,
     /// Gather-side deadline misses charged to this shard.
     pub deadline_exceeded: u64,
+    /// Products whose row block was served by the sequential fallback
+    /// because this shard's breaker was open.
+    pub degraded: u64,
+    /// Current circuit-breaker state.
+    pub breaker: BreakerState,
     pub service: ServiceStats,
+}
+
+/// Front-side product accounting: every product the front was asked
+/// for resolves to completed or rejected — `products == completed +
+/// rejected` once the front is quiesced, so no request is ever lost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrontStats {
+    /// Products submitted to the front (`spmv`/`spmv_multi` calls).
+    pub products: u64,
+    /// Products that returned `Ok` (including degraded ones).
+    pub completed: u64,
+    /// Products that returned an error (typed retryable or fatal).
+    pub rejected: u64,
+    /// Completed products that served ≥1 shard through the fallback.
+    pub degraded: u64,
+    /// Queue-full submit attempts that were retried after back-off.
+    pub retries: u64,
 }
 
 pub struct ShardedMatvecService {
@@ -107,6 +335,16 @@ pub struct ShardedMatvecService {
     requests: Vec<Counter>,
     rejects: Vec<Counter>,
     deadline_exceeded: Vec<Counter>,
+    /// Per-shard `csrc_shard_degraded_products_total`.
+    degraded: Vec<Counter>,
+    breakers: Vec<Breaker>,
+    front_products: Counter,
+    front_completed: Counter,
+    front_rejected: Counter,
+    front_degraded: Counter,
+    front_retries: Counter,
+    /// Jitter source for the retry back-off (seeded: reproducible).
+    rng: Mutex<Rng>,
     /// Total ghost values gathered per single-vector product, summed
     /// over every registered matrix — the halo-volume cost of the
     /// current shard count, scraped by the CI smoke.
@@ -121,6 +359,8 @@ impl ShardedMatvecService {
         let mut requests = Vec::with_capacity(cfg.nshards);
         let mut rejects = Vec::with_capacity(cfg.nshards);
         let mut deadline_exceeded = Vec::with_capacity(cfg.nshards);
+        let mut degraded = Vec::with_capacity(cfg.nshards);
+        let mut breakers = Vec::with_capacity(cfg.nshards);
         for i in 0..cfg.nshards {
             let mut sc = cfg.service.clone();
             if let Some(path) = &mut sc.decision_cache {
@@ -134,10 +374,20 @@ impl ShardedMatvecService {
             let l = i.to_string();
             requests.push(obs_reg.family_counter("csrc_shard_requests_total", &[("shard", &l)]));
             rejects.push(obs_reg.family_counter("csrc_shard_rejects_total", &[("shard", &l)]));
-            deadline_exceeded
-                .push(obs_reg.family_counter("csrc_shard_deadline_exceeded_total", &[("shard", &l)]));
+            deadline_exceeded.push(
+                obs_reg.family_counter("csrc_shard_deadline_exceeded_total", &[("shard", &l)]),
+            );
+            degraded.push(
+                obs_reg.family_counter("csrc_shard_degraded_products_total", &[("shard", &l)]),
+            );
+            breakers.push(Breaker::new(i, cfg.breaker_threshold, cfg.breaker_cooldown, &obs_reg));
         }
         let halo = obs_reg.gauge("csrc_shard_halo_doubles");
+        let front_products = obs_reg.counter("csrc_front_products_total");
+        let front_completed = obs_reg.counter("csrc_front_completed_total");
+        let front_rejected = obs_reg.counter("csrc_front_rejected_total");
+        let front_degraded = obs_reg.counter("csrc_front_degraded_products_total");
+        let front_retries = obs_reg.counter("csrc_front_retries_total");
         ShardedMatvecService {
             cfg,
             services,
@@ -146,6 +396,14 @@ impl ShardedMatvecService {
             requests,
             rejects,
             deadline_exceeded,
+            degraded,
+            breakers,
+            front_products,
+            front_completed,
+            front_rejected,
+            front_degraded,
+            front_retries,
+            rng: Mutex::new(Rng::new(0x5eed_f417)),
             halo,
         }
     }
@@ -170,7 +428,7 @@ impl ShardedMatvecService {
             self.services[rank].register(key, Arc::new(local.square.clone()));
             parts.push(ShardPart { rows: sub.rows, ghosts: sub.ghosts, rect: local });
         }
-        let mut reg = self.registry.lock().unwrap();
+        let mut reg = lock_unpoisoned(&self.registry);
         reg.insert(key.to_string(), Arc::new(ShardedParts { n: global.nrows, parts }));
         let total: usize =
             reg.values().map(|p| p.parts.iter().map(|s| s.ghosts.len()).sum::<usize>()).sum();
@@ -178,49 +436,100 @@ impl ShardedMatvecService {
     }
 
     /// y = A·x through the sharded front.
-    pub fn spmv(&self, key: &str, x: &[f64]) -> Result<Vec<f64>, String> {
+    pub fn spmv(&self, key: &str, x: &[f64]) -> Result<Vec<f64>, ServiceError> {
         self.spmv_multi(key, x, 1)
     }
 
     /// Y = A·X for a row-major n×k panel. Scatter → k column requests
-    /// per shard (each shard's batcher re-coalesces them into a blocked
-    /// product) → coupling sweep on the front thread while the shards
-    /// run → gather with per-shard deadlines.
-    pub fn spmv_multi(&self, key: &str, x: &[f64], k: usize) -> Result<Vec<f64>, String> {
+    /// per live shard (each shard's batcher re-coalesces them into a
+    /// blocked product; open-breaker shards fall back to the sequential
+    /// path) → coupling sweep on the front thread while the shards run
+    /// → gather with per-shard deadlines.
+    pub fn spmv_multi(&self, key: &str, x: &[f64], k: usize) -> Result<Vec<f64>, ServiceError> {
         assert!(k >= 1);
-        let parts = self
-            .registry
-            .lock()
-            .unwrap()
+        self.front_products.inc();
+        match self.spmv_multi_inner(key, x, k) {
+            Ok(y) => {
+                self.front_completed.inc();
+                Ok(y)
+            }
+            Err(e) => {
+                self.front_rejected.inc();
+                Err(e)
+            }
+        }
+    }
+
+    fn spmv_multi_inner(&self, key: &str, x: &[f64], k: usize) -> Result<Vec<f64>, ServiceError> {
+        let parts = lock_unpoisoned(&self.registry)
             .get(key)
             .cloned()
-            .ok_or_else(|| format!("unknown matrix {key:?}"))?;
+            .ok_or_else(|| ServiceError::fatal(format!("unknown matrix {key:?}")))?;
         if x.len() != parts.n * k {
-            return Err(format!(
+            return Err(ServiceError::fatal(format!(
                 "x has length {} but {key:?} is {}x{} with k={k}",
                 x.len(),
                 parts.n,
                 parts.n
-            ));
+            )));
         }
-        // Back-pressure: refuse the whole product before submitting any
-        // column if some shard's queue cannot take k more requests.
-        // `in_flight` over-estimates depth (completed is read first), so
-        // a full queue can only look fuller — rejection is conservative.
-        for (i, svc) in self.services[..parts.parts.len()].iter().enumerate() {
-            if svc.in_flight() + k as u64 > self.cfg.queue_capacity as u64 {
-                self.rejects[i].inc();
-                return Err(format!(
-                    "shard {i} queue full ({} in flight, capacity {})",
-                    svc.in_flight(),
-                    self.cfg.queue_capacity
-                ));
+        let nparts = parts.parts.len();
+        // Breaker admission, before anything is submitted: open-breaker
+        // shards are carved out for the sequential fallback; a cooled
+        // open breaker admits this product as its half-open probe.
+        let mut degraded = vec![false; nparts];
+        let mut probing = vec![false; nparts];
+        for i in 0..nparts {
+            match self.breakers[i].admit() {
+                Admission::Live { probe } => probing[i] = probe,
+                Admission::Degraded => degraded[i] = true,
+            }
+        }
+        // Back-pressure with bounded retry: a live shard whose queue
+        // cannot take k more requests is retried behind a jittered
+        // exponential back-off; if it is still full after
+        // `retry_attempts` the whole product is rejected with a typed,
+        // retryable error before any column is submitted anywhere.
+        // `in_flight` over-estimates depth (completed is read first),
+        // so a full queue can only look fuller — rejection stays
+        // conservative.
+        for i in 0..nparts {
+            if degraded[i] {
+                continue;
+            }
+            let svc = &self.services[i];
+            let mut attempt = 0u32;
+            loop {
+                let injected = faults::fire(InjectionPoint::QueueFull);
+                let depth = svc.in_flight();
+                if !injected && depth + k as u64 <= self.cfg.queue_capacity as u64 {
+                    break;
+                }
+                attempt += 1;
+                if attempt >= self.cfg.retry_attempts.max(1) {
+                    self.rejects[i].inc();
+                    self.count_rejection(i, "queue-full");
+                    self.abort_probes(&mut probing);
+                    return Err(ServiceError::Retryable {
+                        reason: RejectReason::QueueFull {
+                            shard: i,
+                            depth: depth as usize,
+                            capacity: self.cfg.queue_capacity,
+                        },
+                        after: self.retry_delay(attempt),
+                    });
+                }
+                self.front_retries.inc();
+                std::thread::sleep(self.retry_delay(attempt - 1));
             }
         }
         // Scatter: per shard, slice the owned rows out of each panel
         // column and gather the ghost values into a halo panel.
-        let mut pending = Vec::with_capacity(parts.parts.len());
-        let mut halos = Vec::with_capacity(parts.parts.len());
+        // Degraded shards get a halo (the coupling sweep still needs
+        // it) but no submits.
+        let mut pending: Vec<Option<Vec<Receiver<Result<Vec<f64>, ServiceError>>>>> =
+            Vec::with_capacity(nparts);
+        let mut halos = Vec::with_capacity(nparts);
         {
             let _span = obs::phase(Phase::Scatter);
             for (i, part) in parts.parts.iter().enumerate() {
@@ -228,14 +537,18 @@ impl ShardedMatvecService {
                 for (g, &gj) in part.ghosts.iter().enumerate() {
                     halo[g * k..g * k + k].copy_from_slice(&x[gj * k..gj * k + k]);
                 }
+                halos.push(halo);
+                if degraded[i] {
+                    pending.push(None);
+                    continue;
+                }
                 let mut cols = Vec::with_capacity(k);
                 for c in 0..k {
                     let xs: Vec<f64> = part.rows.clone().map(|r| x[r * k + c]).collect();
                     cols.push(self.services[i].submit(key, xs));
                 }
                 self.requests[i].add(k as u64);
-                pending.push(cols);
-                halos.push(halo);
+                pending.push(Some(cols));
             }
         }
         // Coupling sweeps run here, overlapped with the shards' square
@@ -250,31 +563,134 @@ impl ShardedMatvecService {
                 coup
             })
             .collect();
-        // Gather: collect every shard's columns (deadline per reply) and
+        // Gather: collect every live shard's columns (deadline per
+        // reply), run the sequential fallback for degraded shards, and
         // add the coupling contribution back into the global panel.
+        let mut served_degraded = false;
         let mut y = vec![0.0; parts.n * k];
         {
             let _span = obs::phase(Phase::Gather);
             for (i, (part, cols)) in parts.parts.iter().zip(pending).enumerate() {
                 let coup = &coups[i];
+                let Some(cols) = cols else {
+                    // Open breaker: the front computes this row block
+                    // itself on the retained square part — degraded
+                    // (sequential, no batching) but never wrong.
+                    let _deg = obs::phase(Phase::Degraded);
+                    self.degraded[i].inc();
+                    served_degraded = true;
+                    for c in 0..k {
+                        let xs: Vec<f64> = part.rows.clone().map(|r| x[r * k + c]).collect();
+                        let mut yc = vec![0.0; part.rows.len()];
+                        part.rect.square.spmv_into_zeroed(&xs, &mut yc);
+                        for (r, v) in yc.into_iter().enumerate() {
+                            y[(part.rows.start + r) * k + c] = v + coup[r * k + c];
+                        }
+                    }
+                    continue;
+                };
                 for (c, rx) in cols.into_iter().enumerate() {
-                    let yc = match rx.recv_timeout(self.cfg.deadline) {
-                        Ok(reply) => reply?,
-                        Err(_) => {
+                    let blown = faults::fire(InjectionPoint::DeadlineBlow);
+                    let reply = if blown {
+                        Err(())
+                    } else {
+                        rx.recv_timeout(self.cfg.deadline).map_err(|_| ())
+                    };
+                    let yc = match reply {
+                        Ok(Ok(yc)) => yc,
+                        Ok(Err(e)) => {
+                            return Err(self.shard_reply_failed(i, e, &mut probing));
+                        }
+                        Err(()) => {
                             self.deadline_exceeded[i].inc();
-                            return Err(format!(
-                                "shard {i} missed the {:?} deadline",
-                                self.cfg.deadline
-                            ));
+                            self.count_rejection(i, "deadline-exceeded");
+                            probing[i] = false;
+                            self.breakers[i].record_failure();
+                            self.abort_probes(&mut probing);
+                            return Err(ServiceError::Retryable {
+                                reason: RejectReason::DeadlineExceeded {
+                                    shard: i,
+                                    deadline: self.cfg.deadline,
+                                },
+                                after: self.cfg.breaker_cooldown,
+                            });
                         }
                     };
                     for (r, v) in yc.into_iter().enumerate() {
                         y[(part.rows.start + r) * k + c] = v + coup[r * k + c];
                     }
                 }
+                // Every column of this shard answered in time: one
+                // product-level success (closes a half-open probe).
+                probing[i] = false;
+                self.breakers[i].record_success();
             }
         }
+        if served_degraded {
+            self.front_degraded.inc();
+        }
         Ok(y)
+    }
+
+    /// A shard's service replied with an error mid-gather: charge the
+    /// breaker for transient failures, fill in the shard index, release
+    /// any other shard's probe, and hand the typed error up.
+    fn shard_reply_failed(
+        &self,
+        shard: usize,
+        e: ServiceError,
+        probing: &mut [bool],
+    ) -> ServiceError {
+        let out = match e {
+            ServiceError::Retryable { reason, after } => {
+                let reason = match reason {
+                    RejectReason::WorkerCrashed { .. } => {
+                        RejectReason::WorkerCrashed { shard: Some(shard) }
+                    }
+                    other => other,
+                };
+                self.count_rejection(shard, reason.label());
+                probing[shard] = false;
+                self.breakers[shard].record_failure();
+                ServiceError::Retryable { reason, after }
+            }
+            // Caller bugs (unknown key, wrong length) are not shard
+            // health signals: no breaker charge.
+            ServiceError::Fatal(msg) => ServiceError::fatal(format!("shard {shard}: {msg}")),
+        };
+        self.abort_probes(probing);
+        out
+    }
+
+    /// Release every probe this product was carrying (early return: the
+    /// probed shards proved nothing).
+    fn abort_probes(&self, probing: &mut [bool]) {
+        for (i, p) in probing.iter_mut().enumerate() {
+            if *p {
+                self.breakers[i].abort_probe();
+                *p = false;
+            }
+        }
+    }
+
+    /// Jittered exponential back-off for queue-full retries: `base ·
+    /// 2^attempt` capped at [`RETRY_BACKOFF_CAP`], plus up to 50%
+    /// seeded jitter so synchronized callers de-correlate.
+    fn retry_delay(&self, attempt: u32) -> Duration {
+        let base = self.cfg.retry_backoff.max(Duration::from_micros(50));
+        let exp = base.saturating_mul(1u32 << attempt.min(10));
+        let capped = exp.min(RETRY_BACKOFF_CAP);
+        let span = (capped.as_micros() as usize / 2).max(1);
+        let jitter = lock_unpoisoned(&self.rng).below(span) as u64;
+        capped + Duration::from_micros(jitter)
+    }
+
+    /// Bump `csrc_shard_rejections_total{shard,reason}`.
+    fn count_rejection(&self, shard: usize, reason: &str) {
+        let l = shard.to_string();
+        self.obs
+            .family_counter("csrc_shard_rejections_total", &[("shard", &l), ("reason", reason)])
+            .inc();
     }
 
     /// Per-shard stats: front counters + each shard's service snapshot.
@@ -287,9 +703,24 @@ impl ShardedMatvecService {
                 requests: self.requests[i].get(),
                 rejects: self.rejects[i].get(),
                 deadline_exceeded: self.deadline_exceeded[i].get(),
+                degraded: self.degraded[i].get(),
+                breaker: self.breakers[i].state(),
                 service: svc.stats(),
             })
             .collect()
+    }
+
+    /// Front-side product accounting (products/completed/rejected/
+    /// degraded/retries) — the chaos harness asserts
+    /// `products == completed + rejected` so no request is ever lost.
+    pub fn front_stats(&self) -> FrontStats {
+        FrontStats {
+            products: self.front_products.get(),
+            completed: self.front_completed.get(),
+            rejected: self.front_rejected.get(),
+            degraded: self.front_degraded.get(),
+            retries: self.front_retries.get(),
+        }
     }
 
     /// Current halo volume (ghost doubles gathered per single-vector
@@ -337,6 +768,18 @@ impl ShardedMatvecService {
     }
 }
 
+impl Drop for ShardedMatvecService {
+    fn drop(&mut self) {
+        // Each MatvecService joins its entire supervision tree (workers,
+        // retuner, dispatcher, supervisor) in its own Drop, so dropping
+        // the front never detaches a thread. Drain explicitly so the
+        // shards come down in order even if a panic is unwinding.
+        for svc in self.services.drain(..) {
+            drop(svc);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::batcher::BatchPolicy;
@@ -376,6 +819,11 @@ mod tests {
             let stats = svc.stats();
             assert_eq!(stats.len(), nshards);
             assert!(stats.iter().all(|s| s.rejects == 0 && s.deadline_exceeded == 0));
+            assert!(stats.iter().all(|s| s.degraded == 0 && s.breaker == BreakerState::Closed));
+            let f = svc.front_stats();
+            assert_eq!(f.products, 1);
+            assert_eq!(f.completed, 1);
+            assert_eq!(f.rejected, 0);
             svc.shutdown();
         }
     }
@@ -425,19 +873,27 @@ mod tests {
     fn unknown_key_and_wrong_length_fail_cleanly() {
         let svc =
             ShardedMatvecService::start(ShardConfig { nshards: 2, ..ShardConfig::default() });
-        assert!(svc.spmv("nope", &[1.0, 2.0]).is_err());
+        let e = svc.spmv("nope", &[1.0, 2.0]).unwrap_err();
+        assert!(!e.is_retryable(), "unknown key is a caller bug");
         svc.register("a", mat(40, 75));
         let short = vec![0.0; 39];
-        assert!(svc.spmv("a", &short).is_err());
+        let e = svc.spmv("a", &short).unwrap_err();
+        assert!(!e.is_retryable(), "wrong length is a caller bug");
+        // Fatal rejections still balance the front's books.
+        let f = svc.front_stats();
+        assert_eq!(f.products, 2);
+        assert_eq!(f.rejected, 2);
+        assert_eq!(f.completed, 0);
         svc.shutdown();
     }
 
     #[test]
-    fn full_shard_queue_rejects_instead_of_deadlocking() {
-        // One shard whose dispatcher parks partial batches for 200ms: a
+    fn full_shard_queue_rejects_with_a_typed_retryable_error() {
+        // One shard whose dispatcher parks partial batches for 300ms: a
         // submitted product sits in flight for the whole window, so a
         // second product arriving mid-window must bounce off the
-        // capacity-1 queue — rejection, not unbounded growth or a hang.
+        // capacity-1 queue — typed rejection after bounded retries, not
+        // unbounded growth or a hang.
         let cfg = ShardConfig {
             nshards: 1,
             queue_capacity: 1,
@@ -445,7 +901,7 @@ mod tests {
                 workers: 1,
                 batch: BatchPolicy {
                     max_batch: 64,
-                    max_wait: std::time::Duration::from_millis(200),
+                    max_wait: std::time::Duration::from_millis(300),
                 },
                 ..ServiceConfig::default()
             },
@@ -461,15 +917,123 @@ mod tests {
             let x = x.clone();
             std::thread::spawn(move || svc.spmv("a", &x))
         };
-        // Land inside the 200ms batching window with a wide margin.
+        // Land inside the 300ms batching window with a wide margin.
         std::thread::sleep(std::time::Duration::from_millis(50));
         let second = svc.spmv("a", &x);
-        assert!(second.is_err(), "saturated shard must reject");
-        assert!(second.unwrap_err().contains("queue full"));
+        let err = second.expect_err("saturated shard must reject");
+        assert!(err.is_retryable(), "back-pressure must be retryable: {err}");
+        assert!(err.retry_after().is_some());
+        assert_eq!(err.reason().unwrap().label(), "queue-full");
+        assert_eq!(err.reason().unwrap().shard(), Some(0));
+        assert!(err.to_string().contains("queue full"), "{err}");
         assert!(first.join().unwrap().is_ok(), "parked product still completes");
         assert_eq!(svc.stats()[0].rejects, 1);
-        // Capacity frees up once the first product drains.
+        let f = svc.front_stats();
+        assert!(f.retries >= 1, "the front must retry before rejecting");
+        // The labeled rejection family carries the reason.
+        let page = svc.render_prometheus();
+        assert!(
+            page.contains("csrc_shard_rejections_total{reason=\"queue-full\",shard=\"0\"}"),
+            "{page}"
+        );
+        // Capacity frees up once the first product drains; queue-full
+        // rejections must NOT have tripped the breaker.
         assert!(svc.spmv("a", &x).is_ok());
+        assert_eq!(svc.stats()[0].breaker, BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_state_machine_opens_probes_and_recovers() {
+        let obs = Arc::new(MetricsRegistry::new());
+        let b = Breaker::new(0, 2, Duration::from_millis(30), &obs);
+        assert_eq!(b.state(), BreakerState::Closed);
+        // One failure stays closed (threshold 2); success resets the
+        // streak, so two non-consecutive failures don't trip it.
+        b.record_failure();
+        b.record_success();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        // Open degrades until the cooldown expires…
+        assert!(matches!(b.admit(), Admission::Degraded));
+        std::thread::sleep(Duration::from_millis(45));
+        // …then admits exactly one half-open probe; a concurrent
+        // product still degrades.
+        assert!(matches!(b.admit(), Admission::Live { probe: true }));
+        assert!(matches!(b.admit(), Admission::Degraded));
+        // Probe failure re-opens (fresh cooldown).
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(45));
+        assert!(matches!(b.admit(), Admission::Live { probe: true }));
+        // Probe success closes.
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // An abandoned probe (early return elsewhere) restores Open
+        // WITHOUT refreshing the cooldown clock: the very next product
+        // may probe again.
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(45));
+        assert!(matches!(b.admit(), Admission::Live { probe: true }));
+        b.abort_probe();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(matches!(b.admit(), Admission::Live { probe: true }));
+        b.record_success();
+        // Transitions were counted and the gauge mirrors the state.
+        let page = obs.render_prometheus();
+        assert!(page.contains("csrc_shard_breaker_state{shard=\"0\"} 0"), "{page}");
+        assert!(
+            page.contains("csrc_shard_breaker_transitions_total{shard=\"0\",to=\"open\"}"),
+            "{page}"
+        );
+        assert!(
+            page.contains("csrc_shard_breaker_transitions_total{shard=\"0\",to=\"half-open\"}"),
+            "{page}"
+        );
+        assert!(
+            page.contains("csrc_shard_breaker_transitions_total{shard=\"0\",to=\"closed\"}"),
+            "{page}"
+        );
+    }
+
+    #[test]
+    fn open_breaker_serves_the_row_block_degraded_and_correct() {
+        // Force shard 1's breaker open by hand, then serve: the product
+        // must still be exactly right (sequential fallback + coupling)
+        // and the degraded counters must show it.
+        let a = mat(100, 78);
+        let x: Vec<f64> = (0..100).map(|i| (i as f64 * 0.21).sin()).collect();
+        let mut want = vec![0.0; 100];
+        a.apply(&x, &mut want);
+        let svc = ShardedMatvecService::start(ShardConfig {
+            nshards: 2,
+            breaker_threshold: 1,
+            breaker_cooldown: Duration::from_secs(3600), // stays open
+            ..ShardConfig::default()
+        });
+        svc.register("a", a.clone());
+        svc.breakers[1].record_failure();
+        assert_eq!(svc.stats()[1].breaker, BreakerState::Open);
+        for _ in 0..2 {
+            let got = svc.spmv("a", &x).unwrap();
+            assert_close(&got, &want);
+        }
+        let stats = svc.stats();
+        assert_eq!(stats[1].degraded, 2, "both products served shard 1 degraded");
+        assert_eq!(stats[0].degraded, 0);
+        // Shard 1's service saw no requests while degraded.
+        assert_eq!(stats[1].requests, 0);
+        assert_eq!(stats[0].requests, 2);
+        let f = svc.front_stats();
+        assert_eq!(f.completed, 2);
+        assert_eq!(f.degraded, 2);
+        let page = svc.render_prometheus();
+        assert!(page.contains("csrc_shard_degraded_products_total{shard=\"1\"} 2"), "{page}");
+        assert!(page.contains("csrc_shard_breaker_state{shard=\"1\"} 1"), "{page}");
+        svc.shutdown();
     }
 
     #[test]
@@ -486,6 +1050,9 @@ mod tests {
         // Shard service counters carry the injected label.
         assert!(page.contains("csrc_requests_submitted_total{shard=\"0\"}"));
         assert!(page.contains("csrc_requests_submitted_total{shard=\"1\"}"));
+        // Breaker gauges for both shards start closed.
+        assert!(page.contains("csrc_shard_breaker_state{shard=\"0\"} 0"));
+        assert!(page.contains("csrc_shard_breaker_state{shard=\"1\"} 0"));
         svc.shutdown();
     }
 }

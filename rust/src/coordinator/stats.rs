@@ -43,6 +43,8 @@ pub(crate) struct Counters {
     pub(crate) coalesced_products: Counter,
     pub(crate) coalesced_requests: Counter,
     pub(crate) rcm_builds: Counter,
+    pub(crate) panics_caught: Counter,
+    pub(crate) worker_restarts: Counter,
     pub(crate) choices: Mutex<ChoiceLog>,
 }
 
@@ -63,6 +65,8 @@ impl Counters {
             coalesced_products: obs.counter("csrc_coalesced_products_total"),
             coalesced_requests: obs.counter("csrc_coalesced_requests_total"),
             rcm_builds: obs.counter("csrc_rcm_builds_total"),
+            panics_caught: obs.counter("csrc_panics_caught_total"),
+            worker_restarts: obs.counter("csrc_worker_restarts_total"),
             choices: Mutex::new(ChoiceLog::default()),
             obs,
         }
@@ -125,6 +129,13 @@ pub struct ServiceStats {
     /// RCM orderings computed for reordered serving. With N workers all
     /// serving one key through the shared registry this stays 1, not N.
     pub rcm_builds: u64,
+    /// Worker/retuner panics caught by the per-batch `catch_unwind`
+    /// isolation — each one failed over its batch instead of killing the
+    /// thread silently.
+    pub panics_caught: u64,
+    /// Crashed worker/retuner threads the supervisor respawned (capped
+    /// exponential backoff between attempts).
+    pub worker_restarts: u64,
 }
 
 #[cfg(test)]

@@ -8,17 +8,23 @@
 //! spawns its own workers over its own state — nothing in this module
 //! is shared across shards.
 
+use super::error::{RejectReason, ServiceError};
 use super::registration::{DriftState, RcmRegistry, Registry, ResolvedAuto};
 use super::retuner::{RetuneJob, RetunerMsg};
 use super::router::{Backend, RoutePolicy, Router};
+use super::service::RESTART_BACKOFF_BASE;
 use super::stats::Counters;
+use crate::faults::{self, InjectionPoint};
 use crate::metrics;
 use crate::obs::{self, HistogramHandle, Phase};
 use crate::parallel::{build_engine, EngineKind, ParallelSpmv};
 use crate::plan::{PlanBuilder, PlanCache};
 use crate::reorder::{self, ReorderedEngine};
 use crate::tuner;
+use crate::util::lock_unpoisoned;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -31,11 +37,44 @@ pub(crate) const EWMA_ALPHA: f64 = 0.3;
 /// Auto resolution). Matches the top of the tuner's block ladder.
 pub(crate) const DEFAULT_PANEL_WIDTH: usize = 8;
 
+/// Send-once reply handle. A request is normally answered exactly once
+/// by the serving path, but when a worker panics mid-batch the
+/// `catch_unwind` sweep must fail over every request the batch had not
+/// answered yet — and only those. `send` claims the slot atomically and
+/// reports whether *this* call delivered; the winner also owns the
+/// completed/failed accounting, so `completed + failed == submitted`
+/// holds even across crashes.
+#[derive(Clone)]
+pub(crate) struct ReplySlot {
+    tx: Sender<Result<Vec<f64>, ServiceError>>,
+    sent: Arc<AtomicBool>,
+}
+
+impl ReplySlot {
+    pub(crate) fn new(tx: Sender<Result<Vec<f64>, ServiceError>>) -> ReplySlot {
+        ReplySlot { tx, sent: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Mark the slot answered; true if this caller won the claim.
+    fn claim(&self) -> bool {
+        !self.sent.swap(true, Ordering::SeqCst)
+    }
+
+    /// Deliver `r` unless a reply was already sent; true if delivered.
+    pub(crate) fn send(&self, r: Result<Vec<f64>, ServiceError>) -> bool {
+        if !self.claim() {
+            return false;
+        }
+        let _ = self.tx.send(r);
+        true
+    }
+}
+
 pub(crate) struct Request {
     pub(crate) matrix: String,
     pub(crate) x: Vec<f64>,
     pub(crate) enqueued: Instant,
-    pub(crate) reply: Sender<Result<Vec<f64>, String>>,
+    pub(crate) reply: ReplySlot,
 }
 
 pub(crate) struct WorkerBatch {
@@ -43,7 +82,10 @@ pub(crate) struct WorkerBatch {
     pub(crate) requests: Vec<Request>,
 }
 
-/// Everything one worker thread shares with the service.
+/// Everything one worker thread shares with the service. `Clone` so the
+/// supervisor can keep a template per worker slot and hand a fresh copy
+/// to each respawn (every field is a shared handle or a scalar).
+#[derive(Clone)]
 pub(crate) struct WorkerCtx {
     pub(crate) registry: Arc<Mutex<Registry>>,
     pub(crate) plans: Arc<PlanCache>,
@@ -78,25 +120,84 @@ pub(crate) struct WorkerCtx {
 /// may flip the ordering.
 type EngineKey = (String, u64, String, usize, bool);
 
-pub(crate) fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
-    let router = Router::new(ctx.route.clone());
-    // Engine cache per [`EngineKey`] — engines hold execution state
-    // (pool, buffers) and are not Sync, so each worker owns its own; the
-    // *plan* inside every engine comes from the shared service cache.
-    // Structural keys so user keys containing '@' cannot alias
-    // generations. Values carry the last-served batch tick for the LRU
-    // eviction below.
-    let mut engines: HashMap<EngineKey, (Box<dyn ParallelSpmv>, u64)> = HashMap::new();
-    let mut serve_tick: u64 = 0;
-    while let Ok(batch) = rx.recv() {
-        let _serve_span = obs::phase(Phase::Serve);
-        let hit = ctx.registry.lock().unwrap().get(&batch.matrix).cloned();
+/// One worker's batch-queue receiver. Workers of a service each pull
+/// from their own channel, but the receiver sits behind `Arc<Mutex<…>>`
+/// so a respawned worker resumes the *same* queue — batches dispatched
+/// to a worker that later crashed are served by its replacement, never
+/// lost with the dead thread.
+pub(crate) type SharedBatchRx = Arc<Mutex<Receiver<WorkerBatch>>>;
+
+/// Per-thread worker state: the engine cache holds execution state
+/// (pools, buffers — not Sync), so it dies with a crashed thread and
+/// its replacement rebuilds from the shared plan cache.
+struct WorkerState {
+    router: Router,
+    // Engine cache per [`EngineKey`] — structural keys so user keys
+    // containing '@' cannot alias generations. Values carry the
+    // last-served batch tick for LRU eviction.
+    engines: HashMap<EngineKey, (Box<dyn ParallelSpmv>, u64)>,
+    serve_tick: u64,
+}
+
+/// Serve batches until the dispatcher hangs up (returns `false`) or a
+/// batch panics (returns `true` after failing over its unanswered
+/// requests — the supervisor respawns the thread with backoff).
+pub(crate) fn worker_loop(rx: SharedBatchRx, ctx: WorkerCtx) -> bool {
+    let mut state = WorkerState {
+        router: Router::new(ctx.route.clone()),
+        engines: HashMap::new(),
+        serve_tick: 0,
+    };
+    loop {
+        // The queue lock is held only for the recv — no sibling shares
+        // this channel, only this worker's future replacement does.
+        let batch = match lock_unpoisoned(&rx).recv() {
+            Ok(b) => b,
+            Err(_) => return false, // dispatcher gone: clean shutdown
+        };
+        // Snapshot the reply slots, then serve under `catch_unwind`: a
+        // panic mid-batch (chaos injection, a bug in an engine) must
+        // fail over whatever the batch had not answered and hand the
+        // thread back to the supervisor instead of dropping replies.
+        let slots: Vec<ReplySlot> = batch.requests.iter().map(|r| r.reply.clone()).collect();
+        let served = catch_unwind(AssertUnwindSafe(|| serve_batch(&mut state, &ctx, batch)));
+        if served.is_err() {
+            ctx.stats.panics_caught.inc();
+            let crashed = ServiceError::Retryable {
+                reason: RejectReason::WorkerCrashed { shard: None },
+                after: RESTART_BACKOFF_BASE,
+            };
+            for slot in slots {
+                if !slot.claim() {
+                    continue; // answered before the panic
+                }
+                ctx.stats.failed.inc();
+                let _ = slot.tx.send(Err(crashed.clone()));
+            }
+            return true;
+        }
+    }
+}
+
+fn serve_batch(state: &mut WorkerState, ctx: &WorkerCtx, batch: WorkerBatch) {
+    let _serve_span = obs::phase(Phase::Serve);
+    if faults::fire(InjectionPoint::WorkerPanic) {
+        panic!("chaos: injected worker panic");
+    }
+    if faults::fire(InjectionPoint::ShardStall) {
+        std::thread::sleep(faults::stall_duration());
+    }
+    let WorkerState { router, engines, serve_tick } = state;
+    {
+        let hit = lock_unpoisoned(&ctx.registry).get(&batch.matrix).cloned();
         let Some((a, generation)) = hit else {
             for r in batch.requests {
                 ctx.stats.failed.inc();
-                let _ = r.reply.send(Err(format!("unknown matrix {:?}", batch.matrix)));
+                let _ = r
+                    .reply
+                    .send(Err(ServiceError::fatal(format!("unknown matrix {:?}", batch.matrix))));
             }
-            continue;
+            return;
         };
         // Generation-qualified key: caches can never mix state across a
         // register() replacement (the matrix and its engines/plans stay
@@ -107,7 +208,7 @@ pub(crate) fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
         // its plan. (Retired RCM artifacts live in the shared registry
         // and are collected by `register()` on replacement.)
         engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
-        serve_tick += 1;
+        *serve_tick += 1;
         let mut used_key: Option<EngineKey> = None;
         // Resolve Auto once per batch (it is batch-invariant): through
         // the registration-time decision — which carries the swept
@@ -118,7 +219,7 @@ pub(crate) fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
         let mut auto_decision: Option<ResolvedAuto> = None;
         let backend = match router.route(&a) {
             Backend::NativeParallel { kind: EngineKind::Auto, threads, reorder } => {
-                let known = ctx.resolved.lock().unwrap().get(&cache_key).copied();
+                let known = lock_unpoisoned(&ctx.resolved).get(&cache_key).copied();
                 match known {
                     Some(r) => {
                         auto_decision = Some(r);
@@ -171,9 +272,11 @@ pub(crate) fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
         for req in batch.requests {
             if req.x.len() != a.n {
                 ctx.stats.failed.inc();
-                let _ = req
-                    .reply
-                    .send(Err(format!("x length {} != n {}", req.x.len(), a.n)));
+                let _ = req.reply.send(Err(ServiceError::fatal(format!(
+                    "x length {} != n {}",
+                    req.x.len(),
+                    a.n
+                ))));
             } else {
                 valid.push(req);
             }
@@ -212,7 +315,7 @@ pub(crate) fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                         // wrapper permutes x in / un-permutes y out per
                         // product.
                         let (pa, perm) = {
-                            let mut rcm = ctx.rcm.lock().unwrap();
+                            let mut rcm = lock_unpoisoned(&ctx.rcm);
                             rcm.entry(cache_key.clone())
                                 .or_insert_with(|| {
                                     ctx.stats.rcm_builds.inc();
@@ -241,7 +344,7 @@ pub(crate) fn worker_loop(rx: Receiver<WorkerBatch>, ctx: WorkerCtx) {
                     };
                     (engine, 0)
                 });
-                slot.1 = serve_tick;
+                slot.1 = *serve_tick;
                 used_key = Some(ekey);
                 // Coalesce the batch into k-wide panels: the tuned
                 // width for resolved Auto routes (block_k = 1 means the
@@ -379,7 +482,7 @@ fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: 
         return;
     }
     let rate = metrics::mflops(r.work_flops * products, secs);
-    let mut drift = ctx.drift.lock().unwrap();
+    let mut drift = lock_unpoisoned(&ctx.drift);
     let st = drift.entry(job.cache_key.clone()).or_default();
     st.ewma_mflops = if st.batches == 0 {
         rate
@@ -402,7 +505,7 @@ fn maybe_flag_drift(ctx: &WorkerCtx, job: RetuneJob, r: ResolvedAuto, products: 
         st.served_baseline = st.ewma_mflops;
         let ewma = st.ewma_mflops;
         drop(drift);
-        if let Some(e) = ctx.resolved.lock().unwrap().get_mut(&job.cache_key) {
+        if let Some(e) = lock_unpoisoned(&ctx.resolved).get_mut(&job.cache_key) {
             e.served_mflops = ewma;
         }
         let _ = ctx.retune_tx.send(RetunerMsg::RecordServedRate {

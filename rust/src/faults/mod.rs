@@ -1,0 +1,346 @@
+//! Deterministic fault injection ("chaos") for the serving stack.
+//!
+//! Compiled in and gated on one atomic switch, exactly like `obs/`: with
+//! chaos off — the default — every injection site costs a single relaxed
+//! load and no lock is touched. Armed via [`configure`] +
+//! [`set_chaos_enabled`] (surfaced as `csrc serve --chaos <spec>`), each
+//! named [`InjectionPoint`] fires on a **deterministic error-diffusion
+//! schedule** rather than a coin flip: a point with rate `r` keeps an
+//! accumulator, adds `r` per check, and fires whenever it crosses 1
+//! (subtracting 1 again). With the default `seed:0` the accumulator
+//! starts at `1 - r`, so the *first* check of every armed point fires —
+//! CI can assert `panics_caught > 0` without flakiness — and thereafter
+//! every ~`1/r`-th check fires. A nonzero seed rotates each point's
+//! starting phase reproducibly instead.
+//!
+//! Spec grammar — comma-separated `key:value` pairs:
+//!
+//! ```text
+//! worker-panic:0.05,shard-stall:1,stall-ms:80,seed:7
+//! ```
+//!
+//! Point keys (rate in `[0, 1]`): `worker-panic` (batch panics before
+//! serving), `shard-stall` (worker sleeps `stall-ms` before the batch),
+//! `queue-full` (the front treats the shard queue as full),
+//! `deadline-blow` (the front treats the shard reply as past deadline),
+//! `cache-io` (decision-cache reads fail / writes are dropped). Extras:
+//! `stall-ms:<u64>` sleep per `shard-stall` fire (default 100),
+//! `seed:<u64>` accumulator phase (default 0 = fire-first).
+
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Named places in the serving stack where a fault can be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InjectionPoint {
+    /// Worker panics at the top of a batch (exercises catch_unwind +
+    /// supervisor restart).
+    WorkerPanic = 0,
+    /// Worker sleeps [`stall_duration`] before serving a batch
+    /// (exercises deadlines and circuit breakers).
+    ShardStall = 1,
+    /// The sharded front sees the shard queue as full (exercises
+    /// retry-with-backoff and typed rejections).
+    QueueFull = 2,
+    /// The sharded front discards the shard reply as if the deadline
+    /// passed (exercises breakers without waiting out a real stall).
+    DeadlineBlow = 3,
+    /// Decision-cache file reads fail and writes are dropped (exercises
+    /// cache-less degradation).
+    CacheIo = 4,
+}
+
+/// Number of injection points (array sizing).
+pub const NPOINTS: usize = 5;
+
+impl InjectionPoint {
+    /// Every point, in index order.
+    pub const ALL: [InjectionPoint; NPOINTS] = [
+        InjectionPoint::WorkerPanic,
+        InjectionPoint::ShardStall,
+        InjectionPoint::QueueFull,
+        InjectionPoint::DeadlineBlow,
+        InjectionPoint::CacheIo,
+    ];
+
+    /// Spec-grammar key for this point.
+    pub fn label(self) -> &'static str {
+        match self {
+            InjectionPoint::WorkerPanic => "worker-panic",
+            InjectionPoint::ShardStall => "shard-stall",
+            InjectionPoint::QueueFull => "queue-full",
+            InjectionPoint::DeadlineBlow => "deadline-blow",
+            InjectionPoint::CacheIo => "cache-io",
+        }
+    }
+
+    /// Inverse of [`Self::label`].
+    pub fn parse(key: &str) -> Option<InjectionPoint> {
+        InjectionPoint::ALL.iter().copied().find(|p| p.label() == key)
+    }
+}
+
+/// Error-diffusion firing schedule for one point: deterministic, seeded,
+/// and independent of wall clock or thread interleaving at a given
+/// check count.
+#[derive(Clone, Copy, Debug)]
+struct PointState {
+    rate: f64,
+    acc: f64,
+    checks: u64,
+    fired: u64,
+}
+
+impl PointState {
+    const fn idle() -> PointState {
+        PointState { rate: 0.0, acc: 0.0, checks: 0, fired: 0 }
+    }
+
+    fn arm(rate: f64, phase: f64) -> PointState {
+        PointState { rate, acc: phase, checks: 0, fired: 0 }
+    }
+
+    fn check(&mut self) -> bool {
+        self.checks += 1;
+        if self.rate <= 0.0 {
+            return false;
+        }
+        self.acc += self.rate;
+        if self.acc >= 1.0 {
+            self.acc -= 1.0;
+            self.fired += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+struct ChaosState {
+    points: [PointState; NPOINTS],
+    stall: Duration,
+}
+
+impl ChaosState {
+    const fn idle() -> ChaosState {
+        ChaosState { points: [PointState::idle(); NPOINTS], stall: Duration::from_millis(100) }
+    }
+}
+
+static CHAOS_ON: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<ChaosState> = Mutex::new(ChaosState::idle());
+
+fn state() -> MutexGuard<'static, ChaosState> {
+    // Chaos fires across panicking workers; recover rather than poison.
+    STATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Parse `spec` and install it (accumulators reset). Does NOT flip the
+/// enable switch — pair with [`set_chaos_enabled`].
+pub fn configure(spec: &str) -> Result<(), String> {
+    let mut next = ChaosState::idle();
+    let mut rates = [0.0f64; NPOINTS];
+    let mut seed = 0u64;
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let (key, val) = tok
+            .split_once(':')
+            .ok_or_else(|| format!("chaos spec entry {tok:?}: expected key:value"))?;
+        if let Some(p) = InjectionPoint::parse(key) {
+            let rate: f64 = val
+                .parse()
+                .map_err(|_| format!("chaos point {key}: bad rate {val:?}"))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("chaos point {key}: rate {rate} outside [0, 1]"));
+            }
+            rates[p as usize] = rate;
+        } else if key == "stall-ms" {
+            let ms: u64 =
+                val.parse().map_err(|_| format!("chaos stall-ms: bad value {val:?}"))?;
+            next.stall = Duration::from_millis(ms);
+        } else if key == "seed" {
+            seed = val.parse().map_err(|_| format!("chaos seed: bad value {val:?}"))?;
+        } else {
+            return Err(format!(
+                "chaos spec: unknown key {key:?} (points: {}, extras: stall-ms, seed)",
+                InjectionPoint::ALL.map(|p| p.label()).join(", ")
+            ));
+        }
+    }
+    for p in InjectionPoint::ALL {
+        let i = p as usize;
+        if rates[i] <= 0.0 {
+            continue;
+        }
+        let phase = if seed == 0 {
+            // Fire-first: the very first check of an armed point fires.
+            1.0 - rates[i]
+        } else {
+            crate::util::Rng::new(seed.wrapping_add(i as u64 + 1)).f64()
+        };
+        next.points[i] = PointState::arm(rates[i], phase);
+    }
+    *state() = next;
+    Ok(())
+}
+
+/// Flip the global chaos switch. Injection sites are free when off.
+pub fn set_chaos_enabled(on: bool) {
+    CHAOS_ON.store(on, Relaxed);
+}
+
+/// Is the chaos switch on?
+pub fn chaos_enabled() -> bool {
+    CHAOS_ON.load(Relaxed)
+}
+
+/// Disable chaos and clear the installed spec and counters.
+pub fn reset() {
+    CHAOS_ON.store(false, Relaxed);
+    *state() = ChaosState::idle();
+}
+
+/// Should the fault at `p` fire now? One relaxed load when chaos is off;
+/// when armed, advances `p`'s deterministic schedule.
+#[inline]
+pub fn fire(p: InjectionPoint) -> bool {
+    if !CHAOS_ON.load(Relaxed) {
+        return false;
+    }
+    state().points[p as usize].check()
+}
+
+/// How long a fired [`InjectionPoint::ShardStall`] sleeps.
+pub fn stall_duration() -> Duration {
+    state().stall
+}
+
+/// (checks, fires) seen by point `p` since [`configure`]/[`reset`].
+pub fn point_stats(p: InjectionPoint) -> (u64, u64) {
+    let s = state();
+    (s.points[p as usize].checks, s.points[p as usize].fired)
+}
+
+/// Total checks across all points — the ablation uses this to count how
+/// many injection-site gates one product crosses.
+pub fn checks_total() -> u64 {
+    state().points.iter().map(|p| p.checks).sum()
+}
+
+/// Human summary of the armed points, for the serve banner.
+pub fn describe() -> String {
+    let s = state();
+    let mut parts: Vec<String> = InjectionPoint::ALL
+        .iter()
+        .filter(|&&p| s.points[p as usize].rate > 0.0)
+        .map(|&p| format!("{}:{}", p.label(), s.points[p as usize].rate))
+        .collect();
+    if parts.is_empty() {
+        return "no points armed".to_string();
+    }
+    parts.push(format!("stall-ms:{}", s.stall.as_millis()));
+    parts.join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests exercise the pure schedule and the parser only; the
+    // process-global switch stays off so concurrently running service
+    // tests never see injected faults (end-to-end chaos behaviour lives
+    // in the serialized `rust/tests/chaos.rs` binary).
+
+    #[test]
+    fn fire_is_false_and_free_when_disabled() {
+        assert!(!chaos_enabled());
+        for p in InjectionPoint::ALL {
+            assert!(!fire(p));
+        }
+    }
+
+    #[test]
+    fn error_diffusion_fires_first_then_every_nth() {
+        let mut p = PointState::arm(0.25, 1.0 - 0.25);
+        let fires: Vec<bool> = (0..12).map(|_| p.check()).collect();
+        // Fire-first phase, then every 4th check.
+        assert_eq!(
+            fires,
+            [true, false, false, false, true, false, false, false, true, false, false, false]
+        );
+        assert_eq!(p.checks, 12);
+        assert_eq!(p.fired, 3);
+    }
+
+    #[test]
+    fn rate_one_fires_every_check_and_rate_zero_never() {
+        let mut always = PointState::arm(1.0, 0.0);
+        assert!((0..50).all(|_| always.check()));
+        let mut never = PointState::idle();
+        assert!((0..50).all(|_| !never.check()));
+        assert_eq!(never.checks, 50);
+    }
+
+    #[test]
+    fn long_run_frequency_matches_rate() {
+        for rate in [0.05, 0.1, 0.37, 0.5, 0.9] {
+            let mut p = PointState::arm(rate, 1.0 - rate);
+            let n = 10_000;
+            let fired = (0..n).filter(|_| p.check()).count();
+            let want = (rate * n as f64).round() as usize;
+            assert!(
+                fired.abs_diff(want) <= 1,
+                "rate {rate}: fired {fired}, want ~{want}"
+            );
+        }
+    }
+
+    #[test]
+    fn seeded_phase_is_reproducible_and_in_range() {
+        for seed in [1u64, 7, 42, 0xDEADBEEF] {
+            for i in 0..NPOINTS {
+                let a = crate::util::Rng::new(seed.wrapping_add(i as u64 + 1)).f64();
+                let b = crate::util::Rng::new(seed.wrapping_add(i as u64 + 1)).f64();
+                assert_eq!(a, b);
+                assert!((0.0..1.0).contains(&a));
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parser_accepts_the_grammar() {
+        // Parse-only: build the state the way configure() would, without
+        // touching the global registry.
+        assert!(InjectionPoint::parse("worker-panic").is_some());
+        assert!(InjectionPoint::parse("shard-stall").is_some());
+        assert!(InjectionPoint::parse("queue-full").is_some());
+        assert!(InjectionPoint::parse("deadline-blow").is_some());
+        assert!(InjectionPoint::parse("cache-io").is_some());
+        assert!(InjectionPoint::parse("bogus").is_none());
+        for p in InjectionPoint::ALL {
+            assert_eq!(InjectionPoint::parse(p.label()), Some(p));
+        }
+    }
+
+    #[test]
+    fn spec_parser_rejects_bad_entries() {
+        for bad in [
+            "worker-panic",          // no value
+            "worker-panic:1.5",      // rate out of range
+            "worker-panic:-0.1",     // negative
+            "worker-panic:abc",      // not a number
+            "stall-ms:xyz",          // bad extra
+            "seed:-3",               // bad seed
+            "unknown-point:0.5",     // unknown key
+        ] {
+            assert!(configure(bad).is_err(), "accepted {bad:?}");
+        }
+        // configure() on errors must not leave chaos enabled.
+        assert!(!chaos_enabled());
+        reset();
+    }
+}

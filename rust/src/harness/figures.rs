@@ -12,6 +12,7 @@
 
 use super::dataset::DatasetEntry;
 use crate::coordinator::{ShardConfig, ShardedMatvecService};
+use crate::faults;
 use crate::graph::{greedy_coloring, ConflictGraph, Ordering as ColorOrdering};
 use crate::metrics;
 use crate::obs::{self, Phase};
@@ -782,6 +783,83 @@ pub fn shard_headers() -> Vec<String> {
     }
     h.push("correct".into());
     h
+}
+
+// ----------------------------------------------------------- Faults table
+
+/// Default chaos spec for the faults table (`csrc figures faults`):
+/// worker panics, brief shard stalls, and front-side queue-full
+/// injections, on the seeded deterministic schedule.
+pub const FAULTS_SPEC: &str = "worker-panic:0.2,shard-stall:0.3,stall-ms:2,queue-full:0.15,seed:42";
+
+/// Products served per matrix by [`faults_table`].
+pub const FAULTS_PRODUCTS: usize = 30;
+
+/// Beyond the paper: fault-tolerant serving (DESIGN.md §14). Per matrix,
+/// a 2-shard front serves [`FAULTS_PRODUCTS`] products with `spec`'s
+/// faults armed; the row reports the front's accounting (completed /
+/// rejected / degraded), the supervision counters (panics caught, worker
+/// restarts), the lost-request count (must be 0: every product resolves
+/// to completed or a typed rejection), and whether every completed
+/// answer matched the sequential kernel.
+///
+/// Arms and clears the *process-wide* chaos switch — callers that share
+/// the process with concurrent serving (tests) must serialize around it.
+pub fn faults_table(entries: &[DatasetEntry], spec: &str) -> Vec<Vec<String>> {
+    entries
+        .iter()
+        .map(|e| {
+            let m = Arc::new(e.build_csrc());
+            let n = m.n;
+            let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.002).cos()).collect();
+            let mut want = vec![0.0; n];
+            m.spmv_into_zeroed(&x, &mut want);
+            let svc = ShardedMatvecService::start(ShardConfig {
+                nshards: 2,
+                breaker_threshold: 2,
+                breaker_cooldown: std::time::Duration::from_millis(50),
+                deadline: std::time::Duration::from_millis(500),
+                ..ShardConfig::default()
+            });
+            svc.register(e.name, m.clone());
+            faults::configure(spec).expect("faults table spec");
+            faults::set_chaos_enabled(true);
+            let mut ok = true;
+            for _ in 0..FAULTS_PRODUCTS {
+                if let Ok(y) = svc.spmv(e.name, &x) {
+                    ok &= (0..n).all(|i| (y[i] - want[i]).abs() <= 1e-9 * (1.0 + want[i].abs()));
+                }
+            }
+            faults::reset();
+            let f = svc.front_stats();
+            let stats = svc.stats();
+            let panics: u64 = stats.iter().map(|s| s.service.panics_caught).sum();
+            let restarts: u64 = stats.iter().map(|s| s.service.worker_restarts).sum();
+            let degraded: u64 = stats.iter().map(|s| s.degraded).sum();
+            let lost = f.products - (f.completed + f.rejected);
+            let row = vec![
+                e.name.to_string(),
+                f.products.to_string(),
+                f.completed.to_string(),
+                f.rejected.to_string(),
+                degraded.to_string(),
+                panics.to_string(),
+                restarts.to_string(),
+                lost.to_string(),
+                if ok { "yes" } else { "NO" }.into(),
+            ];
+            svc.shutdown();
+            row
+        })
+        .collect()
+}
+
+pub fn faults_headers() -> Vec<String> {
+    let cols = [
+        "matrix", "products", "completed", "rejected", "degraded", "panics", "restarts", "lost",
+        "correct",
+    ];
+    cols.iter().map(|s| s.to_string()).collect()
 }
 
 #[cfg(test)]

@@ -51,6 +51,7 @@
 )]
 
 pub mod coordinator;
+pub mod faults;
 pub mod gen;
 pub mod graph;
 pub mod harness;

@@ -6,7 +6,7 @@
 //! * `gen     --kind poisson3d --nx 40 --out a.mtx`  — generate a matrix
 //! * `spmv    --matrix <..> --engine effective --threads 4 --products 100`
 //! * `solve   --matrix <..> --solver cg|gmres|bicg|block-cg [--rhs K]`
-//! * `serve   --requests 64 [--metrics-addr 127.0.0.1:9464]` — coordinator demo
+//! * `serve   --requests 64 [--metrics-addr 127.0.0.1:9464] [--chaos <spec>]` — coordinator demo
 //! * `trace   --matrix <..> [--rhs K] [--out trace.json]` — traced product
 //! * `xla     --artifacts artifacts`                 — run the AOT path
 //! * `tune train --corpus <dir> --model model.json`  — fit the cost model
@@ -14,6 +14,7 @@
 //!            `[--suite quick|full|smoke] [--out results]`
 
 use csrc_spmv::coordinator::{MatvecService, ServiceConfig, ShardConfig, ShardedMatvecService};
+use csrc_spmv::faults;
 use csrc_spmv::gen;
 use csrc_spmv::harness::{self, figures, Report};
 use csrc_spmv::metrics;
@@ -86,14 +87,22 @@ fn usage_and_exit() -> ! {
                       behind a scatter/gather front with bounded per-shard queues)\n\
                       [--metrics-addr HOST:PORT] (Prometheus text endpoint; port 0 = pick free)\n\
                       [--linger-ms T] (keep serving scrapes T ms after the demo requests)\n\
+                      [--chaos <point:rate,...>] (arm deterministic fault injection — points:\n\
+                      worker-panic, shard-stall, queue-full, deadline-blow, cache-io; options\n\
+                      stall-ms:N, seed:N — see DESIGN.md §14; sharded runs verify every\n\
+                      completed answer against a sequential oracle and balance the books)\n\
+                      [--deadline-ms T] (per-reply gather deadline for the sharded front)\n\
          csrc trace   --matrix <..> [--engine <kind>] [--threads P] [--rhs K] [--out trace.json]\n\
                       [--shards S] (trace one product through the sharded front instead:\n\
                       scatter/gather spans plus per-shard serve spans on distinct tids)\n\
+                      [--chaos <spec>] [--deadline-ms T] (chaos-armed sharded trace: a few\n\
+                      products so breaker/degraded/restart spans land in the dump)\n\
                       (run one traced product; prints the per-phase breakdown and writes a\n\
                       chrome://tracing JSON dump, validated against the event schema)\n\
          csrc xla     [--artifacts artifacts] [--name spmv_n256_w8]\n\
-         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|spmm|model|obs|shard|all>\n\
-                      [--suite smoke|quick|full] [--out results] [--model model.json]"
+         csrc figures <table1|fig4|fig5|fig6|fig7|fig8|fig9|table2|plan|tune|sweep|reorder|spmm|model|obs|shard|faults|all>\n\
+                      [--suite smoke|quick|full] [--out results] [--model model.json]\n\
+                      [--chaos <spec>] (faults table: override the default chaos spec)"
     );
     std::process::exit(2);
 }
@@ -464,8 +473,20 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--chaos <spec>` arms the deterministic fault-injection registry
+/// (grammar in DESIGN.md §14: `point:rate[,...][,stall-ms:N][,seed:N]`).
+/// Returns whether chaos is now on.
+fn arm_chaos(args: &Args) -> Result<bool> {
+    let Some(spec) = args.opt("chaos") else { return Ok(false) };
+    faults::configure(spec).map_err(msg)?;
+    faults::set_chaos_enabled(true);
+    println!("chaos armed: {}", faults::describe());
+    Ok(true)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.usize_or("requests", 64);
+    arm_chaos(args)?;
     let mut cfg = ServiceConfig { workers: args.usize_or("workers", 2), ..Default::default() };
     // `--engine auto` turns on autotuned routing: each registered matrix
     // is trialed once and served by its measured winner.
@@ -543,6 +564,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "coalesced {} requests into {} blocked products; rcm_builds={}",
         s.coalesced_requests, s.coalesced_products, s.rcm_builds
     );
+    if faults::chaos_enabled() {
+        println!(
+            "chaos: {} panics caught, {} worker restarts",
+            s.panics_caught, s.worker_restarts
+        );
+    }
     if !s.auto_choices.is_empty() {
         println!(
             "autotuned {} matrices in {:.1} ms ({} cache hits, {} model hits, \
@@ -574,11 +601,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `csrc serve --shards N`: the same demo through the sharded front —
 /// row-block shards, each with a private service, behind the
 /// scatter/gather router. The metrics endpoint serves one composed page:
-/// front counters (halo gauge, per-shard request/reject/deadline
-/// families) plus every shard's registry labeled `shard="<i>"`.
+/// front counters (halo gauge, per-shard request/reject/deadline/
+/// degraded families, breaker gauges) plus every shard's registry
+/// labeled `shard="<i>"`. With `--chaos` armed, every completed answer
+/// is verified against a retained sequential oracle and the front's
+/// books are balanced at the end — chaos may slow or degrade products,
+/// never corrupt or lose them.
 fn serve_sharded(args: &Args, nshards: usize, service: ServiceConfig) -> Result<()> {
     let requests = args.usize_or("requests", 64);
-    let cfg = ShardConfig { nshards, service, ..ShardConfig::default() };
+    let chaos = faults::chaos_enabled();
+    let mut cfg = ShardConfig { nshards, service, ..ShardConfig::default() };
+    if let Some(ms) = args.opt("deadline-ms") {
+        let ms: u64 = ms.parse().map_err(|_| msg("bad --deadline-ms"))?;
+        cfg.deadline = std::time::Duration::from_millis(ms.max(1));
+    }
     let svc = ShardedMatvecService::start(cfg);
     if let Some(addr) = args.opt("metrics-addr") {
         obs::set_metrics_enabled(true);
@@ -587,21 +623,52 @@ fn serve_sharded(args: &Args, nshards: usize, service: ServiceConfig) -> Result<
     }
     let names = ["thermal", "torsion1", "poisson3Da"];
     let mut sizes = std::collections::HashMap::new();
+    let mut oracle = std::collections::HashMap::new();
     for name in names {
         let e = harness::full_suite().into_iter().find(|e| e.name == name).unwrap();
         let m = Arc::new(e.build_csrc());
         sizes.insert(name, m.n);
-        svc.register(name, m);
+        svc.register(name, m.clone());
+        oracle.insert(name, m);
     }
     let mut rng = Rng::new(11);
     let t = std::time::Instant::now();
-    let mut ok = 0;
+    let (mut ok, mut failed, mut wrong) = (0u64, 0u64, 0u64);
     for i in 0..requests {
         let key = names[i % names.len()];
         let n = sizes[key];
         let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-        if svc.spmv(key, &x).is_ok() {
-            ok += 1;
+        // Retryable rejections (back-pressure, deadline, worker crash)
+        // are retried with the error's suggested back-off: a fault that
+        // fired must not lose the request. Fatal errors never retry.
+        let mut attempts = 0;
+        let got = loop {
+            match svc.spmv(key, &x) {
+                Ok(y) => break Some(y),
+                Err(e) if e.is_retryable() && attempts < 10 => {
+                    attempts += 1;
+                    std::thread::sleep(e.retry_after().unwrap_or_default());
+                }
+                Err(_) => break None,
+            }
+        };
+        match got {
+            Some(y) => {
+                ok += 1;
+                if chaos {
+                    let a = &oracle[key];
+                    let mut want = vec![0.0; n];
+                    a.apply(&x, &mut want);
+                    let bad = y
+                        .iter()
+                        .zip(&want)
+                        .any(|(g, w)| (g - w).abs() > 1e-9 * (1.0 + w.abs()));
+                    if bad {
+                        wrong += 1;
+                    }
+                }
+            }
+            None => failed += 1,
         }
     }
     let dt = t.elapsed().as_secs_f64();
@@ -612,18 +679,40 @@ fn serve_sharded(args: &Args, nshards: usize, service: ServiceConfig) -> Result<
         requests as f64 / dt,
         svc.halo_doubles()
     );
+    if chaos {
+        let f = svc.front_stats();
+        let lost = f.products.saturating_sub(f.completed + f.rejected);
+        println!(
+            "chaos: {wrong} wrong answers, {failed} requests failed after retries, \
+             {lost} lost requests"
+        );
+        println!(
+            "front: {} products = {} completed + {} rejected; {} degraded, {} retries",
+            f.products, f.completed, f.rejected, f.degraded, f.retries
+        );
+        if wrong > 0 || lost > 0 {
+            return Err(msg(format!(
+                "chaos verification failed: {wrong} wrong answers, {lost} lost requests"
+            )));
+        }
+    }
     for s in svc.stats() {
         println!(
-            "  shard {}: {} col-requests, {} rejects, {} deadline misses; \
-             completed={} batches={} plan_builds={} tunes={}",
+            "  shard {}: {} col-requests, {} rejects, {} deadline misses, {} degraded \
+             (breaker {}); completed={} batches={} plan_builds={} tunes={} \
+             panics_caught={} restarts={}",
             s.shard,
             s.requests,
             s.rejects,
             s.deadline_exceeded,
+            s.degraded,
+            s.breaker.label(),
             s.service.completed,
             s.service.batches,
             s.service.plan_builds,
-            s.service.tunes
+            s.service.tunes,
+            s.service.panics_caught,
+            s.service.worker_restarts
         );
     }
     let linger = args.usize_or("linger-ms", 0);
@@ -641,6 +730,7 @@ fn serve_sharded(args: &Args, nshards: usize, service: ServiceConfig) -> Result<
 /// <https://ui.perfetto.dev>), self-validated against the event schema.
 fn cmd_trace(args: &Args) -> Result<()> {
     let (name, m) = load_matrix(args)?;
+    arm_chaos(args)?;
     if let Some(nshards) = args.opt("shards") {
         let nshards: usize = nshards.parse().map_err(|_| msg("bad --shards"))?;
         return trace_sharded(args, &name, m, nshards.max(1));
@@ -702,13 +792,39 @@ fn trace_sharded(args: &Args, name: &str, m: Csrc, nshards: usize) -> Result<()>
     let k = args.usize_or("rhs", 4).max(1);
     let n = m.n;
     let a = Arc::new(m);
+    let chaos = faults::chaos_enabled();
+    let mut cfg = ShardConfig { nshards, ..ShardConfig::default() };
+    if let Some(ms) = args.opt("deadline-ms") {
+        let ms: u64 = ms.parse().map_err(|_| msg("bad --deadline-ms"))?;
+        cfg.deadline = std::time::Duration::from_millis(ms.max(1));
+    }
+    if chaos {
+        // Trip on the first failure so a short traced run shows the
+        // breaker transition and a degraded product in its spans.
+        cfg.breaker_threshold = 1;
+    }
     obs::reset_phases();
     obs::set_metrics_enabled(true);
     obs::start_trace();
-    let svc = ShardedMatvecService::start(ShardConfig { nshards, ..ShardConfig::default() });
+    let svc = ShardedMatvecService::start(cfg);
     svc.register(name, a);
     let x: Vec<f64> = (0..n * k).map(|i| (i as f64 * 0.001).sin()).collect();
-    svc.spmv_multi(name, &x, k).map_err(msg)?;
+    // Under chaos a product may be rejected (that is the point) — run a
+    // few so the dump also carries the breaker/degraded recovery spans.
+    let products = if chaos { 3 } else { 1 };
+    let mut served = 0usize;
+    for _ in 0..products {
+        match svc.spmv_multi(name, &x, k) {
+            Ok(_) => served += 1,
+            Err(e) if chaos && e.is_retryable() => {
+                println!("chaos rejection (expected): {e}");
+            }
+            Err(e) => return Err(msg(e)),
+        }
+    }
+    if chaos {
+        println!("served {served}/{products} products under chaos");
+    }
     // Shut the shards down *before* closing the trace: worker and
     // retuner threads exit, so every span they opened is closed.
     svc.shutdown();
@@ -957,6 +1073,20 @@ fn cmd_figures(args: &Args) -> Result<()> {
             "Sharded serving — end-to-end rate and halo volume vs shard count",
             &h,
             &figures::shard_table(&suite),
+        )?;
+    }
+    if run_all || what == "faults" {
+        // Chaos is process-wide; the figures binary owns the process,
+        // so arming it here races nothing. `--chaos` overrides the
+        // default spec.
+        let spec = args.opt_or("chaos", figures::FAULTS_SPEC);
+        let headers = figures::faults_headers();
+        let h: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report.table(
+            "faults",
+            "Fault tolerance — chaos-armed sharded serving: accounting, supervision, correctness",
+            &h,
+            &figures::faults_table(&suite, spec),
         )?;
     }
     if run_all || what == "obs" {

@@ -63,10 +63,16 @@ pub enum Phase {
     Scatter = 10,
     /// Sharded front: collect per-shard results + coupling back into y.
     Gather = 11,
+    /// Supervisor respawning a crashed worker/retuner thread.
+    Restart = 12,
+    /// A circuit-breaker state transition (open/half-open/closed).
+    Breaker = 13,
+    /// Sequential fallback product for a shard whose breaker is open.
+    Degraded = 14,
 }
 
 /// Number of phases (length of [`Phase::ALL`]).
-pub const NPHASES: usize = 12;
+pub const NPHASES: usize = 15;
 
 impl Phase {
     pub const ALL: [Phase; NPHASES] = [
@@ -82,6 +88,9 @@ impl Phase {
         Phase::Retune,
         Phase::Scatter,
         Phase::Gather,
+        Phase::Restart,
+        Phase::Breaker,
+        Phase::Degraded,
     ];
 
     pub fn label(self) -> &'static str {
@@ -98,6 +107,9 @@ impl Phase {
             Phase::Retune => "retune",
             Phase::Scatter => "scatter",
             Phase::Gather => "gather",
+            Phase::Restart => "restart",
+            Phase::Breaker => "breaker",
+            Phase::Degraded => "degraded",
         }
     }
 
@@ -436,6 +448,7 @@ pub struct MetricsRegistry {
     counters: Mutex<Vec<(String, Arc<AtomicU64>)>>,
     gauges: Mutex<Vec<(String, Arc<AtomicU64>)>>,
     families: Mutex<BTreeMap<String, BTreeMap<String, Arc<AtomicU64>>>>,
+    gauge_families: Mutex<BTreeMap<String, BTreeMap<String, Arc<AtomicU64>>>>,
     histograms: Mutex<Vec<(String, Arc<Mutex<LatencyHistogram>>)>>,
 }
 
@@ -445,6 +458,7 @@ impl MetricsRegistry {
             counters: Mutex::new(Vec::new()),
             gauges: Mutex::new(Vec::new()),
             families: Mutex::new(BTreeMap::new()),
+            gauge_families: Mutex::new(BTreeMap::new()),
             histograms: Mutex::new(Vec::new()),
         }
     }
@@ -475,16 +489,20 @@ impl MetricsRegistry {
     /// `csrc_engine_products_total{matrix=…,engine=…,k=…}`. Labels are
     /// sorted by key so the same set always maps to the same series.
     pub fn family_counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
-        let mut sorted: Vec<(&str, &str)> = labels.to_vec();
-        sorted.sort();
-        let blob = sorted
-            .iter()
-            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
-            .collect::<Vec<_>>()
-            .join(",");
+        let blob = label_blob(labels);
         let mut fam = self.families.lock().unwrap();
         let series = fam.entry(name.to_string()).or_default();
         Counter(series.entry(blob).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone())
+    }
+
+    /// Get or create one series of a labeled **gauge** family, e.g.
+    /// `csrc_shard_breaker_state{shard=…}`. Same label canonicalization
+    /// as [`Self::family_counter`], rendered with `# TYPE … gauge`.
+    pub fn family_gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let blob = label_blob(labels);
+        let mut fam = self.gauge_families.lock().unwrap();
+        let series = fam.entry(name.to_string()).or_default();
+        Gauge(series.entry(blob).or_insert_with(|| Arc::new(AtomicU64::new(0))).clone())
     }
 
     /// Register a **new** histogram under `name`. Several handles may
@@ -546,6 +564,15 @@ impl MetricsRegistry {
             out.push_str(&format!("# TYPE {name} gauge\n"));
             out.push_str(&format!("{name}{bare} {}\n", f64::from_bits(a.load(Relaxed))));
         }
+        for (name, series) in self.gauge_families.lock().unwrap().iter() {
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            for (labels, a) in series {
+                out.push_str(&format!(
+                    "{name}{{{inner}{labels}}} {}\n",
+                    f64::from_bits(a.load(Relaxed))
+                ));
+            }
+        }
         let mut names: Vec<String> = Vec::new();
         for (n, _) in self.histograms.lock().unwrap().iter() {
             if !names.contains(n) {
@@ -589,6 +616,18 @@ impl Default for MetricsRegistry {
 
 fn escape_label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Canonical label blob for family series: sorted by key so the same
+/// label set always maps to the same series.
+fn label_blob(labels: &[(&str, &str)]) -> String {
+    let mut sorted: Vec<(&str, &str)> = labels.to_vec();
+    sorted.sort();
+    sorted
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect::<Vec<_>>()
+        .join(",")
 }
 
 // ---------------------------------------------------------------------

@@ -24,6 +24,7 @@
 //! fatal: one corrupt record must not re-tune the whole fleet.
 
 use super::{Decision, Features, Provenance, SweepPoint, TrialResult};
+use crate::faults::{self, InjectionPoint};
 use crate::parallel::EngineKind;
 use crate::util::json::Json;
 use std::collections::HashMap;
@@ -54,7 +55,14 @@ impl DecisionCache {
     /// degrades to an empty cache with a warning — resolution must
     /// never abort on a damaged performance artifact.
     pub fn open(path: &Path) -> DecisionCache {
-        let map = match std::fs::read_to_string(path) {
+        // Chaos: a cache-io fault at open behaves exactly like an
+        // unreadable file — warn, start empty, keep serving.
+        let read = if faults::fire(InjectionPoint::CacheIo) {
+            Err(std::io::Error::other("injected cache-io fault"))
+        } else {
+            std::fs::read_to_string(path)
+        };
+        let map = match read {
             // Genuinely absent: a fresh cache, nothing to warn about.
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => HashMap::new(),
             // Present but unreadable (permissions, EIO): warn loudly —
@@ -127,6 +135,13 @@ impl DecisionCache {
         let mut map = self.map.lock().unwrap();
         map.insert((d.fingerprint, d.max_threads), d);
         if let Some(path) = &self.path {
+            if faults::fire(InjectionPoint::CacheIo) {
+                eprintln!(
+                    "warning: decision cache {} write skipped (injected cache-io fault)",
+                    path.display()
+                );
+                return;
+            }
             let _ = write_decisions(path, &map);
         }
     }
@@ -139,6 +154,13 @@ impl DecisionCache {
         let Some(d) = map.get_mut(&(fingerprint, max_threads)) else { return };
         d.served_mflops = mflops;
         if let Some(path) = &self.path {
+            if faults::fire(InjectionPoint::CacheIo) {
+                eprintln!(
+                    "warning: decision cache {} write skipped (injected cache-io fault)",
+                    path.display()
+                );
+                return;
+            }
             let _ = write_decisions(path, &map);
         }
     }

@@ -14,6 +14,17 @@ pub mod json;
 pub mod propcheck;
 pub mod stats;
 
+/// Lock a mutex, recovering from poisoning instead of propagating it.
+/// The serving stack isolates worker panics with `catch_unwind`; a
+/// panic while holding a shared lock must not take down every other
+/// thread that touches it later. The guarded data is counters, caches,
+/// and registries that stay internally consistent under panic (their
+/// updates are single statements), so the poison flag carries no
+/// information for us.
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Crash-safe file write shared by the decision cache and the cost-model
 /// files: create the parent directory, write to a pid-suffixed temp file,
 /// then rename into place — a crash mid-write can never leave a truncated

@@ -1,0 +1,303 @@
+//! End-to-end chaos tests: the only place the process-global fault
+//! switch (`csrc_spmv::faults`) is ever armed during `cargo test`.
+//!
+//! Chaos state is process-wide, so every test here serializes on one
+//! mutex and disarms on drop (even when the test body panics) — the
+//! tests in this binary may run on different threads, but never with
+//! chaos armed concurrently. The library's own `faults::tests` exercise
+//! only the pure schedule and parser and never flip the switch.
+
+use csrc_spmv::coordinator::{
+    BreakerState, MatvecService, ServiceConfig, ShardConfig, ShardedMatvecService,
+};
+use csrc_spmv::faults;
+use csrc_spmv::harness::{self, figures};
+use csrc_spmv::parallel::EngineKind;
+use csrc_spmv::sparse::{Coo, Csrc};
+use csrc_spmv::tuner;
+use csrc_spmv::util::Rng;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+/// Serializes the test and guarantees chaos is disarmed before and
+/// after, even if the test body panics.
+struct ChaosGuard {
+    _gate: MutexGuard<'static, ()>,
+}
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        faults::reset();
+    }
+}
+
+fn chaos_guard() -> ChaosGuard {
+    // A previous test failing while holding the gate poisons it; the
+    // protected state (the global chaos registry) is reset below, so
+    // recovering the lock is sound.
+    let gate = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    faults::reset();
+    ChaosGuard { _gate: gate }
+}
+
+fn test_matrix(n: usize, seed: u64) -> Arc<Csrc> {
+    let mut rng = Rng::new(seed);
+    Arc::new(Csrc::from_coo(&Coo::random_structurally_symmetric(n, 3, false, &mut rng)).unwrap())
+}
+
+fn assert_close(got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() <= 1e-9 * (1.0 + w.abs()), "index {i}: got {g}, want {w}");
+    }
+}
+
+#[test]
+fn worker_panic_is_caught_supervised_and_served_after_restart() {
+    let _g = chaos_guard();
+    let svc = MatvecService::start(ServiceConfig { workers: 1, ..ServiceConfig::default() });
+    let a = test_matrix(60, 5);
+    svc.register("a", a);
+    let x = vec![1.0; 60];
+    // Healthy product first: plan built, engine warm.
+    svc.call("a", x.clone()).expect("healthy product");
+    faults::configure("worker-panic:1").unwrap();
+    faults::set_chaos_enabled(true);
+    // The panicked batch fails over as a typed, retryable error — the
+    // request is answered, not lost.
+    let err = svc.call("a", x.clone()).expect_err("panicked batch must fail over");
+    assert!(err.is_retryable(), "{err}");
+    assert_eq!(err.reason().unwrap().label(), "worker-crashed");
+    faults::reset();
+    // The supervisor restarts the (only) worker; the next product is
+    // served by the respawn — this call would hang forever if the
+    // restart never happened.
+    let y = svc.call("a", x).expect("served by the restarted worker");
+    assert_eq!(y.len(), 60);
+    let s = svc.stats();
+    assert!(s.panics_caught >= 1, "panics_caught = {}", s.panics_caught);
+    assert!(s.worker_restarts >= 1, "worker_restarts = {}", s.worker_restarts);
+    // The supervision counters are on the scrape.
+    let page = svc.metrics_registry().render_prometheus();
+    assert!(page.contains("csrc_panics_caught_total"), "{page}");
+    assert!(page.contains("csrc_worker_restarts_total"), "{page}");
+    svc.shutdown();
+}
+
+#[test]
+fn stalled_shard_trips_deadline_opens_breaker_serves_degraded_then_recovers() {
+    let _g = chaos_guard();
+    let svc = ShardedMatvecService::start(ShardConfig {
+        nshards: 1,
+        deadline: Duration::from_millis(40),
+        breaker_threshold: 2,
+        breaker_cooldown: Duration::from_millis(150),
+        service: ServiceConfig { workers: 1, ..ServiceConfig::default() },
+        ..ShardConfig::default()
+    });
+    let a = test_matrix(80, 6);
+    svc.register("a", a.clone());
+    let x: Vec<f64> = (0..80).map(|i| (i as f64 * 0.31).sin()).collect();
+    let mut want = vec![0.0; 80];
+    a.spmv_into_zeroed(&x, &mut want);
+    // Healthy product: plan built, breaker closed.
+    assert_close(&svc.spmv("a", &x).expect("healthy product"), &want);
+    // Every batch now stalls 250ms — far past the 40ms gather deadline.
+    faults::configure("shard-stall:1,stall-ms:250").unwrap();
+    faults::set_chaos_enabled(true);
+    // Two consecutive deadline misses open the breaker.
+    for i in 0..2 {
+        let e = svc.spmv("a", &x).expect_err("stalled shard must miss the deadline");
+        assert_eq!(e.reason().unwrap().label(), "deadline-exceeded", "product {i}: {e}");
+        assert!(e.is_retryable());
+    }
+    assert_eq!(svc.stats()[0].breaker, BreakerState::Open);
+    // While open, the row block is served by the sequential fallback —
+    // degraded, still exactly right, and no shard traffic.
+    let y = svc.spmv("a", &x).expect("degraded product");
+    assert_close(&y, &want);
+    assert_eq!(svc.stats()[0].degraded, 1);
+    // Heal the shard and wait out the cooldown (plus the tail of the
+    // last 250ms stall): the half-open probe passes and the breaker
+    // closes again.
+    faults::reset();
+    std::thread::sleep(Duration::from_millis(500));
+    let y = svc.spmv("a", &x).expect("half-open probe product");
+    assert_close(&y, &want);
+    assert_eq!(svc.stats()[0].breaker, BreakerState::Closed);
+    // Exact metric deltas for the whole scenario: 5 products = 1 healthy
+    // + 2 deadline rejections + 1 degraded + 1 probe.
+    let stats = svc.stats();
+    let s = &stats[0];
+    assert_eq!(s.deadline_exceeded, 2);
+    assert_eq!(s.degraded, 1);
+    assert_eq!(s.rejects, 0, "queue never filled");
+    let f = svc.front_stats();
+    assert_eq!(f.products, 5);
+    assert_eq!(f.completed, 3);
+    assert_eq!(f.rejected, 2);
+    assert_eq!(f.degraded, 1);
+    assert_eq!(f.retries, 0);
+    // Breaker transitions and labeled rejections are on the scrape.
+    let page = svc.render_prometheus();
+    assert!(
+        page.contains("csrc_shard_breaker_transitions_total{shard=\"0\",to=\"open\"} 1"),
+        "{page}"
+    );
+    assert!(
+        page.contains("csrc_shard_breaker_transitions_total{shard=\"0\",to=\"half-open\"} 1"),
+        "{page}"
+    );
+    assert!(
+        page.contains("csrc_shard_breaker_transitions_total{shard=\"0\",to=\"closed\"} 1"),
+        "{page}"
+    );
+    assert!(
+        page.contains("csrc_shard_rejections_total{reason=\"deadline-exceeded\",shard=\"0\"} 2"),
+        "{page}"
+    );
+    assert!(page.contains("csrc_shard_degraded_products_total{shard=\"0\"} 1"), "{page}");
+    assert!(page.contains("csrc_shard_breaker_state{shard=\"0\"} 0"), "{page}");
+    svc.shutdown();
+}
+
+#[test]
+fn chaos_equivalence_every_completed_product_matches_the_oracle() {
+    let _g = chaos_guard();
+    let a = test_matrix(120, 9);
+    let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.17).cos()).collect();
+    let mut want = vec![0.0; 120];
+    a.spmv_into_zeroed(&x, &mut want);
+    for nshards in [1usize, 2, 4] {
+        faults::reset();
+        let svc = ShardedMatvecService::start(ShardConfig {
+            nshards,
+            breaker_cooldown: Duration::from_millis(30),
+            ..ShardConfig::default()
+        });
+        svc.register("a", a.clone());
+        // Warm product before chaos: plans and engines built.
+        assert_close(&svc.spmv("a", &x).expect("warm product"), &want);
+        faults::configure("worker-panic:0.2,shard-stall:0.3,stall-ms:3,queue-full:0.15,seed:42")
+            .unwrap();
+        faults::set_chaos_enabled(true);
+        let (mut completed, mut rejected) = (0u64, 0u64);
+        for i in 0..40 {
+            match svc.spmv("a", &x) {
+                Ok(y) => {
+                    completed += 1;
+                    // Chaos may slow, reject, or degrade a product —
+                    // never corrupt it.
+                    assert_close(&y, &want);
+                }
+                Err(e) => {
+                    rejected += 1;
+                    assert!(e.is_retryable(), "shards={nshards} product {i}: fatal {e}");
+                }
+            }
+        }
+        faults::reset();
+        // Conservation: every submitted product resolved, none lost.
+        let f = svc.front_stats();
+        assert_eq!(f.products, 41, "shards={nshards}");
+        assert_eq!(f.completed + f.rejected, f.products, "shards={nshards}: lost requests");
+        assert_eq!(f.completed, completed + 1, "shards={nshards}");
+        assert_eq!(f.rejected, rejected, "shards={nshards}");
+        assert!(completed > 0, "shards={nshards}: nothing completed under chaos");
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn cache_io_faults_degrade_reads_and_skip_writes_without_clobbering() {
+    let _g = chaos_guard();
+    let dir = std::env::temp_dir().join(format!("csrc_chaos_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("decisions.json");
+    // Healthy: one persisted decision.
+    let cache = tuner::DecisionCache::open(&path);
+    cache.put(fake_decision(7, 2));
+    assert_eq!(tuner::DecisionCache::open(&path).len(), 1);
+    // Armed: the open's read fails (injected) — the cache degrades to
+    // empty instead of erroring, and a put under fault keeps the
+    // in-memory entry but skips the file write, so the healthy file
+    // survives untouched.
+    faults::configure("cache-io:1").unwrap();
+    faults::set_chaos_enabled(true);
+    let faulted = tuner::DecisionCache::open(&path);
+    assert!(faulted.is_empty(), "injected read fault must degrade to empty");
+    faulted.put(fake_decision(8, 2));
+    assert_eq!(faulted.len(), 1, "in-memory cache stays authoritative");
+    faults::reset();
+    let back = tuner::DecisionCache::open(&path);
+    assert_eq!(back.len(), 1, "faulted write must not clobber the file");
+    assert!(back.get(7, 2).is_some(), "original entry survives");
+    assert!(back.get(8, 2).is_none(), "faulted put never reached disk");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dropping_the_sharded_front_joins_every_thread() {
+    let _g = chaos_guard();
+    let svc = ShardedMatvecService::start(ShardConfig { nshards: 2, ..ShardConfig::default() });
+    let a = test_matrix(50, 4);
+    svc.register("a", a);
+    let x = vec![1.0; 50];
+    svc.spmv("a", &x).unwrap();
+    // Drop (not shutdown): the front joins every shard's workers,
+    // re-tuner, dispatcher, and supervisor — a detached thread would
+    // leave this test passing but flaky under races; a join deadlock
+    // would hang it.
+    drop(svc);
+}
+
+#[test]
+fn faults_figure_table_balances_the_books() {
+    let _g = chaos_guard();
+    let suite = harness::smoke_suite();
+    let rows = figures::faults_table(&suite[..1], figures::FAULTS_SPEC);
+    assert_eq!(rows.len(), 1);
+    let headers = figures::faults_headers();
+    assert_eq!(rows[0].len(), headers.len());
+    // Column 7 is "lost": products not accounted as completed+rejected.
+    assert_eq!(rows[0][7], "0", "lost requests: {rows:?}");
+    assert_eq!(rows[0].last().unwrap(), "yes", "wrong answers: {rows:?}");
+    assert!(!faults::chaos_enabled(), "the table must disarm chaos when done");
+}
+
+/// A minimal valid decision for the cache-io test (mirrors the shape the
+/// tuner persists; the values are arbitrary).
+fn fake_decision(fp: u64, nthreads: usize) -> tuner::Decision {
+    tuner::Decision {
+        kind: EngineKind::Sequential,
+        reorder: false,
+        mflops: 100.0,
+        measured: true,
+        provenance: tuner::Provenance::Measured,
+        served_mflops: 0.0,
+        tuned_s: 0.001,
+        fingerprint: fp,
+        nthreads,
+        max_threads: nthreads,
+        features: tuner::Features {
+            n: 100,
+            work_flops: 900,
+            scatter_pairs: 200,
+            scatter_ratio: 0.8,
+            bandwidth: 17,
+            window_rows: 260,
+            window_shrink: 0.65,
+            colors: 5,
+            intervals: 9,
+            balance: 1.06,
+            nthreads,
+        },
+        trials: Vec::new(),
+        sweep: vec![tuner::SweepPoint { nthreads: 1, trials: Vec::new() }],
+        block_k: 1,
+        block_rates: Vec::new(),
+    }
+}

@@ -25,7 +25,10 @@
 //!   `BENCH_shard.json`,
 //! * fault-injection overhead: disarmed chaos gates (one relaxed load
 //!   each) bounded against a served product (DESIGN.md §14) — separate
-//!   `BENCH_faults.json`.
+//!   `BENCH_faults.json`,
+//! * in-place `update_values` vs full re-registration per time step,
+//!   with the raced atomic-vs-colored assembly variants (DESIGN.md §15)
+//!   — separate `BENCH_update.json`.
 //!
 //! Results land on stdout *and* in `results/ablations.json` (the SpMM
 //! and obs ablations write their own `results/BENCH_*.json`).
@@ -694,5 +697,78 @@ fn main() {
         );
         fb.finish_json(std::path::Path::new("results/BENCH_faults.json"))
             .expect("write faults json report");
+    }
+
+    // --- in-place update vs full re-registration (ISSUE 10) ---------------
+    // A time-stepping FEM client re-assembles the same pattern every
+    // step. The in-place leg patches values under the served key —
+    // plan, RCM ordering, and tuned decision all survive, only the
+    // values generation moves. The re-registration leg pays the whole
+    // registration pipeline again per step (invalidation, RCM, lazy
+    // re-tune on the next product). The raced assembly variants are
+    // reported alongside. Own report: results/BENCH_update.json.
+    {
+        use csrc_spmv::coordinator::{MatvecService, RoutePolicy, ServiceConfig};
+        use csrc_spmv::gen::{Assembler, AssemblyKind, Mesh2d};
+        use csrc_spmv::reorder::ReorderPolicy;
+        use csrc_spmv::tuner::TrialBudget;
+        let mut ub = Bench::new("update");
+        let mesh = Mesh2d::quads(48, 48);
+        let mut asm = Assembler::new(mesh, 0.0).expect("structured mesh assembles");
+        let n = asm.matrix().n;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 1e-3).sin()).collect();
+        let race = asm.race(2);
+        ub.record("assemble/atomic-s", race.atomic_s, "s");
+        ub.record("assemble/colored-s", race.colored_s, "s");
+        ub.record("assemble/colors", race.colors as f64, "colors");
+        ub.record(
+            "assemble/chose-colored",
+            matches!(race.chosen, AssemblyKind::Colored) as usize as f64,
+            "bool",
+        );
+        let cfg = ServiceConfig {
+            workers: 1,
+            route: RoutePolicy {
+                parallel_kind: EngineKind::Auto,
+                min_parallel_n: 1,
+                threads: 2,
+                reorder: ReorderPolicy::Always,
+                ..Default::default()
+            },
+            tune_budget: TrialBudget::smoke(),
+            drift_fraction: 0.0,
+            ..Default::default()
+        };
+        let svc = MatvecService::start(cfg);
+        svc.register("step", Arc::new(asm.matrix().clone()));
+        let _ = svc.call("step", x.clone()).expect("warm tune + plan + ordering");
+        let mut t = 0.0;
+        let t_update = ub.run("update/assemble+update+spmv", || {
+            t += 0.1;
+            let next = asm.assemble(t, 2);
+            svc.update_values("step", &next).expect("pattern never changes");
+            std::hint::black_box(svc.call("step", x.clone()).expect("served product"));
+        });
+        let updates_only = svc.stats();
+        let t_rereg = ub.run("update/assemble+reregister+spmv", || {
+            t += 0.1;
+            let next = asm.assemble(t, 2);
+            svc.register("step", Arc::new(next));
+            std::hint::black_box(svc.call("step", x.clone()).expect("served product"));
+        });
+        let s = svc.stats();
+        // The legs must have exercised what they claim: the update leg
+        // never re-tunes, the re-registration leg re-tunes every step.
+        assert_eq!(updates_only.tunes, 1, "in-place updates must not re-tune");
+        assert!(
+            s.tunes > updates_only.tunes,
+            "re-registration must pay the tuner again"
+        );
+        ub.record("update/value-updates", s.value_updates as f64, "updates");
+        ub.record("update/reregister-tunes", (s.tunes - 1) as f64, "tunes");
+        ub.record("update/speedup-over-reregister", t_rereg / t_update, "x");
+        svc.shutdown();
+        ub.finish_json(std::path::Path::new("results/BENCH_update.json"))
+            .expect("write update json report");
     }
 }

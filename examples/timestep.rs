@@ -1,0 +1,113 @@
+//! Time-stepping FEM under serving (ISSUE 10's tentpole workload): one
+//! registration — one tune, one plan, one ordering — then every step
+//! re-assembles the time-dependent coefficients in parallel (atomic
+//! scatter vs. colored batches, raced once like any tuned choice),
+//! patches the served matrix in place with `update_values`, and
+//! re-solves. The tuner never runs again; only the values generation
+//! moves.
+//!
+//! Run: `cargo run --release --example timestep [-- nx [steps [threads]]]`
+
+#![allow(clippy::field_reassign_with_default)]
+
+use csrc_spmv::coordinator::{MatvecService, ServiceConfig};
+use csrc_spmv::gen::{Assembler, Mesh2d};
+use csrc_spmv::parallel::EngineKind;
+use csrc_spmv::reorder::ReorderPolicy;
+use csrc_spmv::tuner::TrialBudget;
+use csrc_spmv::solver::{self, Jacobi};
+use csrc_spmv::sparse::LinOp;
+use csrc_spmv::util::Timer;
+use std::sync::Arc;
+
+/// CG's view of the serving stack: every A·p inside the solve is a
+/// request through the batcher/worker path, so the example stresses
+/// exactly what production traffic would.
+struct Served<'a> {
+    svc: &'a MatvecService,
+    key: &'a str,
+    n: usize,
+}
+
+impl LinOp for Served<'_> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let r = self.svc.call(self.key, x.to_vec()).expect("served product");
+        y.copy_from_slice(&r);
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let nx: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let steps: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let threads: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+
+    // --- assemble once: the pattern (and everything derived from it) ---
+    let t = Timer::start();
+    let mesh = Mesh2d::quads(nx, nx);
+    let mut asm = Assembler::new(mesh, 0.0).expect("structured mesh assembles");
+    let n = asm.matrix().n;
+    println!(
+        "assembled {nx}×{nx} quad mesh -> n={n}, nnz={}, {} element colors, {:.2}s",
+        asm.matrix().nnz(),
+        asm.num_colors(),
+        t.elapsed_s()
+    );
+
+    // --- register once: tune, plan, reorder — never again ---------------
+    let mut cfg = ServiceConfig::default();
+    cfg.route.parallel_kind = EngineKind::Auto;
+    cfg.route.threads = threads;
+    cfg.route.min_parallel_n = 1;
+    cfg.route.reorder = ReorderPolicy::Always;
+    cfg.tune_budget = TrialBudget::smoke();
+    cfg.drift_fraction = 0.0;
+    let svc = MatvecService::start(cfg);
+    svc.register("heat", Arc::new(asm.matrix().clone()));
+    let _ = svc.call("heat", vec![1.0; n]).expect("warm the tune, plan, and ordering");
+    let s0 = svc.stats();
+    assert_eq!(s0.tunes, 1, "registration tunes exactly once");
+
+    // --- time loop: re-assemble, patch in place, re-solve ----------------
+    let b: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.11).sin()).collect();
+    let t = Timer::start();
+    for step in 1..=steps {
+        let time = 0.25 * step as f64;
+        let next = asm.assemble(time, threads);
+        svc.update_values("heat", &next).expect("pattern never changes");
+        svc.record_assembly(matches!(
+            asm.choice(),
+            Some(csrc_spmv::gen::AssemblyKind::Colored)
+        ));
+        let jac = Jacobi::new(&next).expect("CSRC exposes its diagonal");
+        let op = Served { svc: &svc, key: "heat", n };
+        let r = solver::cg(&op, &b, Some(&jac), 1e-9, 2000);
+        assert!(r.converged, "step {step}: CG stalled at {}", r.residual);
+        println!(
+            "step {step:>3}: t={time:.2}, {} CG iterations, residual {:.2e}",
+            r.iterations, r.residual
+        );
+    }
+    let loop_s = t.elapsed_s();
+
+    // --- the contract the whole PR exists for ----------------------------
+    let s = svc.stats();
+    assert_eq!(s.tunes, s0.tunes, "updates must never re-tune");
+    assert_eq!(s.plan_builds, s0.plan_builds, "plans survive value updates");
+    assert_eq!(s.rcm_builds, s0.rcm_builds, "orderings survive value updates");
+    assert_eq!(s.value_updates, steps as u64);
+    let choice = match asm.choice() {
+        Some(k) => k.label(),
+        None => "unraced",
+    };
+    println!(
+        "{steps} steps in {loop_s:.2}s: value_updates={}, tunes={}, \
+         plan_builds={}, rcm_builds={}, assembly={choice}",
+        s.value_updates, s.tunes, s.plan_builds, s.rcm_builds
+    );
+    svc.shutdown();
+    println!("timestep OK");
+}

@@ -18,27 +18,44 @@ impl Default for BatchPolicy {
     }
 }
 
-/// A formed batch: matrix key + indices into the pending queue.
+/// A formed batch: matrix key + the values generation its requests were
+/// stamped with + indices into the pending queue.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Batch {
     pub matrix: String,
+    pub values_generation: u64,
     pub requests: Vec<usize>,
 }
 
 /// Greedy batching preserving arrival order per matrix: walk the queue,
 /// open a batch per matrix, close at `max_batch`. Order across batches
 /// follows first member arrival (FIFO fairness).
-pub fn form_batches(queue: &[String], policy: &BatchPolicy) -> Vec<Batch> {
+///
+/// Each queue entry carries the values generation stamped at submit
+/// time. A request whose generation differs from the open batch's
+/// *closes* that batch and opens a new one: requests that straddle an
+/// `update_values` boundary must never coalesce into one panel — a
+/// mixed-generation panel would serve pre-update submissions and
+/// post-update submissions in a single blocked product, erasing the
+/// ordering the caller observed between its submit and the update.
+pub fn form_batches(queue: &[(String, u64)], policy: &BatchPolicy) -> Vec<Batch> {
     let mut batches: Vec<Batch> = Vec::new();
     // matrix -> index of currently open batch
     let mut open: std::collections::HashMap<&str, usize> = std::collections::HashMap::new();
-    for (idx, m) in queue.iter().enumerate() {
+    for (idx, (m, vgen)) in queue.iter().enumerate() {
         match open.get(m.as_str()) {
-            Some(&b) if batches[b].requests.len() < policy.max_batch => {
+            Some(&b)
+                if batches[b].requests.len() < policy.max_batch
+                    && batches[b].values_generation == *vgen =>
+            {
                 batches[b].requests.push(idx);
             }
             _ => {
-                batches.push(Batch { matrix: m.clone(), requests: vec![idx] });
+                batches.push(Batch {
+                    matrix: m.clone(),
+                    values_generation: *vgen,
+                    requests: vec![idx],
+                });
                 open.insert(m.as_str(), batches.len() - 1);
             }
         }
@@ -73,8 +90,8 @@ pub fn summarize(batches: &[Batch]) -> BatchStats {
 mod tests {
     use super::*;
 
-    fn q(v: &[&str]) -> Vec<String> {
-        v.iter().map(|s| s.to_string()).collect()
+    fn q(v: &[&str]) -> Vec<(String, u64)> {
+        v.iter().map(|s| (s.to_string(), 0)).collect()
     }
 
     #[test]
@@ -102,6 +119,34 @@ mod tests {
     }
 
     #[test]
+    fn values_generation_boundary_splits_batches() {
+        // Satellite (ISSUE 10): requests stamped before and after an
+        // update_values must never share a panel, even for one matrix
+        // well under max_batch — and a boundary *closes* the open batch,
+        // so a later old-generation straggler cannot rejoin it either.
+        let queue: Vec<(String, u64)> = vec![
+            ("a".into(), 0),
+            ("a".into(), 0),
+            ("a".into(), 1),
+            ("a".into(), 0), // straggler stamped pre-update, dispatched late
+            ("a".into(), 1),
+        ];
+        let batches = form_batches(&queue, &BatchPolicy::default());
+        assert_eq!(batches.len(), 3, "{batches:?}");
+        assert_eq!(batches[0].values_generation, 0);
+        assert_eq!(batches[0].requests, vec![0, 1]);
+        assert_eq!(batches[1].values_generation, 1);
+        assert_eq!(batches[1].requests, vec![2]);
+        assert_eq!(batches[2].values_generation, 0);
+        assert_eq!(batches[2].requests, vec![3]);
+        // ...and the final new-generation request opened yet another
+        // batch rather than crossing back over the straggler.
+        assert!(batches.iter().all(|b| {
+            b.requests.iter().all(|&i| queue[i].1 == b.values_generation)
+        }));
+    }
+
+    #[test]
     fn summarize_counts_requests_batches_and_width() {
         let batches = form_batches(&q(&["a", "b", "a", "a", "b"]), &BatchPolicy::default());
         let s = summarize(&batches);
@@ -119,7 +164,7 @@ mod tests {
             for &r in &b.requests {
                 assert!(!seen[r], "request {r} in two batches");
                 seen[r] = true;
-                assert_eq!(queue[r], b.matrix);
+                assert_eq!(queue[r].0, b.matrix);
             }
         }
         assert!(seen.iter().all(|&s| s));
@@ -131,8 +176,9 @@ mod tests {
         // must never starve an early matrix behind a later one.
         crate::util::propcheck::check(20, |rng| {
             let names = ["a", "b", "c", "d", "e"];
-            let queue: Vec<String> =
-                (0..rng.below(60)).map(|_| names[rng.below(5)].to_string()).collect();
+            let queue: Vec<(String, u64)> = (0..rng.below(60))
+                .map(|_| (names[rng.below(5)].to_string(), rng.below(2) as u64))
+                .collect();
             let policy = BatchPolicy { max_batch: 1 + rng.below(5), ..Default::default() };
             let batches = form_batches(&queue, &policy);
             for w in batches.windows(2) {
@@ -151,8 +197,9 @@ mod tests {
     fn property_batching_invariants() {
         crate::util::propcheck::check(20, |rng| {
             let names = ["a", "b", "c", "d"];
-            let queue: Vec<String> =
-                (0..rng.below(40)).map(|_| names[rng.below(4)].to_string()).collect();
+            let queue: Vec<(String, u64)> = (0..rng.below(40))
+                .map(|_| (names[rng.below(4)].to_string(), rng.below(3) as u64))
+                .collect();
             let policy = BatchPolicy { max_batch: 1 + rng.below(6), ..Default::default() };
             let batches = form_batches(&queue, &policy);
             let total: usize = batches.iter().map(|b| b.requests.len()).sum();
@@ -165,6 +212,9 @@ mod tests {
                 }
                 if !b.requests.windows(2).all(|w| w[0] < w[1]) {
                     return Err("batch not in arrival order".into());
+                }
+                if !b.requests.iter().all(|&i| queue[i].1 == b.values_generation) {
+                    return Err("mixed values generations in one batch".into());
                 }
             }
             Ok(())

@@ -17,11 +17,16 @@ use std::sync::Arc;
 
 use super::router::RoutePolicy;
 
-/// Registry value: the matrix plus a per-key generation counter.
-/// Worker-side caches (engines, plans) key on `key@generation`, so a
-/// replaced matrix can never be served by state built for its
-/// predecessor — stale engines become unreachable instead of unsound.
-pub(crate) type Registry = HashMap<String, (Arc<Csrc>, u64)>;
+/// Registry value: the matrix plus a per-key *structural* generation
+/// counter and a *values* generation counter. Worker-side caches
+/// (engines, plans) key on `key@generation`, so a replaced matrix can
+/// never be served by state built for its predecessor — stale engines
+/// become unreachable instead of unsound. The values generation bumps
+/// on [`super::MatvecService::update_values`] (same pattern, new
+/// values): pattern-derived artifacts (plans, coloring, RCM ordering,
+/// tuned decision) survive it, while engines — which bake the values
+/// into their buffers — and batch panels key on it.
+pub(crate) type Registry = HashMap<String, (Arc<Csrc>, u64, u64)>;
 
 /// Shared RCM artifacts for reordered serving, keyed by
 /// `key@generation`: the permutation and the permuted matrix. Shared

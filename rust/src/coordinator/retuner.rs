@@ -91,7 +91,7 @@ fn handle_retuner_msg(ctx: &RetunerCtx, msg: RetunerMsg) {
             }
         };
         let hit = lock_unpoisoned(&ctx.registry).get(&job.matrix).cloned();
-        let Some((a, generation)) = hit else { return };
+        let Some((a, generation, _)) = hit else { return };
         if generation != job.generation {
             return; // replaced since the drift was observed
         }
@@ -138,7 +138,7 @@ fn handle_retuner_msg(ctx: &RetunerCtx, msg: RetunerMsg) {
         {
             let mut resolved = lock_unpoisoned(&ctx.resolved);
             let mut drift = lock_unpoisoned(&ctx.drift);
-            let current = lock_unpoisoned(&ctx.registry).get(&job.matrix).map(|(_, g)| *g)
+            let current = lock_unpoisoned(&ctx.registry).get(&job.matrix).map(|(_, g, _)| *g)
                 == Some(job.generation);
             if !current {
                 return;
@@ -291,6 +291,71 @@ mod tests {
         assert!(d.measured);
         assert!(d.mflops < 1e8, "trial rate was re-measured, got {}", d.mflops);
         assert!(d.served_mflops > 0.0, "calibration must record the served baseline");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replacing_a_matrix_drops_the_stale_served_baseline() {
+        // Satellite (ISSUE 10): a served-rate baseline calibrated
+        // against a key's OLD values must neither trigger nor suppress
+        // a re-tune once the key is re-registered with new values.
+        // Pre-seed a persisted entry whose trial rate is tiny (never
+        // drifts by itself) but whose served baseline is impossibly
+        // high — what a previous serving generation would leave behind
+        // — then replace and serve: without the replace-time clear,
+        // every judged batch flags drift against the dead baseline.
+        let dir =
+            std::env::temp_dir().join(format!("csrc_stale_baseline_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let a = mat(200, 97);
+        let kernel: Arc<dyn SpmvKernel> = a.clone();
+        let fp = tuner::fingerprint(kernel.as_ref());
+        {
+            let cache = DecisionCache::open(&path);
+            cache.put(doctored_decision(fp, 1.0));
+            cache.set_served_rate(fp, 2, 1e9);
+        }
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Auto;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.threads = 2;
+        cfg.route.sweep_threads = true;
+        cfg.tune_budget = TrialBudget::smoke();
+        cfg.decision_cache = Some(path.clone());
+        cfg.drift_fraction = 0.5;
+        cfg.drift_min_batches = 2;
+        let svc = MatvecService::start(cfg);
+        svc.register("m", a.clone());
+        assert_eq!(svc.stats().tunes, 0, "the doctored decision must be a cache hit");
+        // Same pattern, new values: re-registration under an existing
+        // key (the path a caller takes instead of `update_values`).
+        let mut scaled = (*a).clone();
+        for v in scaled.ad.iter_mut().chain(scaled.al.iter_mut()).chain(scaled.au.iter_mut())
+        {
+            *v *= 3.0;
+        }
+        let scaled = Arc::new(scaled);
+        svc.register("m", scaled.clone());
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.01).sin()).collect();
+        let mut want = vec![0.0; 200];
+        scaled.spmv_into_zeroed(&x, &mut want);
+        for _ in 0..30 {
+            let y = svc.call("m", x.clone()).unwrap();
+            crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11).unwrap();
+        }
+        // Give any (wrongly) queued re-tune time to land in the stats.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let s = svc.stats();
+        assert_eq!(s.drift_events, 0, "stale baseline must not judge the new values");
+        assert_eq!(s.retunes, 0, "no spurious re-tune after an in-place replacement");
+        svc.shutdown();
+        // The persisted baseline is gone too: a restarted service
+        // cannot resurrect the dead generation's calibration.
+        let back = DecisionCache::open(&path);
+        let d = back.get(fp, 2).expect("replaced entry survives, decision intact");
+        assert_eq!(d.served_mflops, 0.0, "persisted served baseline must be dropped");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -396,8 +396,8 @@ impl MatvecService {
         // unrelated build.
         let (generation, replaced) = {
             let mut reg = lock_unpoisoned(&self.registry);
-            let generation = reg.get(key).map(|(_, g)| g + 1).unwrap_or(0);
-            let replaced = reg.insert(key.to_string(), (a.clone(), generation)).is_some();
+            let generation = reg.get(key).map(|(_, g, _)| g + 1).unwrap_or(0);
+            let replaced = reg.insert(key.to_string(), (a.clone(), generation, 0)).is_some();
             (generation, replaced)
         };
         if replaced {
@@ -434,7 +434,19 @@ impl MatvecService {
                 decisions: &self.decisions,
                 model: self.model.as_deref(),
             };
-            let (d, hit) = registration::resolve_auto(&ctx, &cache_key, &kernel);
+            let (mut d, hit) = registration::resolve_auto(&ctx, &cache_key, &kernel);
+            if replaced && d.served_mflops > 0.0 {
+                // The cached served-rate baseline was calibrated against
+                // the *replaced* key's serving. Decisions are keyed by
+                // structure, so a same-pattern replacement with new
+                // values would inherit it — and judge the new values
+                // against the old rate, triggering or suppressing a
+                // re-tune for the wrong reason. Drop it here and in the
+                // persisted entry; the next calibration window records a
+                // fresh one.
+                d.served_mflops = 0.0;
+                self.decisions.clear_served_rate(d.fingerprint, d.max_threads);
+            }
             lock_unpoisoned(&self.resolved)
                 .insert(cache_key.clone(), ResolvedAuto::from_decision(&d));
             // Fresh drift baseline for the new decision/generation.
@@ -458,6 +470,79 @@ impl MatvecService {
         }
     }
 
+    /// Swap a registered matrix's *values* in place — same pattern, new
+    /// numbers, the dominant update of FEM time-stepping. Everything
+    /// derived from the pattern survives: the scheduling plan
+    /// (`plan_builds` unchanged), the conflict coloring, the RCM
+    /// ordering (`rcm_builds` unchanged — the cached permuted matrix is
+    /// re-permuted in place), and the tuned decision (`tunes`
+    /// unchanged). What restarts: the key's values generation (workers
+    /// rebuild their engines against the new values from the cached
+    /// plan; panels never mix requests across the boundary), the drift
+    /// EWMA, and the served-rate baseline — all of which were measured
+    /// against the old values.
+    ///
+    /// `values` must carry the registered pattern: a fingerprint or
+    /// shape mismatch is a typed error ([`crate::sparse::CsrcError`]
+    /// stringified into a fatal [`ServiceError`]), never a panic, and
+    /// leaves the registered matrix untouched.
+    pub fn update_values(&self, key: &str, values: &Csrc) -> Result<(), ServiceError> {
+        let _update_span = obs::phase(Phase::Update);
+        let (next, cache_key) = {
+            let mut reg = lock_unpoisoned(&self.registry);
+            let Some((cur, generation, vgen)) = reg.get(key) else {
+                return Err(ServiceError::fatal(format!("unknown matrix {key:?}")));
+            };
+            let (generation, vgen) = (*generation, *vgen + 1);
+            let mut next = (**cur).clone();
+            next.update_values_from(values)
+                .map_err(|e| ServiceError::fatal(format!("update_values({key:?}): {e}")))?;
+            let next = Arc::new(next);
+            reg.insert(key.to_string(), (next.clone(), generation, vgen));
+            (next, format!("{key}@{generation}"))
+        };
+        // The RCM registry holds the *permuted matrix*, whose values
+        // must follow the update: re-permute through the cached
+        // permutation (no new RCM computation — `rcm_builds` stays put).
+        if let Some((pa, perm)) = lock_unpoisoned(&self.rcm).get_mut(&cache_key) {
+            *pa = Arc::new(next.permuted(perm));
+        }
+        // Drift tracking restarts: the EWMA aggregated rates measured
+        // against the old values.
+        lock_unpoisoned(&self.drift).insert(cache_key.clone(), DriftState::default());
+        // So does the served-rate baseline — in the live resolution and
+        // the persisted decision entry — while the decision itself
+        // (engine, threads, block width) is kept: the pattern that
+        // earned it is unchanged.
+        if let Some(r) = lock_unpoisoned(&self.resolved).get_mut(&cache_key) {
+            r.served_mflops = 0.0;
+            self.decisions.clear_served_rate(r.fingerprint, r.max_threads);
+        }
+        self.stats.value_updates.inc();
+        Ok(())
+    }
+
+    /// Drop the served-rate baseline calibrated for `key`'s *current*
+    /// generation — live resolution and persisted decision entry both.
+    /// The sharded front calls this on every shard of an outgoing
+    /// decomposition when a key is replaced: the per-shard decision
+    /// files (`….shard<i>`) are keyed by the shard-local pattern, so a
+    /// baseline measured against a retired partition would otherwise
+    /// survive to mis-calibrate a future registration that happens to
+    /// resolve to the same entry. No-op for unknown keys.
+    pub fn invalidate_served_baseline(&self, key: &str) {
+        let Some(generation) =
+            lock_unpoisoned(&self.registry).get(key).map(|(_, g, _)| *g)
+        else {
+            return;
+        };
+        let cache_key = format!("{key}@{generation}");
+        if let Some(r) = lock_unpoisoned(&self.resolved).get_mut(&cache_key) {
+            r.served_mflops = 0.0;
+            self.decisions.clear_served_rate(r.fingerprint, r.max_threads);
+        }
+    }
+
     /// Submit y = A·x; returns the reply channel. A request resolves to
     /// `Ok(y)`, a typed [`ServiceError`] (retryable worker crash, fatal
     /// caller bug), or a channel disconnect if the service shuts down
@@ -465,8 +550,14 @@ impl MatvecService {
     pub fn submit(&self, key: &str, x: Vec<f64>) -> Receiver<Result<Vec<f64>, ServiceError>> {
         let (tx, rx) = channel();
         self.stats.submitted.inc();
+        // Stamp the key's current values generation: the batcher keys
+        // panels on it, so requests submitted before an `update_values`
+        // never share a blocked product with requests submitted after.
+        let values_generation =
+            lock_unpoisoned(&self.registry).get(key).map(|(_, _, v)| *v).unwrap_or(0);
         let req = Request {
             matrix: key.to_string(),
+            values_generation,
             x,
             enqueued: Instant::now(),
             reply: ReplySlot::new(tx),
@@ -539,6 +630,21 @@ impl MatvecService {
             rcm_builds: c.rcm_builds.get(),
             panics_caught: c.panics_caught.get(),
             worker_restarts: c.worker_restarts.get(),
+            value_updates: c.value_updates.get(),
+            assembly_atomic: c.assembly_atomic.get(),
+            assembly_colored: c.assembly_colored.get(),
+        }
+    }
+
+    /// Record one parallel re-assembly run against this service's
+    /// counters (`csrc_assembly_*_total`) — called by the time-stepping
+    /// path after [`crate::gen::Assembler::assemble`] so the Prometheus
+    /// page shows which variant is producing the served values.
+    pub fn record_assembly(&self, colored: bool) {
+        if colored {
+            self.stats.assembly_colored.inc();
+        } else {
+            self.stats.assembly_atomic.inc();
         }
     }
 
@@ -605,7 +711,8 @@ fn dispatcher_loop(
         }
         // Form per-matrix batches and ship them.
         let coalesce_span = obs::phase(Phase::Coalesce);
-        let keys: Vec<String> = pending.iter().map(|r| r.matrix.clone()).collect();
+        let keys: Vec<(String, u64)> =
+            pending.iter().map(|r| (r.matrix.clone(), r.values_generation)).collect();
         let batches = form_batches(&keys, &policy);
         drop(coalesce_span);
         stats.batches.add(summarize(&batches).batches as u64);

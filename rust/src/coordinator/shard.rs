@@ -420,6 +420,18 @@ impl ShardedMatvecService {
     pub fn register(&self, key: &str, a: Arc<Csrc>) {
         let global = a.to_csr();
         let nsub = self.cfg.nshards.min(global.nrows.max(1));
+        // Replacement: the outgoing decomposition's per-shard decisions
+        // live on in the `….shard<i>` cache files, keyed by each retired
+        // square part's pattern. Their served-rate baselines were
+        // calibrated against the old partition and generation — clear
+        // them now, or a later registration resolving to the same entry
+        // (same shard-local pattern, new values) would judge its serving
+        // against a dead generation's rate.
+        if let Some(old) = lock_unpoisoned(&self.registry).get(key) {
+            for rank in 0..old.parts.len() {
+                self.services[rank].invalidate_served_baseline(key);
+            }
+        }
         let dm = DistributedMatrix::from_global(&global, nsub);
         let mut parts = Vec::with_capacity(nsub);
         for sub in dm.subs {
@@ -433,6 +445,54 @@ impl ShardedMatvecService {
         let total: usize =
             reg.values().map(|p| p.parts.iter().map(|s| s.ghosts.len()).sum::<usize>()).sum();
         self.halo.set(total as f64);
+    }
+
+    /// In-place value update across the shards: re-decompose the new
+    /// values with the SAME slab count (identical pattern ⇒ identical
+    /// row slabs and ghost maps), patch each shard's square part
+    /// through that shard's [`MatvecService::update_values`] (plans,
+    /// colorings, RCM artifacts, and tuned decisions all survive —
+    /// only the per-shard values generation, drift EWMA, and served
+    /// baselines restart), and swap the front's coupling rectangles.
+    ///
+    /// Every shard's fingerprint is checked *before* any shard is
+    /// patched, so a mismatch is a typed fatal error with no partial
+    /// update — the serving state stays the old generation throughout.
+    pub fn update_values(&self, key: &str, values: &Csrc) -> Result<(), ServiceError> {
+        let _update_span = obs::phase(Phase::Update);
+        let old = lock_unpoisoned(&self.registry)
+            .get(key)
+            .cloned()
+            .ok_or_else(|| ServiceError::fatal(format!("unknown matrix {key:?}")))?;
+        if values.n != old.n {
+            return Err(ServiceError::fatal(format!(
+                "update_values({key:?}): got {} rows but {key:?} has {} (re-register instead)",
+                values.n, old.n
+            )));
+        }
+        let dm = DistributedMatrix::from_global(&values.to_csr(), old.parts.len());
+        // Validation pass: the row-block decomposition is deterministic
+        // in (n, nsub), so an unchanged global pattern yields exactly
+        // the registered shard patterns — anything else is a caller
+        // trying to smuggle a re-registration through the update path.
+        for (sub, part) in dm.subs.iter().zip(&old.parts) {
+            if sub.local.square.pattern_fingerprint() != part.rect.square.pattern_fingerprint() {
+                return Err(ServiceError::fatal(format!(
+                    "update_values({key:?}): shard {} pattern changed (re-register instead)",
+                    sub.rank
+                )));
+            }
+        }
+        let mut parts = Vec::with_capacity(dm.subs.len());
+        for sub in dm.subs {
+            let rank = sub.rank;
+            let local = sub.local;
+            self.services[rank].update_values(key, &local.square)?;
+            parts.push(ShardPart { rows: sub.rows, ghosts: sub.ghosts, rect: local });
+        }
+        let mut reg = lock_unpoisoned(&self.registry);
+        reg.insert(key.to_string(), Arc::new(ShardedParts { n: old.n, parts }));
+        Ok(())
     }
 
     /// y = A·x through the sharded front.
@@ -783,9 +843,11 @@ impl Drop for ShardedMatvecService {
 #[cfg(test)]
 mod tests {
     use super::super::batcher::BatchPolicy;
-    use super::super::test_support::mat;
+    use super::super::test_support::{doctored_decision, mat};
     use super::*;
+    use crate::parallel::EngineKind;
     use crate::sparse::LinOp;
+    use crate::tuner::{self, DecisionCache, TrialBudget};
 
     fn assert_close(got: &[f64], want: &[f64]) {
         assert_eq!(got.len(), want.len());
@@ -867,6 +929,103 @@ mod tests {
         b.apply(&x, &mut want);
         assert_close(&svc.spmv("m", &x).unwrap(), &want);
         svc.shutdown();
+    }
+
+    #[test]
+    fn update_values_patches_every_shard_without_retuning() {
+        let a = mat(90, 203);
+        let svc =
+            ShardedMatvecService::start(ShardConfig { nshards: 3, ..ShardConfig::default() });
+        svc.register("a", a.clone());
+        let x: Vec<f64> = (0..90).map(|i| (i as f64 * 0.1).cos()).collect();
+        let mut want = vec![0.0; 90];
+        a.apply(&x, &mut want);
+        assert_close(&svc.spmv("a", &x).unwrap(), &want);
+        let before = svc.stats();
+        // Same pattern, values × 2 — one time step's worth of change.
+        let mut b = (*a).clone();
+        for v in b.ad.iter_mut().chain(b.al.iter_mut()).chain(b.au.iter_mut()) {
+            *v *= 2.0;
+        }
+        svc.update_values("a", &b).unwrap();
+        let mut want2 = vec![0.0; 90];
+        b.apply(&x, &mut want2);
+        assert_close(&svc.spmv("a", &x).unwrap(), &want2);
+        let after = svc.stats();
+        for (b4, af) in before.iter().zip(&after) {
+            assert_eq!(
+                af.service.tunes, b4.service.tunes,
+                "shard {}: an in-place update must not re-tune",
+                af.shard
+            );
+            assert_eq!(
+                af.service.plan_builds, b4.service.plan_builds,
+                "shard {}: plans survive a value update",
+                af.shard
+            );
+            assert_eq!(af.service.value_updates, b4.service.value_updates + 1);
+        }
+        // The update path refuses a changed pattern or an unknown key —
+        // typed fatal errors, and no shard is left half-patched.
+        let c = mat(90, 204);
+        assert!(!svc.update_values("a", &c).unwrap_err().is_retryable());
+        assert_close(&svc.spmv("a", &x).unwrap(), &want2);
+        assert!(!svc.update_values("nope", &b).unwrap_err().is_retryable());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn replacing_a_key_clears_stale_shard_cache_baselines() {
+        // Satellite (ISSUE 10): the per-shard decision caches
+        // (`….shard<i>` files) key entries by the *shard-local*
+        // pattern, so a replaced matrix's old partition lives on in
+        // them, served baselines included. Replacement must clear those
+        // baselines: a later registration resolving to the same shard
+        // pattern would otherwise be calibrated against the serving
+        // rate of a dead partition generation.
+        let dir = std::env::temp_dir().join(format!("csrc_shard_stale_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("decisions.json");
+        let a = mat(80, 201);
+        // The old partition's square-part fingerprints, shard by shard.
+        let dm = DistributedMatrix::from_global(&a.to_csr(), 2);
+        let fps: Vec<u64> =
+            dm.subs.iter().map(|s| tuner::fingerprint(&s.local.square)).collect();
+        for (i, fp) in fps.iter().enumerate() {
+            let cache = DecisionCache::open(&dir.join(format!("decisions.json.shard{i}")));
+            cache.put(doctored_decision(*fp, 1.0));
+            cache.set_served_rate(*fp, 2, 1e9);
+        }
+        let mut service = ServiceConfig::default();
+        service.route.parallel_kind = EngineKind::Auto;
+        service.route.min_parallel_n = 1;
+        service.route.threads = 2;
+        service.route.sweep_threads = true;
+        service.tune_budget = TrialBudget::smoke();
+        service.decision_cache = Some(path);
+        let svc = ShardedMatvecService::start(ShardConfig {
+            nshards: 2,
+            service,
+            ..ShardConfig::default()
+        });
+        svc.register("m", a.clone());
+        assert!(
+            svc.stats().iter().all(|s| s.service.tunes == 0),
+            "both shards' doctored entries must be cache hits"
+        );
+        // Replace the key with a different matrix: the old partition's
+        // entries are orphaned, and their baselines must die with it.
+        svc.register("m", mat(64, 202));
+        svc.shutdown();
+        for (i, fp) in fps.iter().enumerate() {
+            let back = DecisionCache::open(&dir.join(format!("decisions.json.shard{i}")));
+            let d = back.get(*fp, 2).expect("old partition's decision entry survives");
+            assert_eq!(
+                d.served_mflops, 0.0,
+                "shard {i}: replaced partition's served baseline must be cleared"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -45,6 +45,9 @@ pub(crate) struct Counters {
     pub(crate) rcm_builds: Counter,
     pub(crate) panics_caught: Counter,
     pub(crate) worker_restarts: Counter,
+    pub(crate) value_updates: Counter,
+    pub(crate) assembly_atomic: Counter,
+    pub(crate) assembly_colored: Counter,
     pub(crate) choices: Mutex<ChoiceLog>,
 }
 
@@ -67,6 +70,9 @@ impl Counters {
             rcm_builds: obs.counter("csrc_rcm_builds_total"),
             panics_caught: obs.counter("csrc_panics_caught_total"),
             worker_restarts: obs.counter("csrc_worker_restarts_total"),
+            value_updates: obs.counter("csrc_value_updates_total"),
+            assembly_atomic: obs.counter("csrc_assembly_atomic_total"),
+            assembly_colored: obs.counter("csrc_assembly_colored_total"),
             choices: Mutex::new(ChoiceLog::default()),
             obs,
         }
@@ -136,6 +142,13 @@ pub struct ServiceStats {
     /// Crashed worker/retuner threads the supervisor respawned (capped
     /// exponential backoff between attempts).
     pub worker_restarts: u64,
+    /// In-place `update_values` calls applied: same pattern, new values,
+    /// every pattern-derived artifact (plan, RCM, decision) kept.
+    pub value_updates: u64,
+    /// Parallel re-assemblies recorded against this service, by variant
+    /// (atomic scatter vs. colored element batches).
+    pub assembly_atomic: u64,
+    pub assembly_colored: u64,
 }
 
 #[cfg(test)]

@@ -72,6 +72,9 @@ impl ReplySlot {
 
 pub(crate) struct Request {
     pub(crate) matrix: String,
+    /// The key's values generation at submit time — the batcher never
+    /// coalesces requests with different stamps into one panel.
+    pub(crate) values_generation: u64,
     pub(crate) x: Vec<f64>,
     pub(crate) enqueued: Instant,
     pub(crate) reply: ReplySlot,
@@ -114,11 +117,14 @@ pub(crate) struct WorkerCtx {
     pub(crate) drift_min_batches: u64,
 }
 
-/// Worker engine-cache key: (matrix, generation, engine label, threads,
-/// reordered). The thread count is part of the key because a re-tune
-/// may move a key to a different p; the reorder flag because a re-tune
-/// may flip the ordering.
-type EngineKey = (String, u64, String, usize, bool);
+/// Worker engine-cache key: (matrix, generation, values generation,
+/// engine label, threads, reordered). The thread count is part of the
+/// key because a re-tune may move a key to a different p; the reorder
+/// flag because a re-tune may flip the ordering; the values generation
+/// because an engine bakes the matrix values into its buffers — after
+/// `update_values` the engine rebuilds (cheap: the plan, coloring, and
+/// RCM ordering are all cached) against the new values.
+type EngineKey = (String, u64, u64, String, usize, bool);
 
 /// One worker's batch-queue receiver. Workers of a service each pull
 /// from their own channel, but the receiver sits behind `Arc<Mutex<…>>`
@@ -190,7 +196,7 @@ fn serve_batch(state: &mut WorkerState, ctx: &WorkerCtx, batch: WorkerBatch) {
     let WorkerState { router, engines, serve_tick } = state;
     {
         let hit = lock_unpoisoned(&ctx.registry).get(&batch.matrix).cloned();
-        let Some((a, generation)) = hit else {
+        let Some((a, generation, values_generation)) = hit else {
             for r in batch.requests {
                 ctx.stats.failed.inc();
                 let _ = r
@@ -203,11 +209,13 @@ fn serve_batch(state: &mut WorkerState, ctx: &WorkerCtx, batch: WorkerBatch) {
         // register() replacement (the matrix and its engines/plans stay
         // a consistent snapshot even if the registry changes mid-batch).
         let cache_key = format!("{}@{generation}", batch.matrix);
-        // Evict engines built for retired generations of this matrix —
-        // each pins a ThreadPool (live OS threads), the old matrix, and
-        // its plan. (Retired RCM artifacts live in the shared registry
-        // and are collected by `register()` on replacement.)
-        engines.retain(|k, _| k.0 != batch.matrix || k.1 == generation);
+        // Evict engines built for retired generations — structural or
+        // values — of this matrix: each pins a ThreadPool (live OS
+        // threads), the old matrix, and its plan. (Retired RCM artifacts
+        // live in the shared registry and are collected by `register()`
+        // on replacement; `update_values` re-permutes them in place.)
+        engines
+            .retain(|k, _| k.0 != batch.matrix || (k.1 == generation && k.2 == values_generation));
         *serve_tick += 1;
         let mut used_key: Option<EngineKey> = None;
         // Resolve Auto once per batch (it is batch-invariant): through
@@ -303,8 +311,14 @@ fn serve_batch(state: &mut WorkerState, ctx: &WorkerCtx, batch: WorkerBatch) {
                 count_products(&ctx, &batch.matrix, "sequential", 1, valid.len() as u64);
             }
             Backend::NativeParallel { kind, threads, reorder } if !valid.is_empty() => {
-                let ekey =
-                    (batch.matrix.clone(), generation, kind.label(), *threads, *reorder);
+                let ekey = (
+                    batch.matrix.clone(),
+                    generation,
+                    values_generation,
+                    kind.label(),
+                    *threads,
+                    *reorder,
+                );
                 let slot = engines.entry(ekey.clone()).or_insert_with(|| {
                     let engine: Box<dyn ParallelSpmv> = if *reorder {
                         // Serve through the RCM ordering: the permuted

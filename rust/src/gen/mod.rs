@@ -11,10 +11,12 @@
 //!   (square local matrices, the `_n32` entries) and overlapping
 //!   (rectangular n×m locals, the `_o32` entries, §2.1).
 
+pub mod assemble;
 pub mod decomp;
 pub mod fem;
 pub mod mesh;
 
+pub use assemble::{assemble_coo, Assembler, AssemblyKind, AssemblyRace};
 pub use decomp::{nonoverlapping_local, overlapping_local};
 pub use fem::{elasticity_2d, poisson_2d_quad, poisson_2d_tri, poisson_3d_hex};
 pub use mesh::{Mesh, Mesh2d, Mesh3d};

@@ -69,10 +69,14 @@ pub enum Phase {
     Breaker = 13,
     /// Sequential fallback product for a shard whose breaker is open.
     Degraded = 14,
+    /// Parallel FEM re-assembly (element contributions → CSRC values).
+    Assemble = 15,
+    /// In-place value update: registry swap + artifact value patch.
+    Update = 16,
 }
 
 /// Number of phases (length of [`Phase::ALL`]).
-pub const NPHASES: usize = 15;
+pub const NPHASES: usize = 17;
 
 impl Phase {
     pub const ALL: [Phase; NPHASES] = [
@@ -91,6 +95,8 @@ impl Phase {
         Phase::Restart,
         Phase::Breaker,
         Phase::Degraded,
+        Phase::Assemble,
+        Phase::Update,
     ];
 
     pub fn label(self) -> &'static str {
@@ -110,6 +116,8 @@ impl Phase {
             Phase::Restart => "restart",
             Phase::Breaker => "breaker",
             Phase::Degraded => "degraded",
+            Phase::Assemble => "assemble",
+            Phase::Update => "update",
         }
     }
 

@@ -34,6 +34,13 @@ pub enum CsrcError {
     NotSquare { nrows: usize, ncols: usize },
     MissingMirror { i: usize, j: usize },
     MissingDiagonal { i: usize },
+    /// `update_values` was handed value arrays whose lengths do not match
+    /// this matrix's (n, k) shape.
+    ValueLengthMismatch { want_n: usize, want_k: usize, got_ad: usize, got_al: usize, got_au: usize },
+    /// `update_values_from` was handed a matrix with a different index
+    /// structure (pattern fingerprints differ) — an in-place value swap
+    /// would silently mis-assign entries, so it is refused.
+    PatternMismatch { want: u64, got: u64 },
 }
 
 impl std::fmt::Display for CsrcError {
@@ -47,6 +54,20 @@ impl std::fmt::Display for CsrcError {
             }
             CsrcError::MissingDiagonal { i } => {
                 write!(f, "CSRC stores a dense diagonal but a[{i}][{i}] is structurally zero")
+            }
+            CsrcError::ValueLengthMismatch { want_n, want_k, got_ad, got_al, got_au } => {
+                write!(
+                    f,
+                    "value update shape mismatch: matrix wants ad({want_n})/al({want_k})/au({want_k}), \
+                     got ad({got_ad})/al({got_al})/au({got_au})"
+                )
+            }
+            CsrcError::PatternMismatch { want, got } => {
+                write!(
+                    f,
+                    "value update refused: pattern fingerprint {got:#018x} does not match \
+                     this matrix's {want:#018x} (re-register instead)"
+                )
             }
         }
     }
@@ -150,13 +171,80 @@ impl Csrc {
         self.ia[i] as usize..self.ia[i + 1] as usize
     }
 
+    /// FNV-1a over the *index structure only* (n, ia, ja) — values are
+    /// excluded. Two matrices share a pattern fingerprint exactly when an
+    /// in-place value swap between them is well defined: successive FEM
+    /// assemblies on one mesh hash identically, a remeshed matrix does
+    /// not. (Distinct from `tuner::features::fingerprint`, which also
+    /// mixes in per-row work for decision-cache keying; this one is the
+    /// update-path guard.)
+    pub fn pattern_fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+        const FNV_PRIME: u64 = 0x100000001b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+            }
+        };
+        mix(self.n as u64);
+        for &p in &self.ia {
+            mix(p as u64);
+        }
+        for &j in &self.ja {
+            mix(j as u64);
+        }
+        h
+    }
+
+    /// Replace the numeric values in place, keeping the index structure,
+    /// and re-detect numeric symmetry. The in-place path of FEM
+    /// time-stepping: same pattern, new values, so every pattern-derived
+    /// artifact (plan, coloring, RCM ordering, tuned decision) stays
+    /// valid. Never panics on bad input — a shape mismatch is a typed
+    /// error and the matrix is left untouched.
+    pub fn update_values(&mut self, ad: &[f64], al: &[f64], au: &[f64]) -> Result<(), CsrcError> {
+        let k = self.k();
+        if ad.len() != self.n || al.len() != k || au.len() != k {
+            return Err(CsrcError::ValueLengthMismatch {
+                want_n: self.n,
+                want_k: k,
+                got_ad: ad.len(),
+                got_al: al.len(),
+                got_au: au.len(),
+            });
+        }
+        self.ad.copy_from_slice(ad);
+        self.al.copy_from_slice(al);
+        self.au.copy_from_slice(au);
+        self.numeric_symmetric = self
+            .al
+            .iter()
+            .zip(&self.au)
+            .all(|(l, u)| (l - u).abs() <= 1e-14 * l.abs().max(u.abs()));
+        Ok(())
+    }
+
+    /// Pattern-fingerprint-checked value swap from another matrix: the
+    /// form service-level `update_values` uses. Refuses (typed error, no
+    /// panic, `self` untouched) when the index structures differ.
+    pub fn update_values_from(&mut self, other: &Csrc) -> Result<(), CsrcError> {
+        let want = self.pattern_fingerprint();
+        let got = other.pattern_fingerprint();
+        if want != got {
+            return Err(CsrcError::PatternMismatch { want, got });
+        }
+        self.update_values(&other.ad, &other.al, &other.au)
+    }
+
     /// Sequential SpMV, Fig. 2(a) of the paper: one sweep updates y_i with
     /// the lower entries *and* scatters the mirrored upper contributions.
     ///
     /// Hot path: unchecked indexing inside the k-loop (EXPERIMENTS.md
     /// §Perf). Safety: `ia`/`ja` are construction-validated (every ja[k]
-    /// < i < n, ia ascending, ia[n] == k-arrays' length) and the arrays
-    /// are never mutated after construction.
+    /// < i < n, ia ascending, ia[n] == k-arrays' length) and the index
+    /// arrays are never mutated after construction (`update_values`
+    /// replaces values only, keeping their lengths).
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
@@ -831,5 +919,52 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn pattern_fingerprint_ignores_values() {
+        let mut rng = Rng::new(77);
+        let a = Csrc::from_coo(&Coo::banded(60, 2, false, &mut rng)).unwrap();
+        let b = Csrc::from_coo(&Coo::banded(60, 2, false, &mut rng)).unwrap();
+        assert_ne!(a.al, b.al, "seeds must differ in values");
+        assert_eq!(a.pattern_fingerprint(), b.pattern_fingerprint());
+        let c = Csrc::from_coo(&Coo::banded(60, 3, false, &mut rng)).unwrap();
+        assert_ne!(a.pattern_fingerprint(), c.pattern_fingerprint());
+    }
+
+    #[test]
+    fn update_values_swaps_values_and_resymmetrizes() {
+        let mut rng = Rng::new(78);
+        let mut a = Csrc::from_coo(&Coo::banded(50, 2, false, &mut rng)).unwrap();
+        assert!(!a.numeric_symmetric);
+        let b = Csrc::from_coo(&Coo::banded(50, 2, true, &mut rng)).unwrap();
+        a.update_values_from(&b).unwrap();
+        assert_eq!(a.ad, b.ad);
+        assert_eq!(a.al, b.al);
+        assert_eq!(a.au, b.au);
+        assert!(a.numeric_symmetric, "symmetric values must re-arm the §2.2 path");
+        // Products now match the donor matrix exactly.
+        let x: Vec<f64> = (0..50).map(|i| (i as f64).cos()).collect();
+        let (mut ya, mut yb) = (vec![0.0; 50], vec![0.0; 50]);
+        a.spmv_into_zeroed(&x, &mut ya);
+        b.spmv_into_zeroed(&x, &mut yb);
+        assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn update_values_rejects_bad_shapes_without_panicking() {
+        let mut rng = Rng::new(79);
+        let mut a = Csrc::from_coo(&Coo::banded(30, 2, false, &mut rng)).unwrap();
+        let before = a.al.clone();
+        let err = a.update_values(&vec![0.0; 29], &vec![0.0; a.k()], &vec![0.0; a.k()]);
+        assert!(matches!(err, Err(CsrcError::ValueLengthMismatch { want_n: 30, .. })));
+        let err = a.update_values(&vec![0.0; 30], &vec![0.0; a.k() + 1], &vec![0.0; a.k()]);
+        assert!(matches!(err, Err(CsrcError::ValueLengthMismatch { .. })));
+        assert_eq!(a.al, before, "failed update must leave the matrix untouched");
+
+        let other = Csrc::from_coo(&Coo::banded(30, 3, false, &mut rng)).unwrap();
+        let err = a.update_values_from(&other);
+        assert!(matches!(err, Err(CsrcError::PatternMismatch { .. })));
+        assert_eq!(a.al, before);
     }
 }

@@ -165,6 +165,33 @@ impl DecisionCache {
         }
     }
 
+    /// Drop an entry's served-rate baseline (reset to 0) and write the
+    /// file through. Called when a matrix's *values* change under a kept
+    /// decision — replacement under an existing key, or an in-place
+    /// `update_values` — because the baseline was measured against the
+    /// old values: judging the new values against it could trigger or
+    /// suppress a re-tune for the wrong reason. The next calibration
+    /// window records a fresh baseline. A no-op when the entry is absent
+    /// or has no baseline.
+    pub fn clear_served_rate(&self, fingerprint: u64, max_threads: usize) {
+        let mut map = self.map.lock().unwrap();
+        let Some(d) = map.get_mut(&(fingerprint, max_threads)) else { return };
+        if d.served_mflops == 0.0 {
+            return;
+        }
+        d.served_mflops = 0.0;
+        if let Some(path) = &self.path {
+            if faults::fire(InjectionPoint::CacheIo) {
+                eprintln!(
+                    "warning: decision cache {} write skipped (injected cache-io fault)",
+                    path.display()
+                );
+                return;
+            }
+            let _ = write_decisions(path, &map);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
@@ -648,6 +675,13 @@ mod tests {
         let d = back.get(31, 2).unwrap();
         assert!((d.served_mflops - 77.5).abs() < 1e-12);
         assert_eq!(d.provenance, Provenance::Measured);
+        // Clearing persists too (a value swap invalidates the baseline),
+        // and an unknown key stays a no-op.
+        back.clear_served_rate(31, 2);
+        back.clear_served_rate(999, 2);
+        let back2 = DecisionCache::open(&path);
+        assert_eq!(back2.get(31, 2).unwrap().served_mflops, 0.0);
+        back2.set_served_rate(31, 2, 77.5);
         // Pre-provenance files infer it from `measured`.
         let text = std::fs::read_to_string(&path).unwrap();
         let stripped = text

@@ -1,0 +1,224 @@
+//! In-place value updates, end to end (ISSUE 10): the update path must
+//! be numerically indistinguishable from rebuilding and re-registering
+//! from scratch — across every engine, reorder policy, and shard count
+//! — while keeping every pattern-derived artifact (tuned decision,
+//! plan, RCM ordering) and never mixing values generations in a panel.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use csrc_spmv::coordinator::{
+    BatchPolicy, MatvecService, ServiceConfig, ShardConfig, ShardedMatvecService,
+};
+use csrc_spmv::gen::{assemble_coo, Assembler, Mesh2d};
+use csrc_spmv::parallel::{AccumMethod, EngineKind};
+use csrc_spmv::reorder::ReorderPolicy;
+use csrc_spmv::sparse::{Csrc, LinOp};
+use csrc_spmv::tuner::TrialBudget;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn close(got: &[f64], want: &[f64]) -> bool {
+    got.len() == want.len()
+        && got.iter().zip(want).all(|(g, w)| (g - w).abs() <= 1e-10 * (1.0 + w.abs()))
+}
+
+/// Rebuild-from-scratch reference: sequential Coo assembly at time `t`,
+/// compacted and converted fresh — the path `update_values` replaces.
+fn rebuilt(mesh: &csrc_spmv::gen::Mesh, convection: f64, t: f64) -> Csrc {
+    Csrc::from_coo(&assemble_coo(mesh, convection, t)).unwrap()
+}
+
+#[test]
+fn update_equals_rebuild_across_engines_reorder_and_shards() {
+    let mesh = Mesh2d::quads(12, 12);
+    let convection = 0.25;
+    let asm = Assembler::new(mesh.clone(), convection).unwrap();
+    let n = asm.matrix().n;
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).sin()).collect();
+    let t = 1.3;
+    let reference = rebuilt(&mesh, convection, t);
+    let mut want = vec![0.0; n];
+    reference.apply(&x, &mut want);
+    // The in-place step the services will apply instead.
+    let step = asm.assemble_sequential(t);
+    assert_eq!(step.pattern_fingerprint(), reference.pattern_fingerprint());
+    let engines = [
+        EngineKind::Sequential,
+        EngineKind::LocalBuffers(AccumMethod::Effective),
+        EngineKind::Colorful,
+        EngineKind::Atomic,
+    ];
+    for kind in engines {
+        for reorder in [ReorderPolicy::Never, ReorderPolicy::Always] {
+            for nshards in [1usize, 2, 4] {
+                let mut service = ServiceConfig::default();
+                service.workers = 1;
+                service.route.parallel_kind = kind;
+                service.route.threads = 2;
+                service.route.min_parallel_n = 1;
+                service.route.reorder = reorder;
+                let svc = ShardedMatvecService::start(ShardConfig {
+                    nshards,
+                    service,
+                    ..ShardConfig::default()
+                });
+                svc.register("m", Arc::new(asm.matrix().clone()));
+                // Serve the t = 0 values first so plans, orderings and
+                // engines all exist before the update hits them.
+                let y0 = svc.spmv("m", &x).unwrap();
+                assert_eq!(y0.len(), n);
+                svc.update_values("m", &step).unwrap();
+                let got = svc.spmv("m", &x).unwrap();
+                assert!(
+                    close(&got, &want),
+                    "update != rebuild for kind={kind:?} reorder={reorder:?} \
+                     nshards={nshards}"
+                );
+                svc.shutdown();
+            }
+        }
+    }
+}
+
+#[test]
+fn updates_keep_tuned_artifacts_across_many_steps() {
+    // Auto-tuned, reordered serving: five update/serve steps must leave
+    // `tunes`, `plan_builds`, and `rcm_builds` exactly where the first
+    // serve put them — the whole point of the in-place path — while
+    // every step's products match the from-scratch rebuild.
+    let mesh = Mesh2d::quads(10, 10);
+    let convection = 0.0;
+    let mut asm = Assembler::new(mesh.clone(), convection).unwrap();
+    let n = asm.matrix().n;
+    let mut cfg = ServiceConfig::default();
+    cfg.workers = 1;
+    cfg.route.parallel_kind = EngineKind::Auto;
+    cfg.route.threads = 2;
+    cfg.route.sweep_threads = true;
+    cfg.route.min_parallel_n = 1;
+    cfg.route.reorder = ReorderPolicy::Always;
+    cfg.tune_budget = TrialBudget::smoke();
+    cfg.drift_fraction = 0.0;
+    let svc = MatvecService::start(cfg);
+    svc.register("m", Arc::new(asm.matrix().clone()));
+    let x: Vec<f64> = (0..n).map(|i| 1.0 / (1.0 + i as f64)).collect();
+    let y = svc.call("m", x.clone()).unwrap();
+    assert_eq!(y.len(), n);
+    let before = svc.stats();
+    assert_eq!(before.tunes, 1, "registration tunes exactly once");
+    for step in 1..=5u32 {
+        let t = 0.3 * step as f64;
+        let next = asm.assemble(t, 2);
+        svc.update_values("m", &next).unwrap();
+        let got = svc.call("m", x.clone()).unwrap();
+        let reference = rebuilt(&mesh, convection, t);
+        let mut want = vec![0.0; n];
+        reference.apply(&x, &mut want);
+        assert!(close(&got, &want), "step {step}: update != rebuild");
+    }
+    let after = svc.stats();
+    assert_eq!(after.tunes, before.tunes, "updates must never re-tune");
+    assert_eq!(after.plan_builds, before.plan_builds, "plans must survive updates");
+    assert_eq!(after.rcm_builds, before.rcm_builds, "RCM orderings must survive updates");
+    assert_eq!(after.value_updates, 5);
+    assert_eq!(after.panics_caught, 0);
+    assert_eq!(after.failed, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn parallel_assembly_variants_serve_identically() {
+    // Atomic scatter and colored batches must both agree with the
+    // sequential Coo oracle *through the serving stack*, and the
+    // assembly counters must record which variant ran.
+    let mesh = Mesh2d::triangles(9, 9);
+    let convection = 0.4;
+    let asm = Assembler::new(mesh.clone(), convection).unwrap();
+    let n = asm.matrix().n;
+    let svc = MatvecService::start(ServiceConfig::default());
+    svc.register("m", Arc::new(asm.matrix().clone()));
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.09).cos()).collect();
+    for (step, t) in [0.8, 1.6].iter().enumerate() {
+        let colored = step % 2 == 0;
+        let next =
+            if colored { asm.assemble_colored(*t, 2) } else { asm.assemble_atomic(*t, 2) };
+        svc.update_values("m", &next).unwrap();
+        svc.record_assembly(colored);
+        let got = svc.call("m", x.clone()).unwrap();
+        let reference = rebuilt(&mesh, convection, *t);
+        let mut want = vec![0.0; n];
+        reference.apply(&x, &mut want);
+        assert!(close(&got, &want), "t={t}: served product != rebuilt oracle");
+    }
+    let s = svc.stats();
+    assert_eq!(s.value_updates, 2);
+    assert_eq!(s.assembly_colored, 1);
+    assert_eq!(s.assembly_atomic, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn interleaved_updates_never_lose_or_corrupt_requests() {
+    // Satellite (ISSUE 10): requests submitted before and after an
+    // update_values may never coalesce into one panel. Observable
+    // contract: every request answers, post-update requests see the new
+    // values, pre-update requests see one generation or the other —
+    // never a mixture, never a loss.
+    let mesh = Mesh2d::quads(8, 8);
+    let asm = Assembler::new(mesh.clone(), 0.0).unwrap();
+    let n = asm.matrix().n;
+    let mut cfg = ServiceConfig::default();
+    cfg.workers = 1;
+    cfg.batch = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(40) };
+    let svc = MatvecService::start(cfg);
+    let a0 = asm.matrix().clone();
+    svc.register("m", Arc::new(a0.clone()));
+    let a1 = asm.assemble_sequential(2.0);
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.05).cos()).collect();
+    let (mut y0, mut y1) = (vec![0.0; n], vec![0.0; n]);
+    a0.apply(&x, &mut y0);
+    a1.apply(&x, &mut y1);
+    assert!(!close(&y0, &y1), "the generations must be distinguishable");
+    let pre: Vec<_> = (0..4).map(|_| svc.submit("m", x.clone())).collect();
+    svc.update_values("m", &a1).unwrap();
+    let post: Vec<_> = (0..4).map(|_| svc.submit("m", x.clone())).collect();
+    for rx in pre {
+        let y = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        assert!(
+            close(&y, &y0) || close(&y, &y1),
+            "pre-update reply matches neither generation's product"
+        );
+    }
+    for rx in post {
+        let y = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        assert!(close(&y, &y1), "post-update replies must serve the new values");
+    }
+    let s = svc.stats();
+    assert_eq!(s.completed, s.submitted);
+    assert_eq!(s.failed, 0);
+    assert_eq!(s.value_updates, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn update_refuses_mismatched_patterns_with_typed_errors() {
+    // The guard rails: wrong shape and wrong pattern are typed fatal
+    // errors — the registered matrix keeps serving the old values.
+    let mesh = Mesh2d::quads(6, 6);
+    let asm = Assembler::new(mesh.clone(), 0.1).unwrap();
+    let other = Assembler::new(Mesh2d::quads(7, 7), 0.1).unwrap();
+    let n = asm.matrix().n;
+    let svc = MatvecService::start(ServiceConfig::default());
+    svc.register("m", Arc::new(asm.matrix().clone()));
+    let e = svc.update_values("m", other.matrix()).unwrap_err();
+    assert!(!e.is_retryable(), "pattern mismatch is a caller bug: {e}");
+    let e = svc.update_values("ghost", asm.matrix()).unwrap_err();
+    assert!(!e.is_retryable(), "unknown key is a caller bug: {e}");
+    let x = vec![1.0; n];
+    let mut want = vec![0.0; n];
+    asm.matrix().apply(&x, &mut want);
+    let got = svc.call("m", x).unwrap();
+    assert!(close(&got, &want), "failed updates must leave the values untouched");
+    assert_eq!(svc.stats().value_updates, 0);
+    svc.shutdown();
+}

@@ -27,6 +27,11 @@ pub enum RejectReason {
     /// A worker thread panicked mid-batch; the panic was caught, the
     /// request failed over, and the supervisor is restarting the worker.
     WorkerCrashed { shard: Option<usize> },
+    /// The product kept racing `register`/`update_values` mutations of
+    /// its key: every attempt observed the decomposition mid-swap (the
+    /// front retries internally before giving up). Retry once the
+    /// mutation storm subsides.
+    ConcurrentUpdate,
 }
 
 impl RejectReason {
@@ -36,6 +41,7 @@ impl RejectReason {
             RejectReason::QueueFull { .. } => "queue-full",
             RejectReason::DeadlineExceeded { .. } => "deadline-exceeded",
             RejectReason::WorkerCrashed { .. } => "worker-crashed",
+            RejectReason::ConcurrentUpdate => "concurrent-update",
         }
     }
 
@@ -45,6 +51,7 @@ impl RejectReason {
             RejectReason::QueueFull { shard, .. } => Some(*shard),
             RejectReason::DeadlineExceeded { shard, .. } => Some(*shard),
             RejectReason::WorkerCrashed { shard } => *shard,
+            RejectReason::ConcurrentUpdate => None,
         }
     }
 }
@@ -106,6 +113,11 @@ impl fmt::Display for ServiceError {
                 RejectReason::WorkerCrashed { shard: None } => {
                     write!(f, "worker crashed mid-batch (panic caught); retry after {after:?}")
                 }
+                RejectReason::ConcurrentUpdate => write!(
+                    f,
+                    "product raced concurrent register/update_values mutations; \
+                     retry after {after:?}"
+                ),
             },
             ServiceError::Fatal(msg) => f.write_str(msg),
         }

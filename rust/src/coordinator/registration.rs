@@ -17,6 +17,16 @@ use std::sync::Arc;
 
 use super::router::RoutePolicy;
 
+/// Superseded value generations retained per registry entry. Requests
+/// are stamped with the values generation at submit time; a batch whose
+/// stamp predates an `update_values` is served from the retained
+/// snapshot it observed, so the batcher's generation split has teeth:
+/// pre-update submissions compute with pre-update values. The bound
+/// keeps replaced values from accumulating — in-flight requests live
+/// for one dispatch window (milliseconds), so four generations is
+/// already generous; anything older falls back to the current values.
+pub(crate) const VALUES_HISTORY_CAP: usize = 4;
+
 /// Registry value: the matrix plus a per-key *structural* generation
 /// counter and a *values* generation counter. Worker-side caches
 /// (engines, plans) key on `key@generation`, so a replaced matrix can
@@ -25,15 +35,67 @@ use super::router::RoutePolicy;
 /// on [`super::MatvecService::update_values`] (same pattern, new
 /// values): pattern-derived artifacts (plans, coloring, RCM ordering,
 /// tuned decision) survive it, while engines — which bake the values
-/// into their buffers — and batch panels key on it.
-pub(crate) type Registry = HashMap<String, (Arc<Csrc>, u64, u64)>;
+/// into their buffers — and batch panels key on it. Superseded values
+/// stay reachable through `history` ([`VALUES_HISTORY_CAP`]) so a
+/// batch stamped before an update serves the values its requests saw.
+#[derive(Clone)]
+pub(crate) struct RegEntry {
+    pub(crate) a: Arc<Csrc>,
+    pub(crate) generation: u64,
+    pub(crate) vgen: u64,
+    /// Retired `(values_generation, matrix)` snapshots, oldest first.
+    pub(crate) history: Vec<(u64, Arc<Csrc>)>,
+}
+
+impl RegEntry {
+    pub(crate) fn new(a: Arc<Csrc>, generation: u64) -> RegEntry {
+        RegEntry { a, generation, vgen: 0, history: Vec::new() }
+    }
+
+    /// Swap in `next` as the current values, retiring the old matrix
+    /// into the bounded history under the outgoing values generation.
+    pub(crate) fn retire(&mut self, next: Arc<Csrc>) {
+        let old = std::mem::replace(&mut self.a, next);
+        self.history.push((self.vgen, old));
+        if self.history.len() > VALUES_HISTORY_CAP {
+            self.history.remove(0);
+        }
+        self.vgen += 1;
+    }
+
+    /// The matrix carrying values generation `vgen`, if still retained.
+    pub(crate) fn values_at(&self, vgen: u64) -> Option<Arc<Csrc>> {
+        if vgen == self.vgen {
+            return Some(self.a.clone());
+        }
+        self.history.iter().rev().find(|(v, _)| *v == vgen).map(|(_, a)| a.clone())
+    }
+}
+
+pub(crate) type Registry = HashMap<String, RegEntry>;
+
+/// One shared RCM artifact for reordered serving: the permutation, the
+/// permuted matrix, and the values generation the permuted matrix was
+/// built from. The stamp is what makes `update_values` safe against
+/// racing workers: an update publishes the new registry entry first and
+/// patches this artifact after, so a worker that observes the new
+/// values generation but the old artifact sees a stamp mismatch and
+/// re-permutes from its own registry snapshot (`a.permuted(&perm)` —
+/// no new RCM computation, `rcm_builds` stays put) instead of caching
+/// an engine with stale values under the new generation.
+#[derive(Clone)]
+pub(crate) struct RcmEntry {
+    pub(crate) pa: Arc<Csrc>,
+    pub(crate) perm: Arc<Permutation>,
+    pub(crate) vgen: u64,
+}
 
 /// Shared RCM artifacts for reordered serving, keyed by
-/// `key@generation`: the permutation and the permuted matrix. Shared
-/// across workers (like the plan cache) so a matrix served reordered by
-/// N workers is permuted once, not once per worker; entries of retired
-/// generations are collected by `register()` on replacement.
-pub(crate) type RcmRegistry = HashMap<String, (Arc<Csrc>, Arc<Permutation>)>;
+/// `key@generation`. Shared across workers (like the plan cache) so a
+/// matrix served reordered by N workers is permuted once, not once per
+/// worker; entries of retired generations are collected by `register()`
+/// on replacement.
+pub(crate) type RcmRegistry = HashMap<String, RcmEntry>;
 
 /// What an Auto registration resolved to — everything a worker needs to
 /// build the engine and to judge rate drift.

@@ -91,10 +91,11 @@ fn handle_retuner_msg(ctx: &RetunerCtx, msg: RetunerMsg) {
             }
         };
         let hit = lock_unpoisoned(&ctx.registry).get(&job.matrix).cloned();
-        let Some((a, generation, _)) = hit else { return };
-        if generation != job.generation {
+        let Some(entry) = hit else { return };
+        if entry.generation != job.generation {
             return; // replaced since the drift was observed
         }
+        let a = entry.a;
         let _retune_span = obs::phase(Phase::Retune);
         let kernel: Arc<dyn SpmvKernel> = a.clone();
         // A zero budget cannot produce the measured decision a drift
@@ -138,7 +139,7 @@ fn handle_retuner_msg(ctx: &RetunerCtx, msg: RetunerMsg) {
         {
             let mut resolved = lock_unpoisoned(&ctx.resolved);
             let mut drift = lock_unpoisoned(&ctx.drift);
-            let current = lock_unpoisoned(&ctx.registry).get(&job.matrix).map(|(_, g, _)| *g)
+            let current = lock_unpoisoned(&ctx.registry).get(&job.matrix).map(|e| e.generation)
                 == Some(job.generation);
             if !current {
                 return;

@@ -396,8 +396,9 @@ impl MatvecService {
         // unrelated build.
         let (generation, replaced) = {
             let mut reg = lock_unpoisoned(&self.registry);
-            let generation = reg.get(key).map(|(_, g, _)| g + 1).unwrap_or(0);
-            let replaced = reg.insert(key.to_string(), (a.clone(), generation, 0)).is_some();
+            let generation = reg.get(key).map(|e| e.generation + 1).unwrap_or(0);
+            let replaced =
+                reg.insert(key.to_string(), registration::RegEntry::new(a.clone(), generation)).is_some();
             (generation, replaced)
         };
         if replaced {
@@ -488,25 +489,62 @@ impl MatvecService {
     /// leaves the registered matrix untouched.
     pub fn update_values(&self, key: &str, values: &Csrc) -> Result<(), ServiceError> {
         let _update_span = obs::phase(Phase::Update);
-        let (next, cache_key) = {
-            let mut reg = lock_unpoisoned(&self.registry);
-            let Some((cur, generation, vgen)) = reg.get(key) else {
-                return Err(ServiceError::fatal(format!("unknown matrix {key:?}")));
+        let cache_key = loop {
+            // Snapshot under the lock, build outside it: the clone and
+            // value copy are O(nnz), and every submit() stamp and worker
+            // registry read takes this mutex — holding it across the
+            // copy would stall the whole request path per update.
+            let (cur, generation, vgen) = {
+                let reg = lock_unpoisoned(&self.registry);
+                let Some(e) = reg.get(key) else {
+                    return Err(ServiceError::fatal(format!("unknown matrix {key:?}")));
+                };
+                (e.a.clone(), e.generation, e.vgen)
             };
-            let (generation, vgen) = (*generation, *vgen + 1);
-            let mut next = (**cur).clone();
+            let mut next = (*cur).clone();
             next.update_values_from(values)
                 .map_err(|e| ServiceError::fatal(format!("update_values({key:?}): {e}")))?;
             let next = Arc::new(next);
-            reg.insert(key.to_string(), (next.clone(), generation, vgen));
-            (next, format!("{key}@{generation}"))
+            let cache_key = format!("{key}@{generation}");
+            // Re-permute the cached RCM artifact from the new values,
+            // also outside the locks (no new RCM computation —
+            // `rcm_builds` stays put).
+            let permuted = lock_unpoisoned(&self.rcm)
+                .get(&cache_key)
+                .map(|e| e.perm.clone())
+                .map(|perm| (Arc::new(next.permuted(&perm)), perm));
+            // Publish only if nothing raced the build: a concurrent
+            // register()/update_values() moved the key on, so redo the
+            // update against the new state rather than clobber it.
+            {
+                let mut reg = lock_unpoisoned(&self.registry);
+                let Some(e) = reg.get_mut(key) else {
+                    return Err(ServiceError::fatal(format!("unknown matrix {key:?}")));
+                };
+                if e.generation != generation || e.vgen != vgen {
+                    continue;
+                }
+                e.retire(next);
+            }
+            // Patch the shared RCM artifact. A worker can observe the
+            // new registry entry before this lands — that is safe:
+            // entries are stamped with the values generation their
+            // permuted matrix was built from, and a worker re-permutes
+            // on a stamp mismatch ([`super::worker`]), so the stale
+            // artifact can never serve under the new generation. The
+            // stamp guard also keeps us from clobbering a newer
+            // update's (or a worker's) fresher patch.
+            if let Some((pa, perm)) = permuted {
+                let mut rcm = lock_unpoisoned(&self.rcm);
+                if let Some(entry) = rcm.get_mut(&cache_key) {
+                    if Arc::ptr_eq(&entry.perm, &perm) && entry.vgen <= vgen {
+                        entry.pa = pa;
+                        entry.vgen = vgen + 1;
+                    }
+                }
+            }
+            break cache_key;
         };
-        // The RCM registry holds the *permuted matrix*, whose values
-        // must follow the update: re-permute through the cached
-        // permutation (no new RCM computation — `rcm_builds` stays put).
-        if let Some((pa, perm)) = lock_unpoisoned(&self.rcm).get_mut(&cache_key) {
-            *pa = Arc::new(next.permuted(perm));
-        }
         // Drift tracking restarts: the EWMA aggregated rates measured
         // against the old values.
         lock_unpoisoned(&self.drift).insert(cache_key.clone(), DriftState::default());
@@ -531,8 +569,7 @@ impl MatvecService {
     /// survive to mis-calibrate a future registration that happens to
     /// resolve to the same entry. No-op for unknown keys.
     pub fn invalidate_served_baseline(&self, key: &str) {
-        let Some(generation) =
-            lock_unpoisoned(&self.registry).get(key).map(|(_, g, _)| *g)
+        let Some(generation) = lock_unpoisoned(&self.registry).get(key).map(|e| e.generation)
         else {
             return;
         };
@@ -554,7 +591,7 @@ impl MatvecService {
         // panels on it, so requests submitted before an `update_values`
         // never share a blocked product with requests submitted after.
         let values_generation =
-            lock_unpoisoned(&self.registry).get(key).map(|(_, _, v)| *v).unwrap_or(0);
+            lock_unpoisoned(&self.registry).get(key).map(|e| e.vgen).unwrap_or(0);
         let req = Request {
             matrix: key.to_string(),
             values_generation,
@@ -722,7 +759,11 @@ fn dispatcher_loop(
         for b in batches {
             let reqs: Vec<Request> =
                 b.requests.iter().map(|&i| slots[i].take().expect("batch index")).collect();
-            let wb = WorkerBatch { matrix: b.matrix, requests: reqs };
+            let wb = WorkerBatch {
+                matrix: b.matrix,
+                values_generation: b.values_generation,
+                requests: reqs,
+            };
             let _ = worker_txs[next_worker % worker_txs.len()].send(wb);
             next_worker += 1;
         }
@@ -861,6 +902,55 @@ mod tests {
         let s = svc.stats();
         assert_eq!(s.completed, 1);
         assert_eq!(s.batches, 1, "one partial batch, released by the deadline");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reordered_serving_recovers_from_a_stale_rcm_artifact() {
+        // Regression (review): `update_values` publishes the bumped
+        // values generation to the registry *before* re-permuting the
+        // shared RCM artifact. A worker that reads the registry in that
+        // window must not build — and cache under the new generation —
+        // a reordered engine from the stale permuted matrix. The
+        // artifact's values-generation stamp is the guard: on mismatch
+        // the worker re-permutes its own registry snapshot through the
+        // cached ordering. The window is recreated deterministically
+        // here by restoring the pre-update artifact after the update
+        // has patched it.
+        let mut cfg = ServiceConfig::default();
+        cfg.workers = 1;
+        cfg.route.parallel_kind = EngineKind::Atomic;
+        cfg.route.threads = 2;
+        cfg.route.min_parallel_n = 1;
+        cfg.route.reorder = crate::reorder::ReorderPolicy::Always;
+        let svc = MatvecService::start(cfg);
+        let a = mat(90, 87);
+        svc.register("m", a.clone());
+        let x: Vec<f64> = (0..90).map(|i| (i as f64 * 0.11).sin()).collect();
+        let _ = svc.call("m", x.clone()).unwrap();
+        assert_eq!(svc.stats().rcm_builds, 1, "first reordered serve builds the artifact");
+        let stale = lock_unpoisoned(&svc.rcm).get("m@0").cloned().expect("artifact cached");
+        assert_eq!(stale.vgen, 0);
+        let mut a2 = (*a).clone();
+        for v in a2.ad.iter_mut().chain(a2.al.iter_mut()).chain(a2.au.iter_mut()) {
+            *v *= 3.0;
+        }
+        svc.update_values("m", &a2).unwrap();
+        // Simulate the lost patch: the registry already carries the new
+        // values generation, the artifact still carries the old values.
+        lock_unpoisoned(&svc.rcm).insert("m@0".to_string(), stale);
+        let y = svc.call("m", x.clone()).unwrap();
+        let mut want = vec![0.0; 90];
+        a2.spmv_into_zeroed(&x, &mut want);
+        crate::util::propcheck::assert_close(&y, &want, 1e-11, 1e-11)
+            .expect("the stale artifact must never serve under the new values generation");
+        let s = svc.stats();
+        assert_eq!(s.rcm_builds, 1, "recovery re-permutes; it never re-runs RCM");
+        assert_eq!(
+            lock_unpoisoned(&svc.rcm).get("m@0").unwrap().vgen,
+            1,
+            "the worker publishes the repaired artifact back"
+        );
         svc.shutdown();
     }
 

@@ -49,6 +49,7 @@ use crate::util::{lock_unpoisoned, Rng};
 use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -56,6 +57,15 @@ use std::time::{Duration, Instant};
 /// Ceiling on the front's jittered retry back-off between queue-full
 /// submit attempts.
 const RETRY_BACKOFF_CAP: Duration = Duration::from_millis(20);
+
+/// How many times a product recomputes after observing a concurrent
+/// `register`/`update_values` of its key mid-flight before giving up
+/// with a typed retryable error.
+const MUTATION_RETRY_ATTEMPTS: u32 = 8;
+
+/// Pause between those recomputes — mutations are short (a value
+/// memcpy per shard plus a registry swap), so a brief yield suffices.
+const MUTATION_RETRY_PAUSE: Duration = Duration::from_micros(200);
 
 /// Sharded-front configuration. `service` is the template every shard's
 /// private [`MatvecService`] is started from; a file-backed
@@ -289,6 +299,19 @@ struct ShardedParts {
     parts: Vec<ShardPart>,
 }
 
+/// One key's front-side registration: the decomposition plus the
+/// seqlock word readers use to detect mutations. The word is odd while
+/// a `register`/`update_values` is swapping the decomposition (front
+/// parts *and* inner services — they cannot change as one atomic step)
+/// and even when stable; a product snapshots it before scattering and
+/// re-checks after gathering, recomputing on any change. The handle is
+/// shared (`Arc`) so in-flight readers see the bump even across a
+/// whole-entry replacement.
+struct ShardEntry {
+    parts: Arc<ShardedParts>,
+    seq: Arc<AtomicU64>,
+}
+
 /// Per-shard front counters + the shard's own service snapshot.
 #[derive(Clone, Debug)]
 pub struct ShardStats {
@@ -328,7 +351,13 @@ pub struct FrontStats {
 pub struct ShardedMatvecService {
     cfg: ShardConfig,
     services: Vec<MatvecService>,
-    registry: Mutex<HashMap<String, Arc<ShardedParts>>>,
+    registry: Mutex<HashMap<String, ShardEntry>>,
+    /// Serializes `register` and `update_values` front-wide. With one
+    /// mutation in flight at a time, `update_values`' validate→patch
+    /// sequence is all-or-nothing: nothing can re-register or re-patch
+    /// a shard between the fingerprint validation and the inner
+    /// updates, so a post-validation inner failure is unreachable.
+    mutation: Mutex<()>,
     /// Front-side registry: scatter/gather counters live here; each
     /// shard's serving metrics stay in its service's own registry.
     obs: Arc<MetricsRegistry>,
@@ -392,6 +421,7 @@ impl ShardedMatvecService {
             cfg,
             services,
             registry: Mutex::new(HashMap::new()),
+            mutation: Mutex::new(()),
             obs: obs_reg,
             requests,
             rejects,
@@ -418,6 +448,7 @@ impl ShardedMatvecService {
     /// every shard is tuner-raced independently). The front keeps the
     /// row slabs, ghost maps, and coupling rectangles for scatter/gather.
     pub fn register(&self, key: &str, a: Arc<Csrc>) {
+        let _mutation = lock_unpoisoned(&self.mutation);
         let global = a.to_csr();
         let nsub = self.cfg.nshards.min(global.nrows.max(1));
         // Replacement: the outgoing decomposition's per-shard decisions
@@ -427,10 +458,21 @@ impl ShardedMatvecService {
         // them now, or a later registration resolving to the same entry
         // (same shard-local pattern, new values) would judge its serving
         // against a dead generation's rate.
-        if let Some(old) = lock_unpoisoned(&self.registry).get(key) {
-            for rank in 0..old.parts.len() {
-                self.services[rank].invalidate_served_baseline(key);
-            }
+        let seq = {
+            let reg = lock_unpoisoned(&self.registry);
+            reg.get(key).map(|old| {
+                for rank in 0..old.parts.parts.len() {
+                    self.services[rank].invalidate_served_baseline(key);
+                }
+                old.seq.clone()
+            })
+        };
+        // Replacing a live key: mark the entry mid-mutation (odd) so a
+        // product in flight — whose snapshotted coupling rectangles are
+        // about to stop matching the inner services — recomputes
+        // instead of returning a torn answer.
+        if let Some(seq) = &seq {
+            seq.fetch_add(1, Ordering::AcqRel);
         }
         let dm = DistributedMatrix::from_global(&global, nsub);
         let mut parts = Vec::with_capacity(nsub);
@@ -441,9 +483,23 @@ impl ShardedMatvecService {
             parts.push(ShardPart { rows: sub.rows, ghosts: sub.ghosts, rect: local });
         }
         let mut reg = lock_unpoisoned(&self.registry);
-        reg.insert(key.to_string(), Arc::new(ShardedParts { n: global.nrows, parts }));
-        let total: usize =
-            reg.values().map(|p| p.parts.iter().map(|s| s.ghosts.len()).sum::<usize>()).sum();
+        let parts = Arc::new(ShardedParts { n: global.nrows, parts });
+        match seq {
+            Some(seq) => {
+                reg.insert(key.to_string(), ShardEntry { parts, seq: seq.clone() });
+                seq.fetch_add(1, Ordering::Release); // even again: stable
+            }
+            None => {
+                reg.insert(
+                    key.to_string(),
+                    ShardEntry { parts, seq: Arc::new(AtomicU64::new(0)) },
+                );
+            }
+        }
+        let total: usize = reg
+            .values()
+            .map(|e| e.parts.parts.iter().map(|s| s.ghosts.len()).sum::<usize>())
+            .sum();
         self.halo.set(total as f64);
     }
 
@@ -458,11 +514,17 @@ impl ShardedMatvecService {
     /// Every shard's fingerprint is checked *before* any shard is
     /// patched, so a mismatch is a typed fatal error with no partial
     /// update — the serving state stays the old generation throughout.
+    /// Mutations are serialized front-wide (one `register`/
+    /// `update_values` at a time), which is what keeps that validation
+    /// true while the shards are patched; concurrent *products* that
+    /// overlap the patch window observe the entry's seqlock and
+    /// recompute rather than mixing generations across shards.
     pub fn update_values(&self, key: &str, values: &Csrc) -> Result<(), ServiceError> {
         let _update_span = obs::phase(Phase::Update);
-        let old = lock_unpoisoned(&self.registry)
+        let _mutation = lock_unpoisoned(&self.mutation);
+        let (old, seq) = lock_unpoisoned(&self.registry)
             .get(key)
-            .cloned()
+            .map(|e| (e.parts.clone(), e.seq.clone()))
             .ok_or_else(|| ServiceError::fatal(format!("unknown matrix {key:?}")))?;
         if values.n != old.n {
             return Err(ServiceError::fatal(format!(
@@ -475,6 +537,7 @@ impl ShardedMatvecService {
         // in (n, nsub), so an unchanged global pattern yields exactly
         // the registered shard patterns — anything else is a caller
         // trying to smuggle a re-registration through the update path.
+        // Nothing has been touched yet, so failing here is clean.
         for (sub, part) in dm.subs.iter().zip(&old.parts) {
             if sub.local.square.pattern_fingerprint() != part.rect.square.pattern_fingerprint() {
                 return Err(ServiceError::fatal(format!(
@@ -483,15 +546,29 @@ impl ShardedMatvecService {
                 )));
             }
         }
+        // All shards validated — patch. The entry goes odd first: a
+        // product overlapping this window would otherwise snapshot the
+        // old coupling rectangles while some inner services already
+        // serve the new square values, a torn answer matching neither
+        // generation.
+        seq.fetch_add(1, Ordering::AcqRel);
         let mut parts = Vec::with_capacity(dm.subs.len());
         for sub in dm.subs {
             let rank = sub.rank;
             let local = sub.local;
-            self.services[rank].update_values(key, &local.square)?;
+            if let Err(e) = self.services[rank].update_values(key, &local.square) {
+                // Unreachable after validation with mutations
+                // serialized — but never leave the seq odd, or every
+                // reader of this key retries until exhaustion.
+                seq.fetch_add(1, Ordering::AcqRel);
+                return Err(e);
+            }
             parts.push(ShardPart { rows: sub.rows, ghosts: sub.ghosts, rect: local });
         }
-        let mut reg = lock_unpoisoned(&self.registry);
-        reg.insert(key.to_string(), Arc::new(ShardedParts { n: old.n, parts }));
+        if let Some(e) = lock_unpoisoned(&self.registry).get_mut(key) {
+            e.parts = Arc::new(ShardedParts { n: old.n, parts });
+        }
+        seq.fetch_add(1, Ordering::Release); // even again: stable
         Ok(())
     }
 
@@ -520,11 +597,58 @@ impl ShardedMatvecService {
         }
     }
 
+    /// Snapshot-consistent product: the decomposition snapshot is only
+    /// trusted if the entry's seqlock was even (no mutation in flight)
+    /// before the product started *and* unchanged after it finished.
+    /// Otherwise the answer may mix values generations across shards
+    /// (old coupling rectangles against new square parts) and is
+    /// discarded and recomputed. A product that keeps losing the race
+    /// surfaces as a typed retryable [`RejectReason::ConcurrentUpdate`].
     fn spmv_multi_inner(&self, key: &str, x: &[f64], k: usize) -> Result<Vec<f64>, ServiceError> {
-        let parts = lock_unpoisoned(&self.registry)
-            .get(key)
-            .cloned()
-            .ok_or_else(|| ServiceError::fatal(format!("unknown matrix {key:?}")))?;
+        let mut attempts = 0u32;
+        loop {
+            // The seq word is sampled inside the same critical section
+            // that clones the snapshot: a mutation's parts-swap also
+            // takes this lock (with its odd bump ordered before the
+            // acquisition), so any swap landing after our release is
+            // guaranteed to move the word past `s0` — it can never
+            // complete invisibly between the clone and the sample.
+            let (parts, seq, s0) = {
+                let reg = lock_unpoisoned(&self.registry);
+                let e = reg
+                    .get(key)
+                    .ok_or_else(|| ServiceError::fatal(format!("unknown matrix {key:?}")))?;
+                (e.parts.clone(), e.seq.clone(), e.seq.load(Ordering::Acquire))
+            };
+            if s0 % 2 == 0 {
+                let r = self.spmv_once(key, &parts, x, k);
+                if seq.load(Ordering::Acquire) == s0 {
+                    return r;
+                }
+                // The seq moved under the product: even an Ok result
+                // may be torn across generations — recompute.
+            }
+            attempts += 1;
+            if attempts >= MUTATION_RETRY_ATTEMPTS {
+                return Err(ServiceError::Retryable {
+                    reason: RejectReason::ConcurrentUpdate,
+                    after: self.cfg.retry_backoff.max(Duration::from_millis(1)),
+                });
+            }
+            std::thread::sleep(MUTATION_RETRY_PAUSE);
+        }
+    }
+
+    /// One scatter → compute → gather pass over a fixed decomposition
+    /// snapshot. Only meaningful under [`Self::spmv_multi_inner`]'s
+    /// seqlock validation.
+    fn spmv_once(
+        &self,
+        key: &str,
+        parts: &ShardedParts,
+        x: &[f64],
+        k: usize,
+    ) -> Result<Vec<f64>, ServiceError> {
         if x.len() != parts.n * k {
             return Err(ServiceError::fatal(format!(
                 "x has length {} but {key:?} is {}x{} with k={k}",
@@ -971,6 +1095,82 @@ mod tests {
         assert!(!svc.update_values("a", &c).unwrap_err().is_retryable());
         assert_close(&svc.spmv("a", &x).unwrap(), &want2);
         assert!(!svc.update_values("nope", &b).unwrap_err().is_retryable());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_updates_never_tear_sharded_products() {
+        // Regression (review): a product overlapping a sharded
+        // `update_values` must never gather a torn answer — snapshotted
+        // coupling rectangles of one values generation against inner
+        // services already serving another. Values are scaled by
+        // power-of-two factors so every *consistent* product matches
+        // exactly one factor's reference; a torn one mixes factors
+        // across row blocks (or between the square and coupling
+        // contributions of a single block) and matches none.
+        const FACTORS: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
+        let n = 96;
+        let a = mat(n, 205);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.23).sin() + 1.5).collect();
+        let mut base = vec![0.0; n];
+        a.apply(&x, &mut base);
+        let refs: Vec<Vec<f64>> =
+            FACTORS.iter().map(|f| base.iter().map(|w| w * f).collect()).collect();
+        let close = |got: &[f64], want: &[f64]| {
+            got.iter().zip(want).all(|(g, w)| (g - w).abs() <= 1e-10 * (1.0 + w.abs()))
+        };
+        let svc =
+            ShardedMatvecService::start(ShardConfig { nshards: 2, ..ShardConfig::default() });
+        svc.register("m", a.clone());
+        let steps = 24u32;
+        std::thread::scope(|s| {
+            let (svc, a, x, refs, close) = (&svc, &a, &x, &refs, &close);
+            let done = &std::sync::atomic::AtomicBool::new(false);
+            s.spawn(move || {
+                for step in 0..steps {
+                    let f = FACTORS[step as usize % FACTORS.len()];
+                    let mut b = (**a).clone();
+                    for v in b.ad.iter_mut().chain(b.al.iter_mut()).chain(b.au.iter_mut()) {
+                        *v *= f;
+                    }
+                    svc.update_values("m", &b).unwrap();
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                done.store(true, Ordering::Release);
+            });
+            for _ in 0..3 {
+                s.spawn(move || {
+                    let mut served = 0u32;
+                    // Generous attempt bound: readers must observe at
+                    // least one product but never hang if every attempt
+                    // keeps losing the race (they should not — updates
+                    // stop once the updater finishes).
+                    for _ in 0..20_000 {
+                        match svc.spmv("m", x) {
+                            Ok(y) => {
+                                served += 1;
+                                assert!(
+                                    refs.iter().any(|r| close(&y, r)),
+                                    "torn product: matches no single values generation"
+                                );
+                            }
+                            Err(e) if e.is_retryable() => {
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                            Err(e) => panic!("fatal error under concurrent updates: {e}"),
+                        }
+                        if done.load(Ordering::Acquire) && served > 0 {
+                            break;
+                        }
+                    }
+                    assert!(served > 0, "reader never completed a product");
+                });
+            }
+        });
+        // Quiesced: the final serve must carry the last update's values.
+        let last = &refs[(steps as usize - 1) % FACTORS.len()];
+        let y = svc.spmv("m", &x).unwrap();
+        assert!(close(&y, last), "settled product must serve the final values generation");
         svc.shutdown();
     }
 

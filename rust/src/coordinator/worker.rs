@@ -9,7 +9,7 @@
 //! is shared across shards.
 
 use super::error::{RejectReason, ServiceError};
-use super::registration::{DriftState, RcmRegistry, Registry, ResolvedAuto};
+use super::registration::{self, DriftState, RcmRegistry, Registry, ResolvedAuto};
 use super::retuner::{RetuneJob, RetunerMsg};
 use super::router::{Backend, RoutePolicy, Router};
 use super::service::RESTART_BACKOFF_BASE;
@@ -82,6 +82,11 @@ pub(crate) struct Request {
 
 pub(crate) struct WorkerBatch {
     pub(crate) matrix: String,
+    /// The values generation every request in this batch was stamped
+    /// with (the batcher never mixes stamps). When it predates the
+    /// registry's current generation, the batch is served from the
+    /// retained snapshot its requests observed at submit time.
+    pub(crate) values_generation: u64,
     pub(crate) requests: Vec<Request>,
 }
 
@@ -196,7 +201,7 @@ fn serve_batch(state: &mut WorkerState, ctx: &WorkerCtx, batch: WorkerBatch) {
     let WorkerState { router, engines, serve_tick } = state;
     {
         let hit = lock_unpoisoned(&ctx.registry).get(&batch.matrix).cloned();
-        let Some((a, generation, values_generation)) = hit else {
+        let Some(entry) = hit else {
             for r in batch.requests {
                 ctx.stats.failed.inc();
                 let _ = r
@@ -205,6 +210,37 @@ fn serve_batch(state: &mut WorkerState, ctx: &WorkerCtx, batch: WorkerBatch) {
             }
             return;
         };
+        let (generation, values_generation) = (entry.generation, entry.vgen);
+        // A batch stamped before an `update_values` must compute with
+        // the values its requests observed at submit time — that is the
+        // ordering the batcher's generation split promises. Serve it
+        // sequentially from the retained snapshot: straddling requests
+        // only exist for one dispatch window around an update, so a
+        // cached engine is not worth building for them. A stamp no
+        // longer retained (structural replacement, or history overflow)
+        // falls through to the current matrix — the values it named are
+        // gone wholesale.
+        if batch.values_generation != values_generation {
+            if let Some(old) = entry.values_at(batch.values_generation) {
+                for req in batch.requests {
+                    if req.x.len() != old.n {
+                        ctx.stats.failed.inc();
+                        let _ = req.reply.send(Err(ServiceError::fatal(format!(
+                            "x length {} != n {}",
+                            req.x.len(),
+                            old.n
+                        ))));
+                        continue;
+                    }
+                    let mut y = vec![0.0; old.n];
+                    old.spmv_into_zeroed(&req.x, &mut y);
+                    count_products(&ctx, &batch.matrix, "sequential", 1, 1);
+                    finish_request(&ctx, &req, y);
+                }
+                return;
+            }
+        }
+        let a = entry.a;
         // Generation-qualified key: caches can never mix state across a
         // register() replacement (the matrix and its engines/plans stay
         // a consistent snapshot even if the registry changes mid-batch).
@@ -330,14 +366,35 @@ fn serve_batch(state: &mut WorkerState, ctx: &WorkerCtx, batch: WorkerBatch) {
                         // product.
                         let (pa, perm) = {
                             let mut rcm = lock_unpoisoned(&ctx.rcm);
-                            rcm.entry(cache_key.clone())
-                                .or_insert_with(|| {
-                                    ctx.stats.rcm_builds.inc();
-                                    let perm = Arc::new(reorder::rcm(a.as_ref()));
-                                    let pa = Arc::new(a.permuted(&perm));
-                                    (pa, perm)
-                                })
-                                .clone()
+                            let e = rcm.entry(cache_key.clone()).or_insert_with(|| {
+                                ctx.stats.rcm_builds.inc();
+                                let perm = Arc::new(reorder::rcm(a.as_ref()));
+                                let pa = Arc::new(a.permuted(&perm));
+                                registration::RcmEntry {
+                                    pa,
+                                    perm,
+                                    vgen: values_generation,
+                                }
+                            });
+                            if e.vgen == values_generation {
+                                (e.pa.clone(), e.perm.clone())
+                            } else {
+                                // The artifact's values lag (or lead)
+                                // this batch's registry snapshot — an
+                                // `update_values` raced us between its
+                                // registry publish and its artifact
+                                // patch. Re-permute our own snapshot
+                                // through the cached ordering (no new
+                                // RCM computation), and only publish it
+                                // back when it advances the shared
+                                // entry.
+                                let pa = Arc::new(a.permuted(&e.perm));
+                                if e.vgen < values_generation {
+                                    e.pa = pa.clone();
+                                    e.vgen = values_generation;
+                                }
+                                (pa, e.perm.clone())
+                            }
                         };
                         let plan = ctx.plans.get_or_build(
                             &format!("{cache_key}#rcm"),

@@ -162,8 +162,10 @@ fn interleaved_updates_never_lose_or_corrupt_requests() {
     // Satellite (ISSUE 10): requests submitted before and after an
     // update_values may never coalesce into one panel. Observable
     // contract: every request answers, post-update requests see the new
-    // values, pre-update requests see one generation or the other —
-    // never a mixture, never a loss.
+    // values, and pre-update requests see exactly the values they were
+    // submitted against — the worker serves a stamped batch from the
+    // retained snapshot its stamp names — never a mixture, never a
+    // loss.
     let mesh = Mesh2d::quads(8, 8);
     let asm = Assembler::new(mesh.clone(), 0.0).unwrap();
     let n = asm.matrix().n;
@@ -184,10 +186,7 @@ fn interleaved_updates_never_lose_or_corrupt_requests() {
     let post: Vec<_> = (0..4).map(|_| svc.submit("m", x.clone())).collect();
     for rx in pre {
         let y = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
-        assert!(
-            close(&y, &y0) || close(&y, &y1),
-            "pre-update reply matches neither generation's product"
-        );
+        assert!(close(&y, &y0), "pre-update replies must serve the values they observed");
     }
     for rx in post {
         let y = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
@@ -197,6 +196,41 @@ fn interleaved_updates_never_lose_or_corrupt_requests() {
     assert_eq!(s.completed, s.submitted);
     assert_eq!(s.failed, 0);
     assert_eq!(s.value_updates, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn pre_update_submissions_serve_pre_update_values() {
+    // Regression (review): the batcher keys panels on the submit-time
+    // values generation, so the worker must honor that stamp — a batch
+    // submitted before an `update_values` but dispatched after it
+    // computes with the *pre-update* values, served from the registry's
+    // retained snapshot. A long batching window makes the ordering
+    // deterministic: the update always lands while the request is still
+    // queued.
+    let mesh = Mesh2d::quads(8, 8);
+    let asm = Assembler::new(mesh.clone(), 0.0).unwrap();
+    let n = asm.matrix().n;
+    let mut cfg = ServiceConfig::default();
+    cfg.workers = 1;
+    cfg.batch = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(300) };
+    let svc = MatvecService::start(cfg);
+    let a0 = asm.matrix().clone();
+    svc.register("m", Arc::new(a0.clone()));
+    let a1 = asm.assemble_sequential(2.0);
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.07).sin()).collect();
+    let (mut y0, mut y1) = (vec![0.0; n], vec![0.0; n]);
+    a0.apply(&x, &mut y0);
+    a1.apply(&x, &mut y1);
+    assert!(!close(&y0, &y1), "the generations must be distinguishable");
+    let pre = svc.submit("m", x.clone());
+    std::thread::sleep(Duration::from_millis(50));
+    svc.update_values("m", &a1).unwrap();
+    let y = pre.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+    assert!(close(&y, &y0), "a pre-update submission must compute with the old values");
+    let got = svc.call("m", x.clone()).unwrap();
+    assert!(close(&got, &y1), "a post-update call must compute with the new values");
+    assert_eq!(svc.stats().failed, 0);
     svc.shutdown();
 }
 
